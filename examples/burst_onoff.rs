@@ -1,0 +1,77 @@
+//! Harvesting under ON/OFF bursts (paper §6.3.1) on the simulated
+//! A100/Llama-2-7B testbed: online load alternates between near-capacity
+//! and zero; ConServe harvests the OFF phases for offline work and
+//! scales back within milliseconds when the ON phase returns.
+//!
+//! This example demonstrates the simulation API — the same experiment
+//! the fig6 bench runs, but as a user-facing driver with a compact
+//! phase-by-phase printout.
+//!
+//! ```bash
+//! cargo run --release --example burst_onoff
+//! ```
+
+use conserve::config::EngineConfig;
+use conserve::report::SimExperiment;
+use conserve::workload::trace::onoff_trace;
+use conserve::workload::Lengths;
+
+fn main() {
+    let cfg = EngineConfig::sim_a100_7b();
+    let duration = 360.0;
+    let phase = 90.0;
+    let arrivals = onoff_trace(7, duration, phase, 3.0, 1.0);
+
+    println!(
+        "ON/OFF experiment: {}s, {}s phases, {} online arrivals, offline pool 2000\n",
+        duration,
+        phase,
+        arrivals.len()
+    );
+
+    let report = SimExperiment {
+        cfg: cfg.clone(),
+        online_arrivals: arrivals,
+        online_lengths: Lengths::Fixed {
+            input: 1024,
+            output: 128,
+        },
+        offline_pool: 2000,
+        offline_lengths: Lengths::offline_paper(),
+        duration_s: duration,
+    }
+    .run();
+
+    println!(
+        "{:>6} {:>6} {:>12} {:>12} {:>13} {:>13}",
+        "t_s", "phase", "p99TTFT_ms", "p99TPOT_ms", "online_tok/s", "offline_tok/s"
+    );
+    for (w_on, w_all) in report.online_timeseries.iter().zip(&report.all_timeseries) {
+        let on = ((w_on.start_s / phase) as u64) % 2 == 0;
+        println!(
+            "{:>6.0} {:>6} {:>12.0} {:>12.0} {:>13.0} {:>13.0}",
+            w_on.start_s,
+            if on { "ON" } else { "OFF" },
+            w_on.p99_ttft_ms,
+            w_on.p99_tpot_ms,
+            w_on.processed_per_s,
+            w_all.processed_per_s - w_on.processed_per_s
+        );
+    }
+
+    println!(
+        "\noverall: P99 TTFT {:.0} ms (SLO {}), P99 TPOT {:.0} ms (SLO {}), \
+         offline harvest {:.0} tok/s, {} preemptions ({} layer aborts)",
+        report.online_p99_ttft_ms,
+        cfg.sched.slo.ttft_ms,
+        report.online_p99_tpot_ms,
+        cfg.sched.slo.tpot_ms,
+        report.offline_processed_tput,
+        report.preemptions,
+        report.layer_aborts
+    );
+    // transition windows dominate the overall p99 at this phase length
+    assert!(report.online_p99_ttft_ms < cfg.sched.slo.ttft_ms * 2.0);
+    assert!(report.offline_processed_tput > 500.0);
+    println!("burst_onoff OK");
+}

@@ -1,0 +1,12 @@
+use conserve::config::EngineConfig;
+use conserve::report::compare_policies;
+use conserve::scheduler::Policy;
+use conserve::workload::trace::burstgpt_like_arrivals;
+use conserve::workload::Lengths;
+fn main() {
+    let cfg = EngineConfig::sim_a100_7b();
+    let arrivals = burstgpt_like_arrivals(42, 450.0, 1.2, 1.0);
+    let rs = compare_policies(&cfg, &[Policy::ConServe], &arrivals,
+        Lengths::online_paper(), |_| 1500, Lengths::offline_paper(), 450.0);
+    println!("{}", rs[0].row());
+}

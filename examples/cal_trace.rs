@@ -1,0 +1,15 @@
+use conserve::config::EngineConfig;
+use conserve::report::compare_policies;
+use conserve::scheduler::Policy;
+use conserve::workload::trace::burstgpt_like_arrivals;
+use conserve::workload::Lengths;
+fn main() {
+    let base: f64 = std::env::var("BASE").map(|v| v.parse().unwrap()).unwrap_or(1.2);
+    let dur: f64 = std::env::var("DUR").map(|v| v.parse().unwrap()).unwrap_or(450.0);
+    let cfg = EngineConfig::sim_a100_7b();
+    let arrivals = burstgpt_like_arrivals(42, dur, base, 1.0);
+    let rs = compare_policies(&cfg,
+        &[Policy::OnlineOnly, Policy::VllmPP, Policy::ConServe], &arrivals,
+        Lengths::online_paper(), |p| if p == Policy::OnlineOnly {0} else {1500}, Lengths::offline_paper(), dur);
+    for r in &rs { println!("{}", r.row()); }
+}

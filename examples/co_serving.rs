@@ -1,0 +1,138 @@
+//! End-to-end validation driver (DESIGN.md "E2E"): live co-serving of a
+//! real model on the CPU PJRT runtime.
+//!
+//! * a loadgen thread submits **online** requests through the streaming
+//!   API following a gamma process (rate/CV configurable via env);
+//! * a second thread drops an **offline** document pool into the batch
+//!   API at t=0 (and a second wave mid-run);
+//! * the engine co-serves both with ConServe's full machinery — SLO-aware
+//!   budgets, preemption, incremental checkpointing, prefetching — and
+//!   the driver reports TTFT/TPOT/throughput plus KV/preemption counters.
+//!
+//! Results are recorded in EXPERIMENTS.md §E2E.
+//!
+//! ```bash
+//! cargo run --release --example co_serving
+//! DURATION=30 RATE=3 cargo run --release --example co_serving
+//! ```
+
+use conserve::backend::PjrtBackend;
+use conserve::config::EngineConfig;
+use conserve::profiler::LatencyProfile;
+use conserve::request::Class;
+use conserve::runtime::tokenizer::detokenize;
+use conserve::server::{ArrivalSource, ServingEngine};
+use conserve::util::rng::Rng;
+use conserve::workload::{datasets, LoadGen, Lengths};
+use std::time::Duration;
+
+fn env_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let duration_s = env_f64("DURATION", 20.0);
+    let rate = env_f64("RATE", 2.0);
+    let cv = env_f64("CV", 1.5);
+    let offline_pool = env_f64("OFFLINE_POOL", 24.0) as usize;
+
+    let cfg = EngineConfig::real_tiny();
+    let mut backend = PjrtBackend::load("artifacts", cfg.seed, cfg.sched.safepoint_layers)?;
+    let clock = backend.clock();
+
+    println!("profiling the PJRT backend (offline pass, §4.5) ...");
+    let profile = LatencyProfile::profile(&mut backend, 128, 8, 128)?;
+    println!("  t(µs) = {:.0} + {:.1}*prefill_tok + {:.0}*decode_seq + {:.2}*ctx_tok",
+        profile.c[0], profile.c[1], profile.c[2], profile.c[3]);
+
+    let (client, arrivals) = ArrivalSource::channel();
+
+    // --- online loadgen thread: gamma arrivals, streaming API ---
+    let online_client = client.clone();
+    let online = std::thread::spawn(move || {
+        let mut rng = Rng::new(0xA11CE);
+        let mut lg = LoadGen::new(0xA11CE, rate, cv);
+        let mut sent = 0usize;
+        let t0 = std::time::Instant::now();
+        loop {
+            let next = lg.pop();
+            let elapsed = t0.elapsed().as_micros() as u64;
+            if next as f64 / 1e6 > duration_s {
+                break;
+            }
+            if next > elapsed {
+                std::thread::sleep(Duration::from_micros(next - elapsed));
+            }
+            let l = Lengths::online_tiny().sample(&mut rng);
+            let prompt = datasets::synth_prompt(&mut rng, l.input);
+            online_client.submit_online(prompt, l.output);
+            sent += 1;
+        }
+        sent
+    });
+
+    // --- offline batch thread: pool at t=0, second wave mid-run ---
+    let offline_client = client.clone();
+    let offline = std::thread::spawn(move || {
+        let mut rng = Rng::new(0xB0B);
+        let make_pool = |rng: &mut Rng, n: usize| {
+            (0..n)
+                .map(|_| {
+                    let l = Lengths::offline_tiny().sample(rng);
+                    (datasets::synth_prompt(rng, l.input), l.output)
+                })
+                .collect::<Vec<_>>()
+        };
+        let ids1 = offline_client.submit_batch(make_pool(&mut rng, offline_pool));
+        std::thread::sleep(Duration::from_secs_f64(duration_s / 2.0));
+        let ids2 = offline_client.submit_batch(make_pool(&mut rng, offline_pool / 2));
+        ids1.len() + ids2.len()
+    });
+    drop(client); // engine stops when producers hang up and work drains
+
+    let mut engine = ServingEngine::new(cfg.clone(), backend, clock, profile, arrivals);
+    let end = engine.run((duration_s * 2.5 * 1e6) as u64);
+    let n_online = online.join().unwrap();
+    let n_offline = offline.join().unwrap();
+
+    // --- report ---
+    let rec = &engine.rec;
+    let dur = end.max(1);
+    println!("\n=== co-serving run: {n_online} online + {n_offline} offline requests over {:.1}s wall ===",
+        end as f64 / 1e6);
+    println!("online  P99 TTFT {:>8.1} ms   (SLO {})", rec.p99_ttft_ms(Class::Online), cfg.sched.slo.ttft_ms);
+    println!("online  P99 TPOT {:>8.1} ms   (SLO {})", rec.p99_tpot_ms(Class::Online), cfg.sched.slo.tpot_ms);
+    println!("online  mean TTFT{:>8.1} ms", rec.mean_ttft_ms(Class::Online));
+    println!("gen tput   {:>7.1} tok/s online, {:>7.1} tok/s offline",
+        rec.throughput(Some(Class::Online), 0, dur),
+        rec.throughput(Some(Class::Offline), 0, dur));
+    println!("proc tput  {:>7.1} tok/s online, {:>7.1} tok/s offline",
+        rec.processed_throughput(Some(Class::Online), 0, dur),
+        rec.processed_throughput(Some(Class::Offline), 0, dur));
+    println!("finished   {} online / {} offline", rec.finished[0], rec.finished[1]);
+    println!("preemptions {} (layer aborts {}), ckpt blocks {}, prefetch blocks {}",
+        rec.preemptions, rec.layer_aborts, rec.ckpt_blocks, rec.prefetch_blocks);
+
+    if let Some(r) = engine
+        .table
+        .values()
+        .find(|r| r.class == Class::Online && r.output.len() > 4)
+    {
+        println!("\nsample online completion (req {}):", r.id);
+        println!("  prompt : {:?}", detokenize(&r.prompt[..r.prompt.len().min(60)]));
+        println!("  output : {:?}", detokenize(&r.output));
+    }
+
+    // E2E validation gates: all layers composed, both classes served
+    assert!(rec.finished[0] > 0, "online requests must complete");
+    assert!(rec.finished[1] > 0, "offline requests must complete");
+    assert!(
+        rec.ttfts.iter().any(|e| e.class == Class::Online),
+        "online TTFTs recorded"
+    );
+    println!("\nco_serving E2E OK");
+    Ok(())
+}

@@ -1,0 +1,98 @@
+//! Quickstart: load the AOT artifacts, serve two online requests and a
+//! small offline batch end-to-end on the CPU PJRT runtime, and print the
+//! streamed tokens.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use conserve::backend::PjrtBackend;
+use conserve::config::EngineConfig;
+use conserve::profiler::LatencyProfile;
+use conserve::request::{Class, Request};
+use conserve::runtime::tokenizer::{detokenize, tokenize};
+use conserve::server::{ArrivalSource, ServingEngine};
+
+fn main() -> anyhow::Result<()> {
+    // 1. load artifacts (manifest + weights + HLO) onto the PJRT client
+    let cfg = EngineConfig::real_tiny();
+    let mut backend = PjrtBackend::load("artifacts", cfg.seed, cfg.sched.safepoint_layers)?;
+    let clock = backend.clock();
+    println!(
+        "model: {} layers, d={}, vocab={}, max_seq={}",
+        backend.dims().n_layers,
+        backend.dims().d_model,
+        backend.dims().vocab_size,
+        backend.dims().max_seq
+    );
+
+    // 2. profile once (the SLO-aware scheduler needs the latency model)
+    let profile = LatencyProfile::profile(&mut backend, 64, 4, 64)?;
+    println!(
+        "latency model: t = {:.0} + {:.1}*prefill + {:.0}*decode + {:.2}*ctx  (µs)",
+        profile.c[0], profile.c[1], profile.c[2], profile.c[3]
+    );
+
+    // 3. submit work: two online chats + three offline summaries
+    let mut events = Vec::new();
+    for (i, text) in [
+        "Hello ConServe, how do you harvest idle GPUs?",
+        "Summarize the benefits of co-serving online and offline jobs.",
+    ]
+    .iter()
+    .enumerate()
+    {
+        let prompt = tokenize(text);
+        let plen = prompt.len();
+        events.push(Request::new(
+            (i + 1) as u64,
+            Class::Online,
+            prompt,
+            plen,
+            16,
+            (i as u64) * 50_000,
+        ));
+    }
+    for i in 0..3u64 {
+        let prompt = tokenize("offline document body: the quarterly report covers serving throughput, cache efficiency and scheduling policy in detail.");
+        let plen = prompt.len();
+        events.push(Request::new(10 + i, Class::Offline, prompt, plen, 12, 0));
+    }
+
+    // 4. run the engine; stream tokens as they are produced
+    let mut engine = ServingEngine::new(
+        cfg,
+        backend,
+        clock,
+        profile,
+        ArrivalSource::from_trace(events),
+    );
+    engine.set_token_callback(Box::new(|id, tok, t_us| {
+        println!(
+            "  [t={:>7.3}s] req {id} -> token {tok:?} ({:?})",
+            t_us as f64 / 1e6,
+            detokenize(&[tok])
+        );
+    }));
+    engine.run(60_000_000);
+
+    // 5. inspect results
+    println!("\ncompletions:");
+    let mut ids: Vec<_> = engine.table.keys().copied().collect();
+    ids.sort();
+    for id in ids {
+        let r = &engine.table[&id];
+        println!(
+            "  req {id} ({:?}): {} prompt tokens -> {:?}",
+            r.class,
+            r.prompt_len,
+            detokenize(&r.output)
+        );
+    }
+    println!(
+        "\nonline P99 TTFT: {:.1} ms, P99 TPOT: {:.1} ms",
+        engine.rec.p99_ttft_ms(Class::Online),
+        engine.rec.p99_tpot_ms(Class::Online)
+    );
+    Ok(())
+}

@@ -1,0 +1,181 @@
+"""AOT pipeline: lower every model entry point to HLO *text* artifacts.
+
+Run once at build time (`make artifacts`); Python never touches the
+request path. Emits into the output directory:
+
+  * `<entry>_b<B>_t<T>.hlo.txt` — HLO text per (entry point, bucket).
+    Text, NOT `.serialize()`: jax >= 0.5 emits HloModuleProtos with 64-bit
+    instruction ids that the xla crate's xla_extension 0.5.1 rejects
+    (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+    round-trips cleanly (see /opt/xla-example/README.md).
+  * `weights.bin` — all parameters, little-endian f32, concatenated in
+    configs.param_specs order.
+  * `manifest.json` — model config, bucket grid, tensor index (name,
+    shape, offset), entry-point index, and per-entry argument order; the
+    Rust runtime is driven entirely by this file.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .configs import EXPORT, LAYER_WEIGHT_NAMES, MODEL, param_specs
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    Rust side always unwraps a tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def entry_specs(cfg, B, T):
+    """Argument ShapeDtypeStructs per entry kind, in call order."""
+    D, Dh = cfg.d_model, cfg.head_dim
+    Hkv, S, V, F = cfg.n_kv_heads, cfg.max_seq, cfg.vocab_size, cfg.d_ffn
+    cache = spec((B, Hkv, S, Dh))
+    return {
+        "embed": [spec((B, T), I32), spec((V, D))],
+        "layer": [
+            spec((B, T, D)), cache, cache, spec((B,), I32),
+            spec((D,)), spec((D, cfg.q_dim)), spec((D, cfg.kv_dim)),
+            spec((D, cfg.kv_dim)), spec((cfg.q_dim, D)), spec((D,)),
+            spec((D, F)), spec((D, F)), spec((F, D)),
+        ],
+        "head": [spec((B, T, D)), spec((D,)), spec((D, V))],
+        "full": [
+            spec((B, T), I32),
+            spec((cfg.n_layers, B, Hkv, S, Dh)),
+            spec((cfg.n_layers, B, Hkv, S, Dh)),
+            spec((B,), I32),
+        ] + [spec(shape) for _, shape in param_specs(cfg)],
+    }
+
+
+def entry_fns(cfg):
+    return {
+        "embed": model.embed,
+        "layer": functools.partial(model.layer_fwd, cfg),
+        "head": functools.partial(model.lm_head, cfg),
+        "full": functools.partial(model.model_full, cfg),
+    }
+
+
+def wrap_tuple(fn):
+    """Ensure the lowered computation returns a tuple (uniform unwrap)."""
+
+    def wrapped(*args):
+        out = fn(*args)
+        return out if isinstance(out, tuple) else (out,)
+
+    return wrapped
+
+
+# The monolithic entry is only used by the safepoint-overhead bench; keep
+# the artifact set small by exporting it at two representative buckets.
+FULL_BUCKETS = ((8, 1), (4, 16))
+
+
+def export_weights(cfg, seed, out_dir):
+    params = model.init_params(cfg, seed)
+    tensors = []
+    offset = 0
+    blobs = []
+    for name, shape in param_specs(cfg):
+        arr = np.asarray(params[name], dtype="<f4")
+        assert tuple(arr.shape) == tuple(shape), name
+        tensors.append(
+            {"name": name, "shape": list(shape), "offset": offset, "numel": arr.size}
+        )
+        offset += arr.size
+        blobs.append(arr.tobytes())
+    with open(os.path.join(out_dir, "weights.bin"), "wb") as f:
+        for b in blobs:
+            f.write(b)
+    return tensors
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    cfg, exp = MODEL, EXPORT
+    os.makedirs(args.out, exist_ok=True)
+
+    tensors = export_weights(cfg, exp.seed, args.out)
+    fns = entry_fns(cfg)
+
+    entries = []
+    jobs = []
+    for B in exp.batch_buckets:
+        for T in exp.chunk_buckets:
+            jobs += [("embed", B, T), ("layer", B, T), ("head", B, T)]
+    jobs += [("full", B, T) for (B, T) in FULL_BUCKETS]
+
+    for kind, B, T in jobs:
+        name = f"{kind}_b{B}_t{T}"
+        specs = entry_specs(cfg, B, T)[kind]
+        lowered = jax.jit(wrap_tuple(fns[kind])).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        entries.append(
+            {"name": name, "kind": kind, "batch": B, "chunk": T, "file": fname}
+        )
+        print(f"  lowered {name}: {len(text)} chars")
+
+    manifest = {
+        "model": {
+            "vocab_size": cfg.vocab_size,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "n_kv_heads": cfg.n_kv_heads,
+            "head_dim": cfg.head_dim,
+            "d_ffn": cfg.d_ffn,
+            "max_seq": cfg.max_seq,
+            "rope_theta": cfg.rope_theta,
+            "norm_eps": cfg.norm_eps,
+        },
+        "buckets": {
+            "batch": list(exp.batch_buckets),
+            "chunk": list(exp.chunk_buckets),
+        },
+        "seed": exp.seed,
+        "weights_file": "weights.bin",
+        "tensors": tensors,
+        "layer_weight_order": list(LAYER_WEIGHT_NAMES),
+        "entries": entries,
+        "arg_order": {
+            "embed": ["tokens", "embedding"],
+            "layer": ["hidden", "k_cache", "v_cache", "ctx_lens"]
+            + list(LAYER_WEIGHT_NAMES),
+            "head": ["hidden", "final_norm", "lm_head"],
+            "full": ["tokens", "k_caches", "v_caches", "ctx_lens", "*params"],
+        },
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(entries)} entries to {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

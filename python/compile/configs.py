@@ -1,0 +1,91 @@
+"""Model + export configuration for the ConServe artifact pipeline.
+
+The "real path" model is a Llama-architecture transformer small enough to
+serve end-to-end on the CPU PJRT client: byte-level vocab, 4 layers, GQA.
+The architecture (RMSNorm -> GQA attention with RoPE -> SwiGLU) matches
+Llama-2 exactly so the layered export is representative of the paper's
+Llama-2-7B testbed; only the dimensions are scaled down.
+
+Buckets: XLA AOT requires static shapes, so every entry point is exported
+at a grid of (batch, chunk) buckets. The Rust engine pads each scheduled
+sub-batch up to the nearest bucket. T=1 is the decode bucket; larger T
+buckets serve chunked prefill.
+"""
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    vocab_size: int = 256          # byte-level tokenizer
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    n_kv_heads: int = 2            # GQA, like Llama-2-70B / Llama-3
+    head_dim: int = 32
+    d_ffn: int = 256
+    max_seq: int = 256             # KV-cache slots per sequence
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+
+@dataclass(frozen=True)
+class ExportConfig:
+    batch_buckets: Tuple[int, ...] = (1, 4, 8)
+    chunk_buckets: Tuple[int, ...] = (1, 16, 64)
+    seed: int = 20240607
+
+
+MODEL = ModelConfig()
+EXPORT = ExportConfig()
+
+
+def param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list for every model tensor.
+
+    This order is the layout of weights.bin and is mirrored in
+    manifest.json; the Rust runtime indexes tensors by name.
+    """
+    specs: List[Tuple[str, Tuple[int, ...]]] = [
+        ("embedding", (cfg.vocab_size, cfg.d_model)),
+    ]
+    for l in range(cfg.n_layers):
+        p = f"layers.{l}."
+        specs += [
+            (p + "attn_norm", (cfg.d_model,)),
+            (p + "wq", (cfg.d_model, cfg.q_dim)),
+            (p + "wk", (cfg.d_model, cfg.kv_dim)),
+            (p + "wv", (cfg.d_model, cfg.kv_dim)),
+            (p + "wo", (cfg.q_dim, cfg.d_model)),
+            (p + "mlp_norm", (cfg.d_model,)),
+            (p + "w_gate", (cfg.d_model, cfg.d_ffn)),
+            (p + "w_up", (cfg.d_model, cfg.d_ffn)),
+            (p + "w_down", (cfg.d_ffn, cfg.d_model)),
+        ]
+    specs += [
+        ("final_norm", (cfg.d_model,)),
+        ("lm_head", (cfg.d_model, cfg.vocab_size)),
+    ]
+    return specs
+
+
+LAYER_WEIGHT_NAMES = (
+    "attn_norm",
+    "wq",
+    "wk",
+    "wv",
+    "wo",
+    "mlp_norm",
+    "w_gate",
+    "w_up",
+    "w_down",
+)

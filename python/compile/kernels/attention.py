@@ -1,0 +1,121 @@
+"""L1 Pallas kernel: fused cached causal attention (flash-style).
+
+This is the compute hot-spot of the serving path: every prefill chunk and
+every decode step runs it once per layer. One kernel serves both phases —
+decode is the T=1 case — like the flash/paged decode kernels in vLLM, but
+expressed for the TPU memory hierarchy:
+
+Hardware adaptation (paper targets A100/CUDA; see DESIGN.md):
+  * the CUDA version streams KV through shared memory per threadblock;
+    here `BlockSpec` stages the (batch-row, KV-head) tile of the cache from
+    HBM into VMEM, and the kernel streams it in `block_k`-sized chunks with
+    an online-softmax (running max / sum / accumulator) carried in f32 —
+    the BlockSpec + inner loop *are* the HBM<->VMEM schedule that the CUDA
+    version expressed with threadblocks.
+  * tiles are MXU-shaped: the [T, BK] score GEMM and the [BK, Dh] value
+    GEMM keep the contracted/lane dimensions at multiples of (8, 128)
+    where the model dims allow; `preferred_element_type=f32` pins MXU
+    accumulation width.
+  * masking is positional (ctx_lens scalar per row), so padded cache slots
+    beyond the causal frontier are never attended.
+
+Compiled with interpret=True: the CPU PJRT client cannot execute Mosaic
+custom-calls; numerics are validated against kernels.ref.attention_ref by
+pytest + hypothesis. VMEM footprint / MXU utilization estimates live in
+EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Sequence-dimension streaming chunk. 128 matches the TPU lane width; the
+# tiny real-path model uses S=256 so the stream is 2 chunks long.
+DEFAULT_BLOCK_K = 128
+
+# Large-negative instead of -inf: keeps the running max finite for rows
+# whose first chunks are fully masked, avoiding inf-inf = nan.
+NEG_INF = -1e30
+
+
+def _attn_kernel(ctx_ref, q_ref, k_ref, v_ref, o_ref, *, block_k: int):
+    """One grid step handles one (batch row, query head).
+
+    q_ref: [1, 1, T, Dh]; k_ref/v_ref: [1, 1, S, Dh] (this row's KV head);
+    ctx_ref: [1] i32; o_ref: [1, 1, T, Dh].
+    """
+    T, Dh = q_ref.shape[2], q_ref.shape[3]
+    S = k_ref.shape[2]
+    nblk = S // block_k
+
+    q = q_ref[0, 0].astype(jnp.float32)  # [T, Dh]
+    ctx = ctx_ref[0]
+    scale = 1.0 / (Dh ** 0.5)
+    qpos = ctx + jax.lax.broadcasted_iota(jnp.int32, (T, block_k), 0)
+
+    def body(blk, carry):
+        m, l, acc = carry
+        k = pl.load(k_ref, (0, 0, pl.dslice(blk * block_k, block_k), slice(None)))
+        v = pl.load(v_ref, (0, 0, pl.dslice(blk * block_k, block_k), slice(None)))
+        k = k.astype(jnp.float32)
+        v = v.astype(jnp.float32)
+
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # [T, BK]
+        kpos = blk * block_k + jax.lax.broadcasted_iota(jnp.int32, (T, block_k), 1)
+        s = jnp.where(kpos <= qpos, s, NEG_INF)
+
+        m_new = jnp.maximum(m, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_new = acc * alpha + jnp.dot(p, v, preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    init = (
+        jnp.full((T, 1), NEG_INF, jnp.float32),
+        jnp.zeros((T, 1), jnp.float32),
+        jnp.zeros((T, Dh), jnp.float32),
+    )
+    _, l, acc = jax.lax.fori_loop(0, nblk, body, init)
+    # Every query row attends at least slot 0 (kpos 0 <= qpos always), so
+    # l >= exp(NEG_INF-m)·… > 0; no division guard needed.
+    o_ref[0, 0] = (acc / l).astype(o_ref.dtype)
+
+
+def attention(
+    q: jax.Array,         # [B, H, T, Dh], RoPE applied
+    k_cache: jax.Array,   # [B, Hkv, S, Dh], new tokens already written
+    v_cache: jax.Array,   # [B, Hkv, S, Dh]
+    ctx_lens: jax.Array,  # [B] i32, context length BEFORE this chunk
+    *,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused flash-style attention over a per-sequence KV cache (GQA-aware).
+
+    Query t of row b sits at absolute position ctx_lens[b] + t and attends
+    cache slots s <= that position. Returns [B, H, T, Dh].
+    """
+    B, H, T, Dh = q.shape
+    _, Hkv, S, _ = k_cache.shape
+    assert H % Hkv == 0, "query heads must be a multiple of KV heads"
+    bk = min(block_k, S)
+    assert S % bk == 0, f"S={S} not tileable by block_k={bk}"
+    group = H // Hkv
+
+    kernel = functools.partial(_attn_kernel, block_k=bk)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h: (b,)),
+            pl.BlockSpec((1, 1, T, Dh), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, S, Dh), lambda b, h: (b, h // group, 0, 0)),
+            pl.BlockSpec((1, 1, S, Dh), lambda b, h: (b, h // group, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, T, Dh), lambda b, h: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, T, Dh), q.dtype),
+        interpret=interpret,
+    )(ctx_lens, q, k_cache, v_cache)

@@ -1,0 +1,121 @@
+"""Pure-jnp correctness oracles for the Pallas kernels and the L2 model.
+
+Everything here is the "obviously correct" dense implementation; the
+Pallas kernels and the layered model are validated against these by
+pytest (python/tests/). Nothing in this file is exported to artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """RMSNorm over the last axis: x / rms(x) * w."""
+    ms = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(ms + eps) * w).astype(x.dtype)
+
+
+def attention_ref(
+    q: jax.Array,        # [B, H, T, Dh] (RoPE already applied)
+    k_cache: jax.Array,  # [B, Hkv, S, Dh] (new tokens already written)
+    v_cache: jax.Array,  # [B, Hkv, S, Dh]
+    ctx_lens: jax.Array, # [B] i32, context length BEFORE this chunk
+) -> jax.Array:
+    """Dense causal attention over a per-sequence KV cache.
+
+    Query t of sequence b sits at absolute position ctx_lens[b] + t and may
+    attend to cache slots s <= that position. GQA: query head h reads KV
+    head h * Hkv // H.
+    """
+    B, H, T, Dh = q.shape
+    _, Hkv, S, _ = k_cache.shape
+    group = H // Hkv
+    scale = 1.0 / jnp.sqrt(jnp.float32(Dh))
+
+    k = jnp.repeat(k_cache, group, axis=1)  # [B, H, S, Dh]
+    v = jnp.repeat(v_cache, group, axis=1)
+
+    scores = jnp.einsum("bhtd,bhsd->bhts", q, k).astype(jnp.float32) * scale
+    qpos = ctx_lens[:, None] + jnp.arange(T)[None, :]          # [B, T]
+    kpos = jnp.arange(S)[None, None, :]                        # [1, 1, S]
+    mask = kpos <= qpos[:, :, None]                            # [B, T, S]
+    scores = jnp.where(mask[:, None, :, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhts,bhsd->bhtd", probs, v).astype(q.dtype)
+
+
+def rope_ref(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """Rotary embedding, Llama half-split convention.
+
+    x: [B, T, H, Dh]; positions: [B, T] absolute token positions.
+    """
+    Dh = x.shape[-1]
+    half = Dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B, T, half]
+    cos = jnp.cos(angles)[:, :, None, :]                       # [B, T, 1, half]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def update_cache_ref(cache: jax.Array, new: jax.Array, ctx_lens: jax.Array) -> jax.Array:
+    """Write `new` [B, Hkv, T, Dh] into `cache` [B, Hkv, S, Dh] at per-row
+    offsets ctx_lens [B]."""
+
+    def row(c, n, off):
+        return jax.lax.dynamic_update_slice(c, n, (0, off, 0))
+
+    return jax.vmap(row)(cache, new, ctx_lens)
+
+
+def swiglu_ref(x, w_gate, w_up, w_down):
+    return (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down
+
+
+def layer_ref(cfg, hidden, k_cache, v_cache, ctx_lens, w):
+    """Reference transformer layer matching model.layer_fwd semantics.
+
+    w: dict with attn_norm, wq, wk, wv, wo, mlp_norm, w_gate, w_up, w_down.
+    Returns (hidden, k_cache, v_cache).
+    """
+    B, T, D = hidden.shape
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    positions = ctx_lens[:, None] + jnp.arange(T)[None, :]
+
+    x = rmsnorm_ref(hidden, w["attn_norm"], cfg.norm_eps)
+    q = (x @ w["wq"]).reshape(B, T, H, Dh)
+    k = (x @ w["wk"]).reshape(B, T, Hkv, Dh)
+    v = (x @ w["wv"]).reshape(B, T, Hkv, Dh)
+    q = rope_ref(q, positions, cfg.rope_theta)
+    k = rope_ref(k, positions, cfg.rope_theta)
+
+    k_cache = update_cache_ref(k_cache, k.transpose(0, 2, 1, 3), ctx_lens)
+    v_cache = update_cache_ref(v_cache, v.transpose(0, 2, 1, 3), ctx_lens)
+
+    attn = attention_ref(q.transpose(0, 2, 1, 3), k_cache, v_cache, ctx_lens)
+    attn = attn.transpose(0, 2, 1, 3).reshape(B, T, H * Dh)
+    hidden = hidden + attn @ w["wo"]
+
+    y = rmsnorm_ref(hidden, w["mlp_norm"], cfg.norm_eps)
+    hidden = hidden + swiglu_ref(y, w["w_gate"], w["w_up"], w["w_down"])
+    return hidden, k_cache, v_cache
+
+
+def model_ref(cfg, params, tokens, k_caches, v_caches, ctx_lens):
+    """Reference full model: embed -> layers -> head.
+
+    params: flat dict name -> array (configs.param_specs naming).
+    k_caches/v_caches: [L, B, Hkv, S, Dh]. Returns (logits, k_caches, v_caches).
+    """
+    hidden = params["embedding"][tokens]
+    new_k, new_v = [], []
+    for l in range(cfg.n_layers):
+        w = {n: params[f"layers.{l}.{n}"] for n in (
+            "attn_norm", "wq", "wk", "wv", "wo", "mlp_norm", "w_gate", "w_up", "w_down")}
+        hidden, kc, vc = layer_ref(cfg, hidden, k_caches[l], v_caches[l], ctx_lens, w)
+        new_k.append(kc)
+        new_v.append(vc)
+    hidden = rmsnorm_ref(hidden, params["final_norm"], cfg.norm_eps)
+    logits = hidden @ params["lm_head"]
+    return logits, jnp.stack(new_k), jnp.stack(new_v)

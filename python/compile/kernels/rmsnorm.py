@@ -1,0 +1,54 @@
+"""L1 Pallas kernel: fused RMSNorm (normalize + scale in one pass).
+
+Runs twice per layer (attention and MLP pre-norms) plus once before the LM
+head. The fusion saves one full read/write of the activation tensor versus
+the naive mean-square -> rsqrt -> multiply pipeline.
+
+TPU mapping: grid over row tiles; each grid step stages a [BN, D] tile of
+activations into VMEM, reduces along the lane dimension in f32, and writes
+the scaled tile back — one HBM round trip per tile. interpret=True for CPU
+PJRT (see attention.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 8  # rows per tile; 8 = TPU sublane width for f32
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)                 # [BN, D]
+    w = w_ref[...].astype(jnp.float32)                 # [D]
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(ms + eps) * w).astype(o_ref.dtype)
+
+
+def rmsnorm(
+    x: jax.Array,  # [N, D] (callers flatten leading dims)
+    w: jax.Array,  # [D]
+    *,
+    eps: float = 1e-5,
+    block_n: int = DEFAULT_BLOCK_N,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused RMSNorm over the last axis of a 2-D tensor."""
+    N, D = x.shape
+    bn = min(block_n, N)
+    while N % bn != 0:  # fall back to the largest divisor (worst case 1)
+        bn -= 1
+
+    kernel = functools.partial(_rmsnorm_kernel, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=(N // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, D), lambda i: (i, 0)),
+            pl.BlockSpec((D,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, D), x.dtype),
+        interpret=interpret,
+    )(x, w)

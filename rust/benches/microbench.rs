@@ -1,0 +1,121 @@
+//! L3 hot-path microbenchmarks (the §Perf criterion-style suite):
+//! scheduler step latency, KV block alloc/free, swap-engine ops, gamma
+//! sampling, and JSON parsing. Each reports ns/op over a fixed iteration
+//! budget; EXPERIMENTS.md §Perf records before/after for the
+//! optimization pass.
+
+use conserve::config::EngineConfig;
+use conserve::kvcache::{Direction, KvManager, SwapEngine};
+use conserve::profiler::LatencyProfile;
+use conserve::request::{Class, Request};
+use conserve::scheduler::{Ctx, UnifiedScheduler};
+use conserve::util::json::Json;
+use conserve::util::rng::Rng;
+use std::collections::HashMap;
+use std::time::Instant;
+
+fn bench<F: FnMut()>(name: &str, iters: u64, mut f: F) -> f64 {
+    // warmup
+    for _ in 0..iters / 10 + 1 {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+    println!("{name:<44} {ns:>12.0} ns/op   ({iters} iters)");
+    ns
+}
+
+fn main() {
+    println!("=== L3 hot-path microbenchmarks ===");
+
+    // ---- KV block alloc/free ----
+    let mut kv = KvManager::new(4096, 8192, 16);
+    kv.register(1);
+    bench("kv: grow+commit+release 32-block seq", 20_000, || {
+        kv.grow(1, 512).unwrap();
+        kv.commit(1, 512).unwrap();
+        kv.release(1, false);
+        kv.register(1);
+    });
+
+    // ---- swap engine enqueue/tick ----
+    let mut swap = SwapEngine::new(8 << 20, 32 << 30);
+    let mut t = 0u64;
+    bench("swap: enqueue + drain one op", 100_000, || {
+        swap.enqueue(t, 1, 0, Direction::D2H);
+        t += 300;
+        let _ = swap.tick(t);
+    });
+
+    // ---- scheduler step on a loaded table ----
+    let cfg = EngineConfig::sim_a100_7b();
+    let profile = LatencyProfile {
+        c: [1200.0, 96.0, 40.0, 0.385],
+    };
+    let mut sched = UnifiedScheduler::new(cfg.sched.clone());
+    let mut table: HashMap<u64, Request> = HashMap::new();
+    let mut kv2 = KvManager::new(cfg.mem.gpu_blocks, cfg.mem.host_blocks, 16);
+    for id in 0..128u64 {
+        let class = if id % 4 == 0 {
+            Class::Online
+        } else {
+            Class::Offline
+        };
+        table.insert(id, Request::new(id, class, vec![], 1024, 128, 0));
+        sched.enqueue(id, class);
+    }
+    let mut now = 0u64;
+    bench("scheduler: full Algorithm-1 step (128 reqs)", 2_000, || {
+        now += 50_000;
+        let mut ctx = Ctx {
+            table: &mut table,
+            kv: &mut kv2,
+            profile: &profile,
+            now,
+            max_model_len: 4096,
+        };
+        let out = sched.schedule(&mut ctx);
+        // commit so the state advances realistically
+        for item in &out.plan.items {
+            kv2.commit(item.req, item.n_tokens).unwrap();
+            let r = table.get_mut(&item.req).unwrap();
+            r.ctx_len += item.n_tokens;
+            if r.ctx_len == r.feed_target() {
+                r.generated += 1;
+                if r.is_done() {
+                    r.state = conserve::request::State::Finished;
+                    kv2.release(item.req, false);
+                }
+            }
+        }
+    });
+
+    // ---- workload sampling ----
+    let mut rng = Rng::new(1);
+    bench("rng: gamma inter-arrival sample", 1_000_000, || {
+        std::hint::black_box(rng.gamma_interarrival(2.0, 2.0));
+    });
+
+    // ---- profiler estimate (inner loop of budget calc) ----
+    let s = conserve::backend::PlanSummary {
+        prefill_tokens: 1024,
+        decode_seqs: 32,
+        ctx_tokens: 32 * 1024,
+        n_seqs: 33,
+    };
+    bench("profiler: estimate_us", 1_000_000, || {
+        std::hint::black_box(profile.estimate_us(&s));
+    });
+
+    // ---- manifest JSON parse ----
+    if let Ok(text) = std::fs::read_to_string("artifacts/manifest.json") {
+        bench("json: parse manifest.json", 2_000, || {
+            std::hint::black_box(Json::parse(&text).unwrap());
+        });
+    }
+
+    println!("\nmicrobench OK");
+}

@@ -1,0 +1,126 @@
+//! §6.4.2 — "Efficiency of Preemptible Worker."
+//!
+//! Paper measurements on A100/Llama-2-7B: 988 µs per safepoint barrier;
+//! instrumenting every 8 layers adds 3.99 ms (4%) to a 98.5 ms step;
+//! preemption detected within 5.41 ms.
+//!
+//! Two reproductions:
+//!  1. **Simulated testbed** — the cost model's numbers at safepoint
+//!     granularities 1..32 (overhead % and worst-case detection time).
+//!  2. **Real PJRT backend** — measured wall-clock overhead of the
+//!     layered (safepointed) execution vs the monolithic `full` artifact,
+//!     plus measured preemption-detection latency, on the tiny model.
+
+use conserve::backend::{
+    CostModel, ExecBackend, IterationPlan, PjrtBackend, SafepointAction, SimBackend, WorkItem,
+};
+use conserve::clock::Clock;
+use conserve::request::{Class, Phase};
+
+fn offline_plan(n_tokens: usize) -> IterationPlan {
+    IterationPlan {
+        items: vec![WorkItem {
+            req: 900_001,
+            class: Class::Offline,
+            phase: Phase::Prefill,
+            ctx_len: 0,
+            n_tokens,
+            tokens: (0..n_tokens).map(|i| (i % 250) as u16).collect(),
+        }],
+        preemptible: true,
+    }
+}
+
+fn main() {
+    println!("=== simulated A100/Llama-2-7B (32 layers, 988 µs barrier) ===");
+    println!(
+        "{:>16} {:>12} {:>12} {:>12} {:>14}",
+        "safepoint_every", "step_ms", "overhead_ms", "overhead_%", "detect_ms(max)"
+    );
+    let cost = CostModel::a100_llama2_7b();
+    let base = cost.iter_us(1024, 0, 0, 1); // ~the paper's 98.5 ms step
+    for sp in [1usize, 2, 4, 8, 16, 32] {
+        let mut b = SimBackend::new(cost, Clock::virtual_at(0), sp);
+        let out = b
+            .execute(&offline_plan(1024), &mut |_| SafepointAction::Continue)
+            .unwrap();
+        let overhead = out.elapsed_us - base;
+        let groups = b.n_layer_groups();
+        // worst-case detection: one full group + one barrier
+        let detect = base / groups as u64 + cost.safepoint_us;
+        println!(
+            "{:>16} {:>12.1} {:>12.2} {:>12.2} {:>14.2}",
+            sp,
+            out.elapsed_us as f64 / 1000.0,
+            overhead as f64 / 1000.0,
+            100.0 * overhead as f64 / base as f64,
+            detect as f64 / 1000.0
+        );
+        if sp == 8 {
+            let pct = 100.0 * overhead as f64 / base as f64;
+            assert!(
+                (1.0..8.0).contains(&pct),
+                "8-layer safepoints should cost a few percent (paper 4%), got {pct:.2}%"
+            );
+            assert!(
+                detect < 35_000,
+                "detection within one layer group (paper 5.41 ms at their step time)"
+            );
+        }
+    }
+
+    println!("\n=== real PJRT backend (tiny Llama, 4 layers) ===");
+    match PjrtBackend::load("artifacts", 7, 1) {
+        Err(e) => {
+            println!("artifacts not available ({e}); run `make artifacts` first");
+        }
+        Ok(mut b) => {
+            // warm up / compile the exact bucket the timed plans use
+            for _ in 0..2 {
+                let _ = b.execute(&offline_plan(64), &mut |_| SafepointAction::Continue);
+                b.drop_request(900_001);
+            }
+            let reps = 5;
+
+            let timed = |b: &mut PjrtBackend, preemptible: bool| -> f64 {
+                let mut plan = offline_plan(64);
+                plan.preemptible = preemptible;
+                let t0 = std::time::Instant::now();
+                for _ in 0..reps {
+                    let out = b.execute(&plan, &mut |_| SafepointAction::Continue).unwrap();
+                    assert!(out.completed);
+                    b.drop_request(900_001);
+                }
+                t0.elapsed().as_secs_f64() * 1000.0 / reps as f64
+            };
+
+            let plain = timed(&mut b, false);
+            let safep = timed(&mut b, true);
+            println!("layered step (no safepoint checks): {plain:>8.2} ms");
+            println!("layered step (safepoints active):   {safep:>8.2} ms");
+            println!(
+                "in-process safepoint overhead:      {:>8.3} ms ({:.2}%)",
+                safep - plain,
+                100.0 * (safep - plain) / plain
+            );
+
+            // preemption detection latency: abort at the first safepoint
+            let mut plan = offline_plan(64);
+            plan.preemptible = true;
+            let t0 = std::time::Instant::now();
+            let out = b
+                .execute(&plan, &mut |_| SafepointAction::Abort)
+                .unwrap();
+            let detect_ms = t0.elapsed().as_secs_f64() * 1000.0;
+            assert!(!out.completed);
+            println!(
+                "preemption detected + aborted in:   {detect_ms:>8.2} ms (vs {plain:.2} ms full step; paper 5.41 ms vs 98.5 ms)"
+            );
+            assert!(
+                detect_ms < plain,
+                "abort must be faster than a full step"
+            );
+        }
+    }
+    println!("\ntab_safepoint OK");
+}

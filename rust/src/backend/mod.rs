@@ -1,0 +1,189 @@
+//! Execution backends: layer-group-stepped model execution with
+//! preemption **safepoints** between groups (paper §4.3).
+//!
+//! The serving engine is generic over [`ExecBackend`]:
+//!
+//! * [`PjrtBackend`] — the real path: AOT HLO artifacts executed through
+//!   the PJRT CPU client; per-layer executables give natural safepoints.
+//! * [`SimBackend`] — a discrete-event model of the paper's testbed
+//!   (A100-40G, Llama-2-7B) driven by [`costmodel::CostModel`]; advances
+//!   a virtual clock instead of computing.
+//!
+//! A safepoint callback runs between layer groups of *preemptible* (pure
+//! offline, §4.3) iterations; returning [`SafepointAction::Abort`]
+//! models the worker observing the preemption flag: remaining layers are
+//! skipped, partial results discarded, and nothing is committed.
+
+pub mod costmodel;
+pub mod pjrt;
+pub mod sim;
+
+use crate::request::{Class, Phase, RequestId, TokenId};
+use crate::TimeUs;
+
+pub use costmodel::CostModel;
+pub use pjrt::PjrtBackend;
+pub use sim::SimBackend;
+
+/// One request's work within an iteration.
+#[derive(Debug, Clone)]
+pub struct WorkItem {
+    pub req: RequestId,
+    pub class: Class,
+    pub phase: Phase,
+    /// Committed context length before this iteration.
+    pub ctx_len: usize,
+    /// New tokens computed this iteration (prefill chunk size, or 1).
+    pub n_tokens: usize,
+    /// Concrete token ids for this chunk (real path; empty in sim).
+    pub tokens: Vec<TokenId>,
+}
+
+/// An iteration of continuous batching handed to the backend.
+#[derive(Debug, Clone, Default)]
+pub struct IterationPlan {
+    pub items: Vec<WorkItem>,
+    /// Safepoints active: true only for pure-offline batches (§4.3
+    /// "restrict layer-wise preemption to the offline batching mode").
+    pub preemptible: bool,
+}
+
+impl IterationPlan {
+    pub fn prefill_tokens(&self) -> usize {
+        self.items
+            .iter()
+            .filter(|i| i.phase == Phase::Prefill)
+            .map(|i| i.n_tokens)
+            .sum()
+    }
+
+    pub fn decode_seqs(&self) -> usize {
+        self.items
+            .iter()
+            .filter(|i| i.phase == Phase::Decode)
+            .count()
+    }
+
+    pub fn total_new_tokens(&self) -> usize {
+        self.items.iter().map(|i| i.n_tokens).sum()
+    }
+
+    /// Context tokens whose KV is re-read by attention this iteration.
+    pub fn ctx_tokens(&self) -> usize {
+        self.items.iter().map(|i| i.ctx_len).sum()
+    }
+
+    pub fn summary(&self) -> PlanSummary {
+        PlanSummary {
+            prefill_tokens: self.prefill_tokens(),
+            decode_seqs: self.decode_seqs(),
+            ctx_tokens: self.ctx_tokens(),
+            n_seqs: self.items.len(),
+        }
+    }
+}
+
+/// Shape-only view of a plan (profiler estimation input, §4.5).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PlanSummary {
+    pub prefill_tokens: usize,
+    pub decode_seqs: usize,
+    /// Total committed context across items (KV re-read volume).
+    pub ctx_tokens: usize,
+    pub n_seqs: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SafepointAction {
+    Continue,
+    /// Abort remaining layers; discard partial work (worker preemption).
+    Abort,
+}
+
+#[derive(Debug)]
+pub struct ExecOutcome {
+    /// False if the iteration was aborted at a safepoint.
+    pub completed: bool,
+    /// Per item (plan order): sampled next token for items that finished
+    /// a phase step (None in sim mode / aborted iterations).
+    pub new_tokens: Vec<Option<TokenId>>,
+    pub elapsed_us: u64,
+    /// Safepoint checks performed (for §6.4.2 accounting).
+    pub safepoint_checks: usize,
+}
+
+pub trait ExecBackend {
+    /// Execute one iteration. `safepoint` is invoked between layer
+    /// groups when `plan.preemptible`; it receives the current time.
+    fn execute(
+        &mut self,
+        plan: &IterationPlan,
+        safepoint: &mut dyn FnMut(TimeUs) -> SafepointAction,
+    ) -> anyhow::Result<ExecOutcome>;
+
+    /// Ground-truth iteration time for a hypothetical plan shape, used to
+    /// build the offline profile (§4.5). The simulator answers from its
+    /// cost model; the real backend measures probe executions.
+    fn probe_us(&mut self, summary: &PlanSummary) -> u64;
+
+    /// Forget a request's device state (discard preemption / finish).
+    fn drop_request(&mut self, req: RequestId);
+
+    /// Drop only the *device* copy of a request's KV (checkpoint-backed
+    /// eviction, §4.4): host mirrors survive for later prefetch.
+    fn evict_device(&mut self, _req: RequestId) {}
+
+    /// Copy one KV block D2H (checkpoint commit). Real backend memcpys
+    /// slab -> host mirror; sim is accounting-only.
+    fn copy_block_d2h(&mut self, req: RequestId, block_idx: usize, block_tokens: usize);
+
+    /// Copy one KV block H2D (prefetch commit).
+    fn copy_block_h2d(&mut self, req: RequestId, block_idx: usize, block_tokens: usize);
+
+    /// KV bytes per block (drives the swap engine).
+    fn block_bytes(&self) -> u64;
+
+    /// Host<->device link bandwidth in bytes/s.
+    fn link_bandwidth(&self) -> u64;
+
+    /// Safepoint synchronization cost in µs (§6.4.2: 988 µs measured).
+    fn safepoint_cost_us(&self) -> u64;
+
+    /// Layer groups per iteration (n_layers / safepoint_layers).
+    fn n_layer_groups(&self) -> usize;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_summary_counts() {
+        let plan = IterationPlan {
+            items: vec![
+                WorkItem {
+                    req: 1,
+                    class: Class::Online,
+                    phase: Phase::Prefill,
+                    ctx_len: 0,
+                    n_tokens: 512,
+                    tokens: vec![],
+                },
+                WorkItem {
+                    req: 2,
+                    class: Class::Offline,
+                    phase: Phase::Decode,
+                    ctx_len: 1024,
+                    n_tokens: 1,
+                    tokens: vec![],
+                },
+            ],
+            preemptible: false,
+        };
+        let s = plan.summary();
+        assert_eq!(s.prefill_tokens, 512);
+        assert_eq!(s.decode_seqs, 1);
+        assert_eq!(s.ctx_tokens, 1024);
+        assert_eq!(plan.total_new_tokens(), 513);
+    }
+}

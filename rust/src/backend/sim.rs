@@ -1,0 +1,186 @@
+//! Discrete-event execution backend: models the A100/Llama-2-7B testbed
+//! by advancing a shared virtual clock according to the cost model.
+//!
+//! Execution is split into `n_layers / safepoint_layers` layer groups;
+//! preemptible iterations pay the safepoint barrier cost between groups
+//! and invoke the engine's safepoint callback — the exact control flow
+//! of the paper's instrumented worker (§4.3), with modelled time instead
+//! of CUDA kernels.
+
+use super::{
+    CostModel, ExecBackend, ExecOutcome, IterationPlan, PlanSummary, SafepointAction,
+};
+use crate::clock::Clock;
+use crate::request::RequestId;
+
+pub struct SimBackend {
+    pub cost: CostModel,
+    clock: Clock,
+    safepoint_layers: usize,
+}
+
+impl SimBackend {
+    pub fn new(cost: CostModel, clock: Clock, safepoint_layers: usize) -> Self {
+        assert!(clock.is_virtual(), "SimBackend requires a virtual clock");
+        let safepoint_layers = safepoint_layers.clamp(1, cost.n_layers);
+        Self {
+            cost,
+            clock,
+            safepoint_layers,
+        }
+    }
+
+    pub fn clock(&self) -> Clock {
+        self.clock.clone()
+    }
+}
+
+impl ExecBackend for SimBackend {
+    fn execute(
+        &mut self,
+        plan: &IterationPlan,
+        safepoint: &mut dyn FnMut(crate::TimeUs) -> SafepointAction,
+    ) -> anyhow::Result<ExecOutcome> {
+        let s = plan.summary();
+        let total =
+            self.cost
+                .iter_us(s.prefill_tokens, s.decode_seqs, s.ctx_tokens, s.n_seqs);
+        let groups = self.n_layer_groups();
+        let per_group = total / groups as u64;
+        let start = self.clock.now();
+        let mut checks = 0;
+
+        for g in 0..groups {
+            // last group gets the rounding remainder
+            let dt = if g == groups - 1 {
+                total - per_group * (groups as u64 - 1)
+            } else {
+                per_group
+            };
+            self.clock.advance(dt);
+            if plan.preemptible && g + 1 < groups {
+                // barrier + flag check between layer groups (§4.3)
+                self.clock.advance(self.cost.safepoint_us);
+                checks += 1;
+                if safepoint(self.clock.now()) == SafepointAction::Abort {
+                    return Ok(ExecOutcome {
+                        completed: false,
+                        new_tokens: vec![None; plan.items.len()],
+                        elapsed_us: self.clock.now() - start,
+                        safepoint_checks: checks,
+                    });
+                }
+            }
+        }
+        Ok(ExecOutcome {
+            completed: true,
+            new_tokens: vec![None; plan.items.len()],
+            elapsed_us: self.clock.now() - start,
+            safepoint_checks: checks,
+        })
+    }
+
+    fn probe_us(&mut self, s: &PlanSummary) -> u64 {
+        self.cost
+            .iter_us(s.prefill_tokens, s.decode_seqs, s.ctx_tokens, s.n_seqs)
+    }
+
+    fn drop_request(&mut self, _req: RequestId) {}
+
+    fn copy_block_d2h(&mut self, _req: RequestId, _idx: usize, _bt: usize) {}
+
+    fn copy_block_h2d(&mut self, _req: RequestId, _idx: usize, _bt: usize) {}
+
+    fn block_bytes(&self) -> u64 {
+        self.cost.block_bytes()
+    }
+
+    fn link_bandwidth(&self) -> u64 {
+        self.cost.pcie_bytes_per_sec
+    }
+
+    fn safepoint_cost_us(&self) -> u64 {
+        self.cost.safepoint_us
+    }
+
+    fn n_layer_groups(&self) -> usize {
+        self.cost.n_layers.div_ceil(self.safepoint_layers)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::WorkItem;
+    use crate::request::{Class, Phase};
+
+    fn plan(preemptible: bool) -> IterationPlan {
+        IterationPlan {
+            items: vec![WorkItem {
+                req: 1,
+                class: Class::Offline,
+                phase: Phase::Prefill,
+                ctx_len: 0,
+                n_tokens: 512,
+                tokens: vec![],
+            }],
+            preemptible,
+        }
+    }
+
+    fn backend() -> SimBackend {
+        SimBackend::new(CostModel::a100_llama2_7b(), Clock::virtual_at(0), 8)
+    }
+
+    #[test]
+    fn advances_clock_by_modelled_time() {
+        let mut b = backend();
+        let clock = b.clock();
+        let out = b
+            .execute(&plan(false), &mut |_| SafepointAction::Continue)
+            .unwrap();
+        assert!(out.completed);
+        assert_eq!(out.safepoint_checks, 0); // non-preemptible: no safepoints
+        assert_eq!(clock.now(), out.elapsed_us);
+        let expect = CostModel::a100_llama2_7b().iter_us(512, 0, 0, 1);
+        assert_eq!(out.elapsed_us, expect);
+    }
+
+    #[test]
+    fn preemptible_pays_safepoint_cost() {
+        let mut b = backend();
+        let out = b
+            .execute(&plan(true), &mut |_| SafepointAction::Continue)
+            .unwrap();
+        assert!(out.completed);
+        assert_eq!(out.safepoint_checks, 3); // 32/8 groups -> 3 interior barriers
+        let base = CostModel::a100_llama2_7b().iter_us(512, 0, 0, 1);
+        assert_eq!(out.elapsed_us, base + 3 * 988);
+    }
+
+    #[test]
+    fn abort_at_first_safepoint() {
+        let mut b = backend();
+        let out = b
+            .execute(&plan(true), &mut |_| SafepointAction::Abort)
+            .unwrap();
+        assert!(!out.completed);
+        assert_eq!(out.safepoint_checks, 1);
+        let base = CostModel::a100_llama2_7b().iter_us(512, 0, 0, 1);
+        // ran one of four groups plus one barrier
+        assert!(out.elapsed_us < base / 2, "elapsed={}", out.elapsed_us);
+    }
+
+    #[test]
+    fn abort_latency_bounded_by_group_time() {
+        // responsiveness claim (§6.4.2): detection within ~one layer group
+        let mut b = backend();
+        let mut first_check_at = 0;
+        let _ = b.execute(&plan(true), &mut |now| {
+            first_check_at = now;
+            SafepointAction::Abort
+        });
+        let base = CostModel::a100_llama2_7b().iter_us(512, 0, 0, 1);
+        assert!(first_check_at <= base / 4 + 988 + 1);
+    }
+}

@@ -1,0 +1,97 @@
+//! Time source abstraction: the same engine/scheduler code runs against
+//! wall-clock time (real PJRT serving) and a discrete-event virtual clock
+//! (the calibrated A100 simulation used by the benches).
+//!
+//! The clock is a shared handle: the execution backend *advances* virtual
+//! time as it models compute, while the scheduler, checkpoint engine and
+//! metrics only *read* it. In real mode `advance` is a no-op (wall time
+//! advances on its own).
+
+use crate::TimeUs;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+#[derive(Clone)]
+pub enum Clock {
+    Real(Arc<RealClock>),
+    Virtual(Arc<AtomicU64>),
+}
+
+pub struct RealClock {
+    origin: Instant,
+}
+
+impl Clock {
+    pub fn real() -> Self {
+        Clock::Real(Arc::new(RealClock {
+            origin: Instant::now(),
+        }))
+    }
+
+    pub fn virtual_at(start: TimeUs) -> Self {
+        Clock::Virtual(Arc::new(AtomicU64::new(start)))
+    }
+
+    #[inline]
+    pub fn now(&self) -> TimeUs {
+        match self {
+            Clock::Real(c) => c.origin.elapsed().as_micros() as TimeUs,
+            Clock::Virtual(t) => t.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Advance virtual time by `dt` µs; no-op on the real clock.
+    pub fn advance(&self, dt: TimeUs) {
+        if let Clock::Virtual(t) = self {
+            t.fetch_add(dt, Ordering::Relaxed);
+        }
+    }
+
+    /// Jump virtual time forward to `to` (never backwards); no-op on the
+    /// real clock.
+    pub fn advance_to(&self, to: TimeUs) {
+        if let Clock::Virtual(t) = self {
+            t.fetch_max(to, Ordering::Relaxed);
+        }
+    }
+
+    pub fn is_virtual(&self) -> bool {
+        matches!(self, Clock::Virtual(_))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_clock_advances() {
+        let c = Clock::virtual_at(100);
+        assert_eq!(c.now(), 100);
+        c.advance(50);
+        assert_eq!(c.now(), 150);
+        c.advance_to(120); // never backwards
+        assert_eq!(c.now(), 150);
+        c.advance_to(500);
+        assert_eq!(c.now(), 500);
+    }
+
+    #[test]
+    fn clones_share_state() {
+        let c = Clock::virtual_at(0);
+        let c2 = c.clone();
+        c.advance(77);
+        assert_eq!(c2.now(), 77);
+    }
+
+    #[test]
+    fn real_clock_monotone() {
+        let c = Clock::real();
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+        c.advance(1_000_000); // no-op
+        assert!(c.now() < 1_000_000_000);
+    }
+}

@@ -1,0 +1,119 @@
+//! Adaptive checkpointing controller (paper §4.4 "Adaptive Checkpointing
+//! Policy"): decides *how many* KV blocks to checkpoint per iteration.
+//!
+//! Inspired by asynchronous-swap OS designs (Hermit) and random early
+//! detection: checkpointing starts when free GPU memory drops below a
+//! watermark (default 50%), begins with a small quota, ramps up while
+//! memory usage keeps rising (to match the consumption rate), and decays
+//! when pressure subsides — bounding host-memory and PCIe usage when the
+//! GPU is not actually under pressure.
+
+/// Iteration-scoped controller state.
+#[derive(Debug, Clone)]
+pub struct CkptController {
+    /// Free-fraction watermark below which checkpointing activates.
+    pub watermark: f64,
+    /// Current per-iteration block quota.
+    quota: usize,
+    /// Quota bounds.
+    min_quota: usize,
+    max_quota: usize,
+    /// Free fraction observed last iteration.
+    last_free: f64,
+}
+
+impl CkptController {
+    pub fn new(watermark: f64, max_quota: usize) -> Self {
+        Self {
+            watermark,
+            quota: 0,
+            min_quota: 1,
+            max_quota: max_quota.max(1),
+            last_free: 1.0,
+        }
+    }
+
+    /// Called once per scheduling iteration with the current free GPU
+    /// fraction; returns the number of blocks that may be checkpointed
+    /// this iteration.
+    pub fn step(&mut self, free_frac: f64) -> usize {
+        if free_frac >= self.watermark {
+            // no pressure: decay quota quickly, stop checkpointing
+            self.quota = 0;
+        } else if self.quota == 0 {
+            // activation: start with a small quota (§4.4 "only checkpoint
+            // a small number of offline requests first")
+            self.quota = self.min_quota;
+        } else if free_frac < self.last_free - 1e-9 {
+            // pressure rising: ramp up multiplicatively to catch up with
+            // the consumption rate
+            self.quota = (self.quota * 2).min(self.max_quota);
+        } else if free_frac > self.last_free + 1e-9 {
+            // pressure easing: back off additively
+            self.quota = self.quota.saturating_sub(1).max(self.min_quota);
+        }
+        self.last_free = free_frac;
+        self.quota
+    }
+
+    pub fn active(&self) -> bool {
+        self.quota > 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inactive_above_watermark() {
+        let mut c = CkptController::new(0.5, 64);
+        assert_eq!(c.step(0.9), 0);
+        assert_eq!(c.step(0.6), 0);
+        assert!(!c.active());
+    }
+
+    #[test]
+    fn ramps_up_under_rising_pressure() {
+        let mut c = CkptController::new(0.5, 64);
+        let q1 = c.step(0.45);
+        let q2 = c.step(0.40);
+        let q3 = c.step(0.30);
+        let q4 = c.step(0.20);
+        assert!(q1 >= 1);
+        assert!(q2 > q1 && q3 > q2 && q4 > q3, "{q1} {q2} {q3} {q4}");
+    }
+
+    #[test]
+    fn caps_at_max_quota() {
+        let mut c = CkptController::new(0.5, 8);
+        let mut free = 0.49;
+        let mut q = 0;
+        for _ in 0..20 {
+            free -= 0.02;
+            q = c.step(free);
+        }
+        assert_eq!(q, 8);
+    }
+
+    #[test]
+    fn backs_off_when_pressure_eases() {
+        let mut c = CkptController::new(0.5, 64);
+        c.step(0.4);
+        c.step(0.3);
+        c.step(0.2);
+        let high = c.step(0.1);
+        let lower = c.step(0.15); // freeing memory
+        assert!(lower < high);
+        // fully recovered: stops
+        assert_eq!(c.step(0.8), 0);
+        assert!(!c.active());
+    }
+
+    #[test]
+    fn steady_pressure_keeps_trickle() {
+        let mut c = CkptController::new(0.5, 64);
+        assert_eq!(c.step(0.4), 1);
+        assert_eq!(c.step(0.4), 1);
+    }
+}

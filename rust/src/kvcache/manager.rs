@@ -1,0 +1,517 @@
+//! Block-granular KV accounting: GPU and host pools, per-sequence block
+//! tables, and the GPU<->host checkpoint mapping (§5: "keeping track of
+//! the mapping between each GPU KV block and its corresponding CPU KV
+//! block ... recorded in an extended field of the virtual page table").
+
+use super::BlockId;
+use crate::request::RequestId;
+use std::collections::HashMap;
+
+/// A pool of fixed-size blocks; O(1) alloc/free via a free list.
+#[derive(Debug)]
+pub struct BlockPool {
+    total: usize,
+    free: Vec<BlockId>,
+}
+
+impl BlockPool {
+    pub fn new(total: usize) -> Self {
+        Self {
+            total,
+            free: (0..total as BlockId).rev().collect(),
+        }
+    }
+
+    pub fn alloc(&mut self) -> Option<BlockId> {
+        self.free.pop()
+    }
+
+    pub fn free(&mut self, b: BlockId) {
+        debug_assert!(!self.free.contains(&b), "double free of block {b}");
+        self.free.push(b);
+    }
+
+    pub fn available(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    pub fn used(&self) -> usize {
+        self.total - self.free.len()
+    }
+}
+
+/// Per-logical-block checkpoint state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BlockCkpt {
+    /// No host copy.
+    None,
+    /// D2H copy in flight.
+    InFlight(BlockId),
+    /// Host copy valid at `BlockId`.
+    Done(BlockId),
+}
+
+/// Block table for one sequence.
+#[derive(Debug)]
+pub struct SeqKv {
+    /// Logical block i -> GPU physical block (None after GPU eviction).
+    pub gpu: Vec<Option<BlockId>>,
+    /// Logical block i -> host checkpoint state.
+    pub host: Vec<BlockCkpt>,
+    /// Committed tokens (== the owning request's ctx_len).
+    pub tokens: usize,
+}
+
+impl SeqKv {
+    fn new() -> Self {
+        Self {
+            gpu: Vec::new(),
+            host: Vec::new(),
+            tokens: 0,
+        }
+    }
+
+    pub fn gpu_blocks(&self) -> usize {
+        self.gpu.iter().flatten().count()
+    }
+
+    /// All logical blocks that hold committed tokens have valid host
+    /// copies (the "cheap to evict" condition of §4.4).
+    pub fn fully_checkpointed(&self, block_tokens: usize) -> bool {
+        let needed = self.tokens.div_ceil(block_tokens);
+        (0..needed).all(|i| matches!(self.host.get(i), Some(BlockCkpt::Done(_))))
+    }
+
+    /// Tokens covered by completed host checkpoints (prefix).
+    pub fn ckpt_tokens(&self, block_tokens: usize) -> usize {
+        let mut n = 0;
+        for (i, c) in self.host.iter().enumerate() {
+            if matches!(c, BlockCkpt::Done(_)) {
+                n = (i + 1) * block_tokens;
+            } else {
+                break;
+            }
+        }
+        n.min(self.tokens)
+    }
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum KvError {
+    #[error("out of GPU KV blocks (need {need}, free {free})")]
+    OutOfGpu { need: usize, free: usize },
+    #[error("out of host KV blocks")]
+    OutOfHost,
+    #[error("unknown sequence {0}")]
+    UnknownSeq(RequestId),
+}
+
+/// The KV-cache manager: pools + tables. All scheduler memory decisions
+/// (admission, eviction, checkpoint selection) query this.
+#[derive(Debug)]
+pub struct KvManager {
+    pub block_tokens: usize,
+    gpu: BlockPool,
+    host: BlockPool,
+    seqs: HashMap<RequestId, SeqKv>,
+}
+
+impl KvManager {
+    pub fn new(gpu_blocks: usize, host_blocks: usize, block_tokens: usize) -> Self {
+        Self {
+            block_tokens,
+            gpu: BlockPool::new(gpu_blocks),
+            host: BlockPool::new(host_blocks),
+            seqs: HashMap::new(),
+        }
+    }
+
+    pub fn gpu_free(&self) -> usize {
+        self.gpu.available()
+    }
+
+    pub fn gpu_total(&self) -> usize {
+        self.gpu.total()
+    }
+
+    pub fn gpu_free_frac(&self) -> f64 {
+        self.gpu.available() as f64 / self.gpu.total() as f64
+    }
+
+    pub fn host_free(&self) -> usize {
+        self.host.available()
+    }
+
+    pub fn seq(&self, id: RequestId) -> Option<&SeqKv> {
+        self.seqs.get(&id)
+    }
+
+    pub fn register(&mut self, id: RequestId) {
+        self.seqs.entry(id).or_insert_with(SeqKv::new);
+    }
+
+    /// GPU blocks that must be newly allocated for `id` to hold
+    /// `new_total` committed tokens.
+    pub fn blocks_needed(&self, id: RequestId, new_total: usize) -> usize {
+        let have = self
+            .seqs
+            .get(&id)
+            .map(|s| s.gpu.iter().flatten().count())
+            .unwrap_or(0);
+        new_total.div_ceil(self.block_tokens).saturating_sub(have)
+    }
+
+    /// Grow the GPU block table of `id` to cover `new_total` tokens.
+    /// Fails atomically (no partial allocation) if the pool is short.
+    pub fn grow(&mut self, id: RequestId, new_total: usize) -> Result<(), KvError> {
+        let seq = self.seqs.get(&id).ok_or(KvError::UnknownSeq(id))?;
+        let needed_slots = new_total.div_ceil(self.block_tokens);
+        // Fill gaps (evicted blocks being re-fetched keep their slot) and
+        // extend; count first for atomicity.
+        let mut need = 0;
+        for i in 0..needed_slots {
+            match seq.gpu.get(i) {
+                Some(Some(_)) => {}
+                _ => need += 1,
+            }
+        }
+        if need > self.gpu.available() {
+            return Err(KvError::OutOfGpu {
+                need,
+                free: self.gpu.available(),
+            });
+        }
+        let seq = self.seqs.get_mut(&id).unwrap();
+        for i in 0..needed_slots {
+            let missing = !matches!(seq.gpu.get(i), Some(Some(_)));
+            if missing {
+                let b = self.gpu.alloc().unwrap();
+                if i < seq.gpu.len() {
+                    seq.gpu[i] = Some(b);
+                } else {
+                    while seq.gpu.len() < i {
+                        seq.gpu.push(None);
+                    }
+                    seq.gpu.push(Some(b));
+                }
+            }
+            if seq.host.len() <= i {
+                seq.host.push(BlockCkpt::None);
+            }
+        }
+        Ok(())
+    }
+
+    /// Commit `n` new tokens (caller already grew capacity). Newly
+    /// *refilled* partial blocks invalidate their stale checkpoints:
+    /// a block's host copy is only valid if taken when the block was full
+    /// or the sequence stopped writing to it.
+    pub fn commit(&mut self, id: RequestId, n: usize) -> Result<(), KvError> {
+        let bt = self.block_tokens;
+        let seq = self.seqs.get_mut(&id).ok_or(KvError::UnknownSeq(id))?;
+        let first_dirty = seq.tokens / bt; // block receiving new tokens
+        seq.tokens += n;
+        debug_assert!(
+            seq.tokens <= seq.gpu.len() * bt,
+            "commit beyond allocated capacity"
+        );
+        let last_dirty = (seq.tokens - 1) / bt;
+        for i in first_dirty..=last_dirty {
+            if let Some(c) = seq.host.get_mut(i) {
+                if let BlockCkpt::Done(hb) | BlockCkpt::InFlight(hb) = *c {
+                    self.host.free(hb);
+                    *c = BlockCkpt::None;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Logical blocks eligible for checkpointing: hold committed tokens,
+    /// GPU-resident, no valid/in-flight host copy. A partial tail block
+    /// is eligible too (the next commit invalidates it — §4.4 amortizes
+    /// this as "checkpoint per generation iteration").
+    pub fn checkpoint_candidates(&self, id: RequestId) -> Vec<usize> {
+        let Some(seq) = self.seqs.get(&id) else {
+            return Vec::new();
+        };
+        let used = seq.tokens.div_ceil(self.block_tokens);
+        (0..used)
+            .filter(|&i| {
+                matches!(seq.gpu.get(i), Some(Some(_)))
+                    && matches!(seq.host.get(i), Some(BlockCkpt::None))
+            })
+            .collect()
+    }
+
+    /// Start a D2H checkpoint of logical block `idx`: allocates a host
+    /// block and marks it in flight. Returns (gpu_block, host_block).
+    pub fn begin_ckpt(
+        &mut self,
+        id: RequestId,
+        idx: usize,
+    ) -> Result<(BlockId, BlockId), KvError> {
+        let hb = self.host.alloc().ok_or(KvError::OutOfHost)?;
+        let seq = self.seqs.get_mut(&id).ok_or(KvError::UnknownSeq(id))?;
+        let gb = seq.gpu[idx].expect("checkpointing evicted block");
+        debug_assert_eq!(seq.host[idx], BlockCkpt::None);
+        seq.host[idx] = BlockCkpt::InFlight(hb);
+        Ok((gb, hb))
+    }
+
+    /// D2H copy finished.
+    pub fn finish_ckpt(&mut self, id: RequestId, idx: usize) {
+        if let Some(seq) = self.seqs.get_mut(&id) {
+            if let BlockCkpt::InFlight(hb) = seq.host[idx] {
+                seq.host[idx] = BlockCkpt::Done(hb);
+            }
+        }
+    }
+
+    /// Evict all GPU blocks of `id` (host checkpoints retained). This is
+    /// the O(µs) "discard + remap" release of §4.4 — legal only when the
+    /// caller either has full checkpoints or accepts recompute. Returns
+    /// the freed GPU block count.
+    pub fn evict_gpu(&mut self, id: RequestId) -> usize {
+        let Some(seq) = self.seqs.get_mut(&id) else {
+            return 0;
+        };
+        let mut n = 0;
+        for slot in seq.gpu.iter_mut() {
+            if let Some(b) = slot.take() {
+                self.gpu.free(b);
+                n += 1;
+            }
+        }
+        n
+    }
+
+    /// Drop everything (request finished/aborted or KV discarded).
+    /// `keep_host=false` also releases checkpoints.
+    pub fn release(&mut self, id: RequestId, keep_host: bool) {
+        let Some(mut seq) = self.seqs.remove(&id) else {
+            return;
+        };
+        for slot in seq.gpu.iter_mut() {
+            if let Some(b) = slot.take() {
+                self.gpu.free(b);
+            }
+        }
+        if !keep_host {
+            for c in &seq.host {
+                if let BlockCkpt::Done(hb) | BlockCkpt::InFlight(hb) = c {
+                    self.host.free(*hb);
+                }
+            }
+        } else {
+            // sequence dropped to host residence: keep the table so a
+            // later prefetch can restore it
+            let tokens = seq.tokens;
+            let host = seq.host.clone();
+            self.seqs.insert(
+                id,
+                SeqKv {
+                    gpu: vec![None; host.len()],
+                    host,
+                    tokens,
+                },
+            );
+        }
+    }
+
+    /// Discard a sequence's KV entirely (recompute path): frees GPU and
+    /// host blocks and resets committed tokens to zero, keeping the
+    /// registration alive.
+    pub fn discard(&mut self, id: RequestId) {
+        self.release(id, false);
+        self.register(id);
+    }
+
+    /// Blocks that must be prefetched (H2D) to resume `id`: logical
+    /// indices with a host copy but no GPU copy, covering committed tokens.
+    pub fn prefetch_candidates(&self, id: RequestId) -> Vec<(usize, BlockId)> {
+        let Some(seq) = self.seqs.get(&id) else {
+            return Vec::new();
+        };
+        let used = seq.tokens.div_ceil(self.block_tokens);
+        (0..used)
+            .filter_map(|i| match (seq.gpu.get(i), seq.host.get(i)) {
+                (Some(None), Some(BlockCkpt::Done(hb))) => Some((i, *hb)),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Allocate a GPU block for a prefetched logical block and return it.
+    pub fn begin_prefetch(&mut self, id: RequestId, idx: usize) -> Result<BlockId, KvError> {
+        let gb = self.gpu.alloc().ok_or(KvError::OutOfGpu {
+            need: 1,
+            free: 0,
+        })?;
+        let seq = self.seqs.get_mut(&id).ok_or(KvError::UnknownSeq(id))?;
+        debug_assert!(seq.gpu[idx].is_none());
+        seq.gpu[idx] = Some(gb);
+        Ok(gb)
+    }
+
+    /// Invariant check used by property tests: every block is either free
+    /// or owned by exactly one sequence slot.
+    pub fn check_conservation(&self) -> bool {
+        let mut gpu_owned = 0usize;
+        let mut host_owned = 0usize;
+        let mut seen_gpu = std::collections::HashSet::new();
+        let mut seen_host = std::collections::HashSet::new();
+        for seq in self.seqs.values() {
+            for b in seq.gpu.iter().flatten() {
+                if !seen_gpu.insert(*b) {
+                    return false; // double ownership
+                }
+                gpu_owned += 1;
+            }
+            for c in &seq.host {
+                if let BlockCkpt::Done(hb) | BlockCkpt::InFlight(hb) = c {
+                    if !seen_host.insert(*hb) {
+                        return false;
+                    }
+                    host_owned += 1;
+                }
+            }
+        }
+        gpu_owned + self.gpu.available() == self.gpu.total()
+            && host_owned + self.host.available() == self.host.total()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mgr() -> KvManager {
+        KvManager::new(8, 16, 16)
+    }
+
+    #[test]
+    fn grow_and_commit() {
+        let mut m = mgr();
+        m.register(1);
+        assert_eq!(m.blocks_needed(1, 17), 2);
+        m.grow(1, 17).unwrap();
+        m.commit(1, 17).unwrap();
+        assert_eq!(m.seq(1).unwrap().tokens, 17);
+        assert_eq!(m.gpu_free(), 6);
+        assert_eq!(m.blocks_needed(1, 32), 0);
+        assert_eq!(m.blocks_needed(1, 33), 1);
+        assert!(m.check_conservation());
+    }
+
+    #[test]
+    fn grow_fails_atomically() {
+        let mut m = mgr();
+        m.register(1);
+        let err = m.grow(1, 16 * 9).unwrap_err();
+        assert_eq!(
+            err,
+            KvError::OutOfGpu {
+                need: 9,
+                free: 8
+            }
+        );
+        assert_eq!(m.gpu_free(), 8); // nothing leaked
+        assert!(m.check_conservation());
+    }
+
+    #[test]
+    fn checkpoint_lifecycle() {
+        let mut m = mgr();
+        m.register(1);
+        m.grow(1, 40).unwrap();
+        m.commit(1, 40).unwrap();
+        // blocks 0,1 full; block 2 partial (8 tokens) — all candidates
+        assert_eq!(m.checkpoint_candidates(1), vec![0, 1, 2]);
+        let (_gb, _hb) = m.begin_ckpt(1, 0).unwrap();
+        assert_eq!(m.checkpoint_candidates(1), vec![1, 2]);
+        m.finish_ckpt(1, 0);
+        assert_eq!(m.seq(1).unwrap().ckpt_tokens(16), 16);
+        m.begin_ckpt(1, 1).unwrap();
+        m.finish_ckpt(1, 1);
+        m.begin_ckpt(1, 2).unwrap();
+        m.finish_ckpt(1, 2);
+        assert!(m.seq(1).unwrap().fully_checkpointed(16));
+        assert!(m.check_conservation());
+    }
+
+    #[test]
+    fn commit_invalidates_partial_block_ckpt() {
+        let mut m = mgr();
+        m.register(1);
+        m.grow(1, 8).unwrap();
+        m.commit(1, 8).unwrap();
+        m.begin_ckpt(1, 0).unwrap();
+        m.finish_ckpt(1, 0);
+        assert!(m.seq(1).unwrap().fully_checkpointed(16));
+        let host_free = m.host_free();
+        // writing more tokens into block 0 invalidates its checkpoint
+        m.grow(1, 12).unwrap();
+        m.commit(1, 4).unwrap();
+        assert!(!m.seq(1).unwrap().fully_checkpointed(16));
+        assert_eq!(m.host_free(), host_free + 1); // stale copy freed
+        assert_eq!(m.checkpoint_candidates(1), vec![0]);
+        assert!(m.check_conservation());
+    }
+
+    #[test]
+    fn evict_and_prefetch_roundtrip() {
+        let mut m = mgr();
+        m.register(1);
+        m.grow(1, 32).unwrap();
+        m.commit(1, 32).unwrap();
+        for i in m.checkpoint_candidates(1) {
+            m.begin_ckpt(1, i).unwrap();
+            m.finish_ckpt(1, i);
+        }
+        let freed = m.evict_gpu(1);
+        assert_eq!(freed, 2);
+        assert_eq!(m.gpu_free(), 8);
+        // tokens survive; prefetch restores
+        assert_eq!(m.seq(1).unwrap().tokens, 32);
+        let cands = m.prefetch_candidates(1);
+        assert_eq!(cands.len(), 2);
+        for (i, _hb) in cands {
+            m.begin_prefetch(1, i).unwrap();
+        }
+        assert_eq!(m.seq(1).unwrap().gpu_blocks(), 2);
+        assert!(m.check_conservation());
+    }
+
+    #[test]
+    fn discard_resets() {
+        let mut m = mgr();
+        m.register(1);
+        m.grow(1, 32).unwrap();
+        m.commit(1, 32).unwrap();
+        m.discard(1);
+        assert_eq!(m.gpu_free(), 8);
+        assert_eq!(m.seq(1).unwrap().tokens, 0);
+        assert!(m.check_conservation());
+    }
+
+    #[test]
+    fn release_keep_host_preserves_ckpts() {
+        let mut m = mgr();
+        m.register(1);
+        m.grow(1, 16).unwrap();
+        m.commit(1, 16).unwrap();
+        m.begin_ckpt(1, 0).unwrap();
+        m.finish_ckpt(1, 0);
+        m.release(1, true);
+        assert_eq!(m.gpu_free(), 8);
+        assert_eq!(m.prefetch_candidates(1).len(), 1);
+        m.release(1, false);
+        assert_eq!(m.host_free(), 16);
+        assert!(m.check_conservation());
+    }
+}

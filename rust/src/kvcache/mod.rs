@@ -1,0 +1,19 @@
+//! Paged KV-cache management (vLLM-style block tables) plus the paper's
+//! two memory contributions: **incremental checkpointing** (§4.4) and the
+//! **bandwidth-metered asynchronous swap engine** that overlaps
+//! checkpoint/prefetch I/O with compute.
+//!
+//! Accounting and policy live here; the actual KV *data* lives in the
+//! execution backend (dense slabs on the real path, nothing in the
+//! simulator). The scheduler drives this module; it never touches
+//! device buffers directly.
+
+pub mod checkpoint;
+pub mod manager;
+pub mod swap;
+
+pub type BlockId = u32;
+
+pub use checkpoint::CkptController;
+pub use manager::{KvManager, SeqKv};
+pub use swap::{Direction, SwapEngine, SwapOp};

@@ -1,0 +1,43 @@
+//! # ConServe — GPU harvesting for LLM online/offline co-serving
+//!
+//! A reproduction of *"ConServe: Harvesting GPUs for Low-Latency and
+//! High-Throughput Large Language Model Serving"* (Qiao et al., 2024) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1/L2 (build time, Python)** — Pallas kernels + a layered JAX
+//!   Llama-architecture model, AOT-lowered to HLO text artifacts
+//!   (`python/compile/`, `make artifacts`).
+//! * **L3 (this crate)** — the serving system: a unified preemptive
+//!   scheduler (paper Alg. 1/2), an SLO-aware batch-budget policy, a paged
+//!   KV-cache manager with incremental checkpointing and background
+//!   prefetching, a preemptible layer-stepped execution engine, workload
+//!   generation, metrics, and baselines (`Online-Only`, `vLLM++`).
+//!
+//! Python never runs on the request path: the [`backend::PjrtBackend`]
+//! loads the AOT artifacts through the PJRT C API (`xla` crate) and serves
+//! requests end-to-end from Rust. A calibrated discrete-event backend
+//! ([`backend::SimBackend`]) models the paper's A100/Llama-2-7B testbed
+//! and regenerates every evaluation figure (see `rust/benches/`).
+//!
+//! Quickstart: `examples/quickstart.rs`; architecture: `DESIGN.md`.
+
+pub mod backend;
+pub mod clock;
+pub mod config;
+pub mod kvcache;
+pub mod metrics;
+pub mod profiler;
+pub mod report;
+pub mod request;
+pub mod runtime;
+pub mod scheduler;
+pub mod server;
+pub mod util;
+pub mod workload;
+
+/// Microsecond timestamps; all scheduling math is integer µs to keep the
+/// discrete-event simulation deterministic.
+pub type TimeUs = u64;
+
+pub const US_PER_SEC: u64 = 1_000_000;
+pub const US_PER_MS: u64 = 1_000;

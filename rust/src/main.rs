@@ -1,0 +1,233 @@
+//! ConServe launcher.
+//!
+//! ```text
+//! conserve simulate [--policy conserve|vllm++|online-only] [--rate R]
+//!                   [--cv CV] [--duration S] [--offline-pool N]
+//!                   [--set key=value ...]
+//!     Run a co-serving experiment on the simulated A100/Llama-2-7B
+//!     testbed and print the report.
+//!
+//! conserve serve    [--artifacts DIR] [--duration S] [--rate R]
+//!                   [--set key=value ...]
+//!     Serve the real tiny-Llama model end-to-end on the CPU PJRT
+//!     runtime with a live gamma load (online) + offline pool.
+//!
+//! conserve profile  [--artifacts DIR]
+//!     Run the offline profiler against the PJRT backend and print the
+//!     fitted latency model.
+//!
+//! conserve trace    [--duration S] [--rate R]
+//!     Emit the BurstGPT-like rate series (Figure 1 data).
+//! ```
+
+use anyhow::{bail, Context, Result};
+use conserve::backend::PjrtBackend;
+use conserve::config::EngineConfig;
+use conserve::profiler::LatencyProfile;
+use conserve::report::{Report, SimExperiment};
+use conserve::request::{Class, Request};
+use conserve::runtime::tokenizer;
+use conserve::server::{ArrivalSource, ServingEngine};
+use conserve::util::rng::Rng;
+use conserve::workload::{self, Lengths};
+use conserve::US_PER_SEC;
+
+struct Args {
+    flags: Vec<(String, String)>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Self> {
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    flags.push((k.to_string(), v.to_string()));
+                } else {
+                    let v = argv
+                        .get(i + 1)
+                        .with_context(|| format!("--{key} needs a value"))?;
+                    flags.push((key.to_string(), v.clone()));
+                    i += 1;
+                }
+            } else {
+                bail!("unexpected argument `{a}`");
+            }
+            i += 1;
+        }
+        Ok(Self { flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key}")),
+            None => Ok(default),
+        }
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key}")),
+            None => Ok(default),
+        }
+    }
+
+    fn apply_sets(&self, cfg: &mut EngineConfig) -> Result<()> {
+        for (k, v) in &self.flags {
+            if k == "set" {
+                let (key, val) = v
+                    .split_once('=')
+                    .context("--set expects key=value")?;
+                cfg.set(key, val)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        eprintln!("usage: conserve <simulate|serve|profile|trace> [flags]");
+        std::process::exit(2);
+    };
+    let args = Args::parse(&argv[1..])?;
+    match cmd.as_str() {
+        "simulate" => simulate(&args),
+        "serve" => serve(&args),
+        "profile" => profile(&args),
+        "trace" => trace(&args),
+        other => bail!("unknown command `{other}`"),
+    }
+}
+
+fn simulate(args: &Args) -> Result<()> {
+    let mut cfg = EngineConfig::sim_a100_7b();
+    if let Some(p) = args.get("policy") {
+        cfg.set("policy", p)?;
+    }
+    args.apply_sets(&mut cfg)?;
+    let rate = args.get_f64("rate", 2.0)?;
+    let cv = args.get_f64("cv", 1.0)?;
+    let duration = args.get_f64("duration", 120.0)?;
+    let offline_pool = args.get_usize("offline-pool", 512)?;
+
+    let mut lg = workload::LoadGen::new(cfg.seed, rate, cv);
+    let arrivals = lg.arrivals_until(duration);
+    let report = SimExperiment {
+        cfg,
+        online_arrivals: arrivals,
+        online_lengths: Lengths::online_paper(),
+        offline_pool,
+        offline_lengths: Lengths::offline_paper(),
+        duration_s: duration,
+    }
+    .run();
+    print_report(&report);
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let mut cfg = EngineConfig::real_tiny();
+    args.apply_sets(&mut cfg)?;
+    let duration = args.get_f64("duration", 20.0)?;
+    let rate = args.get_f64("rate", 2.0)?;
+    let artifacts = args.get("artifacts").unwrap_or("artifacts");
+
+    let backend = PjrtBackend::load(artifacts, cfg.seed, cfg.sched.safepoint_layers)?;
+    let clock = backend.clock();
+    println!("profiling PJRT backend ...");
+    let mut backend = backend;
+    let profile = LatencyProfile::profile(&mut backend, 128, 8, 128)?;
+    println!("profile: {:?}", profile.c);
+
+    // trace-driven live load: online gamma arrivals + offline pool
+    let mut rng = Rng::new(cfg.seed);
+    let mut lg = workload::LoadGen::new(cfg.seed ^ 1, rate, 1.0);
+    let mut events = Vec::new();
+    let mut id = 1u64;
+    for t in lg.arrivals_until(duration) {
+        let l = Lengths::online_tiny().sample(&mut rng);
+        let prompt = workload::datasets::synth_prompt(&mut rng, l.input);
+        let plen = prompt.len();
+        events.push(Request::new(id, Class::Online, prompt, plen, l.output, t));
+        id += 1;
+    }
+    for _ in 0..args.get_usize("offline-pool", 24)? {
+        let l = Lengths::offline_tiny().sample(&mut rng);
+        let prompt = workload::datasets::synth_prompt(&mut rng, l.input);
+        let plen = prompt.len();
+        events.push(Request::new(id, Class::Offline, prompt, plen, l.output, 0));
+        id += 1;
+    }
+
+    let arrivals = ArrivalSource::from_trace(events);
+    let mut engine = ServingEngine::new(cfg, backend, clock, profile, arrivals);
+    let end = engine.run((duration * US_PER_SEC as f64) as u64 * 4);
+    let report = Report::from_engine(&engine.rec, engine.cfg.sched.policy, end);
+    print_report(&report);
+
+    // show one served completion
+    if let Some(r) = engine
+        .table
+        .values()
+        .find(|r| r.class == Class::Online && !r.output.is_empty())
+    {
+        println!(
+            "\nsample completion for request {}:\n  prompt: {:?}\n  output: {:?}",
+            r.id,
+            tokenizer::detokenize(&r.prompt[..r.prompt.len().min(48)]),
+            tokenizer::detokenize(&r.output)
+        );
+    }
+    Ok(())
+}
+
+fn profile(args: &Args) -> Result<()> {
+    let artifacts = args.get("artifacts").unwrap_or("artifacts");
+    let mut backend = PjrtBackend::load(artifacts, 7, 1)?;
+    let profile = LatencyProfile::profile(&mut backend, 128, 8, 128)?;
+    println!("fitted latency model (µs): t = {:.1} + {:.3}*prefill_tok + {:.1}*decode_seq + {:.4}*ctx_tok",
+        profile.c[0], profile.c[1], profile.c[2], profile.c[3]);
+    println!("json: {}", profile.to_json());
+    Ok(())
+}
+
+fn trace(args: &Args) -> Result<()> {
+    let duration = args.get_f64("duration", 900.0)?;
+    let rate = args.get_f64("rate", 2.0)?;
+    let arrivals = workload::trace::burstgpt_like_arrivals(42, duration, rate, 1.0);
+    println!("t_s,requests,tokens_per_s");
+    for (t, n, toks) in workload::trace::rate_series(&arrivals, 1152, 30.0, duration) {
+        println!("{t:.0},{n},{toks:.0}");
+    }
+    Ok(())
+}
+
+fn print_report(r: &Report) {
+    println!("== {} ==", r.policy);
+    println!("  duration            {:>10.1} s", r.duration_s);
+    println!("  online P99 TTFT     {:>10.1} ms", r.online_p99_ttft_ms);
+    println!("  online P99 TPOT     {:>10.1} ms", r.online_p99_tpot_ms);
+    println!("  online mean TTFT    {:>10.1} ms", r.online_mean_ttft_ms);
+    println!("  gen throughput      {:>10.0} tok/s (online {:.0}, offline {:.0})",
+        r.total_gen_tput, r.online_gen_tput, r.offline_gen_tput);
+    println!("  processed tput      {:>10.0} tok/s (online {:.0}, offline {:.0})",
+        r.total_processed_tput, r.online_processed_tput, r.offline_processed_tput);
+    println!("  finished            {:>6} online / {} offline",
+        r.online_finished, r.offline_finished);
+    println!("  preemptions         {:>6} (layer aborts {})", r.preemptions, r.layer_aborts);
+    println!("  ckpt/prefetch blks  {:>6} / {}", r.ckpt_blocks, r.prefetch_blocks);
+    println!("  blocking swap       {:>10.1} ms", r.blocking_swap_ms);
+    println!("  TTFT SLO violations {:>9.1} %", r.ttft_violations * 100.0);
+}

@@ -1,0 +1,280 @@
+//! Serving metrics: per-request TTFT, per-token TPOT, throughput, and the
+//! windowed-percentile timeseries the paper's figures plot.
+//!
+//! Online quality is P99 TTFT (prefill latency incl. queueing) and P99
+//! TPOT (inter-token latency, paper footnote 2: per *decode step*, not
+//! per-request average). Offline quality is generated tokens/second.
+
+use crate::request::Class;
+use crate::{TimeUs, US_PER_SEC};
+
+/// Percentile over a sample set (nearest-rank on a sorted copy).
+pub fn percentile(samples: &[f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * v.len() as f64).ceil() as usize;
+    v[rank.clamp(1, v.len()) - 1]
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct TokenEvent {
+    pub t: TimeUs,
+    pub class: Class,
+    /// Inter-token gap for decode tokens (None for the first token).
+    pub tpot_us: Option<u64>,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct TtftEvent {
+    pub t: TimeUs,
+    pub class: Class,
+    pub ttft_us: u64,
+}
+
+/// Tokens *processed* (prefill chunk + decode) in one iteration — the
+/// utilization-style throughput the harvest figures report alongside
+/// generation throughput.
+#[derive(Debug, Clone, Copy)]
+pub struct ProcessedEvent {
+    pub t: TimeUs,
+    pub class: Class,
+    pub n: usize,
+}
+
+/// Append-only metrics recorder; analysis happens after the run.
+#[derive(Debug, Default)]
+pub struct Recorder {
+    pub ttfts: Vec<TtftEvent>,
+    pub tokens: Vec<TokenEvent>,
+    pub processed: Vec<ProcessedEvent>,
+    pub preemptions: u64,
+    pub layer_aborts: u64,
+    pub recomputed_tokens: u64,
+    pub ckpt_blocks: u64,
+    pub prefetch_blocks: u64,
+    pub blocking_swap_us: u64,
+    pub finished: [u64; 2], // [online, offline]
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_first_token(&mut self, t: TimeUs, class: Class, ttft_us: u64) {
+        self.ttfts.push(TtftEvent { t, class, ttft_us });
+        self.tokens.push(TokenEvent {
+            t,
+            class,
+            tpot_us: None,
+        });
+    }
+
+    pub fn record_token(&mut self, t: TimeUs, class: Class, gap_us: u64) {
+        self.tokens.push(TokenEvent {
+            t,
+            class,
+            tpot_us: Some(gap_us),
+        });
+    }
+
+    pub fn record_processed(&mut self, t: TimeUs, class: Class, n: usize) {
+        if n > 0 {
+            self.processed.push(ProcessedEvent { t, class, n });
+        }
+    }
+
+    /// Processed tokens/second over [from, to) (prefill + decode), the
+    /// "overall serving throughput" of Figures 5-8.
+    pub fn processed_throughput(
+        &self,
+        class: Option<Class>,
+        from: TimeUs,
+        to: TimeUs,
+    ) -> f64 {
+        if to <= from {
+            return 0.0;
+        }
+        let n: usize = self
+            .processed
+            .iter()
+            .filter(|e| e.t >= from && e.t < to)
+            .filter(|e| class.is_none_or(|c| e.class == c))
+            .map(|e| e.n)
+            .sum();
+        n as f64 * US_PER_SEC as f64 / (to - from) as f64
+    }
+
+    pub fn record_finished(&mut self, class: Class) {
+        self.finished[match class {
+            Class::Online => 0,
+            Class::Offline => 1,
+        }] += 1;
+    }
+
+    // ------------------------------------------------------------ queries
+
+    fn ttft_ms_of(&self, class: Option<Class>) -> Vec<f64> {
+        self.ttfts
+            .iter()
+            .filter(|e| class.is_none_or(|c| e.class == c))
+            .map(|e| e.ttft_us as f64 / 1000.0)
+            .collect()
+    }
+
+    fn tpot_ms_of(&self, class: Option<Class>) -> Vec<f64> {
+        self.tokens
+            .iter()
+            .filter(|e| class.is_none_or(|c| e.class == c))
+            .filter_map(|e| e.tpot_us)
+            .map(|us| us as f64 / 1000.0)
+            .collect()
+    }
+
+    pub fn p99_ttft_ms(&self, class: Class) -> f64 {
+        percentile(&self.ttft_ms_of(Some(class)), 99.0)
+    }
+
+    pub fn p99_tpot_ms(&self, class: Class) -> f64 {
+        percentile(&self.tpot_ms_of(Some(class)), 99.0)
+    }
+
+    pub fn mean_ttft_ms(&self, class: Class) -> f64 {
+        let v = self.ttft_ms_of(Some(class));
+        if v.is_empty() {
+            0.0
+        } else {
+            v.iter().sum::<f64>() / v.len() as f64
+        }
+    }
+
+    /// Generated tokens per second over [from, to) for a class (or both).
+    pub fn throughput(&self, class: Option<Class>, from: TimeUs, to: TimeUs) -> f64 {
+        if to <= from {
+            return 0.0;
+        }
+        let n = self
+            .tokens
+            .iter()
+            .filter(|e| e.t >= from && e.t < to)
+            .filter(|e| class.is_none_or(|c| e.class == c))
+            .count();
+        n as f64 * US_PER_SEC as f64 / (to - from) as f64
+    }
+
+    /// Windowed timeseries of (window_start_s, p99 TTFT ms, p99 TPOT ms,
+    /// tokens/s) — the series Figures 5/6 plot.
+    pub fn timeseries(&self, class: Option<Class>, window: TimeUs, until: TimeUs) -> Vec<WindowStats> {
+        let mut out = Vec::new();
+        let mut start = 0;
+        while start < until {
+            let end = start + window;
+            let ttfts: Vec<f64> = self
+                .ttfts
+                .iter()
+                .filter(|e| e.t >= start && e.t < end)
+                .filter(|e| class.is_none_or(|c| e.class == c))
+                .map(|e| e.ttft_us as f64 / 1000.0)
+                .collect();
+            let tpots: Vec<f64> = self
+                .tokens
+                .iter()
+                .filter(|e| e.t >= start && e.t < end)
+                .filter(|e| class.is_none_or(|c| e.class == c))
+                .filter_map(|e| e.tpot_us)
+                .map(|us| us as f64 / 1000.0)
+                .collect();
+            out.push(WindowStats {
+                start_s: start as f64 / US_PER_SEC as f64,
+                p99_ttft_ms: percentile(&ttfts, 99.0),
+                p99_tpot_ms: percentile(&tpots, 99.0),
+                tokens_per_s: self.throughput(class, start, end),
+                processed_per_s: self.processed_throughput(class, start, end),
+                n_ttft: ttfts.len(),
+            });
+            start = end;
+        }
+        out
+    }
+
+    /// Fraction of online TTFTs above the SLO.
+    pub fn ttft_violation_rate(&self, class: Class, slo_ms: f64) -> f64 {
+        let v = self.ttft_ms_of(Some(class));
+        if v.is_empty() {
+            return 0.0;
+        }
+        v.iter().filter(|&&x| x > slo_ms).count() as f64 / v.len() as f64
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct WindowStats {
+    pub start_s: f64,
+    pub p99_ttft_ms: f64,
+    pub p99_tpot_ms: f64,
+    pub tokens_per_s: f64,
+    pub processed_per_s: f64,
+    pub n_ttft: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 99.0), 99.0);
+        assert_eq!(percentile(&v, 50.0), 50.0);
+        assert_eq!(percentile(&v, 100.0), 100.0);
+        assert_eq!(percentile(&[], 99.0), 0.0);
+        assert_eq!(percentile(&[7.0], 99.0), 7.0);
+    }
+
+    #[test]
+    fn ttft_and_tpot_split_by_class() {
+        let mut r = Recorder::new();
+        r.record_first_token(1_000_000, Class::Online, 200_000);
+        r.record_first_token(2_000_000, Class::Offline, 9_000_000);
+        r.record_token(2_100_000, Class::Online, 50_000);
+        r.record_token(2_200_000, Class::Online, 60_000);
+        assert_eq!(r.p99_ttft_ms(Class::Online), 200.0);
+        assert_eq!(r.p99_ttft_ms(Class::Offline), 9000.0);
+        assert_eq!(r.p99_tpot_ms(Class::Online), 60.0);
+        assert_eq!(r.p99_tpot_ms(Class::Offline), 0.0);
+    }
+
+    #[test]
+    fn throughput_counts_all_tokens_in_window() {
+        let mut r = Recorder::new();
+        for i in 0..100 {
+            r.record_token(i * 10_000, Class::Offline, 10_000); // 100 tokens in 1s
+        }
+        let tput = r.throughput(None, 0, US_PER_SEC);
+        assert!((tput - 100.0).abs() < 1.0, "tput={tput}");
+        assert_eq!(r.throughput(Some(Class::Online), 0, US_PER_SEC), 0.0);
+    }
+
+    #[test]
+    fn timeseries_windows() {
+        let mut r = Recorder::new();
+        r.record_first_token(500_000, Class::Online, 100_000);
+        r.record_first_token(1_500_000, Class::Online, 300_000);
+        let ts = r.timeseries(Some(Class::Online), US_PER_SEC, 2 * US_PER_SEC);
+        assert_eq!(ts.len(), 2);
+        assert_eq!(ts[0].p99_ttft_ms, 100.0);
+        assert_eq!(ts[1].p99_ttft_ms, 300.0);
+    }
+
+    #[test]
+    fn violation_rate() {
+        let mut r = Recorder::new();
+        for ttft in [100_000u64, 200_000, 2_000_000, 90_000] {
+            r.record_first_token(0, Class::Online, ttft);
+        }
+        assert_eq!(r.ttft_violation_rate(Class::Online, 1500.0), 0.25);
+    }
+}

@@ -1,0 +1,254 @@
+//! Offline profiler + latency model (paper §4.5).
+//!
+//! The profiler runs before serving and measures iteration latency across
+//! a grid of batch shapes — "the execution time of different input batch
+//! sizes and input lengths for requests in different stages" — then fits
+//! a linear model
+//!
+//! `t  =  c0 + c1 * prefill_tokens + c2 * decode_seqs + c3 * ctx_tokens`
+//!
+//! The SLO-aware scheduler inverts this model to turn TTFT/TPOT
+//! objectives into per-iteration token budgets, and the preemption
+//! handler (Alg. 2) uses it to estimate remaining/queued execution time.
+//! Profiles serialize to JSON so a server start can reuse them
+//! ("saved locally and automatically loaded", §4.5).
+
+use crate::backend::{ExecBackend, PlanSummary};
+use crate::util::json::{arr, num, obj, Json};
+use anyhow::{anyhow, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencyProfile {
+    /// [c0(µs), c1(µs/prefill tok), c2(µs/decode seq), c3(µs/ctx tok)]
+    pub c: [f64; 4],
+}
+
+impl LatencyProfile {
+    /// Estimated iteration latency in µs.
+    pub fn estimate_us(&self, s: &PlanSummary) -> u64 {
+        let t = self.c[0]
+            + self.c[1] * s.prefill_tokens as f64
+            + self.c[2] * s.decode_seqs as f64
+            + self.c[3] * s.ctx_tokens as f64;
+        t.max(0.0) as u64
+    }
+
+    /// Largest number of additional prefill tokens that keeps a batch
+    /// with the given decode composition within `budget_us` (the §4.5
+    /// budget inversion).
+    pub fn max_prefill_tokens(
+        &self,
+        budget_us: u64,
+        decode_seqs: usize,
+        ctx_tokens: usize,
+    ) -> usize {
+        let fixed =
+            self.c[0] + self.c[2] * decode_seqs as f64 + self.c[3] * ctx_tokens as f64;
+        let slack = budget_us as f64 - fixed;
+        if slack <= 0.0 || self.c[1] <= 0.0 {
+            return 0;
+        }
+        (slack / self.c[1]) as usize
+    }
+
+    /// Least-squares fit over (shape, measured µs) samples via the 4x4
+    /// normal equations.
+    pub fn fit(samples: &[(PlanSummary, u64)]) -> Result<Self> {
+        if samples.len() < 4 {
+            return Err(anyhow!("need >= 4 profile samples, got {}", samples.len()));
+        }
+        let mut ata = [[0.0f64; 4]; 4];
+        let mut atb = [0.0f64; 4];
+        for (s, t) in samples {
+            let x = [
+                1.0,
+                s.prefill_tokens as f64,
+                s.decode_seqs as f64,
+                s.ctx_tokens as f64,
+            ];
+            for i in 0..4 {
+                for j in 0..4 {
+                    ata[i][j] += x[i] * x[j];
+                }
+                atb[i] += x[i] * *t as f64;
+            }
+        }
+        let c = solve4(ata, atb).ok_or_else(|| anyhow!("singular profile fit"))?;
+        Ok(Self { c })
+    }
+
+    /// Build the measurement grid and fit. Grid scales are expressed in
+    /// fractions of the provided maxima so the same code profiles both
+    /// the tiny real model and the simulated 7B.
+    pub fn profile(
+        backend: &mut dyn ExecBackend,
+        max_prefill: usize,
+        max_decode: usize,
+        max_ctx_per_seq: usize,
+    ) -> Result<Self> {
+        let mut samples = Vec::new();
+        let prefills = [0.0, 0.125, 0.5, 1.0];
+        let decodes = [0.0, 0.25, 1.0];
+        let ctxs = [0.25, 1.0];
+        for &pf in &prefills {
+            for &df in &decodes {
+                let p = (max_prefill as f64 * pf) as usize;
+                let d = (max_decode as f64 * df) as usize;
+                if p == 0 && d == 0 {
+                    continue;
+                }
+                for &cf in &ctxs {
+                    let ctx = d * (max_ctx_per_seq as f64 * cf) as usize;
+                    let s = PlanSummary {
+                        prefill_tokens: p,
+                        decode_seqs: d,
+                        ctx_tokens: ctx,
+                        n_seqs: d + p.div_ceil(512).max(if p > 0 { 1 } else { 0 }),
+                    };
+                    let t = backend.probe_us(&s);
+                    samples.push((s, t));
+                }
+            }
+        }
+        Self::fit(&samples)
+    }
+
+    // ------------------------------------------------------ persistence
+    pub fn to_json(&self) -> String {
+        obj(vec![("coeffs", arr(self.c.iter().map(|&x| num(x))))]).to_string()
+    }
+
+    pub fn from_json(text: &str) -> Result<Self> {
+        let j = Json::parse(text)?;
+        let cs = j
+            .req("coeffs")
+            .as_arr()
+            .ok_or_else(|| anyhow!("coeffs not an array"))?;
+        if cs.len() != 4 {
+            return Err(anyhow!("expected 4 coeffs"));
+        }
+        let mut c = [0.0; 4];
+        for (i, v) in cs.iter().enumerate() {
+            c[i] = v.as_f64().ok_or_else(|| anyhow!("bad coeff"))?;
+        }
+        Ok(Self { c })
+    }
+}
+
+/// Gaussian elimination with partial pivoting for the 4x4 system.
+fn solve4(mut a: [[f64; 4]; 4], mut b: [f64; 4]) -> Option<[f64; 4]> {
+    for col in 0..4 {
+        let piv = (col..4).max_by(|&i, &j| {
+            a[i][col].abs().partial_cmp(&a[j][col].abs()).unwrap()
+        })?;
+        if a[piv][col].abs() < 1e-12 {
+            return None;
+        }
+        a.swap(col, piv);
+        b.swap(col, piv);
+        for row in 0..4 {
+            if row == col {
+                continue;
+            }
+            let f = a[row][col] / a[col][col];
+            for k in col..4 {
+                a[row][k] -= f * a[col][k];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    Some([
+        b[0] / a[0][0],
+        b[1] / a[1][1],
+        b[2] / a[2][2],
+        b[3] / a[3][3],
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{CostModel, SimBackend};
+    use crate::clock::Clock;
+
+    fn sim_profile() -> LatencyProfile {
+        let mut b = SimBackend::new(CostModel::a100_llama2_7b(), Clock::virtual_at(0), 8);
+        LatencyProfile::profile(&mut b, 4096, 128, 2048).unwrap()
+    }
+
+    #[test]
+    fn fit_recovers_exact_linear_model() {
+        let truth = LatencyProfile {
+            c: [1000.0, 96.0, 40.0, 0.4],
+        };
+        let mut samples = Vec::new();
+        for p in [0usize, 256, 1024] {
+            for d in [0usize, 8, 64] {
+                for ctx in [0usize, 4096, 65536] {
+                    let s = PlanSummary {
+                        prefill_tokens: p,
+                        decode_seqs: d,
+                        ctx_tokens: ctx,
+                        n_seqs: d + 1,
+                    };
+                    samples.push((s, truth.estimate_us(&s)));
+                }
+            }
+        }
+        let fit = LatencyProfile::fit(&samples).unwrap();
+        for i in 0..4 {
+            assert!(
+                (fit.c[i] - truth.c[i]).abs() / truth.c[i].max(1.0) < 0.02,
+                "c[{i}]={} vs {}",
+                fit.c[i],
+                truth.c[i]
+            );
+        }
+    }
+
+    #[test]
+    fn profiled_sim_estimates_track_cost_model() {
+        let prof = sim_profile();
+        let cm = CostModel::a100_llama2_7b();
+        // mid-grid probe points: within 30% of ground truth
+        for (p, d, cps) in [(1024usize, 16usize, 1024usize), (256, 64, 512), (2048, 0, 0)]
+        {
+            let s = PlanSummary {
+                prefill_tokens: p,
+                decode_seqs: d,
+                ctx_tokens: d * cps,
+                n_seqs: d + 1,
+            };
+            let truth = cm.iter_us(p, d, d * cps, d + 1);
+            let est = prof.estimate_us(&s);
+            let err = (est as f64 - truth as f64).abs() / truth as f64;
+            assert!(err < 0.30, "p={p} d={d}: est={est} truth={truth}");
+        }
+    }
+
+    #[test]
+    fn budget_inversion_consistent() {
+        let prof = sim_profile();
+        let budget = 110_000; // TPOT SLO 110 ms
+        let max_p = prof.max_prefill_tokens(budget, 32, 32 * 1024);
+        assert!(max_p > 0);
+        let s = PlanSummary {
+            prefill_tokens: max_p,
+            decode_seqs: 32,
+            ctx_tokens: 32 * 1024,
+            n_seqs: 33,
+        };
+        assert!(prof.estimate_us(&s) <= budget + 2_000);
+        // tighter budget => smaller allowance
+        assert!(prof.max_prefill_tokens(30_000, 32, 32 * 1024) < max_p);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let p = LatencyProfile {
+            c: [1.5, 2.5, -3.0, 0.125],
+        };
+        let q = LatencyProfile::from_json(&p.to_json()).unwrap();
+        assert_eq!(p, q);
+    }
+}

@@ -1,0 +1,214 @@
+//! Experiment harness shared by the benches, examples and CLI: builds
+//! workloads, runs a policy on the simulated A100/Llama-2-7B testbed,
+//! and reduces the recorder into the numbers the paper's figures report.
+
+use crate::backend::{CostModel, SimBackend};
+use crate::clock::Clock;
+use crate::config::EngineConfig;
+use crate::metrics::WindowStats;
+use crate::profiler::LatencyProfile;
+use crate::request::{Class, Request};
+use crate::scheduler::Policy;
+use crate::server::{ArrivalSource, ServingEngine};
+use crate::util::json::{arr, num, obj, Json};
+use crate::util::rng::Rng;
+use crate::workload::{LengthSample, Lengths};
+use crate::{TimeUs, US_PER_SEC};
+
+/// A complete co-serving experiment on the simulated testbed.
+#[derive(Debug, Clone)]
+pub struct SimExperiment {
+    pub cfg: EngineConfig,
+    /// Online arrival timestamps (µs).
+    pub online_arrivals: Vec<TimeUs>,
+    pub online_lengths: Lengths,
+    /// Size of the offline batch pool submitted at t=0 (0 = none).
+    pub offline_pool: usize,
+    pub offline_lengths: Lengths,
+    pub duration_s: f64,
+}
+
+impl SimExperiment {
+    pub fn run(&self) -> Report {
+        let clock = Clock::virtual_at(0);
+        let cost = CostModel::a100_llama2_7b();
+        let mut backend = SimBackend::new(
+            cost,
+            clock.clone(),
+            self.cfg.sched.safepoint_layers,
+        );
+        // Offline profiling pass (§4.5) on a fresh clock so it does not
+        // consume experiment time.
+        let profile = {
+            let pclock = Clock::virtual_at(0);
+            let mut pb = SimBackend::new(cost, pclock, self.cfg.sched.safepoint_layers);
+            LatencyProfile::profile(&mut pb, 4096, 128, 2048).expect("profiling failed")
+        };
+        // reset the experiment clock reference (backend shares `clock`)
+        let _ = &mut backend;
+
+        let mut rng = Rng::new(self.cfg.seed);
+        let mut events: Vec<Request> = Vec::new();
+        let mut next_id = 1u64;
+        for &t in &self.online_arrivals {
+            let LengthSample { input, output } = self.online_lengths.sample(&mut rng);
+            events.push(Request::new(next_id, Class::Online, vec![], input, output, t));
+            next_id += 1;
+        }
+        for _ in 0..self.offline_pool {
+            let LengthSample { input, output } = self.offline_lengths.sample(&mut rng);
+            events.push(Request::new(next_id, Class::Offline, vec![], input, output, 0));
+            next_id += 1;
+        }
+
+        let arrivals = ArrivalSource::from_trace(events);
+        let mut engine =
+            ServingEngine::new(self.cfg.clone(), backend, clock, profile, arrivals);
+        let until = (self.duration_s * US_PER_SEC as f64) as TimeUs;
+        let end = engine.run(until);
+        Report::from_engine(&engine.rec, self.cfg.sched.policy, end.min(until))
+    }
+}
+
+/// Reduced experiment results (one row of a paper table / one series of a
+/// figure).
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub policy: Policy,
+    pub duration_s: f64,
+    pub online_p99_ttft_ms: f64,
+    pub online_p99_tpot_ms: f64,
+    pub online_mean_ttft_ms: f64,
+    pub online_gen_tput: f64,
+    pub offline_gen_tput: f64,
+    pub total_gen_tput: f64,
+    pub online_processed_tput: f64,
+    pub offline_processed_tput: f64,
+    pub total_processed_tput: f64,
+    pub online_finished: u64,
+    pub offline_finished: u64,
+    pub preemptions: u64,
+    pub layer_aborts: u64,
+    pub ckpt_blocks: u64,
+    pub prefetch_blocks: u64,
+    pub blocking_swap_ms: f64,
+    pub ttft_violations: f64,
+    pub online_timeseries: Vec<WindowStats>,
+    pub all_timeseries: Vec<WindowStats>,
+}
+
+impl Report {
+    pub fn from_engine(
+        rec: &crate::metrics::Recorder,
+        policy: Policy,
+        end: TimeUs,
+    ) -> Self {
+        let dur = end.max(1);
+        Report {
+            policy,
+            duration_s: dur as f64 / US_PER_SEC as f64,
+            online_p99_ttft_ms: rec.p99_ttft_ms(Class::Online),
+            online_p99_tpot_ms: rec.p99_tpot_ms(Class::Online),
+            online_mean_ttft_ms: rec.mean_ttft_ms(Class::Online),
+            online_gen_tput: rec.throughput(Some(Class::Online), 0, dur),
+            offline_gen_tput: rec.throughput(Some(Class::Offline), 0, dur),
+            total_gen_tput: rec.throughput(None, 0, dur),
+            online_processed_tput: rec.processed_throughput(Some(Class::Online), 0, dur),
+            offline_processed_tput: rec.processed_throughput(Some(Class::Offline), 0, dur),
+            total_processed_tput: rec.processed_throughput(None, 0, dur),
+            online_finished: rec.finished[0],
+            offline_finished: rec.finished[1],
+            preemptions: rec.preemptions,
+            layer_aborts: rec.layer_aborts,
+            ckpt_blocks: rec.ckpt_blocks,
+            prefetch_blocks: rec.prefetch_blocks,
+            blocking_swap_ms: rec.blocking_swap_us as f64 / 1000.0,
+            ttft_violations: rec.ttft_violation_rate(Class::Online, 1500.0),
+            online_timeseries: rec.timeseries(Some(Class::Online), 15 * US_PER_SEC, dur),
+            all_timeseries: rec.timeseries(None, 15 * US_PER_SEC, dur),
+        }
+    }
+
+    /// One-line summary row (figure tables in the benches).
+    pub fn row(&self) -> String {
+        format!(
+            "{:<12} p99TTFT={:>9.1}ms p99TPOT={:>8.1}ms tput(gen)={:>7.0} tok/s tput(proc)={:>8.0} tok/s online_fin={:<5} offline_fin={:<5} preempt={:<4} viol={:.1}%",
+            self.policy.to_string(),
+            self.online_p99_ttft_ms,
+            self.online_p99_tpot_ms,
+            self.total_gen_tput,
+            self.total_processed_tput,
+            self.online_finished,
+            self.offline_finished,
+            self.preemptions,
+            self.ttft_violations * 100.0
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("policy", Json::Str(self.policy.to_string())),
+            ("duration_s", num(self.duration_s)),
+            ("online_p99_ttft_ms", num(self.online_p99_ttft_ms)),
+            ("online_p99_tpot_ms", num(self.online_p99_tpot_ms)),
+            ("online_mean_ttft_ms", num(self.online_mean_ttft_ms)),
+            ("total_gen_tput", num(self.total_gen_tput)),
+            ("total_processed_tput", num(self.total_processed_tput)),
+            ("offline_processed_tput", num(self.offline_processed_tput)),
+            ("online_finished", num(self.online_finished as f64)),
+            ("offline_finished", num(self.offline_finished as f64)),
+            ("preemptions", num(self.preemptions as f64)),
+            ("layer_aborts", num(self.layer_aborts as f64)),
+            ("ckpt_blocks", num(self.ckpt_blocks as f64)),
+            ("prefetch_blocks", num(self.prefetch_blocks as f64)),
+            ("blocking_swap_ms", num(self.blocking_swap_ms)),
+            ("ttft_violation_rate", num(self.ttft_violations)),
+            (
+                "online_timeseries",
+                arr(self.online_timeseries.iter().map(|w| {
+                    obj(vec![
+                        ("t_s", num(w.start_s)),
+                        ("p99_ttft_ms", num(w.p99_ttft_ms)),
+                        ("p99_tpot_ms", num(w.p99_tpot_ms)),
+                        ("tok_s", num(w.tokens_per_s)),
+                        ("proc_s", num(w.processed_per_s)),
+                    ])
+                })),
+            ),
+        ])
+    }
+}
+
+/// Standard three-system comparison used by Figures 2/5/6/7/8.
+pub fn compare_policies(
+    base_cfg: &EngineConfig,
+    policies: &[Policy],
+    online_arrivals: &[TimeUs],
+    online_lengths: Lengths,
+    offline_pool_for: impl Fn(Policy) -> usize,
+    offline_lengths: Lengths,
+    duration_s: f64,
+) -> Vec<Report> {
+    policies
+        .iter()
+        .map(|&p| {
+            let mut cfg = base_cfg.clone();
+            cfg.sched.policy = p;
+            if p == Policy::VllmPP {
+                cfg.sched.slo_aware = false;
+                cfg.sched.incremental_ckpt = false;
+                cfg.sched.prefetch = false;
+                cfg.sched.layerwise_preempt = false;
+            }
+            SimExperiment {
+                cfg,
+                online_arrivals: online_arrivals.to_vec(),
+                online_lengths,
+                offline_pool: offline_pool_for(p),
+                offline_lengths,
+                duration_s,
+            }
+            .run()
+        })
+        .collect()
+}

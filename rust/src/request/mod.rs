@@ -1,0 +1,241 @@
+//! Request and sequence model.
+//!
+//! ConServe serves two request classes (paper §2.2): **online** requests
+//! arrive through the streaming API and carry TTFT/TPOT SLOs; **offline**
+//! requests arrive through the batch API and are best-effort. Internally
+//! both flow through the same scheduler as priority levels (§5:
+//! "priority queues with two priority levels ... users are not required
+//! to manually specify priorities").
+
+use crate::TimeUs;
+
+pub type RequestId = u64;
+pub type TokenId = u16; // byte-level vocab (256) fits easily
+
+/// Priority class. Ordering: Online > Offline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Class {
+    Online,
+    Offline,
+}
+
+/// Which inference phase the next scheduled tokens of a request belong to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Prefill,
+    Decode,
+}
+
+/// Where a request's KV state lives when it is not running.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvResidence {
+    /// All blocks resident on the GPU.
+    Gpu,
+    /// Preempted; all useful blocks have host checkpoints, GPU copies
+    /// freed. Resume = prefetch (swap-in).
+    Host,
+    /// Preempted; KV discarded. Resume = recompute prefill from token 0.
+    Discarded,
+    /// Swap-in scheduled/underway; runnable once it completes.
+    Prefetching,
+}
+
+/// Scheduler-visible request state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum State {
+    /// In an arrival queue, never run yet.
+    Waiting,
+    /// In the running set (may or may not be in the current iteration).
+    Running,
+    /// Preempted with KV state per `KvResidence`.
+    Preempted,
+    /// All output tokens generated.
+    Finished,
+    /// Aborted by the client or the engine.
+    Aborted,
+}
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: RequestId,
+    pub class: Class,
+    /// Prompt tokens (real path) — empty in pure-simulation experiments.
+    pub prompt: Vec<TokenId>,
+    /// Prompt length in tokens (== prompt.len() on the real path; the
+    /// simulator uses lengths only).
+    pub prompt_len: usize,
+    /// Number of output tokens to generate (client-requested max).
+    pub max_new_tokens: usize,
+    pub arrival: TimeUs,
+
+    // ---- mutable serving state ----
+    pub state: State,
+    pub residence: KvResidence,
+    /// Tokens whose KV is committed in the cache (prefill progress +
+    /// generated tokens). `ctx_len < prompt_len` means prefill not done.
+    pub ctx_len: usize,
+    /// Generated output tokens (real path).
+    pub output: Vec<TokenId>,
+    /// Count of generated tokens (sim path counts without materializing).
+    pub generated: usize,
+    /// Tokens whose KV blocks have host checkpoints (monotone; paper
+    /// §4.4 incremental checkpointing).
+    pub ckpt_len: usize,
+    pub first_token_at: Option<TimeUs>,
+    pub finished_at: Option<TimeUs>,
+    /// Number of times this request was preempted (any mechanism).
+    pub preemptions: u32,
+    /// Tokens of prefill recomputed due to discard-preemption (wasted work
+    /// accounting, paper Fig. 4a).
+    pub recomputed_tokens: usize,
+}
+
+impl Request {
+    pub fn new(
+        id: RequestId,
+        class: Class,
+        prompt: Vec<TokenId>,
+        prompt_len: usize,
+        max_new_tokens: usize,
+        arrival: TimeUs,
+    ) -> Self {
+        debug_assert!(prompt.is_empty() || prompt.len() == prompt_len);
+        Self {
+            id,
+            class,
+            prompt,
+            prompt_len,
+            max_new_tokens,
+            arrival,
+            state: State::Waiting,
+            residence: KvResidence::Gpu,
+            ctx_len: 0,
+            output: Vec::new(),
+            generated: 0,
+            ckpt_len: 0,
+            first_token_at: None,
+            finished_at: None,
+            preemptions: 0,
+            recomputed_tokens: 0,
+        }
+    }
+
+    /// Total tokens this request will ever hold in cache.
+    pub fn total_len(&self) -> usize {
+        self.prompt_len + self.max_new_tokens
+    }
+
+    /// Feed target: index up to which known tokens (prompt + generated
+    /// outputs) must be fed so the next head sample is a *new* token.
+    /// Initially `prompt_len`; grows by one per generated token. After a
+    /// discard-preemption (`ctx_len` reset to 0) the gap `target - ctx`
+    /// covers the whole recompute (paper Fig. 4a).
+    pub fn feed_target(&self) -> usize {
+        self.prompt_len + self.generated
+    }
+
+    /// Tokens still to feed before the next new token is sampled.
+    pub fn remaining_feed(&self) -> usize {
+        self.feed_target().saturating_sub(self.ctx_len)
+    }
+
+    /// Phase of the *next* scheduled work: a single-token gap is a decode
+    /// step; a larger gap is (re)prefill, processed in chunks.
+    pub fn phase(&self) -> Phase {
+        if self.remaining_feed() > 1 {
+            Phase::Prefill
+        } else {
+            Phase::Decode
+        }
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.generated >= self.max_new_tokens
+    }
+
+    /// Concrete token ids for the next `n` feed positions (real path):
+    /// prompt tokens then generated outputs.
+    pub fn feed_tokens(&self, n: usize) -> Vec<TokenId> {
+        (self.ctx_len..self.ctx_len + n)
+            .map(|i| {
+                if i < self.prompt.len() {
+                    self.prompt[i]
+                } else {
+                    let j = i - self.prompt.len();
+                    self.output.get(j).copied().unwrap_or(0)
+                }
+            })
+            .collect()
+    }
+
+    /// TTFT if the first token has been emitted.
+    pub fn ttft(&self) -> Option<TimeUs> {
+        self.first_token_at.map(|t| t.saturating_sub(self.arrival))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req() -> Request {
+        Request::new(1, Class::Online, vec![], 100, 20, 0)
+    }
+
+    #[test]
+    fn phase_transitions() {
+        let mut r = req();
+        assert_eq!(r.phase(), Phase::Prefill);
+        assert_eq!(r.remaining_feed(), 100);
+        r.ctx_len = 64;
+        assert_eq!(r.phase(), Phase::Prefill);
+        assert_eq!(r.remaining_feed(), 36);
+        // prefill complete + first token sampled
+        r.ctx_len = 100;
+        r.generated = 1;
+        assert_eq!(r.phase(), Phase::Decode);
+        assert_eq!(r.remaining_feed(), 1);
+        // each decode feeds one token
+        r.ctx_len = 101;
+        r.generated = 2;
+        assert_eq!(r.phase(), Phase::Decode);
+    }
+
+    #[test]
+    fn discard_recompute_covers_outputs() {
+        let mut r = req();
+        r.ctx_len = 105; // prefilled 100 + 5 decode steps committed
+        r.generated = 6;
+        // discard-preemption: KV gone, 6 outputs known
+        r.ctx_len = 0;
+        assert_eq!(r.feed_target(), 106);
+        assert_eq!(r.remaining_feed(), 106);
+        assert_eq!(r.phase(), Phase::Prefill);
+    }
+
+    #[test]
+    fn feed_tokens_spans_prompt_and_output() {
+        let mut r = Request::new(1, Class::Online, vec![10, 11, 12], 3, 4, 0);
+        r.output = vec![20, 21];
+        r.generated = 2;
+        r.ctx_len = 2;
+        assert_eq!(r.feed_tokens(3), vec![12, 20, 21]);
+    }
+
+    #[test]
+    fn done_when_outputs_generated() {
+        let mut r = req();
+        assert!(!r.is_done());
+        r.generated = 20;
+        assert!(r.is_done());
+        assert_eq!(r.total_len(), 120);
+    }
+
+    #[test]
+    fn ttft_measured_from_arrival() {
+        let mut r = Request::new(1, Class::Online, vec![], 10, 5, 1000);
+        assert_eq!(r.ttft(), None);
+        r.first_token_at = Some(3500);
+        assert_eq!(r.ttft(), Some(2500));
+    }
+}

@@ -1,0 +1,261 @@
+//! AOT artifact loading: parses `artifacts/manifest.json`, loads
+//! `weights.bin` into per-tensor literals, and lazily compiles the HLO
+//! text entries on the PJRT CPU client.
+//!
+//! HLO *text* is the interchange format (not serialized protos): jax
+//! >= 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids (see /opt/xla-example/README.md).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Model dimensions from the manifest (mirrors python configs.ModelConfig).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModelDims {
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub d_ffn: usize,
+    pub max_seq: usize,
+}
+
+impl ModelDims {
+    /// f32 elements in one sequence's per-layer KV slab ([Hkv, S, Dh]).
+    pub fn slab_elems(&self) -> usize {
+        self.n_kv_heads * self.max_seq * self.head_dim
+    }
+
+    /// KV bytes per token across all layers (f32 K + V).
+    pub fn kv_bytes_per_token(&self) -> u64 {
+        (2 * self.n_layers * self.n_kv_heads * self.head_dim * 4) as u64
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorInfo {
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub numel: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct EntryKey {
+    pub kind: EntryKind,
+    pub batch: usize,
+    pub chunk: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EntryKind {
+    Embed,
+    Layer,
+    Head,
+    Full,
+}
+
+impl EntryKind {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "embed" => EntryKind::Embed,
+            "layer" => EntryKind::Layer,
+            "head" => EntryKind::Head,
+            "full" => EntryKind::Full,
+            other => bail!("unknown entry kind `{other}`"),
+        })
+    }
+}
+
+/// Loaded artifacts: weights as literals + lazily compiled executables.
+pub struct Artifacts {
+    pub dims: ModelDims,
+    pub batch_buckets: Vec<usize>,
+    pub chunk_buckets: Vec<usize>,
+    pub layer_weight_order: Vec<String>,
+    dir: PathBuf,
+    client: xla::PjRtClient,
+    tensors: HashMap<String, TensorInfo>,
+    weights_raw: Vec<f32>,
+    weight_literals: HashMap<String, xla::Literal>,
+    entry_files: HashMap<EntryKey, String>,
+    executables: HashMap<EntryKey, xla::PjRtLoadedExecutable>,
+}
+
+impl Artifacts {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} (run `make artifacts`)"))?;
+        let m = Json::parse(&text).context("parsing manifest.json")?;
+
+        let md = m.req("model");
+        let dim = |k: &str| -> usize { md.req(k).as_usize().unwrap() };
+        let dims = ModelDims {
+            vocab_size: dim("vocab_size"),
+            d_model: dim("d_model"),
+            n_layers: dim("n_layers"),
+            n_heads: dim("n_heads"),
+            n_kv_heads: dim("n_kv_heads"),
+            head_dim: dim("head_dim"),
+            d_ffn: dim("d_ffn"),
+            max_seq: dim("max_seq"),
+        };
+
+        let buckets = |k: &str| -> Vec<usize> {
+            m.req("buckets")
+                .req(k)
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|v| v.as_usize().unwrap())
+                .collect()
+        };
+
+        let mut tensors = HashMap::new();
+        for t in m.req("tensors").as_arr().unwrap() {
+            tensors.insert(
+                t.req("name").as_str().unwrap().to_string(),
+                TensorInfo {
+                    shape: t
+                        .req("shape")
+                        .as_arr()
+                        .unwrap()
+                        .iter()
+                        .map(|v| v.as_usize().unwrap())
+                        .collect(),
+                    offset: t.req("offset").as_usize().unwrap(),
+                    numel: t.req("numel").as_usize().unwrap(),
+                },
+            );
+        }
+
+        let weights_file = dir.join(m.req("weights_file").as_str().unwrap());
+        let raw = std::fs::read(&weights_file)
+            .with_context(|| format!("reading {weights_file:?}"))?;
+        if raw.len() % 4 != 0 {
+            bail!("weights.bin length not a multiple of 4");
+        }
+        let weights_raw: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let total: usize = tensors.values().map(|t| t.numel).sum();
+        if total != weights_raw.len() {
+            bail!(
+                "weights.bin has {} f32s but manifest expects {total}",
+                weights_raw.len()
+            );
+        }
+
+        let mut entry_files = HashMap::new();
+        for e in m.req("entries").as_arr().unwrap() {
+            let key = EntryKey {
+                kind: EntryKind::parse(e.req("kind").as_str().unwrap())?,
+                batch: e.req("batch").as_usize().unwrap(),
+                chunk: e.req("chunk").as_usize().unwrap(),
+            };
+            entry_files.insert(key, e.req("file").as_str().unwrap().to_string());
+        }
+
+        let layer_weight_order = m
+            .req("layer_weight_order")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_str().unwrap().to_string())
+            .collect();
+
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
+
+        let mut art = Self {
+            dims,
+            batch_buckets: buckets("batch"),
+            chunk_buckets: buckets("chunk"),
+            layer_weight_order,
+            dir,
+            client,
+            tensors,
+            weights_raw,
+            weight_literals: HashMap::new(),
+            entry_files,
+            executables: HashMap::new(),
+        };
+        art.build_weight_literals()?;
+        Ok(art)
+    }
+
+    fn build_weight_literals(&mut self) -> Result<()> {
+        let names: Vec<String> = self.tensors.keys().cloned().collect();
+        for name in names {
+            let info = self.tensors[&name].clone();
+            let data = &self.weights_raw[info.offset..info.offset + info.numel];
+            let lit = f32_literal(data, &info.shape)?;
+            self.weight_literals.insert(name, lit);
+        }
+        Ok(())
+    }
+
+    pub fn tensor_data(&self, name: &str) -> Option<&[f32]> {
+        let info = self.tensors.get(name)?;
+        Some(&self.weights_raw[info.offset..info.offset + info.numel])
+    }
+
+    pub fn weight(&self, name: &str) -> &xla::Literal {
+        &self.weight_literals[name]
+    }
+
+    /// Weight literals of layer `l` in the entry-point argument order.
+    pub fn layer_weights(&self, l: usize) -> Vec<&xla::Literal> {
+        self.layer_weight_order
+            .iter()
+            .map(|role| self.weight(&format!("layers.{l}.{role}")))
+            .collect()
+    }
+
+    /// Compile (once) and return the executable for an entry bucket.
+    pub fn executable(&mut self, key: EntryKey) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.executables.contains_key(&key) {
+            let file = self
+                .entry_files
+                .get(&key)
+                .ok_or_else(|| anyhow!("no artifact for {key:?}"))?;
+            let path = self.dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("loading {path:?}: {e}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {file}: {e}"))?;
+            self.executables.insert(key, exe);
+        }
+        Ok(&self.executables[&key])
+    }
+
+    pub fn has_entry(&self, key: EntryKey) -> bool {
+        self.entry_files.contains_key(&key)
+    }
+}
+
+/// Build an f32 literal of the given shape from a slice.
+pub fn f32_literal(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+    };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, shape, bytes)
+        .map_err(|e| anyhow!("f32 literal {shape:?}: {e}"))
+}
+
+/// Build an i32 literal of the given shape from a slice.
+pub fn i32_literal(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+    };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, shape, bytes)
+        .map_err(|e| anyhow!("i32 literal {shape:?}: {e}"))
+}

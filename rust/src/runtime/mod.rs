@@ -1,0 +1,11 @@
+//! Runtime support for the real serving path: AOT artifact loading
+//! (manifest, weights, HLO executables), the byte-level tokenizer, and
+//! token sampling.
+
+pub mod artifacts;
+pub mod sampler;
+pub mod tokenizer;
+
+pub use artifacts::{Artifacts, ModelDims};
+pub use sampler::Sampler;
+pub use tokenizer::{detokenize, tokenize};

@@ -1,0 +1,108 @@
+//! Token sampling from logits: greedy argmax or temperature sampling,
+//! deterministic given the engine seed.
+
+use crate::request::TokenId;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct Sampler {
+    rng: Rng,
+    /// 0.0 => greedy argmax.
+    pub temperature: f32,
+}
+
+impl Sampler {
+    pub fn new(seed: u64, temperature: f32) -> Self {
+        Self {
+            rng: Rng::new(seed),
+            temperature,
+        }
+    }
+
+    pub fn sample(&mut self, logits: &[f32]) -> TokenId {
+        debug_assert!(!logits.is_empty());
+        if self.temperature <= 0.0 {
+            return argmax(logits);
+        }
+        // softmax(logits / T) sampling with max-subtraction for stability
+        let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut probs: Vec<f32> = logits
+            .iter()
+            .map(|&l| ((l - max) / self.temperature).exp())
+            .collect();
+        let sum: f32 = probs.iter().sum();
+        if !sum.is_finite() || sum <= 0.0 {
+            return argmax(logits);
+        }
+        for p in &mut probs {
+            *p /= sum;
+        }
+        let mut u = self.rng.f64() as f32;
+        for (i, &p) in probs.iter().enumerate() {
+            u -= p;
+            if u <= 0.0 {
+                return i as TokenId;
+            }
+        }
+        (probs.len() - 1) as TokenId
+    }
+}
+
+fn argmax(logits: &[f32]) -> TokenId {
+    let mut best = 0;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best as TokenId
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_argmax() {
+        let mut s = Sampler::new(0, 0.0);
+        let logits = vec![0.1, 2.0, -1.0, 1.9];
+        assert_eq!(s.sample(&logits), 1);
+    }
+
+    #[test]
+    fn temperature_sampling_is_distributional() {
+        let mut s = Sampler::new(1, 1.0);
+        let logits = vec![2.0, 2.0, -10.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..2000 {
+            counts[s.sample(&logits) as usize] += 1;
+        }
+        // the two high-logit tokens split the mass; the low one is rare
+        assert!(counts[0] > 700 && counts[1] > 700, "{counts:?}");
+        assert!(counts[2] < 50, "{counts:?}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let logits = vec![0.5, 0.4, 0.3, 0.2];
+        let a: Vec<_> = {
+            let mut s = Sampler::new(9, 0.8);
+            (0..50).map(|_| s.sample(&logits)).collect()
+        };
+        let b: Vec<_> = {
+            let mut s = Sampler::new(9, 0.8);
+            (0..50).map(|_| s.sample(&logits)).collect()
+        };
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn low_temperature_concentrates() {
+        let logits = vec![1.0, 1.5];
+        let mut s = Sampler::new(2, 0.05);
+        let picks: Vec<_> = (0..100).map(|_| s.sample(&logits)).collect();
+        assert!(picks.iter().filter(|&&t| t == 1).count() > 95);
+    }
+}

@@ -1,0 +1,37 @@
+//! Byte-level tokenizer: one token per byte, vocab 256. Trivially
+//! reversible, no external vocabulary files — the right altitude for a
+//! serving-system reproduction where tokenization is not the subject.
+
+use crate::request::TokenId;
+
+pub fn tokenize(text: &str) -> Vec<TokenId> {
+    text.as_bytes().iter().map(|&b| b as TokenId).collect()
+}
+
+/// Lossy reverse mapping (invalid UTF-8 sequences become U+FFFD).
+pub fn detokenize(tokens: &[TokenId]) -> String {
+    let bytes: Vec<u8> = tokens.iter().map(|&t| t as u8).collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let text = "Hello, ConServe! 123";
+        assert_eq!(detokenize(&tokenize(text)), text);
+    }
+
+    #[test]
+    fn roundtrip_utf8() {
+        let text = "héllo ∑ 世界";
+        assert_eq!(detokenize(&tokenize(text)), text);
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        assert!(tokenize("any text ⚙").iter().all(|&t| t < 256));
+    }
+}

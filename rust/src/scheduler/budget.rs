@@ -1,0 +1,92 @@
+//! SLO -> per-iteration budget translation (paper §4.5).
+//!
+//! The scheduler queries the profiler with the latency SLO — TPOT for
+//! batches containing decode-phase requests, TTFT otherwise — to get the
+//! maximum number of prefill tokens schedulable this iteration, and uses
+//! the same bound to cap background swap I/O per iteration.
+
+use crate::config::SloConfig;
+use crate::profiler::LatencyProfile;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct IterBudget {
+    /// Additional prefill tokens admitted this iteration.
+    pub prefill_tokens: usize,
+    /// KV blocks the background swap engine may move per direction this
+    /// iteration without stretching the iteration past the SLO.
+    pub io_blocks: usize,
+}
+
+/// Token budget given the decode composition already committed to this
+/// iteration (decodes are continuous-batched and always run).
+pub fn token_budget(
+    profile: &LatencyProfile,
+    slo: &SloConfig,
+    decode_seqs: usize,
+    ctx_tokens: usize,
+) -> usize {
+    let budget_ms = if decode_seqs > 0 {
+        slo.tpot_ms
+    } else {
+        slo.ttft_ms
+    };
+    profile.max_prefill_tokens((budget_ms * 1000.0) as u64, decode_seqs, ctx_tokens)
+}
+
+/// I/O block budget: how many block transfers fit inside the estimated
+/// iteration time (the transfers overlap compute; bounding them by the
+/// iteration keeps the copy stream from outliving its overlap window).
+pub fn io_budget(iter_est_us: u64, block_transfer_us: u64, cap: usize) -> usize {
+    if block_transfer_us == 0 {
+        return cap;
+    }
+    ((iter_est_us / block_transfer_us) as usize).min(cap)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn profile() -> LatencyProfile {
+        LatencyProfile {
+            c: [1200.0, 96.0, 40.0, 0.385],
+        }
+    }
+
+    fn slo() -> SloConfig {
+        SloConfig {
+            ttft_ms: 1500.0,
+            tpot_ms: 110.0,
+        }
+    }
+
+    #[test]
+    fn decode_batches_use_tpot() {
+        let p = profile();
+        let b = token_budget(&p, &slo(), 32, 32 * 1024);
+        // 110ms - fixed - decode costs, / 96us => ~1.0k tokens
+        assert!(b > 500 && b < 1300, "b={b}");
+    }
+
+    #[test]
+    fn prefill_only_uses_ttft() {
+        let p = profile();
+        let b = token_budget(&p, &slo(), 0, 0);
+        assert!(b > 10_000, "b={b}"); // 1.5s of prefill budget
+    }
+
+    #[test]
+    fn heavy_decode_leaves_no_room() {
+        let p = profile();
+        // enormous decode context: no prefill budget left
+        let b = token_budget(&p, &slo(), 256, 256 * 4096);
+        assert_eq!(b, 0);
+    }
+
+    #[test]
+    fn io_budget_scales_with_iteration() {
+        assert_eq!(io_budget(100_000, 250, 1000), 400);
+        assert_eq!(io_budget(100_000, 250, 64), 64); // capped
+        assert_eq!(io_budget(0, 250, 64), 0);
+    }
+}

@@ -1,0 +1,1141 @@
+//! Unified preemptive scheduler — paper Algorithm 1 plus the baseline
+//! policies (§6.1) as switchable variants of the same machinery:
+//!
+//! * [`Policy::ConServe`] — SLO-aware token budget, reactive preemption
+//!   of scheduled offline work, checkpoint-aware victim selection,
+//!   offline batching mode with layer-wise preemption.
+//! * [`Policy::VllmPP`] — strict-priority co-serving: greedy batching up
+//!   to `max_batch_tokens`, memory pressure resolved with *blocking*
+//!   swap-out/in (the Fig.-4b strawman), no running-batch preemption.
+//! * [`Policy::OnlineOnly`] — drops offline work entirely (the paper's
+//!   latency-optimal / zero-harvest baseline).
+
+pub mod budget;
+pub mod preempt;
+
+use crate::backend::{IterationPlan, WorkItem};
+use crate::config::SchedConfig;
+use crate::kvcache::manager::{KvError, KvManager};
+use crate::profiler::LatencyProfile;
+use crate::request::{Class, KvResidence, Phase, Request, RequestId, State};
+use crate::TimeUs;
+use std::collections::{HashMap, VecDeque};
+use std::str::FromStr;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    ConServe,
+    VllmPP,
+    OnlineOnly,
+}
+
+impl FromStr for Policy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "conserve" => Ok(Policy::ConServe),
+            "vllm++" | "vllmpp" | "vllm_pp" => Ok(Policy::VllmPP),
+            "online-only" | "onlineonly" | "online_only" => Ok(Policy::OnlineOnly),
+            other => Err(anyhow::anyhow!("unknown policy `{other}`")),
+        }
+    }
+}
+
+impl std::fmt::Display for Policy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Policy::ConServe => "ConServe",
+            Policy::VllmPP => "vLLM++",
+            Policy::OnlineOnly => "Online-Only",
+        })
+    }
+}
+
+/// What the scheduler decided for one iteration.
+#[derive(Debug, Default)]
+pub struct ScheduleOutcome {
+    pub plan: IterationPlan,
+    /// Offline victims whose GPU blocks were released instantly thanks to
+    /// complete host checkpoints (§4.4 "as fast as freeing ... virtually").
+    pub evicted: Vec<RequestId>,
+    /// Victims whose KV was discarded (recompute on resume, Fig. 4a).
+    pub discarded: Vec<RequestId>,
+    /// Victims swapped out with a blocking transfer (vLLM++ path).
+    pub swapped_out: Vec<RequestId>,
+    /// Requests swapped in with a blocking transfer (vLLM++ resume).
+    pub swapped_in: Vec<RequestId>,
+    /// Total blocking transfer time charged to this iteration (µs).
+    pub blocking_io_us: u64,
+    /// Blocking I/O block count (metrics).
+    pub blocking_io_blocks: usize,
+    /// Prefill-token budget that applied to offline admission.
+    pub token_budget: usize,
+}
+
+/// Result of one admission attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Admit {
+    Planned,
+    NoBudget,
+    NoMemory,
+}
+
+/// Who is asking for KV blocks — determines victim-selection freedom.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum VictimMode {
+    /// Newly admitted online work: may preempt any offline victim, but
+    /// never other online work (vLLM-style admission control: if neither
+    /// free blocks nor offline victims exist, it waits in the queue).
+    OnlineAdmission,
+    /// Already-running online work (decode growth / next chunk): offline
+    /// victims first, youngest-online self-preemption as the last resort
+    /// to guarantee progress.
+    OnlineContinuing,
+    /// Already-running offline work (decode growth / next chunk).
+    OfflineContinuing,
+    /// Freshly admitted offline work: checkpoint-backed evictions only.
+    OfflineAdmission,
+}
+
+/// The unified scheduler: two priority queues + the continuous-batching
+/// running set (paper §5: "priority queues with two priority levels so
+/// they can share the same scheduler code").
+pub struct UnifiedScheduler {
+    pub cfg: SchedConfig,
+    online_q: VecDeque<RequestId>,
+    offline_q: VecDeque<RequestId>,
+    running: Vec<RequestId>,
+}
+
+pub struct Ctx<'a> {
+    pub table: &'a mut HashMap<RequestId, Request>,
+    pub kv: &'a mut KvManager,
+    pub profile: &'a LatencyProfile,
+    pub now: TimeUs,
+    pub max_model_len: usize,
+}
+
+impl UnifiedScheduler {
+    pub fn new(cfg: SchedConfig) -> Self {
+        Self {
+            cfg,
+            online_q: VecDeque::new(),
+            offline_q: VecDeque::new(),
+            running: Vec::new(),
+        }
+    }
+
+    pub fn enqueue(&mut self, id: RequestId, class: Class) {
+        match class {
+            Class::Online => self.online_q.push_back(id),
+            Class::Offline => {
+                if self.cfg.policy != Policy::OnlineOnly {
+                    self.offline_q.push_back(id)
+                }
+            }
+        }
+    }
+
+    /// Preempted offline requests rejoin at the *back* of the offline
+    /// queue: resume needs a large contiguous restore (or a recompute)
+    /// that rarely fits while the pool is busy, and parking resume-
+    /// pending work at the head starves fresh admission — the head-of-
+    /// line pile was measured to collapse harvest to near zero. Fresh
+    /// docs keep the pipeline saturated; preempted ones return when the
+    /// pool thins out (best-effort semantics, §2.2).
+    pub fn requeue_preempted(&mut self, id: RequestId) {
+        self.offline_q.push_back(id);
+    }
+
+    pub fn online_waiting(&self) -> usize {
+        self.online_q.len()
+    }
+
+    /// Queue-head ids (observability).
+    pub fn online_head(&self) -> Option<RequestId> {
+        self.online_q.front().copied()
+    }
+
+    pub fn offline_head(&self) -> Option<RequestId> {
+        self.offline_q.front().copied()
+    }
+
+    pub fn offline_waiting(&self) -> usize {
+        self.offline_q.len()
+    }
+
+    pub fn running_ids(&self) -> &[RequestId] {
+        &self.running
+    }
+
+    pub fn has_work(&self, table: &HashMap<RequestId, Request>) -> bool {
+        !self.online_q.is_empty()
+            || !self.offline_q.is_empty()
+            || self
+                .running
+                .iter()
+                .any(|id| table.get(id).is_some_and(|r| !r.is_done()))
+    }
+
+    /// Oldest waiting online arrival (Alg. 2 input).
+    pub fn oldest_online_arrival(
+        &self,
+        table: &HashMap<RequestId, Request>,
+    ) -> Option<TimeUs> {
+        self.online_q.front().and_then(|id| table.get(id)).map(|r| r.arrival)
+    }
+
+    /// Shape of the waiting online work (Alg. 2 estimate input).
+    pub fn online_queue_shape(
+        &self,
+        table: &HashMap<RequestId, Request>,
+        chunk: usize,
+    ) -> crate::backend::PlanSummary {
+        let mut prefill = 0;
+        for id in &self.online_q {
+            if let Some(r) = table.get(id) {
+                prefill += r.remaining_feed().min(chunk);
+            }
+        }
+        crate::backend::PlanSummary {
+            prefill_tokens: prefill,
+            decode_seqs: 0,
+            ctx_tokens: 0,
+            n_seqs: self.online_q.len(),
+        }
+    }
+
+    // =====================================================================
+    // Algorithm 1: one scheduling step.
+    //
+    // Budget accounting runs in *estimated microseconds* against the
+    // profiler's latency model (§4.5): every admitted item adds its
+    // marginal cost (prefill: c1·n; decode: c2 + c3·ctx) to the running
+    // estimate, and admission stops when the estimate would cross the
+    // SLO. Offline work — including *already-running* offline decodes —
+    // is only admitted into the budget remainder after all online work,
+    // which realizes PreemptOverBudgetOffline (Alg. 1 line 16): an
+    // over-budget offline request simply is not scheduled this iteration
+    // (its KV stays; memory-pressure preemption is separate).
+    // =====================================================================
+    pub fn schedule(&mut self, c: &mut Ctx) -> ScheduleOutcome {
+        let mut out = ScheduleOutcome::default();
+
+        // Drop finished/aborted from the running set.
+        self.running.retain(|id| {
+            c.table
+                .get(id)
+                .is_some_and(|r| r.state == State::Running && !r.is_done())
+        });
+
+        let coef = c.profile.c;
+        let slo_tpot_us = self.cfg.slo.tpot_ms * 1000.0;
+        let slo_ttft_us = self.cfg.slo.ttft_ms * 1000.0;
+        let decode_cost = move |ctx: usize| coef[2] + coef[3] * ctx as f64;
+
+        let mut items: Vec<WorkItem> = Vec::new();
+        let mut est_us = coef[0]; // fixed iteration cost
+        let mut tokens_used = 0usize;
+        let mut run_order: Vec<RequestId> = self.running.clone();
+        run_order.sort_by_key(|id| {
+            let r = &c.table[id];
+            (r.class == Class::Offline, r.arrival)
+        });
+
+        // ---- 1. online decodes: unconditional (continuous batching) ----
+        for &id in &run_order {
+            let r = &c.table[&id];
+            if r.class != Class::Online
+                || r.phase() != Phase::Decode
+                || r.residence != KvResidence::Gpu
+            {
+                continue;
+            }
+            if items.len() >= self.cfg.max_batch_reqs {
+                break;
+            }
+            let ctx_len = r.ctx_len;
+            if !self.ensure_blocks(c, &mut out, id, ctx_len + 1, &mut items, VictimMode::OnlineContinuing) {
+                continue; // no memory even after preemption
+            }
+            let r = &c.table[&id];
+            est_us += decode_cost(r.ctx_len);
+            tokens_used += 1;
+            items.push(WorkItem {
+                req: id,
+                class: Class::Online,
+                phase: Phase::Decode,
+                ctx_len: r.ctx_len,
+                n_tokens: 1,
+                tokens: r.feed_tokens(1),
+            });
+        }
+
+        // ---- 2. online prefills within the SLO budget (§4.5: TPOT if
+        // decode-phase requests exist, TTFT otherwise). "Exist" includes
+        // the running set, not just this iteration's items: anything
+        // mid-generation will decode next iteration, and a TTFT-sized
+        // prefill-only iteration would stall it far past its TPOT.
+        let any_running = !self.running.is_empty();
+        let online_budget_us = if !self.cfg.slo_aware {
+            f64::INFINITY
+        } else if items.is_empty() && !any_running {
+            slo_ttft_us
+        } else {
+            slo_tpot_us
+        };
+
+        // Capacity admission control for the latency-critical class: a
+        // new online request is admitted only if its full KV footprint
+        // (prompt + max output) fits in what the pool can ever free for
+        // it. Over-admission cannibalizes running online requests
+        // (discard churn) — queueing delay is the honest cost instead.
+        let bt = c.kv.block_tokens;
+        let mut reserved_online: usize = self
+            .running
+            .iter()
+            .filter_map(|id| c.table.get(id))
+            .filter(|r| r.class == Class::Online)
+            .map(|r| r.total_len().div_ceil(bt))
+            .sum();
+        let online_capacity = (c.kv.gpu_total() * 95) / 100;
+        let continuing: Vec<RequestId> = run_order
+            .iter()
+            .copied()
+            .filter(|id| {
+                let r = &c.table[id];
+                r.class == Class::Online
+                    && r.phase() == Phase::Prefill
+                    && r.residence == KvResidence::Gpu
+            })
+            .collect();
+        for id in continuing {
+            self.admit(c, &mut out, id, online_budget_us, &mut est_us, &mut tokens_used, &mut items, VictimMode::OnlineContinuing);
+        }
+        while let Some(&id) = self.online_q.front() {
+            if items.len() >= self.cfg.max_batch_reqs
+                || tokens_used >= self.cfg.max_batch_tokens
+                || est_us + coef[1] > online_budget_us
+            {
+                break;
+            }
+            self.online_q.pop_front();
+            let victim_this_round = out.evicted.contains(&id)
+                || out.discarded.contains(&id)
+                || out.swapped_out.contains(&id);
+            if victim_this_round {
+                // just preempted: resume attempts start next iteration
+                self.online_q.push_front(id);
+                break;
+            }
+            let need = c.table[&id].total_len().div_ceil(bt);
+            if reserved_online + need > online_capacity {
+                // no capacity headroom: wait in the queue
+                self.online_q.push_front(id);
+                break;
+            }
+            // resets residence for preempted online victims re-entering
+            // (Discarded -> recompute, Host -> prefetch / blocking swap-in).
+            // Strict FIFO: a resume-pending head blocks the queue — this
+            // bounds the number of concurrently-prefetching requests.
+            if !self.make_resumable(c, &mut out, id) {
+                self.online_q.push_front(id);
+                break;
+            }
+            c.kv.register(id);
+            let res = self.admit(c, &mut out, id, online_budget_us, &mut est_us, &mut tokens_used, &mut items, VictimMode::OnlineAdmission);
+            if res == Admit::Planned {
+                reserved_online += need;
+                let r = c.table.get_mut(&id).unwrap();
+                r.state = State::Running;
+                if !self.running.contains(&id) {
+                    self.running.push(id);
+                }
+            } else {
+                // out of memory (or budget): stay at the queue head;
+                // admitting without capacity only bloats the running set
+                self.online_q.push_front(id);
+                break;
+            }
+        }
+
+        let has_online = items.iter().any(|i| i.class == Class::Online)
+            || !self.online_q.is_empty();
+
+        // ---- 3. offline admission ----
+        if self.cfg.policy != Policy::OnlineOnly {
+            // Offline batching mode (Alg. 1 lines 20-22): no online work
+            // anywhere => ignore the SLO budget, saturate the GPU.
+            let offline_mode = !has_online;
+            let offline_budget_us = if !self.cfg.slo_aware || offline_mode {
+                f64::INFINITY
+            } else {
+                slo_tpot_us
+            };
+            out.token_budget = if offline_budget_us.is_finite() {
+                ((offline_budget_us - est_us).max(0.0) / coef[1]) as usize
+            } else {
+                self.cfg.max_batch_tokens.saturating_sub(tokens_used)
+            };
+
+            // running offline decodes — admitted only within the budget
+            // remainder (over-budget offline is preempted from the batch)
+            for &id in &run_order {
+                let r = &c.table[&id];
+                if r.class != Class::Offline
+                    || r.phase() != Phase::Decode
+                    || r.residence != KvResidence::Gpu
+                {
+                    continue;
+                }
+                if items.len() >= self.cfg.max_batch_reqs
+                    || tokens_used >= self.cfg.max_batch_tokens
+                {
+                    break;
+                }
+                let cost = decode_cost(r.ctx_len);
+                if est_us + cost > offline_budget_us {
+                    continue; // paused this iteration (budget preemption)
+                }
+                let ctx_len = r.ctx_len;
+                if !self.ensure_blocks(c, &mut out, id, ctx_len + 1, &mut items, VictimMode::OfflineContinuing) {
+                    continue;
+                }
+                let r = &c.table[&id];
+                est_us += cost;
+                tokens_used += 1;
+                items.push(WorkItem {
+                    req: id,
+                    class: Class::Offline,
+                    phase: Phase::Decode,
+                    ctx_len: r.ctx_len,
+                    n_tokens: 1,
+                    tokens: r.feed_tokens(1),
+                });
+            }
+
+            // continuing offline prefills
+            let continuing: Vec<RequestId> = run_order
+                .iter()
+                .copied()
+                .filter(|id| {
+                    let r = &c.table[id];
+                    r.class == Class::Offline
+                        && r.phase() == Phase::Prefill
+                        && r.residence == KvResidence::Gpu
+                })
+                .collect();
+            for id in continuing {
+                self.admit(c, &mut out, id, offline_budget_us, &mut est_us, &mut tokens_used, &mut items, VictimMode::OfflineContinuing);
+            }
+
+            // new / resuming offline work. Near-FIFO with a bounded skip
+            // allowance: a resume-pending head (prefetch in flight /
+            // swap-in blocked on memory) defers — like vLLM's separate
+            // waiting vs swapped queues — but at most MAX_HEAD_SKIPS
+            // requests may be in that state, so prefetch fan-out cannot
+            // fill the GPU pool with half-restored KV nothing can evict.
+            const MAX_HEAD_SKIPS: usize = 4;
+            let mut deferred: Vec<RequestId> = Vec::new();
+            while let Some(&id) = self.offline_q.front() {
+                if items.len() >= self.cfg.max_batch_reqs
+                    || tokens_used >= self.cfg.max_batch_tokens
+                    || est_us + coef[1] > offline_budget_us
+                {
+                    break;
+                }
+                self.offline_q.pop_front();
+                let victim_this_round = out.evicted.contains(&id)
+                    || out.discarded.contains(&id)
+                    || out.swapped_out.contains(&id);
+                if victim_this_round || !self.make_resumable(c, &mut out, id) {
+                    deferred.push(id);
+                    if deferred.len() >= MAX_HEAD_SKIPS {
+                        break;
+                    }
+                    continue;
+                }
+                c.kv.register(id);
+                let res = self.admit(c, &mut out, id, offline_budget_us, &mut est_us, &mut tokens_used, &mut items, VictimMode::OfflineAdmission);
+                let has_blocks = c.kv.seq(id).is_some_and(|s| s.gpu_blocks() > 0);
+                if res == Admit::Planned || has_blocks {
+                    // admitted, or resumed-with-resident-blocks (paused).
+                    // Either way it moves to the running set (a request is
+                    // never in the queue and the running set at once) and
+                    // is visible to victim selection / continuing passes.
+                    let r = c.table.get_mut(&id).unwrap();
+                    r.state = State::Running;
+                    if !self.running.contains(&id) {
+                        self.running.push(id);
+                    }
+                } else {
+                    // no capacity for fresh offline work: stop admitting
+                    self.offline_q.push_front(id);
+                    break;
+                }
+            }
+            // deferred resume-pending requests return to the queue head
+            // (in order) so they stay first in line
+            for id in deferred.into_iter().rev() {
+                self.offline_q.push_front(id);
+            }
+        }
+
+        // ---- 4. preemptible iff pure offline (§4.3) ----
+        let pure_offline =
+            !items.is_empty() && items.iter().all(|i| i.class == Class::Offline);
+        out.plan = IterationPlan {
+            items,
+            // safepoint instrumentation is ConServe's mechanism; the
+            // baselines never arm it regardless of flag combinations
+            preemptible: pure_offline
+                && self.cfg.layerwise_preempt
+                && self.cfg.policy == Policy::ConServe,
+        };
+        out
+    }
+
+    /// Admit the next work of `id` (prefill chunk or decode step) within
+    /// the µs budget, updating the running estimate and token count.
+    #[allow(clippy::too_many_arguments)]
+    fn admit(
+        &mut self,
+        c: &mut Ctx,
+        out: &mut ScheduleOutcome,
+        id: RequestId,
+        budget_us: f64,
+        est_us: &mut f64,
+        tokens_used: &mut usize,
+        items: &mut Vec<WorkItem>,
+        mode: VictimMode,
+    ) -> Admit {
+        let coef = c.profile.c;
+        let r = &c.table[&id];
+        if r.residence != KvResidence::Gpu {
+            // preempted earlier in this same scheduling round (continuing
+            // lists are snapshots); scheduling it would undo the preemption
+            return Admit::NoMemory;
+        }
+        if r.phase() == Phase::Decode {
+            // e.g. resumed request whose next step is a decode
+            let cost = coef[2] + coef[3] * r.ctx_len as f64;
+            if *est_us + cost > budget_us || *tokens_used >= self.cfg.max_batch_tokens {
+                return Admit::NoBudget;
+            }
+            let ctx_len = r.ctx_len;
+            let class = r.class;
+            if !self.ensure_blocks(c, out, id, ctx_len + 1, items, mode) {
+                return Admit::NoMemory;
+            }
+            let r = &c.table[&id];
+            *est_us += cost;
+            *tokens_used += 1;
+            items.push(WorkItem {
+                req: id,
+                class,
+                phase: Phase::Decode,
+                ctx_len: r.ctx_len,
+                n_tokens: 1,
+                tokens: r.feed_tokens(1),
+            });
+            return Admit::Planned;
+        }
+        let slack_tokens = if budget_us.is_finite() {
+            ((budget_us - *est_us) / coef[1]).floor().max(0.0) as usize
+        } else {
+            usize::MAX
+        };
+        let cap = self.cfg.max_batch_tokens.saturating_sub(*tokens_used);
+        let room = c.max_model_len.saturating_sub(r.ctx_len);
+        let n = r
+            .remaining_feed()
+            .min(self.cfg.chunk_size)
+            .min(slack_tokens)
+            .min(cap)
+            .min(room);
+        if n == 0 {
+            return Admit::NoBudget;
+        }
+        let (class, ctx_len) = (r.class, r.ctx_len);
+        if !self.ensure_blocks(c, out, id, ctx_len + n, items, mode) {
+            return Admit::NoMemory;
+        }
+        let r = &c.table[&id];
+        *est_us += coef[1] * n as f64;
+        *tokens_used += n;
+        items.push(WorkItem {
+            req: id,
+            class,
+            phase: Phase::Prefill,
+            ctx_len: r.ctx_len,
+            n_tokens: n,
+            tokens: r.feed_tokens(n),
+        });
+        Admit::Planned
+    }
+
+    /// Ensure `id` owns GPU blocks covering `new_total` tokens, preempting
+    /// offline victims if necessary. Returns false if memory cannot be
+    /// found. (Alg. 1 PREEMPTSCHEDULING — invoked for memory pressure.)
+    ///
+    /// Victim freedom depends on who asks (`mode`): online work may evict
+    /// or discard any offline victim; *continuing* offline work prefers
+    /// checkpointed victims but may discard an idle uncheckpointed one to
+    /// guarantee decode progress; *newly admitted* offline work may only
+    /// use checkpoint-backed (free) evictions — admitting new offline by
+    /// destroying other offline KV is pure churn.
+    fn ensure_blocks(
+        &mut self,
+        c: &mut Ctx,
+        out: &mut ScheduleOutcome,
+        id: RequestId,
+        new_total: usize,
+        items: &mut Vec<WorkItem>,
+        mode: VictimMode,
+    ) -> bool {
+        // vLLM's admission watermark: new sequences are only admitted if
+        // a slack of free blocks remains afterwards, so running-sequence
+        // decode growth rarely needs preemption (which in vanilla vLLM
+        // swaps out a whole victim to gain one block).
+        if self.cfg.policy == Policy::VllmPP
+            && matches!(
+                mode,
+                VictimMode::OnlineAdmission | VictimMode::OfflineAdmission
+            )
+        {
+            let needed = c.kv.blocks_needed(id, new_total);
+            let slack = c.kv.gpu_total() / 50;
+            if c.kv.gpu_free() < needed + slack {
+                return false;
+            }
+        }
+        loop {
+            match c.kv.grow(id, new_total) {
+                Ok(()) => return true,
+                Err(KvError::OutOfGpu { .. }) => {
+                    // The defining vLLM++ limitation (paper §3): admission
+                    // cannot preempt already-scheduled work — "incoming
+                    // online requests must wait until they are served".
+                    // Only running-sequence growth may preempt (vLLM's
+                    // recompute/swap preemption). ConServe's reactive
+                    // admission-time preemption is the contribution.
+                    if self.cfg.policy == Policy::VllmPP {
+                        match mode {
+                            // admission never preempts in vLLM
+                            VictimMode::OnlineAdmission
+                            | VictimMode::OfflineAdmission => return false,
+                            // growth preempts the *newest running
+                            // sequence regardless of class* (vanilla vLLM
+                            // FCFS-recompute/swap — "cannot be preempted
+                            // selectively"). This is what lets offline
+                            // decode growth evict online requests and
+                            // wreck their TTFT/TPOT (paper §3, Fig. 2).
+                            _ => match self.pick_youngest_victim(c, id) {
+                                Some(v) => {
+                                    self.preempt_request(c, out, v, items);
+                                    continue;
+                                }
+                                None => return false,
+                            },
+                        }
+                    }
+                    let ckpt_only = mode == VictimMode::OfflineAdmission;
+                    let exclude_items = !matches!(
+                        mode,
+                        VictimMode::OnlineAdmission | VictimMode::OnlineContinuing
+                    );
+                    match self.pick_victim(c, id, items, ckpt_only, exclude_items) {
+                        Some(victim) => {
+                            self.preempt_request(c, out, victim, items);
+                        }
+                        None if mode == VictimMode::OnlineContinuing => {
+                            // vLLM-style self-preemption of the youngest
+                            // online request to guarantee progress
+                            match self.pick_online_victim(c, id) {
+                                Some(v) => self.preempt_request(c, out, v, items),
+                                None => return false,
+                            }
+                        }
+                        None => return false,
+                    }
+                }
+                Err(_) => return false,
+            }
+        }
+    }
+
+    /// Victim preference (§4.4): fully-checkpointed offline first (free
+    /// release), then other offline by largest resident footprint. Only
+    /// running requests can hold GPU blocks, so the scan is bounded by
+    /// the running set, not the request table.
+    fn pick_victim(
+        &self,
+        c: &Ctx,
+        requester: RequestId,
+        items: &[WorkItem],
+        ckpt_only: bool,
+        exclude_items: bool,
+    ) -> Option<RequestId> {
+        let bt = c.kv.block_tokens;
+        let mut best: Option<(bool, usize, std::cmp::Reverse<RequestId>)> = None;
+        for &rid in &self.running {
+            let Some(r) = c.table.get(&rid) else { continue };
+            if rid == requester
+                || r.class != Class::Offline
+                || r.residence != KvResidence::Gpu
+            {
+                continue;
+            }
+            if exclude_items && items.iter().any(|i| i.req == rid) {
+                continue;
+            }
+            let Some(seq) = c.kv.seq(rid) else { continue };
+            let resident = seq.gpu_blocks();
+            if resident == 0 {
+                continue;
+            }
+            let ckpt = seq.fully_checkpointed(bt);
+            if ckpt_only && !ckpt {
+                continue;
+            }
+            // prefer checkpointed; among equals, largest footprint; break
+            // remaining ties by id so victim choice is deterministic
+            // regardless of hash-map iteration order
+            let cand = (ckpt, resident, std::cmp::Reverse(rid));
+            best = match best {
+                None => Some(cand),
+                Some(b) if cand > b => Some(cand),
+                Some(b) => Some(b),
+            };
+        }
+        best.map(|(_, _, rid)| rid.0)
+    }
+
+    /// vLLM's class-blind LIFO preemption: the newest running sequence
+    /// with resident blocks, regardless of priority.
+    fn pick_youngest_victim(&self, c: &Ctx, requester: RequestId) -> Option<RequestId> {
+        self.running
+            .iter()
+            .copied()
+            .filter(|&rid| rid != requester)
+            .filter(|rid| {
+                let Some(r) = c.table.get(rid) else { return false };
+                r.residence == KvResidence::Gpu
+                    && c.kv.seq(*rid).is_some_and(|s| s.gpu_blocks() > 0)
+            })
+            .max_by_key(|rid| (c.table[rid].arrival, *rid))
+    }
+
+    fn pick_online_victim(&self, c: &Ctx, requester: RequestId) -> Option<RequestId> {
+        // youngest online request with resident blocks
+        self.running
+            .iter()
+            .copied()
+            .filter(|&rid| rid != requester)
+            .filter(|rid| {
+                let r = &c.table[rid];
+                r.class == Class::Online
+                    && r.residence == KvResidence::Gpu
+                    && c.kv.seq(*rid).is_some_and(|s| s.gpu_blocks() > 0)
+            })
+            .max_by_key(|rid| c.table[rid].arrival)
+    }
+
+    /// Preempt `victim` during scheduling: release its GPU memory via the
+    /// cheapest legal mechanism for the active policy.
+    fn preempt_request(
+        &mut self,
+        c: &mut Ctx,
+        out: &mut ScheduleOutcome,
+        victim: RequestId,
+        items: &mut Vec<WorkItem>,
+    ) {
+        // remove any work items already planned for the victim
+        items.retain(|i| i.req != victim);
+        self.running.retain(|&rid| rid != victim);
+
+        let bt = c.kv.block_tokens;
+        let fully_ckpt = c.kv.seq(victim).is_some_and(|s| s.fully_checkpointed(bt));
+        let r = c.table.get_mut(&victim).unwrap();
+        r.state = State::Preempted;
+        r.preemptions += 1;
+
+        if fully_ckpt {
+            // §4.4: discard GPU copies, host checkpoints make resume a
+            // pure prefetch — microseconds, no data motion now.
+            c.kv.evict_gpu(victim);
+            r.residence = KvResidence::Host;
+            out.evicted.push(victim);
+        } else if self.cfg.policy == Policy::VllmPP {
+            // blocking swap-out of every resident block (Fig. 4b)
+            let seq = c.kv.seq(victim).unwrap();
+            let blocks = seq.gpu_blocks();
+            let mut idxs = c.kv.checkpoint_candidates(victim);
+            for i in idxs.drain(..) {
+                if c.kv.begin_ckpt(victim, i).is_ok() {
+                    c.kv.finish_ckpt(victim, i);
+                }
+            }
+            c.kv.evict_gpu(victim);
+            r.residence = KvResidence::Host;
+            out.swapped_out.push(victim);
+            out.blocking_io_blocks += blocks;
+        } else {
+            // ConServe extreme case (§4.4): discard and recompute later
+            let lost = c.table[&victim].ctx_len;
+            c.kv.discard(victim);
+            let r = c.table.get_mut(&victim).unwrap();
+            r.recomputed_tokens += lost;
+            r.ctx_len = 0;
+            r.ckpt_len = 0;
+            r.residence = KvResidence::Discarded;
+            out.discarded.push(victim);
+        }
+        if c.table[&victim].class == Class::Offline {
+            self.requeue_preempted(victim);
+        } else {
+            self.online_q.push_front(victim);
+        }
+    }
+
+    /// Make a queued request runnable. Returns false if it must wait for
+    /// an asynchronous prefetch (it stays queued).
+    fn make_resumable(
+        &mut self,
+        c: &mut Ctx,
+        out: &mut ScheduleOutcome,
+        id: RequestId,
+    ) -> bool {
+        let r = &c.table[&id];
+        match r.residence {
+            KvResidence::Gpu | KvResidence::Discarded => {
+                let r = c.table.get_mut(&id).unwrap();
+                r.residence = KvResidence::Gpu;
+                true
+            }
+            KvResidence::Prefetching => {
+                // the engine flips Prefetching -> Gpu when the last H2D
+                // op completes; until then the request stays queued
+                false
+            }
+            KvResidence::Host => {
+                if self.cfg.prefetch && self.cfg.policy == Policy::ConServe {
+                    // background prefetch: the engine issues the H2D ops;
+                    // not runnable yet
+                    let r = c.table.get_mut(&id).unwrap();
+                    r.residence = KvResidence::Prefetching;
+                    false
+                } else {
+                    // blocking swap-in (vLLM++ and no-prefetch ablation).
+                    // Gated on vLLM's small free-memory watermark (~1%);
+                    // under sustained pressure the same blocks ping-pong
+                    // across PCIe — exactly the swap thrash the paper's
+                    // Fig. 4b/§6.2 attributes to this baseline.
+                    let cands = c.kv.prefetch_candidates(id);
+                    let watermark = (c.kv.gpu_total() / 100).max(1);
+                    if c.kv.gpu_free() < cands.len() + watermark {
+                        return false;
+                    }
+                    let n = cands.len();
+                    let mut ok = true;
+                    for (idx, _hb) in cands {
+                        if c.kv.begin_prefetch(id, idx).is_err() {
+                            ok = false;
+                            break;
+                        }
+                    }
+                    if !ok {
+                        // GPU too full to swap in; leave on host
+                        return false;
+                    }
+                    out.swapped_in.push(id);
+                    out.blocking_io_blocks += n;
+                    let r = c.table.get_mut(&id).unwrap();
+                    r.residence = KvResidence::Gpu;
+                    true
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EngineConfig;
+
+    fn setup(policy: Policy) -> (UnifiedScheduler, HashMap<RequestId, Request>, KvManager) {
+        let mut cfg = EngineConfig::sim_a100_7b();
+        cfg.sched.policy = policy;
+        let kv = KvManager::new(cfg.mem.gpu_blocks, cfg.mem.host_blocks, cfg.mem.block_tokens);
+        (UnifiedScheduler::new(cfg.sched), HashMap::new(), kv)
+    }
+
+    fn profile() -> LatencyProfile {
+        LatencyProfile {
+            c: [1200.0, 96.0, 40.0, 0.385],
+        }
+    }
+
+    fn add(
+        table: &mut HashMap<RequestId, Request>,
+        id: RequestId,
+        class: Class,
+        prompt: usize,
+        output: usize,
+    ) {
+        table.insert(id, Request::new(id, class, vec![], prompt, output, 0));
+    }
+
+    #[test]
+    fn online_only_ignores_offline() {
+        let (mut s, mut table, mut kv) = setup(Policy::OnlineOnly);
+        add(&mut table, 1, Class::Offline, 1024, 128);
+        s.enqueue(1, Class::Offline);
+        let p = profile();
+        let mut ctx = Ctx {
+            table: &mut table,
+            kv: &mut kv,
+            profile: &p,
+            now: 0,
+            max_model_len: 4096,
+        };
+        let out = s.schedule(&mut ctx);
+        assert!(out.plan.items.is_empty());
+    }
+
+    #[test]
+    fn online_first_then_offline_fill() {
+        let (mut s, mut table, mut kv) = setup(Policy::ConServe);
+        add(&mut table, 1, Class::Online, 1024, 128);
+        add(&mut table, 2, Class::Offline, 2048, 128);
+        s.enqueue(1, Class::Online);
+        s.enqueue(2, Class::Offline);
+        let p = profile();
+        let mut ctx = Ctx {
+            table: &mut table,
+            kv: &mut kv,
+            profile: &p,
+            now: 0,
+            max_model_len: 4096,
+        };
+        let out = s.schedule(&mut ctx);
+        assert_eq!(out.plan.items.len(), 2);
+        assert_eq!(out.plan.items[0].class, Class::Online);
+        assert_eq!(out.plan.items[0].n_tokens, 512); // chunk_size
+        assert!(!out.plan.preemptible, "mixed batch is not preemptible");
+        // offline got (only) the remaining budget
+        let offline: usize = out
+            .plan
+            .items
+            .iter()
+            .filter(|i| i.class == Class::Offline)
+            .map(|i| i.n_tokens)
+            .sum();
+        assert!(offline > 0, "offline must fill the budget remainder");
+        assert!(offline <= out.token_budget);
+    }
+
+    #[test]
+    fn pure_offline_batch_is_preemptible() {
+        let (mut s, mut table, mut kv) = setup(Policy::ConServe);
+        add(&mut table, 1, Class::Offline, 2048, 128);
+        s.enqueue(1, Class::Offline);
+        let p = profile();
+        let mut ctx = Ctx {
+            table: &mut table,
+            kv: &mut kv,
+            profile: &p,
+            now: 0,
+            max_model_len: 4096,
+        };
+        let out = s.schedule(&mut ctx);
+        assert!(!out.plan.items.is_empty());
+        assert!(out.plan.preemptible);
+        // offline batching mode: budget ignores the SLO cap
+        let total: usize = out.plan.items.iter().map(|i| i.n_tokens).sum();
+        assert!(total >= 512);
+    }
+
+    #[test]
+    fn memory_pressure_evicts_checkpointed_victim_first() {
+        let (mut s, mut table, mut kv) = setup(Policy::ConServe);
+        // two offline requests holding most of a small pool
+        let mut small = KvManager::new(16, 64, 16);
+        for id in [1u64, 2] {
+            add(&mut table, id, Class::Offline, 96, 8);
+            small.register(id);
+            small.grow(id, 96).unwrap();
+            small.commit(id, 96).unwrap();
+            table.get_mut(&id).unwrap().state = State::Running;
+            table.get_mut(&id).unwrap().ctx_len = 96;
+            s.running.push(id);
+        }
+        // request 1 fully checkpointed, request 2 not
+        for i in small.checkpoint_candidates(1) {
+            small.begin_ckpt(1, i).unwrap();
+            small.finish_ckpt(1, i);
+        }
+        // an online request arrives needing more blocks than are free
+        add(&mut table, 3, Class::Online, 128, 8);
+        s.enqueue(3, Class::Online);
+        let p = profile();
+        let mut ctx = Ctx {
+            table: &mut table,
+            kv: &mut small,
+            profile: &p,
+            now: 0,
+            max_model_len: 4096,
+        };
+        let out = s.schedule(&mut ctx);
+        assert!(out.evicted.contains(&1), "checkpointed victim evicted: {out:?}");
+        assert!(!out.discarded.contains(&2), "non-ckpt victim spared if possible");
+        assert_eq!(table[&1].residence, KvResidence::Host);
+        assert!(out.plan.items.iter().any(|i| i.req == 3));
+    }
+
+    #[test]
+    fn vllmpp_admission_never_preempts() {
+        // the paper's §3 contrast: vLLM++ cannot preempt scheduled work
+        // to admit an online request — it waits for free memory
+        let (mut s, mut table, _) = setup(Policy::VllmPP);
+        let mut small = KvManager::new(8, 64, 16);
+        add(&mut table, 1, Class::Offline, 128, 8);
+        small.register(1);
+        small.grow(1, 128).unwrap();
+        small.commit(1, 128).unwrap();
+        table.get_mut(&1).unwrap().state = State::Running;
+        table.get_mut(&1).unwrap().ctx_len = 128;
+        s.running.push(1);
+
+        add(&mut table, 2, Class::Online, 64, 8);
+        s.enqueue(2, Class::Online);
+        let p = profile();
+        let mut ctx = Ctx {
+            table: &mut table,
+            kv: &mut small,
+            profile: &p,
+            now: 0,
+            max_model_len: 4096,
+        };
+        let out = s.schedule(&mut ctx);
+        assert!(out.swapped_out.is_empty(), "no admission-time preemption");
+        assert!(!out.plan.items.iter().any(|i| i.req == 2), "online waits");
+        assert_eq!(s.online_waiting(), 1);
+        assert_eq!(table[&1].residence, KvResidence::Gpu);
+    }
+
+    #[test]
+    fn vllmpp_growth_swaps_out_youngest_blocking() {
+        // vanilla-vLLM growth preemption: class-blind, newest victim,
+        // blocking swap-out (Fig. 4b)
+        let (mut s, mut table, _) = setup(Policy::VllmPP);
+        let mut small = KvManager::new(8, 64, 16);
+        // old offline decode occupying half the pool
+        add(&mut table, 1, Class::Offline, 64, 8);
+        // younger online decode occupying the rest; growth of 1 forces
+        // preemption of the *newest* sequence — which is itself online
+        add(&mut table, 2, Class::Online, 64, 8);
+        // r2's next decode fits its current block (63->64); r1's does not
+        // (64->65), so the offline growth is what triggers preemption
+        for (id, tokens, arrival) in [(1u64, 64usize, 0u64), (2, 63, 10)] {
+            small.register(id);
+            small.grow(id, tokens).unwrap();
+            small.commit(id, tokens).unwrap();
+            let r = table.get_mut(&id).unwrap();
+            r.state = State::Running;
+            r.ctx_len = tokens;
+            r.prompt_len = tokens;
+            r.generated = 1;
+            r.arrival = arrival;
+            s.running.push(id);
+        }
+        // pool: 4 + 4 blocks used, 0 free; request 1 decode needs block 5
+        let p = profile();
+        let mut ctx = Ctx {
+            table: &mut table,
+            kv: &mut small,
+            profile: &p,
+            now: 0,
+            max_model_len: 4096,
+        };
+        let out = s.schedule(&mut ctx);
+        assert_eq!(out.swapped_out, vec![2], "newest (online!) swapped out");
+        assert!(out.blocking_io_blocks > 0);
+        assert_eq!(table[&2].residence, KvResidence::Host);
+        assert!(out.plan.items.iter().any(|i| i.req == 1));
+    }
+
+    #[test]
+    fn conserve_discards_uncheckpointed_victim() {
+        let (mut s, mut table, _) = setup(Policy::ConServe);
+        let mut small = KvManager::new(8, 64, 16);
+        add(&mut table, 1, Class::Offline, 128, 8);
+        small.register(1);
+        small.grow(1, 128).unwrap();
+        small.commit(1, 128).unwrap();
+        table.get_mut(&1).unwrap().state = State::Running;
+        table.get_mut(&1).unwrap().ctx_len = 128;
+        s.running.push(1);
+
+        add(&mut table, 2, Class::Online, 64, 8);
+        s.enqueue(2, Class::Online);
+        let p = profile();
+        let mut ctx = Ctx {
+            table: &mut table,
+            kv: &mut small,
+            profile: &p,
+            now: 0,
+            max_model_len: 4096,
+        };
+        let out = s.schedule(&mut ctx);
+        assert_eq!(out.discarded, vec![1]);
+        let r = &table[&1];
+        assert_eq!(r.ctx_len, 0);
+        assert_eq!(r.recomputed_tokens, 128);
+        assert_eq!(r.residence, KvResidence::Discarded);
+        // and it resumes from the front of the offline queue
+        assert_eq!(s.offline_q.front(), Some(&1));
+    }
+
+    #[test]
+    fn slo_budget_limits_offline_alongside_decodes() {
+        let (mut s, mut table, mut kv) = setup(Policy::ConServe);
+        // a running online decode with large context
+        add(&mut table, 1, Class::Online, 1024, 128);
+        {
+            let r = table.get_mut(&1).unwrap();
+            r.state = State::Running;
+            r.ctx_len = 2048;
+            r.prompt_len = 2048;
+            r.generated = 1;
+        }
+        kv.register(1);
+        kv.grow(1, 2049).unwrap();
+        kv.commit(1, 2048).unwrap();
+        s.running.push(1);
+
+        add(&mut table, 2, Class::Offline, 8192, 128);
+        s.enqueue(2, Class::Offline);
+        let p = profile();
+        let mut ctx = Ctx {
+            table: &mut table,
+            kv: &mut kv,
+            profile: &p,
+            now: 0,
+            max_model_len: 16384,
+        };
+        let out = s.schedule(&mut ctx);
+        let offline_tokens: usize = out
+            .plan
+            .items
+            .iter()
+            .filter(|i| i.class == Class::Offline)
+            .map(|i| i.n_tokens)
+            .sum();
+        assert!(offline_tokens <= out.token_budget);
+        // TPOT budget (110 ms) at one decode: ~1.1k tokens of prefill
+        assert!(out.token_budget < 1500, "budget={}", out.token_budget);
+    }
+}

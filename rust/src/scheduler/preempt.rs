@@ -1,0 +1,111 @@
+//! Running-batch preemption decision (paper Algorithm 2).
+//!
+//! When an online request arrives while a *pure offline* batch is
+//! executing, the arrival handler estimates whether waiting for the batch
+//! to finish would blow the newcomer's TTFT objective; if so, the worker
+//! is signalled (safepoint flag) and aborts at the next layer-group
+//! boundary. The estimates come from the offline profiler (§4.5).
+
+use crate::backend::PlanSummary;
+use crate::profiler::LatencyProfile;
+use crate::TimeUs;
+
+/// Inputs to the Alg.-2 decision, gathered at a safepoint.
+#[derive(Debug, Clone, Copy)]
+pub struct PreemptQuery {
+    pub now: TimeUs,
+    /// Earliest waiting online request's arrival time.
+    pub oldest_online_arrival: TimeUs,
+    /// When the running batch was scheduled.
+    pub batch_sched_at: TimeUs,
+    /// Profile estimate for the full running batch.
+    pub batch_est_us: u64,
+    /// Shape of the waiting online work (its prefill).
+    pub online_shape: PlanSummary,
+    pub ttft_slo_us: u64,
+}
+
+/// Fraction of the TTFT objective the projection may consume before the
+/// worker is signalled. Algorithm 2 compares against t_TTFT directly; a
+/// headroom keeps the *P99* under the SLO — the projection is a mean-path
+/// estimate and queueing behind the aborted batch (scheduling, eviction,
+/// recompute of the online queue) is not in it.
+pub const PREEMPT_HEADROOM: f64 = 0.5;
+
+/// Algorithm 2 lines 7-10: preempt iff the remaining batch time plus the
+/// online work's own execution time would exceed the TTFT objective
+/// (scaled by [`PREEMPT_HEADROOM`]) measured from the online request's
+/// arrival.
+pub fn should_preempt(profile: &LatencyProfile, q: &PreemptQuery) -> bool {
+    let elapsed = q.now.saturating_sub(q.batch_sched_at);
+    let t_remain = q.batch_est_us.saturating_sub(elapsed);
+    let t_exec = profile.estimate_us(&q.online_shape);
+    let waited = q.now.saturating_sub(q.oldest_online_arrival);
+    (waited + t_remain + t_exec) as f64 > q.ttft_slo_us as f64 * PREEMPT_HEADROOM
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn profile() -> LatencyProfile {
+        LatencyProfile {
+            c: [1200.0, 96.0, 40.0, 0.385],
+        }
+    }
+
+    fn query() -> PreemptQuery {
+        PreemptQuery {
+            now: 1_000_000,
+            oldest_online_arrival: 990_000,
+            batch_sched_at: 900_000,
+            batch_est_us: 800_000, // long offline batch
+            online_shape: PlanSummary {
+                prefill_tokens: 1024,
+                decode_seqs: 0,
+                ctx_tokens: 0,
+                n_seqs: 1,
+            },
+            ttft_slo_us: 1_500_000,
+        }
+    }
+
+    #[test]
+    fn long_batch_triggers_preemption() {
+        // 400ms remain + ~100ms online exec + 10ms waited, under the
+        // 750ms headroomed objective: no preemption.
+        let mut q = query();
+        q.batch_est_us = 500_000;
+        assert!(!should_preempt(&profile(), &q));
+        // but a 2s batch must be preempted
+        q.batch_est_us = 2_000_000;
+        assert!(should_preempt(&profile(), &q));
+    }
+
+    #[test]
+    fn nearly_finished_batch_is_left_alone() {
+        let mut q = query();
+        q.batch_est_us = 2_000_000;
+        q.batch_sched_at = 0;
+        q.now = 1_990_000; // batch ~done
+        q.oldest_online_arrival = 1_980_000;
+        assert!(!should_preempt(&profile(), &q));
+    }
+
+    #[test]
+    fn long_waited_request_forces_preemption() {
+        let mut q = query();
+        // modest remaining batch but the request already waited 1.45s
+        q.now = 2_000_000;
+        q.batch_sched_at = 1_900_000;
+        q.oldest_online_arrival = q.now - 1_450_000;
+        assert!(should_preempt(&profile(), &q));
+    }
+
+    #[test]
+    fn tight_slo_is_stricter() {
+        let mut q = query();
+        q.ttft_slo_us = 200_000;
+        assert!(should_preempt(&profile(), &q));
+    }
+}

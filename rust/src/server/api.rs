@@ -1,0 +1,211 @@
+//! Request ingestion: the engine's two frontends (paper §4.1).
+//!
+//! * **Trace source** — pre-generated timestamped requests; the engine
+//!   makes them visible as the (virtual or wall) clock passes their
+//!   arrival times. This drives every benchmark deterministically.
+//! * **Channel source** — a live `EngineClient` handle: the real-time
+//!   streaming path (`submit_online`) and the OpenAI-Batch-style path
+//!   (`submit_batch`). Producers run on their own threads; the engine
+//!   polls between iterations and at safepoints, which is exactly where
+//!   the paper's async arrival handler fires.
+
+use crate::request::{Class, Request, RequestId, TokenId};
+use crate::TimeUs;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+
+pub enum ArrivalSource {
+    Trace {
+        /// Sorted by arrival time.
+        events: Vec<Request>,
+        idx: usize,
+    },
+    Channel {
+        rx: Receiver<Request>,
+        peeked: Option<Request>,
+        closed: bool,
+    },
+}
+
+impl ArrivalSource {
+    pub fn from_trace(mut events: Vec<Request>) -> Self {
+        events.sort_by_key(|r| r.arrival);
+        ArrivalSource::Trace { events, idx: 0 }
+    }
+
+    pub fn channel() -> (EngineClient, Self) {
+        let (tx, rx) = channel();
+        (
+            EngineClient {
+                tx,
+                next_id: Arc::new(AtomicU64::new(1)),
+            },
+            ArrivalSource::Channel {
+                rx,
+                peeked: None,
+                closed: false,
+            },
+        )
+    }
+
+    /// All requests with arrival <= now.
+    pub fn poll(&mut self, now: TimeUs) -> Vec<Request> {
+        match self {
+            ArrivalSource::Trace { events, idx } => {
+                let mut out = Vec::new();
+                while *idx < events.len() && events[*idx].arrival <= now {
+                    out.push(events[*idx].clone());
+                    *idx += 1;
+                }
+                out
+            }
+            ArrivalSource::Channel { rx, peeked, closed } => {
+                let mut out = Vec::new();
+                if let Some(r) = peeked.take_if(|r| r.arrival <= now) {
+                    out.push(r);
+                }
+                if peeked.is_none() {
+                    loop {
+                        match rx.try_recv() {
+                            Ok(mut r) => {
+                                // live submissions are stamped on receipt
+                                if r.arrival == 0 {
+                                    r.arrival = now;
+                                }
+                                if r.arrival <= now {
+                                    out.push(r);
+                                } else {
+                                    *peeked = Some(r);
+                                    break;
+                                }
+                            }
+                            Err(TryRecvError::Empty) => break,
+                            Err(TryRecvError::Disconnected) => {
+                                *closed = true;
+                                break;
+                            }
+                        }
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// Next known arrival time (virtual-clock jump target).
+    pub fn next_time(&self) -> Option<TimeUs> {
+        match self {
+            ArrivalSource::Trace { events, idx } => events.get(*idx).map(|r| r.arrival),
+            ArrivalSource::Channel { peeked, .. } => peeked.as_ref().map(|r| r.arrival),
+        }
+    }
+
+    pub fn exhausted(&self) -> bool {
+        match self {
+            ArrivalSource::Trace { events, idx } => *idx >= events.len(),
+            ArrivalSource::Channel { closed, peeked, .. } => *closed && peeked.is_none(),
+        }
+    }
+
+    /// Real-clock idle nap (channel mode): block briefly for an arrival.
+    pub fn wait_a_moment(&mut self) {
+        if let ArrivalSource::Channel { rx, peeked, closed } = self {
+            if peeked.is_none() && !*closed {
+                match rx.recv_timeout(std::time::Duration::from_micros(500)) {
+                    Ok(r) => *peeked = Some(r),
+                    Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => *closed = true,
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                }
+            }
+        } else {
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        }
+    }
+}
+
+/// Cloneable submission handle (thread-safe).
+#[derive(Clone)]
+pub struct EngineClient {
+    tx: Sender<Request>,
+    next_id: Arc<AtomicU64>,
+}
+
+impl EngineClient {
+    fn submit(
+        &self,
+        class: Class,
+        prompt: Vec<TokenId>,
+        max_new_tokens: usize,
+    ) -> RequestId {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let len = prompt.len();
+        // arrival == 0 => stamped by the engine on receipt
+        let req = Request::new(id, class, prompt, len, max_new_tokens, 0);
+        let _ = self.tx.send(req);
+        id
+    }
+
+    /// Real-time streaming API: one latency-critical request.
+    pub fn submit_online(&self, prompt: Vec<TokenId>, max_new_tokens: usize) -> RequestId {
+        self.submit(Class::Online, prompt, max_new_tokens)
+    }
+
+    /// Batch API: a pool of best-effort requests (returns their ids).
+    pub fn submit_batch(
+        &self,
+        prompts: Vec<(Vec<TokenId>, usize)>,
+    ) -> Vec<RequestId> {
+        prompts
+            .into_iter()
+            .map(|(p, n)| self.submit(Class::Offline, p, n))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: RequestId, at: TimeUs) -> Request {
+        Request::new(id, Class::Online, vec![], 8, 2, at)
+    }
+
+    #[test]
+    fn trace_source_releases_in_time_order() {
+        let mut src = ArrivalSource::from_trace(vec![req(2, 200), req(1, 100), req(3, 300)]);
+        assert_eq!(src.next_time(), Some(100));
+        let got = src.poll(150);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].id, 1);
+        assert_eq!(src.next_time(), Some(200));
+        assert_eq!(src.poll(1000).len(), 2);
+        assert!(src.exhausted());
+    }
+
+    #[test]
+    fn channel_source_stamps_arrivals() {
+        let (client, mut src) = ArrivalSource::channel();
+        client.submit_online(vec![1, 2, 3], 4);
+        client.submit_batch(vec![(vec![4], 2), (vec![5], 2)]);
+        let got = src.poll(777);
+        assert_eq!(got.len(), 3);
+        assert!(got.iter().all(|r| r.arrival == 777));
+        assert_eq!(got[0].class, Class::Online);
+        assert_eq!(got[1].class, Class::Offline);
+        assert!(!src.exhausted());
+        drop(client);
+        let _ = src.poll(778);
+        assert!(src.exhausted());
+    }
+
+    #[test]
+    fn client_ids_unique_across_clones() {
+        let (client, mut src) = ArrivalSource::channel();
+        let c2 = client.clone();
+        let a = client.submit_online(vec![1], 1);
+        let b = c2.submit_online(vec![2], 1);
+        assert_ne!(a, b);
+        assert_eq!(src.poll(1).len(), 2);
+    }
+}

@@ -1,0 +1,529 @@
+//! The serving engine: ConServe's event loop.
+//!
+//! One loop drives both deployment modes — wall-clock serving on the
+//! PJRT backend and discrete-event simulation on the cost-model backend:
+//!
+//! ```text
+//! loop:
+//!   drain arrivals -> priority queues
+//!   complete async swap I/O (checkpoints, prefetches)
+//!   schedule (Algorithm 1)  -> iteration plan + preemption decisions
+//!   execute with safepoints -> Algorithm 2 may abort pure-offline batches
+//!   commit results          -> tokens, metrics, KV accounting
+//!   checkpoint tick         -> adaptive incremental checkpointing (§4.4)
+//!   issue prefetches        -> background swap-in within the I/O budget
+//! ```
+
+pub mod api;
+
+use crate::backend::{ExecBackend, ExecOutcome, IterationPlan, SafepointAction};
+use crate::clock::Clock;
+use crate::config::EngineConfig;
+use crate::kvcache::{CkptController, Direction, KvManager, SwapEngine};
+use crate::metrics::Recorder;
+use crate::profiler::LatencyProfile;
+use crate::request::{Class, KvResidence, Request, RequestId, State, TokenId};
+use crate::scheduler::{budget, preempt, Ctx, Policy, UnifiedScheduler};
+use crate::TimeUs;
+use std::collections::HashMap;
+
+pub use api::{ArrivalSource, EngineClient};
+
+/// Per-token observer (streaming API sink).
+pub type TokenCallback = Box<dyn FnMut(RequestId, TokenId, TimeUs)>;
+
+pub struct ServingEngine<B: ExecBackend> {
+    pub cfg: EngineConfig,
+    pub backend: B,
+    pub clock: Clock,
+    pub sched: UnifiedScheduler,
+    pub table: HashMap<RequestId, Request>,
+    pub kv: KvManager,
+    pub swap: SwapEngine,
+    pub ckpt: CkptController,
+    pub profile: LatencyProfile,
+    pub rec: Recorder,
+    arrivals: ArrivalSource,
+    last_token_at: HashMap<RequestId, TimeUs>,
+    on_token: Option<TokenCallback>,
+    /// Last iteration's estimate (drives the I/O budget of §4.5).
+    last_iter_est_us: u64,
+}
+
+impl<B: ExecBackend> ServingEngine<B> {
+    pub fn new(
+        cfg: EngineConfig,
+        backend: B,
+        clock: Clock,
+        profile: LatencyProfile,
+        arrivals: ArrivalSource,
+    ) -> Self {
+        let swap = SwapEngine::new(backend.block_bytes(), backend.link_bandwidth());
+        let kv = KvManager::new(cfg.mem.gpu_blocks, cfg.mem.host_blocks, cfg.mem.block_tokens);
+        let ckpt = CkptController::new(cfg.sched.ckpt_free_watermark, 64);
+        Self {
+            sched: UnifiedScheduler::new(cfg.sched.clone()),
+            cfg,
+            backend,
+            clock,
+            table: HashMap::new(),
+            kv,
+            swap,
+            ckpt,
+            profile,
+            rec: Recorder::new(),
+            arrivals,
+            last_token_at: HashMap::new(),
+            on_token: None,
+            last_iter_est_us: 10_000,
+        }
+    }
+
+    pub fn set_token_callback(&mut self, cb: TokenCallback) {
+        self.on_token = Some(cb);
+    }
+
+    /// Run until `until` (µs) has passed *and* all admitted work is done,
+    /// or all sources are exhausted. Returns the finish time.
+    pub fn run(&mut self, until: TimeUs) -> TimeUs {
+        let debug = std::env::var("CONSERVE_DEBUG").is_ok();
+        let mut iter_count = 0u64;
+        let mut last_debug = 0u64;
+        let mut last_plan = crate::backend::PlanSummary::default();
+        loop {
+            let now = self.clock.now();
+            iter_count += 1;
+            if debug && now >= last_debug + 5_000_000 {
+                last_debug = now;
+                let head = self
+                    .sched
+                    .offline_head()
+                    .and_then(|id| self.table.get(&id).map(|r| (id, r.state, r.residence)));
+                eprintln!(
+                    "[t={:>7.1}s it={iter_count}] online_q={} offline_q={} running={} gpu_free={}/{} host_free={} table={} plan={last_plan:?} head={head:?} h2d_inflight={}",
+                    now as f64 / 1e6,
+                    self.sched.online_waiting(),
+                    self.sched.offline_waiting(),
+                    self.sched.running_ids().len(),
+                    self.kv.gpu_free(),
+                    self.kv.gpu_total(),
+                    self.kv.host_free(),
+                    self.table.len(),
+                    head.map(|(id, _, _)| self.swap.inflight_for(id, Direction::H2D))
+                        .unwrap_or(0),
+                );
+            }
+            if now >= until {
+                break; // hard experiment stop
+            }
+            self.drain_arrivals(now);
+            self.complete_io(now);
+
+            let more_arrivals = !self.arrivals.exhausted();
+            let has_work = self.sched.has_work(&self.table);
+            if !has_work && !more_arrivals {
+                break;
+            }
+
+            // ---- schedule (Algorithm 1) ----
+            let mut ctx = Ctx {
+                table: &mut self.table,
+                kv: &mut self.kv,
+                profile: &self.profile,
+                now,
+                max_model_len: self.cfg.max_model_len,
+            };
+            let out = self.sched.schedule(&mut ctx);
+            if debug {
+                last_plan = out.plan.summary();
+            }
+
+            // victims: apply backend/data effects
+            for &id in &out.discarded {
+                self.backend.drop_request(id);
+                self.swap.drop_request(id);
+                self.rec.preemptions += 1;
+            }
+            for &id in &out.evicted {
+                self.rec.preemptions += 1;
+                // data already mirrored by incremental checkpoints; free
+                // the device copy (prefetch will restore it)
+                self.backend.evict_device(id);
+            }
+            for &id in &out.swapped_out {
+                // blocking D2H of every resident block (vLLM++ path)
+                let seq_tokens = self.kv.seq(id).map(|s| s.tokens).unwrap_or(0);
+                let blocks = seq_tokens.div_ceil(self.kv.block_tokens);
+                for b in 0..blocks {
+                    self.backend.copy_block_d2h(id, b, self.kv.block_tokens);
+                }
+                self.backend.evict_device(id);
+                self.rec.preemptions += 1;
+            }
+            for &id in &out.swapped_in {
+                let seq_tokens = self.kv.seq(id).map(|s| s.tokens).unwrap_or(0);
+                let blocks = seq_tokens.div_ceil(self.kv.block_tokens);
+                for b in 0..blocks {
+                    self.backend.copy_block_h2d(id, b, self.kv.block_tokens);
+                }
+            }
+            if out.blocking_io_blocks > 0 {
+                // blocking transfers stall the pipeline (Fig. 4b)
+                let us = self.swap.blocking_transfer_us(
+                    now,
+                    Direction::D2H,
+                    out.blocking_io_blocks,
+                );
+                self.clock.advance(us);
+                self.rec.blocking_swap_us += us;
+            }
+
+            if out.plan.items.is_empty() {
+                // memory management must continue while idle — resumes
+                // blocked on prefetch would otherwise deadlock the queue
+                self.checkpoint_tick();
+                self.prefetch_tick();
+                self.idle_advance(until);
+                continue;
+            }
+
+            // ---- execute with safepoints (Algorithm 2) ----
+            let sched_at = self.clock.now();
+            let est = self.profile.estimate_us(&out.plan.summary());
+            self.last_iter_est_us = est.max(1_000);
+            let outcome = self.execute_plan(&out.plan, sched_at, est);
+
+            match outcome {
+                Ok(o) if o.completed => {
+                    self.commit(&out.plan, &o);
+                }
+                Ok(_aborted) => {
+                    self.rec.layer_aborts += 1;
+                    // nothing committed; scheduler re-plans next loop with
+                    // the online arrivals now visible
+                }
+                Err(e) => panic!("backend execution failed: {e:?}"),
+            }
+
+            // ---- post-iteration memory management (§4.4/§4.5) ----
+            self.checkpoint_tick();
+            self.prefetch_tick();
+        }
+        self.clock.now()
+    }
+
+    fn execute_plan(
+        &mut self,
+        plan: &IterationPlan,
+        sched_at: TimeUs,
+        est_us: u64,
+    ) -> anyhow::Result<ExecOutcome> {
+        // Split borrows for the safepoint closure.
+        let arrivals = &mut self.arrivals;
+        let sched = &mut self.sched;
+        let table = &mut self.table;
+        let profile = &self.profile;
+        let slo_us = (self.cfg.sched.slo.ttft_ms * 1000.0) as u64;
+        let chunk = self.cfg.sched.chunk_size;
+        let layerwise = self.cfg.sched.layerwise_preempt;
+
+        let mut cb = |now: TimeUs| -> SafepointAction {
+            // arrivals become visible at safepoints (§4.3)
+            for req in arrivals.poll(now) {
+                let id = req.id;
+                let class = req.class;
+                table.insert(id, req);
+                sched.enqueue(id, class);
+            }
+            if !layerwise || sched.online_waiting() == 0 {
+                return SafepointAction::Continue;
+            }
+            let q = preempt::PreemptQuery {
+                now,
+                oldest_online_arrival: sched.oldest_online_arrival(table).unwrap_or(now),
+                batch_sched_at: sched_at,
+                batch_est_us: est_us,
+                online_shape: sched.online_queue_shape(table, chunk),
+                ttft_slo_us: slo_us,
+            };
+            if preempt::should_preempt(profile, &q) {
+                SafepointAction::Abort
+            } else {
+                SafepointAction::Continue
+            }
+        };
+        self.backend.execute(plan, &mut cb)
+    }
+
+    fn commit(&mut self, plan: &IterationPlan, o: &ExecOutcome) {
+        let now = self.clock.now();
+        for (i, item) in plan.items.iter().enumerate() {
+            let Some(r) = self.table.get_mut(&item.req) else {
+                continue;
+            };
+            self.kv
+                .commit(item.req, item.n_tokens)
+                .expect("scheduled item without grown blocks");
+            r.ctx_len += item.n_tokens;
+            self.rec.record_processed(now, item.class, item.n_tokens);
+
+            if r.ctx_len == r.feed_target() {
+                // a new token was sampled by this iteration's head
+                r.generated += 1;
+                if let Some(tok) = o.new_tokens[i] {
+                    r.output.push(tok);
+                }
+                let class = r.class;
+                let is_first = r.generated == 1;
+                if is_first {
+                    r.first_token_at = Some(now);
+                    let ttft = now.saturating_sub(r.arrival);
+                    self.rec.record_first_token(now, class, ttft);
+                } else {
+                    let last = self.last_token_at.get(&item.req).copied().unwrap_or(now);
+                    self.rec.record_token(now, class, now.saturating_sub(last));
+                }
+                self.last_token_at.insert(item.req, now);
+                if let (Some(cb), Some(tok)) = (self.on_token.as_mut(), o.new_tokens[i])
+                {
+                    cb(item.req, tok, now);
+                }
+                let r = self.table.get_mut(&item.req).unwrap();
+                if r.is_done() {
+                    r.state = State::Finished;
+                    r.finished_at = Some(now);
+                    self.rec.record_finished(class);
+                    self.kv.release(item.req, false);
+                    self.backend.drop_request(item.req);
+                    self.swap.drop_request(item.req);
+                    self.last_token_at.remove(&item.req);
+                }
+            }
+        }
+    }
+
+    /// Adaptive incremental checkpointing (§4.4): quota from the RED-style
+    /// controller, newest-progress offline sequences first; online
+    /// sequences join under severe pressure.
+    fn checkpoint_tick(&mut self) {
+        if !self.cfg.sched.incremental_ckpt || self.cfg.sched.policy != Policy::ConServe {
+            return;
+        }
+        let free = self.kv.gpu_free_frac();
+        let quota = self.ckpt.step(free);
+        if quota == 0 {
+            return;
+        }
+        let severe = free < self.cfg.sched.ckpt_free_watermark * 0.5;
+        let now = self.clock.now();
+
+        let mut candidates: Vec<RequestId> = self
+            .sched
+            .running_ids()
+            .iter()
+            .copied()
+            .filter(|id| {
+                let Some(r) = self.table.get(id) else {
+                    return false;
+                };
+                r.residence == KvResidence::Gpu
+                    && (r.class == Class::Offline || severe)
+            })
+            .collect();
+        // offline first
+        candidates.sort_by_key(|id| self.table[id].class == Class::Online);
+
+        let mut issued = 0;
+        'outer: for id in candidates {
+            for idx in self.kv.checkpoint_candidates(id) {
+                if issued >= quota {
+                    break 'outer;
+                }
+                if self.kv.begin_ckpt(id, idx).is_err() {
+                    break 'outer; // host pool exhausted
+                }
+                // data moves now (host<->host on this testbed); the
+                // accounting completes on PCIe-modelled time
+                self.backend
+                    .copy_block_d2h(id, idx, self.kv.block_tokens);
+                self.swap.enqueue(now, id, idx, Direction::D2H);
+                issued += 1;
+            }
+        }
+        self.rec.ckpt_blocks += issued as u64;
+    }
+
+    /// Background prefetching (§4.4): restore host-resident offline
+    /// requests within the per-iteration I/O budget so swap-in overlaps
+    /// the next batches' compute.
+    fn prefetch_tick(&mut self) {
+        if !self.cfg.sched.prefetch || self.cfg.sched.policy != Policy::ConServe {
+            return;
+        }
+        let io_budget = budget::io_budget(
+            self.last_iter_est_us,
+            self.swap.block_transfer_us(),
+            64,
+        );
+        if io_budget == 0 {
+            return;
+        }
+        // never prefetch into a pressured pool: restored blocks are
+        // pinned (not evictable) until the request runs, so prefetching
+        // under pressure steals memory from the online class. Worse, a
+        // fleet of half-restored requests can pin the pool with nothing
+        // runnable — so under pressure, *cancel* the largest in-progress
+        // restore (host checkpoints survive; it reverts to Host).
+        let reserve = (self.kv.gpu_total() / 20).max(1);
+        if self.kv.gpu_free() <= reserve {
+            let victim = self
+                .table
+                .iter()
+                .filter(|(_, r)| r.residence == KvResidence::Prefetching)
+                .map(|(&id, _)| id)
+                .max_by_key(|id| {
+                    (
+                        self.kv.seq(*id).map(|s| s.gpu_blocks()).unwrap_or(0),
+                        *id,
+                    )
+                });
+            if let Some(id) = victim {
+                self.swap.drop_request(id);
+                self.kv.evict_gpu(id);
+                self.backend.evict_device(id);
+                if let Some(r) = self.table.get_mut(&id) {
+                    r.residence = KvResidence::Host;
+                }
+            }
+            return;
+        }
+        let now = self.clock.now();
+        let mut ids: Vec<RequestId> = self
+            .table
+            .iter()
+            .filter(|(_, r)| r.residence == KvResidence::Prefetching)
+            .map(|(&id, _)| id)
+            .collect();
+        ids.sort_unstable(); // hash-map order must not leak into behaviour
+        let mut issued = 0;
+        for id in ids {
+            if issued >= io_budget {
+                break;
+            }
+            // state-machine repair: a Prefetching request with no
+            // outstanding work is either fully restored (flip to Gpu) or
+            // has lost host copies (discard to recompute) — either way it
+            // must not linger and block the FIFO queue
+            if self.kv.prefetch_candidates(id).is_empty()
+                && self.swap.inflight_for(id, Direction::H2D) == 0
+            {
+                let bt = self.kv.block_tokens;
+                let resident = self
+                    .kv
+                    .seq(id)
+                    .is_some_and(|s| s.gpu_blocks() >= s.tokens.div_ceil(bt));
+                let r = self.table.get_mut(&id).unwrap();
+                if resident {
+                    r.residence = KvResidence::Gpu;
+                } else {
+                    if std::env::var("CONSERVE_DEBUG").is_ok() {
+                        eprintln!(
+                            "[repair] req {id}: prefetch holes (tokens={}, gpu_blocks={:?}) -> recompute",
+                            self.kv.seq(id).map(|s| s.tokens).unwrap_or(0),
+                            self.kv.seq(id).map(|s| s.gpu_blocks())
+                        );
+                    }
+                    let lost = r.ctx_len;
+                    r.ctx_len = 0;
+                    r.ckpt_len = 0;
+                    r.recomputed_tokens += lost;
+                    r.residence = KvResidence::Discarded;
+                    self.kv.discard(id);
+                    self.backend.drop_request(id);
+                }
+                continue;
+            }
+            for (idx, _hb) in self.kv.prefetch_candidates(id) {
+                if issued >= io_budget {
+                    break;
+                }
+                if self.swap.inflight_for(id, Direction::H2D) + issued >= io_budget {
+                    break;
+                }
+                if self.kv.begin_prefetch(id, idx).is_err() {
+                    // GPU pool full. Offline waits; a *latency-critical*
+                    // resume must not — discard it to the recompute path
+                    // (prefill needs no pinned restore memory up front).
+                    if self.table.get(&id).is_some_and(|r| r.class == Class::Online) {
+                        self.swap.drop_request(id);
+                        self.kv.discard(id);
+                        self.backend.drop_request(id);
+                        let r = self.table.get_mut(&id).unwrap();
+                        let lost = r.ctx_len;
+                        r.ctx_len = 0;
+                        r.ckpt_len = 0;
+                        r.recomputed_tokens += lost;
+                        r.residence = KvResidence::Discarded;
+                    }
+                    return;
+                }
+                self.swap.enqueue(now, id, idx, Direction::H2D);
+                issued += 1;
+            }
+        }
+        self.rec.prefetch_blocks += issued as u64;
+    }
+
+    /// Complete async swap ops whose modelled time has passed.
+    fn complete_io(&mut self, now: TimeUs) {
+        for op in self.swap.tick(now) {
+            match op.dir {
+                Direction::D2H => {
+                    self.kv.finish_ckpt(op.req, op.block_idx);
+                }
+                Direction::H2D => {
+                    self.backend
+                        .copy_block_h2d(op.req, op.block_idx, self.kv.block_tokens);
+                    // last block home? request becomes runnable
+                    let done = self.kv.prefetch_candidates(op.req).is_empty()
+                        && self.swap.inflight_for(op.req, Direction::H2D) == 0;
+                    if done {
+                        if let Some(r) = self.table.get_mut(&op.req) {
+                            if r.residence == KvResidence::Prefetching {
+                                r.residence = KvResidence::Gpu;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    fn drain_arrivals(&mut self, now: TimeUs) {
+        for req in self.arrivals.poll(now) {
+            let id = req.id;
+            let class = req.class;
+            self.table.insert(id, req);
+            self.sched.enqueue(id, class);
+        }
+    }
+
+    /// Nothing runnable: jump the virtual clock to the next event, or
+    /// nap briefly on the wall clock.
+    fn idle_advance(&mut self, until: TimeUs) {
+        let next_arrival = self.arrivals.next_time();
+        let next_io = self.swap.next_completion();
+        let target = match (next_arrival, next_io) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+        if self.clock.is_virtual() {
+            match target {
+                Some(t) => self.clock.advance_to(t.max(self.clock.now() + 1)),
+                None => self.clock.advance_to(until),
+            }
+        } else {
+            self.arrivals.wait_a_moment();
+        }
+    }
+}

@@ -1,0 +1,45 @@
+//! Small self-contained utilities: deterministic PRNG + distribution
+//! sampling, a minimal JSON parser/emitter (the environment vendors no
+//! serde), and shape/bucket helpers shared by the engine.
+
+pub mod json;
+pub mod rng;
+
+/// Round `n` up to the smallest bucket >= n; returns the largest bucket if
+/// none fits (caller clamps).
+pub fn bucket_up(buckets: &[usize], n: usize) -> usize {
+    for &b in buckets {
+        if b >= n {
+            return b;
+        }
+    }
+    *buckets.last().expect("empty bucket list")
+}
+
+/// Integer ceil-div.
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    a.div_ceil(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_up_picks_smallest_fit() {
+        let b = [1, 16, 64];
+        assert_eq!(bucket_up(&b, 1), 1);
+        assert_eq!(bucket_up(&b, 2), 16);
+        assert_eq!(bucket_up(&b, 16), 16);
+        assert_eq!(bucket_up(&b, 17), 64);
+        assert_eq!(bucket_up(&b, 1000), 64); // clamped to largest
+    }
+
+    #[test]
+    fn ceil_div_works() {
+        assert_eq!(ceil_div(0, 16), 0);
+        assert_eq!(ceil_div(1, 16), 1);
+        assert_eq!(ceil_div(16, 16), 1);
+        assert_eq!(ceil_div(17, 16), 2);
+    }
+}

@@ -1,0 +1,195 @@
+//! Deterministic PRNG (PCG64-DXSM-ish split-mix core) plus the
+//! distribution samplers the workload generator needs: exponential,
+//! gamma (Marsaglia–Tsang), and normal (Box–Muller).
+//!
+//! Every experiment takes an explicit seed so benches and property tests
+//! are reproducible bit-for-bit.
+
+/// Splitmix64-seeded xoshiro256++ — small, fast, well-understood; quality
+/// is far beyond what workload synthesis needs.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        Self {
+            s: [
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+            ],
+        }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let r = (self.s[0].wrapping_add(self.s[3]))
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        r
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [lo, hi) (hi > lo).
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.next_u64() % (hi - lo)
+    }
+
+    /// Uniform usize in [lo, hi).
+    pub fn range_usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.range(lo as u64, hi as u64) as usize
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = (1.0 - self.f64()).max(f64::MIN_POSITIVE); // (0, 1]
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Exponential with the given rate (mean 1/rate).
+    pub fn exp(&mut self, rate: f64) -> f64 {
+        let u = (1.0 - self.f64()).max(f64::MIN_POSITIVE);
+        -u.ln() / rate
+    }
+
+    /// Gamma(shape k, scale θ) via Marsaglia–Tsang (with the k < 1 boost).
+    pub fn gamma(&mut self, shape: f64, scale: f64) -> f64 {
+        assert!(shape > 0.0 && scale > 0.0);
+        if shape < 1.0 {
+            // boosting: G(k) = G(k+1) * U^(1/k)
+            let u = self.f64().max(f64::MIN_POSITIVE);
+            return self.gamma(shape + 1.0, scale) * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v3 = v * v * v;
+            let u = self.f64().max(f64::MIN_POSITIVE);
+            if u.ln() < 0.5 * x * x + d - d * v3 + d * v3.ln() {
+                return d * v3 * scale;
+            }
+        }
+    }
+
+    /// Inter-arrival sample for a gamma arrival process with mean rate
+    /// `rate` (1/s) and coefficient of variation `cv` (paper §6.3.2:
+    /// CV measures burstiness; CV = 1 is Poisson).
+    pub fn gamma_interarrival(&mut self, rate: f64, cv: f64) -> f64 {
+        let shape = 1.0 / (cv * cv);
+        let scale = 1.0 / (rate * shape);
+        self.gamma(shape, scale)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(xs: &[f64]) -> (f64, f64) {
+        let n = xs.len() as f64;
+        let mean = xs.iter().sum::<f64>() / n;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        (mean, var)
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Rng::new(43);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn uniform_mean() {
+        let mut r = Rng::new(1);
+        let xs: Vec<f64> = (0..20_000).map(|_| r.f64()).collect();
+        let (mean, _) = stats(&xs);
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(2);
+        let xs: Vec<f64> = (0..40_000).map(|_| r.normal()).collect();
+        let (mean, var) = stats(&xs);
+        assert!(mean.abs() < 0.03, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn exp_mean() {
+        let mut r = Rng::new(3);
+        let xs: Vec<f64> = (0..40_000).map(|_| r.exp(2.0)).collect();
+        let (mean, _) = stats(&xs);
+        assert!((mean - 0.5).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn gamma_moments() {
+        // Gamma(k, θ): mean kθ, var kθ².
+        for &(k, t) in &[(0.25, 2.0), (1.0, 1.0), (4.0, 0.5), (9.0, 3.0)] {
+            let mut r = Rng::new(4);
+            let xs: Vec<f64> = (0..60_000).map(|_| r.gamma(k, t)).collect();
+            let (mean, var) = stats(&xs);
+            assert!((mean - k * t).abs() / (k * t) < 0.05, "k={k} mean={mean}");
+            assert!(
+                (var - k * t * t).abs() / (k * t * t) < 0.12,
+                "k={k} var={var}"
+            );
+        }
+    }
+
+    #[test]
+    fn gamma_interarrival_rate_and_cv() {
+        // rate 2/s, CV 2 => mean gap 0.5s, std 1.0s.
+        let mut r = Rng::new(5);
+        let xs: Vec<f64> = (0..60_000).map(|_| r.gamma_interarrival(2.0, 2.0)).collect();
+        let (mean, var) = stats(&xs);
+        assert!((mean - 0.5).abs() < 0.03, "mean={mean}");
+        let cv = var.sqrt() / mean;
+        assert!((cv - 2.0).abs() < 0.15, "cv={cv}");
+    }
+
+    #[test]
+    fn range_bounds() {
+        let mut r = Rng::new(6);
+        for _ in 0..1000 {
+            let x = r.range(10, 20);
+            assert!((10..20).contains(&x));
+        }
+    }
+}

@@ -1,0 +1,168 @@
+//! Request-length datasets and prompt synthesis.
+//!
+//! * Online requests follow the paper's representative values (input
+//!   1024 / output 128, §6.3) with optional jitter.
+//! * Offline requests follow a LongBench-like document-summarization
+//!   distribution (§6.1): long inputs (1k–8k tokens, log-uniform-ish)
+//!   with short-to-medium outputs.
+//! * The real tiny-model path scales lengths down to its 256-slot cache
+//!   and synthesizes actual byte-level prompt text.
+
+use crate::request::TokenId;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LengthSample {
+    pub input: usize,
+    pub output: usize,
+}
+
+/// Length distribution presets.
+#[derive(Debug, Clone, Copy)]
+pub enum Lengths {
+    /// Fixed input/output (ON/OFF experiments use 1024/128).
+    Fixed { input: usize, output: usize },
+    /// Online chat-like: mean input/output with +-25% uniform jitter.
+    OnlineChat { input: usize, output: usize },
+    /// Offline LongBench-like summarization: log-uniform input in
+    /// [min_input, max_input], output in [64, 512] (scaled presets below).
+    OfflineDocs { min_input: usize, max_input: usize, max_output: usize },
+}
+
+impl Lengths {
+    pub fn sample(&self, rng: &mut Rng) -> LengthSample {
+        match *self {
+            Lengths::Fixed { input, output } => LengthSample { input, output },
+            Lengths::OnlineChat { input, output } => LengthSample {
+                input: jitter(rng, input, 0.25),
+                output: jitter(rng, output, 0.25),
+            },
+            Lengths::OfflineDocs {
+                min_input,
+                max_input,
+                max_output,
+            } => {
+                let lo = (min_input as f64).ln();
+                let hi = (max_input as f64).ln();
+                let input = (lo + (hi - lo) * rng.f64()).exp() as usize;
+                let output = rng.range_usize(max_output / 8, max_output + 1);
+                LengthSample {
+                    input: input.max(1),
+                    output: output.max(1),
+                }
+            }
+        }
+    }
+
+    /// Paper-scale presets (A100/7B sim).
+    pub fn online_paper() -> Self {
+        Lengths::Fixed {
+            input: 1024,
+            output: 128,
+        }
+    }
+
+    pub fn offline_paper() -> Self {
+        Lengths::OfflineDocs {
+            min_input: 1024,
+            max_input: 8192,
+            max_output: 512,
+        }
+    }
+
+    /// Tiny-model presets (max_model_len 256).
+    pub fn online_tiny() -> Self {
+        Lengths::OnlineChat {
+            input: 96,
+            output: 24,
+        }
+    }
+
+    pub fn offline_tiny() -> Self {
+        Lengths::OfflineDocs {
+            min_input: 64,
+            max_input: 192,
+            max_output: 48,
+        }
+    }
+}
+
+fn jitter(rng: &mut Rng, base: usize, frac: f64) -> usize {
+    let lo = (base as f64 * (1.0 - frac)).max(1.0);
+    let hi = base as f64 * (1.0 + frac);
+    (lo + (hi - lo) * rng.f64()) as usize
+}
+
+/// Pseudo-English words for synthesizing real prompts on the byte-level
+/// tokenizer path (document-summarization flavor).
+const WORDS: &[&str] = &[
+    "the", "model", "serves", "online", "requests", "with", "low", "latency",
+    "while", "offline", "batch", "jobs", "harvest", "idle", "gpu", "cycles",
+    "document", "summary", "section", "reports", "quarterly", "results",
+    "system", "throughput", "cache", "memory", "token", "schedule",
+];
+
+/// Synthesize a prompt of exactly `n_tokens` byte-level tokens.
+pub fn synth_prompt(rng: &mut Rng, n_tokens: usize) -> Vec<TokenId> {
+    let mut text = String::new();
+    while text.len() < n_tokens {
+        if !text.is_empty() {
+            text.push(' ');
+        }
+        text.push_str(WORDS[rng.range_usize(0, WORDS.len())]);
+    }
+    text.truncate(n_tokens);
+    text.into_bytes().into_iter().map(|b| b as TokenId).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_lengths() {
+        let mut r = Rng::new(0);
+        let l = Lengths::online_paper().sample(&mut r);
+        assert_eq!(l, LengthSample { input: 1024, output: 128 });
+    }
+
+    #[test]
+    fn offline_docs_within_bounds() {
+        let mut r = Rng::new(1);
+        let d = Lengths::offline_paper();
+        for _ in 0..500 {
+            let l = d.sample(&mut r);
+            assert!((1024..=8192).contains(&l.input), "input={}", l.input);
+            assert!((64..=512).contains(&l.output), "output={}", l.output);
+        }
+    }
+
+    #[test]
+    fn offline_docs_log_spread() {
+        let mut r = Rng::new(2);
+        let d = Lengths::offline_paper();
+        let xs: Vec<usize> = (0..2000).map(|_| d.sample(&mut r).input).collect();
+        let below_2k = xs.iter().filter(|&&x| x < 2048).count();
+        // log-uniform: ~half the mass below geometric midpoint (~2896)
+        assert!(below_2k > 500 && below_2k < 1500, "below_2k={below_2k}");
+    }
+
+    #[test]
+    fn tiny_lengths_fit_cache() {
+        let mut r = Rng::new(3);
+        for _ in 0..500 {
+            let on = Lengths::online_tiny().sample(&mut r);
+            let off = Lengths::offline_tiny().sample(&mut r);
+            assert!(on.input + on.output <= 256);
+            assert!(off.input + off.output <= 256);
+        }
+    }
+
+    #[test]
+    fn synth_prompt_exact_len_and_byte_range() {
+        let mut r = Rng::new(4);
+        let p = synth_prompt(&mut r, 100);
+        assert_eq!(p.len(), 100);
+        assert!(p.iter().all(|&t| t < 256));
+    }
+}

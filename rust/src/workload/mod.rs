@@ -1,0 +1,12 @@
+//! Workload synthesis: the gamma-process load generator (paper §5 "a
+//! built-in load generator that can generate precisely timed requests
+//! following the gamma distribution"), BurstGPT-like traces (Fig. 1),
+//! ON/OFF phased loads (§6.3.1), and request-length datasets.
+
+pub mod datasets;
+pub mod loadgen;
+pub mod trace;
+
+pub use datasets::{LengthSample, Lengths};
+pub use loadgen::LoadGen;
+pub use trace::{onoff_trace, burstgpt_like_rate, TraceEvent};

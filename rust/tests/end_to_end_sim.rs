@@ -1,0 +1,155 @@
+//! End-to-end tests of the full serving engine on the simulated testbed:
+//! the whole stack (arrivals -> scheduler -> backend -> checkpointing ->
+//! metrics) under each policy, with behavioural assertions matching the
+//! paper's qualitative claims.
+
+use conserve::config::EngineConfig;
+use conserve::report::SimExperiment;
+use conserve::scheduler::Policy;
+use conserve::workload::trace::onoff_trace;
+use conserve::workload::{Lengths, LoadGen};
+
+fn arrivals(seed: u64, rate: f64, cv: f64, dur: f64) -> Vec<u64> {
+    LoadGen::new(seed, rate, cv).arrivals_until(dur)
+}
+
+fn experiment(policy: Policy, dur: f64, online: Vec<u64>, pool: usize) -> SimExperiment {
+    let mut cfg = EngineConfig::sim_a100_7b();
+    cfg.sched.policy = policy;
+    if policy == Policy::VllmPP {
+        cfg.sched.slo_aware = false;
+        cfg.sched.incremental_ckpt = false;
+        cfg.sched.prefetch = false;
+        cfg.sched.layerwise_preempt = false;
+    }
+    SimExperiment {
+        cfg,
+        online_arrivals: online,
+        online_lengths: Lengths::Fixed {
+            input: 1024,
+            output: 128,
+        },
+        offline_pool: pool,
+        // shorter outputs than the paper's pool so offline *completions*
+        // (not just throughput) are observable within test-scale runs
+        offline_lengths: Lengths::OfflineDocs {
+            min_input: 1024,
+            max_input: 4096,
+            max_output: 128,
+        },
+        duration_s: dur,
+    }
+}
+
+#[test]
+fn online_only_serves_all_online() {
+    let online = arrivals(1, 2.0, 1.0, 60.0);
+    let n = online.len() as u64;
+    let r = experiment(Policy::OnlineOnly, 60.0, online, 0).run();
+    assert!(r.online_finished >= n.saturating_sub(3), "{} of {n}", r.online_finished);
+    assert_eq!(r.offline_finished, 0);
+    assert!(r.online_p99_ttft_ms < 1500.0);
+    assert!(r.online_p99_tpot_ms < 110.0);
+}
+
+#[test]
+fn conserve_harvests_without_breaking_slo() {
+    let online = arrivals(2, 2.0, 1.0, 90.0);
+    let base = experiment(Policy::OnlineOnly, 90.0, online.clone(), 0).run();
+    let cs = experiment(Policy::ConServe, 90.0, online, 400).run();
+    // harvest: significantly more total work done
+    assert!(
+        cs.total_processed_tput > 1.5 * base.total_processed_tput,
+        "harvest {:.0} vs base {:.0}",
+        cs.total_processed_tput,
+        base.total_processed_tput
+    );
+    // latency preserved near SLO
+    assert!(
+        cs.online_p99_ttft_ms < 1500.0 * 1.15,
+        "p99 TTFT {}",
+        cs.online_p99_ttft_ms
+    );
+    assert!(
+        cs.online_p99_tpot_ms < 110.0 * 1.15,
+        "p99 TPOT {}",
+        cs.online_p99_tpot_ms
+    );
+    // checkpointing actually ran under pressure
+    assert!(cs.ckpt_blocks > 0);
+}
+
+#[test]
+fn vllmpp_inflates_online_latency() {
+    let online = arrivals(3, 2.0, 1.0, 90.0);
+    let cs = experiment(Policy::ConServe, 90.0, online.clone(), 400).run();
+    let vpp = experiment(Policy::VllmPP, 90.0, online, 400).run();
+    assert!(
+        vpp.online_p99_ttft_ms > 2.0 * cs.online_p99_ttft_ms,
+        "vLLM++ {:.0}ms vs ConServe {:.0}ms",
+        vpp.online_p99_ttft_ms,
+        cs.online_p99_ttft_ms
+    );
+    assert!(vpp.blocking_swap_ms > 0.0, "vLLM++ must have blocking swaps");
+}
+
+#[test]
+fn off_phases_are_harvested() {
+    let online = onoff_trace(4, 240.0, 60.0, 3.0, 1.0);
+    let r = experiment(Policy::ConServe, 240.0, online, 1500).run();
+    // find an OFF window with large offline throughput
+    let mut best_off = 0.0f64;
+    for (w_on, w_all) in r.online_timeseries.iter().zip(&r.all_timeseries) {
+        let on_phase = ((w_on.start_s / 60.0) as u64) % 2 == 0;
+        if !on_phase {
+            best_off = best_off.max(w_all.processed_per_s - w_on.processed_per_s);
+        }
+    }
+    assert!(best_off > 3000.0, "OFF-phase harvest only {best_off:.0} tok/s");
+    assert!(r.online_p99_ttft_ms < 2500.0, "TTFT {}", r.online_p99_ttft_ms);
+}
+
+#[test]
+fn layer_aborts_fire_under_bursts() {
+    // pure-offline periods followed by online bursts => running offline
+    // batches must be aborted at safepoints (Alg. 2)
+    let online = onoff_trace(5, 180.0, 45.0, 4.0, 2.0);
+    let r = experiment(Policy::ConServe, 180.0, online, 1500).run();
+    assert!(
+        r.layer_aborts > 0,
+        "expected layer-granularity aborts during OFF->ON transitions"
+    );
+}
+
+#[test]
+fn prefetch_restores_preempted_requests() {
+    let online = onoff_trace(6, 240.0, 60.0, 4.0, 1.0);
+    let r = experiment(Policy::ConServe, 240.0, online, 800).run();
+    assert!(r.prefetch_blocks > 0, "prefetching must have occurred");
+    assert!(r.offline_finished > 0, "preempted offline work must finish");
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let online = arrivals(7, 2.0, 1.0, 45.0);
+    let a = experiment(Policy::ConServe, 45.0, online.clone(), 200).run();
+    let b = experiment(Policy::ConServe, 45.0, online, 200).run();
+    assert_eq!(a.online_finished, b.online_finished);
+    assert_eq!(a.offline_finished, b.offline_finished);
+    assert_eq!(a.preemptions, b.preemptions);
+    assert!((a.online_p99_ttft_ms - b.online_p99_ttft_ms).abs() < 1e-9);
+    assert!((a.total_processed_tput - b.total_processed_tput).abs() < 1e-6);
+}
+
+#[test]
+fn report_json_is_valid() {
+    let online = arrivals(8, 1.0, 1.0, 30.0);
+    let r = experiment(Policy::ConServe, 30.0, online, 100).run();
+    let j = r.to_json().to_string();
+    let parsed = conserve::util::json::Json::parse(&j).unwrap();
+    assert_eq!(
+        parsed.req("policy").as_str(),
+        Some("ConServe")
+    );
+    assert!(parsed.req("online_timeseries").as_arr().unwrap().len() > 0);
+}

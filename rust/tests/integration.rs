@@ -1,0 +1,164 @@
+//! Cross-module integration tests that don't need artifacts or long
+//! simulations: config -> scheduler wiring, profiler -> budget -> plan
+//! consistency, swap engine <-> kv manager interplay, workload -> engine
+//! plumbing, and the checkpoint controller inside the engine loop.
+
+use conserve::backend::{CostModel, SimBackend};
+use conserve::clock::Clock;
+use conserve::config::EngineConfig;
+use conserve::metrics::percentile;
+use conserve::profiler::LatencyProfile;
+use conserve::report::SimExperiment;
+use conserve::request::{Class, Request};
+use conserve::scheduler::Policy;
+use conserve::server::{ArrivalSource, ServingEngine};
+use conserve::workload::Lengths;
+
+#[test]
+fn config_policy_flags_flow_into_behaviour() {
+    // disabling layerwise preemption must remove layer aborts entirely
+    let mk = |layerwise: bool| {
+        let mut cfg = EngineConfig::sim_a100_7b();
+        cfg.sched.layerwise_preempt = layerwise;
+        let online =
+            conserve::workload::trace::onoff_trace(5, 120.0, 30.0, 4.0, 2.0);
+        SimExperiment {
+            cfg,
+            online_arrivals: online,
+            online_lengths: Lengths::Fixed {
+                input: 1024,
+                output: 128,
+            },
+            offline_pool: 800,
+            offline_lengths: Lengths::offline_paper(),
+            duration_s: 120.0,
+        }
+        .run()
+    };
+    let with = mk(true);
+    let without = mk(false);
+    assert!(with.layer_aborts > 0);
+    assert_eq!(without.layer_aborts, 0);
+}
+
+#[test]
+fn ablation_flags_change_mechanisms_not_correctness() {
+    let online = conserve::workload::LoadGen::new(3, 2.0, 1.0).arrivals_until(60.0);
+    for (ckpt, prefetch) in [(false, false), (true, false), (true, true)] {
+        let mut cfg = EngineConfig::sim_a100_7b();
+        cfg.sched.incremental_ckpt = ckpt;
+        cfg.sched.prefetch = prefetch;
+        let r = SimExperiment {
+            cfg,
+            online_arrivals: online.clone(),
+            online_lengths: Lengths::online_paper(),
+            offline_pool: 300,
+            offline_lengths: Lengths::offline_paper(),
+            duration_s: 60.0,
+        }
+        .run();
+        if !ckpt {
+            assert_eq!(r.ckpt_blocks, 0, "no checkpoints when disabled");
+        }
+        if !prefetch {
+            assert_eq!(r.prefetch_blocks, 0, "no prefetch when disabled");
+        }
+        assert!(r.online_finished > 0);
+    }
+}
+
+#[test]
+fn engine_with_channel_source_and_sim_backend() {
+    // live submission path wired through the engine (virtual clock)
+    let cfg = EngineConfig::sim_a100_7b();
+    let clock = Clock::virtual_at(0);
+    let backend = SimBackend::new(
+        CostModel::a100_llama2_7b(),
+        clock.clone(),
+        cfg.sched.safepoint_layers,
+    );
+    let profile = LatencyProfile {
+        c: [1200.0, 96.0, 40.0, 0.385],
+    };
+    let (client, src) = ArrivalSource::channel();
+    client.submit_online(vec![0; 128], 8);
+    client.submit_batch(vec![(vec![0; 256], 16), (vec![0; 256], 16)]);
+    drop(client);
+    let mut engine = ServingEngine::new(cfg, backend, clock, profile, src);
+    engine.run(60_000_000);
+    assert_eq!(engine.rec.finished[0], 1);
+    assert_eq!(engine.rec.finished[1], 2);
+}
+
+#[test]
+fn trace_arrivals_honoured_by_virtual_clock() {
+    let cfg = EngineConfig::sim_a100_7b();
+    let clock = Clock::virtual_at(0);
+    let backend = SimBackend::new(CostModel::a100_llama2_7b(), clock.clone(), 8);
+    let profile = LatencyProfile {
+        c: [1200.0, 96.0, 40.0, 0.385],
+    };
+    let events = vec![
+        Request::new(1, Class::Online, vec![], 512, 4, 10_000_000),
+        Request::new(2, Class::Online, vec![], 512, 4, 30_000_000),
+    ];
+    let mut engine = ServingEngine::new(
+        cfg,
+        backend,
+        clock,
+        profile,
+        ArrivalSource::from_trace(events),
+    );
+    engine.run(120_000_000);
+    let r1 = &engine.table[&1];
+    let r2 = &engine.table[&2];
+    // first token cannot precede arrival; idle gaps are jumped, not spun
+    assert!(r1.first_token_at.unwrap() >= 10_000_000);
+    assert!(r2.first_token_at.unwrap() >= 30_000_000);
+    assert!(r1.ttft().unwrap() < 2_000_000, "ttft {:?}", r1.ttft());
+}
+
+#[test]
+fn kv_conservation_after_full_experiment() {
+    let online = conserve::workload::LoadGen::new(9, 3.0, 2.0).arrivals_until(45.0);
+    let cfg = EngineConfig::sim_a100_7b();
+    let clock = Clock::virtual_at(0);
+    let backend =
+        SimBackend::new(CostModel::a100_llama2_7b(), clock.clone(), cfg.sched.safepoint_layers);
+    let profile = LatencyProfile {
+        c: [1200.0, 96.0, 40.0, 0.385],
+    };
+    let mut events: Vec<Request> = online
+        .iter()
+        .enumerate()
+        .map(|(i, &t)| Request::new(i as u64 + 1, Class::Online, vec![], 1024, 64, t))
+        .collect();
+    for i in 0..200u64 {
+        events.push(Request::new(10_000 + i, Class::Offline, vec![], 2048, 128, 0));
+    }
+    let mut engine = ServingEngine::new(
+        cfg,
+        backend,
+        clock,
+        profile,
+        ArrivalSource::from_trace(events),
+    );
+    engine.run(45_000_000);
+    assert!(engine.kv.check_conservation(), "blocks leaked during serving");
+}
+
+#[test]
+fn percentile_matches_manual_p99() {
+    let mut v: Vec<f64> = (1..=1000).map(|i| i as f64).collect();
+    v.reverse();
+    assert_eq!(percentile(&v, 99.0), 990.0);
+}
+
+#[test]
+fn policies_parse_and_compare() {
+    assert_eq!("conserve".parse::<Policy>().unwrap(), Policy::ConServe);
+    assert_eq!("vllm++".parse::<Policy>().unwrap(), Policy::VllmPP);
+    assert_eq!("online-only".parse::<Policy>().unwrap(), Policy::OnlineOnly);
+    assert!("gpt".parse::<Policy>().is_err());
+    assert_eq!(Policy::ConServe.to_string(), "ConServe");
+}

