@@ -63,8 +63,8 @@ fn main() -> anyhow::Result<()> {
     let wall = t0.elapsed().as_secs_f64();
 
     println!("=== batch results ({n_jobs} jobs, {wall:.1}s wall) ===");
-    let mut ids: Vec<_> = engine.table.keys().copied().collect();
-    ids.sort();
+    let mut ids: Vec<_> = engine.table.ids().collect();
+    ids.sort_unstable();
     for rid in ids.iter().take(4) {
         let r = &engine.table[rid];
         println!(

@@ -78,8 +78,8 @@ fn main() -> anyhow::Result<()> {
 
     // 5. inspect results
     println!("\ncompletions:");
-    let mut ids: Vec<_> = engine.table.keys().copied().collect();
-    ids.sort();
+    let mut ids: Vec<_> = engine.table.ids().collect();
+    ids.sort_unstable();
     for id in ids {
         let r = &engine.table[&id];
         println!(

@@ -1,0 +1,218 @@
+//! `bench_sched_loop` — engine hot-loop throughput on a large synthetic
+//! on/off co-serving trace (the ISSUE-1 zero-allocation acceptance
+//! bench).
+//!
+//! Drives the full schedule→execute→commit loop on the simulated
+//! A100/Llama-2-7B testbed with `retain_finished(false)` (slab slots
+//! recycle; arena stays flat) and event capture off (streaming metrics
+//! only), then reports:
+//!
+//! * engine iterations/sec and processed tokens/sec (wall clock);
+//! * request-table lookup ns: slab arena vs the `HashMap` the seed used
+//!   (the measured component baseline);
+//! * windowed-timeseries build time: single-pass streaming histograms vs
+//!   the seed's per-window filter + sort (measured in-process on the
+//!   same sample set).
+//!
+//! Results are written to `BENCH_sched.json`. Scale with
+//! `SCHED_BENCH_REQS` (default 100_000; CI smoke uses a small value).
+
+use conserve::backend::{CostModel, SimBackend};
+use conserve::clock::Clock;
+use conserve::config::EngineConfig;
+use conserve::metrics::percentile;
+use conserve::profiler::LatencyProfile;
+use conserve::request::{Class, Request, RequestArena, RequestId};
+use conserve::server::{ArrivalSource, ServingEngine};
+use conserve::util::json::{num, obj, Json};
+use conserve::util::rng::Rng;
+use conserve::workload::trace::onoff_trace;
+use conserve::US_PER_SEC;
+use std::collections::HashMap;
+use std::time::Instant;
+
+fn main() {
+    let n_reqs: usize = std::env::var("SCHED_BENCH_REQS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(100_000);
+    let n_online = n_reqs * 9 / 10;
+    let n_offline = n_reqs - n_online;
+
+    // ---- build the trace: gamma on/off online arrivals + offline pool ----
+    let on_rate = 60.0; // sustainable on the simulated testbed at these lengths
+    let phase_s = 30.0;
+    let duration_s = 2.0 * n_online as f64 / on_rate;
+    let arrivals = onoff_trace(42, duration_s, phase_s, on_rate, 2.0);
+    let mut rng = Rng::new(7);
+    let mut events: Vec<Request> = arrivals
+        .iter()
+        .take(n_online)
+        .map(|&t| {
+            let input = rng.range_usize(64, 256);
+            let output = rng.range_usize(8, 24);
+            Request::new(0, Class::Online, vec![], input, output, t)
+        })
+        .collect();
+    for _ in 0..n_offline {
+        let input = rng.range_usize(512, 2048);
+        let output = rng.range_usize(32, 96);
+        events.push(Request::new(0, Class::Offline, vec![], input, output, 0));
+    }
+    let n_events = events.len();
+
+    // ---- run the engine, wall-clocked ----
+    let cfg = EngineConfig::sim_a100_7b();
+    let clock = Clock::virtual_at(0);
+    let backend = SimBackend::new(
+        CostModel::a100_llama2_7b(),
+        clock.clone(),
+        cfg.sched.safepoint_layers,
+    );
+    let profile = LatencyProfile {
+        c: [1200.0, 96.0, 40.0, 0.385],
+    };
+    let mut engine = ServingEngine::new(
+        cfg,
+        backend,
+        clock,
+        profile,
+        ArrivalSource::from_trace(events),
+    );
+    engine.set_retain_finished(false); // recycle slots: flat arena
+    engine.rec.set_capture_events(false); // streaming aggregates only
+
+    let until = ((duration_s * 4.0) * US_PER_SEC as f64) as u64;
+    let t0 = Instant::now();
+    let end = engine.run(until);
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let iters = engine.rec.engine_iters;
+    let processed = engine.rec.processed_token_count(None);
+    let generated = engine.rec.gen_token_count(None);
+    let finished = engine.rec.finished[0] + engine.rec.finished[1];
+    let iters_per_sec = iters as f64 / wall_s;
+    let tokens_per_sec = processed as f64 / wall_s;
+
+    println!("=== bench_sched_loop ({n_events} requests) ===");
+    println!("sim time            {:>12.1} s", end as f64 / 1e6);
+    println!("wall time           {:>12.2} s", wall_s);
+    println!("engine iterations   {iters:>12}");
+    println!("iterations/sec      {iters_per_sec:>12.0}");
+    println!("processed tokens    {processed:>12}");
+    println!("tokens/sec (wall)   {tokens_per_sec:>12.0}");
+    println!("generated tokens    {generated:>12}");
+    println!("finished requests   {finished:>12}");
+    println!(
+        "arena slots         {:>12}  (peak concurrency; flat despite {n_events} requests)",
+        engine.table.slot_count()
+    );
+    assert!(
+        engine.kv.check_conservation(),
+        "KV conservation must hold after the full run"
+    );
+
+    // ---- component baseline A: table lookup, arena vs HashMap ----
+    let mut arena = RequestArena::new();
+    let mut map: HashMap<RequestId, Request> = HashMap::new();
+    let mut ids = Vec::new();
+    for i in 0..4096u64 {
+        let id = arena.insert(Request::new(0, Class::Offline, vec![], 1024, 128, i));
+        map.insert(id, Request::new(id, Class::Offline, vec![], 1024, 128, i));
+        ids.push(id);
+    }
+    let lookup_ns = |f: &mut dyn FnMut(RequestId) -> usize| {
+        let reps = 2_000_000usize;
+        let mut acc = 0usize;
+        let mut k = 0usize;
+        let t = Instant::now();
+        for _ in 0..reps {
+            k = (k + 13) & 4095;
+            acc = acc.wrapping_add(f(ids[k]));
+        }
+        std::hint::black_box(acc);
+        t.elapsed().as_nanos() as f64 / reps as f64
+    };
+    let arena_ns = lookup_ns(&mut |id| arena.get(id).unwrap().ctx_len);
+    let hashmap_ns = lookup_ns(&mut |id| map.get(&id).unwrap().ctx_len);
+    println!("table lookup        {arena_ns:>9.1} ns arena vs {hashmap_ns:.1} ns hashmap ({:.2}x)",
+        hashmap_ns / arena_ns);
+
+    // ---- component baseline B: timeseries, streaming vs filter+sort ----
+    let mut rec = conserve::metrics::Recorder::new();
+    let mut rng = Rng::new(3);
+    let span = 600 * US_PER_SEC;
+    for _ in 0..200_000 {
+        let t = rng.range(0, span);
+        rec.record_first_token(t, Class::Online, 1_000 + rng.range(0, 2_000_000));
+    }
+    let window = 15 * US_PER_SEC;
+    let t = Instant::now();
+    let ts = rec.timeseries(Some(Class::Online), window, span);
+    let streaming_ms = t.elapsed().as_secs_f64() * 1e3;
+    // the seed algorithm: re-filter the event log per window, then a
+    // copy + sort percentile per window
+    let t = Instant::now();
+    let mut naive = Vec::new();
+    let mut start = 0u64;
+    while start < span {
+        let end_w = start + window;
+        let ttfts: Vec<f64> = rec
+            .ttfts
+            .iter()
+            .filter(|e| e.t >= start && e.t < end_w)
+            .map(|e| e.ttft_us as f64 / 1000.0)
+            .collect();
+        let mut sorted = ttfts.clone();
+        sorted.sort_by(f64::total_cmp);
+        let rank = ((99.0 / 100.0) * sorted.len() as f64).ceil() as usize;
+        let p99 = if sorted.is_empty() {
+            0.0
+        } else {
+            sorted[rank.clamp(1, sorted.len()) - 1]
+        };
+        naive.push((ttfts.len(), p99));
+        start = end_w;
+    }
+    let naive_ms = t.elapsed().as_secs_f64() * 1e3;
+    assert_eq!(ts.len(), naive.len());
+    for (s, (n, p99)) in ts.iter().zip(&naive) {
+        assert_eq!(s.n_ttft, *n);
+        let err = (s.p99_ttft_ms - p99).abs() / p99.max(1.0);
+        assert!(err < 0.016, "window p99 drifted: {} vs {p99}", s.p99_ttft_ms);
+    }
+    println!(
+        "timeseries build    {streaming_ms:>9.2} ms streaming vs {naive_ms:.2} ms filter+sort ({:.2}x)",
+        naive_ms / streaming_ms
+    );
+    let _ = percentile(&[1.0], 50.0); // keep the exact-percentile path linked
+
+    // ---- emit BENCH_sched.json ----
+    let json = obj(vec![
+        ("requests", num(n_events as f64)),
+        ("sim_duration_s", num(end as f64 / 1e6)),
+        ("wall_s", num(wall_s)),
+        ("engine_iterations", num(iters as f64)),
+        ("iters_per_sec", num(iters_per_sec)),
+        ("processed_tokens", num(processed as f64)),
+        ("tokens_per_sec_wall", num(tokens_per_sec)),
+        ("finished_requests", num(finished as f64)),
+        ("arena_slots", num(engine.table.slot_count() as f64)),
+        (
+            "baseline",
+            obj(vec![
+                ("table_lookup_ns_hashmap", num(hashmap_ns)),
+                ("table_lookup_ns_arena", num(arena_ns)),
+                ("table_lookup_speedup", num(hashmap_ns / arena_ns)),
+                ("timeseries_ms_filter_sort", num(naive_ms)),
+                ("timeseries_ms_streaming", num(streaming_ms)),
+                ("timeseries_speedup", num(naive_ms / streaming_ms)),
+            ]),
+        ),
+    ]);
+    let out_path = std::env::var("SCHED_BENCH_OUT").unwrap_or_else(|_| "BENCH_sched.json".into());
+    std::fs::write(&out_path, json.to_string()).expect("write BENCH_sched.json");
+    println!("\nwrote {out_path}");
+    let _ = Json::parse(&json.to_string()).expect("self-emitted json parses");
+    println!("bench_sched_loop OK");
+}

@@ -1,14 +1,16 @@
 //! L3 hot-path microbenchmarks (the §Perf criterion-style suite):
-//! scheduler step latency, KV block alloc/free, swap-engine ops, gamma
-//! sampling, and JSON parsing. Each reports ns/op over a fixed iteration
-//! budget; EXPERIMENTS.md §Perf records before/after for the
-//! optimization pass.
+//! scheduler step latency, request-table lookup (slab arena vs the
+//! HashMap it replaced), KV block alloc/free, swap-engine ops, streaming
+//! histogram record/quantile vs sort-based percentile, gamma sampling,
+//! and JSON parsing. Each reports ns/op over a fixed iteration budget;
+//! EXPERIMENTS.md §Perf records before/after for the optimization pass.
 
 use conserve::config::EngineConfig;
 use conserve::kvcache::{Direction, KvManager, SwapEngine};
+use conserve::metrics::{percentile, LogHistogram};
 use conserve::profiler::LatencyProfile;
-use conserve::request::{Class, Request};
-use conserve::scheduler::{Ctx, UnifiedScheduler};
+use conserve::request::{Class, Request, RequestArena, RequestId};
+use conserve::scheduler::{Ctx, ScheduleOutcome, UnifiedScheduler};
 use conserve::util::json::Json;
 use conserve::util::rng::Rng;
 use std::collections::HashMap;
@@ -41,13 +43,34 @@ fn main() {
         kv.register(1);
     });
 
+    // ---- request table: slab arena vs HashMap ----
+    let mut arena = RequestArena::new();
+    let mut map: HashMap<RequestId, Request> = HashMap::new();
+    let mut ids = Vec::new();
+    for i in 0..1024u64 {
+        let id = arena.insert(Request::new(0, Class::Offline, vec![], 1024, 128, i));
+        map.insert(id, Request::new(id, Class::Offline, vec![], 1024, 128, i));
+        ids.push(id);
+    }
+    let mut k = 0usize;
+    bench("table: arena lookup", 1_000_000, || {
+        k = (k + 7) & 1023;
+        std::hint::black_box(arena.get(ids[k]).unwrap().ctx_len);
+    });
+    k = 0;
+    bench("table: hashmap lookup (pre-arena baseline)", 1_000_000, || {
+        k = (k + 7) & 1023;
+        std::hint::black_box(map.get(&ids[k]).unwrap().ctx_len);
+    });
+
     // ---- swap engine enqueue/tick ----
     let mut swap = SwapEngine::new(8 << 20, 32 << 30);
+    let mut io = Vec::new();
     let mut t = 0u64;
     bench("swap: enqueue + drain one op", 100_000, || {
         swap.enqueue(t, 1, 0, Direction::D2H);
         t += 300;
-        let _ = swap.tick(t);
+        swap.tick_into(t, &mut io);
     });
 
     // ---- scheduler step on a loaded table ----
@@ -56,18 +79,19 @@ fn main() {
         c: [1200.0, 96.0, 40.0, 0.385],
     };
     let mut sched = UnifiedScheduler::new(cfg.sched.clone());
-    let mut table: HashMap<u64, Request> = HashMap::new();
+    let mut table = RequestArena::new();
     let mut kv2 = KvManager::new(cfg.mem.gpu_blocks, cfg.mem.host_blocks, 16);
-    for id in 0..128u64 {
-        let class = if id % 4 == 0 {
+    for i in 0..128u64 {
+        let class = if i % 4 == 0 {
             Class::Online
         } else {
             Class::Offline
         };
-        table.insert(id, Request::new(id, class, vec![], 1024, 128, 0));
+        let id = table.insert(Request::new(0, class, vec![], 1024, 128, 0));
         sched.enqueue(id, class);
     }
     let mut now = 0u64;
+    let mut out = ScheduleOutcome::default();
     bench("scheduler: full Algorithm-1 step (128 reqs)", 2_000, || {
         now += 50_000;
         let mut ctx = Ctx {
@@ -77,11 +101,11 @@ fn main() {
             now,
             max_model_len: 4096,
         };
-        let out = sched.schedule(&mut ctx);
+        sched.schedule(&mut ctx, &mut out);
         // commit so the state advances realistically
         for item in &out.plan.items {
             kv2.commit(item.req, item.n_tokens).unwrap();
-            let r = table.get_mut(&item.req).unwrap();
+            let r = table.get_mut(item.req).unwrap();
             r.ctx_len += item.n_tokens;
             if r.ctx_len == r.feed_target() {
                 r.generated += 1;
@@ -91,6 +115,22 @@ fn main() {
                 }
             }
         }
+    });
+
+    // ---- metrics: streaming histogram vs sort-based percentile ----
+    let mut rng = Rng::new(7);
+    let samples: Vec<f64> = (0..65_536).map(|_| rng.f64() * 2_000_000.0).collect();
+    let mut h = LogHistogram::new();
+    let mut si = 0usize;
+    bench("metrics: histogram record", 1_000_000, || {
+        si = (si + 1) & 65_535;
+        h.record(samples[si] as u64);
+    });
+    bench("metrics: histogram p99 query", 100_000, || {
+        std::hint::black_box(h.quantile(99.0));
+    });
+    bench("metrics: percentile (select_nth, 64k)", 200, || {
+        std::hint::black_box(percentile(&samples, 99.0));
     });
 
     // ---- workload sampling ----

@@ -12,7 +12,7 @@
 //!     plus measured preemption-detection latency, on the tiny model.
 
 use conserve::backend::{
-    CostModel, ExecBackend, IterationPlan, PjrtBackend, SafepointAction, SimBackend, WorkItem,
+    CostModel, ExecBackend, IterationPlan, SafepointAction, SimBackend, WorkItem,
 };
 use conserve::clock::Clock;
 use conserve::request::{Class, Phase};
@@ -69,6 +69,21 @@ fn main() {
         }
     }
 
+    real_backend_section();
+    println!("\ntab_safepoint OK");
+}
+
+/// Measured overhead on the real layered runtime — needs the `pjrt`
+/// cargo feature (xla crate) and built artifacts.
+#[cfg(not(feature = "pjrt"))]
+fn real_backend_section() {
+    println!("\n(real PJRT section skipped: built without the `pjrt` feature)");
+}
+
+#[cfg(feature = "pjrt")]
+fn real_backend_section() {
+    use conserve::backend::PjrtBackend;
+
     println!("\n=== real PJRT backend (tiny Llama, 4 layers) ===");
     match PjrtBackend::load("artifacts", 7, 1) {
         Err(e) => {
@@ -122,5 +137,4 @@ fn main() {
             );
         }
     }
-    println!("\ntab_safepoint OK");
 }

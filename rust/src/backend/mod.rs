@@ -15,6 +15,7 @@
 //! skipped, partial results discarded, and nothing is committed.
 
 pub mod costmodel;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 pub mod sim;
 
@@ -22,6 +23,7 @@ use crate::request::{Class, Phase, RequestId, TokenId};
 use crate::TimeUs;
 
 pub use costmodel::CostModel;
+#[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;
 pub use sim::SimBackend;
 
@@ -73,13 +75,21 @@ impl IterationPlan {
         self.items.iter().map(|i| i.ctx_len).sum()
     }
 
+    /// Shape summary in a single pass over the items (computed at least
+    /// twice per engine iteration — estimate + execute).
     pub fn summary(&self) -> PlanSummary {
-        PlanSummary {
-            prefill_tokens: self.prefill_tokens(),
-            decode_seqs: self.decode_seqs(),
-            ctx_tokens: self.ctx_tokens(),
+        let mut s = PlanSummary {
             n_seqs: self.items.len(),
+            ..PlanSummary::default()
+        };
+        for i in &self.items {
+            match i.phase {
+                Phase::Prefill => s.prefill_tokens += i.n_tokens,
+                Phase::Decode => s.decode_seqs += 1,
+            }
+            s.ctx_tokens += i.ctx_len;
         }
+        s
     }
 }
 
@@ -105,7 +115,9 @@ pub struct ExecOutcome {
     /// False if the iteration was aborted at a safepoint.
     pub completed: bool,
     /// Per item (plan order): sampled next token for items that finished
-    /// a phase step (None in sim mode / aborted iterations).
+    /// a phase step. The simulator returns an *empty* vec (it samples
+    /// nothing) so the steady-state loop allocates nothing; consumers
+    /// index with `.get(i)`.
     pub new_tokens: Vec<Option<TokenId>>,
     pub elapsed_us: u64,
     /// Safepoint checks performed (for §6.4.2 accounting).

@@ -65,7 +65,8 @@ impl ExecBackend for SimBackend {
                 if safepoint(self.clock.now()) == SafepointAction::Abort {
                     return Ok(ExecOutcome {
                         completed: false,
-                        new_tokens: vec![None; plan.items.len()],
+                        // sim samples no tokens; empty vec allocates nothing
+                        new_tokens: Vec::new(),
                         elapsed_us: self.clock.now() - start,
                         safepoint_checks: checks,
                     });
@@ -74,7 +75,7 @@ impl ExecBackend for SimBackend {
         }
         Ok(ExecOutcome {
             completed: true,
-            new_tokens: vec![None; plan.items.len()],
+            new_tokens: Vec::new(),
             elapsed_us: self.clock.now() - start,
             safepoint_checks: checks,
         })

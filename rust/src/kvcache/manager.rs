@@ -2,10 +2,15 @@
 //! tables, and the GPU<->host checkpoint mapping (§5: "keeping track of
 //! the mapping between each GPU KV block and its corresponding CPU KV
 //! block ... recorded in an extended field of the virtual page table").
+//!
+//! Sequences are keyed by the *slot* half of [`RequestId`] (the same
+//! dense index the request arena uses), so `grow`/`commit`/`seq` are
+//! plain array accesses with a generation check — no hashing on the
+//! schedule→execute→commit path. A lookup with a stale generation
+//! resolves to "unknown sequence", never to another request's KV.
 
 use super::BlockId;
-use crate::request::RequestId;
-use std::collections::HashMap;
+use crate::request::{rid_gen, rid_slot, RequestId};
 
 /// A pool of fixed-size blocks; O(1) alloc/free via a free list.
 #[derive(Debug)]
@@ -64,6 +69,12 @@ pub struct SeqKv {
     pub host: Vec<BlockCkpt>,
     /// Committed tokens (== the owning request's ctx_len).
     pub tokens: usize,
+    /// GPU-resident block count, maintained on alloc/evict so the victim
+    /// scan does not rescan the block table.
+    resident: usize,
+    /// Completed host checkpoints, maintained on finish/invalidate so
+    /// `fully_checkpointed` is O(1).
+    host_done: usize,
 }
 
 impl SeqKv {
@@ -72,18 +83,22 @@ impl SeqKv {
             gpu: Vec::new(),
             host: Vec::new(),
             tokens: 0,
+            resident: 0,
+            host_done: 0,
         }
     }
 
+    /// GPU-resident blocks (O(1): maintained counter).
     pub fn gpu_blocks(&self) -> usize {
-        self.gpu.iter().flatten().count()
+        self.resident
     }
 
     /// All logical blocks that hold committed tokens have valid host
-    /// copies (the "cheap to evict" condition of §4.4).
+    /// copies (the "cheap to evict" condition of §4.4). O(1): completed
+    /// checkpoints can only cover blocks holding committed tokens, so
+    /// counting them suffices.
     pub fn fully_checkpointed(&self, block_tokens: usize) -> bool {
-        let needed = self.tokens.div_ceil(block_tokens);
-        (0..needed).all(|i| matches!(self.host.get(i), Some(BlockCkpt::Done(_))))
+        self.host_done >= self.tokens.div_ceil(block_tokens)
     }
 
     /// Tokens covered by completed host checkpoints (prefix).
@@ -100,14 +115,34 @@ impl SeqKv {
     }
 }
 
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum KvError {
-    #[error("out of GPU KV blocks (need {need}, free {free})")]
     OutOfGpu { need: usize, free: usize },
-    #[error("out of host KV blocks")]
     OutOfHost,
-    #[error("unknown sequence {0}")]
     UnknownSeq(RequestId),
+}
+
+impl std::fmt::Display for KvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            KvError::OutOfGpu { need, free } => {
+                write!(f, "out of GPU KV blocks (need {need}, free {free})")
+            }
+            KvError::OutOfHost => write!(f, "out of host KV blocks"),
+            KvError::UnknownSeq(id) => write!(f, "unknown sequence {id}"),
+        }
+    }
+}
+
+impl std::error::Error for KvError {}
+
+/// One dense sequence-table entry. `generation` mirrors the request
+/// arena's slot generation; a lookup only hits when both halves of the
+/// id match.
+#[derive(Debug, Default)]
+struct SeqEntry {
+    generation: u32,
+    kv: Option<SeqKv>,
 }
 
 /// The KV-cache manager: pools + tables. All scheduler memory decisions
@@ -117,7 +152,7 @@ pub struct KvManager {
     pub block_tokens: usize,
     gpu: BlockPool,
     host: BlockPool,
-    seqs: HashMap<RequestId, SeqKv>,
+    seqs: Vec<SeqEntry>,
 }
 
 impl KvManager {
@@ -126,7 +161,7 @@ impl KvManager {
             block_tokens,
             gpu: BlockPool::new(gpu_blocks),
             host: BlockPool::new(host_blocks),
-            seqs: HashMap::new(),
+            seqs: Vec::new(),
         }
     }
 
@@ -146,30 +181,78 @@ impl KvManager {
         self.host.available()
     }
 
+    #[inline]
     pub fn seq(&self, id: RequestId) -> Option<&SeqKv> {
-        self.seqs.get(&id)
+        self.seqs
+            .get(rid_slot(id))
+            .filter(|e| e.generation == rid_gen(id))
+            .and_then(|e| e.kv.as_ref())
+    }
+
+    #[inline]
+    fn seq_mut(&mut self, id: RequestId) -> Option<&mut SeqKv> {
+        self.seqs
+            .get_mut(rid_slot(id))
+            .filter(|e| e.generation == rid_gen(id))
+            .and_then(|e| e.kv.as_mut())
+    }
+
+    /// Free every block a stale entry still owns (defensive: callers are
+    /// expected to `release` before a slot is recycled, but a leak here
+    /// would silently shrink the pools for the rest of the run).
+    fn purge_entry(gpu: &mut BlockPool, host: &mut BlockPool, kv: &mut SeqKv) {
+        for slot in kv.gpu.iter_mut() {
+            if let Some(b) = slot.take() {
+                gpu.free(b);
+            }
+        }
+        for c in kv.host.iter_mut() {
+            if let BlockCkpt::Done(hb) | BlockCkpt::InFlight(hb) = *c {
+                host.free(hb);
+            }
+            *c = BlockCkpt::None;
+        }
+        kv.resident = 0;
+        kv.host_done = 0;
     }
 
     pub fn register(&mut self, id: RequestId) {
-        self.seqs.entry(id).or_insert_with(SeqKv::new);
+        let slot = rid_slot(id);
+        let generation = rid_gen(id);
+        if self.seqs.len() <= slot {
+            self.seqs.resize_with(slot + 1, SeqEntry::default);
+        }
+        let entry = &mut self.seqs[slot];
+        if entry.generation != generation {
+            // recycled slot: drop whatever the stale occupant left behind
+            if let Some(kv) = entry.kv.as_mut() {
+                debug_assert!(
+                    kv.resident == 0 && kv.host_done == 0,
+                    "recycled slot {slot} still owns blocks"
+                );
+                Self::purge_entry(&mut self.gpu, &mut self.host, kv);
+            }
+            entry.generation = generation;
+            entry.kv = Some(SeqKv::new());
+        } else if entry.kv.is_none() {
+            entry.kv = Some(SeqKv::new());
+        }
     }
 
     /// GPU blocks that must be newly allocated for `id` to hold
     /// `new_total` committed tokens.
     pub fn blocks_needed(&self, id: RequestId, new_total: usize) -> usize {
-        let have = self
-            .seqs
-            .get(&id)
-            .map(|s| s.gpu.iter().flatten().count())
-            .unwrap_or(0);
+        let have = self.seq(id).map(|s| s.gpu_blocks()).unwrap_or(0);
         new_total.div_ceil(self.block_tokens).saturating_sub(have)
     }
 
     /// Grow the GPU block table of `id` to cover `new_total` tokens.
     /// Fails atomically (no partial allocation) if the pool is short.
     pub fn grow(&mut self, id: RequestId, new_total: usize) -> Result<(), KvError> {
-        let seq = self.seqs.get(&id).ok_or(KvError::UnknownSeq(id))?;
-        let needed_slots = new_total.div_ceil(self.block_tokens);
+        let block_tokens = self.block_tokens;
+        let gpu_avail = self.gpu.available();
+        let seq = self.seq(id).ok_or(KvError::UnknownSeq(id))?;
+        let needed_slots = new_total.div_ceil(block_tokens);
         // Fill gaps (evicted blocks being re-fetched keep their slot) and
         // extend; count first for atomicity.
         let mut need = 0;
@@ -179,13 +262,15 @@ impl KvManager {
                 _ => need += 1,
             }
         }
-        if need > self.gpu.available() {
+        if need > gpu_avail {
             return Err(KvError::OutOfGpu {
                 need,
-                free: self.gpu.available(),
+                free: gpu_avail,
             });
         }
-        let seq = self.seqs.get_mut(&id).unwrap();
+        let slot = rid_slot(id);
+        let entry = &mut self.seqs[slot];
+        let seq = entry.kv.as_mut().unwrap();
         for i in 0..needed_slots {
             let missing = !matches!(seq.gpu.get(i), Some(Some(_)));
             if missing {
@@ -198,6 +283,7 @@ impl KvManager {
                     }
                     seq.gpu.push(Some(b));
                 }
+                seq.resident += 1;
             }
             if seq.host.len() <= i {
                 seq.host.push(BlockCkpt::None);
@@ -212,7 +298,13 @@ impl KvManager {
     /// or the sequence stopped writing to it.
     pub fn commit(&mut self, id: RequestId, n: usize) -> Result<(), KvError> {
         let bt = self.block_tokens;
-        let seq = self.seqs.get_mut(&id).ok_or(KvError::UnknownSeq(id))?;
+        let slot = rid_slot(id);
+        let entry = self
+            .seqs
+            .get_mut(slot)
+            .filter(|e| e.generation == rid_gen(id))
+            .ok_or(KvError::UnknownSeq(id))?;
+        let seq = entry.kv.as_mut().ok_or(KvError::UnknownSeq(id))?;
         let first_dirty = seq.tokens / bt; // block receiving new tokens
         seq.tokens += n;
         debug_assert!(
@@ -222,9 +314,17 @@ impl KvManager {
         let last_dirty = (seq.tokens - 1) / bt;
         for i in first_dirty..=last_dirty {
             if let Some(c) = seq.host.get_mut(i) {
-                if let BlockCkpt::Done(hb) | BlockCkpt::InFlight(hb) = *c {
-                    self.host.free(hb);
-                    *c = BlockCkpt::None;
+                match *c {
+                    BlockCkpt::Done(hb) => {
+                        self.host.free(hb);
+                        *c = BlockCkpt::None;
+                        seq.host_done -= 1;
+                    }
+                    BlockCkpt::InFlight(hb) => {
+                        self.host.free(hb);
+                        *c = BlockCkpt::None;
+                    }
+                    BlockCkpt::None => {}
                 }
             }
         }
@@ -236,16 +336,22 @@ impl KvManager {
     /// is eligible too (the next commit invalidates it — §4.4 amortizes
     /// this as "checkpoint per generation iteration").
     pub fn checkpoint_candidates(&self, id: RequestId) -> Vec<usize> {
-        let Some(seq) = self.seqs.get(&id) else {
-            return Vec::new();
+        let mut out = Vec::new();
+        self.checkpoint_candidates_into(id, &mut out);
+        out
+    }
+
+    /// Allocation-free variant: clears and refills `out`.
+    pub fn checkpoint_candidates_into(&self, id: RequestId, out: &mut Vec<usize>) {
+        out.clear();
+        let Some(seq) = self.seq(id) else {
+            return;
         };
         let used = seq.tokens.div_ceil(self.block_tokens);
-        (0..used)
-            .filter(|&i| {
-                matches!(seq.gpu.get(i), Some(Some(_)))
-                    && matches!(seq.host.get(i), Some(BlockCkpt::None))
-            })
-            .collect()
+        out.extend((0..used).filter(|&i| {
+            matches!(seq.gpu.get(i), Some(Some(_)))
+                && matches!(seq.host.get(i), Some(BlockCkpt::None))
+        }));
     }
 
     /// Start a D2H checkpoint of logical block `idx`: allocates a host
@@ -256,7 +362,10 @@ impl KvManager {
         idx: usize,
     ) -> Result<(BlockId, BlockId), KvError> {
         let hb = self.host.alloc().ok_or(KvError::OutOfHost)?;
-        let seq = self.seqs.get_mut(&id).ok_or(KvError::UnknownSeq(id))?;
+        let Some(seq) = self.seq_mut(id) else {
+            self.host.free(hb);
+            return Err(KvError::UnknownSeq(id));
+        };
         let gb = seq.gpu[idx].expect("checkpointing evicted block");
         debug_assert_eq!(seq.host[idx], BlockCkpt::None);
         seq.host[idx] = BlockCkpt::InFlight(hb);
@@ -265,9 +374,10 @@ impl KvManager {
 
     /// D2H copy finished.
     pub fn finish_ckpt(&mut self, id: RequestId, idx: usize) {
-        if let Some(seq) = self.seqs.get_mut(&id) {
+        if let Some(seq) = self.seq_mut(id) {
             if let BlockCkpt::InFlight(hb) = seq.host[idx] {
                 seq.host[idx] = BlockCkpt::Done(hb);
+                seq.host_done += 1;
             }
         }
     }
@@ -277,49 +387,60 @@ impl KvManager {
     /// caller either has full checkpoints or accepts recompute. Returns
     /// the freed GPU block count.
     pub fn evict_gpu(&mut self, id: RequestId) -> usize {
-        let Some(seq) = self.seqs.get_mut(&id) else {
+        let slot = rid_slot(id);
+        let Some(entry) = self
+            .seqs
+            .get_mut(slot)
+            .filter(|e| e.generation == rid_gen(id))
+        else {
+            return 0;
+        };
+        let Some(seq) = entry.kv.as_mut() else {
             return 0;
         };
         let mut n = 0;
-        for slot in seq.gpu.iter_mut() {
-            if let Some(b) = slot.take() {
+        for s in seq.gpu.iter_mut() {
+            if let Some(b) = s.take() {
                 self.gpu.free(b);
                 n += 1;
             }
         }
+        seq.resident = 0;
         n
     }
 
     /// Drop everything (request finished/aborted or KV discarded).
     /// `keep_host=false` also releases checkpoints.
     pub fn release(&mut self, id: RequestId, keep_host: bool) {
-        let Some(mut seq) = self.seqs.remove(&id) else {
+        let slot = rid_slot(id);
+        let Some(entry) = self
+            .seqs
+            .get_mut(slot)
+            .filter(|e| e.generation == rid_gen(id))
+        else {
             return;
         };
-        for slot in seq.gpu.iter_mut() {
-            if let Some(b) = slot.take() {
+        let Some(seq) = entry.kv.as_mut() else {
+            return;
+        };
+        for s in seq.gpu.iter_mut() {
+            if let Some(b) = s.take() {
                 self.gpu.free(b);
             }
         }
-        if !keep_host {
-            for c in &seq.host {
-                if let BlockCkpt::Done(hb) | BlockCkpt::InFlight(hb) = c {
-                    self.host.free(*hb);
-                }
-            }
-        } else {
+        seq.resident = 0;
+        if keep_host {
             // sequence dropped to host residence: keep the table so a
             // later prefetch can restore it
-            let tokens = seq.tokens;
-            let host = seq.host.clone();
-            self.seqs.insert(
-                id,
-                SeqKv {
-                    gpu: vec![None; host.len()],
-                    host,
-                    tokens,
-                },
-            );
+        } else {
+            for c in seq.host.iter_mut() {
+                if let BlockCkpt::Done(hb) | BlockCkpt::InFlight(hb) = *c {
+                    self.host.free(hb);
+                }
+                *c = BlockCkpt::None;
+            }
+            seq.host_done = 0;
+            entry.kv = None;
         }
     }
 
@@ -334,44 +455,78 @@ impl KvManager {
     /// Blocks that must be prefetched (H2D) to resume `id`: logical
     /// indices with a host copy but no GPU copy, covering committed tokens.
     pub fn prefetch_candidates(&self, id: RequestId) -> Vec<(usize, BlockId)> {
-        let Some(seq) = self.seqs.get(&id) else {
-            return Vec::new();
+        let mut out = Vec::new();
+        self.prefetch_candidates_into(id, &mut out);
+        out
+    }
+
+    /// Allocation-free variant: clears and refills `out`.
+    pub fn prefetch_candidates_into(&self, id: RequestId, out: &mut Vec<(usize, BlockId)>) {
+        out.clear();
+        let Some(seq) = self.seq(id) else {
+            return;
+        };
+        let used = seq.tokens.div_ceil(self.block_tokens);
+        out.extend((0..used).filter_map(|i| {
+            match (seq.gpu.get(i), seq.host.get(i)) {
+                (Some(None), Some(BlockCkpt::Done(hb))) => Some((i, *hb)),
+                _ => None,
+            }
+        }));
+    }
+
+    /// Count of blocks still missing on the GPU that have a host copy to
+    /// restore from (the `prefetch_candidates` cardinality, without the
+    /// allocation).
+    pub fn missing_prefetch(&self, id: RequestId) -> usize {
+        let Some(seq) = self.seq(id) else {
+            return 0;
         };
         let used = seq.tokens.div_ceil(self.block_tokens);
         (0..used)
-            .filter_map(|i| match (seq.gpu.get(i), seq.host.get(i)) {
-                (Some(None), Some(BlockCkpt::Done(hb))) => Some((i, *hb)),
-                _ => None,
+            .filter(|&i| {
+                matches!(
+                    (seq.gpu.get(i), seq.host.get(i)),
+                    (Some(None), Some(BlockCkpt::Done(_)))
+                )
             })
-            .collect()
+            .count()
     }
 
     /// Allocate a GPU block for a prefetched logical block and return it.
     pub fn begin_prefetch(&mut self, id: RequestId, idx: usize) -> Result<BlockId, KvError> {
-        let gb = self.gpu.alloc().ok_or(KvError::OutOfGpu {
-            need: 1,
-            free: 0,
-        })?;
-        let seq = self.seqs.get_mut(&id).ok_or(KvError::UnknownSeq(id))?;
+        let gb = self.gpu.alloc().ok_or(KvError::OutOfGpu { need: 1, free: 0 })?;
+        let Some(seq) = self.seq_mut(id) else {
+            self.gpu.free(gb);
+            return Err(KvError::UnknownSeq(id));
+        };
         debug_assert!(seq.gpu[idx].is_none());
         seq.gpu[idx] = Some(gb);
+        seq.resident += 1;
         Ok(gb)
     }
 
     /// Invariant check used by property tests: every block is either free
-    /// or owned by exactly one sequence slot.
+    /// or owned by exactly one sequence slot, and the O(1) counters agree
+    /// with the block tables they summarize.
     pub fn check_conservation(&self) -> bool {
         let mut gpu_owned = 0usize;
         let mut host_owned = 0usize;
         let mut seen_gpu = std::collections::HashSet::new();
         let mut seen_host = std::collections::HashSet::new();
-        for seq in self.seqs.values() {
+        for seq in self.seqs.iter().filter_map(|e| e.kv.as_ref()) {
+            let mut resident = 0;
             for b in seq.gpu.iter().flatten() {
                 if !seen_gpu.insert(*b) {
                     return false; // double ownership
                 }
                 gpu_owned += 1;
+                resident += 1;
             }
+            if resident != seq.resident {
+                return false; // counter drift
+            }
+            let mut done = 0;
             for c in &seq.host {
                 if let BlockCkpt::Done(hb) | BlockCkpt::InFlight(hb) = c {
                     if !seen_host.insert(*hb) {
@@ -379,6 +534,12 @@ impl KvManager {
                     }
                     host_owned += 1;
                 }
+                if matches!(c, BlockCkpt::Done(_)) {
+                    done += 1;
+                }
+            }
+            if done != seq.host_done {
+                return false;
             }
         }
         gpu_owned + self.gpu.available() == self.gpu.total()
@@ -413,13 +574,7 @@ mod tests {
         let mut m = mgr();
         m.register(1);
         let err = m.grow(1, 16 * 9).unwrap_err();
-        assert_eq!(
-            err,
-            KvError::OutOfGpu {
-                need: 9,
-                free: 8
-            }
-        );
+        assert_eq!(err, KvError::OutOfGpu { need: 9, free: 8 });
         assert_eq!(m.gpu_free(), 8); // nothing leaked
         assert!(m.check_conservation());
     }
@@ -480,10 +635,12 @@ mod tests {
         assert_eq!(m.seq(1).unwrap().tokens, 32);
         let cands = m.prefetch_candidates(1);
         assert_eq!(cands.len(), 2);
+        assert_eq!(m.missing_prefetch(1), 2);
         for (i, _hb) in cands {
             m.begin_prefetch(1, i).unwrap();
         }
         assert_eq!(m.seq(1).unwrap().gpu_blocks(), 2);
+        assert_eq!(m.missing_prefetch(1), 0);
         assert!(m.check_conservation());
     }
 
@@ -512,6 +669,28 @@ mod tests {
         assert_eq!(m.prefetch_candidates(1).len(), 1);
         m.release(1, false);
         assert_eq!(m.host_free(), 16);
+        assert!(m.check_conservation());
+    }
+
+    #[test]
+    fn stale_generation_never_aliases() {
+        use crate::request::rid_pack;
+        let mut m = mgr();
+        let old = rid_pack(1, 0);
+        m.register(old);
+        m.grow(old, 16).unwrap();
+        m.commit(old, 16).unwrap();
+        m.release(old, false);
+        // slot 1 recycled under generation 1
+        let new = rid_pack(1, 1);
+        m.register(new);
+        m.grow(new, 32).unwrap();
+        m.commit(new, 32).unwrap();
+        // the stale id must not see (or mutate) the new occupant
+        assert!(m.seq(old).is_none());
+        assert_eq!(m.grow(old, 64), Err(KvError::UnknownSeq(old)));
+        assert_eq!(m.evict_gpu(old), 0);
+        assert_eq!(m.seq(new).unwrap().tokens, 32);
         assert!(m.check_conservation());
     }
 }

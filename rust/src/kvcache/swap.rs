@@ -105,6 +105,14 @@ impl SwapEngine {
     /// Pop all ops completed by `now` (FIFO per channel).
     pub fn tick(&mut self, now: TimeUs) -> Vec<SwapOp> {
         let mut done = Vec::new();
+        self.tick_into(now, &mut done);
+        done
+    }
+
+    /// Allocation-free variant of [`tick`](Self::tick): clears and refills
+    /// `done` (the engine reuses one buffer across iterations).
+    pub fn tick_into(&mut self, now: TimeUs, done: &mut Vec<SwapOp>) {
+        done.clear();
         for ch in [&mut self.d2h, &mut self.h2d] {
             while ch
                 .inflight
@@ -114,7 +122,12 @@ impl SwapEngine {
                 done.push(ch.inflight.pop_front().unwrap());
             }
         }
-        done
+    }
+
+    /// True when no transfer is in flight on either channel (fast path
+    /// for the engine's per-iteration I/O poll).
+    pub fn is_idle(&self) -> bool {
+        self.d2h.inflight.is_empty() && self.h2d.inflight.is_empty()
     }
 
     /// Duration of a *blocking* multi-block transfer (the vLLM swap-out
@@ -157,13 +170,14 @@ impl SwapEngine {
         }
     }
 
-    pub fn drop_request(&mut self, req: RequestId) -> Vec<SwapOp> {
-        let mut dropped = Vec::new();
+    /// Cancel all in-flight ops for a request; returns how many were
+    /// dropped (in-place retain — no allocation).
+    pub fn drop_request(&mut self, req: RequestId) -> usize {
+        let mut dropped = 0;
         for ch in [&mut self.d2h, &mut self.h2d] {
-            let (keep, drop): (VecDeque<_>, VecDeque<_>) =
-                ch.inflight.drain(..).partition(|op| op.req != req);
-            ch.inflight = keep;
-            dropped.extend(drop);
+            let before = ch.inflight.len();
+            ch.inflight.retain(|op| op.req != req);
+            dropped += before - ch.inflight.len();
         }
         dropped
     }
@@ -231,7 +245,7 @@ mod tests {
         e.enqueue(0, 2, 0, Direction::D2H);
         assert_eq!(e.inflight_for(1, Direction::D2H), 1);
         let dropped = e.drop_request(1);
-        assert_eq!(dropped.len(), 1);
+        assert_eq!(dropped, 1);
         assert_eq!(e.inflight_for(1, Direction::D2H), 0);
         assert_eq!(e.inflight_for(2, Direction::D2H), 1);
     }

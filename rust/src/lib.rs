@@ -13,13 +13,17 @@
 //!   prefetching, a preemptible layer-stepped execution engine, workload
 //!   generation, metrics, and baselines (`Online-Only`, `vLLM++`).
 //!
-//! Python never runs on the request path: the [`backend::PjrtBackend`]
-//! loads the AOT artifacts through the PJRT C API (`xla` crate) and serves
-//! requests end-to-end from Rust. A calibrated discrete-event backend
-//! ([`backend::SimBackend`]) models the paper's A100/Llama-2-7B testbed
-//! and regenerates every evaluation figure (see `rust/benches/`).
+//! Python never runs on the request path: the PJRT backend (cargo
+//! feature `pjrt`, requires the `xla` crate) loads the AOT artifacts
+//! through the PJRT C API and serves requests end-to-end from Rust. A
+//! calibrated discrete-event backend ([`backend::SimBackend`]) models
+//! the paper's A100/Llama-2-7B testbed and regenerates every evaluation
+//! figure (see `rust/benches/`) — the simulator and all policy machinery
+//! build dependency-light (`anyhow` only) with default features.
 //!
-//! Quickstart: `examples/quickstart.rs`; architecture: `DESIGN.md`.
+//! Quickstart: `examples/quickstart.rs`; architecture: `DESIGN.md`;
+//! hot-path design (slab arenas, scratch buffers, streaming metrics):
+//! `rust/PERF.md`.
 
 pub mod backend;
 pub mod clock;

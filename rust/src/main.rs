@@ -21,16 +21,9 @@
 //! ```
 
 use anyhow::{bail, Context, Result};
-use conserve::backend::PjrtBackend;
 use conserve::config::EngineConfig;
-use conserve::profiler::LatencyProfile;
 use conserve::report::{Report, SimExperiment};
-use conserve::request::{Class, Request};
-use conserve::runtime::tokenizer;
-use conserve::server::{ArrivalSource, ServingEngine};
-use conserve::util::rng::Rng;
 use conserve::workload::{self, Lengths};
-use conserve::US_PER_SEC;
 
 struct Args {
     flags: Vec<(String, String)>,
@@ -137,7 +130,26 @@ fn simulate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn serve(_args: &Args) -> Result<()> {
+    bail!("this binary was built without the `pjrt` feature; rebuild with --features pjrt")
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn profile(_args: &Args) -> Result<()> {
+    bail!("this binary was built without the `pjrt` feature; rebuild with --features pjrt")
+}
+
+#[cfg(feature = "pjrt")]
 fn serve(args: &Args) -> Result<()> {
+    use conserve::backend::PjrtBackend;
+    use conserve::profiler::LatencyProfile;
+    use conserve::request::{Class, Request};
+    use conserve::runtime::tokenizer;
+    use conserve::server::{ArrivalSource, ServingEngine};
+    use conserve::util::rng::Rng;
+    use conserve::US_PER_SEC;
+
     let mut cfg = EngineConfig::real_tiny();
     args.apply_sets(&mut cfg)?;
     let duration = args.get_f64("duration", 20.0)?;
@@ -193,7 +205,11 @@ fn serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn profile(args: &Args) -> Result<()> {
+    use conserve::backend::PjrtBackend;
+    use conserve::profiler::LatencyProfile;
+
     let artifacts = args.get("artifacts").unwrap_or("artifacts");
     let mut backend = PjrtBackend::load(artifacts, 7, 1)?;
     let profile = LatencyProfile::profile(&mut backend, 128, 8, 128)?;

@@ -1,0 +1,248 @@
+//! Fixed-bucket log-scale latency histogram: O(1) record, O(buckets)
+//! quantile, bounded relative error.
+//!
+//! Values (µs) are bucketed HDR-style: 64 exact buckets below 64, then
+//! 64 sub-buckets per power of two. The widest bucket spans `2^(e-6)`
+//! values at magnitude `2^e`, so any reported quantile is within
+//! `1/64 ≈ 1.6 %` of the true sample. The bucket array is fixed-size
+//! (3 776 entries, ~30 KB) and lazily allocated, so empty histograms —
+//! e.g. silent windows of a timeseries — cost nothing.
+
+/// Sub-bucket resolution: 2^6 = 64 sub-buckets per octave.
+const SUB_BITS: u32 = 6;
+const SUB: u64 = 1 << SUB_BITS;
+
+/// Largest index: `index_of(u64::MAX)` = (63-6)*64 + 127.
+pub const N_BUCKETS: usize = ((63 - SUB_BITS as usize) * SUB as usize) + 2 * SUB as usize;
+
+#[inline]
+fn index_of(v: u64) -> usize {
+    if v < SUB {
+        v as usize
+    } else {
+        let e = 63 - v.leading_zeros(); // floor(log2 v), >= SUB_BITS
+        let shift = e - SUB_BITS;
+        ((shift as u64 * SUB) + (v >> shift)) as usize
+    }
+}
+
+/// Midpoint of the bucket at `idx` (its representative value).
+#[inline]
+fn value_of(idx: usize) -> u64 {
+    if idx < SUB as usize {
+        idx as u64
+    } else {
+        let shift = (idx as u64 / SUB) - 1;
+        let mantissa = SUB + (idx as u64 % SUB);
+        (mantissa << shift) + ((1u64 << shift) >> 1)
+    }
+}
+
+/// Streaming log-scale histogram over `u64` microsecond samples.
+#[derive(Debug, Clone, Default)]
+pub struct LogHistogram {
+    /// Lazily sized to [`N_BUCKETS`] on first record.
+    counts: Vec<u64>,
+    total: u64,
+    sum: u64,
+    min: u64,
+    max: u64,
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// O(1): bump one bucket.
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        if self.counts.is_empty() {
+            self.counts = vec![0; N_BUCKETS];
+            self.min = v;
+            self.max = v;
+        } else {
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+        self.counts[index_of(v)] += 1;
+        self.total += 1;
+        self.sum = self.sum.saturating_add(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    /// Exact mean of the recorded samples (the running sum is exact).
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.total as f64
+        }
+    }
+
+    /// Nearest-rank quantile, `p` in [0, 100]. Returns the representative
+    /// value of the bucket holding the rank, clamped into the observed
+    /// [min, max] range; 0 for an empty histogram. O(buckets).
+    pub fn quantile(&self, p: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let rank = ((p / 100.0) * self.total as f64).ceil() as u64;
+        let rank = rank.clamp(1, self.total);
+        let mut cum = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return value_of(idx).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Samples recorded in buckets strictly above the bucket of `v`
+    /// (boundary-bucket samples count as "not above": resolution-bounded
+    /// approximation of `count(x > v)`).
+    pub fn count_above(&self, v: u64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let cut = index_of(v);
+        self.counts[cut + 1..].iter().sum()
+    }
+
+    pub fn clear(&mut self) {
+        self.counts.clear();
+        self.total = 0;
+        self.sum = 0;
+        self.min = 0;
+        self.max = 0;
+    }
+
+    pub fn merge(&mut self, other: &LogHistogram) {
+        if other.total == 0 {
+            return;
+        }
+        if self.counts.is_empty() {
+            self.counts = vec![0; N_BUCKETS];
+            self.min = other.min;
+            self.max = other.max;
+        } else {
+            self.min = self.min.min(other.min);
+            self.max = self.max.max(other.max);
+        }
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum = self.sum.saturating_add(other.sum);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_values_are_exact() {
+        let mut h = LogHistogram::new();
+        for v in 0..64u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 64);
+        assert_eq!(h.quantile(100.0), 63);
+        assert_eq!(h.quantile(0.0), 0);
+        // rank 32 -> value 31 (nearest rank, exact region)
+        assert_eq!(h.quantile(50.0), 31);
+    }
+
+    #[test]
+    fn index_is_monotone_and_in_range() {
+        let mut last = 0usize;
+        for v in 0..256u64 {
+            let idx = index_of(v);
+            assert!(idx >= last, "index not monotone at {v}");
+            last = idx;
+        }
+        for e in 8..64u32 {
+            for off in [0u64, 1, 3] {
+                let v = (1u64 << e) + (off << (e - 3));
+                let idx = index_of(v);
+                assert!(idx >= last, "index not monotone at {v}");
+                assert!(idx < N_BUCKETS, "index {idx} out of range at {v}");
+                last = idx;
+            }
+        }
+        assert!(index_of(u64::MAX) < N_BUCKETS);
+    }
+
+    #[test]
+    fn representative_within_bucket_error() {
+        for &v in &[100u64, 1_000, 65_536, 200_000, 1_500_000, u32::MAX as u64] {
+            let rep = value_of(index_of(v));
+            let err = (rep as f64 - v as f64).abs() / v as f64;
+            assert!(err <= 1.0 / 64.0 + 1e-9, "v={v} rep={rep} err={err}");
+        }
+    }
+
+    #[test]
+    fn quantile_tracks_distribution() {
+        let mut h = LogHistogram::new();
+        for i in 1..=10_000u64 {
+            h.record(i * 100); // 100 .. 1_000_000
+        }
+        let p50 = h.quantile(50.0) as f64;
+        let p99 = h.quantile(99.0) as f64;
+        assert!((p50 - 500_000.0).abs() / 500_000.0 < 0.02, "p50={p50}");
+        assert!((p99 - 990_000.0).abs() / 990_000.0 < 0.02, "p99={p99}");
+        assert_eq!(h.quantile(100.0), 1_000_000);
+        assert_eq!(h.mean(), 500_050.0);
+    }
+
+    #[test]
+    fn count_above_threshold() {
+        let mut h = LogHistogram::new();
+        for v in [90_000u64, 100_000, 200_000, 2_000_000] {
+            h.record(v);
+        }
+        assert_eq!(h.count_above(1_500_000), 1);
+        assert_eq!(h.count_above(u64::MAX - 1), 0);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        a.record(10);
+        b.record(1_000_000);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.quantile(100.0), 1_000_000);
+        let empty = LogHistogram::new();
+        a.merge(&empty);
+        assert_eq!(a.count(), 2);
+    }
+
+    #[test]
+    fn empty_histogram_is_cheap_and_sane() {
+        let h = LogHistogram::new();
+        assert_eq!(h.quantile(99.0), 0);
+        assert_eq!(h.count_above(0), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert!(h.is_empty());
+    }
+}

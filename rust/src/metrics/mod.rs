@@ -4,19 +4,35 @@
 //! Online quality is P99 TTFT (prefill latency incl. queueing) and P99
 //! TPOT (inter-token latency, paper footnote 2: per *decode step*, not
 //! per-request average). Offline quality is generated tokens/second.
+//!
+//! Recording is O(1) per event: latency samples stream into fixed-bucket
+//! log-scale histograms ([`hist::LogHistogram`]), so quantile queries are
+//! O(buckets) instead of copy+sort over the sample set, and the windowed
+//! timeseries is built in one pass over the event log instead of
+//! re-filtering it per window. Raw event capture can be disabled
+//! ([`Recorder::set_capture_events`]) for million-request traces where
+//! only the streaming aggregates are needed.
+
+pub mod hist;
 
 use crate::request::Class;
 use crate::{TimeUs, US_PER_SEC};
 
-/// Percentile over a sample set (nearest-rank on a sorted copy).
+pub use hist::LogHistogram;
+
+/// Percentile over a sample set (nearest-rank via quickselect — O(n),
+/// no full sort). NaN-safe: total order per `f64::total_cmp`, so NaNs
+/// sort last instead of panicking. Ad-hoc fallback for callers that
+/// don't go through the streaming histograms.
 pub fn percentile(samples: &[f64], p: f64) -> f64 {
     if samples.is_empty() {
         return 0.0;
     }
     let mut v: Vec<f64> = samples.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let rank = ((p / 100.0) * v.len() as f64).ceil() as usize;
-    v[rank.clamp(1, v.len()) - 1]
+    let k = rank.clamp(1, v.len()) - 1;
+    let (_, kth, _) = v.select_nth_unstable_by(k, f64::total_cmp);
+    *kth
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -44,8 +60,18 @@ pub struct ProcessedEvent {
     pub n: usize,
 }
 
-/// Append-only metrics recorder; analysis happens after the run.
-#[derive(Debug, Default)]
+#[inline]
+fn cidx(class: Class) -> usize {
+    match class {
+        Class::Online => 0,
+        Class::Offline => 1,
+    }
+}
+
+/// Streaming metrics recorder. Aggregates (histograms, totals) are
+/// maintained on record; the raw event log feeds post-run timeseries
+/// analysis and can be switched off for long traces.
+#[derive(Debug)]
 pub struct Recorder {
     pub ttfts: Vec<TtftEvent>,
     pub tokens: Vec<TokenEvent>,
@@ -57,38 +83,111 @@ pub struct Recorder {
     pub prefetch_blocks: u64,
     pub blocking_swap_us: u64,
     pub finished: [u64; 2], // [online, offline]
+    /// Engine loop iterations (scheduling steps) — hot-path throughput
+    /// denominator for `bench_sched_loop`.
+    pub engine_iters: u64,
+    capture_events: bool,
+    ttft_hist: [LogHistogram; 2],
+    tpot_hist: [LogHistogram; 2],
+    gen_tokens: [u64; 2],
+    processed_tokens: [u64; 2],
+}
+
+impl Default for Recorder {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl Recorder {
     pub fn new() -> Self {
-        Self::default()
+        Self {
+            ttfts: Vec::new(),
+            tokens: Vec::new(),
+            processed: Vec::new(),
+            preemptions: 0,
+            layer_aborts: 0,
+            recomputed_tokens: 0,
+            ckpt_blocks: 0,
+            prefetch_blocks: 0,
+            blocking_swap_us: 0,
+            finished: [0, 0],
+            engine_iters: 0,
+            capture_events: true,
+            ttft_hist: [LogHistogram::new(), LogHistogram::new()],
+            tpot_hist: [LogHistogram::new(), LogHistogram::new()],
+            gen_tokens: [0, 0],
+            processed_tokens: [0, 0],
+        }
+    }
+
+    /// Disable raw event capture (streaming aggregates only). Windowed
+    /// timeseries queries need the event log; overall percentiles,
+    /// means, counts and violation rates do not.
+    pub fn set_capture_events(&mut self, on: bool) {
+        self.capture_events = on;
     }
 
     pub fn record_first_token(&mut self, t: TimeUs, class: Class, ttft_us: u64) {
-        self.ttfts.push(TtftEvent { t, class, ttft_us });
-        self.tokens.push(TokenEvent {
-            t,
-            class,
-            tpot_us: None,
-        });
+        self.ttft_hist[cidx(class)].record(ttft_us);
+        self.gen_tokens[cidx(class)] += 1;
+        if self.capture_events {
+            self.ttfts.push(TtftEvent { t, class, ttft_us });
+            self.tokens.push(TokenEvent {
+                t,
+                class,
+                tpot_us: None,
+            });
+        }
     }
 
     pub fn record_token(&mut self, t: TimeUs, class: Class, gap_us: u64) {
-        self.tokens.push(TokenEvent {
-            t,
-            class,
-            tpot_us: Some(gap_us),
-        });
+        self.tpot_hist[cidx(class)].record(gap_us);
+        self.gen_tokens[cidx(class)] += 1;
+        if self.capture_events {
+            self.tokens.push(TokenEvent {
+                t,
+                class,
+                tpot_us: Some(gap_us),
+            });
+        }
     }
 
     pub fn record_processed(&mut self, t: TimeUs, class: Class, n: usize) {
         if n > 0 {
-            self.processed.push(ProcessedEvent { t, class, n });
+            self.processed_tokens[cidx(class)] += n as u64;
+            if self.capture_events {
+                self.processed.push(ProcessedEvent { t, class, n });
+            }
         }
     }
 
+    pub fn record_finished(&mut self, class: Class) {
+        self.finished[cidx(class)] += 1;
+    }
+
+    // ------------------------------------------------------------ queries
+
+    fn class_total(totals: &[u64; 2], class: Option<Class>) -> u64 {
+        match class {
+            Some(c) => totals[cidx(c)],
+            None => totals[0] + totals[1],
+        }
+    }
+
+    /// Generated tokens recorded for a class (streaming total — exact
+    /// even with event capture off).
+    pub fn gen_token_count(&self, class: Option<Class>) -> u64 {
+        Self::class_total(&self.gen_tokens, class)
+    }
+
+    /// Processed tokens recorded for a class (streaming total).
+    pub fn processed_token_count(&self, class: Option<Class>) -> u64 {
+        Self::class_total(&self.processed_tokens, class)
+    }
+
     /// Processed tokens/second over [from, to) (prefill + decode), the
-    /// "overall serving throughput" of Figures 5-8.
+    /// "overall serving throughput" of Figures 5-8. Scans the event log.
     pub fn processed_throughput(
         &self,
         class: Option<Class>,
@@ -108,50 +207,23 @@ impl Recorder {
         n as f64 * US_PER_SEC as f64 / (to - from) as f64
     }
 
-    pub fn record_finished(&mut self, class: Class) {
-        self.finished[match class {
-            Class::Online => 0,
-            Class::Offline => 1,
-        }] += 1;
-    }
-
-    // ------------------------------------------------------------ queries
-
-    fn ttft_ms_of(&self, class: Option<Class>) -> Vec<f64> {
-        self.ttfts
-            .iter()
-            .filter(|e| class.is_none_or(|c| e.class == c))
-            .map(|e| e.ttft_us as f64 / 1000.0)
-            .collect()
-    }
-
-    fn tpot_ms_of(&self, class: Option<Class>) -> Vec<f64> {
-        self.tokens
-            .iter()
-            .filter(|e| class.is_none_or(|c| e.class == c))
-            .filter_map(|e| e.tpot_us)
-            .map(|us| us as f64 / 1000.0)
-            .collect()
-    }
-
+    /// P99 TTFT in ms (streaming histogram; ≤1.6 % bucket error).
     pub fn p99_ttft_ms(&self, class: Class) -> f64 {
-        percentile(&self.ttft_ms_of(Some(class)), 99.0)
+        self.ttft_hist[cidx(class)].quantile(99.0) as f64 / 1000.0
     }
 
+    /// P99 TPOT in ms (streaming histogram; ≤1.6 % bucket error).
     pub fn p99_tpot_ms(&self, class: Class) -> f64 {
-        percentile(&self.tpot_ms_of(Some(class)), 99.0)
+        self.tpot_hist[cidx(class)].quantile(99.0) as f64 / 1000.0
     }
 
+    /// Mean TTFT in ms (exact: histograms keep an exact running sum).
     pub fn mean_ttft_ms(&self, class: Class) -> f64 {
-        let v = self.ttft_ms_of(Some(class));
-        if v.is_empty() {
-            0.0
-        } else {
-            v.iter().sum::<f64>() / v.len() as f64
-        }
+        self.ttft_hist[cidx(class)].mean() / 1000.0
     }
 
     /// Generated tokens per second over [from, to) for a class (or both).
+    /// Scans the event log.
     pub fn throughput(&self, class: Option<Class>, from: TimeUs, to: TimeUs) -> f64 {
         if to <= from {
             return 0.0;
@@ -167,46 +239,66 @@ impl Recorder {
 
     /// Windowed timeseries of (window_start_s, p99 TTFT ms, p99 TPOT ms,
     /// tokens/s) — the series Figures 5/6 plot.
-    pub fn timeseries(&self, class: Option<Class>, window: TimeUs, until: TimeUs) -> Vec<WindowStats> {
-        let mut out = Vec::new();
-        let mut start = 0;
-        while start < until {
-            let end = start + window;
-            let ttfts: Vec<f64> = self
-                .ttfts
-                .iter()
-                .filter(|e| e.t >= start && e.t < end)
-                .filter(|e| class.is_none_or(|c| e.class == c))
-                .map(|e| e.ttft_us as f64 / 1000.0)
-                .collect();
-            let tpots: Vec<f64> = self
-                .tokens
-                .iter()
-                .filter(|e| e.t >= start && e.t < end)
-                .filter(|e| class.is_none_or(|c| e.class == c))
-                .filter_map(|e| e.tpot_us)
-                .map(|us| us as f64 / 1000.0)
-                .collect();
-            out.push(WindowStats {
-                start_s: start as f64 / US_PER_SEC as f64,
-                p99_ttft_ms: percentile(&ttfts, 99.0),
-                p99_tpot_ms: percentile(&tpots, 99.0),
-                tokens_per_s: self.throughput(class, start, end),
-                processed_per_s: self.processed_throughput(class, start, end),
-                n_ttft: ttfts.len(),
-            });
-            start = end;
+    ///
+    /// Single pass over the event log: events are binned into per-window
+    /// histograms/counters, then each window's quantiles are read out.
+    /// O(n + windows·buckets), vs. the previous
+    /// O(windows·n + n·log n per window) filter-and-sort.
+    pub fn timeseries(
+        &self,
+        class: Option<Class>,
+        window: TimeUs,
+        until: TimeUs,
+    ) -> Vec<WindowStats> {
+        let window = window.max(1);
+        let n_windows = (until.div_ceil(window)) as usize;
+        let mut ttft_h = vec![LogHistogram::default(); n_windows];
+        let mut tpot_h = vec![LogHistogram::default(); n_windows];
+        let mut gen_count = vec![0u64; n_windows];
+        let mut proc_count = vec![0u64; n_windows];
+
+        let widx = |t: TimeUs| (t / window) as usize;
+        for e in &self.ttfts {
+            if e.t < until && class.is_none_or(|c| e.class == c) {
+                ttft_h[widx(e.t)].record(e.ttft_us);
+            }
         }
-        out
+        for e in &self.tokens {
+            if e.t < until && class.is_none_or(|c| e.class == c) {
+                let w = widx(e.t);
+                gen_count[w] += 1;
+                if let Some(gap) = e.tpot_us {
+                    tpot_h[w].record(gap);
+                }
+            }
+        }
+        for e in &self.processed {
+            if e.t < until && class.is_none_or(|c| e.class == c) {
+                proc_count[widx(e.t)] += e.n as u64;
+            }
+        }
+
+        let per_sec = US_PER_SEC as f64 / window as f64;
+        (0..n_windows)
+            .map(|w| WindowStats {
+                start_s: (w as u64 * window) as f64 / US_PER_SEC as f64,
+                p99_ttft_ms: ttft_h[w].quantile(99.0) as f64 / 1000.0,
+                p99_tpot_ms: tpot_h[w].quantile(99.0) as f64 / 1000.0,
+                tokens_per_s: gen_count[w] as f64 * per_sec,
+                processed_per_s: proc_count[w] as f64 * per_sec,
+                n_ttft: ttft_h[w].count() as usize,
+            })
+            .collect()
     }
 
-    /// Fraction of online TTFTs above the SLO.
+    /// Fraction of online TTFTs above the SLO (streaming histogram;
+    /// boundary-bucket samples resolve as "within SLO").
     pub fn ttft_violation_rate(&self, class: Class, slo_ms: f64) -> f64 {
-        let v = self.ttft_ms_of(Some(class));
-        if v.is_empty() {
+        let h = &self.ttft_hist[cidx(class)];
+        if h.is_empty() {
             return 0.0;
         }
-        v.iter().filter(|&&x| x > slo_ms).count() as f64 / v.len() as f64
+        h.count_above((slo_ms * 1000.0) as u64) as f64 / h.count() as f64
     }
 }
 
@@ -224,6 +316,10 @@ pub struct WindowStats {
 mod tests {
     use super::*;
 
+    fn close(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol * b.abs().max(1.0)
+    }
+
     #[test]
     fn percentile_nearest_rank() {
         let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
@@ -235,16 +331,28 @@ mod tests {
     }
 
     #[test]
+    fn percentile_tolerates_nan() {
+        // NaNs order last under total_cmp instead of panicking
+        let v = [3.0, f64::NAN, 1.0, 2.0];
+        assert_eq!(percentile(&v, 50.0), 2.0);
+        assert_eq!(percentile(&v, 1.0), 1.0);
+        assert!(percentile(&v, 100.0).is_nan());
+    }
+
+    #[test]
     fn ttft_and_tpot_split_by_class() {
         let mut r = Recorder::new();
         r.record_first_token(1_000_000, Class::Online, 200_000);
         r.record_first_token(2_000_000, Class::Offline, 9_000_000);
         r.record_token(2_100_000, Class::Online, 50_000);
         r.record_token(2_200_000, Class::Online, 60_000);
-        assert_eq!(r.p99_ttft_ms(Class::Online), 200.0);
-        assert_eq!(r.p99_ttft_ms(Class::Offline), 9000.0);
-        assert_eq!(r.p99_tpot_ms(Class::Online), 60.0);
+        // histogram quantiles are within 1/64 of the true value
+        assert!(close(r.p99_ttft_ms(Class::Online), 200.0, 0.016));
+        assert!(close(r.p99_ttft_ms(Class::Offline), 9000.0, 0.016));
+        assert!(close(r.p99_tpot_ms(Class::Online), 60.0, 0.016));
         assert_eq!(r.p99_tpot_ms(Class::Offline), 0.0);
+        assert_eq!(r.gen_token_count(Some(Class::Online)), 3);
+        assert_eq!(r.gen_token_count(None), 4);
     }
 
     #[test]
@@ -265,8 +373,59 @@ mod tests {
         r.record_first_token(1_500_000, Class::Online, 300_000);
         let ts = r.timeseries(Some(Class::Online), US_PER_SEC, 2 * US_PER_SEC);
         assert_eq!(ts.len(), 2);
-        assert_eq!(ts[0].p99_ttft_ms, 100.0);
-        assert_eq!(ts[1].p99_ttft_ms, 300.0);
+        assert!(close(ts[0].p99_ttft_ms, 100.0, 0.016));
+        assert!(close(ts[1].p99_ttft_ms, 300.0, 0.016));
+        assert_eq!(ts[0].n_ttft, 1);
+    }
+
+    #[test]
+    fn streaming_matches_event_scan() {
+        // the single-pass timeseries must agree with a per-window
+        // filter of the raw events on counts and (approximately) on p99
+        let mut r = Recorder::new();
+        let mut state = 12345u64;
+        let mut rng = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+            state >> 33
+        };
+        for _ in 0..5000 {
+            let t = rng() % 60_000_000;
+            let ttft = 1_000 + rng() % 2_000_000;
+            r.record_first_token(t, Class::Online, ttft);
+        }
+        let ts = r.timeseries(Some(Class::Online), 15_000_000, 60_000_000);
+        assert_eq!(ts.len(), 4);
+        for (w, s) in ts.iter().enumerate() {
+            let lo = w as u64 * 15_000_000;
+            let hi = lo + 15_000_000;
+            let samples: Vec<f64> = r
+                .ttfts
+                .iter()
+                .filter(|e| e.t >= lo && e.t < hi)
+                .map(|e| e.ttft_us as f64 / 1000.0)
+                .collect();
+            assert_eq!(s.n_ttft, samples.len());
+            let exact = percentile(&samples, 99.0);
+            assert!(
+                close(s.p99_ttft_ms, exact, 0.016),
+                "window {w}: {} vs {exact}",
+                s.p99_ttft_ms
+            );
+        }
+    }
+
+    #[test]
+    fn capture_off_keeps_streaming_aggregates() {
+        let mut r = Recorder::new();
+        r.set_capture_events(false);
+        r.record_first_token(1_000, Class::Online, 200_000);
+        r.record_token(2_000, Class::Online, 50_000);
+        r.record_processed(2_000, Class::Online, 512);
+        assert!(r.ttfts.is_empty() && r.tokens.is_empty() && r.processed.is_empty());
+        assert!(close(r.p99_ttft_ms(Class::Online), 200.0, 0.016));
+        assert!(close(r.mean_ttft_ms(Class::Online), 200.0, 1e-9));
+        assert_eq!(r.gen_token_count(None), 2);
+        assert_eq!(r.processed_token_count(None), 512);
     }
 
     #[test]

@@ -1,0 +1,231 @@
+//! Slab arena for live requests.
+//!
+//! The request table is the hottest data structure in the engine: every
+//! scheduling decision, KV accounting step and commit touches it, often
+//! several times per request per iteration. A `HashMap<RequestId,
+//! Request>` pays hashing + probing on each touch; this arena stores
+//! requests in a dense `Vec` and makes [`RequestId`] the index, so every
+//! lookup is one bounds-checked array access.
+//!
+//! Slots are recycled through a free list. Each slot carries a
+//! *generation* counter that is bumped on removal and baked into the ids
+//! it hands out (see [`rid_pack`]); a stale id whose generation no longer
+//! matches the slot resolves to `None` instead of aliasing the slot's
+//! next occupant. Slot 0 is reserved so that id 0 is never issued and can
+//! be used as a sentinel.
+
+use super::{rid_gen, rid_pack, rid_slot, Request, RequestId};
+
+#[derive(Debug, Default)]
+struct Slot {
+    generation: u32,
+    req: Option<Request>,
+}
+
+/// Vec-backed request slab with free-list recycling and generation-
+/// guarded ids.
+#[derive(Debug)]
+pub struct RequestArena {
+    slots: Vec<Slot>,
+    free: Vec<u32>,
+    live: usize,
+}
+
+impl Default for RequestArena {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RequestArena {
+    pub fn new() -> Self {
+        Self {
+            // slot 0 reserved: ids start at 1
+            slots: vec![Slot::default()],
+            free: Vec::new(),
+            live: 0,
+        }
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        let mut a = Self::new();
+        a.slots.reserve(n);
+        a
+    }
+
+    /// Insert a request, assigning (and writing into `req.id`) its arena
+    /// id. Recycled slots hand out a fresh generation.
+    pub fn insert(&mut self, mut req: Request) -> RequestId {
+        let slot = match self.free.pop() {
+            Some(s) => s as usize,
+            None => {
+                self.slots.push(Slot::default());
+                self.slots.len() - 1
+            }
+        };
+        let id = rid_pack(slot, self.slots[slot].generation);
+        req.id = id;
+        self.slots[slot].req = Some(req);
+        self.live += 1;
+        id
+    }
+
+    #[inline]
+    fn slot_of(&self, id: RequestId) -> Option<&Slot> {
+        self.slots
+            .get(rid_slot(id))
+            .filter(|s| s.generation == rid_gen(id))
+    }
+
+    #[inline]
+    pub fn get(&self, id: RequestId) -> Option<&Request> {
+        self.slot_of(id).and_then(|s| s.req.as_ref())
+    }
+
+    #[inline]
+    pub fn get_mut(&mut self, id: RequestId) -> Option<&mut Request> {
+        self.slots
+            .get_mut(rid_slot(id))
+            .filter(|s| s.generation == rid_gen(id))
+            .and_then(|s| s.req.as_mut())
+    }
+
+    #[inline]
+    pub fn contains(&self, id: RequestId) -> bool {
+        self.slot_of(id).is_some_and(|s| s.req.is_some())
+    }
+
+    /// Remove a request, recycling its slot under a bumped generation.
+    /// Stale ids (generation mismatch) are a no-op returning `None`.
+    pub fn remove(&mut self, id: RequestId) -> Option<Request> {
+        let slot = rid_slot(id);
+        let s = self.slots.get_mut(slot)?;
+        if s.generation != rid_gen(id) || s.req.is_none() {
+            return None;
+        }
+        let req = s.req.take();
+        s.generation = s.generation.wrapping_add(1);
+        self.free.push(slot as u32);
+        self.live -= 1;
+        req
+    }
+
+    /// Number of live requests.
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    /// Total slots ever allocated (arena footprint; includes free slots
+    /// and the reserved slot 0).
+    pub fn slot_count(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Iterate live `(id, request)` pairs in slot order (deterministic).
+    pub fn iter(&self) -> impl Iterator<Item = (RequestId, &Request)> {
+        self.slots
+            .iter()
+            .filter_map(|s| s.req.as_ref().map(|r| (r.id, r)))
+    }
+
+    /// Iterate live ids in slot order.
+    pub fn ids(&self) -> impl Iterator<Item = RequestId> + '_ {
+        self.iter().map(|(id, _)| id)
+    }
+
+    pub fn values(&self) -> impl Iterator<Item = &Request> {
+        self.slots.iter().filter_map(|s| s.req.as_ref())
+    }
+
+    pub fn values_mut(&mut self) -> impl Iterator<Item = &mut Request> {
+        self.slots.iter_mut().filter_map(|s| s.req.as_mut())
+    }
+}
+
+impl std::ops::Index<RequestId> for RequestArena {
+    type Output = Request;
+
+    fn index(&self, id: RequestId) -> &Request {
+        self.get(id).expect("stale or unknown request id")
+    }
+}
+
+impl std::ops::Index<&RequestId> for RequestArena {
+    type Output = Request;
+
+    fn index(&self, id: &RequestId) -> &Request {
+        self.get(*id).expect("stale or unknown request id")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::request::Class;
+
+    fn req() -> Request {
+        Request::new(0, Class::Online, vec![], 8, 2, 0)
+    }
+
+    #[test]
+    fn ids_start_at_one_and_are_dense() {
+        let mut a = RequestArena::new();
+        let i1 = a.insert(req());
+        let i2 = a.insert(req());
+        assert_eq!(i1, 1);
+        assert_eq!(i2, 2);
+        assert_eq!(a.len(), 2);
+        assert_eq!(a[i1].id, i1);
+    }
+
+    #[test]
+    fn removal_recycles_with_fresh_generation() {
+        let mut a = RequestArena::new();
+        let i1 = a.insert(req());
+        let i2 = a.insert(req());
+        assert!(a.remove(i1).is_some());
+        assert_eq!(a.len(), 1);
+        // stale id no longer resolves
+        assert!(a.get(i1).is_none());
+        assert!(!a.contains(i1));
+        assert!(a.remove(i1).is_none());
+        // slot reused under a new generation: same slot, different id
+        let i3 = a.insert(req());
+        assert_eq!(rid_slot(i3), rid_slot(i1));
+        assert_ne!(i3, i1);
+        assert_eq!(rid_gen(i3), rid_gen(i1) + 1);
+        // the stale id still misses after reuse
+        assert!(a.get(i1).is_none());
+        assert!(a.get(i3).is_some());
+        assert!(a.get(i2).is_some());
+    }
+
+    #[test]
+    fn iteration_is_slot_ordered_and_live_only() {
+        let mut a = RequestArena::new();
+        let i1 = a.insert(req());
+        let i2 = a.insert(req());
+        let i3 = a.insert(req());
+        a.remove(i2);
+        let ids: Vec<_> = a.ids().collect();
+        assert_eq!(ids, vec![i1, i3]);
+        assert_eq!(a.values().count(), 2);
+        assert_eq!(a.slot_count(), 4); // reserved slot 0 + 3
+    }
+
+    #[test]
+    fn get_mut_respects_generation() {
+        let mut a = RequestArena::new();
+        let i1 = a.insert(req());
+        a.get_mut(i1).unwrap().generated = 1;
+        assert_eq!(a[i1].generated, 1);
+        a.remove(i1);
+        let i2 = a.insert(req());
+        assert!(a.get_mut(i1).is_none());
+        assert_eq!(a[i2].generated, 0, "recycled slot must not leak state");
+    }
+}

@@ -7,9 +7,38 @@
 //! "priority queues with two priority levels ... users are not required
 //! to manually specify priorities").
 
+pub mod arena;
+
 use crate::TimeUs;
 
+pub use arena::RequestArena;
+
+/// Dense request handle: the low 32 bits are a slab *slot* index into
+/// [`RequestArena`] (and the KV manager's sequence table), the high 32
+/// bits are the slot's *generation* at insertion time. Slot recycling
+/// bumps the generation, so a stale id held after its request was removed
+/// can never alias the slot's next occupant — lookups with a mismatched
+/// generation simply miss.
 pub type RequestId = u64;
+
+/// Slot index of a request id (dense array key).
+#[inline]
+pub fn rid_slot(id: RequestId) -> usize {
+    (id & 0xffff_ffff) as usize
+}
+
+/// Generation counter of a request id.
+#[inline]
+pub fn rid_gen(id: RequestId) -> u32 {
+    (id >> 32) as u32
+}
+
+/// Pack a slot + generation into a request id.
+#[inline]
+pub fn rid_pack(slot: usize, generation: u32) -> RequestId {
+    ((generation as u64) << 32) | slot as u64
+}
+
 pub type TokenId = u16; // byte-level vocab (256) fits easily
 
 /// Priority class. Ordering: Online > Offline.
@@ -57,7 +86,14 @@ pub enum State {
 
 #[derive(Debug, Clone)]
 pub struct Request {
+    /// Engine handle: assigned by [`RequestArena::insert`] on admission
+    /// (the id passed to [`Request::new`] is provisional).
     pub id: RequestId,
+    /// The id this request was *submitted* under (trace id or
+    /// [`EngineClient`](crate::server::EngineClient) ticket), preserved
+    /// across arena re-keying so callers can correlate results with
+    /// submissions.
+    pub submitted_id: u64,
     pub class: Class,
     /// Prompt tokens (real path) — empty in pure-simulation experiments.
     pub prompt: Vec<TokenId>,
@@ -82,6 +118,9 @@ pub struct Request {
     /// §4.4 incremental checkpointing).
     pub ckpt_len: usize,
     pub first_token_at: Option<TimeUs>,
+    /// Time the most recent output token was emitted (TPOT bookkeeping —
+    /// kept inline so the engine needs no side table on the commit path).
+    pub last_token_at: Option<TimeUs>,
     pub finished_at: Option<TimeUs>,
     /// Number of times this request was preempted (any mechanism).
     pub preemptions: u32,
@@ -102,6 +141,7 @@ impl Request {
         debug_assert!(prompt.is_empty() || prompt.len() == prompt_len);
         Self {
             id,
+            submitted_id: id,
             class,
             prompt,
             prompt_len,
@@ -114,6 +154,7 @@ impl Request {
             generated: 0,
             ckpt_len: 0,
             first_token_at: None,
+            last_token_at: None,
             finished_at: None,
             preemptions: 0,
             recomputed_tokens: 0,

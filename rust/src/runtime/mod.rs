@@ -1,11 +1,18 @@
 //! Runtime support for the real serving path: AOT artifact loading
 //! (manifest, weights, HLO executables), the byte-level tokenizer, and
 //! token sampling.
+//!
+//! Artifact loading talks to the PJRT C API through the `xla` crate and
+//! is gated behind the `pjrt` cargo feature (the CI image does not
+//! vendor the crate); the tokenizer and sampler are dependency-free and
+//! always available.
 
+#[cfg(feature = "pjrt")]
 pub mod artifacts;
 pub mod sampler;
 pub mod tokenizer;
 
+#[cfg(feature = "pjrt")]
 pub use artifacts::{Artifacts, ModelDims};
 pub use sampler::Sampler;
 pub use tokenizer::{detokenize, tokenize};

@@ -9,6 +9,17 @@
 //!   swap-out/in (the Fig.-4b strawman), no running-batch preemption.
 //! * [`Policy::OnlineOnly`] — drops offline work entirely (the paper's
 //!   latency-optimal / zero-harvest baseline).
+//!
+//! ## Hot-path discipline
+//!
+//! `schedule` runs every engine iteration and is allocation-free in
+//! steady state: the request table is a slab arena (array indexing, no
+//! hashing), the KV manager is keyed by the same slot index, and every
+//! intermediate list (`run_order`, continuing sets, deferred resumes,
+//! candidate blocks) lives in a persistent scratch buffer reused across
+//! iterations. The caller owns the [`ScheduleOutcome`] and passes it back
+//! in each iteration, so plan/victim vectors recycle their capacity too.
+//! See `rust/PERF.md` for the invariants.
 
 pub mod budget;
 pub mod preempt;
@@ -16,10 +27,11 @@ pub mod preempt;
 use crate::backend::{IterationPlan, WorkItem};
 use crate::config::SchedConfig;
 use crate::kvcache::manager::{KvError, KvManager};
+use crate::kvcache::BlockId;
 use crate::profiler::LatencyProfile;
-use crate::request::{Class, KvResidence, Phase, Request, RequestId, State};
+use crate::request::{Class, KvResidence, Phase, Request, RequestArena, RequestId, State};
 use crate::TimeUs;
-use std::collections::{HashMap, VecDeque};
+use std::collections::VecDeque;
 use std::str::FromStr;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -52,7 +64,9 @@ impl std::fmt::Display for Policy {
     }
 }
 
-/// What the scheduler decided for one iteration.
+/// What the scheduler decided for one iteration. Owned by the caller and
+/// reused across iterations (`schedule` clears it on entry), so its
+/// vectors keep their capacity instead of reallocating per step.
 #[derive(Debug, Default)]
 pub struct ScheduleOutcome {
     pub plan: IterationPlan,
@@ -65,12 +79,32 @@ pub struct ScheduleOutcome {
     pub swapped_out: Vec<RequestId>,
     /// Requests swapped in with a blocking transfer (vLLM++ resume).
     pub swapped_in: Vec<RequestId>,
+    /// Requests flipped `Host -> Prefetching` this step. The engine
+    /// appends these to its prefetch watch list, so the per-iteration
+    /// prefetch pass never scans the whole request table.
+    pub prefetch_started: Vec<RequestId>,
     /// Total blocking transfer time charged to this iteration (µs).
     pub blocking_io_us: u64,
     /// Blocking I/O block count (metrics).
     pub blocking_io_blocks: usize,
     /// Prefill-token budget that applied to offline admission.
     pub token_budget: usize,
+}
+
+impl ScheduleOutcome {
+    /// Reset for the next iteration, retaining buffer capacity.
+    pub fn clear(&mut self) {
+        self.plan.items.clear();
+        self.plan.preemptible = false;
+        self.evicted.clear();
+        self.discarded.clear();
+        self.swapped_out.clear();
+        self.swapped_in.clear();
+        self.prefetch_started.clear();
+        self.blocking_io_us = 0;
+        self.blocking_io_blocks = 0;
+        self.token_budget = 0;
+    }
 }
 
 /// Result of one admission attempt.
@@ -106,10 +140,21 @@ pub struct UnifiedScheduler {
     online_q: VecDeque<RequestId>,
     offline_q: VecDeque<RequestId>,
     running: Vec<RequestId>,
+    // ---- persistent scratch (capacity reused across iterations) ----
+    /// Running set sorted for this iteration's passes.
+    scratch_order: Vec<RequestId>,
+    /// Continuing-prefill snapshot (rebuilt per class pass).
+    scratch_cont: Vec<RequestId>,
+    /// Resume-pending offline heads deferred this round.
+    scratch_deferred: Vec<RequestId>,
+    /// Checkpoint block indices (vLLM++ blocking swap-out path).
+    scratch_blk: Vec<usize>,
+    /// Prefetch candidates (blocking swap-in path).
+    scratch_pf: Vec<(usize, BlockId)>,
 }
 
 pub struct Ctx<'a> {
-    pub table: &'a mut HashMap<RequestId, Request>,
+    pub table: &'a mut RequestArena,
     pub kv: &'a mut KvManager,
     pub profile: &'a LatencyProfile,
     pub now: TimeUs,
@@ -123,6 +168,11 @@ impl UnifiedScheduler {
             online_q: VecDeque::new(),
             offline_q: VecDeque::new(),
             running: Vec::new(),
+            scratch_order: Vec::new(),
+            scratch_cont: Vec::new(),
+            scratch_deferred: Vec::new(),
+            scratch_blk: Vec::new(),
+            scratch_pf: Vec::new(),
         }
     }
 
@@ -169,31 +219,31 @@ impl UnifiedScheduler {
         &self.running
     }
 
-    pub fn has_work(&self, table: &HashMap<RequestId, Request>) -> bool {
+    pub fn has_work(&self, table: &RequestArena) -> bool {
         !self.online_q.is_empty()
             || !self.offline_q.is_empty()
             || self
                 .running
                 .iter()
-                .any(|id| table.get(id).is_some_and(|r| !r.is_done()))
+                .any(|&id| table.get(id).is_some_and(|r| !r.is_done()))
     }
 
     /// Oldest waiting online arrival (Alg. 2 input).
-    pub fn oldest_online_arrival(
-        &self,
-        table: &HashMap<RequestId, Request>,
-    ) -> Option<TimeUs> {
-        self.online_q.front().and_then(|id| table.get(id)).map(|r| r.arrival)
+    pub fn oldest_online_arrival(&self, table: &RequestArena) -> Option<TimeUs> {
+        self.online_q
+            .front()
+            .and_then(|&id| table.get(id))
+            .map(|r| r.arrival)
     }
 
     /// Shape of the waiting online work (Alg. 2 estimate input).
     pub fn online_queue_shape(
         &self,
-        table: &HashMap<RequestId, Request>,
+        table: &RequestArena,
         chunk: usize,
     ) -> crate::backend::PlanSummary {
         let mut prefill = 0;
-        for id in &self.online_q {
+        for &id in &self.online_q {
             if let Some(r) = table.get(id) {
                 prefill += r.remaining_feed().min(chunk);
             }
@@ -219,11 +269,11 @@ impl UnifiedScheduler {
     // over-budget offline request simply is not scheduled this iteration
     // (its KV stays; memory-pressure preemption is separate).
     // =====================================================================
-    pub fn schedule(&mut self, c: &mut Ctx) -> ScheduleOutcome {
-        let mut out = ScheduleOutcome::default();
+    pub fn schedule(&mut self, c: &mut Ctx, out: &mut ScheduleOutcome) {
+        out.clear();
 
         // Drop finished/aborted from the running set.
-        self.running.retain(|id| {
+        self.running.retain(|&id| {
             c.table
                 .get(id)
                 .is_some_and(|r| r.state == State::Running && !r.is_done())
@@ -234,18 +284,26 @@ impl UnifiedScheduler {
         let slo_ttft_us = self.cfg.slo.ttft_ms * 1000.0;
         let decode_cost = move |ctx: usize| coef[2] + coef[3] * ctx as f64;
 
-        let mut items: Vec<WorkItem> = Vec::new();
+        // Work on moved-out buffers so `&mut self` helper calls stay legal;
+        // every take is matched by a put-back at the end of this fn.
+        let mut items = std::mem::take(&mut out.plan.items);
+        let mut run_order = std::mem::take(&mut self.scratch_order);
+        let mut cont = std::mem::take(&mut self.scratch_cont);
+
         let mut est_us = coef[0]; // fixed iteration cost
         let mut tokens_used = 0usize;
-        let mut run_order: Vec<RequestId> = self.running.clone();
-        run_order.sort_by_key(|id| {
+        run_order.clear();
+        run_order.extend_from_slice(&self.running);
+        // unstable sort: allocation-free; the id tiebreak keeps victim and
+        // admission order fully deterministic
+        run_order.sort_unstable_by_key(|&id| {
             let r = &c.table[id];
-            (r.class == Class::Offline, r.arrival)
+            (r.class == Class::Offline, r.arrival, id)
         });
 
         // ---- 1. online decodes: unconditional (continuous batching) ----
         for &id in &run_order {
-            let r = &c.table[&id];
+            let r = &c.table[id];
             if r.class != Class::Online
                 || r.phase() != Phase::Decode
                 || r.residence != KvResidence::Gpu
@@ -256,10 +314,17 @@ impl UnifiedScheduler {
                 break;
             }
             let ctx_len = r.ctx_len;
-            if !self.ensure_blocks(c, &mut out, id, ctx_len + 1, &mut items, VictimMode::OnlineContinuing) {
+            if !self.ensure_blocks(
+                c,
+                out,
+                id,
+                ctx_len + 1,
+                &mut items,
+                VictimMode::OnlineContinuing,
+            ) {
                 continue; // no memory even after preemption
             }
-            let r = &c.table[&id];
+            let r = &c.table[id];
             est_us += decode_cost(r.ctx_len);
             tokens_used += 1;
             items.push(WorkItem {
@@ -268,7 +333,7 @@ impl UnifiedScheduler {
                 phase: Phase::Decode,
                 ctx_len: r.ctx_len,
                 n_tokens: 1,
-                tokens: r.feed_tokens(1),
+                tokens: feed_tokens_or_empty(r, 1),
             });
         }
 
@@ -295,23 +360,30 @@ impl UnifiedScheduler {
         let mut reserved_online: usize = self
             .running
             .iter()
-            .filter_map(|id| c.table.get(id))
+            .filter_map(|&id| c.table.get(id))
             .filter(|r| r.class == Class::Online)
             .map(|r| r.total_len().div_ceil(bt))
             .sum();
         let online_capacity = (c.kv.gpu_total() * 95) / 100;
-        let continuing: Vec<RequestId> = run_order
-            .iter()
-            .copied()
-            .filter(|id| {
-                let r = &c.table[id];
-                r.class == Class::Online
-                    && r.phase() == Phase::Prefill
-                    && r.residence == KvResidence::Gpu
-            })
-            .collect();
-        for id in continuing {
-            self.admit(c, &mut out, id, online_budget_us, &mut est_us, &mut tokens_used, &mut items, VictimMode::OnlineContinuing);
+        cont.clear();
+        cont.extend(run_order.iter().copied().filter(|&id| {
+            let r = &c.table[id];
+            r.class == Class::Online
+                && r.phase() == Phase::Prefill
+                && r.residence == KvResidence::Gpu
+        }));
+        for i in 0..cont.len() {
+            let id = cont[i];
+            self.admit(
+                c,
+                out,
+                id,
+                online_budget_us,
+                &mut est_us,
+                &mut tokens_used,
+                &mut items,
+                VictimMode::OnlineContinuing,
+            );
         }
         while let Some(&id) = self.online_q.front() {
             if items.len() >= self.cfg.max_batch_reqs
@@ -329,7 +401,7 @@ impl UnifiedScheduler {
                 self.online_q.push_front(id);
                 break;
             }
-            let need = c.table[&id].total_len().div_ceil(bt);
+            let need = c.table[id].total_len().div_ceil(bt);
             if reserved_online + need > online_capacity {
                 // no capacity headroom: wait in the queue
                 self.online_q.push_front(id);
@@ -339,15 +411,24 @@ impl UnifiedScheduler {
             // (Discarded -> recompute, Host -> prefetch / blocking swap-in).
             // Strict FIFO: a resume-pending head blocks the queue — this
             // bounds the number of concurrently-prefetching requests.
-            if !self.make_resumable(c, &mut out, id) {
+            if !self.make_resumable(c, out, id) {
                 self.online_q.push_front(id);
                 break;
             }
             c.kv.register(id);
-            let res = self.admit(c, &mut out, id, online_budget_us, &mut est_us, &mut tokens_used, &mut items, VictimMode::OnlineAdmission);
+            let res = self.admit(
+                c,
+                out,
+                id,
+                online_budget_us,
+                &mut est_us,
+                &mut tokens_used,
+                &mut items,
+                VictimMode::OnlineAdmission,
+            );
             if res == Admit::Planned {
                 reserved_online += need;
-                let r = c.table.get_mut(&id).unwrap();
+                let r = c.table.get_mut(id).unwrap();
                 r.state = State::Running;
                 if !self.running.contains(&id) {
                     self.running.push(id);
@@ -382,7 +463,7 @@ impl UnifiedScheduler {
             // running offline decodes — admitted only within the budget
             // remainder (over-budget offline is preempted from the batch)
             for &id in &run_order {
-                let r = &c.table[&id];
+                let r = &c.table[id];
                 if r.class != Class::Offline
                     || r.phase() != Phase::Decode
                     || r.residence != KvResidence::Gpu
@@ -399,10 +480,17 @@ impl UnifiedScheduler {
                     continue; // paused this iteration (budget preemption)
                 }
                 let ctx_len = r.ctx_len;
-                if !self.ensure_blocks(c, &mut out, id, ctx_len + 1, &mut items, VictimMode::OfflineContinuing) {
+                if !self.ensure_blocks(
+                    c,
+                    out,
+                    id,
+                    ctx_len + 1,
+                    &mut items,
+                    VictimMode::OfflineContinuing,
+                ) {
                     continue;
                 }
-                let r = &c.table[&id];
+                let r = &c.table[id];
                 est_us += cost;
                 tokens_used += 1;
                 items.push(WorkItem {
@@ -411,23 +499,30 @@ impl UnifiedScheduler {
                     phase: Phase::Decode,
                     ctx_len: r.ctx_len,
                     n_tokens: 1,
-                    tokens: r.feed_tokens(1),
+                    tokens: feed_tokens_or_empty(r, 1),
                 });
             }
 
             // continuing offline prefills
-            let continuing: Vec<RequestId> = run_order
-                .iter()
-                .copied()
-                .filter(|id| {
-                    let r = &c.table[id];
-                    r.class == Class::Offline
-                        && r.phase() == Phase::Prefill
-                        && r.residence == KvResidence::Gpu
-                })
-                .collect();
-            for id in continuing {
-                self.admit(c, &mut out, id, offline_budget_us, &mut est_us, &mut tokens_used, &mut items, VictimMode::OfflineContinuing);
+            cont.clear();
+            cont.extend(run_order.iter().copied().filter(|&id| {
+                let r = &c.table[id];
+                r.class == Class::Offline
+                    && r.phase() == Phase::Prefill
+                    && r.residence == KvResidence::Gpu
+            }));
+            for i in 0..cont.len() {
+                let id = cont[i];
+                self.admit(
+                    c,
+                    out,
+                    id,
+                    offline_budget_us,
+                    &mut est_us,
+                    &mut tokens_used,
+                    &mut items,
+                    VictimMode::OfflineContinuing,
+                );
             }
 
             // new / resuming offline work. Near-FIFO with a bounded skip
@@ -437,7 +532,8 @@ impl UnifiedScheduler {
             // requests may be in that state, so prefetch fan-out cannot
             // fill the GPU pool with half-restored KV nothing can evict.
             const MAX_HEAD_SKIPS: usize = 4;
-            let mut deferred: Vec<RequestId> = Vec::new();
+            let mut deferred = std::mem::take(&mut self.scratch_deferred);
+            deferred.clear();
             while let Some(&id) = self.offline_q.front() {
                 if items.len() >= self.cfg.max_batch_reqs
                     || tokens_used >= self.cfg.max_batch_tokens
@@ -449,7 +545,7 @@ impl UnifiedScheduler {
                 let victim_this_round = out.evicted.contains(&id)
                     || out.discarded.contains(&id)
                     || out.swapped_out.contains(&id);
-                if victim_this_round || !self.make_resumable(c, &mut out, id) {
+                if victim_this_round || !self.make_resumable(c, out, id) {
                     deferred.push(id);
                     if deferred.len() >= MAX_HEAD_SKIPS {
                         break;
@@ -457,14 +553,23 @@ impl UnifiedScheduler {
                     continue;
                 }
                 c.kv.register(id);
-                let res = self.admit(c, &mut out, id, offline_budget_us, &mut est_us, &mut tokens_used, &mut items, VictimMode::OfflineAdmission);
+                let res = self.admit(
+                    c,
+                    out,
+                    id,
+                    offline_budget_us,
+                    &mut est_us,
+                    &mut tokens_used,
+                    &mut items,
+                    VictimMode::OfflineAdmission,
+                );
                 let has_blocks = c.kv.seq(id).is_some_and(|s| s.gpu_blocks() > 0);
                 if res == Admit::Planned || has_blocks {
                     // admitted, or resumed-with-resident-blocks (paused).
                     // Either way it moves to the running set (a request is
                     // never in the queue and the running set at once) and
                     // is visible to victim selection / continuing passes.
-                    let r = c.table.get_mut(&id).unwrap();
+                    let r = c.table.get_mut(id).unwrap();
                     r.state = State::Running;
                     if !self.running.contains(&id) {
                         self.running.push(id);
@@ -477,23 +582,23 @@ impl UnifiedScheduler {
             }
             // deferred resume-pending requests return to the queue head
             // (in order) so they stay first in line
-            for id in deferred.into_iter().rev() {
+            for &id in deferred.iter().rev() {
                 self.offline_q.push_front(id);
             }
+            self.scratch_deferred = deferred;
         }
 
         // ---- 4. preemptible iff pure offline (§4.3) ----
         let pure_offline =
             !items.is_empty() && items.iter().all(|i| i.class == Class::Offline);
-        out.plan = IterationPlan {
-            items,
-            // safepoint instrumentation is ConServe's mechanism; the
-            // baselines never arm it regardless of flag combinations
-            preemptible: pure_offline
-                && self.cfg.layerwise_preempt
-                && self.cfg.policy == Policy::ConServe,
-        };
-        out
+        out.plan.items = items;
+        // safepoint instrumentation is ConServe's mechanism; the
+        // baselines never arm it regardless of flag combinations
+        out.plan.preemptible = pure_offline
+            && self.cfg.layerwise_preempt
+            && self.cfg.policy == Policy::ConServe;
+        self.scratch_order = run_order;
+        self.scratch_cont = cont;
     }
 
     /// Admit the next work of `id` (prefill chunk or decode step) within
@@ -511,7 +616,7 @@ impl UnifiedScheduler {
         mode: VictimMode,
     ) -> Admit {
         let coef = c.profile.c;
-        let r = &c.table[&id];
+        let r = &c.table[id];
         if r.residence != KvResidence::Gpu {
             // preempted earlier in this same scheduling round (continuing
             // lists are snapshots); scheduling it would undo the preemption
@@ -528,7 +633,7 @@ impl UnifiedScheduler {
             if !self.ensure_blocks(c, out, id, ctx_len + 1, items, mode) {
                 return Admit::NoMemory;
             }
-            let r = &c.table[&id];
+            let r = &c.table[id];
             *est_us += cost;
             *tokens_used += 1;
             items.push(WorkItem {
@@ -537,7 +642,7 @@ impl UnifiedScheduler {
                 phase: Phase::Decode,
                 ctx_len: r.ctx_len,
                 n_tokens: 1,
-                tokens: r.feed_tokens(1),
+                tokens: feed_tokens_or_empty(r, 1),
             });
             return Admit::Planned;
         }
@@ -561,7 +666,7 @@ impl UnifiedScheduler {
         if !self.ensure_blocks(c, out, id, ctx_len + n, items, mode) {
             return Admit::NoMemory;
         }
-        let r = &c.table[&id];
+        let r = &c.table[id];
         *est_us += coef[1] * n as f64;
         *tokens_used += n;
         items.push(WorkItem {
@@ -570,7 +675,7 @@ impl UnifiedScheduler {
             phase: Phase::Prefill,
             ctx_len: r.ctx_len,
             n_tokens: n,
-            tokens: r.feed_tokens(n),
+            tokens: feed_tokens_or_empty(r, n),
         });
         Admit::Planned
     }
@@ -680,7 +785,7 @@ impl UnifiedScheduler {
         let bt = c.kv.block_tokens;
         let mut best: Option<(bool, usize, std::cmp::Reverse<RequestId>)> = None;
         for &rid in &self.running {
-            let Some(r) = c.table.get(&rid) else { continue };
+            let Some(r) = c.table.get(rid) else { continue };
             if rid == requester
                 || r.class != Class::Offline
                 || r.residence != KvResidence::Gpu
@@ -701,7 +806,7 @@ impl UnifiedScheduler {
             }
             // prefer checkpointed; among equals, largest footprint; break
             // remaining ties by id so victim choice is deterministic
-            // regardless of hash-map iteration order
+            // regardless of running-set order
             let cand = (ckpt, resident, std::cmp::Reverse(rid));
             best = match best {
                 None => Some(cand),
@@ -719,12 +824,12 @@ impl UnifiedScheduler {
             .iter()
             .copied()
             .filter(|&rid| rid != requester)
-            .filter(|rid| {
+            .filter(|&rid| {
                 let Some(r) = c.table.get(rid) else { return false };
                 r.residence == KvResidence::Gpu
-                    && c.kv.seq(*rid).is_some_and(|s| s.gpu_blocks() > 0)
+                    && c.kv.seq(rid).is_some_and(|s| s.gpu_blocks() > 0)
             })
-            .max_by_key(|rid| (c.table[rid].arrival, *rid))
+            .max_by_key(|&rid| (c.table[rid].arrival, rid))
     }
 
     fn pick_online_victim(&self, c: &Ctx, requester: RequestId) -> Option<RequestId> {
@@ -733,13 +838,13 @@ impl UnifiedScheduler {
             .iter()
             .copied()
             .filter(|&rid| rid != requester)
-            .filter(|rid| {
+            .filter(|&rid| {
                 let r = &c.table[rid];
                 r.class == Class::Online
                     && r.residence == KvResidence::Gpu
-                    && c.kv.seq(*rid).is_some_and(|s| s.gpu_blocks() > 0)
+                    && c.kv.seq(rid).is_some_and(|s| s.gpu_blocks() > 0)
             })
-            .max_by_key(|rid| c.table[rid].arrival)
+            .max_by_key(|&rid| c.table[rid].arrival)
     }
 
     /// Preempt `victim` during scheduling: release its GPU memory via the
@@ -757,7 +862,7 @@ impl UnifiedScheduler {
 
         let bt = c.kv.block_tokens;
         let fully_ckpt = c.kv.seq(victim).is_some_and(|s| s.fully_checkpointed(bt));
-        let r = c.table.get_mut(&victim).unwrap();
+        let r = c.table.get_mut(victim).unwrap();
         r.state = State::Preempted;
         r.preemptions += 1;
 
@@ -771,28 +876,30 @@ impl UnifiedScheduler {
             // blocking swap-out of every resident block (Fig. 4b)
             let seq = c.kv.seq(victim).unwrap();
             let blocks = seq.gpu_blocks();
-            let mut idxs = c.kv.checkpoint_candidates(victim);
-            for i in idxs.drain(..) {
+            let mut idxs = std::mem::take(&mut self.scratch_blk);
+            c.kv.checkpoint_candidates_into(victim, &mut idxs);
+            for &i in &idxs {
                 if c.kv.begin_ckpt(victim, i).is_ok() {
                     c.kv.finish_ckpt(victim, i);
                 }
             }
+            self.scratch_blk = idxs;
             c.kv.evict_gpu(victim);
             r.residence = KvResidence::Host;
             out.swapped_out.push(victim);
             out.blocking_io_blocks += blocks;
         } else {
             // ConServe extreme case (§4.4): discard and recompute later
-            let lost = c.table[&victim].ctx_len;
+            let lost = c.table[victim].ctx_len;
             c.kv.discard(victim);
-            let r = c.table.get_mut(&victim).unwrap();
+            let r = c.table.get_mut(victim).unwrap();
             r.recomputed_tokens += lost;
             r.ctx_len = 0;
             r.ckpt_len = 0;
             r.residence = KvResidence::Discarded;
             out.discarded.push(victim);
         }
-        if c.table[&victim].class == Class::Offline {
+        if c.table[victim].class == Class::Offline {
             self.requeue_preempted(victim);
         } else {
             self.online_q.push_front(victim);
@@ -807,10 +914,10 @@ impl UnifiedScheduler {
         out: &mut ScheduleOutcome,
         id: RequestId,
     ) -> bool {
-        let r = &c.table[&id];
+        let r = &c.table[id];
         match r.residence {
             KvResidence::Gpu | KvResidence::Discarded => {
-                let r = c.table.get_mut(&id).unwrap();
+                let r = c.table.get_mut(id).unwrap();
                 r.residence = KvResidence::Gpu;
                 true
             }
@@ -823,8 +930,9 @@ impl UnifiedScheduler {
                 if self.cfg.prefetch && self.cfg.policy == Policy::ConServe {
                     // background prefetch: the engine issues the H2D ops;
                     // not runnable yet
-                    let r = c.table.get_mut(&id).unwrap();
+                    let r = c.table.get_mut(id).unwrap();
                     r.residence = KvResidence::Prefetching;
+                    out.prefetch_started.push(id);
                     false
                 } else {
                     // blocking swap-in (vLLM++ and no-prefetch ablation).
@@ -832,26 +940,29 @@ impl UnifiedScheduler {
                     // under sustained pressure the same blocks ping-pong
                     // across PCIe — exactly the swap thrash the paper's
                     // Fig. 4b/§6.2 attributes to this baseline.
-                    let cands = c.kv.prefetch_candidates(id);
+                    let mut cands = std::mem::take(&mut self.scratch_pf);
+                    c.kv.prefetch_candidates_into(id, &mut cands);
                     let watermark = (c.kv.gpu_total() / 100).max(1);
                     if c.kv.gpu_free() < cands.len() + watermark {
+                        self.scratch_pf = cands;
                         return false;
                     }
                     let n = cands.len();
                     let mut ok = true;
-                    for (idx, _hb) in cands {
+                    for &(idx, _hb) in &cands {
                         if c.kv.begin_prefetch(id, idx).is_err() {
                             ok = false;
                             break;
                         }
                     }
+                    self.scratch_pf = cands;
                     if !ok {
                         // GPU too full to swap in; leave on host
                         return false;
                     }
                     out.swapped_in.push(id);
                     out.blocking_io_blocks += n;
-                    let r = c.table.get_mut(&id).unwrap();
+                    let r = c.table.get_mut(id).unwrap();
                     r.residence = KvResidence::Gpu;
                     true
                 }
@@ -860,16 +971,29 @@ impl UnifiedScheduler {
     }
 }
 
+/// Concrete token ids for a work item. The simulator's requests carry no
+/// token data (empty prompt, no sampled outputs) — return the non-
+/// allocating empty vec there so the steady-state scheduling path never
+/// touches the heap; the real path materializes the chunk.
+#[inline]
+fn feed_tokens_or_empty(r: &Request, n: usize) -> Vec<crate::request::TokenId> {
+    if r.prompt.is_empty() && r.output.is_empty() {
+        Vec::new()
+    } else {
+        r.feed_tokens(n)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::EngineConfig;
 
-    fn setup(policy: Policy) -> (UnifiedScheduler, HashMap<RequestId, Request>, KvManager) {
+    fn setup(policy: Policy) -> (UnifiedScheduler, RequestArena, KvManager) {
         let mut cfg = EngineConfig::sim_a100_7b();
         cfg.sched.policy = policy;
         let kv = KvManager::new(cfg.mem.gpu_blocks, cfg.mem.host_blocks, cfg.mem.block_tokens);
-        (UnifiedScheduler::new(cfg.sched), HashMap::new(), kv)
+        (UnifiedScheduler::new(cfg.sched), RequestArena::new(), kv)
     }
 
     fn profile() -> LatencyProfile {
@@ -879,48 +1003,50 @@ mod tests {
     }
 
     fn add(
-        table: &mut HashMap<RequestId, Request>,
-        id: RequestId,
+        table: &mut RequestArena,
         class: Class,
         prompt: usize,
         output: usize,
-    ) {
-        table.insert(id, Request::new(id, class, vec![], prompt, output, 0));
+    ) -> RequestId {
+        table.insert(Request::new(0, class, vec![], prompt, output, 0))
+    }
+
+    fn sched_once(
+        s: &mut UnifiedScheduler,
+        table: &mut RequestArena,
+        kv: &mut KvManager,
+        max_model_len: usize,
+    ) -> ScheduleOutcome {
+        let p = profile();
+        let mut out = ScheduleOutcome::default();
+        let mut ctx = Ctx {
+            table,
+            kv,
+            profile: &p,
+            now: 0,
+            max_model_len,
+        };
+        s.schedule(&mut ctx, &mut out);
+        out
     }
 
     #[test]
     fn online_only_ignores_offline() {
         let (mut s, mut table, mut kv) = setup(Policy::OnlineOnly);
-        add(&mut table, 1, Class::Offline, 1024, 128);
-        s.enqueue(1, Class::Offline);
-        let p = profile();
-        let mut ctx = Ctx {
-            table: &mut table,
-            kv: &mut kv,
-            profile: &p,
-            now: 0,
-            max_model_len: 4096,
-        };
-        let out = s.schedule(&mut ctx);
+        let id = add(&mut table, Class::Offline, 1024, 128);
+        s.enqueue(id, Class::Offline);
+        let out = sched_once(&mut s, &mut table, &mut kv, 4096);
         assert!(out.plan.items.is_empty());
     }
 
     #[test]
     fn online_first_then_offline_fill() {
         let (mut s, mut table, mut kv) = setup(Policy::ConServe);
-        add(&mut table, 1, Class::Online, 1024, 128);
-        add(&mut table, 2, Class::Offline, 2048, 128);
-        s.enqueue(1, Class::Online);
-        s.enqueue(2, Class::Offline);
-        let p = profile();
-        let mut ctx = Ctx {
-            table: &mut table,
-            kv: &mut kv,
-            profile: &p,
-            now: 0,
-            max_model_len: 4096,
-        };
-        let out = s.schedule(&mut ctx);
+        let on = add(&mut table, Class::Online, 1024, 128);
+        let off = add(&mut table, Class::Offline, 2048, 128);
+        s.enqueue(on, Class::Online);
+        s.enqueue(off, Class::Offline);
+        let out = sched_once(&mut s, &mut table, &mut kv, 4096);
         assert_eq!(out.plan.items.len(), 2);
         assert_eq!(out.plan.items[0].class, Class::Online);
         assert_eq!(out.plan.items[0].n_tokens, 512); // chunk_size
@@ -940,17 +1066,9 @@ mod tests {
     #[test]
     fn pure_offline_batch_is_preemptible() {
         let (mut s, mut table, mut kv) = setup(Policy::ConServe);
-        add(&mut table, 1, Class::Offline, 2048, 128);
-        s.enqueue(1, Class::Offline);
-        let p = profile();
-        let mut ctx = Ctx {
-            table: &mut table,
-            kv: &mut kv,
-            profile: &p,
-            now: 0,
-            max_model_len: 4096,
-        };
-        let out = s.schedule(&mut ctx);
+        let id = add(&mut table, Class::Offline, 2048, 128);
+        s.enqueue(id, Class::Offline);
+        let out = sched_once(&mut s, &mut table, &mut kv, 4096);
         assert!(!out.plan.items.is_empty());
         assert!(out.plan.preemptible);
         // offline batching mode: budget ignores the SLO cap
@@ -959,40 +1077,69 @@ mod tests {
     }
 
     #[test]
-    fn memory_pressure_evicts_checkpointed_victim_first() {
+    fn outcome_buffers_recycle_across_iterations() {
+        // the same ScheduleOutcome is reused; capacities persist and the
+        // cleared state never leaks stale items between iterations
         let (mut s, mut table, mut kv) = setup(Policy::ConServe);
+        let id = add(&mut table, Class::Offline, 2048, 64);
+        s.enqueue(id, Class::Offline);
+        let p = profile();
+        let mut out = ScheduleOutcome::default();
+        for step in 0..50 {
+            let mut ctx = Ctx {
+                table: &mut table,
+                kv: &mut kv,
+                profile: &p,
+                now: step * 100_000,
+                max_model_len: 4096,
+            };
+            s.schedule(&mut ctx, &mut out);
+            for item in &out.plan.items {
+                kv.commit(item.req, item.n_tokens).unwrap();
+                let r = table.get_mut(item.req).unwrap();
+                r.ctx_len += item.n_tokens;
+                if r.ctx_len == r.feed_target() {
+                    r.generated += 1;
+                }
+            }
+            assert!(out.plan.items.iter().all(|i| i.req == id));
+            if table[id].is_done() {
+                break;
+            }
+        }
+        assert!(table[id].is_done(), "request must finish via reused outcome");
+    }
+
+    #[test]
+    fn memory_pressure_evicts_checkpointed_victim_first() {
+        let (mut s, mut table, _) = setup(Policy::ConServe);
         // two offline requests holding most of a small pool
         let mut small = KvManager::new(16, 64, 16);
-        for id in [1u64, 2] {
-            add(&mut table, id, Class::Offline, 96, 8);
+        let mut offline_ids = Vec::new();
+        for _ in 0..2 {
+            let id = add(&mut table, Class::Offline, 96, 8);
             small.register(id);
             small.grow(id, 96).unwrap();
             small.commit(id, 96).unwrap();
-            table.get_mut(&id).unwrap().state = State::Running;
-            table.get_mut(&id).unwrap().ctx_len = 96;
+            table.get_mut(id).unwrap().state = State::Running;
+            table.get_mut(id).unwrap().ctx_len = 96;
             s.running.push(id);
+            offline_ids.push(id);
         }
-        // request 1 fully checkpointed, request 2 not
-        for i in small.checkpoint_candidates(1) {
-            small.begin_ckpt(1, i).unwrap();
-            small.finish_ckpt(1, i);
+        let (ck, unck) = (offline_ids[0], offline_ids[1]);
+        // request `ck` fully checkpointed, `unck` not
+        for i in small.checkpoint_candidates(ck) {
+            small.begin_ckpt(ck, i).unwrap();
+            small.finish_ckpt(ck, i);
         }
         // an online request arrives needing more blocks than are free
-        add(&mut table, 3, Class::Online, 128, 8);
-        s.enqueue(3, Class::Online);
-        let p = profile();
-        let mut ctx = Ctx {
-            table: &mut table,
-            kv: &mut small,
-            profile: &p,
-            now: 0,
-            max_model_len: 4096,
-        };
-        let out = s.schedule(&mut ctx);
-        assert!(out.evicted.contains(&1), "checkpointed victim evicted: {out:?}");
-        assert!(!out.discarded.contains(&2), "non-ckpt victim spared if possible");
-        assert_eq!(table[&1].residence, KvResidence::Host);
-        assert!(out.plan.items.iter().any(|i| i.req == 3));
+        let on = add(&mut table, Class::Online, 128, 8);
+        s.enqueue(on, Class::Online);
+        let out = sched_once(&mut s, &mut table, &mut small, 4096);
+        assert!(out.evicted.contains(&ck), "checkpointed victim evicted: {out:?}");
+        assert!(!out.discarded.contains(&unck), "non-ckpt victim spared if possible");
+        assert_eq!(table[ck].residence, KvResidence::Host);
+        assert!(out.plan.items.iter().any(|i| i.req == on));
     }
 
     #[test]
@@ -1001,29 +1148,21 @@ mod tests {
         // to admit an online request — it waits for free memory
         let (mut s, mut table, _) = setup(Policy::VllmPP);
         let mut small = KvManager::new(8, 64, 16);
-        add(&mut table, 1, Class::Offline, 128, 8);
-        small.register(1);
-        small.grow(1, 128).unwrap();
-        small.commit(1, 128).unwrap();
-        table.get_mut(&1).unwrap().state = State::Running;
-        table.get_mut(&1).unwrap().ctx_len = 128;
-        s.running.push(1);
+        let off = add(&mut table, Class::Offline, 128, 8);
+        small.register(off);
+        small.grow(off, 128).unwrap();
+        small.commit(off, 128).unwrap();
+        table.get_mut(off).unwrap().state = State::Running;
+        table.get_mut(off).unwrap().ctx_len = 128;
+        s.running.push(off);
 
-        add(&mut table, 2, Class::Online, 64, 8);
-        s.enqueue(2, Class::Online);
-        let p = profile();
-        let mut ctx = Ctx {
-            table: &mut table,
-            kv: &mut small,
-            profile: &p,
-            now: 0,
-            max_model_len: 4096,
-        };
-        let out = s.schedule(&mut ctx);
+        let on = add(&mut table, Class::Online, 64, 8);
+        s.enqueue(on, Class::Online);
+        let out = sched_once(&mut s, &mut table, &mut small, 4096);
         assert!(out.swapped_out.is_empty(), "no admission-time preemption");
-        assert!(!out.plan.items.iter().any(|i| i.req == 2), "online waits");
+        assert!(!out.plan.items.iter().any(|i| i.req == on), "online waits");
         assert_eq!(s.online_waiting(), 1);
-        assert_eq!(table[&1].residence, KvResidence::Gpu);
+        assert_eq!(table[off].residence, KvResidence::Gpu);
     }
 
     #[test]
@@ -1033,17 +1172,17 @@ mod tests {
         let (mut s, mut table, _) = setup(Policy::VllmPP);
         let mut small = KvManager::new(8, 64, 16);
         // old offline decode occupying half the pool
-        add(&mut table, 1, Class::Offline, 64, 8);
+        let off = add(&mut table, Class::Offline, 64, 8);
         // younger online decode occupying the rest; growth of 1 forces
         // preemption of the *newest* sequence — which is itself online
-        add(&mut table, 2, Class::Online, 64, 8);
-        // r2's next decode fits its current block (63->64); r1's does not
+        let on = add(&mut table, Class::Online, 64, 8);
+        // on's next decode fits its current block (63->64); off's does not
         // (64->65), so the offline growth is what triggers preemption
-        for (id, tokens, arrival) in [(1u64, 64usize, 0u64), (2, 63, 10)] {
+        for (id, tokens, arrival) in [(off, 64usize, 0u64), (on, 63, 10)] {
             small.register(id);
             small.grow(id, tokens).unwrap();
             small.commit(id, tokens).unwrap();
-            let r = table.get_mut(&id).unwrap();
+            let r = table.get_mut(id).unwrap();
             r.state = State::Running;
             r.ctx_len = tokens;
             r.prompt_len = tokens;
@@ -1051,82 +1190,58 @@ mod tests {
             r.arrival = arrival;
             s.running.push(id);
         }
-        // pool: 4 + 4 blocks used, 0 free; request 1 decode needs block 5
-        let p = profile();
-        let mut ctx = Ctx {
-            table: &mut table,
-            kv: &mut small,
-            profile: &p,
-            now: 0,
-            max_model_len: 4096,
-        };
-        let out = s.schedule(&mut ctx);
-        assert_eq!(out.swapped_out, vec![2], "newest (online!) swapped out");
+        // pool: 4 + 4 blocks used, 0 free; `off`'s decode needs block 5
+        let out = sched_once(&mut s, &mut table, &mut small, 4096);
+        assert_eq!(out.swapped_out, vec![on], "newest (online!) swapped out");
         assert!(out.blocking_io_blocks > 0);
-        assert_eq!(table[&2].residence, KvResidence::Host);
-        assert!(out.plan.items.iter().any(|i| i.req == 1));
+        assert_eq!(table[on].residence, KvResidence::Host);
+        assert!(out.plan.items.iter().any(|i| i.req == off));
     }
 
     #[test]
     fn conserve_discards_uncheckpointed_victim() {
         let (mut s, mut table, _) = setup(Policy::ConServe);
         let mut small = KvManager::new(8, 64, 16);
-        add(&mut table, 1, Class::Offline, 128, 8);
-        small.register(1);
-        small.grow(1, 128).unwrap();
-        small.commit(1, 128).unwrap();
-        table.get_mut(&1).unwrap().state = State::Running;
-        table.get_mut(&1).unwrap().ctx_len = 128;
-        s.running.push(1);
+        let off = add(&mut table, Class::Offline, 128, 8);
+        small.register(off);
+        small.grow(off, 128).unwrap();
+        small.commit(off, 128).unwrap();
+        table.get_mut(off).unwrap().state = State::Running;
+        table.get_mut(off).unwrap().ctx_len = 128;
+        s.running.push(off);
 
-        add(&mut table, 2, Class::Online, 64, 8);
-        s.enqueue(2, Class::Online);
-        let p = profile();
-        let mut ctx = Ctx {
-            table: &mut table,
-            kv: &mut small,
-            profile: &p,
-            now: 0,
-            max_model_len: 4096,
-        };
-        let out = s.schedule(&mut ctx);
-        assert_eq!(out.discarded, vec![1]);
-        let r = &table[&1];
+        let on = add(&mut table, Class::Online, 64, 8);
+        s.enqueue(on, Class::Online);
+        let out = sched_once(&mut s, &mut table, &mut small, 4096);
+        assert_eq!(out.discarded, vec![off]);
+        let r = &table[off];
         assert_eq!(r.ctx_len, 0);
         assert_eq!(r.recomputed_tokens, 128);
         assert_eq!(r.residence, KvResidence::Discarded);
         // and it resumes from the front of the offline queue
-        assert_eq!(s.offline_q.front(), Some(&1));
+        assert_eq!(s.offline_q.front(), Some(&off));
     }
 
     #[test]
     fn slo_budget_limits_offline_alongside_decodes() {
         let (mut s, mut table, mut kv) = setup(Policy::ConServe);
         // a running online decode with large context
-        add(&mut table, 1, Class::Online, 1024, 128);
+        let on = add(&mut table, Class::Online, 1024, 128);
         {
-            let r = table.get_mut(&1).unwrap();
+            let r = table.get_mut(on).unwrap();
             r.state = State::Running;
             r.ctx_len = 2048;
             r.prompt_len = 2048;
             r.generated = 1;
         }
-        kv.register(1);
-        kv.grow(1, 2049).unwrap();
-        kv.commit(1, 2048).unwrap();
-        s.running.push(1);
+        kv.register(on);
+        kv.grow(on, 2049).unwrap();
+        kv.commit(on, 2048).unwrap();
+        s.running.push(on);
 
-        add(&mut table, 2, Class::Offline, 8192, 128);
-        s.enqueue(2, Class::Offline);
-        let p = profile();
-        let mut ctx = Ctx {
-            table: &mut table,
-            kv: &mut kv,
-            profile: &p,
-            now: 0,
-            max_model_len: 16384,
-        };
-        let out = s.schedule(&mut ctx);
+        let off = add(&mut table, Class::Offline, 8192, 128);
+        s.enqueue(off, Class::Offline);
+        let out = sched_once(&mut s, &mut table, &mut kv, 16384);
         let offline_tokens: usize = out
             .plan
             .items

@@ -49,21 +49,28 @@ impl ArrivalSource {
         )
     }
 
-    /// All requests with arrival <= now.
+    /// All requests with arrival <= now (allocating convenience wrapper
+    /// over [`poll_each`](Self::poll_each)).
     pub fn poll(&mut self, now: TimeUs) -> Vec<Request> {
+        let mut out = Vec::new();
+        self.poll_each(now, &mut |r| out.push(r));
+        out
+    }
+
+    /// Deliver each request with arrival <= now to `f`. The engine's
+    /// per-iteration arrival drain uses this — no per-poll vector on the
+    /// hot path (the common case delivers nothing).
+    pub fn poll_each(&mut self, now: TimeUs, f: &mut dyn FnMut(Request)) {
         match self {
             ArrivalSource::Trace { events, idx } => {
-                let mut out = Vec::new();
                 while *idx < events.len() && events[*idx].arrival <= now {
-                    out.push(events[*idx].clone());
+                    f(events[*idx].clone());
                     *idx += 1;
                 }
-                out
             }
             ArrivalSource::Channel { rx, peeked, closed } => {
-                let mut out = Vec::new();
                 if let Some(r) = peeked.take_if(|r| r.arrival <= now) {
-                    out.push(r);
+                    f(r);
                 }
                 if peeked.is_none() {
                     loop {
@@ -74,7 +81,7 @@ impl ArrivalSource {
                                     r.arrival = now;
                                 }
                                 if r.arrival <= now {
-                                    out.push(r);
+                                    f(r);
                                 } else {
                                     *peeked = Some(r);
                                     break;
@@ -88,7 +95,6 @@ impl ArrivalSource {
                         }
                     }
                 }
-                out
             }
         }
     }
@@ -124,7 +130,19 @@ impl ArrivalSource {
     }
 }
 
+/// Tickets live in their own id namespace (high bit set) so a ticket
+/// can never alias an arena [`RequestId`] — indexing the engine table
+/// with a ticket misses loudly instead of silently reading another
+/// request's state.
+pub const CLIENT_TICKET_BIT: u64 = 1 << 63;
+
 /// Cloneable submission handle (thread-safe).
+///
+/// Returned ids are *submission tickets*: unique per client but distinct
+/// from engine arena ids (the engine re-keys every request into its slab
+/// arena on admission). The ticket is preserved as
+/// [`Request::submitted_id`], so correlate results by matching that
+/// field — e.g. `engine.table.values().find(|r| r.submitted_id == ticket)`.
 #[derive(Clone)]
 pub struct EngineClient {
     tx: Sender<Request>,
@@ -138,7 +156,7 @@ impl EngineClient {
         prompt: Vec<TokenId>,
         max_new_tokens: usize,
     ) -> RequestId {
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let id = CLIENT_TICKET_BIT | self.next_id.fetch_add(1, Ordering::Relaxed);
         let len = prompt.len();
         // arrival == 0 => stamped by the engine on receipt
         let req = Request::new(id, class, prompt, len, max_new_tokens, 0);
@@ -197,6 +215,25 @@ mod tests {
         drop(client);
         let _ = src.poll(778);
         assert!(src.exhausted());
+    }
+
+    #[test]
+    fn client_tickets_never_alias_arena_ids() {
+        use crate::request::RequestArena;
+        let (client, mut src) = ArrivalSource::channel();
+        let ticket = client.submit_online(vec![1, 2], 4);
+        let mut arena = RequestArena::new();
+        let mut id = 0;
+        src.poll_each(1, &mut |req| {
+            assert_eq!(req.submitted_id, ticket);
+            id = arena.insert(req);
+        });
+        assert_ne!(id, ticket);
+        // a ticket misses the arena instead of resolving to another
+        // request's slot (distinct id namespaces)
+        assert!(arena.get(ticket).is_none());
+        // ...and the preserved submitted_id is the correlation path
+        assert_eq!(arena[id].submitted_id, ticket);
     }
 
     #[test]

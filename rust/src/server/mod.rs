@@ -13,41 +13,75 @@
 //!   checkpoint tick         -> adaptive incremental checkpointing (§4.4)
 //!   issue prefetches        -> background swap-in within the I/O budget
 //! ```
+//!
+//! The loop is allocation-free in steady state: requests live in a slab
+//! arena ([`RequestArena`]) whose slots the KV manager shares, the
+//! [`ScheduleOutcome`] and every I/O / candidate list are persistent
+//! buffers reused across iterations, and debug-only bookkeeping is fully
+//! gated behind `CONSERVE_DEBUG` (checked once at construction). See
+//! `rust/PERF.md`.
 
 pub mod api;
 
-use crate::backend::{ExecBackend, ExecOutcome, IterationPlan, SafepointAction};
+use crate::backend::{ExecBackend, ExecOutcome, IterationPlan, PlanSummary, SafepointAction};
 use crate::clock::Clock;
 use crate::config::EngineConfig;
-use crate::kvcache::{CkptController, Direction, KvManager, SwapEngine};
+use crate::kvcache::{BlockId, CkptController, Direction, KvManager, SwapEngine, SwapOp};
 use crate::metrics::Recorder;
 use crate::profiler::LatencyProfile;
-use crate::request::{Class, KvResidence, Request, RequestId, State, TokenId};
-use crate::scheduler::{budget, preempt, Ctx, Policy, UnifiedScheduler};
+use crate::request::{Class, KvResidence, RequestArena, RequestId, State, TokenId};
+use crate::scheduler::{budget, preempt, Ctx, Policy, ScheduleOutcome, UnifiedScheduler};
 use crate::TimeUs;
-use std::collections::HashMap;
 
 pub use api::{ArrivalSource, EngineClient};
 
 /// Per-token observer (streaming API sink).
 pub type TokenCallback = Box<dyn FnMut(RequestId, TokenId, TimeUs)>;
 
+/// Debug-only loop bookkeeping; only materialized (and only paid for)
+/// when `CONSERVE_DEBUG` is set.
+#[derive(Default)]
+struct DebugStats {
+    last_print: TimeUs,
+    last_plan: PlanSummary,
+}
+
 pub struct ServingEngine<B: ExecBackend> {
     pub cfg: EngineConfig,
     pub backend: B,
     pub clock: Clock,
     pub sched: UnifiedScheduler,
-    pub table: HashMap<RequestId, Request>,
+    /// Live requests, keyed by slab id. Finished requests stay resident
+    /// by default (post-run inspection); see [`set_retain_finished`].
+    ///
+    /// [`set_retain_finished`]: Self::set_retain_finished
+    pub table: RequestArena,
     pub kv: KvManager,
     pub swap: SwapEngine,
     pub ckpt: CkptController,
     pub profile: LatencyProfile,
     pub rec: Recorder,
     arrivals: ArrivalSource,
-    last_token_at: HashMap<RequestId, TimeUs>,
     on_token: Option<TokenCallback>,
     /// Last iteration's estimate (drives the I/O budget of §4.5).
     last_iter_est_us: u64,
+    /// `CONSERVE_DEBUG` checked once — the run loop never calls the
+    /// (syscall-backed) env lookup.
+    debug: bool,
+    /// When false, finished requests are removed from the arena at
+    /// commit time and their slots recycled — flat memory on
+    /// million-request traces.
+    retain_finished: bool,
+    /// Requests currently in `Prefetching` residence (maintained from
+    /// [`ScheduleOutcome::prefetch_started`] + pruning), so the prefetch
+    /// pass touches only the handful of restoring requests instead of
+    /// scanning the whole arena each iteration.
+    prefetch_watch: Vec<RequestId>,
+    // ---- persistent scratch (reused every iteration) ----
+    io_scratch: Vec<SwapOp>,
+    ids_scratch: Vec<RequestId>,
+    blk_scratch: Vec<usize>,
+    pf_scratch: Vec<(usize, BlockId)>,
 }
 
 impl<B: ExecBackend> ServingEngine<B> {
@@ -66,16 +100,22 @@ impl<B: ExecBackend> ServingEngine<B> {
             cfg,
             backend,
             clock,
-            table: HashMap::new(),
+            table: RequestArena::new(),
             kv,
             swap,
             ckpt,
             profile,
             rec: Recorder::new(),
             arrivals,
-            last_token_at: HashMap::new(),
             on_token: None,
             last_iter_est_us: 10_000,
+            debug: std::env::var("CONSERVE_DEBUG").is_ok(),
+            retain_finished: true,
+            prefetch_watch: Vec::new(),
+            io_scratch: Vec::new(),
+            ids_scratch: Vec::new(),
+            blk_scratch: Vec::new(),
+            pf_scratch: Vec::new(),
         }
     }
 
@@ -83,35 +123,52 @@ impl<B: ExecBackend> ServingEngine<B> {
         self.on_token = Some(cb);
     }
 
+    /// Keep (default) or reap finished requests. With `false`, a
+    /// finished request's arena slot and KV registration are recycled at
+    /// commit time — required for flat-memory million-request runs; its
+    /// per-request fields are no longer inspectable afterwards (metrics
+    /// aggregates capture everything the reports need).
+    pub fn set_retain_finished(&mut self, retain: bool) {
+        self.retain_finished = retain;
+    }
+
     /// Run until `until` (µs) has passed *and* all admitted work is done,
     /// or all sources are exhausted. Returns the finish time.
     pub fn run(&mut self, until: TimeUs) -> TimeUs {
-        let debug = std::env::var("CONSERVE_DEBUG").is_ok();
-        let mut iter_count = 0u64;
-        let mut last_debug = 0u64;
-        let mut last_plan = crate::backend::PlanSummary::default();
+        // The ScheduleOutcome (plan + victim lists) lives across
+        // iterations so its buffers recycle their capacity.
+        let mut out = ScheduleOutcome::default();
+        let mut dbg: Option<DebugStats> = if self.debug {
+            Some(DebugStats::default())
+        } else {
+            None
+        };
         loop {
             let now = self.clock.now();
-            iter_count += 1;
-            if debug && now >= last_debug + 5_000_000 {
-                last_debug = now;
-                let head = self
-                    .sched
-                    .offline_head()
-                    .and_then(|id| self.table.get(&id).map(|r| (id, r.state, r.residence)));
-                eprintln!(
-                    "[t={:>7.1}s it={iter_count}] online_q={} offline_q={} running={} gpu_free={}/{} host_free={} table={} plan={last_plan:?} head={head:?} h2d_inflight={}",
-                    now as f64 / 1e6,
-                    self.sched.online_waiting(),
-                    self.sched.offline_waiting(),
-                    self.sched.running_ids().len(),
-                    self.kv.gpu_free(),
-                    self.kv.gpu_total(),
-                    self.kv.host_free(),
-                    self.table.len(),
-                    head.map(|(id, _, _)| self.swap.inflight_for(id, Direction::H2D))
-                        .unwrap_or(0),
-                );
+            self.rec.engine_iters += 1;
+            if let Some(d) = dbg.as_mut() {
+                if now >= d.last_print + 5_000_000 {
+                    d.last_print = now;
+                    let head = self
+                        .sched
+                        .offline_head()
+                        .and_then(|id| self.table.get(id).map(|r| (id, r.state, r.residence)));
+                    eprintln!(
+                        "[t={:>7.1}s it={}] online_q={} offline_q={} running={} gpu_free={}/{} host_free={} table={} plan={:?} head={head:?} h2d_inflight={}",
+                        now as f64 / 1e6,
+                        self.rec.engine_iters,
+                        self.sched.online_waiting(),
+                        self.sched.offline_waiting(),
+                        self.sched.running_ids().len(),
+                        self.kv.gpu_free(),
+                        self.kv.gpu_total(),
+                        self.kv.host_free(),
+                        self.table.len(),
+                        d.last_plan,
+                        head.map(|(id, _, _)| self.swap.inflight_for(id, Direction::H2D))
+                            .unwrap_or(0),
+                    );
+                }
             }
             if now >= until {
                 break; // hard experiment stop
@@ -126,57 +183,21 @@ impl<B: ExecBackend> ServingEngine<B> {
             }
 
             // ---- schedule (Algorithm 1) ----
-            let mut ctx = Ctx {
-                table: &mut self.table,
-                kv: &mut self.kv,
-                profile: &self.profile,
-                now,
-                max_model_len: self.cfg.max_model_len,
-            };
-            let out = self.sched.schedule(&mut ctx);
-            if debug {
-                last_plan = out.plan.summary();
+            {
+                let mut ctx = Ctx {
+                    table: &mut self.table,
+                    kv: &mut self.kv,
+                    profile: &self.profile,
+                    now,
+                    max_model_len: self.cfg.max_model_len,
+                };
+                self.sched.schedule(&mut ctx, &mut out);
+            }
+            if let Some(d) = dbg.as_mut() {
+                d.last_plan = out.plan.summary();
             }
 
-            // victims: apply backend/data effects
-            for &id in &out.discarded {
-                self.backend.drop_request(id);
-                self.swap.drop_request(id);
-                self.rec.preemptions += 1;
-            }
-            for &id in &out.evicted {
-                self.rec.preemptions += 1;
-                // data already mirrored by incremental checkpoints; free
-                // the device copy (prefetch will restore it)
-                self.backend.evict_device(id);
-            }
-            for &id in &out.swapped_out {
-                // blocking D2H of every resident block (vLLM++ path)
-                let seq_tokens = self.kv.seq(id).map(|s| s.tokens).unwrap_or(0);
-                let blocks = seq_tokens.div_ceil(self.kv.block_tokens);
-                for b in 0..blocks {
-                    self.backend.copy_block_d2h(id, b, self.kv.block_tokens);
-                }
-                self.backend.evict_device(id);
-                self.rec.preemptions += 1;
-            }
-            for &id in &out.swapped_in {
-                let seq_tokens = self.kv.seq(id).map(|s| s.tokens).unwrap_or(0);
-                let blocks = seq_tokens.div_ceil(self.kv.block_tokens);
-                for b in 0..blocks {
-                    self.backend.copy_block_h2d(id, b, self.kv.block_tokens);
-                }
-            }
-            if out.blocking_io_blocks > 0 {
-                // blocking transfers stall the pipeline (Fig. 4b)
-                let us = self.swap.blocking_transfer_us(
-                    now,
-                    Direction::D2H,
-                    out.blocking_io_blocks,
-                );
-                self.clock.advance(us);
-                self.rec.blocking_swap_us += us;
-            }
+            self.apply_victims(&out, now);
 
             if out.plan.items.is_empty() {
                 // memory management must continue while idle — resumes
@@ -212,6 +233,60 @@ impl<B: ExecBackend> ServingEngine<B> {
         self.clock.now()
     }
 
+    /// Apply backend/data effects of the scheduler's preemption and
+    /// blocking-swap decisions.
+    fn apply_victims(&mut self, out: &ScheduleOutcome, now: TimeUs) {
+        // dedup on insert: under sustained pressure the same request can
+        // be demoted to Host (prefetch cancel) and re-flipped to
+        // Prefetching every iteration — blind extends would grow the
+        // watch list by one stale copy per iteration for the whole
+        // pressure episode. The list is small (restoring requests), so a
+        // linear containment check is cheaper than any set.
+        for &id in &out.prefetch_started {
+            if !self.prefetch_watch.contains(&id) {
+                self.prefetch_watch.push(id);
+            }
+        }
+        for &id in &out.discarded {
+            self.backend.drop_request(id);
+            self.swap.drop_request(id);
+            self.rec.preemptions += 1;
+        }
+        for &id in &out.evicted {
+            self.rec.preemptions += 1;
+            // data already mirrored by incremental checkpoints; free
+            // the device copy (prefetch will restore it)
+            self.backend.evict_device(id);
+        }
+        for &id in &out.swapped_out {
+            // blocking D2H of every resident block (vLLM++ path)
+            let seq_tokens = self.kv.seq(id).map(|s| s.tokens).unwrap_or(0);
+            let blocks = seq_tokens.div_ceil(self.kv.block_tokens);
+            for b in 0..blocks {
+                self.backend.copy_block_d2h(id, b, self.kv.block_tokens);
+            }
+            self.backend.evict_device(id);
+            self.rec.preemptions += 1;
+        }
+        for &id in &out.swapped_in {
+            let seq_tokens = self.kv.seq(id).map(|s| s.tokens).unwrap_or(0);
+            let blocks = seq_tokens.div_ceil(self.kv.block_tokens);
+            for b in 0..blocks {
+                self.backend.copy_block_h2d(id, b, self.kv.block_tokens);
+            }
+        }
+        if out.blocking_io_blocks > 0 {
+            // blocking transfers stall the pipeline (Fig. 4b)
+            let us = self.swap.blocking_transfer_us(
+                now,
+                Direction::D2H,
+                out.blocking_io_blocks,
+            );
+            self.clock.advance(us);
+            self.rec.blocking_swap_us += us;
+        }
+    }
+
     fn execute_plan(
         &mut self,
         plan: &IterationPlan,
@@ -229,12 +304,11 @@ impl<B: ExecBackend> ServingEngine<B> {
 
         let mut cb = |now: TimeUs| -> SafepointAction {
             // arrivals become visible at safepoints (§4.3)
-            for req in arrivals.poll(now) {
-                let id = req.id;
+            arrivals.poll_each(now, &mut |req| {
                 let class = req.class;
-                table.insert(id, req);
+                let id = table.insert(req);
                 sched.enqueue(id, class);
-            }
+            });
             if !layerwise || sched.online_waiting() == 0 {
                 return SafepointAction::Continue;
             }
@@ -258,7 +332,7 @@ impl<B: ExecBackend> ServingEngine<B> {
     fn commit(&mut self, plan: &IterationPlan, o: &ExecOutcome) {
         let now = self.clock.now();
         for (i, item) in plan.items.iter().enumerate() {
-            let Some(r) = self.table.get_mut(&item.req) else {
+            let Some(r) = self.table.get_mut(item.req) else {
                 continue;
             };
             self.kv
@@ -270,33 +344,37 @@ impl<B: ExecBackend> ServingEngine<B> {
             if r.ctx_len == r.feed_target() {
                 // a new token was sampled by this iteration's head
                 r.generated += 1;
-                if let Some(tok) = o.new_tokens[i] {
-                    r.output.push(tok);
+                // the simulator returns no token data (empty vec)
+                let tok = o.new_tokens.get(i).copied().flatten();
+                if let Some(t) = tok {
+                    r.output.push(t);
                 }
                 let class = r.class;
-                let is_first = r.generated == 1;
-                if is_first {
+                if r.generated == 1 {
                     r.first_token_at = Some(now);
                     let ttft = now.saturating_sub(r.arrival);
                     self.rec.record_first_token(now, class, ttft);
                 } else {
-                    let last = self.last_token_at.get(&item.req).copied().unwrap_or(now);
+                    let last = r.last_token_at.unwrap_or(now);
                     self.rec.record_token(now, class, now.saturating_sub(last));
                 }
-                self.last_token_at.insert(item.req, now);
-                if let (Some(cb), Some(tok)) = (self.on_token.as_mut(), o.new_tokens[i])
-                {
-                    cb(item.req, tok, now);
-                }
-                let r = self.table.get_mut(&item.req).unwrap();
-                if r.is_done() {
+                r.last_token_at = Some(now);
+                let done = r.is_done();
+                if done {
                     r.state = State::Finished;
                     r.finished_at = Some(now);
+                }
+                if let (Some(cb), Some(t)) = (self.on_token.as_mut(), tok) {
+                    cb(item.req, t, now);
+                }
+                if done {
                     self.rec.record_finished(class);
                     self.kv.release(item.req, false);
                     self.backend.drop_request(item.req);
                     self.swap.drop_request(item.req);
-                    self.last_token_at.remove(&item.req);
+                    if !self.retain_finished {
+                        self.table.remove(item.req);
+                    }
                 }
             }
         }
@@ -317,25 +395,27 @@ impl<B: ExecBackend> ServingEngine<B> {
         let severe = free < self.cfg.sched.ckpt_free_watermark * 0.5;
         let now = self.clock.now();
 
-        let mut candidates: Vec<RequestId> = self
-            .sched
-            .running_ids()
-            .iter()
-            .copied()
-            .filter(|id| {
-                let Some(r) = self.table.get(id) else {
-                    return false;
-                };
-                r.residence == KvResidence::Gpu
-                    && (r.class == Class::Offline || severe)
-            })
-            .collect();
-        // offline first
-        candidates.sort_by_key(|id| self.table[id].class == Class::Online);
+        // offline candidates first (running order), online only under
+        // severe pressure — two passes instead of a sort
+        let mut ids = std::mem::take(&mut self.ids_scratch);
+        ids.clear();
+        let eligible = |r: &crate::request::Request, class: Class| {
+            r.residence == KvResidence::Gpu && r.class == class
+        };
+        ids.extend(self.sched.running_ids().iter().copied().filter(|&id| {
+            self.table.get(id).is_some_and(|r| eligible(r, Class::Offline))
+        }));
+        if severe {
+            ids.extend(self.sched.running_ids().iter().copied().filter(|&id| {
+                self.table.get(id).is_some_and(|r| eligible(r, Class::Online))
+            }));
+        }
 
+        let mut blks = std::mem::take(&mut self.blk_scratch);
         let mut issued = 0;
-        'outer: for id in candidates {
-            for idx in self.kv.checkpoint_candidates(id) {
+        'outer: for &id in &ids {
+            self.kv.checkpoint_candidates_into(id, &mut blks);
+            for &idx in &blks {
                 if issued >= quota {
                     break 'outer;
                 }
@@ -344,13 +424,14 @@ impl<B: ExecBackend> ServingEngine<B> {
                 }
                 // data moves now (host<->host on this testbed); the
                 // accounting completes on PCIe-modelled time
-                self.backend
-                    .copy_block_d2h(id, idx, self.kv.block_tokens);
+                self.backend.copy_block_d2h(id, idx, self.kv.block_tokens);
                 self.swap.enqueue(now, id, idx, Direction::D2H);
                 issued += 1;
             }
         }
         self.rec.ckpt_blocks += issued as u64;
+        self.ids_scratch = ids;
+        self.blk_scratch = blks;
     }
 
     /// Background prefetching (§4.4): restore host-resident offline
@@ -358,6 +439,14 @@ impl<B: ExecBackend> ServingEngine<B> {
     /// the next batches' compute.
     fn prefetch_tick(&mut self) {
         if !self.cfg.sched.prefetch || self.cfg.sched.policy != Policy::ConServe {
+            return;
+        }
+        // prune entries that left Prefetching (restored, repaired,
+        // cancelled or finished) since the last tick
+        let table = &self.table;
+        self.prefetch_watch
+            .retain(|&id| table.get(id).is_some_and(|r| r.residence == KvResidence::Prefetching));
+        if self.prefetch_watch.is_empty() {
             return;
         }
         let io_budget = budget::io_budget(
@@ -376,37 +465,31 @@ impl<B: ExecBackend> ServingEngine<B> {
         // restore (host checkpoints survive; it reverts to Host).
         let reserve = (self.kv.gpu_total() / 20).max(1);
         if self.kv.gpu_free() <= reserve {
-            let victim = self
-                .table
-                .iter()
-                .filter(|(_, r)| r.residence == KvResidence::Prefetching)
-                .map(|(&id, _)| id)
-                .max_by_key(|id| {
-                    (
-                        self.kv.seq(*id).map(|s| s.gpu_blocks()).unwrap_or(0),
-                        *id,
-                    )
-                });
-            if let Some(id) = victim {
+            let mut victim: Option<(usize, RequestId)> = None;
+            for &id in &self.prefetch_watch {
+                let blocks = self.kv.seq(id).map(|s| s.gpu_blocks()).unwrap_or(0);
+                let cand = (blocks, id);
+                if victim.is_none_or(|v| cand > v) {
+                    victim = Some(cand);
+                }
+            }
+            if let Some((_, id)) = victim {
                 self.swap.drop_request(id);
                 self.kv.evict_gpu(id);
                 self.backend.evict_device(id);
-                if let Some(r) = self.table.get_mut(&id) {
+                if let Some(r) = self.table.get_mut(id) {
                     r.residence = KvResidence::Host;
                 }
             }
             return;
         }
         let now = self.clock.now();
-        let mut ids: Vec<RequestId> = self
-            .table
-            .iter()
-            .filter(|(_, r)| r.residence == KvResidence::Prefetching)
-            .map(|(&id, _)| id)
-            .collect();
-        ids.sort_unstable(); // hash-map order must not leak into behaviour
+        let mut ids = std::mem::take(&mut self.ids_scratch);
+        ids.clear();
+        ids.extend_from_slice(&self.prefetch_watch);
+        let mut cands = std::mem::take(&mut self.pf_scratch);
         let mut issued = 0;
-        for id in ids {
+        'outer: for &id in &ids {
             if issued >= io_budget {
                 break;
             }
@@ -414,7 +497,7 @@ impl<B: ExecBackend> ServingEngine<B> {
             // outstanding work is either fully restored (flip to Gpu) or
             // has lost host copies (discard to recompute) — either way it
             // must not linger and block the FIFO queue
-            if self.kv.prefetch_candidates(id).is_empty()
+            if self.kv.missing_prefetch(id) == 0
                 && self.swap.inflight_for(id, Direction::H2D) == 0
             {
                 let bt = self.kv.block_tokens;
@@ -422,11 +505,11 @@ impl<B: ExecBackend> ServingEngine<B> {
                     .kv
                     .seq(id)
                     .is_some_and(|s| s.gpu_blocks() >= s.tokens.div_ceil(bt));
-                let r = self.table.get_mut(&id).unwrap();
+                let r = self.table.get_mut(id).unwrap();
                 if resident {
                     r.residence = KvResidence::Gpu;
                 } else {
-                    if std::env::var("CONSERVE_DEBUG").is_ok() {
+                    if self.debug {
                         eprintln!(
                             "[repair] req {id}: prefetch holes (tokens={}, gpu_blocks={:?}) -> recompute",
                             self.kv.seq(id).map(|s| s.tokens).unwrap_or(0),
@@ -443,7 +526,9 @@ impl<B: ExecBackend> ServingEngine<B> {
                 }
                 continue;
             }
-            for (idx, _hb) in self.kv.prefetch_candidates(id) {
+            self.kv.prefetch_candidates_into(id, &mut cands);
+            for ci in 0..cands.len() {
+                let (idx, _hb) = cands[ci];
                 if issued >= io_budget {
                     break;
                 }
@@ -454,29 +539,36 @@ impl<B: ExecBackend> ServingEngine<B> {
                     // GPU pool full. Offline waits; a *latency-critical*
                     // resume must not — discard it to the recompute path
                     // (prefill needs no pinned restore memory up front).
-                    if self.table.get(&id).is_some_and(|r| r.class == Class::Online) {
+                    if self.table.get(id).is_some_and(|r| r.class == Class::Online) {
                         self.swap.drop_request(id);
                         self.kv.discard(id);
                         self.backend.drop_request(id);
-                        let r = self.table.get_mut(&id).unwrap();
+                        let r = self.table.get_mut(id).unwrap();
                         let lost = r.ctx_len;
                         r.ctx_len = 0;
                         r.ckpt_len = 0;
                         r.recomputed_tokens += lost;
                         r.residence = KvResidence::Discarded;
                     }
-                    return;
+                    break 'outer;
                 }
                 self.swap.enqueue(now, id, idx, Direction::H2D);
                 issued += 1;
             }
         }
         self.rec.prefetch_blocks += issued as u64;
+        self.ids_scratch = ids;
+        self.pf_scratch = cands;
     }
 
     /// Complete async swap ops whose modelled time has passed.
     fn complete_io(&mut self, now: TimeUs) {
-        for op in self.swap.tick(now) {
+        if self.swap.is_idle() {
+            return;
+        }
+        let mut ops = std::mem::take(&mut self.io_scratch);
+        self.swap.tick_into(now, &mut ops);
+        for op in ops.drain(..) {
             match op.dir {
                 Direction::D2H => {
                     self.kv.finish_ckpt(op.req, op.block_idx);
@@ -485,10 +577,10 @@ impl<B: ExecBackend> ServingEngine<B> {
                     self.backend
                         .copy_block_h2d(op.req, op.block_idx, self.kv.block_tokens);
                     // last block home? request becomes runnable
-                    let done = self.kv.prefetch_candidates(op.req).is_empty()
+                    let done = self.kv.missing_prefetch(op.req) == 0
                         && self.swap.inflight_for(op.req, Direction::H2D) == 0;
                     if done {
-                        if let Some(r) = self.table.get_mut(&op.req) {
+                        if let Some(r) = self.table.get_mut(op.req) {
                             if r.residence == KvResidence::Prefetching {
                                 r.residence = KvResidence::Gpu;
                             }
@@ -497,15 +589,16 @@ impl<B: ExecBackend> ServingEngine<B> {
                 }
             }
         }
+        self.io_scratch = ops;
     }
 
     fn drain_arrivals(&mut self, now: TimeUs) {
-        for req in self.arrivals.poll(now) {
-            let id = req.id;
+        let (arrivals, table, sched) = (&mut self.arrivals, &mut self.table, &mut self.sched);
+        arrivals.poll_each(now, &mut |req| {
             let class = req.class;
-            self.table.insert(id, req);
-            self.sched.enqueue(id, class);
-        }
+            let id = table.insert(req);
+            sched.enqueue(id, class);
+        });
     }
 
     /// Nothing runnable: jump the virtual clock to the next event, or

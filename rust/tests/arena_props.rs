@@ -1,0 +1,162 @@
+//! Property tests for slab-id recycling across the request arena and the
+//! KV manager: releasing and re-admitting requests must never alias live
+//! KV state or resurrect stale generation ids, and block conservation
+//! must hold across thousands of random admit / preempt / resume /
+//! discard / finish cycles.
+
+use conserve::kvcache::manager::KvManager;
+use conserve::request::{rid_slot, Class, Request, RequestArena, RequestId};
+use conserve::util::rng::Rng;
+use std::collections::HashSet;
+
+const BLOCK_TOKENS: usize = 16;
+
+fn new_req(rng: &mut Rng) -> Request {
+    let class = if rng.range(0, 4) == 0 {
+        Class::Online
+    } else {
+        Class::Offline
+    };
+    let prompt = rng.range_usize(16, 200);
+    let out = rng.range_usize(4, 40);
+    Request::new(0, class, vec![], prompt, out, 0)
+}
+
+#[test]
+fn recycling_never_aliases_or_resurrects() {
+    let mut rng = Rng::new(2024);
+    let mut arena = RequestArena::new();
+    let mut kv = KvManager::new(96, 256, BLOCK_TOKENS);
+    let mut live: Vec<RequestId> = Vec::new();
+    let mut dead: Vec<RequestId> = Vec::new();
+    let mut ever_issued: HashSet<RequestId> = HashSet::new();
+
+    for step in 0..10_000 {
+        match rng.range(0, 6) {
+            // admit: insert + register + grow/commit some prefix
+            0 | 1 => {
+                if live.len() < 12 {
+                    let id = arena.insert(new_req(&mut rng));
+                    assert!(
+                        ever_issued.insert(id),
+                        "step {step}: id {id} resurrected — generation guard failed"
+                    );
+                    kv.register(id);
+                    let want = rng.range_usize(1, arena[id].prompt_len + 1);
+                    if kv.grow(id, want).is_ok() {
+                        kv.commit(id, want).unwrap();
+                        arena.get_mut(id).unwrap().ctx_len = want;
+                    }
+                    live.push(id);
+                }
+            }
+            // preempt-evict (checkpoint everything, then release GPU)
+            2 => {
+                if let Some(&id) = live.get(rng.range_usize(0, live.len().max(1)) % live.len().max(1)) {
+                    for idx in kv.checkpoint_candidates(id) {
+                        if kv.begin_ckpt(id, idx).is_err() {
+                            break;
+                        }
+                        kv.finish_ckpt(id, idx);
+                    }
+                    kv.evict_gpu(id);
+                }
+            }
+            // resume (prefetch back what has host copies)
+            3 => {
+                if let Some(&id) = live.get(rng.range_usize(0, live.len().max(1)) % live.len().max(1)) {
+                    for (idx, _hb) in kv.prefetch_candidates(id) {
+                        if kv.begin_prefetch(id, idx).is_err() {
+                            break;
+                        }
+                    }
+                }
+            }
+            // discard-preempt (recompute path)
+            4 => {
+                if let Some(&id) = live.get(rng.range_usize(0, live.len().max(1)) % live.len().max(1)) {
+                    kv.discard(id);
+                    arena.get_mut(id).unwrap().ctx_len = 0;
+                }
+            }
+            // finish: release KV, remove from arena, slot recycles
+            _ => {
+                if !live.is_empty() {
+                    let i = rng.range_usize(0, live.len());
+                    let id = live.swap_remove(i);
+                    kv.release(id, false);
+                    let removed = arena.remove(id);
+                    assert!(removed.is_some(), "step {step}: live id {id} vanished");
+                    dead.push(id);
+                }
+            }
+        }
+
+        assert!(
+            kv.check_conservation(),
+            "step {step}: block conservation violated"
+        );
+
+        // stale ids must stay dead: no arena hit, no KV state, and no
+        // mutation path back into the new slot occupant
+        for &stale in dead.iter().rev().take(8) {
+            assert!(arena.get(stale).is_none(), "step {step}: stale {stale} readable");
+            assert!(
+                kv.seq(stale).is_none(),
+                "step {step}: stale {stale} still owns KV"
+            );
+            assert!(kv.grow(stale, 64).is_err());
+            assert_eq!(kv.evict_gpu(stale), 0);
+        }
+        // live ids must still resolve, and committed tokens must match
+        // what the request believes it has
+        for &id in &live {
+            let r = arena.get(id).expect("live id must resolve");
+            assert_eq!(r.id, id);
+            let toks = kv.seq(id).map(|s| s.tokens).unwrap_or(0);
+            assert_eq!(toks, r.ctx_len, "step {step}: KV tokens drifted for {id}");
+        }
+    }
+
+    // arena stayed dense: slots bounded by peak concurrency, not by the
+    // total number of requests ever admitted
+    assert!(ever_issued.len() > 1_000, "exercise enough admissions");
+    assert!(
+        arena.slot_count() <= 16,
+        "arena grew to {} slots for <=12 concurrent requests",
+        arena.slot_count()
+    );
+}
+
+#[test]
+fn slot_reuse_pairs_fresh_kv_with_fresh_request() {
+    // deterministic tight loop: one slot recycled thousands of times;
+    // the KV registration under the new generation must always start
+    // empty even though the previous occupant left host checkpoints
+    let mut arena = RequestArena::new();
+    let mut kv = KvManager::new(8, 16, BLOCK_TOKENS);
+    let mut last: Option<RequestId> = None;
+    for round in 0..5_000 {
+        let id = arena.insert(Request::new(0, Class::Offline, vec![], 48, 8, 0));
+        if let Some(prev) = last {
+            assert_eq!(rid_slot(prev), rid_slot(id), "single-slot recycling");
+            assert_ne!(prev, id);
+            assert!(kv.seq(prev).is_none(), "round {round}: stale KV visible");
+        }
+        kv.register(id);
+        assert_eq!(kv.seq(id).unwrap().tokens, 0, "round {round}: inherited KV");
+        kv.grow(id, 48).unwrap();
+        kv.commit(id, 48).unwrap();
+        for idx in kv.checkpoint_candidates(id) {
+            kv.begin_ckpt(id, idx).unwrap();
+            kv.finish_ckpt(id, idx);
+        }
+        kv.evict_gpu(id);
+        // finish without releasing host copies first: release() drops them
+        kv.release(id, false);
+        arena.remove(id).unwrap();
+        assert!(kv.check_conservation(), "round {round}");
+        last = Some(id);
+    }
+    assert_eq!(arena.slot_count(), 2); // reserved slot 0 + the one reused slot
+}

@@ -2,8 +2,10 @@
 //! execution numerics, KV residency (checkpoint/prefetch data paths),
 //! preemption aborts, and a miniature end-to-end co-serving run.
 //!
-//! These require `make artifacts`; they are skipped (pass trivially)
-//! when artifacts/ is absent so `cargo test` works pre-build.
+//! These require `make artifacts` and the `pjrt` cargo feature; they are
+//! skipped (pass trivially) when artifacts/ is absent so `cargo test`
+//! works pre-build.
+#![cfg(feature = "pjrt")]
 
 use conserve::backend::{
     ExecBackend, IterationPlan, PjrtBackend, SafepointAction, WorkItem,

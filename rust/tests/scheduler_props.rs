@@ -11,10 +11,9 @@ use conserve::backend::PlanSummary;
 use conserve::config::EngineConfig;
 use conserve::kvcache::manager::KvManager;
 use conserve::profiler::LatencyProfile;
-use conserve::request::{Class, Phase, Request, RequestId, State};
-use conserve::scheduler::{Ctx, Policy, UnifiedScheduler};
+use conserve::request::{Class, Phase, Request, RequestArena, State};
+use conserve::scheduler::{Ctx, Policy, ScheduleOutcome, UnifiedScheduler};
 use conserve::util::rng::Rng;
-use std::collections::HashMap;
 
 fn profile() -> LatencyProfile {
     LatencyProfile {
@@ -24,7 +23,7 @@ fn profile() -> LatencyProfile {
 
 struct World {
     sched: UnifiedScheduler,
-    table: HashMap<RequestId, Request>,
+    table: RequestArena,
     kv: KvManager,
     cfg: EngineConfig,
     now: u64,
@@ -34,16 +33,14 @@ fn world(policy: Policy, seed: u64, n_online: usize, n_offline: usize) -> World 
     let mut cfg = EngineConfig::sim_a100_7b();
     cfg.sched.policy = policy;
     let mut rng = Rng::new(seed);
-    let mut table = HashMap::new();
+    let mut table = RequestArena::new();
     let mut sched = UnifiedScheduler::new(cfg.sched.clone());
     let kv = KvManager::new(256, 1024, cfg.mem.block_tokens); // tight pool
-    let mut id = 1u64;
     for _ in 0..n_online {
         let prompt = rng.range_usize(64, 2048);
         let out = rng.range_usize(16, 256);
-        table.insert(id, Request::new(id, Class::Online, vec![], prompt, out, 0));
+        let id = table.insert(Request::new(0, Class::Online, vec![], prompt, out, 0));
         sched.enqueue(id, Class::Online);
-        id += 1;
     }
     for _ in 0..n_offline {
         // docs sized well below the 256-block (4096-token) pool so a
@@ -51,9 +48,8 @@ fn world(policy: Policy, seed: u64, n_online: usize, n_offline: usize) -> World 
         // is rejected upstream in a deployment)
         let prompt = rng.range_usize(512, 2048);
         let out = rng.range_usize(64, 256);
-        table.insert(id, Request::new(id, Class::Offline, vec![], prompt, out, 0));
+        let id = table.insert(Request::new(0, Class::Offline, vec![], prompt, out, 0));
         sched.enqueue(id, Class::Offline);
-        id += 1;
     }
     World {
         sched,
@@ -65,7 +61,8 @@ fn world(policy: Policy, seed: u64, n_online: usize, n_offline: usize) -> World 
 }
 
 /// Run one schedule step and commit its plan (simulating execution).
-fn step(w: &mut World, prof: &LatencyProfile) -> conserve::scheduler::ScheduleOutcome {
+fn step(w: &mut World, prof: &LatencyProfile) -> ScheduleOutcome {
+    let mut out = ScheduleOutcome::default();
     let mut ctx = Ctx {
         table: &mut w.table,
         kv: &mut w.kv,
@@ -73,7 +70,7 @@ fn step(w: &mut World, prof: &LatencyProfile) -> conserve::scheduler::ScheduleOu
         now: w.now,
         max_model_len: 4096,
     };
-    let out = w.sched.schedule(&mut ctx);
+    w.sched.schedule(&mut ctx, &mut out);
     // invariant: every scheduled item has capacity grown
     for item in &out.plan.items {
         let seq = w.kv.seq(item.req).expect("scheduled item must be registered");
@@ -86,7 +83,7 @@ fn step(w: &mut World, prof: &LatencyProfile) -> conserve::scheduler::ScheduleOu
     // commit
     for item in &out.plan.items {
         w.kv.commit(item.req, item.n_tokens).unwrap();
-        let r = w.table.get_mut(&item.req).unwrap();
+        let r = w.table.get_mut(item.req).unwrap();
         r.ctx_len += item.n_tokens;
         if r.ctx_len == r.feed_target() {
             r.generated += 1;
@@ -249,6 +246,7 @@ fn estimator_plan_consistency() {
     let mut w = world(Policy::ConServe, 11, 4, 16);
     let prof = profile();
     for _ in 0..400 {
+        let mut out = ScheduleOutcome::default();
         let mut ctx = Ctx {
             table: &mut w.table,
             kv: &mut w.kv,
@@ -256,7 +254,7 @@ fn estimator_plan_consistency() {
             now: w.now,
             max_model_len: 4096,
         };
-        let out = w.sched.schedule(&mut ctx);
+        w.sched.schedule(&mut ctx, &mut out);
         let s: PlanSummary = out.plan.summary();
         let has_decode = s.decode_seqs > 0;
         let has_online = out.plan.items.iter().any(|i| i.class == Class::Online);
@@ -270,7 +268,7 @@ fn estimator_plan_consistency() {
         }
         for item in &out.plan.items {
             w.kv.commit(item.req, item.n_tokens).unwrap();
-            let r = w.table.get_mut(&item.req).unwrap();
+            let r = w.table.get_mut(item.req).unwrap();
             r.ctx_len += item.n_tokens;
             if r.ctx_len == r.feed_target() {
                 r.generated += 1;
