@@ -1,0 +1,196 @@
+//! `bench_shard_scale` — multi-worker scaling acceptance bench.
+//!
+//! Routes one ~100k-request on/off co-serving trace (80% online with
+//! gamma on/off arrivals, 20% offline pool at t=0 — heavier offline
+//! share than `bench_sched_loop` so a single worker is clearly
+//! saturated and scaling is measurable) across 1 / 2 / 4 / 8 worker
+//! shards under the affinity placement policy, at **equal total load**:
+//! every sweep point serves the identical request set. Each shard is an
+//! independent simulated A100 (own virtual clock, arena, KV pool,
+//! scheduler) on its own OS thread.
+//!
+//! Reported per sweep point, from the merged cross-shard recorder:
+//!
+//! * aggregate generation and processed tokens/sec over the fleet
+//!   makespan (the slowest shard's finish time);
+//! * online P99 TTFT / TPOT and the TTFT SLO-violation rate;
+//! * wall-clock time for the whole fleet run (thread-parallel).
+//!
+//! Acceptance (asserted here): every >= 2-shard point beats the 1-shard
+//! baseline on aggregate generation throughput with no SLO-violation
+//! regression. Throughput plateaus once the makespan is bounded by the
+//! trace span rather than compute — expected, and visible in the
+//! ratios. Results go to `BENCH_shard.json` (schema: rust/PERF.md).
+//! Scale with `SHARD_BENCH_REQS` (default 100_000; CI smoke uses a
+//! small value).
+
+use conserve::config::EngineConfig;
+use conserve::report::Report;
+use conserve::request::{Class, Request};
+use conserve::shard::{run_sharded_sim, Placement, ShardedRun};
+use conserve::util::json::{arr, num, obj, Json};
+use conserve::util::rng::Rng;
+use conserve::workload::trace::onoff_trace;
+use std::time::Instant;
+
+struct Row {
+    shards: usize,
+    wall_s: f64,
+    run: ShardedRun,
+}
+
+fn main() {
+    let n_reqs: usize = std::env::var("SHARD_BENCH_REQS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(100_000);
+    let n_online = n_reqs * 8 / 10;
+    let n_offline = n_reqs - n_online;
+
+    // ---- one trace, served at every sweep point ----
+    let on_rate = 60.0;
+    let phase_s = 30.0;
+    let duration_s = 2.0 * n_online as f64 / on_rate;
+    let arrivals = onoff_trace(42, duration_s, phase_s, on_rate, 2.0);
+    let mut rng = Rng::new(7);
+    let mut events: Vec<Request> = arrivals
+        .iter()
+        .take(n_online)
+        .map(|&t| {
+            let input = rng.range_usize(64, 256);
+            let output = rng.range_usize(8, 24);
+            Request::new(0, Class::Online, vec![], input, output, t)
+        })
+        .collect();
+    for _ in 0..n_offline {
+        let input = rng.range_usize(512, 2048);
+        let output = rng.range_usize(32, 96);
+        events.push(Request::new(0, Class::Offline, vec![], input, output, 0));
+    }
+    let n_events = events.len();
+    let cfg = EngineConfig::sim_a100_7b();
+    let placement = Placement::affinity();
+
+    println!("=== bench_shard_scale ({n_events} requests, placement {placement}) ===");
+    let sweep = [1usize, 2, 4, 8];
+    let mut rows: Vec<Row> = Vec::new();
+    for &shards in &sweep {
+        let t0 = Instant::now();
+        let run = run_sharded_sim(&cfg, shards, placement, events.clone(), duration_s * 4.0);
+        let wall_s = t0.elapsed().as_secs_f64();
+        let m = &run.merged;
+        println!(
+            "shards={shards}: wall={wall_s:>7.2}s makespan={:>8.1}s gen={:>7.0} tok/s proc={:>8.0} tok/s p99TTFT={:>9.1}ms viol={:>5.2}% finished={} shard_reqs={:?}",
+            run.makespan_s,
+            m.total_gen_tput,
+            m.total_processed_tput,
+            m.online_p99_ttft_ms,
+            m.ttft_violations * 100.0,
+            m.online_finished + m.offline_finished,
+            run.shard_requests,
+        );
+        rows.push(Row { shards, wall_s, run });
+    }
+
+    // ---- acceptance: >= 2 shards beats the 1-shard baseline at equal
+    // total load, with no online SLO-violation regression ----
+    let base = &rows[0].run.merged;
+    for row in &rows[1..] {
+        let m = &row.run.merged;
+        assert!(
+            m.total_gen_tput > base.total_gen_tput,
+            "{} shards must out-generate 1 shard: {:.0} vs {:.0} tok/s",
+            row.shards,
+            m.total_gen_tput,
+            base.total_gen_tput
+        );
+        assert!(
+            m.ttft_violations <= base.ttft_violations + 0.005,
+            "{} shards must not regress SLO violations: {:.4} vs {:.4}",
+            row.shards,
+            m.ttft_violations,
+            base.ttft_violations
+        );
+    }
+    for row in &rows[1..] {
+        println!(
+            "scaling {}x shards: gen tput {:.2}x, p99 TTFT {:.2}x",
+            row.shards,
+            row.run.merged.total_gen_tput / base.total_gen_tput,
+            row.run.merged.online_p99_ttft_ms / base.online_p99_ttft_ms.max(1e-9),
+        );
+    }
+
+    // ---- emit BENCH_shard.json (schema documented in rust/PERF.md) ----
+    let shard_row = |r: &Report, requests: usize| {
+        obj(vec![
+            ("requests", num(requests as f64)),
+            ("gen_tok_s", num(r.total_gen_tput)),
+            ("online_p99_ttft_ms", num(r.online_p99_ttft_ms)),
+            ("finished", num((r.online_finished + r.offline_finished) as f64)),
+        ])
+    };
+    let sweep_json = arr(rows.iter().map(|row| {
+        let m = &row.run.merged;
+        obj(vec![
+            ("shards", num(row.shards as f64)),
+            ("wall_s", num(row.wall_s)),
+            ("makespan_s", num(row.run.makespan_s)),
+            ("agg_gen_tok_s", num(m.total_gen_tput)),
+            ("agg_processed_tok_s", num(m.total_processed_tput)),
+            ("online_p99_ttft_ms", num(m.online_p99_ttft_ms)),
+            ("online_p99_tpot_ms", num(m.online_p99_tpot_ms)),
+            ("online_mean_ttft_ms", num(m.online_mean_ttft_ms)),
+            ("ttft_violation_rate", num(m.ttft_violations)),
+            (
+                "finished",
+                num((m.online_finished + m.offline_finished) as f64),
+            ),
+            ("preemptions", num(m.preemptions as f64)),
+            (
+                "per_shard",
+                arr(row
+                    .run
+                    .per_shard
+                    .iter()
+                    .zip(&row.run.shard_requests)
+                    .map(|(r, &n)| shard_row(r, n))),
+            ),
+        ])
+    }));
+    let scaling = obj(rows[1..]
+        .iter()
+        .map(|row| {
+            (
+                match row.shards {
+                    2 => "gen_tput_2_over_1",
+                    4 => "gen_tput_4_over_1",
+                    _ => "gen_tput_8_over_1",
+                },
+                num(row.run.merged.total_gen_tput / base.total_gen_tput),
+            )
+        })
+        .collect());
+    let json = obj(vec![
+        ("requests", num(n_events as f64)),
+        ("online_requests", num(n_online.min(arrivals.len()) as f64)),
+        ("offline_requests", num(n_offline as f64)),
+        ("placement", Json::Str(placement.to_string())),
+        (
+            "trace",
+            obj(vec![
+                ("on_rate", num(on_rate)),
+                ("phase_s", num(phase_s)),
+                ("duration_s", num(duration_s)),
+            ]),
+        ),
+        ("sweep", sweep_json),
+        ("scaling", scaling),
+    ]);
+    let out_path =
+        std::env::var("SHARD_BENCH_OUT").unwrap_or_else(|_| "BENCH_shard.json".into());
+    std::fs::write(&out_path, json.to_string()).expect("write BENCH_shard.json");
+    println!("\nwrote {out_path}");
+    let _ = Json::parse(&json.to_string()).expect("self-emitted json parses");
+    println!("bench_shard_scale OK");
+}

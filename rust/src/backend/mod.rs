@@ -3,8 +3,9 @@
 //!
 //! The serving engine is generic over [`ExecBackend`]:
 //!
-//! * [`PjrtBackend`] — the real path: AOT HLO artifacts executed through
-//!   the PJRT CPU client; per-layer executables give natural safepoints.
+//! * `PjrtBackend` (cargo feature `pjrt`) — the real path: AOT HLO
+//!   artifacts executed through the PJRT CPU client; per-layer
+//!   executables give natural safepoints.
 //! * [`SimBackend`] — a discrete-event model of the paper's testbed
 //!   (A100-40G, Llama-2-7B) driven by [`costmodel::CostModel`]; advances
 //!   a virtual clock instead of computing.

@@ -3,14 +3,19 @@
 //! the mapping between each GPU KV block and its corresponding CPU KV
 //! block ... recorded in an extended field of the virtual page table").
 //!
-//! Sequences are keyed by the *slot* half of [`RequestId`] (the same
+//! Sequences are keyed by the *slot* field of [`RequestId`] (the same
 //! dense index the request arena uses), so `grow`/`commit`/`seq` are
 //! plain array accesses with a generation check — no hashing on the
 //! schedule→execute→commit path. A lookup with a stale generation
 //! resolves to "unknown sequence", never to another request's KV.
+//!
+//! Like the arena, each manager belongs to one worker shard
+//! ([`KvManager::for_shard`]; default shard 0) and checks the shard bits
+//! of every id, so a request id from another shard can never read or
+//! mutate this shard's block tables.
 
 use super::BlockId;
-use crate::request::{rid_gen, rid_slot, RequestId};
+use crate::request::{rid_gen, rid_shard, rid_slot, RequestId, MAX_SHARDS};
 
 /// A pool of fixed-size blocks; O(1) alloc/free via a free list.
 #[derive(Debug)]
@@ -150,19 +155,45 @@ struct SeqEntry {
 #[derive(Debug)]
 pub struct KvManager {
     pub block_tokens: usize,
+    shard: u32,
     gpu: BlockPool,
     host: BlockPool,
     seqs: Vec<SeqEntry>,
 }
 
 impl KvManager {
+    /// Single-worker manager (shard 0).
     pub fn new(gpu_blocks: usize, host_blocks: usize, block_tokens: usize) -> Self {
+        Self::for_shard(0, gpu_blocks, host_blocks, block_tokens)
+    }
+
+    /// Manager for worker shard `shard`: only ids carrying this shard
+    /// index resolve; everything else misses as an unknown sequence.
+    pub fn for_shard(
+        shard: usize,
+        gpu_blocks: usize,
+        host_blocks: usize,
+        block_tokens: usize,
+    ) -> Self {
+        assert!(shard < MAX_SHARDS, "shard {shard} out of range");
         Self {
             block_tokens,
+            shard: shard as u32,
             gpu: BlockPool::new(gpu_blocks),
             host: BlockPool::new(host_blocks),
             seqs: Vec::new(),
         }
+    }
+
+    /// The worker shard this manager belongs to.
+    pub fn shard(&self) -> usize {
+        self.shard as usize
+    }
+
+    /// Does `id` carry this manager's shard index?
+    #[inline]
+    fn owns(&self, id: RequestId) -> bool {
+        rid_shard(id) == self.shard as usize
     }
 
     pub fn gpu_free(&self) -> usize {
@@ -183,6 +214,9 @@ impl KvManager {
 
     #[inline]
     pub fn seq(&self, id: RequestId) -> Option<&SeqKv> {
+        if !self.owns(id) {
+            return None;
+        }
         self.seqs
             .get(rid_slot(id))
             .filter(|e| e.generation == rid_gen(id))
@@ -191,6 +225,9 @@ impl KvManager {
 
     #[inline]
     fn seq_mut(&mut self, id: RequestId) -> Option<&mut SeqKv> {
+        if !self.owns(id) {
+            return None;
+        }
         self.seqs
             .get_mut(rid_slot(id))
             .filter(|e| e.generation == rid_gen(id))
@@ -217,6 +254,12 @@ impl KvManager {
     }
 
     pub fn register(&mut self, id: RequestId) {
+        assert!(
+            self.owns(id),
+            "registering id {id} from shard {} on shard {}",
+            rid_shard(id),
+            self.shard
+        );
         let slot = rid_slot(id);
         let generation = rid_gen(id);
         if self.seqs.len() <= slot {
@@ -297,6 +340,9 @@ impl KvManager {
     /// a block's host copy is only valid if taken when the block was full
     /// or the sequence stopped writing to it.
     pub fn commit(&mut self, id: RequestId, n: usize) -> Result<(), KvError> {
+        if !self.owns(id) {
+            return Err(KvError::UnknownSeq(id));
+        }
         let bt = self.block_tokens;
         let slot = rid_slot(id);
         let entry = self
@@ -387,6 +433,9 @@ impl KvManager {
     /// caller either has full checkpoints or accepts recompute. Returns
     /// the freed GPU block count.
     pub fn evict_gpu(&mut self, id: RequestId) -> usize {
+        if !self.owns(id) {
+            return 0;
+        }
         let slot = rid_slot(id);
         let Some(entry) = self
             .seqs
@@ -412,6 +461,9 @@ impl KvManager {
     /// Drop everything (request finished/aborted or KV discarded).
     /// `keep_host=false` also releases checkpoints.
     pub fn release(&mut self, id: RequestId, keep_host: bool) {
+        if !self.owns(id) {
+            return;
+        }
         let slot = rid_slot(id);
         let Some(entry) = self
             .seqs
@@ -446,8 +498,12 @@ impl KvManager {
 
     /// Discard a sequence's KV entirely (recompute path): frees GPU and
     /// host blocks and resets committed tokens to zero, keeping the
-    /// registration alive.
+    /// registration alive. Foreign-shard ids are a no-op like every
+    /// other entry point (`register` alone asserts, so guard first).
     pub fn discard(&mut self, id: RequestId) {
+        if !self.owns(id) {
+            return;
+        }
         self.release(id, false);
         self.register(id);
     }
@@ -670,6 +726,31 @@ mod tests {
         m.release(1, false);
         assert_eq!(m.host_free(), 16);
         assert!(m.check_conservation());
+    }
+
+    #[test]
+    fn foreign_shard_ids_never_alias() {
+        use crate::request::rid_pack_sharded;
+        let mut a = KvManager::for_shard(1, 8, 16, 16);
+        let mut b = KvManager::for_shard(2, 8, 16, 16);
+        assert_eq!(a.shard(), 1);
+        // same (slot, generation) registered in both shards
+        let ida = rid_pack_sharded(1, 3, 0);
+        let idb = rid_pack_sharded(2, 3, 0);
+        a.register(ida);
+        a.grow(ida, 32).unwrap();
+        a.commit(ida, 32).unwrap();
+        b.register(idb);
+        // shard B's id misses shard A entirely (and vice versa)
+        assert!(a.seq(idb).is_none());
+        assert!(b.seq(ida).is_none());
+        assert_eq!(a.grow(idb, 16), Err(KvError::UnknownSeq(idb)));
+        assert_eq!(b.commit(ida, 1), Err(KvError::UnknownSeq(ida)));
+        assert_eq!(a.evict_gpu(idb), 0);
+        b.release(ida, false); // no-op
+        b.discard(ida); // no-op, not a panic
+        assert_eq!(a.seq(ida).unwrap().tokens, 32);
+        assert!(a.check_conservation() && b.check_conservation());
     }
 
     #[test]

@@ -21,9 +21,14 @@
 //! figure (see `rust/benches/`) — the simulator and all policy machinery
 //! build dependency-light (`anyhow` only) with default features.
 //!
-//! Quickstart: `examples/quickstart.rs`; architecture: `DESIGN.md`;
-//! hot-path design (slab arenas, scratch buffers, streaming metrics):
-//! `rust/PERF.md`.
+//! One engine is one worker shard; [`shard`] scales the same machinery
+//! to N workers behind a placement layer with nothing shared on any hot
+//! path (ids carry their shard index, so routing is a mask+shift).
+//!
+//! Quickstart: `examples/quickstart.rs`; architecture (module map, the
+//! schedule→execute→commit loop, the id layout, shard ownership):
+//! `rust/ARCHITECTURE.md`; hot-path design (slab arenas, scratch
+//! buffers, streaming metrics): `rust/PERF.md`.
 
 pub mod backend;
 pub mod clock;
@@ -36,6 +41,7 @@ pub mod request;
 pub mod runtime;
 pub mod scheduler;
 pub mod server;
+pub mod shard;
 pub mod util;
 pub mod workload;
 
@@ -43,5 +49,21 @@ pub mod workload;
 /// discrete-event simulation deterministic.
 pub type TimeUs = u64;
 
+/// Microseconds per second (`TimeUs` scale factor).
 pub const US_PER_SEC: u64 = 1_000_000;
+/// Microseconds per millisecond (`TimeUs` scale factor).
 pub const US_PER_MS: u64 = 1_000;
+
+// ---- curated re-export surface ----
+// The types an embedder touches to stand up a serving stack, one hop
+// from the crate root; everything else stays module-qualified.
+
+/// Engine + memory + model-length configuration (presets:
+/// [`EngineConfig::sim_a100_7b`], [`EngineConfig::real_tiny`]).
+pub use config::EngineConfig;
+/// A request's packed (generation, shard, slot) handle.
+pub use request::RequestId;
+/// One worker's serving loop: schedule → execute → commit.
+pub use server::ServingEngine;
+/// Multi-worker routing: trace partitioning and live placement.
+pub use shard::{Placement, ShardRouter, ShardedClient};

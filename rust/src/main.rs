@@ -3,9 +3,13 @@
 //! ```text
 //! conserve simulate [--policy conserve|vllm++|online-only] [--rate R]
 //!                   [--cv CV] [--duration S] [--offline-pool N]
+//!                   [--shards N] [--placement rr|least-kv|affinity[:headroom]]
 //!                   [--set key=value ...]
 //!     Run a co-serving experiment on the simulated A100/Llama-2-7B
-//!     testbed and print the report.
+//!     testbed and print the report. With --shards N > 1 the trace is
+//!     routed across N independent worker shards (each its own
+//!     simulated GPU, arena, KV pool and scheduler, run on its own
+//!     thread) and per-shard plus merged reports are printed.
 //!
 //! conserve serve    [--artifacts DIR] [--duration S] [--rate R]
 //!                   [--set key=value ...]
@@ -114,9 +118,15 @@ fn simulate(args: &Args) -> Result<()> {
     let cv = args.get_f64("cv", 1.0)?;
     let duration = args.get_f64("duration", 120.0)?;
     let offline_pool = args.get_usize("offline-pool", 512)?;
+    let shards = args.get_usize("shards", 1)?;
+    let placement: conserve::shard::Placement =
+        args.get("placement").unwrap_or("affinity").parse()?;
 
     let mut lg = workload::LoadGen::new(cfg.seed, rate, cv);
     let arrivals = lg.arrivals_until(duration);
+    if shards > 1 {
+        return simulate_sharded(cfg, shards, placement, &arrivals, offline_pool, duration);
+    }
     let report = SimExperiment {
         cfg,
         online_arrivals: arrivals,
@@ -127,6 +137,40 @@ fn simulate(args: &Args) -> Result<()> {
     }
     .run();
     print_report(&report);
+    Ok(())
+}
+
+/// Sharded variant of `simulate`: the exact workload
+/// `SimExperiment::run` would serve ([`SimExperiment::events`]), routed
+/// across N worker shards.
+fn simulate_sharded(
+    cfg: EngineConfig,
+    shards: usize,
+    placement: conserve::shard::Placement,
+    online_arrivals: &[conserve::TimeUs],
+    offline_pool: usize,
+    duration: f64,
+) -> Result<()> {
+    use conserve::shard::run_sharded_sim;
+
+    let exp = SimExperiment {
+        cfg: cfg.clone(),
+        online_arrivals: online_arrivals.to_vec(),
+        online_lengths: Lengths::online_paper(),
+        offline_pool,
+        offline_lengths: Lengths::offline_paper(),
+        duration_s: duration,
+    };
+    let run = run_sharded_sim(&cfg, shards, placement, exp.events(), duration);
+    for (i, r) in run.per_shard.iter().enumerate() {
+        println!("-- shard {i} ({} requests) --", run.shard_requests[i]);
+        print_report(r);
+    }
+    println!(
+        "== merged: {shards} shards, {placement} placement, makespan {:.1} s ==",
+        run.makespan_s
+    );
+    print_report(&run.merged);
     Ok(())
 }
 

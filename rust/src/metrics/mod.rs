@@ -166,6 +166,31 @@ impl Recorder {
         self.finished[cidx(class)] += 1;
     }
 
+    /// Fold another recorder into this one (sharded runs: one recorder
+    /// per worker shard, merged for the aggregate report). Event logs
+    /// append, histograms merge bucket-wise, streaming totals add — so
+    /// merged percentiles are computed over the *union* of all shards'
+    /// samples, not an average of per-shard percentiles.
+    pub fn merge(&mut self, other: &Recorder) {
+        self.ttfts.extend_from_slice(&other.ttfts);
+        self.tokens.extend_from_slice(&other.tokens);
+        self.processed.extend_from_slice(&other.processed);
+        self.preemptions += other.preemptions;
+        self.layer_aborts += other.layer_aborts;
+        self.recomputed_tokens += other.recomputed_tokens;
+        self.ckpt_blocks += other.ckpt_blocks;
+        self.prefetch_blocks += other.prefetch_blocks;
+        self.blocking_swap_us += other.blocking_swap_us;
+        self.engine_iters += other.engine_iters;
+        for i in 0..2 {
+            self.finished[i] += other.finished[i];
+            self.gen_tokens[i] += other.gen_tokens[i];
+            self.processed_tokens[i] += other.processed_tokens[i];
+            self.ttft_hist[i].merge(&other.ttft_hist[i]);
+            self.tpot_hist[i].merge(&other.tpot_hist[i]);
+        }
+    }
+
     // ------------------------------------------------------------ queries
 
     fn class_total(totals: &[u64; 2], class: Option<Class>) -> u64 {
@@ -426,6 +451,34 @@ mod tests {
         assert!(close(r.mean_ttft_ms(Class::Online), 200.0, 1e-9));
         assert_eq!(r.gen_token_count(None), 2);
         assert_eq!(r.processed_token_count(None), 512);
+    }
+
+    #[test]
+    fn merge_unions_samples_and_totals() {
+        let mut a = Recorder::new();
+        let mut b = Recorder::new();
+        a.record_first_token(1_000, Class::Online, 100_000);
+        a.record_processed(1_000, Class::Online, 64);
+        a.record_finished(Class::Online);
+        for _ in 0..99 {
+            b.record_first_token(2_000, Class::Online, 100_000);
+        }
+        b.record_first_token(3_000, Class::Online, 4_000_000);
+        b.record_processed(3_000, Class::Offline, 32);
+        b.record_finished(Class::Offline);
+        b.preemptions = 3;
+        a.merge(&b);
+        assert_eq!(a.gen_token_count(Some(Class::Online)), 101);
+        assert_eq!(a.processed_token_count(None), 96);
+        assert_eq!(a.finished, [1, 1]);
+        assert_eq!(a.preemptions, 3);
+        assert_eq!(a.ttfts.len(), 101);
+        // p99 over the union: rank 100 of 101 samples is still 100ms
+        assert!(close(a.p99_ttft_ms(Class::Online), 100.0, 0.016));
+        // merging an empty recorder changes nothing
+        let snapshot = a.gen_token_count(None);
+        a.merge(&Recorder::new());
+        assert_eq!(a.gen_token_count(None), snapshot);
     }
 
     #[test]

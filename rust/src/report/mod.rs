@@ -29,6 +29,29 @@ pub struct SimExperiment {
 }
 
 impl SimExperiment {
+    /// The request trace this experiment serves: online arrivals with
+    /// lengths sampled under the experiment seed, then the offline pool
+    /// at t=0. [`run`](Self::run) serves exactly this vector, and
+    /// sharded sweeps ([`crate::shard::run_sharded_sim`]) route it
+    /// across workers — both paths construct the workload here, so a
+    /// 1-shard sweep point and `run` see the identical request set.
+    pub fn events(&self) -> Vec<Request> {
+        let mut rng = Rng::new(self.cfg.seed);
+        let mut events: Vec<Request> = Vec::new();
+        let mut next_id = 1u64;
+        for &t in &self.online_arrivals {
+            let LengthSample { input, output } = self.online_lengths.sample(&mut rng);
+            events.push(Request::new(next_id, Class::Online, vec![], input, output, t));
+            next_id += 1;
+        }
+        for _ in 0..self.offline_pool {
+            let LengthSample { input, output } = self.offline_lengths.sample(&mut rng);
+            events.push(Request::new(next_id, Class::Offline, vec![], input, output, 0));
+            next_id += 1;
+        }
+        events
+    }
+
     pub fn run(&self) -> Report {
         let clock = Clock::virtual_at(0);
         let cost = CostModel::a100_llama2_7b();
@@ -47,21 +70,7 @@ impl SimExperiment {
         // reset the experiment clock reference (backend shares `clock`)
         let _ = &mut backend;
 
-        let mut rng = Rng::new(self.cfg.seed);
-        let mut events: Vec<Request> = Vec::new();
-        let mut next_id = 1u64;
-        for &t in &self.online_arrivals {
-            let LengthSample { input, output } = self.online_lengths.sample(&mut rng);
-            events.push(Request::new(next_id, Class::Online, vec![], input, output, t));
-            next_id += 1;
-        }
-        for _ in 0..self.offline_pool {
-            let LengthSample { input, output } = self.offline_lengths.sample(&mut rng);
-            events.push(Request::new(next_id, Class::Offline, vec![], input, output, 0));
-            next_id += 1;
-        }
-
-        let arrivals = ArrivalSource::from_trace(events);
+        let arrivals = ArrivalSource::from_trace(self.events());
         let mut engine =
             ServingEngine::new(self.cfg.clone(), backend, clock, profile, arrivals);
         let until = (self.duration_s * US_PER_SEC as f64) as TimeUs;

@@ -9,12 +9,21 @@
 //!
 //! Slots are recycled through a free list. Each slot carries a
 //! *generation* counter that is bumped on removal and baked into the ids
-//! it hands out (see [`rid_pack`]); a stale id whose generation no longer
-//! matches the slot resolves to `None` instead of aliasing the slot's
-//! next occupant. Slot 0 is reserved so that id 0 is never issued and can
-//! be used as a sentinel.
+//! it hands out (see [`rid_pack_sharded`]); a stale id whose generation
+//! no longer matches the slot resolves to `None` instead of aliasing the
+//! slot's next occupant. Slot 0 is reserved so that id 0 is never issued
+//! and can be used as a sentinel.
+//!
+//! Every arena belongs to one worker *shard* ([`RequestArena::for_shard`];
+//! the default is shard 0). Issued ids carry the shard index in bits
+//! 24..32 and every lookup checks it, so an id from another shard's arena
+//! misses here even if its slot and generation happen to coincide with a
+//! live occupant — the cross-shard analogue of the generation guard.
 
-use super::{rid_gen, rid_pack, rid_slot, Request, RequestId};
+use super::{
+    rid_gen, rid_pack_sharded, rid_shard, rid_slot, Request, RequestId, MAX_SHARDS,
+    SLOTS_PER_SHARD,
+};
 
 #[derive(Debug, Default)]
 struct Slot {
@@ -22,10 +31,11 @@ struct Slot {
     req: Option<Request>,
 }
 
-/// Vec-backed request slab with free-list recycling and generation-
-/// guarded ids.
+/// Vec-backed request slab with free-list recycling and generation- and
+/// shard-guarded ids.
 #[derive(Debug)]
 pub struct RequestArena {
+    shard: u32,
     slots: Vec<Slot>,
     free: Vec<u32>,
     live: usize,
@@ -38,8 +48,17 @@ impl Default for RequestArena {
 }
 
 impl RequestArena {
+    /// Single-worker arena (shard 0).
     pub fn new() -> Self {
+        Self::for_shard(0)
+    }
+
+    /// Arena for worker shard `shard`: every id it issues carries the
+    /// shard index, and lookups reject ids from other shards.
+    pub fn for_shard(shard: usize) -> Self {
+        assert!(shard < MAX_SHARDS, "shard {shard} out of range");
         Self {
+            shard: shard as u32,
             // slot 0 reserved: ids start at 1
             slots: vec![Slot::default()],
             free: Vec::new(),
@@ -53,17 +72,27 @@ impl RequestArena {
         a
     }
 
+    /// The worker shard this arena belongs to.
+    pub fn shard(&self) -> usize {
+        self.shard as usize
+    }
+
     /// Insert a request, assigning (and writing into `req.id`) its arena
     /// id. Recycled slots hand out a fresh generation.
     pub fn insert(&mut self, mut req: Request) -> RequestId {
         let slot = match self.free.pop() {
             Some(s) => s as usize,
             None => {
+                assert!(
+                    self.slots.len() < SLOTS_PER_SHARD,
+                    "shard {} arena exhausted its 24-bit slot space",
+                    self.shard
+                );
                 self.slots.push(Slot::default());
                 self.slots.len() - 1
             }
         };
-        let id = rid_pack(slot, self.slots[slot].generation);
+        let id = rid_pack_sharded(self.shard as usize, slot, self.slots[slot].generation);
         req.id = id;
         self.slots[slot].req = Some(req);
         self.live += 1;
@@ -72,6 +101,9 @@ impl RequestArena {
 
     #[inline]
     fn slot_of(&self, id: RequestId) -> Option<&Slot> {
+        if rid_shard(id) != self.shard as usize {
+            return None;
+        }
         self.slots
             .get(rid_slot(id))
             .filter(|s| s.generation == rid_gen(id))
@@ -84,6 +116,9 @@ impl RequestArena {
 
     #[inline]
     pub fn get_mut(&mut self, id: RequestId) -> Option<&mut Request> {
+        if rid_shard(id) != self.shard as usize {
+            return None;
+        }
         self.slots
             .get_mut(rid_slot(id))
             .filter(|s| s.generation == rid_gen(id))
@@ -96,8 +131,11 @@ impl RequestArena {
     }
 
     /// Remove a request, recycling its slot under a bumped generation.
-    /// Stale ids (generation mismatch) are a no-op returning `None`.
+    /// Stale or foreign-shard ids are a no-op returning `None`.
     pub fn remove(&mut self, id: RequestId) -> Option<Request> {
+        if rid_shard(id) != self.shard as usize {
+            return None;
+        }
         let slot = rid_slot(id);
         let s = self.slots.get_mut(slot)?;
         if s.generation != rid_gen(id) || s.req.is_none() {
@@ -215,6 +253,27 @@ mod tests {
         assert_eq!(ids, vec![i1, i3]);
         assert_eq!(a.values().count(), 2);
         assert_eq!(a.slot_count(), 4); // reserved slot 0 + 3
+    }
+
+    #[test]
+    fn cross_shard_ids_never_resolve() {
+        let mut a = RequestArena::for_shard(1);
+        let mut b = RequestArena::for_shard(2);
+        let ia = a.insert(req());
+        let ib = b.insert(req());
+        // identical (slot, generation) halves, different shard bits
+        assert_eq!(rid_slot(ia), rid_slot(ib));
+        assert_eq!(rid_gen(ia), rid_gen(ib));
+        assert_ne!(ia, ib);
+        assert_eq!(rid_shard(ia), 1);
+        assert_eq!(a.shard(), 1);
+        // foreign-shard ids miss every accessor
+        assert!(a.get(ib).is_none());
+        assert!(b.get(ia).is_none());
+        assert!(a.get_mut(ib).is_none());
+        assert!(!a.contains(ib));
+        assert!(a.remove(ib).is_none());
+        assert_eq!(b.len(), 1);
     }
 
     #[test]

@@ -13,18 +13,45 @@ use crate::TimeUs;
 
 pub use arena::RequestArena;
 
-/// Dense request handle: the low 32 bits are a slab *slot* index into
-/// [`RequestArena`] (and the KV manager's sequence table), the high 32
-/// bits are the slot's *generation* at insertion time. Slot recycling
-/// bumps the generation, so a stale id held after its request was removed
-/// can never alias the slot's next occupant — lookups with a mismatched
-/// generation simply miss.
+/// Dense request handle packed as **(generation:32 | shard:8 |
+/// slot:24)**, low bits first:
+///
+/// * bits 0..24 — slab *slot* index into the owning shard's
+///   [`RequestArena`] (and its KV manager's sequence table);
+/// * bits 24..32 — *shard* index: which worker shard issued the id;
+/// * bits 32..64 — the slot's *generation* at insertion time.
+///
+/// Slot recycling bumps the generation, so a stale id held after its
+/// request was removed can never alias the slot's next occupant —
+/// lookups with a mismatched generation simply miss. The shard bits make
+/// the same guarantee *across* shards: every arena and KV table checks
+/// them, so an id from shard A presented to shard B misses even when
+/// slot and generation coincide, and routing a ticket back to its owner
+/// is a mask+shift ([`rid_shard`]), not a table lookup.
 pub type RequestId = u64;
 
-/// Slot index of a request id (dense array key).
+/// Bits of a [`RequestId`] carrying the shard index.
+pub const SHARD_BITS: u32 = 8;
+/// Bits of a [`RequestId`] carrying the slot index within a shard.
+pub const SLOT_BITS: u32 = 24;
+/// Maximum number of worker shards addressable by an id (256).
+pub const MAX_SHARDS: usize = 1 << SHARD_BITS;
+/// Maximum live requests per shard (16M slots, slot 0 reserved).
+pub const SLOTS_PER_SHARD: usize = 1 << SLOT_BITS;
+
+const SLOT_MASK: u64 = (1 << SLOT_BITS) - 1;
+const SHARD_MASK: u64 = (1 << SHARD_BITS) - 1;
+
+/// Slot index of a request id (dense array key within its shard).
 #[inline]
 pub fn rid_slot(id: RequestId) -> usize {
-    (id & 0xffff_ffff) as usize
+    (id & SLOT_MASK) as usize
+}
+
+/// Shard index of a request id (which worker shard owns it).
+#[inline]
+pub fn rid_shard(id: RequestId) -> usize {
+    ((id >> SLOT_BITS) & SHARD_MASK) as usize
 }
 
 /// Generation counter of a request id.
@@ -33,10 +60,19 @@ pub fn rid_gen(id: RequestId) -> u32 {
     (id >> 32) as u32
 }
 
-/// Pack a slot + generation into a request id.
+/// Pack a slot + generation into a shard-0 request id (the single-worker
+/// engine). See [`rid_pack_sharded`] for the general form.
 #[inline]
 pub fn rid_pack(slot: usize, generation: u32) -> RequestId {
-    ((generation as u64) << 32) | slot as u64
+    rid_pack_sharded(0, slot, generation)
+}
+
+/// Pack (shard, slot, generation) into a request id.
+#[inline]
+pub fn rid_pack_sharded(shard: usize, slot: usize, generation: u32) -> RequestId {
+    debug_assert!(shard < MAX_SHARDS, "shard {shard} out of range");
+    debug_assert!(slot < SLOTS_PER_SHARD, "slot {slot} out of range");
+    ((generation as u64) << 32) | ((shard as u64) << SLOT_BITS) | slot as u64
 }
 
 pub type TokenId = u16; // byte-level vocab (256) fits easily
@@ -221,6 +257,23 @@ mod tests {
 
     fn req() -> Request {
         Request::new(1, Class::Online, vec![], 100, 20, 0)
+    }
+
+    #[test]
+    fn id_layout_round_trips() {
+        let id = rid_pack_sharded(5, 1234, 77);
+        assert_eq!(rid_shard(id), 5);
+        assert_eq!(rid_slot(id), 1234);
+        assert_eq!(rid_gen(id), 77);
+        // shard 0 packing is the legacy (slot, generation) layout
+        assert_eq!(rid_pack(1234, 77), rid_pack_sharded(0, 1234, 77));
+        // same (slot, generation) in different shards -> distinct ids
+        assert_ne!(rid_pack_sharded(1, 1234, 77), rid_pack_sharded(2, 1234, 77));
+        // extremes stay in range
+        let hi = rid_pack_sharded(MAX_SHARDS - 1, SLOTS_PER_SHARD - 1, u32::MAX);
+        assert_eq!(rid_shard(hi), MAX_SHARDS - 1);
+        assert_eq!(rid_slot(hi), SLOTS_PER_SHARD - 1);
+        assert_eq!(rid_gen(hi), u32::MAX);
     }
 
     #[test]

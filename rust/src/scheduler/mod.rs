@@ -20,6 +20,10 @@
 //! iterations. The caller owns the [`ScheduleOutcome`] and passes it back
 //! in each iteration, so plan/victim vectors recycle their capacity too.
 //! See `rust/PERF.md` for the invariants.
+//!
+//! In a sharded deployment ([`crate::shard`]) every worker shard owns
+//! one scheduler over its own arena and KV pool; nothing in this module
+//! is shared across shards.
 
 pub mod budget;
 pub mod preempt;
@@ -140,6 +144,11 @@ pub struct UnifiedScheduler {
     online_q: VecDeque<RequestId>,
     offline_q: VecDeque<RequestId>,
     running: Vec<RequestId>,
+    /// Full-length KV footprint (blocks) reserved by running online
+    /// requests, as of the last `schedule` call. Published to the shard
+    /// load board ([`crate::shard::ShardLoads`]) for placement; costs
+    /// nothing extra — the admission pass computes it anyway.
+    reserved_online: usize,
     // ---- persistent scratch (capacity reused across iterations) ----
     /// Running set sorted for this iteration's passes.
     scratch_order: Vec<RequestId>,
@@ -168,6 +177,7 @@ impl UnifiedScheduler {
             online_q: VecDeque::new(),
             offline_q: VecDeque::new(),
             running: Vec::new(),
+            reserved_online: 0,
             scratch_order: Vec::new(),
             scratch_cont: Vec::new(),
             scratch_deferred: Vec::new(),
@@ -217,6 +227,12 @@ impl UnifiedScheduler {
 
     pub fn running_ids(&self) -> &[RequestId] {
         &self.running
+    }
+
+    /// KV blocks reserved by running online requests at full length
+    /// (snapshot from the last scheduling step; see the field docs).
+    pub fn reserved_online_blocks(&self) -> usize {
+        self.reserved_online
     }
 
     pub fn has_work(&self, table: &RequestArena) -> bool {
@@ -440,6 +456,8 @@ impl UnifiedScheduler {
                 break;
             }
         }
+
+        self.reserved_online = reserved_online;
 
         let has_online = items.iter().any(|i| i.class == Class::Online)
             || !self.online_q.is_empty();

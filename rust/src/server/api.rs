@@ -35,12 +35,17 @@ impl ArrivalSource {
     }
 
     pub fn channel() -> (EngineClient, Self) {
+        Self::channel_shared(Arc::new(AtomicU64::new(1)))
+    }
+
+    /// Channel source whose client draws tickets from `next_id`. Sharded
+    /// frontends pass one shared counter to every shard's client so
+    /// tickets stay globally unique across shards (see
+    /// [`sharded_channel`](crate::shard::sharded_channel)).
+    pub fn channel_shared(next_id: Arc<AtomicU64>) -> (EngineClient, Self) {
         let (tx, rx) = channel();
         (
-            EngineClient {
-                tx,
-                next_id: Arc::new(AtomicU64::new(1)),
-            },
+            EngineClient { tx, next_id },
             ArrivalSource::Channel {
                 rx,
                 peeked: None,
@@ -167,6 +172,12 @@ impl EngineClient {
     /// Real-time streaming API: one latency-critical request.
     pub fn submit_online(&self, prompt: Vec<TokenId>, max_new_tokens: usize) -> RequestId {
         self.submit(Class::Online, prompt, max_new_tokens)
+    }
+
+    /// Batch API, single request: one best-effort request (the sharded
+    /// client places batch members on different shards one by one).
+    pub fn submit_offline(&self, prompt: Vec<TokenId>, max_new_tokens: usize) -> RequestId {
+        self.submit(Class::Offline, prompt, max_new_tokens)
     }
 
     /// Batch API: a pool of best-effort requests (returns their ids).

@@ -20,6 +20,12 @@
 //! buffers reused across iterations, and debug-only bookkeeping is fully
 //! gated behind `CONSERVE_DEBUG` (checked once at construction). See
 //! `rust/PERF.md`.
+//!
+//! One engine serves one worker shard. Multi-worker deployments run N
+//! engines ([`ServingEngine::for_shard`]) behind the routing layer in
+//! [`crate::shard`]; the only sharded addition to this loop is an
+//! optional once-per-iteration load publish (three relaxed atomic
+//! stores).
 
 pub mod api;
 
@@ -31,7 +37,9 @@ use crate::metrics::Recorder;
 use crate::profiler::LatencyProfile;
 use crate::request::{Class, KvResidence, RequestArena, RequestId, State, TokenId};
 use crate::scheduler::{budget, preempt, Ctx, Policy, ScheduleOutcome, UnifiedScheduler};
+use crate::shard::ShardLoads;
 use crate::TimeUs;
+use std::sync::Arc;
 
 pub use api::{ArrivalSource, EngineClient};
 
@@ -77,6 +85,10 @@ pub struct ServingEngine<B: ExecBackend> {
     /// pass touches only the handful of restoring requests instead of
     /// scanning the whole arena each iteration.
     prefetch_watch: Vec<RequestId>,
+    /// Shared load board for sharded deployments: when set, the loop
+    /// publishes this shard's load once per iteration (three relaxed
+    /// atomic stores — no lock on the hot path).
+    loads: Option<Arc<ShardLoads>>,
     // ---- persistent scratch (reused every iteration) ----
     io_scratch: Vec<SwapOp>,
     ids_scratch: Vec<RequestId>,
@@ -85,6 +97,7 @@ pub struct ServingEngine<B: ExecBackend> {
 }
 
 impl<B: ExecBackend> ServingEngine<B> {
+    /// Single-worker engine (shard 0).
     pub fn new(
         cfg: EngineConfig,
         backend: B,
@@ -92,15 +105,35 @@ impl<B: ExecBackend> ServingEngine<B> {
         profile: LatencyProfile,
         arrivals: ArrivalSource,
     ) -> Self {
+        Self::for_shard(0, cfg, backend, clock, profile, arrivals)
+    }
+
+    /// Engine for worker shard `shard` of a sharded deployment: its
+    /// arena and KV manager stamp (and check) the shard index in every
+    /// id they issue, so this engine's ids can never resolve against a
+    /// sibling shard. See [`crate::shard`].
+    pub fn for_shard(
+        shard: usize,
+        cfg: EngineConfig,
+        backend: B,
+        clock: Clock,
+        profile: LatencyProfile,
+        arrivals: ArrivalSource,
+    ) -> Self {
         let swap = SwapEngine::new(backend.block_bytes(), backend.link_bandwidth());
-        let kv = KvManager::new(cfg.mem.gpu_blocks, cfg.mem.host_blocks, cfg.mem.block_tokens);
+        let kv = KvManager::for_shard(
+            shard,
+            cfg.mem.gpu_blocks,
+            cfg.mem.host_blocks,
+            cfg.mem.block_tokens,
+        );
         let ckpt = CkptController::new(cfg.sched.ckpt_free_watermark, 64);
         Self {
             sched: UnifiedScheduler::new(cfg.sched.clone()),
             cfg,
             backend,
             clock,
-            table: RequestArena::new(),
+            table: RequestArena::for_shard(shard),
             kv,
             swap,
             ckpt,
@@ -112,6 +145,7 @@ impl<B: ExecBackend> ServingEngine<B> {
             debug: std::env::var("CONSERVE_DEBUG").is_ok(),
             retain_finished: true,
             prefetch_watch: Vec::new(),
+            loads: None,
             io_scratch: Vec::new(),
             ids_scratch: Vec::new(),
             blk_scratch: Vec::new(),
@@ -121,6 +155,18 @@ impl<B: ExecBackend> ServingEngine<B> {
 
     pub fn set_token_callback(&mut self, cb: TokenCallback) {
         self.on_token = Some(cb);
+    }
+
+    /// Attach the shared load board of a sharded deployment. The run
+    /// loop publishes (resident KV blocks, online-reserved blocks,
+    /// waiting requests) for this engine's shard once per iteration.
+    pub fn set_shard_loads(&mut self, loads: Arc<ShardLoads>) {
+        self.loads = Some(loads);
+    }
+
+    /// The worker shard this engine serves (0 for single-worker).
+    pub fn shard(&self) -> usize {
+        self.table.shard()
     }
 
     /// Keep (default) or reap finished requests. With `false`, a
@@ -195,6 +241,14 @@ impl<B: ExecBackend> ServingEngine<B> {
             }
             if let Some(d) = dbg.as_mut() {
                 d.last_plan = out.plan.summary();
+            }
+            if let Some(loads) = &self.loads {
+                loads.publish(
+                    self.table.shard(),
+                    (self.kv.gpu_total() - self.kv.gpu_free()) as u64,
+                    self.sched.reserved_online_blocks() as u64,
+                    (self.sched.online_waiting() + self.sched.offline_waiting()) as u64,
+                );
             }
 
             self.apply_victims(&out, now);

@@ -1,0 +1,588 @@
+//! Multi-worker sharded serving: N independent engines behind one
+//! placement layer.
+//!
+//! ConServe's fine-grained resource management (token budgets,
+//! sub-iteration preemption, incremental KV) is a *per-GPU* story;
+//! scaling it to heavy traffic means running many such engines side by
+//! side with cheap, allocation-free routing. A **shard** is one complete
+//! worker: its own [`RequestArena`](crate::request::RequestArena),
+//! [`KvManager`](crate::kvcache::KvManager) + block pools, and
+//! [`UnifiedScheduler`](crate::scheduler::UnifiedScheduler) driving one
+//! backend. Shards share *nothing* on the hot path — no lock, no table,
+//! no allocator — the only cross-shard traffic is submission-time
+//! placement and the relaxed-atomic load summaries ([`ShardLoads`]) that
+//! feed it.
+//!
+//! Routing rides on the id layout: [`RequestId`] packs **(generation:32 |
+//! shard:8 | slot:24)**, so resolving a ticket to its owner is a
+//! mask+shift ([`rid_shard`](crate::request::rid_shard)), and every
+//! shard's arena and KV table
+//! reject ids whose shard bits are not theirs — a stale or misrouted id
+//! can never alias state in another shard (see `tests/shard_props.rs`).
+//!
+//! Two frontends mirror the single-worker engine's:
+//!
+//! * [`ShardRouter`] — trace mode: partition a pre-generated request
+//!   trace across shards with a [`Placement`] policy, then run each
+//!   bucket on its own worker thread ([`run_sharded_sim`]) and merge the
+//!   per-shard recorders into one aggregate [`Report`].
+//! * [`ShardedClient`] — live mode: per-shard [`EngineClient`]s behind
+//!   one submission handle; placement reads the [`ShardLoads`] snapshots
+//!   the engines publish each iteration.
+//!
+//! The scaling acceptance bench is `cargo bench --bench
+//! bench_shard_scale` (results: `BENCH_shard.json`; schema in
+//! `rust/PERF.md`).
+
+pub mod placement;
+
+use crate::backend::{CostModel, SimBackend};
+use crate::clock::Clock;
+use crate::config::EngineConfig;
+use crate::metrics::Recorder;
+use crate::profiler::LatencyProfile;
+use crate::report::Report;
+use crate::request::{Class, Request, RequestId, TokenId, MAX_SHARDS};
+use crate::server::{ArrivalSource, EngineClient, ServingEngine};
+use crate::{TimeUs, US_PER_SEC};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+pub use placement::{LoadSnapshot, Placement};
+
+/// Lock-free per-shard load board. Engines publish a summary once per
+/// scheduling iteration (three relaxed stores); placement reads a
+/// snapshot at submission time. Staleness is bounded by one engine
+/// iteration, which is exactly the granularity at which load can change.
+#[derive(Debug)]
+pub struct ShardLoads {
+    capacity_blocks: u64,
+    cells: Vec<LoadCell>,
+}
+
+#[derive(Debug, Default)]
+struct LoadCell {
+    resident: AtomicU64,
+    online: AtomicU64,
+    waiting: AtomicU64,
+    /// Bumped on every publish; lets submitters expire their optimistic
+    /// in-flight charges once the engine has seen the queued arrivals.
+    seq: AtomicU64,
+}
+
+impl ShardLoads {
+    /// A board for `n_shards` shards, each with a GPU KV pool of
+    /// `capacity_blocks` blocks.
+    pub fn new(n_shards: usize, capacity_blocks: usize) -> Self {
+        assert!((1..=MAX_SHARDS).contains(&n_shards));
+        Self {
+            capacity_blocks: capacity_blocks as u64,
+            cells: (0..n_shards).map(|_| LoadCell::default()).collect(),
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// Publish shard `shard`'s current load (called by its engine once
+    /// per iteration; relaxed stores, no synchronization).
+    pub fn publish(&self, shard: usize, resident_blocks: u64, online_blocks: u64, waiting: u64) {
+        let c = &self.cells[shard];
+        c.resident.store(resident_blocks, Ordering::Relaxed);
+        c.online.store(online_blocks, Ordering::Relaxed);
+        c.waiting.store(waiting, Ordering::Relaxed);
+        c.seq.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Publish count for `shard`: how many times its engine has posted a
+    /// load summary. The sharded client uses advances of this counter to
+    /// expire its optimistic in-flight charges (a fresh publish already
+    /// reflects the arrivals queued since the last one).
+    pub fn publish_seq(&self, shard: usize) -> u64 {
+        self.cells[shard].seq.load(Ordering::Relaxed)
+    }
+
+    /// Read one shard's snapshot.
+    pub fn snapshot(&self, shard: usize) -> LoadSnapshot {
+        let c = &self.cells[shard];
+        LoadSnapshot {
+            resident_blocks: c.resident.load(Ordering::Relaxed),
+            online_blocks: c.online.load(Ordering::Relaxed),
+            waiting: c.waiting.load(Ordering::Relaxed),
+            capacity_blocks: self.capacity_blocks,
+        }
+    }
+
+    /// Fill `out` with all shards' snapshots (submission path; reuses the
+    /// caller's buffer).
+    pub fn snapshot_into(&self, out: &mut Vec<LoadSnapshot>) {
+        out.clear();
+        out.extend((0..self.cells.len()).map(|s| self.snapshot(s)));
+    }
+}
+
+/// Trace-mode request router: assigns each request to a shard under a
+/// [`Placement`] policy and buckets it into that shard's trace.
+///
+/// Load is tracked as *admission-time estimates* — the cumulative KV
+/// footprint (`total_len` in blocks) routed to each shard — which is the
+/// same information a global admission layer has before any worker has
+/// run. The estimates never decay; over a long trace this balances
+/// cumulative KV demand rather than instantaneous residency, which is
+/// the right objective when every shard must eventually absorb its whole
+/// bucket.
+#[derive(Debug)]
+pub struct ShardRouter {
+    policy: Placement,
+    tick: usize,
+    block_tokens: usize,
+    est: Vec<LoadSnapshot>,
+    buckets: Vec<Vec<Request>>,
+}
+
+impl ShardRouter {
+    pub fn new(n_shards: usize, policy: Placement, cfg: &EngineConfig) -> Self {
+        assert!(
+            (1..=MAX_SHARDS).contains(&n_shards),
+            "n_shards must be in 1..={MAX_SHARDS}"
+        );
+        Self {
+            policy,
+            tick: 0,
+            block_tokens: cfg.mem.block_tokens,
+            est: vec![
+                LoadSnapshot {
+                    capacity_blocks: cfg.mem.gpu_blocks as u64,
+                    ..LoadSnapshot::default()
+                };
+                n_shards
+            ],
+            buckets: (0..n_shards).map(|_| Vec::new()).collect(),
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.buckets.len()
+    }
+
+    /// Choose a shard for `req` and charge its estimated KV footprint to
+    /// that shard. Does not store the request — use [`push`](Self::push)
+    /// to also bucket it.
+    pub fn route(&mut self, req: &Request) -> usize {
+        let need = req.total_len().div_ceil(self.block_tokens) as u64;
+        let s = self.policy.pick(req.class, need, &self.est, self.tick);
+        self.tick += 1;
+        let e = &mut self.est[s];
+        e.resident_blocks += need;
+        e.waiting += 1;
+        if req.class == Class::Online {
+            e.online_blocks += need;
+        }
+        s
+    }
+
+    /// Route `req` and append it to its shard's trace bucket. Returns the
+    /// chosen shard.
+    pub fn push(&mut self, req: Request) -> usize {
+        let s = self.route(&req);
+        self.buckets[s].push(req);
+        s
+    }
+
+    /// Requests routed to each shard so far.
+    pub fn bucket_sizes(&self) -> Vec<usize> {
+        self.buckets.iter().map(Vec::len).collect()
+    }
+
+    /// Consume the router, yielding one trace per shard.
+    pub fn into_traces(self) -> Vec<Vec<Request>> {
+        self.buckets
+    }
+}
+
+/// Result of a sharded simulation run: per-shard reports plus the merged
+/// aggregate ([`Recorder::merge`] folds the shard recorders, so the
+/// merged percentiles are over the union of all samples, not an average
+/// of averages).
+#[derive(Debug)]
+pub struct ShardedRun {
+    /// One report per shard, over that shard's own finish time.
+    pub per_shard: Vec<Report>,
+    /// Requests routed to each shard.
+    pub shard_requests: Vec<usize>,
+    /// Aggregate report over the fleet makespan.
+    pub merged: Report,
+    /// Fleet makespan in seconds: the slowest shard's finish time (the
+    /// denominator of aggregate throughput).
+    pub makespan_s: f64,
+}
+
+/// Partition `events` across `n_shards` simulated workers under
+/// `policy`, run every shard to completion on its own OS thread (each
+/// with a private virtual clock, simulated A100 backend, arena, KV pool
+/// and scheduler), and aggregate the results.
+///
+/// `duration_s` bounds each shard's run exactly like
+/// [`SimExperiment`](crate::report::SimExperiment): a shard stops when
+/// its work is exhausted or the cap is hit. With `n_shards == 1` and the
+/// same config this is the single-worker experiment, so sweeps against a
+/// 1-shard baseline are apples-to-apples.
+pub fn run_sharded_sim(
+    cfg: &EngineConfig,
+    n_shards: usize,
+    policy: Placement,
+    events: Vec<Request>,
+    duration_s: f64,
+) -> ShardedRun {
+    let mut router = ShardRouter::new(n_shards, policy, cfg);
+    for r in events {
+        router.push(r);
+    }
+    let traces = router.into_traces();
+    let shard_requests: Vec<usize> = traces.iter().map(Vec::len).collect();
+    let until = (duration_s * US_PER_SEC as f64) as TimeUs;
+
+    // One offline profiling pass (§4.5) shared by all shards: the shards
+    // are identical hardware, so the fitted model is too.
+    let cost = CostModel::a100_llama2_7b();
+    let profile = {
+        let pclock = Clock::virtual_at(0);
+        let mut pb = SimBackend::new(cost, pclock, cfg.sched.safepoint_layers);
+        LatencyProfile::profile(&mut pb, 4096, 128, 2048).expect("profiling failed")
+    };
+    let sched_policy = cfg.sched.policy;
+
+    let results: Vec<(Recorder, TimeUs)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = traces
+            .into_iter()
+            .enumerate()
+            .map(|(shard, trace)| {
+                let cfg = cfg.clone();
+                scope.spawn(move || {
+                    let clock = Clock::virtual_at(0);
+                    let backend =
+                        SimBackend::new(cost, clock.clone(), cfg.sched.safepoint_layers);
+                    let arrivals = ArrivalSource::from_trace(trace);
+                    let mut engine =
+                        ServingEngine::for_shard(shard, cfg, backend, clock, profile, arrivals);
+                    engine.set_retain_finished(false);
+                    let end = engine.run(until);
+                    assert!(
+                        engine.kv.check_conservation(),
+                        "shard {shard}: KV conservation violated"
+                    );
+                    (std::mem::take(&mut engine.rec), end)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("shard worker panicked"))
+            .collect()
+    });
+
+    let makespan = results
+        .iter()
+        .map(|&(_, end)| end.min(until))
+        .max()
+        .unwrap_or(1)
+        .max(1);
+    let per_shard: Vec<Report> = results
+        .iter()
+        .map(|(rec, end)| Report::from_engine(rec, sched_policy, (*end).min(until).max(1)))
+        .collect();
+    let mut merged_rec = Recorder::new();
+    for (rec, _) in &results {
+        merged_rec.merge(rec);
+    }
+    let merged = Report::from_engine(&merged_rec, sched_policy, makespan);
+    ShardedRun {
+        per_shard,
+        shard_requests,
+        merged,
+        makespan_s: makespan as f64 / US_PER_SEC as f64,
+    }
+}
+
+/// A submission ticket plus the shard it was routed to (results are
+/// collected from that shard's engine by matching
+/// [`Request::submitted_id`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardTicket {
+    pub shard: usize,
+    pub ticket: RequestId,
+}
+
+/// Live-mode submission handle over N shard engines: one
+/// [`EngineClient`] per shard behind a [`Placement`] policy fed by the
+/// engines' published [`ShardLoads`].
+///
+/// Tickets are globally unique across shards (the per-shard clients
+/// share one ticket counter), and placement is lock-free: a snapshot of
+/// the load board plus a few atomic ops. Thread-safe — wrap it in an
+/// `Arc` to share across producer threads.
+///
+/// Placement overlays *optimistic in-flight charges* on the board:
+/// submissions made since a shard's last publish are invisible to it
+/// (the board only updates once per engine iteration), so without the
+/// overlay a burst between iterations would herd onto the one argmin
+/// shard. Each placement charges its KV footprint to the chosen shard;
+/// the charge expires when that shard's publish sequence advances,
+/// because a fresh publish already reflects the drained arrivals.
+pub struct ShardedClient {
+    clients: Vec<EngineClient>,
+    loads: Arc<ShardLoads>,
+    policy: Placement,
+    tick: AtomicUsize,
+    block_tokens: usize,
+    pending: Vec<PendingCell>,
+}
+
+/// Per-shard optimistic charge (see [`ShardedClient`] docs). Relaxed
+/// atomics; concurrent submitters may briefly double-reset, which only
+/// softens the estimate.
+#[derive(Debug, Default)]
+struct PendingCell {
+    seq: AtomicU64,
+    blocks: AtomicU64,
+    online_blocks: AtomicU64,
+}
+
+impl ShardedClient {
+    /// Shared load board (for observability or ad-hoc placement).
+    pub fn loads(&self) -> &Arc<ShardLoads> {
+        &self.loads
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.clients.len()
+    }
+
+    fn place(&self, class: Class, prompt_len: usize, max_new_tokens: usize) -> usize {
+        let need = (prompt_len + max_new_tokens).div_ceil(self.block_tokens) as u64;
+        // submission path, off every engine's hot loop: a small snapshot
+        // buffer per call is fine
+        let mut snaps = Vec::with_capacity(self.clients.len());
+        self.loads.snapshot_into(&mut snaps);
+        for (s, snap) in snaps.iter_mut().enumerate() {
+            let cell = &self.pending[s];
+            let seq = self.loads.publish_seq(s);
+            if cell.seq.swap(seq, Ordering::Relaxed) != seq {
+                // the engine published since our last look: its snapshot
+                // already covers what we had charged
+                cell.blocks.store(0, Ordering::Relaxed);
+                cell.online_blocks.store(0, Ordering::Relaxed);
+            }
+            snap.resident_blocks += cell.blocks.load(Ordering::Relaxed);
+            snap.online_blocks += cell.online_blocks.load(Ordering::Relaxed);
+        }
+        let s = self
+            .policy
+            .pick(class, need, &snaps, self.tick.fetch_add(1, Ordering::Relaxed));
+        let cell = &self.pending[s];
+        cell.blocks.fetch_add(need, Ordering::Relaxed);
+        if class == Class::Online {
+            cell.online_blocks.fetch_add(need, Ordering::Relaxed);
+        }
+        s
+    }
+
+    /// Route one latency-critical request to a shard.
+    pub fn submit_online(&self, prompt: Vec<TokenId>, max_new_tokens: usize) -> ShardTicket {
+        let shard = self.place(Class::Online, prompt.len(), max_new_tokens);
+        let ticket = self.clients[shard].submit_online(prompt, max_new_tokens);
+        ShardTicket { shard, ticket }
+    }
+
+    /// Route a pool of best-effort requests, placing each independently.
+    pub fn submit_batch(&self, prompts: Vec<(Vec<TokenId>, usize)>) -> Vec<ShardTicket> {
+        prompts
+            .into_iter()
+            .map(|(prompt, max_new_tokens)| {
+                let shard = self.place(Class::Offline, prompt.len(), max_new_tokens);
+                let ticket = self.clients[shard].submit_offline(prompt, max_new_tokens);
+                ShardTicket { shard, ticket }
+            })
+            .collect()
+    }
+}
+
+/// Build the live sharded frontend: a [`ShardedClient`], the shared
+/// [`ShardLoads`] board, and one [`ArrivalSource`] per shard.
+///
+/// Wire shard `i`'s source into `ServingEngine::for_shard(i, ..)` and
+/// hand the engine the board via
+/// [`ServingEngine::set_shard_loads`] so placement sees its load.
+pub fn sharded_channel(
+    n_shards: usize,
+    policy: Placement,
+    cfg: &EngineConfig,
+) -> (ShardedClient, Arc<ShardLoads>, Vec<ArrivalSource>) {
+    let loads = Arc::new(ShardLoads::new(n_shards, cfg.mem.gpu_blocks));
+    let tickets = Arc::new(AtomicU64::new(1));
+    let mut clients = Vec::with_capacity(n_shards);
+    let mut sources = Vec::with_capacity(n_shards);
+    for _ in 0..n_shards {
+        let (c, s) = ArrivalSource::channel_shared(tickets.clone());
+        clients.push(c);
+        sources.push(s);
+    }
+    (
+        ShardedClient {
+            clients,
+            loads: loads.clone(),
+            policy,
+            tick: AtomicUsize::new(0),
+            block_tokens: cfg.mem.block_tokens,
+            pending: (0..n_shards).map(|_| PendingCell::default()).collect(),
+        },
+        loads,
+        sources,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::request::rid_gen;
+
+    fn req(class: Class, input: usize, output: usize, at: TimeUs) -> Request {
+        Request::new(0, class, vec![], input, output, at)
+    }
+
+    #[test]
+    fn router_round_robin_partitions_evenly() {
+        let cfg = EngineConfig::sim_a100_7b();
+        let mut r = ShardRouter::new(4, Placement::RoundRobin, &cfg);
+        for i in 0..20 {
+            r.push(req(Class::Online, 64, 8, i));
+        }
+        assert_eq!(r.bucket_sizes(), vec![5, 5, 5, 5]);
+        let traces = r.into_traces();
+        assert_eq!(traces.len(), 4);
+        assert_eq!(traces.iter().map(Vec::len).sum::<usize>(), 20);
+    }
+
+    #[test]
+    fn router_least_kv_balances_footprint() {
+        let cfg = EngineConfig::sim_a100_7b();
+        let mut r = ShardRouter::new(2, Placement::LeastKv, &cfg);
+        // one giant request, then several small ones: the small ones
+        // should all dodge the loaded shard until footprints even out
+        let big = r.push(req(Class::Offline, 4000, 96, 0));
+        let mut smalls = Vec::new();
+        for _ in 0..4 {
+            smalls.push(r.push(req(Class::Offline, 64, 8, 0)));
+        }
+        assert!(smalls.iter().all(|&s| s != big));
+    }
+
+    #[test]
+    fn router_affinity_keeps_online_spread() {
+        let cfg = EngineConfig::sim_a100_7b();
+        let mut r = ShardRouter::new(2, Placement::affinity(), &cfg);
+        let a = r.push(req(Class::Online, 512, 64, 0));
+        let b = r.push(req(Class::Online, 512, 64, 1));
+        assert_ne!(a, b, "online requests must spread across shards");
+    }
+
+    #[test]
+    fn loads_publish_snapshot_round_trip() {
+        let loads = ShardLoads::new(3, 1000);
+        loads.publish(1, 42, 7, 3);
+        let s = loads.snapshot(1);
+        assert_eq!(s.resident_blocks, 42);
+        assert_eq!(s.online_blocks, 7);
+        assert_eq!(s.waiting, 3);
+        assert_eq!(s.capacity_blocks, 1000);
+        let mut all = Vec::new();
+        loads.snapshot_into(&mut all);
+        assert_eq!(all.len(), 3);
+        assert_eq!(all[0], loads.snapshot(0));
+    }
+
+    #[test]
+    fn sharded_client_routes_by_load_and_tickets_are_unique() {
+        let cfg = EngineConfig::sim_a100_7b();
+        let (client, loads, mut sources) = sharded_channel(2, Placement::LeastKv, &cfg);
+        assert_eq!(client.n_shards(), 2);
+        // shard 0 reports heavy load; placement must pick shard 1
+        loads.publish(0, 500, 100, 9);
+        loads.publish(1, 10, 5, 0);
+        let t1 = client.submit_online(vec![1, 2, 3], 4);
+        assert_eq!(t1.shard, 1);
+        let batch = client.submit_batch(vec![(vec![4], 2), (vec![5], 2)]);
+        assert!(batch.iter().all(|t| t.shard == 1));
+        // globally unique tickets despite independent per-shard clients
+        let mut all = vec![t1];
+        all.extend(batch);
+        for (i, a) in all.iter().enumerate() {
+            for b in &all[i + 1..] {
+                assert_ne!(a.ticket, b.ticket);
+            }
+        }
+        // the requests actually arrive on shard 1's source
+        assert_eq!(sources[1].poll(100).len(), 3);
+        assert!(sources[0].poll(100).is_empty());
+    }
+
+    #[test]
+    fn sharded_sim_finishes_everything_and_stamps_shards() {
+        let cfg = EngineConfig::sim_a100_7b();
+        let mut events = Vec::new();
+        for i in 0..24 {
+            events.push(req(Class::Online, 128, 8, i * 500_000));
+        }
+        for _ in 0..6 {
+            events.push(req(Class::Offline, 512, 16, 0));
+        }
+        let run = run_sharded_sim(&cfg, 2, Placement::affinity(), events, 600.0);
+        assert_eq!(run.shard_requests.iter().sum::<usize>(), 30);
+        assert_eq!(
+            run.merged.online_finished + run.merged.offline_finished,
+            30,
+            "all routed requests must finish: {:?}",
+            run.merged
+        );
+        let per_shard_fin: u64 = run
+            .per_shard
+            .iter()
+            .map(|r| r.online_finished + r.offline_finished)
+            .sum();
+        assert_eq!(per_shard_fin, 30);
+        assert!(run.makespan_s > 0.0);
+        assert_eq!(run.per_shard.len(), 2);
+    }
+
+    #[test]
+    fn sharded_client_spreads_bursts_between_publishes() {
+        // nothing has published yet (or an engine is mid-iteration): the
+        // optimistic in-flight charges must spread a burst instead of
+        // herding it onto the single argmin shard
+        let cfg = EngineConfig::sim_a100_7b();
+        let (client, loads, _sources) = sharded_channel(4, Placement::LeastKv, &cfg);
+        let batch = client.submit_batch(vec![(vec![1], 8); 8]);
+        let mut counts = [0usize; 4];
+        for t in &batch {
+            counts[t.shard] += 1;
+        }
+        assert_eq!(counts, [2, 2, 2, 2], "burst herded: {counts:?}");
+        // a publish expires the charges: placement follows the board again
+        for s in 0..4 {
+            loads.publish(s, if s == 3 { 0 } else { 100 }, 0, 0);
+        }
+        let t = client.submit_online(vec![1], 4);
+        assert_eq!(t.shard, 3);
+    }
+
+    #[test]
+    fn shard_tickets_keep_the_client_namespace_bit() {
+        // tickets stay in the client id namespace (high bit set), so they
+        // can never resolve against any shard's arena
+        let cfg = EngineConfig::sim_a100_7b();
+        let (client, _loads, _sources) = sharded_channel(2, Placement::RoundRobin, &cfg);
+        let t = client.submit_online(vec![1], 1);
+        assert!(rid_gen(t.ticket) >= 1 << 31, "ticket bit must be set");
+    }
+}

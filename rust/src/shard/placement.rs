@@ -1,0 +1,267 @@
+//! Placement policies: which worker shard admits the next request.
+//!
+//! Placement runs at *submission* time (the router or the sharded
+//! client), never inside a shard's scheduling loop, and works from
+//! [`LoadSnapshot`]s — cheap per-shard load summaries that the trace
+//! router maintains as admission-time estimates and the live engines
+//! publish through [`ShardLoads`](super::ShardLoads) as relaxed atomics.
+//! Nothing here takes a lock.
+//!
+//! Three policies (mirroring the global admission layers of HyGen and
+//! Echo, which route hybrid online/offline load across replicas):
+//!
+//! * [`Placement::RoundRobin`] — stateless rotation; the baseline.
+//! * [`Placement::LeastKv`] — least resident KV blocks: balances memory
+//!   footprint, which on this engine is the binding resource.
+//! * [`Placement::Affinity`] — the paper's SLO model applied across
+//!   shards: online requests spread by *online* KV footprint (keeping
+//!   every shard's latency-critical reserve small and even); offline
+//!   requests score shards by an online-weighted footprint (an online
+//!   block is charged 3x: its resident charge plus twice more, so
+//!   offline drifts away from online-heavy shards in proportion to
+//!   their SLO-critical load) and avoid shards that would cross the
+//!   absolute `headroom` reserve line.
+
+use crate::request::Class;
+
+/// Per-shard load summary consumed by [`Placement::pick`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LoadSnapshot {
+    /// KV blocks resident (or, for the trace router, cumulatively
+    /// admitted) on this shard.
+    pub resident_blocks: u64,
+    /// Portion of `resident_blocks` that belongs to online requests.
+    pub online_blocks: u64,
+    /// Requests waiting in this shard's admission queues.
+    pub waiting: u64,
+    /// The shard's GPU KV pool size in blocks.
+    pub capacity_blocks: u64,
+}
+
+/// Pluggable shard-placement policy. See the module docs for the
+/// semantics of each variant.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Placement {
+    /// Rotate over shards regardless of load.
+    RoundRobin,
+    /// Fewest resident KV blocks (ties: fewest waiting, lowest index).
+    LeastKv,
+    /// Online/offline affinity: spread online work by online footprint;
+    /// steer offline work away from online-heavy shards (an online
+    /// block weighs 3x an offline one in its score) and keep `headroom`
+    /// (a fraction of each shard's KV capacity) clear of offline
+    /// placements so online bursts always find room.
+    Affinity {
+        /// Fraction of per-shard KV capacity reserved for online work
+        /// (offline placement avoids shards that would cross it).
+        headroom: f64,
+    },
+}
+
+impl Placement {
+    /// The default affinity policy (10% online reserve per shard).
+    pub fn affinity() -> Self {
+        Placement::Affinity { headroom: 0.1 }
+    }
+
+    /// Choose a shard for a request of `class` needing `need_blocks` KV
+    /// blocks at full length. `loads` has one entry per shard; `tick` is
+    /// a caller-maintained monotone counter (drives round-robin).
+    /// Deterministic: ties always resolve to the lowest shard index.
+    pub fn pick(
+        &self,
+        class: Class,
+        need_blocks: u64,
+        loads: &[LoadSnapshot],
+        tick: usize,
+    ) -> usize {
+        assert!(!loads.is_empty(), "placement over zero shards");
+        match *self {
+            Placement::RoundRobin => tick % loads.len(),
+            Placement::LeastKv => argmin(loads, |l| (l.resident_blocks, l.waiting)),
+            Placement::Affinity { headroom } => match class {
+                Class::Online => {
+                    // spread by online footprint, but never route onto a
+                    // shard whose pool can't fit the request while an
+                    // alternative can — a packed shard would have to
+                    // preempt offline work (recompute churn) where an
+                    // emptier one starts instantly. Online may use the
+                    // reserve, so the fit check is against full capacity.
+                    let fits = |l: &LoadSnapshot| {
+                        l.resident_blocks + need_blocks <= l.capacity_blocks
+                    };
+                    argmin(loads, |l| {
+                        (u8::from(!fits(l)), l.online_blocks, l.resident_blocks)
+                    })
+                }
+                Class::Offline => {
+                    // prefer shards that can take this request and still
+                    // keep the absolute online reserve clear; among them
+                    // (or among all, when none fits — e.g. the cumulative
+                    // estimates of a long trace) score by the
+                    // online-weighted footprint: an online block counts
+                    // 3x an offline one (resident charge + 2x on top),
+                    // so offline load drifts away from online-heavy
+                    // shards in proportion to their latency-critical
+                    // demand
+                    let fits = |l: &LoadSnapshot| {
+                        let limit =
+                            (l.capacity_blocks as f64 * (1.0 - headroom)) as u64;
+                        l.resident_blocks + need_blocks <= limit
+                    };
+                    argmin(loads, |l| {
+                        let weighted = l
+                            .resident_blocks
+                            .saturating_add(l.online_blocks.saturating_mul(2));
+                        (u8::from(!fits(l)), weighted, l.waiting)
+                    })
+                }
+            },
+        }
+    }
+}
+
+/// Index of the minimal key; ties resolve to the lowest index.
+fn argmin<K: Ord>(loads: &[LoadSnapshot], key: impl Fn(&LoadSnapshot) -> K) -> usize {
+    let mut best = 0;
+    let mut best_key = key(&loads[0]);
+    for (i, l) in loads.iter().enumerate().skip(1) {
+        let k = key(l);
+        if k < best_key {
+            best = i;
+            best_key = k;
+        }
+    }
+    best
+}
+
+impl std::str::FromStr for Placement {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "rr" | "round-robin" | "roundrobin" | "round_robin" => {
+                Ok(Placement::RoundRobin)
+            }
+            "least-kv" | "leastkv" | "least_kv" | "least-loaded" => {
+                Ok(Placement::LeastKv)
+            }
+            "affinity" | "online-affinity" | "online_affinity" => {
+                Ok(Placement::affinity())
+            }
+            other => match other.strip_prefix("affinity:") {
+                // "affinity:H" carries an explicit headroom fraction, the
+                // form Display emits so round-trips are lossless
+                Some(h) => {
+                    let headroom: f64 = h
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("bad affinity headroom `{h}`: {e}"))?;
+                    if !(0.0..1.0).contains(&headroom) {
+                        anyhow::bail!("affinity headroom must be in [0, 1): `{h}`");
+                    }
+                    Ok(Placement::Affinity { headroom })
+                }
+                None => Err(anyhow::anyhow!("unknown placement policy `{other}`")),
+            },
+        }
+    }
+}
+
+impl std::fmt::Display for Placement {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Placement::RoundRobin => f.write_str("round-robin"),
+            Placement::LeastKv => f.write_str("least-kv"),
+            // explicit headroom so Display/FromStr round-trip losslessly
+            Placement::Affinity { headroom } => write!(f, "affinity:{headroom}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(resident: u64, online: u64, waiting: u64) -> LoadSnapshot {
+        LoadSnapshot {
+            resident_blocks: resident,
+            online_blocks: online,
+            waiting,
+            capacity_blocks: 100,
+        }
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let loads = vec![snap(9, 0, 0), snap(0, 0, 0), snap(5, 0, 0)];
+        let p = Placement::RoundRobin;
+        let picks: Vec<usize> = (0..6)
+            .map(|t| p.pick(Class::Online, 1, &loads, t))
+            .collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_kv_picks_min_resident_then_waiting() {
+        let p = Placement::LeastKv;
+        let loads = vec![snap(30, 0, 0), snap(10, 0, 5), snap(10, 0, 1)];
+        assert_eq!(p.pick(Class::Offline, 1, &loads, 0), 2);
+        // ties resolve to the lowest index
+        let even = vec![snap(10, 0, 1), snap(10, 0, 1)];
+        assert_eq!(p.pick(Class::Online, 1, &even, 7), 0);
+    }
+
+    #[test]
+    fn affinity_spreads_online_by_online_footprint() {
+        let p = Placement::affinity();
+        // shard 0 has less total KV but more *online* KV than shard 1
+        let loads = vec![snap(20, 18, 0), snap(40, 2, 0)];
+        assert_eq!(p.pick(Class::Online, 1, &loads, 0), 1);
+        // offline also dodges the online-heavy shard: weighted scores
+        // 20 + 2*18 = 56 vs 40 + 2*2 = 44
+        assert_eq!(p.pick(Class::Offline, 1, &loads, 0), 1);
+        // with equal online load, offline goes to the emptier shard
+        let even_online = vec![snap(20, 5, 0), snap(40, 5, 0)];
+        assert_eq!(p.pick(Class::Offline, 1, &even_online, 0), 0);
+    }
+
+    #[test]
+    fn affinity_offline_respects_online_reserve() {
+        let p = Placement::Affinity { headroom: 0.2 };
+        // capacity 100, reserve line at 80 with need 10: shard 1 has the
+        // lower weighted score (75 vs 60 + 2*30 = 120) but would cross
+        // the reserve line (75 + 10 > 80); shard 0 still fits (70 <= 80)
+        let loads = vec![snap(60, 30, 0), snap(75, 0, 0)];
+        assert_eq!(p.pick(Class::Offline, 10, &loads, 0), 0);
+        // when nothing fits, fall back to weighted least-loaded
+        let full = vec![snap(95, 60, 0), snap(99, 0, 0)];
+        assert_eq!(p.pick(Class::Offline, 10, &full, 0), 1);
+    }
+
+    #[test]
+    fn affinity_online_avoids_full_shards() {
+        let p = Placement::affinity();
+        // shard 0 has fewer online blocks but its pool can't fit the
+        // request (95 + 8 > 100); shard 1 can and must win
+        let loads = vec![snap(95, 5, 0), snap(10, 6, 0)];
+        assert_eq!(p.pick(Class::Online, 8, &loads, 0), 1);
+        // with room everywhere, least-online still wins
+        assert_eq!(p.pick(Class::Online, 1, &loads, 0), 0);
+    }
+
+    #[test]
+    fn parse_and_display_round_trip() {
+        for s in ["rr", "least-kv", "affinity", "affinity:0.25"] {
+            let p: Placement = s.parse().unwrap();
+            let back: Placement = p.to_string().parse().unwrap();
+            assert_eq!(p, back);
+        }
+        assert_eq!(
+            "affinity:0.25".parse::<Placement>().unwrap(),
+            Placement::Affinity { headroom: 0.25 }
+        );
+        assert!("nope".parse::<Placement>().is_err());
+        assert!("affinity:1.5".parse::<Placement>().is_err());
+        assert!("affinity:x".parse::<Placement>().is_err());
+    }
+}

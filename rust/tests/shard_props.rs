@@ -1,0 +1,217 @@
+//! Cross-shard property tests for the (generation, shard, slot) id
+//! layout: ids issued by one shard's arena must never resolve — let
+//! alone alias — in any other shard, stale ids from recycled slots must
+//! miss in *every* shard, and per-shard KV block conservation must
+//! survive random admit / checkpoint / preempt / prefetch / discard /
+//! finish churn with hostile cross-shard pokes mixed in.
+
+use conserve::kvcache::manager::{KvError, KvManager};
+use conserve::request::{rid_shard, Class, Request, RequestArena, RequestId};
+use conserve::util::rng::Rng;
+use std::collections::HashSet;
+
+const BLOCK_TOKENS: usize = 16;
+const N_SHARDS: usize = 4;
+
+fn new_req(rng: &mut Rng) -> Request {
+    let class = if rng.range(0, 4) == 0 {
+        Class::Online
+    } else {
+        Class::Offline
+    };
+    let prompt = rng.range_usize(16, 200);
+    let out = rng.range_usize(4, 40);
+    Request::new(0, class, vec![], prompt, out, 0)
+}
+
+#[test]
+fn ids_never_alias_across_shards() {
+    let mut rng = Rng::new(99);
+    let mut arenas: Vec<RequestArena> = (0..N_SHARDS).map(RequestArena::for_shard).collect();
+    let mut live: Vec<Vec<RequestId>> = vec![Vec::new(); N_SHARDS];
+    let mut ever: HashSet<RequestId> = HashSet::new();
+    for step in 0..20_000 {
+        let s = rng.range_usize(0, N_SHARDS);
+        if rng.range(0, 3) == 0 && !live[s].is_empty() {
+            let k = rng.range_usize(0, live[s].len());
+            let id = live[s].swap_remove(k);
+            assert!(arenas[s].remove(id).is_some());
+        } else {
+            let id = arenas[s].insert(new_req(&mut rng));
+            assert_eq!(rid_shard(id), s, "step {step}: id carries wrong shard");
+            assert!(
+                ever.insert(id),
+                "step {step}: id {id} issued twice across the fleet"
+            );
+            live[s].push(id);
+        }
+    }
+    // every live id resolves in its own shard and misses all others
+    for s in 0..N_SHARDS {
+        for &id in &live[s] {
+            assert!(arenas[s].get(id).is_some());
+            for (o, arena) in arenas.iter().enumerate() {
+                if o != s {
+                    assert!(
+                        arena.get(id).is_none(),
+                        "id {id} of shard {s} resolved in shard {o}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn stale_ids_from_recycled_slots_cannot_resolve_in_any_shard() {
+    let mut rng = Rng::new(7);
+    let mut arenas: Vec<RequestArena> = (0..N_SHARDS).map(RequestArena::for_shard).collect();
+    let mut kvs: Vec<KvManager> = (0..N_SHARDS)
+        .map(|s| KvManager::for_shard(s, 64, 128, BLOCK_TOKENS))
+        .collect();
+    let mut live: Vec<Vec<RequestId>> = vec![Vec::new(); N_SHARDS];
+    let mut dead: Vec<RequestId> = Vec::new();
+    for _ in 0..5_000 {
+        let s = rng.range_usize(0, N_SHARDS);
+        if rng.range(0, 4) == 0 && !live[s].is_empty() {
+            let k = rng.range_usize(0, live[s].len());
+            let id = live[s].swap_remove(k);
+            kvs[s].release(id, false);
+            assert!(arenas[s].remove(id).is_some());
+            dead.push(id);
+        } else if live[s].len() < 8 {
+            let id = arenas[s].insert(new_req(&mut rng));
+            kvs[s].register(id);
+            let want = rng.range_usize(1, 64);
+            if kvs[s].grow(id, want).is_ok() {
+                kvs[s].commit(id, want).unwrap();
+            }
+            live[s].push(id);
+        }
+    }
+    // a dead id (its slot possibly recycled under a newer generation in
+    // its home shard) must miss everywhere: generation guard at home,
+    // shard guard abroad
+    for &id in &dead {
+        for s in 0..N_SHARDS {
+            assert!(arenas[s].get(id).is_none(), "stale id {id} resolved in shard {s}");
+            assert!(kvs[s].seq(id).is_none());
+            assert_eq!(kvs[s].grow(id, 16), Err(KvError::UnknownSeq(id)));
+            assert_eq!(kvs[s].commit(id, 1), Err(KvError::UnknownSeq(id)));
+        }
+    }
+    for kv in &kvs {
+        assert!(kv.check_conservation());
+    }
+}
+
+#[test]
+fn kv_conservation_holds_per_shard_under_random_preempt_resume() {
+    let mut rng = Rng::new(0xC0_5E_7E);
+    let mut arenas: Vec<RequestArena> = (0..N_SHARDS).map(RequestArena::for_shard).collect();
+    let mut kvs: Vec<KvManager> = (0..N_SHARDS)
+        .map(|s| KvManager::for_shard(s, 96, 256, BLOCK_TOKENS))
+        .collect();
+    let mut live: Vec<Vec<RequestId>> = vec![Vec::new(); N_SHARDS];
+
+    for step in 0..12_000 {
+        let s = rng.range_usize(0, N_SHARDS);
+        let pick = |rng: &mut Rng, ids: &[RequestId]| -> Option<RequestId> {
+            if ids.is_empty() {
+                None
+            } else {
+                Some(ids[rng.range_usize(0, ids.len())])
+            }
+        };
+        match rng.range(0, 8) {
+            // admit + grow/commit a first chunk
+            0 | 1 => {
+                if live[s].len() < 10 {
+                    let id = arenas[s].insert(new_req(&mut rng));
+                    kvs[s].register(id);
+                    let want = rng.range_usize(1, 80);
+                    if kvs[s].grow(id, want).is_ok() {
+                        kvs[s].commit(id, want).unwrap();
+                    }
+                    live[s].push(id);
+                }
+            }
+            // progress: grow + commit more tokens
+            2 => {
+                if let Some(id) = pick(&mut rng, &live[s]) {
+                    let t = kvs[s].seq(id).map(|q| q.tokens).unwrap_or(0);
+                    let add = rng.range_usize(1, 32);
+                    if kvs[s].grow(id, t + add).is_ok() {
+                        kvs[s].commit(id, add).unwrap();
+                    }
+                }
+            }
+            // incremental checkpoint
+            3 => {
+                if let Some(id) = pick(&mut rng, &live[s]) {
+                    for idx in kvs[s].checkpoint_candidates(id) {
+                        if kvs[s].begin_ckpt(id, idx).is_err() {
+                            break; // host pool exhausted
+                        }
+                        kvs[s].finish_ckpt(id, idx);
+                    }
+                }
+            }
+            // preempt-evict (host checkpoints, if any, survive)
+            4 => {
+                if let Some(id) = pick(&mut rng, &live[s]) {
+                    kvs[s].evict_gpu(id);
+                }
+            }
+            // resume via prefetch of whatever host copies exist
+            5 => {
+                if let Some(id) = pick(&mut rng, &live[s]) {
+                    for (idx, _hb) in kvs[s].prefetch_candidates(id) {
+                        if kvs[s].begin_prefetch(id, idx).is_err() {
+                            break; // GPU pool exhausted
+                        }
+                    }
+                }
+            }
+            // discard-preempt (recompute path) or finish
+            6 => {
+                if let Some(id) = pick(&mut rng, &live[s]) {
+                    if rng.range(0, 2) == 0 {
+                        kvs[s].discard(id);
+                    } else {
+                        kvs[s].release(id, false);
+                        live[s].retain(|&x| x != id);
+                        assert!(arenas[s].remove(id).is_some());
+                    }
+                }
+            }
+            // hostile cross-shard poke: a live id from another shard
+            // must bounce off this shard's manager without any effect
+            _ => {
+                let o = (s + 1 + rng.range_usize(0, N_SHARDS - 1)) % N_SHARDS;
+                if let Some(foreign) = pick(&mut rng, &live[o]) {
+                    assert!(kvs[s].seq(foreign).is_none());
+                    assert_eq!(kvs[s].grow(foreign, 16), Err(KvError::UnknownSeq(foreign)));
+                    assert_eq!(kvs[s].evict_gpu(foreign), 0);
+                    kvs[s].release(foreign, false); // must be a no-op
+                    kvs[s].discard(foreign); // must be a no-op, not a panic
+                    assert!(
+                        kvs[o].seq(foreign).is_some(),
+                        "foreign poke damaged the owning shard"
+                    );
+                }
+            }
+        }
+        if step % 500 == 0 {
+            for (i, kv) in kvs.iter().enumerate() {
+                assert!(
+                    kv.check_conservation(),
+                    "step {step}: conservation violated on shard {i}"
+                );
+            }
+        }
+    }
+    for (i, kv) in kvs.iter().enumerate() {
+        assert!(kv.check_conservation(), "final conservation on shard {i}");
+    }
+}
