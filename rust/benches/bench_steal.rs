@@ -1,0 +1,201 @@
+//! `bench_steal` — cross-shard offline work-stealing acceptance bench.
+//!
+//! Serves a deliberately *skewed* 4-shard workload: online traffic is
+//! spread round-robin across all shards, but the entire offline burst
+//! lands on shard 0 (the worst case no placement policy should produce
+//! but every fleet eventually sees — a tenant submitting a huge batch
+//! through one entry point). The same traces run twice, stealing off
+//! then on, at equal total load.
+//!
+//! Acceptance (asserted here):
+//!
+//! * offline completion throughput (offline generated tokens over the
+//!   fleet makespan) improves with stealing — idle shards must absorb
+//!   the backlogged shard's tail;
+//! * the online TTFT-violation rate does not regress (harvested shards
+//!   keep their SLO-aware budgets);
+//! * stealing neither loses nor duplicates requests.
+//!
+//! Results go to `BENCH_steal.json` (schema: rust/PERF.md §5). Scale
+//! with `STEAL_BENCH_REQS` (default 40_000; CI smoke uses a small
+//! value).
+
+use conserve::config::EngineConfig;
+use conserve::report::Report;
+use conserve::request::{Class, Request};
+use conserve::shard::{run_sharded_traces, ShardedRun, StealConfig};
+use conserve::util::json::{arr, num, obj, Json};
+use conserve::util::rng::Rng;
+use conserve::workload::trace::onoff_trace;
+use std::time::Instant;
+
+const N_SHARDS: usize = 4;
+
+/// Online spread evenly, offline burst pinned to shard 0.
+fn skewed_traces(n_reqs: usize) -> (Vec<Vec<Request>>, f64) {
+    let n_online = n_reqs * 3 / 4;
+    let n_offline = n_reqs - n_online;
+    let on_rate = 60.0;
+    let duration_s = 2.0 * n_online as f64 / on_rate;
+    let arrivals = onoff_trace(42, duration_s, 30.0, on_rate, 2.0);
+    let mut rng = Rng::new(7);
+    let mut traces: Vec<Vec<Request>> = (0..N_SHARDS).map(|_| Vec::new()).collect();
+    let mut next_id = 1u64;
+    for (i, &t) in arrivals.iter().take(n_online).enumerate() {
+        let input = rng.range_usize(64, 256);
+        let output = rng.range_usize(8, 24);
+        traces[i % N_SHARDS].push(Request::new(next_id, Class::Online, vec![], input, output, t));
+        next_id += 1;
+    }
+    for _ in 0..n_offline {
+        let input = rng.range_usize(512, 2048);
+        let output = rng.range_usize(32, 96);
+        traces[0].push(Request::new(next_id, Class::Offline, vec![], input, output, 0));
+        next_id += 1;
+    }
+    (traces, duration_s)
+}
+
+struct Row {
+    label: &'static str,
+    wall_s: f64,
+    run: ShardedRun,
+}
+
+fn offline_tput(r: &Report) -> f64 {
+    r.offline_gen_tput
+}
+
+fn main() {
+    let n_reqs: usize = std::env::var("STEAL_BENCH_REQS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(40_000);
+    let (traces, duration_s) = skewed_traces(n_reqs);
+    let shard_sizes: Vec<usize> = traces.iter().map(Vec::len).collect();
+    let n_events: usize = shard_sizes.iter().sum();
+    let cfg = EngineConfig::sim_a100_7b();
+    let steal_cfg = StealConfig::default();
+
+    println!(
+        "=== bench_steal ({n_events} requests, {N_SHARDS} shards, offline burst on shard 0: {:?}) ===",
+        shard_sizes
+    );
+    let mut rows: Vec<Row> = Vec::new();
+    for (label, steal) in [("steal-off", None), ("steal-on", Some(steal_cfg))] {
+        let t0 = Instant::now();
+        let run = run_sharded_traces(&cfg, traces.clone(), duration_s * 6.0, steal);
+        let wall_s = t0.elapsed().as_secs_f64();
+        let m = &run.merged;
+        println!(
+            "{label:>10}: wall={wall_s:>6.2}s makespan={:>8.1}s offline_gen={:>7.0} tok/s p99TTFT={:>8.1}ms viol={:>5.2}% finished={} steals(out/in)={}/{}",
+            run.makespan_s,
+            offline_tput(m),
+            m.online_p99_ttft_ms,
+            m.ttft_violations * 100.0,
+            m.online_finished + m.offline_finished,
+            m.steals_out,
+            m.steals_in,
+        );
+        rows.push(Row { label, wall_s, run });
+    }
+
+    // ---- acceptance ----
+    let base = &rows[0].run;
+    let steal = &rows[1].run;
+    let finished =
+        |r: &ShardedRun| r.merged.online_finished + r.merged.offline_finished;
+    assert_eq!(
+        finished(base),
+        finished(steal),
+        "stealing must not lose or duplicate requests"
+    );
+    assert_eq!(
+        steal.merged.steals_out, steal.merged.steals_in,
+        "every migration must be adopted exactly once"
+    );
+    assert!(
+        steal.merged.steals_in > 0,
+        "the skewed trace must actually trigger steals"
+    );
+    assert!(
+        offline_tput(&steal.merged) > offline_tput(&base.merged),
+        "offline completion throughput must improve with stealing: {:.0} vs {:.0} tok/s",
+        offline_tput(&steal.merged),
+        offline_tput(&base.merged)
+    );
+    assert!(
+        steal.merged.ttft_violations <= base.merged.ttft_violations + 0.005,
+        "online SLO violations must not regress: {:.4} vs {:.4}",
+        steal.merged.ttft_violations,
+        base.merged.ttft_violations
+    );
+    println!(
+        "offline throughput ratio (on/off): {:.2}x, makespan ratio {:.2}x",
+        offline_tput(&steal.merged) / offline_tput(&base.merged).max(1e-9),
+        base.makespan_s / steal.makespan_s.max(1e-9),
+    );
+
+    // ---- emit BENCH_steal.json (schema documented in rust/PERF.md §5) ----
+    let mode_row = |row: &Row| {
+        let m = &row.run.merged;
+        obj(vec![
+            ("mode", Json::Str(row.label.to_string())),
+            ("wall_s", num(row.wall_s)),
+            ("makespan_s", num(row.run.makespan_s)),
+            ("offline_gen_tok_s", num(offline_tput(m))),
+            ("agg_gen_tok_s", num(m.total_gen_tput)),
+            ("online_p99_ttft_ms", num(m.online_p99_ttft_ms)),
+            ("online_p99_tpot_ms", num(m.online_p99_tpot_ms)),
+            ("ttft_violation_rate", num(m.ttft_violations)),
+            (
+                "finished",
+                num((m.online_finished + m.offline_finished) as f64),
+            ),
+            ("steals_out", num(m.steals_out as f64)),
+            ("steals_in", num(m.steals_in as f64)),
+            ("preemptions", num(m.preemptions as f64)),
+            (
+                "per_shard",
+                arr(row.run.per_shard.iter().zip(&row.run.shard_requests).map(
+                    |(r, &n)| {
+                        obj(vec![
+                            ("requests", num(n as f64)),
+                            ("offline_finished", num(r.offline_finished as f64)),
+                            ("online_finished", num(r.online_finished as f64)),
+                            ("steals_out", num(r.steals_out as f64)),
+                            ("steals_in", num(r.steals_in as f64)),
+                        ])
+                    },
+                )),
+            ),
+        ])
+    };
+    let json = obj(vec![
+        ("requests", num(n_events as f64)),
+        ("shards", num(N_SHARDS as f64)),
+        (
+            "skew",
+            Json::Str("offline burst pinned to shard 0".to_string()),
+        ),
+        (
+            "steal_config",
+            obj(vec![
+                ("budget_per_iter", num(steal_cfg.budget_per_iter as f64)),
+                ("min_donor_backlog", num(steal_cfg.min_donor_backlog as f64)),
+                ("hungry_below", num(steal_cfg.hungry_below as f64)),
+            ]),
+        ),
+        ("modes", arr(rows.iter().map(mode_row))),
+        (
+            "offline_tput_on_over_off",
+            num(offline_tput(&steal.merged) / offline_tput(&base.merged).max(1e-9)),
+        ),
+    ]);
+    let out_path =
+        std::env::var("STEAL_BENCH_OUT").unwrap_or_else(|_| "BENCH_steal.json".into());
+    std::fs::write(&out_path, json.to_string()).expect("write BENCH_steal.json");
+    println!("\nwrote {out_path}");
+    let _ = Json::parse(&json.to_string()).expect("self-emitted json parses");
+    println!("bench_steal OK");
+}

@@ -11,24 +11,18 @@
 //!     layered (safepointed) execution vs the monolithic `full` artifact,
 //!     plus measured preemption-detection latency, on the tiny model.
 
-use conserve::backend::{
-    CostModel, ExecBackend, IterationPlan, SafepointAction, SimBackend, WorkItem,
-};
+use conserve::backend::{CostModel, ExecBackend, IterationPlan, SafepointAction, SimBackend};
 use conserve::clock::Clock;
 use conserve::request::{Class, Phase};
 
 fn offline_plan(n_tokens: usize) -> IterationPlan {
-    IterationPlan {
-        items: vec![WorkItem {
-            req: 900_001,
-            class: Class::Offline,
-            phase: Phase::Prefill,
-            ctx_len: 0,
-            n_tokens,
-            tokens: (0..n_tokens).map(|i| (i % 250) as u16).collect(),
-        }],
+    let toks: Vec<u16> = (0..n_tokens).map(|i| (i % 250) as u16).collect();
+    let mut plan = IterationPlan {
         preemptible: true,
-    }
+        ..Default::default()
+    };
+    plan.push_item(900_001, Class::Offline, Phase::Prefill, 0, n_tokens, &toks);
+    plan
 }
 
 fn main() {

@@ -29,7 +29,13 @@ pub use pjrt::PjrtBackend;
 pub use sim::SimBackend;
 
 /// One request's work within an iteration.
-#[derive(Debug, Clone)]
+///
+/// Token data does not live here: each item addresses a range of the
+/// owning plan's shared [`IterationPlan::staging`] buffer (empty in pure
+/// simulation), so building a plan never allocates per item — the
+/// staging vector is reused across iterations like every other scheduler
+/// scratch buffer.
+#[derive(Debug, Clone, Copy)]
 pub struct WorkItem {
     pub req: RequestId,
     pub class: Class,
@@ -38,20 +44,73 @@ pub struct WorkItem {
     pub ctx_len: usize,
     /// New tokens computed this iteration (prefill chunk size, or 1).
     pub n_tokens: usize,
-    /// Concrete token ids for this chunk (real path; empty in sim).
-    pub tokens: Vec<TokenId>,
+    /// Start of this item's token chunk in [`IterationPlan::staging`].
+    pub tok_start: u32,
+    /// Length of this item's token chunk (0 when the request carries no
+    /// token data — the whole simulator path).
+    pub tok_len: u32,
+    /// Per-request draw key for the token this item may sample
+    /// (`mix64(sampler_state ^ generated)`): the same request position
+    /// samples the same token on any shard, any chunking.
+    pub sample_key: u64,
 }
 
 /// An iteration of continuous batching handed to the backend.
 #[derive(Debug, Clone, Default)]
 pub struct IterationPlan {
     pub items: Vec<WorkItem>,
+    /// Concrete token ids for all items, one contiguous chunk per item
+    /// (real path; empty in sim). Indexed via each item's
+    /// `tok_start..tok_start + tok_len` — see [`IterationPlan::tokens_of`].
+    pub staging: Vec<TokenId>,
     /// Safepoints active: true only for pure-offline batches (§4.3
     /// "restrict layer-wise preemption to the offline batching mode").
     pub preemptible: bool,
 }
 
 impl IterationPlan {
+    /// Reset for the next iteration, keeping `items` and `staging`
+    /// capacity.
+    pub fn clear(&mut self) {
+        self.items.clear();
+        self.staging.clear();
+        self.preemptible = false;
+    }
+
+    /// The staged token chunk of `item` (empty when the request carries
+    /// no token data).
+    pub fn tokens_of(&self, item: &WorkItem) -> &[TokenId] {
+        let start = item.tok_start as usize;
+        &self.staging[start..start + item.tok_len as usize]
+    }
+
+    /// Append an item with explicit token data (tests, benches, and the
+    /// profiler's probe plans; the scheduler stages tokens inline). The
+    /// sample key is derived from `(req, ctx_len)` so temperature
+    /// sampling still draws a distinct quantile per position — the
+    /// scheduler path keys by per-request sampler state instead.
+    pub fn push_item(
+        &mut self,
+        req: RequestId,
+        class: Class,
+        phase: Phase,
+        ctx_len: usize,
+        n_tokens: usize,
+        tokens: &[TokenId],
+    ) {
+        let tok_start = self.staging.len() as u32;
+        self.staging.extend_from_slice(tokens);
+        self.items.push(WorkItem {
+            req,
+            class,
+            phase,
+            ctx_len,
+            n_tokens,
+            tok_start,
+            tok_len: tokens.len() as u32,
+            sample_key: crate::util::rng::mix64(req ^ ctx_len as u64),
+        });
+    }
     pub fn prefill_tokens(&self) -> usize {
         self.items
             .iter()
@@ -111,6 +170,19 @@ pub enum SafepointAction {
     Abort,
 }
 
+/// A request's host-resident KV data detached from one backend's mirror
+/// store, ready to hand to another backend — the data half of a
+/// cross-shard checkpoint migration (the accounting half is
+/// [`KvManager::export_host`](crate::kvcache::KvManager::export_host) /
+/// `import_host`). Per-layer K and V slabs, exactly as the real
+/// backend's host mirror stores them; the simulator moves no data and
+/// never produces one.
+#[derive(Debug, Clone, Default)]
+pub struct HostKvBlob {
+    pub k: Vec<Vec<f32>>,
+    pub v: Vec<Vec<f32>>,
+}
+
 #[derive(Debug)]
 pub struct ExecOutcome {
     /// False if the iteration was aborted at a safepoint.
@@ -153,6 +225,18 @@ pub trait ExecBackend {
     /// Copy one KV block H2D (prefetch commit).
     fn copy_block_h2d(&mut self, req: RequestId, block_idx: usize, block_tokens: usize);
 
+    /// Detach `req`'s host KV mirror for cross-shard migration (the
+    /// donor half of a steal). Default: `None` — the simulator's
+    /// checkpoints are accounting-only, so there is nothing to move.
+    fn export_host_kv(&mut self, _req: RequestId) -> Option<HostKvBlob> {
+        None
+    }
+
+    /// Install a migrated host KV mirror under `req` (the target half of
+    /// a steal); a later prefetch restores it to the device copy.
+    /// Default: drop it (simulator).
+    fn import_host_kv(&mut self, _req: RequestId, _blob: HostKvBlob) {}
+
     /// KV bytes per block (drives the swap engine).
     fn block_bytes(&self) -> u64;
 
@@ -172,31 +256,29 @@ mod tests {
 
     #[test]
     fn plan_summary_counts() {
-        let plan = IterationPlan {
-            items: vec![
-                WorkItem {
-                    req: 1,
-                    class: Class::Online,
-                    phase: Phase::Prefill,
-                    ctx_len: 0,
-                    n_tokens: 512,
-                    tokens: vec![],
-                },
-                WorkItem {
-                    req: 2,
-                    class: Class::Offline,
-                    phase: Phase::Decode,
-                    ctx_len: 1024,
-                    n_tokens: 1,
-                    tokens: vec![],
-                },
-            ],
-            preemptible: false,
-        };
+        let mut plan = IterationPlan::default();
+        plan.push_item(1, Class::Online, Phase::Prefill, 0, 512, &[]);
+        plan.push_item(2, Class::Offline, Phase::Decode, 1024, 1, &[]);
         let s = plan.summary();
         assert_eq!(s.prefill_tokens, 512);
         assert_eq!(s.decode_seqs, 1);
         assert_eq!(s.ctx_tokens, 1024);
         assert_eq!(plan.total_new_tokens(), 513);
+    }
+
+    #[test]
+    fn staging_buffer_addresses_per_item_chunks() {
+        let mut plan = IterationPlan::default();
+        plan.push_item(1, Class::Online, Phase::Prefill, 0, 3, &[10, 11, 12]);
+        plan.push_item(2, Class::Offline, Phase::Decode, 8, 1, &[7]);
+        plan.push_item(3, Class::Offline, Phase::Decode, 8, 1, &[]); // sim item
+        assert_eq!(plan.tokens_of(&plan.items[0]), &[10, 11, 12]);
+        assert_eq!(plan.tokens_of(&plan.items[1]), &[7]);
+        assert!(plan.tokens_of(&plan.items[2]).is_empty());
+        assert_eq!(plan.staging.len(), 4);
+        let cap = plan.staging.capacity();
+        plan.clear();
+        assert!(plan.items.is_empty() && plan.staging.is_empty());
+        assert_eq!(plan.staging.capacity(), cap, "clear keeps capacity");
     }
 }

@@ -20,7 +20,7 @@
 //! testbed both live in host RAM, but the copies are real, so the
 //! checkpoint/prefetch data path is exercised end to end.
 
-use super::{ExecBackend, ExecOutcome, IterationPlan, PlanSummary, SafepointAction, WorkItem};
+use super::{ExecBackend, ExecOutcome, HostKvBlob, IterationPlan, PlanSummary, SafepointAction};
 use crate::clock::Clock;
 use crate::request::{Class, Phase, RequestId, TokenId};
 use crate::runtime::artifacts::{f32_literal, i32_literal, Artifacts, EntryKey, EntryKind};
@@ -148,7 +148,7 @@ impl PjrtBackend {
         for (row, &i) in idxs.iter().enumerate() {
             let item = &plan.items[i];
             debug_assert!(item.ctx_len + tb <= s, "chunk overruns cache");
-            for (j, &t) in item.tokens.iter().enumerate() {
+            for (j, &t) in plan.tokens_of(item).iter().enumerate() {
                 tokens[row * tb + j] = t as i32;
             }
             ctx[row] = item.ctx_len as i32;
@@ -258,7 +258,11 @@ impl PjrtBackend {
             let item = &plan.items[i];
             let t_idx = item.n_tokens - 1; // last real token position
             let off = (row * tb + t_idx) * vocab;
-            let tok = self.sampler.sample(&logits[off..off + vocab]);
+            // keyed draw: the token for this request position is the same
+            // on any shard and under any chunking (migration-safe)
+            let tok = self
+                .sampler
+                .sample_keyed(&logits[off..off + vocab], item.sample_key);
             // split the per-row updated KV out of the batch literals at
             // commit time (cheaper: keep literals, slice in commit)
             results.push((i, tok, Vec::new(), Vec::new()));
@@ -346,20 +350,16 @@ impl ExecBackend for PjrtBackend {
     fn probe_us(&mut self, s: &PlanSummary) -> u64 {
         // Build a synthetic plan matching the summary shape and measure.
         let dims = self.art.dims;
-        let mut items = Vec::new();
+        let mut plan = IterationPlan::default();
         let mut id = self.probe_seq;
         let max_chunk = *self.art.chunk_buckets.last().unwrap();
         let mut rem = s.prefill_tokens;
+        let mut toks: Vec<TokenId> = Vec::new();
         while rem > 0 {
             let n = rem.min(max_chunk);
-            items.push(WorkItem {
-                req: id,
-                class: Class::Offline,
-                phase: Phase::Prefill,
-                ctx_len: 0,
-                n_tokens: n,
-                tokens: (0..n).map(|i| (i % 251) as TokenId).collect(),
-            });
+            toks.clear();
+            toks.extend((0..n).map(|i| (i % 251) as TokenId));
+            plan.push_item(id, Class::Offline, Phase::Prefill, 0, n, &toks);
             id += 1;
             rem -= n;
         }
@@ -369,22 +369,11 @@ impl ExecBackend for PjrtBackend {
             0
         };
         for _ in 0..s.decode_seqs {
-            items.push(WorkItem {
-                req: id,
-                class: Class::Offline,
-                phase: Phase::Decode,
-                ctx_len: per_ctx,
-                n_tokens: 1,
-                tokens: vec![7],
-            });
+            plan.push_item(id, Class::Offline, Phase::Decode, per_ctx, 1, &[7]);
             id += 1;
         }
         let first_probe = self.probe_seq;
         self.probe_seq = id;
-        let plan = IterationPlan {
-            items,
-            preemptible: false,
-        };
         // Warm-up run absorbs lazy HLO compilation (first use of a
         // bucket), then take the min of repeated measurements — CPU
         // timing is noisy and the profiler fit needs clean slopes.
@@ -441,6 +430,24 @@ impl ExecBackend for PjrtBackend {
         copy_block(&mirror, &mut slab, dims, block_idx, block_tokens);
         self.slabs.insert(req, slab);
         self.mirrors.insert(req, mirror);
+    }
+
+    fn export_host_kv(&mut self, req: RequestId) -> Option<HostKvBlob> {
+        // the mirror *moves* with the migrating request — the donor keeps
+        // no copy, exactly like freeing the accounting-side host blocks
+        self.mirrors
+            .remove(&req)
+            .map(|s| HostKvBlob { k: s.k, v: s.v })
+    }
+
+    fn import_host_kv(&mut self, req: RequestId, blob: HostKvBlob) {
+        self.mirrors.insert(
+            req,
+            KvSlab {
+                k: blob.k,
+                v: blob.v,
+            },
+        );
     }
 
     fn block_bytes(&self) -> u64 {

@@ -112,21 +112,15 @@ impl ExecBackend for SimBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::backend::WorkItem;
     use crate::request::{Class, Phase};
 
     fn plan(preemptible: bool) -> IterationPlan {
-        IterationPlan {
-            items: vec![WorkItem {
-                req: 1,
-                class: Class::Offline,
-                phase: Phase::Prefill,
-                ctx_len: 0,
-                n_tokens: 512,
-                tokens: vec![],
-            }],
+        let mut p = IterationPlan {
             preemptible,
-        }
+            ..Default::default()
+        };
+        p.push_item(1, Class::Offline, Phase::Prefill, 0, 512, &[]);
+        p
     }
 
     fn backend() -> SimBackend {

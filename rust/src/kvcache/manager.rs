@@ -125,6 +125,11 @@ pub enum KvError {
     OutOfGpu { need: usize, free: usize },
     OutOfHost,
     UnknownSeq(RequestId),
+    /// The sequence is not in a migratable state: it still holds GPU
+    /// blocks, has checkpoints in flight, or its committed tokens are not
+    /// fully covered by completed host checkpoints (§4.4: only fully
+    /// checkpointed, evicted sequences move for free).
+    NotPortable(RequestId),
 }
 
 impl std::fmt::Display for KvError {
@@ -135,6 +140,9 @@ impl std::fmt::Display for KvError {
             }
             KvError::OutOfHost => write!(f, "out of host KV blocks"),
             KvError::UnknownSeq(id) => write!(f, "unknown sequence {id}"),
+            KvError::NotPortable(id) => {
+                write!(f, "sequence {id} is not fully host-checkpointed")
+            }
         }
     }
 }
@@ -549,6 +557,83 @@ impl KvManager {
             .count()
     }
 
+    /// Detach `id`'s KV accounting for cross-shard migration, freeing this
+    /// shard's blocks. Returns the committed tokens covered by the
+    /// detached host-checkpoint prefix (the count the importer must
+    /// re-allocate), or 0 when the sequence held no state (never
+    /// registered, or discarded — a cold steal).
+    ///
+    /// Fails with [`KvError::NotPortable`] unless the sequence is in the
+    /// free-to-move state of §4.4: no GPU-resident blocks, no checkpoint
+    /// in flight, and every committed token covered by a completed host
+    /// checkpoint — the caller must evict (or discard) first. The block
+    /// *data* is the backend's concern
+    /// ([`ExecBackend::export_host_kv`](crate::backend::ExecBackend::export_host_kv));
+    /// this is the page-table half of the handoff.
+    pub fn export_host(&mut self, id: RequestId) -> Result<usize, KvError> {
+        if !self.owns(id) {
+            return Err(KvError::UnknownSeq(id));
+        }
+        let slot = rid_slot(id);
+        let Some(entry) = self
+            .seqs
+            .get_mut(slot)
+            .filter(|e| e.generation == rid_gen(id))
+        else {
+            return Ok(0); // never registered: nothing to detach
+        };
+        let Some(seq) = entry.kv.as_mut() else {
+            return Ok(0);
+        };
+        let bt = self.block_tokens;
+        let in_flight = seq
+            .host
+            .iter()
+            .any(|c| matches!(c, BlockCkpt::InFlight(_)));
+        if seq.resident != 0 || in_flight || !seq.fully_checkpointed(bt) {
+            return Err(KvError::NotPortable(id));
+        }
+        let tokens = seq.tokens;
+        for c in seq.host.iter_mut() {
+            if let BlockCkpt::Done(hb) = *c {
+                self.host.free(hb);
+            }
+            *c = BlockCkpt::None;
+        }
+        seq.host_done = 0;
+        entry.kv = None;
+        Ok(tokens)
+    }
+
+    /// Adopt a migrated checkpoint prefix on this shard: registers `id`
+    /// and allocates host blocks (marked `Done`) covering `tokens`
+    /// committed tokens, so resume is a plain prefetch. Fails atomically
+    /// with [`KvError::OutOfHost`] when the pool cannot hold the prefix
+    /// (the request stays registered with no KV — the recompute path).
+    pub fn import_host(&mut self, id: RequestId, tokens: usize) -> Result<(), KvError> {
+        self.register(id);
+        if tokens == 0 {
+            return Ok(());
+        }
+        let blocks = tokens.div_ceil(self.block_tokens);
+        if self.host.available() < blocks {
+            return Err(KvError::OutOfHost);
+        }
+        let seq = self.seqs[rid_slot(id)].kv.as_mut().unwrap();
+        debug_assert!(
+            seq.tokens == 0 && seq.gpu.is_empty(),
+            "importing over live KV state"
+        );
+        for _ in 0..blocks {
+            let hb = self.host.alloc().unwrap();
+            seq.gpu.push(None);
+            seq.host.push(BlockCkpt::Done(hb));
+        }
+        seq.tokens = tokens;
+        seq.host_done = blocks;
+        Ok(())
+    }
+
     /// Allocate a GPU block for a prefetched logical block and return it.
     pub fn begin_prefetch(&mut self, id: RequestId, idx: usize) -> Result<BlockId, KvError> {
         let gb = self.gpu.alloc().ok_or(KvError::OutOfGpu { need: 1, free: 0 })?;
@@ -751,6 +836,79 @@ mod tests {
         b.discard(ida); // no-op, not a panic
         assert_eq!(a.seq(ida).unwrap().tokens, 32);
         assert!(a.check_conservation() && b.check_conservation());
+    }
+
+    #[test]
+    fn export_import_moves_checkpoint_between_shards() {
+        use crate::request::rid_pack_sharded;
+        let mut donor = KvManager::for_shard(1, 8, 16, 16);
+        let mut target = KvManager::for_shard(2, 8, 16, 16);
+        let did = rid_pack_sharded(1, 3, 0);
+        donor.register(did);
+        donor.grow(did, 40).unwrap();
+        donor.commit(did, 40).unwrap();
+        // not portable while GPU-resident / partially checkpointed
+        assert_eq!(donor.export_host(did), Err(KvError::NotPortable(did)));
+        for i in donor.checkpoint_candidates(did) {
+            donor.begin_ckpt(did, i).unwrap();
+            donor.finish_ckpt(did, i);
+        }
+        assert_eq!(donor.export_host(did), Err(KvError::NotPortable(did)));
+        donor.evict_gpu(did);
+        let tokens = donor.export_host(did).unwrap();
+        assert_eq!(tokens, 40);
+        // donor fully clean: no leaked blocks, no resolvable sequence
+        assert_eq!(donor.gpu_free(), 8);
+        assert_eq!(donor.host_free(), 16);
+        assert!(donor.seq(did).is_none());
+        assert!(donor.check_conservation());
+
+        let tid = rid_pack_sharded(2, 5, 0);
+        target.import_host(tid, tokens).unwrap();
+        let seq = target.seq(tid).unwrap();
+        assert_eq!(seq.tokens, 40);
+        assert!(seq.fully_checkpointed(16));
+        assert_eq!(seq.gpu_blocks(), 0);
+        assert_eq!(target.host_free(), 16 - 3);
+        // resume is a plain prefetch of the imported blocks
+        assert_eq!(target.prefetch_candidates(tid).len(), 3);
+        for (i, _hb) in target.prefetch_candidates(tid) {
+            target.begin_prefetch(tid, i).unwrap();
+        }
+        assert_eq!(target.seq(tid).unwrap().gpu_blocks(), 3);
+        assert!(target.check_conservation());
+        target.release(tid, false);
+        assert!(target.check_conservation());
+    }
+
+    #[test]
+    fn export_host_of_empty_state_is_a_cold_steal() {
+        let mut m = mgr();
+        // never registered: nothing to detach, not an error
+        assert_eq!(m.export_host(1), Ok(0));
+        // discarded (registered, zero tokens): also cold
+        m.register(2);
+        m.grow(2, 20).unwrap();
+        m.commit(2, 20).unwrap();
+        m.discard(2);
+        assert_eq!(m.export_host(2), Ok(0));
+        assert!(m.seq(2).is_none(), "export drops the registration");
+        assert!(m.check_conservation());
+        // foreign ids still bounce
+        use crate::request::rid_pack_sharded;
+        let foreign = rid_pack_sharded(3, 1, 0);
+        assert_eq!(m.export_host(foreign), Err(KvError::UnknownSeq(foreign)));
+    }
+
+    #[test]
+    fn import_host_fails_atomically_when_pool_short() {
+        let mut m = KvManager::new(8, 2, 16);
+        assert_eq!(m.import_host(1, 3 * 16), Err(KvError::OutOfHost));
+        assert_eq!(m.host_free(), 2, "failed import must not leak");
+        // the registration survives for the recompute fallback
+        assert!(m.seq(1).is_some());
+        assert_eq!(m.seq(1).unwrap().tokens, 0);
+        assert!(m.check_conservation());
     }
 
     #[test]

@@ -67,3 +67,5 @@ pub use request::RequestId;
 pub use server::ServingEngine;
 /// Multi-worker routing: trace partitioning and live placement.
 pub use shard::{Placement, ShardRouter, ShardedClient};
+/// Cross-shard offline work stealing (checkpoint-backed migration).
+pub use shard::{StealConfig, StealCoordinator};

@@ -4,12 +4,13 @@
 //! conserve simulate [--policy conserve|vllm++|online-only] [--rate R]
 //!                   [--cv CV] [--duration S] [--offline-pool N]
 //!                   [--shards N] [--placement rr|least-kv|affinity[:headroom]]
-//!                   [--set key=value ...]
+//!                   [--steal on|off] [--set key=value ...]
 //!     Run a co-serving experiment on the simulated A100/Llama-2-7B
 //!     testbed and print the report. With --shards N > 1 the trace is
 //!     routed across N independent worker shards (each its own
 //!     simulated GPU, arena, KV pool and scheduler, run on its own
-//!     thread) and per-shard plus merged reports are printed.
+//!     thread) and per-shard plus merged reports are printed;
+//!     --steal on adds cross-shard offline work stealing.
 //!
 //! conserve serve    [--artifacts DIR] [--duration S] [--rate R]
 //!                   [--set key=value ...]
@@ -121,11 +122,24 @@ fn simulate(args: &Args) -> Result<()> {
     let shards = args.get_usize("shards", 1)?;
     let placement: conserve::shard::Placement =
         args.get("placement").unwrap_or("affinity").parse()?;
+    let steal = match args.get("steal").unwrap_or("off") {
+        "on" | "true" | "1" => Some(conserve::StealConfig::default()),
+        "off" | "false" | "0" => None,
+        other => bail!("--steal expects on|off, got `{other}`"),
+    };
 
     let mut lg = workload::LoadGen::new(cfg.seed, rate, cv);
     let arrivals = lg.arrivals_until(duration);
     if shards > 1 {
-        return simulate_sharded(cfg, shards, placement, &arrivals, offline_pool, duration);
+        return simulate_sharded(
+            cfg,
+            shards,
+            placement,
+            &arrivals,
+            offline_pool,
+            duration,
+            steal,
+        );
     }
     let report = SimExperiment {
         cfg,
@@ -143,6 +157,7 @@ fn simulate(args: &Args) -> Result<()> {
 /// Sharded variant of `simulate`: the exact workload
 /// `SimExperiment::run` would serve ([`SimExperiment::events`]), routed
 /// across N worker shards.
+#[allow(clippy::too_many_arguments)]
 fn simulate_sharded(
     cfg: EngineConfig,
     shards: usize,
@@ -150,8 +165,9 @@ fn simulate_sharded(
     online_arrivals: &[conserve::TimeUs],
     offline_pool: usize,
     duration: f64,
+    steal: Option<conserve::StealConfig>,
 ) -> Result<()> {
-    use conserve::shard::run_sharded_sim;
+    use conserve::shard::run_sharded_sim_steal;
 
     let exp = SimExperiment {
         cfg: cfg.clone(),
@@ -161,16 +177,24 @@ fn simulate_sharded(
         offline_lengths: Lengths::offline_paper(),
         duration_s: duration,
     };
-    let run = run_sharded_sim(&cfg, shards, placement, exp.events(), duration);
+    let stealing = steal.is_some();
+    let run = run_sharded_sim_steal(&cfg, shards, placement, exp.events(), duration, steal);
     for (i, r) in run.per_shard.iter().enumerate() {
         println!("-- shard {i} ({} requests) --", run.shard_requests[i]);
         print_report(r);
     }
     println!(
-        "== merged: {shards} shards, {placement} placement, makespan {:.1} s ==",
+        "== merged: {shards} shards, {placement} placement, steal {}, makespan {:.1} s ==",
+        if stealing { "on" } else { "off" },
         run.makespan_s
     );
     print_report(&run.merged);
+    if stealing {
+        println!(
+            "  steals              {:>6} out / {} in",
+            run.merged.steals_out, run.merged.steals_in
+        );
+    }
     Ok(())
 }
 

@@ -68,9 +68,84 @@ fn cidx(class: Class) -> usize {
     }
 }
 
+/// Default streaming-window width: matches the 15 s windows
+/// `Report::from_engine` plots (Figures 5/6).
+pub const DEFAULT_WINDOW_US: TimeUs = 15 * US_PER_SEC;
+
+/// Cap on streaming-window slots (~11 days at the default width):
+/// a bogus far-future timestamp must not balloon the ring.
+const MAX_WINDOW_SLOTS: usize = 65_536;
+
+/// Per-window streaming aggregates, indexed `[online, offline]`.
+/// Histograms are lazily allocated, so silent windows cost a few
+/// pointers.
+#[derive(Debug, Clone)]
+struct WindowSlot {
+    ttft: [LogHistogram; 2],
+    tpot: [LogHistogram; 2],
+    gen: [u64; 2],
+    proc: [u64; 2],
+}
+
+impl Default for WindowSlot {
+    fn default() -> Self {
+        Self {
+            ttft: [LogHistogram::new(), LogHistogram::new()],
+            tpot: [LogHistogram::new(), LogHistogram::new()],
+            gen: [0, 0],
+            proc: [0, 0],
+        }
+    }
+}
+
+/// Record-time per-window aggregation: the windowed Fig. 5/6 series
+/// without the raw event log. Each sample lands in the histogram of its
+/// fixed-width window as it is recorded, so
+/// [`Recorder::set_capture_events`]`(false)` runs still produce windowed
+/// timeseries (any query window that is a multiple of the ring width is
+/// served by merging slots).
+#[derive(Debug)]
+struct WindowRing {
+    window: TimeUs,
+    slots: Vec<WindowSlot>,
+}
+
+impl WindowRing {
+    fn new(window: TimeUs) -> Self {
+        Self {
+            window: window.max(1),
+            slots: Vec::new(),
+        }
+    }
+
+    fn slot_mut(&mut self, t: TimeUs) -> &mut WindowSlot {
+        let w = ((t / self.window) as usize).min(MAX_WINDOW_SLOTS - 1);
+        if self.slots.len() <= w {
+            self.slots.resize_with(w + 1, WindowSlot::default);
+        }
+        &mut self.slots[w]
+    }
+
+    fn merge(&mut self, other: &WindowRing) {
+        if self.slots.len() < other.slots.len() {
+            self.slots
+                .resize_with(other.slots.len(), WindowSlot::default);
+        }
+        for (a, b) in self.slots.iter_mut().zip(&other.slots) {
+            for i in 0..2 {
+                a.ttft[i].merge(&b.ttft[i]);
+                a.tpot[i].merge(&b.tpot[i]);
+                a.gen[i] += b.gen[i];
+                a.proc[i] += b.proc[i];
+            }
+        }
+    }
+}
+
 /// Streaming metrics recorder. Aggregates (histograms, totals) are
 /// maintained on record; the raw event log feeds post-run timeseries
-/// analysis and can be switched off for long traces.
+/// analysis and can be switched off for long traces (windowed series
+/// then come from the streaming window ring).
 #[derive(Debug)]
 pub struct Recorder {
     pub ttfts: Vec<TtftEvent>,
@@ -86,7 +161,15 @@ pub struct Recorder {
     /// Engine loop iterations (scheduling steps) — hot-path throughput
     /// denominator for `bench_sched_loop`.
     pub engine_iters: u64,
+    /// Offline requests this shard migrated away / adopted via
+    /// cross-shard work stealing.
+    pub steals_out: u64,
+    pub steals_in: u64,
+    /// Committed tokens whose host checkpoints travelled with stolen
+    /// requests (0 for cold steals).
+    pub stolen_ckpt_tokens: u64,
     capture_events: bool,
+    ring: Option<WindowRing>,
     ttft_hist: [LogHistogram; 2],
     tpot_hist: [LogHistogram; 2],
     gen_tokens: [u64; 2],
@@ -113,7 +196,11 @@ impl Recorder {
             blocking_swap_us: 0,
             finished: [0, 0],
             engine_iters: 0,
+            steals_out: 0,
+            steals_in: 0,
+            stolen_ckpt_tokens: 0,
             capture_events: true,
+            ring: None,
             ttft_hist: [LogHistogram::new(), LogHistogram::new()],
             tpot_hist: [LogHistogram::new(), LogHistogram::new()],
             gen_tokens: [0, 0],
@@ -121,16 +208,40 @@ impl Recorder {
         }
     }
 
-    /// Disable raw event capture (streaming aggregates only). Windowed
-    /// timeseries queries need the event log; overall percentiles,
-    /// means, counts and violation rates do not.
+    /// Disable raw event capture (streaming aggregates only). Turning
+    /// capture off auto-enables the streaming window ring (at
+    /// [`DEFAULT_WINDOW_US`] unless [`set_streaming_windows`] chose a
+    /// width already), so windowed timeseries keep working; overall
+    /// percentiles, means, counts and violation rates never needed the
+    /// event log.
+    ///
+    /// [`set_streaming_windows`]: Self::set_streaming_windows
     pub fn set_capture_events(&mut self, on: bool) {
         self.capture_events = on;
+        if !on && self.ring.is_none() {
+            self.ring = Some(WindowRing::new(DEFAULT_WINDOW_US));
+        }
+    }
+
+    /// Enable (or re-size) record-time window aggregation: every later
+    /// sample also lands in a fixed-`window` streaming histogram, and
+    /// [`timeseries`](Self::timeseries) queries whose window is a
+    /// multiple of `window` are served from the ring when the event log
+    /// is off. Existing ring contents are dropped on a re-size, and
+    /// [`merge`](Self::merge) drops a source ring whose width differs
+    /// from this one's — keep one width (the default) across a fleet.
+    pub fn set_streaming_windows(&mut self, window: TimeUs) {
+        self.ring = Some(WindowRing::new(window));
     }
 
     pub fn record_first_token(&mut self, t: TimeUs, class: Class, ttft_us: u64) {
         self.ttft_hist[cidx(class)].record(ttft_us);
         self.gen_tokens[cidx(class)] += 1;
+        if let Some(ring) = &mut self.ring {
+            let slot = ring.slot_mut(t);
+            slot.ttft[cidx(class)].record(ttft_us);
+            slot.gen[cidx(class)] += 1;
+        }
         if self.capture_events {
             self.ttfts.push(TtftEvent { t, class, ttft_us });
             self.tokens.push(TokenEvent {
@@ -144,6 +255,11 @@ impl Recorder {
     pub fn record_token(&mut self, t: TimeUs, class: Class, gap_us: u64) {
         self.tpot_hist[cidx(class)].record(gap_us);
         self.gen_tokens[cidx(class)] += 1;
+        if let Some(ring) = &mut self.ring {
+            let slot = ring.slot_mut(t);
+            slot.tpot[cidx(class)].record(gap_us);
+            slot.gen[cidx(class)] += 1;
+        }
         if self.capture_events {
             self.tokens.push(TokenEvent {
                 t,
@@ -156,6 +272,9 @@ impl Recorder {
     pub fn record_processed(&mut self, t: TimeUs, class: Class, n: usize) {
         if n > 0 {
             self.processed_tokens[cidx(class)] += n as u64;
+            if let Some(ring) = &mut self.ring {
+                ring.slot_mut(t).proc[cidx(class)] += n as u64;
+            }
             if self.capture_events {
                 self.processed.push(ProcessedEvent { t, class, n });
             }
@@ -172,6 +291,37 @@ impl Recorder {
     /// merged percentiles are computed over the *union* of all shards'
     /// samples, not an average of per-shard percentiles.
     pub fn merge(&mut self, other: &Recorder) {
+        // ---- streaming window rings first (event logs are not yet
+        // extended, so each side's samples replay exactly once) ----
+        let self_had_ring = self.ring.is_some();
+        match (&mut self.ring, &other.ring) {
+            (Some(a), Some(b)) if a.window == b.window => a.merge(b),
+            (None, Some(b)) => {
+                let mut ring = WindowRing::new(b.window);
+                ring.merge(b);
+                self.ring = Some(ring);
+            }
+            // mismatched widths: keep self's ring; all in-tree recorders
+            // use DEFAULT_WINDOW_US, so this only drops a caller's
+            // custom-width ring (documented on set_streaming_windows)
+            _ => {}
+        }
+        if let Some(ring) = &mut self.ring {
+            if other.ring.is_none() {
+                // the source captured raw events instead of a ring:
+                // replay them so the merged ring misses nothing
+                Self::replay_into_ring(ring, &other.ttfts, &other.tokens, &other.processed);
+            }
+            if !self_had_ring {
+                // the ring was adopted from `other`: backfill this
+                // side's own previously event-logged samples
+                Self::replay_into_ring(ring, &self.ttfts, &self.tokens, &self.processed);
+            }
+        }
+        // a recorder that absorbed a capture-off source has an
+        // incomplete event log: windowed queries must use the ring
+        self.capture_events = self.capture_events && other.capture_events;
+
         self.ttfts.extend_from_slice(&other.ttfts);
         self.tokens.extend_from_slice(&other.tokens);
         self.processed.extend_from_slice(&other.processed);
@@ -182,12 +332,38 @@ impl Recorder {
         self.prefetch_blocks += other.prefetch_blocks;
         self.blocking_swap_us += other.blocking_swap_us;
         self.engine_iters += other.engine_iters;
+        self.steals_out += other.steals_out;
+        self.steals_in += other.steals_in;
+        self.stolen_ckpt_tokens += other.stolen_ckpt_tokens;
         for i in 0..2 {
             self.finished[i] += other.finished[i];
             self.gen_tokens[i] += other.gen_tokens[i];
             self.processed_tokens[i] += other.processed_tokens[i];
             self.ttft_hist[i].merge(&other.ttft_hist[i]);
             self.tpot_hist[i].merge(&other.tpot_hist[i]);
+        }
+    }
+
+    /// Re-record raw events into a window ring (merge-time backfill for
+    /// recorders that logged events instead of maintaining a ring).
+    fn replay_into_ring(
+        ring: &mut WindowRing,
+        ttfts: &[TtftEvent],
+        tokens: &[TokenEvent],
+        processed: &[ProcessedEvent],
+    ) {
+        for e in ttfts {
+            ring.slot_mut(e.t).ttft[cidx(e.class)].record(e.ttft_us);
+        }
+        for e in tokens {
+            let slot = ring.slot_mut(e.t);
+            slot.gen[cidx(e.class)] += 1;
+            if let Some(gap) = e.tpot_us {
+                slot.tpot[cidx(e.class)].record(gap);
+            }
+        }
+        for e in processed {
+            ring.slot_mut(e.t).proc[cidx(e.class)] += e.n as u64;
         }
     }
 
@@ -276,6 +452,17 @@ impl Recorder {
         until: TimeUs,
     ) -> Vec<WindowStats> {
         let window = window.max(1);
+        // With the event log off, serve from the streaming window ring.
+        // Query windows that are a multiple of the ring width are exact
+        // (bucket-wise histogram merges); any other width is rounded up
+        // to the next multiple — a coarser series (self-describing via
+        // `start_s`) beats silently returning zeros from the empty log.
+        if !self.capture_events {
+            if let Some(ring) = &self.ring {
+                let effective = window.div_ceil(ring.window) * ring.window;
+                return self.ring_timeseries(ring, class, effective, until);
+            }
+        }
         let n_windows = (until.div_ceil(window)) as usize;
         let mut ttft_h = vec![LogHistogram::default(); n_windows];
         let mut tpot_h = vec![LogHistogram::default(); n_windows];
@@ -312,6 +499,50 @@ impl Recorder {
                 tokens_per_s: gen_count[w] as f64 * per_sec,
                 processed_per_s: proc_count[w] as f64 * per_sec,
                 n_ttft: ttft_h[w].count() as usize,
+            })
+            .collect()
+    }
+
+    /// Windowed series from the streaming ring: each output window
+    /// merges `window / ring.window` slots (and both classes, for a
+    /// `None` filter) bucket-wise. O(windows · buckets), no event log.
+    /// Whole slots are merged, so samples recorded past a non-aligned
+    /// `until` within the final slot are included (bounded by one ring
+    /// width — the event path clips exactly).
+    fn ring_timeseries(
+        &self,
+        ring: &WindowRing,
+        class: Option<Class>,
+        window: TimeUs,
+        until: TimeUs,
+    ) -> Vec<WindowStats> {
+        let n_windows = (until.div_ceil(window)) as usize;
+        let per = (window / ring.window).max(1) as usize;
+        let per_sec = US_PER_SEC as f64 / window as f64;
+        (0..n_windows)
+            .map(|w| {
+                let mut ttft = LogHistogram::new();
+                let mut tpot = LogHistogram::new();
+                let mut gen = 0u64;
+                let mut proc = 0u64;
+                for slot in ring.slots.iter().skip(w * per).take(per) {
+                    for ci in 0..2 {
+                        if class.is_none_or(|c| cidx(c) == ci) {
+                            ttft.merge(&slot.ttft[ci]);
+                            tpot.merge(&slot.tpot[ci]);
+                            gen += slot.gen[ci];
+                            proc += slot.proc[ci];
+                        }
+                    }
+                }
+                WindowStats {
+                    start_s: (w as u64 * window) as f64 / US_PER_SEC as f64,
+                    p99_ttft_ms: ttft.quantile(99.0) as f64 / 1000.0,
+                    p99_tpot_ms: tpot.quantile(99.0) as f64 / 1000.0,
+                    tokens_per_s: gen as f64 * per_sec,
+                    processed_per_s: proc as f64 * per_sec,
+                    n_ttft: ttft.count() as usize,
+                }
             })
             .collect()
     }
@@ -451,6 +682,115 @@ mod tests {
         assert!(close(r.mean_ttft_ms(Class::Online), 200.0, 1e-9));
         assert_eq!(r.gen_token_count(None), 2);
         assert_eq!(r.processed_token_count(None), 512);
+    }
+
+    #[test]
+    fn capture_off_still_produces_windowed_timeseries() {
+        // the ROADMAP item: Fig. 5/6 series without the raw event log
+        let mut r = Recorder::new();
+        r.set_capture_events(false);
+        // window 0: one 100 ms TTFT; window 2: one 300 ms TTFT + decode
+        r.record_first_token(500_000, Class::Online, 100_000);
+        r.record_first_token(31_000_000, Class::Online, 300_000);
+        r.record_token(32_000_000, Class::Online, 50_000);
+        r.record_processed(32_000_000, Class::Online, 640);
+        r.record_first_token(31_500_000, Class::Offline, 9_000_000);
+
+        let ts = r.timeseries(Some(Class::Online), DEFAULT_WINDOW_US, 45_000_000);
+        assert_eq!(ts.len(), 3);
+        assert!(close(ts[0].p99_ttft_ms, 100.0, 0.016));
+        assert_eq!(ts[0].n_ttft, 1);
+        assert_eq!(ts[1].n_ttft, 0);
+        assert!(close(ts[2].p99_ttft_ms, 300.0, 0.016));
+        assert!(close(ts[2].p99_tpot_ms, 50.0, 0.016));
+        assert!(ts[2].processed_per_s > 0.0);
+        // class filter: offline sample invisible above, visible to None
+        let all = r.timeseries(None, DEFAULT_WINDOW_US, 45_000_000);
+        assert_eq!(all[2].n_ttft, 2);
+        // a query window that is a multiple of the ring width merges slots
+        let wide = r.timeseries(Some(Class::Online), 2 * DEFAULT_WINDOW_US, 45_000_000);
+        assert_eq!(wide.len(), 2);
+        assert_eq!(wide[0].n_ttft, 1);
+        assert_eq!(wide[1].n_ttft, 1);
+    }
+
+    #[test]
+    fn ring_and_event_paths_agree() {
+        let mut with_events = Recorder::new();
+        let mut ring_only = Recorder::new();
+        ring_only.set_capture_events(false);
+        let mut state = 777u64;
+        let mut rng = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+            state >> 33
+        };
+        for _ in 0..3000 {
+            // keep samples off the final partial slot so both paths
+            // clip identically
+            let t = rng() % 60_000_000;
+            let ttft = 1_000 + rng() % 2_000_000;
+            with_events.record_first_token(t, Class::Online, ttft);
+            ring_only.record_first_token(t, Class::Online, ttft);
+        }
+        let a = with_events.timeseries(Some(Class::Online), DEFAULT_WINDOW_US, 60_000_000);
+        let b = ring_only.timeseries(Some(Class::Online), DEFAULT_WINDOW_US, 60_000_000);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.n_ttft, y.n_ttft);
+            assert!(close(x.p99_ttft_ms, y.p99_ttft_ms, 1e-9), "{x:?} vs {y:?}");
+            assert!(close(x.tokens_per_s, y.tokens_per_s, 1e-9));
+        }
+    }
+
+    #[test]
+    fn merging_capture_off_shards_into_fresh_recorder_keeps_timeseries() {
+        // the sharded-report path: per-shard recorders run capture-off
+        // (ring only) and fold into a fresh Recorder::new() — the
+        // merged recorder must serve windowed series from the adopted
+        // ring, not the (empty) event log
+        let mut a = Recorder::new();
+        a.set_capture_events(false);
+        let mut b = Recorder::new();
+        b.set_capture_events(false);
+        a.record_first_token(1_000_000, Class::Online, 100_000);
+        b.record_first_token(2_000_000, Class::Online, 300_000);
+        let mut merged = Recorder::new(); // capture on, no ring
+        merged.merge(&a);
+        merged.merge(&b);
+        let ts = merged.timeseries(Some(Class::Online), DEFAULT_WINDOW_US, DEFAULT_WINDOW_US);
+        assert_eq!(ts.len(), 1);
+        assert_eq!(ts[0].n_ttft, 2, "merged ring must serve the series");
+        // mixed fleet: a capture-on shard's events replay into the ring
+        let mut c = Recorder::new();
+        c.record_first_token(3_000_000, Class::Online, 500_000);
+        c.record_token(3_500_000, Class::Online, 40_000);
+        c.record_processed(3_500_000, Class::Online, 64);
+        merged.merge(&c);
+        let ts = merged.timeseries(Some(Class::Online), DEFAULT_WINDOW_US, DEFAULT_WINDOW_US);
+        assert_eq!(ts[0].n_ttft, 3);
+        assert!(close(ts[0].p99_tpot_ms, 40.0, 0.016));
+        assert!(ts[0].processed_per_s > 0.0);
+    }
+
+    #[test]
+    fn merge_folds_window_rings_and_steal_counters() {
+        let mut a = Recorder::new();
+        a.set_capture_events(false);
+        let mut b = Recorder::new();
+        b.set_capture_events(false);
+        a.record_first_token(1_000_000, Class::Online, 100_000);
+        b.record_first_token(2_000_000, Class::Online, 900_000);
+        b.steals_out = 3;
+        b.steals_in = 1;
+        b.stolen_ckpt_tokens = 640;
+        a.merge(&b);
+        assert_eq!(a.steals_out, 3);
+        assert_eq!(a.steals_in, 1);
+        assert_eq!(a.stolen_ckpt_tokens, 640);
+        let ts = a.timeseries(Some(Class::Online), DEFAULT_WINDOW_US, DEFAULT_WINDOW_US);
+        assert_eq!(ts.len(), 1);
+        assert_eq!(ts[0].n_ttft, 2, "merged ring holds both shards' samples");
+        assert!(close(ts[0].p99_ttft_ms, 900.0, 0.016));
     }
 
     #[test]

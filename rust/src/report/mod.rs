@@ -101,6 +101,10 @@ pub struct Report {
     pub ckpt_blocks: u64,
     pub prefetch_blocks: u64,
     pub blocking_swap_ms: f64,
+    /// Offline requests migrated away from / adopted by this engine (or
+    /// fleet total, for a merged report) via cross-shard work stealing.
+    pub steals_out: u64,
+    pub steals_in: u64,
     pub ttft_violations: f64,
     pub online_timeseries: Vec<WindowStats>,
     pub all_timeseries: Vec<WindowStats>,
@@ -132,6 +136,8 @@ impl Report {
             ckpt_blocks: rec.ckpt_blocks,
             prefetch_blocks: rec.prefetch_blocks,
             blocking_swap_ms: rec.blocking_swap_us as f64 / 1000.0,
+            steals_out: rec.steals_out,
+            steals_in: rec.steals_in,
             ttft_violations: rec.ttft_violation_rate(Class::Online, 1500.0),
             online_timeseries: rec.timeseries(Some(Class::Online), 15 * US_PER_SEC, dur),
             all_timeseries: rec.timeseries(None, 15 * US_PER_SEC, dur),
@@ -171,6 +177,8 @@ impl Report {
             ("ckpt_blocks", num(self.ckpt_blocks as f64)),
             ("prefetch_blocks", num(self.prefetch_blocks as f64)),
             ("blocking_swap_ms", num(self.blocking_swap_ms)),
+            ("steals_out", num(self.steals_out as f64)),
+            ("steals_in", num(self.steals_in as f64)),
             ("ttft_violation_rate", num(self.ttft_violations)),
             (
                 "online_timeseries",

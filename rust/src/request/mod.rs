@@ -163,6 +163,12 @@ pub struct Request {
     /// Tokens of prefill recomputed due to discard-preemption (wasted work
     /// accounting, paper Fig. 4a).
     pub recomputed_tokens: usize,
+    /// Per-request sampler key seed, derived from the *submitted* id so it
+    /// is stable across arena re-keying and cross-shard migration: the
+    /// draw for output position `g` is `mix64(sampler_state ^ g)`, making
+    /// token streams reproducible regardless of which shard (or chunking)
+    /// serves the request.
+    pub sampler_state: u64,
 }
 
 impl Request {
@@ -194,6 +200,7 @@ impl Request {
             finished_at: None,
             preemptions: 0,
             recomputed_tokens: 0,
+            sampler_state: crate::util::rng::mix64(id ^ 0x5EED_C0DE),
         }
     }
 
@@ -233,21 +240,140 @@ impl Request {
     /// Concrete token ids for the next `n` feed positions (real path):
     /// prompt tokens then generated outputs.
     pub fn feed_tokens(&self, n: usize) -> Vec<TokenId> {
-        (self.ctx_len..self.ctx_len + n)
-            .map(|i| {
-                if i < self.prompt.len() {
-                    self.prompt[i]
-                } else {
-                    let j = i - self.prompt.len();
-                    self.output.get(j).copied().unwrap_or(0)
-                }
-            })
-            .collect()
+        let mut out = Vec::with_capacity(n);
+        self.feed_tokens_into(n, &mut out);
+        out
+    }
+
+    /// Append the next `n` feed tokens to `out` without allocating a
+    /// per-call vector — the scheduler stages all of an iteration's
+    /// token chunks into one reusable plan buffer this way.
+    pub fn feed_tokens_into(&self, n: usize, out: &mut Vec<TokenId>) {
+        out.extend((self.ctx_len..self.ctx_len + n).map(|i| {
+            if i < self.prompt.len() {
+                self.prompt[i]
+            } else {
+                let j = i - self.prompt.len();
+                self.output.get(j).copied().unwrap_or(0)
+            }
+        }));
     }
 
     /// TTFT if the first token has been emitted.
     pub fn ttft(&self) -> Option<TimeUs> {
         self.first_token_at.map(|t| t.saturating_sub(self.arrival))
+    }
+
+    /// Forfeit all committed context to the recompute path (discard
+    /// preemption, §4.4 extreme case / Fig. 4a): the next admission
+    /// re-prefills from token 0 and the lost work is charged to
+    /// `recomputed_tokens`. KV accounting (`KvManager::discard` /
+    /// `release`) is the caller's responsibility.
+    pub fn discard_to_recompute(&mut self) {
+        let lost = self.ctx_len;
+        self.ctx_len = 0;
+        self.ckpt_len = 0;
+        self.recomputed_tokens += lost;
+        self.residence = KvResidence::Discarded;
+    }
+}
+
+/// A request detached from any shard: everything needed to rebuild it in
+/// another shard's arena, and nothing tied to the donor (no arena id, no
+/// block table, no backend state).
+///
+/// This is the unit of cross-shard offline work stealing
+/// ([`crate::shard::steal`]): the donor converts a queued request into a
+/// `PortableRequest` with [`PortableRequest::detach`] (after detaching
+/// its host-checkpoint accounting via
+/// [`KvManager::export_host`](crate::kvcache::KvManager::export_host)),
+/// and the target rebuilds it with [`PortableRequest::into_request`] and
+/// a fresh arena insertion. `submitted_id` and `sampler_state` travel
+/// with it, so result correlation and token streams are unchanged by the
+/// move; the donor's old arena id dies with the donor-side removal (its
+/// generation is bumped and its shard bits never match the target).
+#[derive(Debug, Clone)]
+pub struct PortableRequest {
+    pub submitted_id: u64,
+    pub class: Class,
+    pub prompt: Vec<TokenId>,
+    pub prompt_len: usize,
+    pub max_new_tokens: usize,
+    pub arrival: TimeUs,
+    /// Generated output tokens so far (real path; empty in sim).
+    pub output: Vec<TokenId>,
+    pub generated: usize,
+    /// Committed tokens covered by the migrated host-checkpoint prefix
+    /// (0 = cold steal: the request restarts from prefill on the target).
+    pub ckpt_tokens: usize,
+    pub preemptions: u32,
+    pub recomputed_tokens: usize,
+    pub first_token_at: Option<TimeUs>,
+    pub last_token_at: Option<TimeUs>,
+    /// Per-request sampler key seed (see [`Request::sampler_state`]).
+    pub sampler_state: u64,
+}
+
+impl PortableRequest {
+    /// Detach `r` from its shard. `ckpt_tokens` is what the donor's
+    /// `KvManager::export_host` reported: the committed prefix whose host
+    /// checkpoints travel with the request (0 when it held no KV).
+    pub fn detach(r: Request, ckpt_tokens: usize) -> Self {
+        debug_assert_eq!(
+            ckpt_tokens, r.ctx_len,
+            "exported checkpoint must cover exactly the committed tokens"
+        );
+        Self {
+            submitted_id: r.submitted_id,
+            class: r.class,
+            prompt: r.prompt,
+            prompt_len: r.prompt_len,
+            max_new_tokens: r.max_new_tokens,
+            arrival: r.arrival,
+            output: r.output,
+            generated: r.generated,
+            ckpt_tokens,
+            preemptions: r.preemptions,
+            recomputed_tokens: r.recomputed_tokens,
+            first_token_at: r.first_token_at,
+            last_token_at: r.last_token_at,
+            sampler_state: r.sampler_state,
+        }
+    }
+
+    /// Rebuild an insertable [`Request`] on the target shard. The id is
+    /// provisional (0) until the target arena re-keys it on insertion;
+    /// `submitted_id` is preserved so callers still correlate results.
+    /// With a migrated checkpoint the request arrives `Host`-resident
+    /// (resume = prefetch of the imported host blocks); cold steals
+    /// arrive like fresh admissions.
+    pub fn into_request(self) -> Request {
+        let ckpt = self.ckpt_tokens;
+        let mut r = Request::new(
+            0,
+            self.class,
+            self.prompt,
+            self.prompt_len,
+            self.max_new_tokens,
+            self.arrival,
+        );
+        r.submitted_id = self.submitted_id;
+        r.sampler_state = self.sampler_state;
+        r.output = self.output;
+        r.generated = self.generated;
+        r.ctx_len = ckpt;
+        r.ckpt_len = ckpt;
+        r.preemptions = self.preemptions;
+        r.recomputed_tokens = self.recomputed_tokens;
+        r.first_token_at = self.first_token_at;
+        r.last_token_at = self.last_token_at;
+        r.state = State::Waiting;
+        r.residence = if ckpt > 0 {
+            KvResidence::Host
+        } else {
+            KvResidence::Gpu
+        };
+        r
     }
 }
 
@@ -331,5 +457,73 @@ mod tests {
         assert_eq!(r.ttft(), None);
         r.first_token_at = Some(3500);
         assert_eq!(r.ttft(), Some(2500));
+    }
+
+    #[test]
+    fn feed_tokens_into_matches_allocating_path() {
+        let mut r = Request::new(1, Class::Online, vec![10, 11, 12], 3, 4, 0);
+        r.output = vec![20, 21];
+        r.generated = 2;
+        r.ctx_len = 1;
+        let mut buf = vec![99]; // appended, not cleared
+        r.feed_tokens_into(4, &mut buf);
+        assert_eq!(buf, vec![99, 11, 12, 20, 21]);
+        assert_eq!(r.feed_tokens(4), vec![11, 12, 20, 21]);
+    }
+
+    #[test]
+    fn portable_round_trip_preserves_identity_and_tokens() {
+        let mut r = Request::new(7, Class::Offline, vec![1, 2, 3], 3, 8, 500);
+        r.submitted_id = 7;
+        r.output = vec![40, 41, 42];
+        r.generated = 3;
+        r.ctx_len = 5;
+        r.preemptions = 2;
+        r.recomputed_tokens = 9;
+        let state = r.sampler_state;
+        // simulate an arena re-keying before migration
+        r.id = rid_pack_sharded(3, 12, 4);
+
+        let p = PortableRequest::detach(r, 5);
+        assert_eq!(p.submitted_id, 7);
+        assert_eq!(p.sampler_state, state);
+        let back = p.into_request();
+        assert_eq!(back.id, 0, "id is provisional until target insertion");
+        assert_eq!(back.submitted_id, 7);
+        assert_eq!(back.sampler_state, state);
+        assert_eq!(back.output, vec![40, 41, 42]);
+        assert_eq!(back.generated, 3);
+        assert_eq!(back.ctx_len, 5);
+        assert_eq!(back.ckpt_len, 5);
+        assert_eq!(back.residence, KvResidence::Host);
+        assert_eq!(back.state, State::Waiting);
+        assert_eq!(back.preemptions, 2);
+        assert_eq!(back.recomputed_tokens, 9);
+        // resumes exactly where the donor stopped: one decode step next
+        assert_eq!(back.remaining_feed(), 1);
+        assert_eq!(back.phase(), Phase::Decode);
+    }
+
+    #[test]
+    fn portable_cold_steal_restarts_from_prefill() {
+        let mut r = Request::new(9, Class::Offline, vec![], 100, 10, 0);
+        r.generated = 3; // discarded-preempted progress, ctx already 0
+        let p = PortableRequest::detach(r, 0);
+        let back = p.into_request();
+        assert_eq!(back.residence, KvResidence::Gpu);
+        assert_eq!(back.ctx_len, 0);
+        assert_eq!(back.remaining_feed(), 103);
+        assert_eq!(back.phase(), Phase::Prefill);
+    }
+
+    #[test]
+    fn sampler_state_is_shard_invariant() {
+        // same submission id => same sampler state, regardless of which
+        // shard's arena later re-keys the request
+        let a = Request::new(42, Class::Online, vec![], 8, 2, 0);
+        let b = Request::new(42, Class::Online, vec![], 8, 2, 0);
+        let c = Request::new(43, Class::Online, vec![], 8, 2, 0);
+        assert_eq!(a.sampler_state, b.sampler_state);
+        assert_ne!(a.sampler_state, c.sampler_state);
     }
 }

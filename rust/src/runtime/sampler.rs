@@ -20,6 +20,23 @@ impl Sampler {
     }
 
     pub fn sample(&mut self, logits: &[f32]) -> TokenId {
+        let u = self.rng.f64();
+        self.sample_u(logits, u)
+    }
+
+    /// Sample with a caller-supplied draw key instead of the sampler's
+    /// own RNG stream: the same `(logits, key)` always yields the same
+    /// token. The serving path keys each draw by per-request sampler
+    /// state and output position
+    /// ([`WorkItem::sample_key`](crate::backend::WorkItem::sample_key)),
+    /// so token streams are reproducible across chunkings, batch
+    /// compositions, and cross-shard migration.
+    pub fn sample_keyed(&self, logits: &[f32], key: u64) -> TokenId {
+        let u = (crate::util::rng::mix64(key) >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        self.sample_u(logits, u)
+    }
+
+    fn sample_u(&self, logits: &[f32], u01: f64) -> TokenId {
         debug_assert!(!logits.is_empty());
         if self.temperature <= 0.0 {
             return argmax(logits);
@@ -37,7 +54,7 @@ impl Sampler {
         for p in &mut probs {
             *p /= sum;
         }
-        let mut u = self.rng.f64() as f32;
+        let mut u = u01 as f32;
         for (i, &p) in probs.iter().enumerate() {
             u -= p;
             if u <= 0.0 {
@@ -96,6 +113,25 @@ mod tests {
             (0..50).map(|_| s.sample(&logits)).collect()
         };
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn keyed_sampling_is_pure() {
+        let s = Sampler::new(0, 0.9);
+        let logits = vec![0.5, 0.4, 0.3, 0.2];
+        // same key => same token, on any sampler instance
+        let t1 = s.sample_keyed(&logits, 0xABCD);
+        let t2 = Sampler::new(77, 0.9).sample_keyed(&logits, 0xABCD);
+        assert_eq!(t1, t2);
+        // distinct keys cover the distribution
+        let mut counts = [0usize; 4];
+        for k in 0..2000u64 {
+            counts[s.sample_keyed(&logits, k) as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c > 100), "{counts:?}");
+        // greedy ignores the key entirely
+        let g = Sampler::new(0, 0.0);
+        assert_eq!(g.sample_keyed(&logits, 1), g.sample_keyed(&logits, 2));
     }
 
     #[test]

@@ -33,7 +33,7 @@ use crate::config::SchedConfig;
 use crate::kvcache::manager::{KvError, KvManager};
 use crate::kvcache::BlockId;
 use crate::profiler::LatencyProfile;
-use crate::request::{Class, KvResidence, Phase, Request, RequestArena, RequestId, State};
+use crate::request::{Class, KvResidence, Phase, Request, RequestArena, RequestId, State, TokenId};
 use crate::TimeUs;
 use std::collections::VecDeque;
 use std::str::FromStr;
@@ -98,8 +98,7 @@ pub struct ScheduleOutcome {
 impl ScheduleOutcome {
     /// Reset for the next iteration, retaining buffer capacity.
     pub fn clear(&mut self) {
-        self.plan.items.clear();
-        self.plan.preemptible = false;
+        self.plan.clear();
         self.evicted.clear();
         self.discarded.clear();
         self.swapped_out.clear();
@@ -206,6 +205,29 @@ impl UnifiedScheduler {
     /// pool thins out (best-effort semantics, §2.2).
     pub fn requeue_preempted(&mut self, id: RequestId) {
         self.offline_q.push_back(id);
+    }
+
+    /// Ids waiting in the offline queue, tail first — the order the
+    /// cross-shard steal donor harvests victims in (the tail is the work
+    /// least likely to run here soon, so stealing it costs the donor the
+    /// least locality).
+    pub fn offline_queue_rev(&self) -> impl Iterator<Item = RequestId> + '_ {
+        self.offline_q.iter().rev().copied()
+    }
+
+    /// Remove a specific id from the offline waiting queue (steal-victim
+    /// extraction). Returns false if it was not queued. Scans from the
+    /// *back*, matching the tail-first harvest order, so extracting a
+    /// steal victim costs O(distance from the tail), not O(backlog);
+    /// runs only on the migration path, never in the scheduling loop.
+    pub fn remove_offline(&mut self, id: RequestId) -> bool {
+        match self.offline_q.iter().rposition(|&x| x == id) {
+            Some(i) => {
+                self.offline_q.remove(i);
+                true
+            }
+            None => false,
+        }
     }
 
     pub fn online_waiting(&self) -> usize {
@@ -343,13 +365,16 @@ impl UnifiedScheduler {
             let r = &c.table[id];
             est_us += decode_cost(r.ctx_len);
             tokens_used += 1;
+            let (tok_start, tok_len) = stage_feed(r, 1, &mut out.plan.staging);
             items.push(WorkItem {
                 req: id,
                 class: Class::Online,
                 phase: Phase::Decode,
                 ctx_len: r.ctx_len,
                 n_tokens: 1,
-                tokens: feed_tokens_or_empty(r, 1),
+                tok_start,
+                tok_len,
+                sample_key: sample_key(r),
             });
         }
 
@@ -511,13 +536,16 @@ impl UnifiedScheduler {
                 let r = &c.table[id];
                 est_us += cost;
                 tokens_used += 1;
+                let (tok_start, tok_len) = stage_feed(r, 1, &mut out.plan.staging);
                 items.push(WorkItem {
                     req: id,
                     class: Class::Offline,
                     phase: Phase::Decode,
                     ctx_len: r.ctx_len,
                     n_tokens: 1,
-                    tokens: feed_tokens_or_empty(r, 1),
+                    tok_start,
+                    tok_len,
+                    sample_key: sample_key(r),
                 });
             }
 
@@ -654,13 +682,16 @@ impl UnifiedScheduler {
             let r = &c.table[id];
             *est_us += cost;
             *tokens_used += 1;
+            let (tok_start, tok_len) = stage_feed(r, 1, &mut out.plan.staging);
             items.push(WorkItem {
                 req: id,
                 class,
                 phase: Phase::Decode,
                 ctx_len: r.ctx_len,
                 n_tokens: 1,
-                tokens: feed_tokens_or_empty(r, 1),
+                tok_start,
+                tok_len,
+                sample_key: sample_key(r),
             });
             return Admit::Planned;
         }
@@ -687,13 +718,16 @@ impl UnifiedScheduler {
         let r = &c.table[id];
         *est_us += coef[1] * n as f64;
         *tokens_used += n;
+        let (tok_start, tok_len) = stage_feed(r, n, &mut out.plan.staging);
         items.push(WorkItem {
             req: id,
             class,
             phase: Phase::Prefill,
             ctx_len: r.ctx_len,
             n_tokens: n,
-            tokens: feed_tokens_or_empty(r, n),
+            tok_start,
+            tok_len,
+            sample_key: sample_key(r),
         });
         Admit::Planned
     }
@@ -908,13 +942,8 @@ impl UnifiedScheduler {
             out.blocking_io_blocks += blocks;
         } else {
             // ConServe extreme case (§4.4): discard and recompute later
-            let lost = c.table[victim].ctx_len;
             c.kv.discard(victim);
-            let r = c.table.get_mut(victim).unwrap();
-            r.recomputed_tokens += lost;
-            r.ctx_len = 0;
-            r.ckpt_len = 0;
-            r.residence = KvResidence::Discarded;
+            c.table.get_mut(victim).unwrap().discard_to_recompute();
             out.discarded.push(victim);
         }
         if c.table[victim].class == Class::Offline {
@@ -989,17 +1018,29 @@ impl UnifiedScheduler {
     }
 }
 
-/// Concrete token ids for a work item. The simulator's requests carry no
-/// token data (empty prompt, no sampled outputs) — return the non-
-/// allocating empty vec there so the steady-state scheduling path never
-/// touches the heap; the real path materializes the chunk.
+/// Stage the next `n` feed tokens of `r` into the plan's shared staging
+/// buffer, returning the item's `(start, len)` range. Requests with no
+/// token data (empty prompt, no sampled outputs — the whole simulator
+/// path) stage nothing, so the steady-state scheduling loop never
+/// touches the heap; the real path appends its chunk to the one
+/// iteration-reused buffer instead of allocating a per-item vector.
 #[inline]
-fn feed_tokens_or_empty(r: &Request, n: usize) -> Vec<crate::request::TokenId> {
+fn stage_feed(r: &Request, n: usize, staging: &mut Vec<TokenId>) -> (u32, u32) {
+    let start = staging.len() as u32;
     if r.prompt.is_empty() && r.output.is_empty() {
-        Vec::new()
-    } else {
-        r.feed_tokens(n)
+        return (start, 0);
     }
+    r.feed_tokens_into(n, staging);
+    (start, n as u32)
+}
+
+/// Draw key for the token this item may sample: per-request sampler
+/// state mixed with the output position, so the same request position
+/// samples identically on any shard, under any chunking or batch
+/// composition (the invariant cross-shard migration relies on).
+#[inline]
+fn sample_key(r: &Request) -> u64 {
+    crate::util::rng::mix64(r.sampler_state ^ r.generated as u64)
 }
 
 #[cfg(test)]
@@ -1126,6 +1167,24 @@ mod tests {
             }
         }
         assert!(table[id].is_done(), "request must finish via reused outcome");
+    }
+
+    #[test]
+    fn offline_queue_steal_accessors() {
+        let (mut s, mut table, _kv) = setup(Policy::ConServe);
+        let a = add(&mut table, Class::Offline, 64, 8);
+        let b = add(&mut table, Class::Offline, 64, 8);
+        let c = add(&mut table, Class::Offline, 64, 8);
+        for id in [a, b, c] {
+            s.enqueue(id, Class::Offline);
+        }
+        let rev: Vec<_> = s.offline_queue_rev().collect();
+        assert_eq!(rev, vec![c, b, a], "harvest order is tail-first");
+        assert!(s.remove_offline(b));
+        assert!(!s.remove_offline(b), "second removal must miss");
+        let rev: Vec<_> = s.offline_queue_rev().collect();
+        assert_eq!(rev, vec![c, a]);
+        assert_eq!(s.offline_waiting(), 2);
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! loop:
 //!   drain arrivals -> priority queues
 //!   complete async swap I/O (checkpoints, prefetches)
+//!   steal tick (sharded+steal only) -> adopt/donate migrated offline work
 //!   schedule (Algorithm 1)  -> iteration plan + preemption decisions
 //!   execute with safepoints -> Algorithm 2 may abort pure-offline batches
 //!   commit results          -> tokens, metrics, KV accounting
@@ -35,8 +36,9 @@ use crate::config::EngineConfig;
 use crate::kvcache::{BlockId, CkptController, Direction, KvManager, SwapEngine, SwapOp};
 use crate::metrics::Recorder;
 use crate::profiler::LatencyProfile;
-use crate::request::{Class, KvResidence, RequestArena, RequestId, State, TokenId};
+use crate::request::{Class, KvResidence, PortableRequest, RequestArena, RequestId, State, TokenId};
 use crate::scheduler::{budget, preempt, Ctx, Policy, ScheduleOutcome, UnifiedScheduler};
+use crate::shard::steal::{MigratedRequest, StealCoordinator};
 use crate::shard::ShardLoads;
 use crate::TimeUs;
 use std::sync::Arc;
@@ -86,14 +88,22 @@ pub struct ServingEngine<B: ExecBackend> {
     /// scanning the whole arena each iteration.
     prefetch_watch: Vec<RequestId>,
     /// Shared load board for sharded deployments: when set, the loop
-    /// publishes this shard's load once per iteration (three relaxed
+    /// publishes this shard's load once per iteration (a few relaxed
     /// atomic stores — no lock on the hot path).
     loads: Option<Arc<ShardLoads>>,
+    /// Cross-shard work-stealing coordinator: when set, the loop runs
+    /// one steal tick per iteration — adopt deliveries, fulfill demands
+    /// within the per-iteration budget, post hunger (see
+    /// [`crate::shard::steal`]).
+    steal: Option<Arc<StealCoordinator>>,
     // ---- persistent scratch (reused every iteration) ----
     io_scratch: Vec<SwapOp>,
     ids_scratch: Vec<RequestId>,
     blk_scratch: Vec<usize>,
     pf_scratch: Vec<(usize, BlockId)>,
+    mig_scratch: Vec<MigratedRequest>,
+    donate_scratch: Vec<MigratedRequest>,
+    demand_scratch: Vec<(usize, usize)>,
 }
 
 impl<B: ExecBackend> ServingEngine<B> {
@@ -146,10 +156,14 @@ impl<B: ExecBackend> ServingEngine<B> {
             retain_finished: true,
             prefetch_watch: Vec::new(),
             loads: None,
+            steal: None,
             io_scratch: Vec::new(),
             ids_scratch: Vec::new(),
             blk_scratch: Vec::new(),
             pf_scratch: Vec::new(),
+            mig_scratch: Vec::new(),
+            donate_scratch: Vec::new(),
+            demand_scratch: Vec::new(),
         }
     }
 
@@ -159,9 +173,27 @@ impl<B: ExecBackend> ServingEngine<B> {
 
     /// Attach the shared load board of a sharded deployment. The run
     /// loop publishes (resident KV blocks, online-reserved blocks,
-    /// waiting requests) for this engine's shard once per iteration.
+    /// waiting requests, offline backlog) for this engine's shard once
+    /// per iteration.
     pub fn set_shard_loads(&mut self, loads: Arc<ShardLoads>) {
         self.loads = Some(loads);
+    }
+
+    /// Attach the fleet's work-stealing coordinator
+    /// ([`crate::shard::steal`]). Requires a load board
+    /// ([`set_shard_loads`](Self::set_shard_loads)) so donors are
+    /// discoverable; the run loop then performs one steal tick per
+    /// iteration.
+    pub fn set_steal_coordinator(&mut self, steal: Arc<StealCoordinator>) {
+        self.steal = Some(steal);
+    }
+
+    /// True when this engine has no admitted work left and its arrival
+    /// source is exhausted — the run loop's natural exit condition.
+    /// Fleet drivers use this to tell "out of local work" (idle-wait for
+    /// steals) from "stopped on the time cap".
+    pub fn drained(&self) -> bool {
+        self.arrivals.exhausted() && !self.sched.has_work(&self.table)
     }
 
     /// The worker shard this engine serves (0 for single-worker).
@@ -221,6 +253,9 @@ impl<B: ExecBackend> ServingEngine<B> {
             }
             self.drain_arrivals(now);
             self.complete_io(now);
+            if self.steal.is_some() {
+                self.steal_tick();
+            }
 
             let more_arrivals = !self.arrivals.exhausted();
             let has_work = self.sched.has_work(&self.table);
@@ -248,6 +283,7 @@ impl<B: ExecBackend> ServingEngine<B> {
                     (self.kv.gpu_total() - self.kv.gpu_free()) as u64,
                     self.sched.reserved_online_blocks() as u64,
                     (self.sched.online_waiting() + self.sched.offline_waiting()) as u64,
+                    self.sched.offline_waiting() as u64,
                 );
             }
 
@@ -570,11 +606,7 @@ impl<B: ExecBackend> ServingEngine<B> {
                             self.kv.seq(id).map(|s| s.gpu_blocks())
                         );
                     }
-                    let lost = r.ctx_len;
-                    r.ctx_len = 0;
-                    r.ckpt_len = 0;
-                    r.recomputed_tokens += lost;
-                    r.residence = KvResidence::Discarded;
+                    r.discard_to_recompute();
                     self.kv.discard(id);
                     self.backend.drop_request(id);
                 }
@@ -597,12 +629,7 @@ impl<B: ExecBackend> ServingEngine<B> {
                         self.swap.drop_request(id);
                         self.kv.discard(id);
                         self.backend.drop_request(id);
-                        let r = self.table.get_mut(id).unwrap();
-                        let lost = r.ctx_len;
-                        r.ctx_len = 0;
-                        r.ckpt_len = 0;
-                        r.recomputed_tokens += lost;
-                        r.residence = KvResidence::Discarded;
+                        self.table.get_mut(id).unwrap().discard_to_recompute();
                     }
                     break 'outer;
                 }
@@ -655,8 +682,201 @@ impl<B: ExecBackend> ServingEngine<B> {
         });
     }
 
+    // ================================================================
+    // Cross-shard offline work stealing (crate::shard::steal): one tick
+    // per iteration, entirely off the scheduling hot path. The donor
+    // half detaches queue-tail victims; the target half re-keys
+    // deliveries into this shard's arena.
+    // ================================================================
+
+    /// One steal tick: adopt deliveries, fulfill posted demands within
+    /// the per-iteration budget, and post this shard's own demand while
+    /// its offline backlog is low.
+    fn steal_tick(&mut self) {
+        let Some(st) = self.steal.clone() else {
+            return;
+        };
+        let shard = self.table.shard();
+        // --- target hook: adopt migrations delivered to this shard ---
+        self.poll_steals();
+        // --- donor hook: fulfill demands within the budget ---
+        let mut demands = std::mem::take(&mut self.demand_scratch);
+        st.take_demands(shard, &mut demands);
+        if !demands.is_empty() {
+            let mut budget = st.config().budget_per_iter;
+            let keep = st.config().min_donor_backlog;
+            let mut out = std::mem::take(&mut self.donate_scratch);
+            for &(thief, want) in demands.iter() {
+                if budget == 0 {
+                    break;
+                }
+                let surplus = self.sched.offline_waiting().saturating_sub(keep);
+                let n = want.min(budget).min(surplus);
+                if n == 0 {
+                    continue;
+                }
+                out.clear();
+                self.donate_victims(n, &mut out);
+                budget = budget.saturating_sub(out.len());
+                st.deliver(thief, &mut out);
+            }
+            self.donate_scratch = out;
+            demands.clear();
+        }
+        self.demand_scratch = demands;
+        // --- hunger: keep a demand posted while the backlog is low ---
+        self.post_hunger();
+    }
+
+    /// Drain and adopt any migrations delivered to this shard. Returns
+    /// true if anything was absorbed (fleet drivers resume the run loop).
+    pub fn poll_steals(&mut self) -> bool {
+        let Some(st) = self.steal.clone() else {
+            return false;
+        };
+        let mut migs = std::mem::take(&mut self.mig_scratch);
+        let n = st.drain_inbox(self.table.shard(), &mut migs);
+        if n > 0 {
+            self.absorb_migrations(&mut migs);
+        }
+        self.mig_scratch = migs;
+        n > 0
+    }
+
+    /// Post (or refresh) this shard's steal demand if its offline
+    /// backlog is at or below the hunger watermark. Idempotent.
+    pub fn post_hunger(&mut self) {
+        let Some(st) = &self.steal else {
+            return;
+        };
+        let shard = self.table.shard();
+        if self.sched.offline_waiting() <= st.config().hungry_below {
+            if let Some(donor) = st.pick_donor(shard) {
+                st.post_demand(shard, donor, st.config().budget_per_iter);
+            }
+        }
+    }
+
+    /// Donor hook: extract up to `max` stealable offline requests from
+    /// the queue tail into `out`.
+    ///
+    /// A victim is stealable only when its KV is *free to move*: it
+    /// never held any (fresh or discard-preempted — a cold steal), or
+    /// every committed token has a completed host checkpoint and no GPU
+    /// block or transfer is outstanding (§4.4's evicted state — the
+    /// checkpoint accounting and host mirror travel with it). Running
+    /// requests, half-restored prefetches, and sequences with in-flight
+    /// I/O are never touched, so donating is always a host-side handoff
+    /// with zero GPU cost.
+    pub fn donate_victims(&mut self, max: usize, out: &mut Vec<MigratedRequest>) {
+        if max == 0 {
+            return;
+        }
+        let mut ids = std::mem::take(&mut self.ids_scratch);
+        ids.clear();
+        for id in self.sched.offline_queue_rev() {
+            if ids.len() >= max {
+                break;
+            }
+            let Some(r) = self.table.get(id) else { continue };
+            if r.residence == KvResidence::Prefetching || r.state == State::Running {
+                continue;
+            }
+            if self.swap.inflight_for(id, Direction::D2H) > 0
+                || self.swap.inflight_for(id, Direction::H2D) > 0
+            {
+                continue;
+            }
+            let portable = match self.kv.seq(id) {
+                None => true, // never admitted: no KV anywhere
+                Some(s) => {
+                    s.gpu_blocks() == 0
+                        && (s.tokens == 0 || s.fully_checkpointed(self.kv.block_tokens))
+                }
+            };
+            if portable {
+                ids.push(id);
+            }
+        }
+        for &id in &ids {
+            if !self.sched.remove_offline(id) {
+                continue;
+            }
+            let ckpt_tokens = match self.kv.export_host(id) {
+                Ok(t) => t,
+                Err(_) => {
+                    // raced into a non-portable state: put it back
+                    self.sched.requeue_preempted(id);
+                    continue;
+                }
+            };
+            // data half before teardown: the host mirror moves with the
+            // request (sim backends return None — accounting-only)
+            let kv_blob = if ckpt_tokens > 0 {
+                self.backend.export_host_kv(id)
+            } else {
+                None
+            };
+            self.backend.drop_request(id);
+            self.swap.drop_request(id);
+            let req = self
+                .table
+                .remove(id)
+                .expect("stealable victim must be live in the arena");
+            self.rec.steals_out += 1;
+            self.rec.stolen_ckpt_tokens += ckpt_tokens as u64;
+            out.push(MigratedRequest {
+                portable: PortableRequest::detach(req, ckpt_tokens),
+                kv: kv_blob,
+            });
+        }
+        self.ids_scratch = ids;
+    }
+
+    /// Target hook: re-key migrated requests into this shard — fresh
+    /// arena id (this shard's bits; the donor id is dead), imported
+    /// host-checkpoint prefix, back of the offline queue. A checkpoint
+    /// that no longer fits this shard's host pool falls back to the
+    /// recompute path (§4.4 extreme case) instead of failing the move.
+    ///
+    /// Timing caveat (simulation): each shard advances its own virtual
+    /// clock, and a migrated request keeps its original `arrival`, so
+    /// latency samples recorded here use *this* shard's clock — a thief
+    /// whose clock trails the donor's records clamped-to-zero offline
+    /// TTFTs, and windowed series bin by local time. Offline latency is
+    /// best-effort (never SLO-gated), so reports treat these as
+    /// approximate under stealing; online metrics are unaffected
+    /// (online work never migrates).
+    pub fn absorb_migrations(&mut self, migs: &mut Vec<MigratedRequest>) {
+        for m in migs.drain(..) {
+            let MigratedRequest { portable, kv } = m;
+            let ckpt_tokens = portable.ckpt_tokens;
+            let req = portable.into_request();
+            let id = self.table.insert(req);
+            if ckpt_tokens > 0 {
+                match self.kv.import_host(id, ckpt_tokens) {
+                    Ok(()) => {
+                        if let Some(blob) = kv {
+                            self.backend.import_host_kv(id, blob);
+                        }
+                    }
+                    Err(_) => {
+                        self.table.get_mut(id).unwrap().discard_to_recompute();
+                    }
+                }
+            } else {
+                self.kv.register(id);
+            }
+            self.sched.enqueue(id, Class::Offline);
+            self.rec.steals_in += 1;
+        }
+    }
+
     /// Nothing runnable: jump the virtual clock to the next event, or
-    /// nap briefly on the wall clock.
+    /// nap briefly on the wall clock. With a steal coordinator attached
+    /// the jump is capped so an idle shard re-polls its mailbox every
+    /// 100 ms of virtual time instead of warping past a whole delivery
+    /// window.
     fn idle_advance(&mut self, until: TimeUs) {
         let next_arrival = self.arrivals.next_time();
         let next_io = self.swap.next_completion();
@@ -665,10 +885,14 @@ impl<B: ExecBackend> ServingEngine<B> {
             (a, b) => a.or(b),
         };
         if self.clock.is_virtual() {
-            match target {
-                Some(t) => self.clock.advance_to(t.max(self.clock.now() + 1)),
-                None => self.clock.advance_to(until),
+            let mut t = match target {
+                Some(t) => t.max(self.clock.now() + 1),
+                None => until,
+            };
+            if self.steal.is_some() {
+                t = t.min(self.clock.now() + 100_000);
             }
+            self.clock.advance_to(t);
         } else {
             self.arrivals.wait_a_moment();
         }

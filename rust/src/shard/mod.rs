@@ -35,8 +35,9 @@
 //! `rust/PERF.md`).
 
 pub mod placement;
+pub mod steal;
 
-use crate::backend::{CostModel, SimBackend};
+use crate::backend::{CostModel, ExecBackend, SimBackend};
 use crate::clock::Clock;
 use crate::config::EngineConfig;
 use crate::metrics::Recorder;
@@ -49,6 +50,7 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 
 pub use placement::{LoadSnapshot, Placement};
+pub use steal::{MigratedRequest, StealConfig, StealCoordinator};
 
 /// Lock-free per-shard load board. Engines publish a summary once per
 /// scheduling iteration (three relaxed stores); placement reads a
@@ -65,6 +67,9 @@ struct LoadCell {
     resident: AtomicU64,
     online: AtomicU64,
     waiting: AtomicU64,
+    /// Offline backlog (queued offline requests) — the work-stealing
+    /// imbalance signal.
+    offline_waiting: AtomicU64,
     /// Bumped on every publish; lets submitters expire their optimistic
     /// in-flight charges once the engine has seen the queued arrivals.
     seq: AtomicU64,
@@ -87,11 +92,21 @@ impl ShardLoads {
 
     /// Publish shard `shard`'s current load (called by its engine once
     /// per iteration; relaxed stores, no synchronization).
-    pub fn publish(&self, shard: usize, resident_blocks: u64, online_blocks: u64, waiting: u64) {
+    /// `offline_waiting` is the queued-offline share of `waiting` — the
+    /// backlog signal the steal coordinator balances.
+    pub fn publish(
+        &self,
+        shard: usize,
+        resident_blocks: u64,
+        online_blocks: u64,
+        waiting: u64,
+        offline_waiting: u64,
+    ) {
         let c = &self.cells[shard];
         c.resident.store(resident_blocks, Ordering::Relaxed);
         c.online.store(online_blocks, Ordering::Relaxed);
         c.waiting.store(waiting, Ordering::Relaxed);
+        c.offline_waiting.store(offline_waiting, Ordering::Relaxed);
         c.seq.fetch_add(1, Ordering::Relaxed);
     }
 
@@ -110,6 +125,7 @@ impl ShardLoads {
             resident_blocks: c.resident.load(Ordering::Relaxed),
             online_blocks: c.online.load(Ordering::Relaxed),
             waiting: c.waiting.load(Ordering::Relaxed),
+            offline_waiting: c.offline_waiting.load(Ordering::Relaxed),
             capacity_blocks: self.capacity_blocks,
         }
     }
@@ -176,8 +192,9 @@ impl ShardRouter {
         let e = &mut self.est[s];
         e.resident_blocks += need;
         e.waiting += 1;
-        if req.class == Class::Online {
-            e.online_blocks += need;
+        match req.class {
+            Class::Online => e.online_blocks += need,
+            Class::Offline => e.offline_waiting += 1,
         }
         s
     }
@@ -235,11 +252,83 @@ pub fn run_sharded_sim(
     events: Vec<Request>,
     duration_s: f64,
 ) -> ShardedRun {
+    run_sharded_sim_steal(cfg, n_shards, policy, events, duration_s, None)
+}
+
+/// [`run_sharded_sim`] with optional cross-shard offline work stealing:
+/// pass a [`StealConfig`] and backlogged shards migrate queued offline
+/// requests to idle siblings (see [`steal`]).
+pub fn run_sharded_sim_steal(
+    cfg: &EngineConfig,
+    n_shards: usize,
+    policy: Placement,
+    events: Vec<Request>,
+    duration_s: f64,
+    steal: Option<StealConfig>,
+) -> ShardedRun {
     let mut router = ShardRouter::new(n_shards, policy, cfg);
     for r in events {
         router.push(r);
     }
-    let traces = router.into_traces();
+    run_sharded_traces(cfg, router.into_traces(), duration_s, steal)
+}
+
+/// Drive one shard to completion under the steal protocol: serve until
+/// local work is exhausted, then idle-wait for deliveries (re-posting
+/// the hunger demand) until the whole fleet has nothing in flight. The
+/// wall-clock failsafe guarantees a protocol bug degrades to a normal
+/// exit instead of a hung fleet.
+fn run_shard_with_steals<B: ExecBackend>(
+    engine: &mut ServingEngine<B>,
+    until: TimeUs,
+    st: &Arc<StealCoordinator>,
+    shard: usize,
+) -> TimeUs {
+    let mut end;
+    'serve: loop {
+        end = engine.run(until);
+        if !engine.drained() {
+            break; // stopped on the time cap with work still admitted
+        }
+        if engine.poll_steals() {
+            continue; // a delivery landed between iterations
+        }
+        st.enter_idle(shard);
+        let idle_since = std::time::Instant::now();
+        loop {
+            if st.finished() {
+                break 'serve;
+            }
+            if engine.poll_steals() {
+                st.leave_idle(shard);
+                continue 'serve;
+            }
+            engine.post_hunger();
+            if idle_since.elapsed() > std::time::Duration::from_secs(10) {
+                break 'serve; // failsafe: never hang the fleet
+            }
+            std::thread::sleep(std::time::Duration::from_micros(50));
+        }
+    }
+    st.retire(shard);
+    end
+}
+
+/// Run pre-partitioned per-shard traces — the router-free entry point
+/// ([`run_sharded_sim`] routes first): `bench_steal` uses it to build a
+/// deliberately skewed placement (the offline burst on one shard) that
+/// no sane policy would produce but every fleet eventually sees.
+pub fn run_sharded_traces(
+    cfg: &EngineConfig,
+    traces: Vec<Vec<Request>>,
+    duration_s: f64,
+    steal: Option<StealConfig>,
+) -> ShardedRun {
+    let n_shards = traces.len();
+    assert!(
+        (1..=MAX_SHARDS).contains(&n_shards),
+        "n_shards must be in 1..={MAX_SHARDS}"
+    );
     let shard_requests: Vec<usize> = traces.iter().map(Vec::len).collect();
     let until = (duration_s * US_PER_SEC as f64) as TimeUs;
 
@@ -252,6 +341,10 @@ pub fn run_sharded_sim(
         LatencyProfile::profile(&mut pb, 4096, 128, 2048).expect("profiling failed")
     };
     let sched_policy = cfg.sched.policy;
+    // stealing needs the load board (backlog signals) even in trace mode
+    let loads = Arc::new(ShardLoads::new(n_shards, cfg.mem.gpu_blocks));
+    let steal_co: Option<Arc<StealCoordinator>> =
+        steal.map(|sc| Arc::new(StealCoordinator::new(sc, loads.clone())));
 
     let results: Vec<(Recorder, TimeUs)> = std::thread::scope(|scope| {
         let handles: Vec<_> = traces
@@ -259,6 +352,8 @@ pub fn run_sharded_sim(
             .enumerate()
             .map(|(shard, trace)| {
                 let cfg = cfg.clone();
+                let loads = loads.clone();
+                let steal_co = steal_co.clone();
                 scope.spawn(move || {
                     let clock = Clock::virtual_at(0);
                     let backend =
@@ -267,7 +362,14 @@ pub fn run_sharded_sim(
                     let mut engine =
                         ServingEngine::for_shard(shard, cfg, backend, clock, profile, arrivals);
                     engine.set_retain_finished(false);
-                    let end = engine.run(until);
+                    let end = match &steal_co {
+                        Some(st) => {
+                            engine.set_shard_loads(loads);
+                            engine.set_steal_coordinator(st.clone());
+                            run_shard_with_steals(&mut engine, until, st, shard)
+                        }
+                        None => engine.run(until),
+                    };
                     assert!(
                         engine.kv.check_conservation(),
                         "shard {shard}: KV conservation violated"
@@ -490,11 +592,12 @@ mod tests {
     #[test]
     fn loads_publish_snapshot_round_trip() {
         let loads = ShardLoads::new(3, 1000);
-        loads.publish(1, 42, 7, 3);
+        loads.publish(1, 42, 7, 3, 2);
         let s = loads.snapshot(1);
         assert_eq!(s.resident_blocks, 42);
         assert_eq!(s.online_blocks, 7);
         assert_eq!(s.waiting, 3);
+        assert_eq!(s.offline_waiting, 2);
         assert_eq!(s.capacity_blocks, 1000);
         let mut all = Vec::new();
         loads.snapshot_into(&mut all);
@@ -508,8 +611,8 @@ mod tests {
         let (client, loads, mut sources) = sharded_channel(2, Placement::LeastKv, &cfg);
         assert_eq!(client.n_shards(), 2);
         // shard 0 reports heavy load; placement must pick shard 1
-        loads.publish(0, 500, 100, 9);
-        loads.publish(1, 10, 5, 0);
+        loads.publish(0, 500, 100, 9, 4);
+        loads.publish(1, 10, 5, 0, 0);
         let t1 = client.submit_online(vec![1, 2, 3], 4);
         assert_eq!(t1.shard, 1);
         let batch = client.submit_batch(vec![(vec![4], 2), (vec![5], 2)]);
@@ -556,6 +659,46 @@ mod tests {
     }
 
     #[test]
+    fn skewed_traces_complete_with_stealing() {
+        // all offline work lands on shard 0; with stealing, the fleet
+        // still completes everything and the idle shard does real work
+        let cfg = EngineConfig::sim_a100_7b();
+        let mut shard0 = Vec::new();
+        for i in 0..8 {
+            shard0.push(req(Class::Online, 128, 8, i * 400_000));
+        }
+        for _ in 0..40 {
+            shard0.push(req(Class::Offline, 512, 16, 0));
+        }
+        let shard1 = (0..8)
+            .map(|i| req(Class::Online, 128, 8, i * 400_000))
+            .collect();
+        let run = run_sharded_traces(
+            &cfg,
+            vec![shard0, shard1],
+            600.0,
+            Some(StealConfig::default()),
+        );
+        assert_eq!(
+            run.merged.online_finished + run.merged.offline_finished,
+            56,
+            "stealing must not lose or duplicate requests: {:?}",
+            run.merged
+        );
+        assert!(
+            run.merged.steals_in > 0 && run.merged.steals_in == run.merged.steals_out,
+            "every migration must be adopted exactly once: out={} in={}",
+            run.merged.steals_out,
+            run.merged.steals_in
+        );
+        assert!(
+            run.per_shard[1].offline_finished > 0,
+            "the idle shard must finish stolen offline work: {:?}",
+            run.per_shard[1]
+        );
+    }
+
+    #[test]
     fn sharded_client_spreads_bursts_between_publishes() {
         // nothing has published yet (or an engine is mid-iteration): the
         // optimistic in-flight charges must spread a burst instead of
@@ -570,7 +713,7 @@ mod tests {
         assert_eq!(counts, [2, 2, 2, 2], "burst herded: {counts:?}");
         // a publish expires the charges: placement follows the board again
         for s in 0..4 {
-            loads.publish(s, if s == 3 { 0 } else { 100 }, 0, 0);
+            loads.publish(s, if s == 3 { 0 } else { 100 }, 0, 0, 0);
         }
         let t = client.submit_online(vec![1], 4);
         assert_eq!(t.shard, 3);

@@ -24,7 +24,8 @@
 
 use crate::request::Class;
 
-/// Per-shard load summary consumed by [`Placement::pick`].
+/// Per-shard load summary consumed by [`Placement::pick`] and the
+/// work-stealing imbalance detector ([`crate::shard::steal`]).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct LoadSnapshot {
     /// KV blocks resident (or, for the trace router, cumulatively
@@ -34,6 +35,10 @@ pub struct LoadSnapshot {
     pub online_blocks: u64,
     /// Requests waiting in this shard's admission queues.
     pub waiting: u64,
+    /// Portion of `waiting` that is offline backlog — the signal the
+    /// steal coordinator balances (deep offline tails migrate to shards
+    /// reporting zero here).
+    pub offline_waiting: u64,
     /// The shard's GPU KV pool size in blocks.
     pub capacity_blocks: u64,
 }
@@ -187,6 +192,7 @@ mod tests {
             resident_blocks: resident,
             online_blocks: online,
             waiting,
+            offline_waiting: 0,
             capacity_blocks: 100,
         }
     }

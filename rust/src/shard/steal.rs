@@ -1,0 +1,422 @@
+//! Cross-shard offline work stealing: checkpoint-backed migration of
+//! queued offline requests from backlogged shards to idle ones.
+//!
+//! PR 3's shards share *nothing*, which is why they scale — and why a
+//! shard that drew an offline burst sits on a deep backlog while its
+//! neighbors idle: exactly the stranded capacity ConServe's harvesting
+//! story exists to kill. The paper's incremental checkpointing (§4.4)
+//! makes the fix cheap: a fully-checkpointed, GPU-evicted offline
+//! request is *portable* — moving it is a host-side handoff (the
+//! checkpoint accounting via
+//! [`KvManager::export_host`](crate::kvcache::KvManager::export_host) /
+//! `import_host`, plus the backend's host mirror via
+//! [`ExecBackend::export_host_kv`](crate::backend::ExecBackend::export_host_kv))
+//! and a target-side prefetch; no GPU state is touched. Requests that
+//! never ran (or were discard-preempted) are *cold* steals: nothing but
+//! the [`PortableRequest`] moves.
+//!
+//! ## Protocol (thief-initiated, mailbox per shard)
+//!
+//! 1. **Demand.** A shard whose offline backlog is at or below
+//!    [`StealConfig::hungry_below`] posts a demand — one relaxed atomic
+//!    store into the chosen donor's `wants` row. The donor is picked
+//!    from the [`ShardLoads`] board: the deepest `offline_waiting`
+//!    above [`StealConfig::min_donor_backlog`]. Demands are idempotent
+//!    (a cell per thief, not a queue): re-posting while hungry cannot
+//!    grow anything.
+//! 2. **Fulfill.** Once per engine iteration the donor drains its
+//!    demand row and, within [`StealConfig::budget_per_iter`], extracts
+//!    victims from its offline queue **tail** (the work least likely to
+//!    run there soon), detaches them
+//!    ([`ServingEngine::donate_victims`](crate::server::ServingEngine::donate_victims)),
+//!    and appends them to each thief's inbox.
+//! 3. **Adopt.** The thief drains its inbox at the top of its next
+//!    iteration
+//!    ([`ServingEngine::absorb_migrations`](crate::server::ServingEngine::absorb_migrations)):
+//!    each request is re-keyed into the thief's arena (fresh id carrying
+//!    the thief's shard bits — the donor's old id is stale by generation
+//!    *and* shard bits and can never resolve anywhere again),
+//!    its checkpoint prefix is imported into the thief's host pool, and
+//!    it joins the thief's offline queue; resume is a plain prefetch.
+//!
+//! `submitted_id` and `sampler_state` travel with the request, so result
+//! correlation and token streams are invariant under migration (see
+//! `tests/steal_props.rs`: the same trace with stealing on and off
+//! completes the identical request set with identical token streams).
+//!
+//! ## Termination (free-running fleets)
+//!
+//! Engines on their own OS threads must not exit while a sibling might
+//! still deliver work. A shard that drains its local work enters *idle*;
+//! when every shard is idle and every inbox is empty, the fleet is
+//! `finished()` and everyone exits. A shard forced out early (time cap)
+//! `retire()`s: its inbox drains into an orphan pool that any live shard
+//! adopts, so migrations are never silently dropped.
+
+use crate::backend::HostKvBlob;
+use crate::request::PortableRequest;
+use crate::shard::ShardLoads;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Tuning knobs for the steal coordinator. The defaults favor smooth
+/// trickle over bulk moves: a donor gives away at most `budget_per_iter`
+/// requests per scheduling iteration, so migration cost stays bounded
+/// and off the hot path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StealConfig {
+    /// Max requests one donor migrates per engine iteration (the
+    /// per-iteration steal budget).
+    pub budget_per_iter: usize,
+    /// A donor only gives work away while its own offline backlog
+    /// exceeds this floor (it keeps enough to stay saturated).
+    pub min_donor_backlog: usize,
+    /// A shard posts demands while its offline backlog is at or below
+    /// this watermark.
+    pub hungry_below: usize,
+}
+
+impl Default for StealConfig {
+    fn default() -> Self {
+        Self {
+            budget_per_iter: 8,
+            min_donor_backlog: 4,
+            hungry_below: 1,
+        }
+    }
+}
+
+/// One offline request in flight between shards: the shard-portable
+/// request plus the host KV payload of its checkpoint prefix (`None`
+/// for cold steals and on the simulator, whose checkpoints are
+/// accounting-only).
+#[derive(Debug)]
+pub struct MigratedRequest {
+    pub portable: PortableRequest,
+    pub kv: Option<HostKvBlob>,
+}
+
+/// Per-shard mailbox.
+struct StealCell {
+    /// `wants[t]`: requests thief `t` currently asks of this shard.
+    /// Idempotent demand cells (stores, not pushes) — a hungry thief
+    /// re-posting every iteration cannot grow state.
+    wants: Vec<AtomicU64>,
+    /// Migrations delivered to this shard, adopted at its next
+    /// iteration (or poll, when it is idle-waiting).
+    inbox: Mutex<Vec<MigratedRequest>>,
+    /// Out of local work, waiting on deliveries or fleet termination.
+    idle: AtomicBool,
+    /// Permanently gone (time cap / run end): deliveries divert to the
+    /// orphan pool.
+    retired: AtomicBool,
+}
+
+/// The fleet-wide steal coordinator: one mailbox per shard, an
+/// imbalance detector over the shared [`ShardLoads`] board, and the
+/// idle/termination protocol. All operations are a few atomics or one
+/// short mutex hold, and every engine touches it at most once per
+/// iteration — nothing here is on a scheduling hot path.
+pub struct StealCoordinator {
+    cfg: StealConfig,
+    loads: Arc<ShardLoads>,
+    cells: Vec<StealCell>,
+    /// Deliveries to retired shards, re-adopted by any live shard.
+    orphans: Mutex<Vec<MigratedRequest>>,
+    done: AtomicBool,
+}
+
+impl StealCoordinator {
+    /// A coordinator over the shards of `loads` (one cell per shard).
+    pub fn new(cfg: StealConfig, loads: Arc<ShardLoads>) -> Self {
+        let n = loads.n_shards();
+        Self {
+            cfg,
+            loads,
+            cells: (0..n)
+                .map(|_| StealCell {
+                    wants: (0..n).map(|_| AtomicU64::new(0)).collect(),
+                    inbox: Mutex::new(Vec::new()),
+                    idle: AtomicBool::new(false),
+                    retired: AtomicBool::new(false),
+                })
+                .collect(),
+            orphans: Mutex::new(Vec::new()),
+            done: AtomicBool::new(false),
+        }
+    }
+
+    pub fn config(&self) -> &StealConfig {
+        &self.cfg
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// Imbalance detector: the donor with the deepest published offline
+    /// backlog above the donor floor (ties: lowest index), or `None`
+    /// when the board shows no surplus anywhere. Retired shards are
+    /// skipped — their last published backlog is frozen (a time-capped
+    /// donor dies mid-backlog) and a demand posted to a corpse would
+    /// never be served, capturing the thief forever.
+    pub fn pick_donor(&self, thief: usize) -> Option<usize> {
+        let mut best: Option<(u64, usize)> = None;
+        for s in 0..self.cells.len() {
+            if s == thief || self.cells[s].retired.load(Ordering::SeqCst) {
+                continue;
+            }
+            let backlog = self.loads.snapshot(s).offline_waiting;
+            if backlog as usize <= self.cfg.min_donor_backlog {
+                continue;
+            }
+            if best.is_none_or(|(b, _)| backlog > b) {
+                best = Some((backlog, s));
+            }
+        }
+        best.map(|(_, s)| s)
+    }
+
+    /// Thief side: ask `donor` for up to `want` offline requests.
+    /// Posting clears the thief's cells on every other donor, so
+    /// switching donors (the previous one drained or died) does not
+    /// leave a stale demand behind. Best-effort, not airtight: a donor
+    /// that already `take_demands`-swapped the old demand into its
+    /// local buffer will still serve it, so a thief can transiently
+    /// receive up to two budgets' worth — bounded over-supply the
+    /// donor floor then redistributes, never lost work.
+    pub fn post_demand(&self, thief: usize, donor: usize, want: usize) {
+        for (s, cell) in self.cells.iter().enumerate() {
+            let w = if s == donor { want as u64 } else { 0 };
+            cell.wants[thief].store(w, Ordering::Relaxed);
+        }
+    }
+
+    /// Donor side: collect (and clear) the demands posted to `donor` as
+    /// `(thief, want)` pairs, lowest thief index first.
+    pub fn take_demands(&self, donor: usize, out: &mut Vec<(usize, usize)>) {
+        out.clear();
+        for (t, w) in self.cells[donor].wants.iter().enumerate() {
+            let v = w.swap(0, Ordering::Relaxed);
+            if v > 0 && t != donor {
+                out.push((t, v as usize));
+            }
+        }
+    }
+
+    /// Donor side: append migrations to `thief`'s inbox (drains `migs`).
+    /// Deliveries to a retired thief divert to the orphan pool so no
+    /// request is ever dropped. The retired flag is checked *under the
+    /// inbox lock* (and [`retire`](Self::retire) flips it under the same
+    /// lock), so a delivery can never land in an inbox that a concurrent
+    /// retire has already drained for the last time.
+    pub fn deliver(&self, thief: usize, migs: &mut Vec<MigratedRequest>) {
+        if migs.is_empty() {
+            return;
+        }
+        let cell = &self.cells[thief];
+        {
+            let mut inbox = cell.inbox.lock().unwrap();
+            if !cell.retired.load(Ordering::SeqCst) {
+                inbox.append(migs);
+                return;
+            }
+        }
+        self.orphans.lock().unwrap().append(migs);
+    }
+
+    /// Target side: move deliveries into `out` (appends; does not clear).
+    /// An empty inbox falls back to adopting orphans. Returns how many
+    /// migrations were picked up. Adopting work clears the shard's idle
+    /// flag *under the same lock* that empties the mailbox, so a
+    /// concurrent termination check can never observe the emptied
+    /// mailbox together with a stale idle flag (the check re-reads the
+    /// flags after inspecting the mailboxes).
+    pub fn drain_inbox(&self, shard: usize, out: &mut Vec<MigratedRequest>) -> usize {
+        let before = out.len();
+        let cell = &self.cells[shard];
+        {
+            let mut inbox = cell.inbox.lock().unwrap();
+            if !inbox.is_empty() {
+                cell.idle.store(false, Ordering::SeqCst);
+                out.append(&mut inbox);
+            }
+        }
+        if out.len() == before {
+            let mut orphans = self.orphans.lock().unwrap();
+            if !orphans.is_empty() {
+                cell.idle.store(false, Ordering::SeqCst);
+                out.append(&mut orphans);
+            }
+        }
+        out.len() - before
+    }
+
+    /// `shard` has no local work and an exhausted arrival source; it now
+    /// waits on deliveries. Sets the fleet-done flag when every shard is
+    /// idle with nothing in flight.
+    pub fn enter_idle(&self, shard: usize) {
+        self.cells[shard].idle.store(true, Ordering::SeqCst);
+        self.check_done();
+    }
+
+    /// `shard` adopted new work and is serving again.
+    pub fn leave_idle(&self, shard: usize) {
+        self.cells[shard].idle.store(false, Ordering::SeqCst);
+    }
+
+    /// All shards idle and every mailbox empty: nothing can create work
+    /// anymore, the fleet may exit.
+    pub fn finished(&self) -> bool {
+        self.done.load(Ordering::SeqCst)
+    }
+
+    /// Permanently withdraw `shard` (run finished or time cap hit). Its
+    /// pending demands are cancelled and its inbox drains into the
+    /// orphan pool for any live shard to adopt. The retired flag flips
+    /// under the inbox lock so it serializes with
+    /// [`deliver`](Self::deliver): after this drain, no delivery can
+    /// reach this inbox again.
+    ///
+    /// If *every* shard exits through a bound (duration cap, wall-clock
+    /// failsafe) while migrations are still in flight, the leftovers
+    /// stay in the orphan pool ([`orphan_count`](Self::orphan_count)) —
+    /// visible as `steals_out > steals_in` in the merged recorder.
+    /// Natural termination (`finished()`) guarantees the pool is empty;
+    /// callers that assert request conservation should size their
+    /// duration caps generously.
+    pub fn retire(&self, shard: usize) {
+        let cell = &self.cells[shard];
+        let mut stranded = Vec::new();
+        {
+            let mut inbox = cell.inbox.lock().unwrap();
+            cell.retired.store(true, Ordering::SeqCst);
+            stranded.append(&mut inbox);
+        }
+        cell.idle.store(true, Ordering::SeqCst);
+        for c in &self.cells {
+            c.wants[shard].store(0, Ordering::Relaxed);
+        }
+        if !stranded.is_empty() {
+            self.orphans.lock().unwrap().append(&mut stranded);
+        }
+        self.check_done();
+    }
+
+    fn check_done(&self) {
+        let all_idle = || self.cells.iter().all(|c| c.idle.load(Ordering::SeqCst));
+        if !all_idle() {
+            return;
+        }
+        let empty = self
+            .cells
+            .iter()
+            .all(|c| c.inbox.lock().unwrap().is_empty())
+            && self.orphans.lock().unwrap().is_empty();
+        // re-check the flags: a thief that emptied its mailbox after the
+        // first flag pass cleared its idle flag under the mailbox lock
+        // *before* the mailbox could read empty, so if every mailbox
+        // read empty and every flag still reads idle, nothing is in
+        // flight anywhere — the fleet is done.
+        if empty && all_idle() {
+            self.done.store(true, Ordering::SeqCst);
+        }
+    }
+
+    /// Orphaned migrations currently awaiting adoption (observability).
+    pub fn orphan_count(&self) -> usize {
+        self.orphans.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::request::{Class, PortableRequest, Request};
+
+    fn mig(submitted: u64) -> MigratedRequest {
+        let mut r = Request::new(submitted, Class::Offline, vec![], 64, 8, 0);
+        r.submitted_id = submitted;
+        MigratedRequest {
+            portable: PortableRequest::detach(r, 0),
+            kv: None,
+        }
+    }
+
+    fn coordinator(n: usize) -> (StealCoordinator, Arc<ShardLoads>) {
+        let loads = Arc::new(ShardLoads::new(n, 1000));
+        (
+            StealCoordinator::new(StealConfig::default(), loads.clone()),
+            loads,
+        )
+    }
+
+    #[test]
+    fn demands_are_idempotent_and_cleared_on_take() {
+        let (st, _loads) = coordinator(3);
+        st.post_demand(1, 0, 8);
+        st.post_demand(1, 0, 8); // re-post while hungry: no growth
+        st.post_demand(2, 0, 4);
+        let mut out = Vec::new();
+        st.take_demands(0, &mut out);
+        assert_eq!(out, vec![(1, 8), (2, 4)]);
+        st.take_demands(0, &mut out);
+        assert!(out.is_empty(), "demands clear on take");
+    }
+
+    #[test]
+    fn pick_donor_follows_published_backlog() {
+        let (st, loads) = coordinator(4);
+        assert_eq!(st.pick_donor(1), None, "no surplus published yet");
+        loads.publish(0, 10, 0, 30, 30);
+        loads.publish(2, 10, 0, 90, 90);
+        loads.publish(3, 10, 0, 2, 2); // at/below the donor floor
+        assert_eq!(st.pick_donor(1), Some(2));
+        assert_eq!(st.pick_donor(2), Some(0), "never picks itself");
+    }
+
+    #[test]
+    fn deliver_drain_round_trip() {
+        let (st, _loads) = coordinator(2);
+        let mut migs = vec![mig(7), mig(8)];
+        st.deliver(1, &mut migs);
+        assert!(migs.is_empty(), "deliver drains the donor buffer");
+        let mut inbox = Vec::new();
+        assert_eq!(st.drain_inbox(1, &mut inbox), 2);
+        assert_eq!(inbox.len(), 2);
+        assert_eq!(st.drain_inbox(1, &mut inbox), 0);
+    }
+
+    #[test]
+    fn termination_waits_for_inboxes() {
+        let (st, _loads) = coordinator(2);
+        st.enter_idle(0);
+        assert!(!st.finished());
+        let mut migs = vec![mig(1)];
+        st.deliver(1, &mut migs);
+        st.enter_idle(1);
+        assert!(!st.finished(), "idle with a pending delivery is not done");
+        let mut inbox = Vec::new();
+        st.drain_inbox(1, &mut inbox);
+        st.leave_idle(1);
+        st.enter_idle(1);
+        assert!(st.finished());
+    }
+
+    #[test]
+    fn retired_shard_strands_nothing() {
+        let (st, _loads) = coordinator(3);
+        let mut migs = vec![mig(9)];
+        st.deliver(2, &mut migs);
+        st.retire(2);
+        assert_eq!(st.orphan_count(), 1, "inbox drained to orphans");
+        // late delivery to a retired shard also diverts
+        let mut late = vec![mig(10)];
+        st.deliver(2, &mut late);
+        assert_eq!(st.orphan_count(), 2);
+        // a live shard adopts orphans when its own inbox is empty
+        let mut inbox = Vec::new();
+        assert_eq!(st.drain_inbox(0, &mut inbox), 2);
+        assert_eq!(st.orphan_count(), 0);
+    }
+}

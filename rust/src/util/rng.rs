@@ -12,6 +12,14 @@ pub struct Rng {
     s: [u64; 4],
 }
 
+/// One splitmix64 scramble as a pure function: a stateless 64-bit mixer
+/// for deriving keys (per-request sampler draws, shard-stable hashes)
+/// without threading an `Rng` through the call site.
+pub fn mix64(x: u64) -> u64 {
+    let mut s = x;
+    splitmix64(&mut s)
+}
+
 fn splitmix64(state: &mut u64) -> u64 {
     *state = state.wrapping_add(0x9E3779B97F4A7C15);
     let mut z = *state;

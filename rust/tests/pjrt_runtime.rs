@@ -7,9 +7,7 @@
 //! works pre-build.
 #![cfg(feature = "pjrt")]
 
-use conserve::backend::{
-    ExecBackend, IterationPlan, PjrtBackend, SafepointAction, WorkItem,
-};
+use conserve::backend::{ExecBackend, IterationPlan, PjrtBackend, SafepointAction};
 use conserve::config::EngineConfig;
 use conserve::profiler::LatencyProfile;
 use conserve::request::{Class, Phase, Request};
@@ -31,19 +29,19 @@ fn backend() -> Option<PjrtBackend> {
     artifacts_dir().map(|d| PjrtBackend::load(&d, 7, 1).expect("load artifacts"))
 }
 
-fn prefill_item(req: u64, tokens: &[u16], ctx: usize) -> WorkItem {
-    WorkItem {
-        req,
-        class: Class::Offline,
-        phase: if tokens.len() > 1 {
+/// Build a plan from `(req, tokens, ctx)` item specs (tokens are staged
+/// into the plan's shared buffer, as the scheduler does).
+fn plan_of(specs: &[(u64, &[u16], usize)]) -> IterationPlan {
+    let mut p = IterationPlan::default();
+    for &(req, tokens, ctx) in specs {
+        let phase = if tokens.len() > 1 {
             Phase::Prefill
         } else {
             Phase::Decode
-        },
-        ctx_len: ctx,
-        n_tokens: tokens.len(),
-        tokens: tokens.to_vec(),
+        };
+        p.push_item(req, Class::Offline, phase, ctx, tokens.len(), tokens);
     }
+    p
 }
 
 fn run(b: &mut PjrtBackend, plan: &IterationPlan) -> conserve::backend::ExecOutcome {
@@ -55,25 +53,13 @@ fn prefill_then_decode_produces_tokens() {
     let Some(mut b) = backend() else { return };
     let prompt: Vec<u16> = b"The serving system".iter().map(|&c| c as u16).collect();
     let n = prompt.len();
-    let out = run(
-        &mut b,
-        &IterationPlan {
-            items: vec![prefill_item(1, &prompt, 0)],
-            preemptible: false,
-        },
-    );
+    let out = run(&mut b, &plan_of(&[(1, &prompt, 0)]));
     assert!(out.completed);
     let tok1 = out.new_tokens[0].expect("prefill completion samples a token");
     assert!(tok1 < 256);
 
     // decode continues from the committed cache
-    let out2 = run(
-        &mut b,
-        &IterationPlan {
-            items: vec![prefill_item(1, &[tok1], n)],
-            preemptible: false,
-        },
-    );
+    let out2 = run(&mut b, &plan_of(&[(1, &[tok1], n)]));
     assert!(out2.completed);
     assert!(out2.new_tokens[0].is_some());
 }
@@ -88,37 +74,13 @@ fn chunked_prefill_equals_single_shot() {
 
     let mut b1 = PjrtBackend::load(&dir, 7, 1).unwrap();
     b1.set_temperature(0.0); // greedy: sampler draw counts differ by path
-    let one = run(
-        &mut b1,
-        &IterationPlan {
-            items: vec![prefill_item(1, &prompt, 0)],
-            preemptible: false,
-        },
-    );
+    let one = run(&mut b1, &plan_of(&[(1, &prompt, 0)]));
 
     let mut b2 = PjrtBackend::load(&dir, 7, 1).unwrap();
     b2.set_temperature(0.0);
-    let _ = run(
-        &mut b2,
-        &IterationPlan {
-            items: vec![prefill_item(1, &prompt[..16], 0)],
-            preemptible: false,
-        },
-    );
-    let _ = run(
-        &mut b2,
-        &IterationPlan {
-            items: vec![prefill_item(1, &prompt[16..32], 16)],
-            preemptible: false,
-        },
-    );
-    let two = run(
-        &mut b2,
-        &IterationPlan {
-            items: vec![prefill_item(1, &prompt[32..], 32)],
-            preemptible: false,
-        },
-    );
+    let _ = run(&mut b2, &plan_of(&[(1, &prompt[..16], 0)]));
+    let _ = run(&mut b2, &plan_of(&[(1, &prompt[16..32], 16)]));
+    let two = run(&mut b2, &plan_of(&[(1, &prompt[32..], 32)]));
     assert_eq!(
         one.new_tokens[0], two.new_tokens[0],
         "chunked and one-shot prefill must agree"
@@ -133,23 +95,11 @@ fn batched_execution_matches_solo() {
 
     let mut solo = PjrtBackend::load(&dir, 7, 1).unwrap();
     solo.set_temperature(0.0);
-    let a = run(
-        &mut solo,
-        &IterationPlan {
-            items: vec![prefill_item(1, &p1, 0)],
-            preemptible: false,
-        },
-    );
+    let a = run(&mut solo, &plan_of(&[(1, &p1, 0)]));
 
     let mut both = PjrtBackend::load(&dir, 7, 1).unwrap();
     both.set_temperature(0.0);
-    let ab = run(
-        &mut both,
-        &IterationPlan {
-            items: vec![prefill_item(1, &p1, 0), prefill_item(2, &p2, 0)],
-            preemptible: false,
-        },
-    );
+    let ab = run(&mut both, &plan_of(&[(1, &p1, 0), (2, &p2, 0)]));
     // row 0 of the batched run sees the same tokens/cache as the solo run;
     // sampler state differs (two draws vs one) only for the second item,
     // and item order is deterministic, so item 0 must match exactly.
@@ -160,9 +110,10 @@ fn batched_execution_matches_solo() {
 fn abort_discards_partial_work() {
     let Some(mut b) = backend() else { return };
     let prompt: Vec<u16> = (0..64u16).map(|i| 33 + i % 90).collect();
-    let plan = IterationPlan {
-        items: vec![prefill_item(1, &prompt, 0)],
-        preemptible: true,
+    let plan = {
+        let mut p = plan_of(&[(1, &prompt, 0)]);
+        p.preemptible = true;
+        p
     };
     let out = b.execute(&plan, &mut |_| SafepointAction::Abort).unwrap();
     assert!(!out.completed);
@@ -182,32 +133,14 @@ fn checkpoint_prefetch_roundtrip_preserves_decode() {
     // reference: prefill then decode directly
     let mut b1 = PjrtBackend::load(&dir, 7, 1).unwrap();
     b1.set_temperature(0.0);
-    let o1 = run(
-        &mut b1,
-        &IterationPlan {
-            items: vec![prefill_item(1, &prompt, 0)],
-            preemptible: false,
-        },
-    );
+    let o1 = run(&mut b1, &plan_of(&[(1, &prompt, 0)]));
     let t1 = o1.new_tokens[0].unwrap();
-    let d1 = run(
-        &mut b1,
-        &IterationPlan {
-            items: vec![prefill_item(1, &[t1], prompt.len())],
-            preemptible: false,
-        },
-    );
+    let d1 = run(&mut b1, &plan_of(&[(1, &[t1], prompt.len())]));
 
     // same, but checkpoint every block D2H, drop the slab, prefetch back
     let mut b2 = PjrtBackend::load(&dir, 7, 1).unwrap();
     b2.set_temperature(0.0);
-    let o2 = run(
-        &mut b2,
-        &IterationPlan {
-            items: vec![prefill_item(1, &prompt, 0)],
-            preemptible: false,
-        },
-    );
+    let o2 = run(&mut b2, &plan_of(&[(1, &prompt, 0)]));
     let t2 = o2.new_tokens[0].unwrap();
     assert_eq!(t1, t2);
     let blocks = prompt.len().div_ceil(16);
@@ -219,13 +152,7 @@ fn checkpoint_prefetch_roundtrip_preserves_decode() {
     for i in 0..blocks {
         b2.copy_block_h2d(1, i, 16);
     }
-    let d2 = run(
-        &mut b2,
-        &IterationPlan {
-            items: vec![prefill_item(1, &[t2], prompt.len())],
-            preemptible: false,
-        },
-    );
+    let d2 = run(&mut b2, &plan_of(&[(1, &[t2], prompt.len())]));
     assert_eq!(
         d1.new_tokens[0], d2.new_tokens[0],
         "decode after checkpoint/restore must match direct decode"

@@ -1,0 +1,288 @@
+//! Property tests for cross-shard offline work stealing: a stolen
+//! request leaks zero donor KV blocks, the donor's old id can never
+//! resolve again on any shard, a checkpoint that does not fit the
+//! target degrades to recompute instead of losing the request, and the
+//! same trace served with stealing on and off completes the identical
+//! request set with identical token streams.
+
+use conserve::backend::{CostModel, SimBackend};
+use conserve::clock::Clock;
+use conserve::config::EngineConfig;
+use conserve::profiler::LatencyProfile;
+use conserve::request::{rid_shard, Class, KvResidence, Request, State, TokenId};
+use conserve::server::{ArrivalSource, ServingEngine};
+use conserve::shard::{MigratedRequest, ShardLoads, StealConfig, StealCoordinator};
+use conserve::util::rng::Rng;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+fn profile() -> LatencyProfile {
+    LatencyProfile {
+        c: [1200.0, 96.0, 40.0, 0.385],
+    }
+}
+
+fn engine(shard: usize, cfg: &EngineConfig, trace: Vec<Request>) -> ServingEngine<SimBackend> {
+    let clock = Clock::virtual_at(0);
+    let backend = SimBackend::new(
+        CostModel::a100_llama2_7b(),
+        clock.clone(),
+        cfg.sched.safepoint_layers,
+    );
+    ServingEngine::for_shard(
+        shard,
+        cfg.clone(),
+        backend,
+        clock,
+        profile(),
+        ArrivalSource::from_trace(trace),
+    )
+}
+
+#[test]
+fn cold_steal_rekeys_and_preserves_submission() {
+    let cfg = EngineConfig::sim_a100_7b();
+    let mut donor = engine(1, &cfg, Vec::new());
+    let mut target = engine(2, &cfg, Vec::new());
+
+    let mut r = Request::new(77, Class::Offline, vec![1, 2, 3], 3, 4, 0);
+    r.output = vec![9];
+    r.generated = 1; // discard-preempted progress: outputs known, ctx 0
+    let sampler_state = r.sampler_state;
+    let old_id = donor.table.insert(r);
+    donor.sched.enqueue(old_id, Class::Offline);
+
+    let mut out = Vec::new();
+    donor.donate_victims(4, &mut out);
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].portable.submitted_id, 77);
+    assert_eq!(out[0].portable.ckpt_tokens, 0, "cold steal carries no KV");
+    assert!(out[0].kv.is_none());
+    assert_eq!(donor.rec.steals_out, 1);
+    assert_eq!(donor.sched.offline_waiting(), 0);
+
+    target.absorb_migrations(&mut out);
+    assert!(out.is_empty());
+    assert_eq!(target.rec.steals_in, 1);
+    assert_eq!(target.sched.offline_waiting(), 1);
+    let (new_id, req) = target.table.iter().next().expect("absorbed request");
+    assert_ne!(new_id, old_id);
+    assert_eq!(rid_shard(new_id), 2, "re-keyed into the target shard");
+    assert_eq!(req.submitted_id, 77);
+    assert_eq!(req.sampler_state, sampler_state);
+    assert_eq!(req.output, vec![9]);
+    assert_eq!(req.generated, 1);
+    assert_eq!(req.state, State::Waiting);
+}
+
+#[test]
+fn checkpointed_steal_leaks_no_donor_blocks() {
+    let cfg = EngineConfig::sim_a100_7b();
+    let mut donor = engine(1, &cfg, Vec::new());
+    let mut target = engine(2, &cfg, Vec::new());
+    let host_total = cfg.mem.host_blocks;
+    let gpu_total = cfg.mem.gpu_blocks;
+    let bt = cfg.mem.block_tokens;
+
+    // a mid-prefill offline request, fully checkpointed then evicted —
+    // the §4.4 free-to-move state
+    let r = Request::new(88, Class::Offline, vec![], 64, 8, 0);
+    let old_id = donor.table.insert(r);
+    donor.kv.register(old_id);
+    donor.kv.grow(old_id, 48).unwrap();
+    donor.kv.commit(old_id, 48).unwrap();
+    for i in donor.kv.checkpoint_candidates(old_id) {
+        donor.kv.begin_ckpt(old_id, i).unwrap();
+        donor.kv.finish_ckpt(old_id, i);
+    }
+    donor.kv.evict_gpu(old_id);
+    {
+        let req = donor.table.get_mut(old_id).unwrap();
+        req.ctx_len = 48;
+        req.ckpt_len = 48;
+        req.state = State::Preempted;
+        req.residence = KvResidence::Host;
+        req.preemptions = 1;
+    }
+    donor.sched.enqueue(old_id, Class::Offline);
+    assert!(donor.kv.host_free() < host_total, "checkpoints hold blocks");
+
+    let mut out = Vec::new();
+    donor.donate_victims(1, &mut out);
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].portable.ckpt_tokens, 48);
+
+    // leak-freedom: every donor pool is exactly full again
+    assert_eq!(donor.kv.gpu_free(), gpu_total);
+    assert_eq!(donor.kv.host_free(), host_total);
+    assert!(donor.kv.check_conservation());
+    assert_eq!(donor.rec.stolen_ckpt_tokens, 48);
+
+    // stale donor id: misses donor and target, arena and KV alike
+    for eng in [&donor, &target] {
+        assert!(eng.table.get(old_id).is_none());
+        assert!(eng.kv.seq(old_id).is_none());
+    }
+
+    target.absorb_migrations(&mut out);
+    let (new_id, req) = target.table.iter().next().expect("absorbed");
+    assert_eq!(req.residence, KvResidence::Host);
+    assert_eq!(req.ctx_len, 48);
+    let seq = target.kv.seq(new_id).expect("imported sequence");
+    assert_eq!(seq.tokens, 48);
+    assert!(seq.fully_checkpointed(bt));
+    assert_eq!(target.kv.host_free(), host_total - 48usize.div_ceil(bt));
+    assert!(target.kv.check_conservation());
+
+    // the target finishes it end to end (prefetch -> prefill -> decode)
+    target.run(120_000_000);
+    assert_eq!(target.rec.finished[1], 1, "stolen request must finish");
+    let done = target
+        .table
+        .values()
+        .find(|r| r.submitted_id == 88)
+        .unwrap();
+    assert_eq!(done.state, State::Finished);
+    assert_eq!(done.generated, 8);
+    assert_eq!(target.kv.gpu_free(), gpu_total);
+    assert_eq!(target.kv.host_free(), host_total);
+    assert!(target.kv.check_conservation());
+}
+
+#[test]
+fn oversized_checkpoint_degrades_to_recompute() {
+    // target host pool too small for the migrated prefix: the request
+    // must fall back to the recompute path, not get lost or leak
+    let mut small = EngineConfig::sim_a100_7b();
+    small.mem.host_blocks = 1;
+    let mut target = engine(3, &small, Vec::new());
+
+    let mut r = Request::new(99, Class::Offline, vec![], 64, 4, 0);
+    r.ctx_len = 48;
+    r.ckpt_len = 48;
+    let mig = MigratedRequest {
+        portable: conserve::request::PortableRequest::detach(r, 48),
+        kv: None,
+    };
+    let mut migs = vec![mig];
+    target.absorb_migrations(&mut migs);
+    let (_, req) = target.table.iter().next().unwrap();
+    assert_eq!(req.residence, KvResidence::Discarded);
+    assert_eq!(req.ctx_len, 0);
+    assert_eq!(req.recomputed_tokens, 48);
+    assert_eq!(target.kv.host_free(), 1, "failed import must not leak");
+    assert!(target.kv.check_conservation());
+
+    target.run(120_000_000);
+    assert_eq!(target.rec.finished[1], 1, "recompute path still finishes");
+}
+
+/// Build a deterministic skewed workload: shard 0 holds the whole
+/// offline burst plus some online traffic, shard 1 holds online only —
+/// the stranded-capacity shape stealing exists to fix.
+fn skewed_traces(seed: u64) -> Vec<Vec<Request>> {
+    let mut rng = Rng::new(seed);
+    let mut next_id = 1u64;
+    let mut mk = |class: Class, input: usize, output: usize, at: u64| {
+        let r = Request::new(next_id, class, Vec::new(), input, output, at);
+        next_id += 1;
+        r
+    };
+    let mut shard0 = Vec::new();
+    let mut shard1 = Vec::new();
+    for i in 0..6 {
+        shard0.push(mk(Class::Online, 128, 8, i * 500_000));
+        shard1.push(mk(Class::Online, 128, 8, 250_000 + i * 500_000));
+    }
+    for _ in 0..30 {
+        let input = rng.range_usize(256, 768);
+        let output = rng.range_usize(12, 24);
+        shard0.push(mk(Class::Offline, input, output, 0));
+    }
+    vec![shard0, shard1]
+}
+
+/// Per-request result fingerprint: (class, generated, token stream).
+type Results = BTreeMap<u64, (Class, usize, Vec<TokenId>)>;
+
+/// Serve `traces` in deterministic single-thread lockstep: every shard
+/// advances its virtual clock in fixed slices, in shard order, polling
+/// the steal coordinator between slices. Same inputs => same schedule,
+/// same steals, same results — which is what lets the on/off runs be
+/// compared exactly.
+fn lockstep_run(traces: Vec<Vec<Request>>, steal: Option<StealConfig>) -> (Results, bool, u64) {
+    let cfg = EngineConfig::sim_a100_7b();
+    let n = traces.len();
+    let loads = Arc::new(ShardLoads::new(n, cfg.mem.gpu_blocks));
+    let st = steal.map(|c| Arc::new(StealCoordinator::new(c, loads.clone())));
+    let mut engines: Vec<ServingEngine<SimBackend>> = traces
+        .into_iter()
+        .enumerate()
+        .map(|(s, tr)| {
+            let mut e = engine(s, &cfg, tr);
+            if let Some(st) = &st {
+                e.set_shard_loads(loads.clone());
+                e.set_steal_coordinator(st.clone());
+            }
+            e
+        })
+        .collect();
+
+    const SLICE: u64 = 200_000; // 200 ms of virtual time per step
+    let mut all_done = false;
+    for step in 1..=10_000u64 {
+        let until = step * SLICE;
+        for e in engines.iter_mut() {
+            e.poll_steals();
+            e.run(until);
+        }
+        if engines.iter().all(|e| e.drained()) {
+            let more = engines.iter_mut().any(|e| e.poll_steals());
+            if !more {
+                all_done = true;
+                break;
+            }
+        }
+    }
+
+    let mut results = Results::new();
+    let mut steals_in = 0;
+    for e in &engines {
+        assert!(e.kv.check_conservation());
+        assert_eq!(
+            e.kv.gpu_free(),
+            cfg.mem.gpu_blocks,
+            "finished fleet must hold no GPU blocks"
+        );
+        assert_eq!(
+            e.kv.host_free(),
+            cfg.mem.host_blocks,
+            "finished fleet must hold no host blocks"
+        );
+        steals_in += e.rec.steals_in;
+        for r in e.table.values() {
+            assert_eq!(r.state, State::Finished, "unfinished request {}", r.submitted_id);
+            let prev = results.insert(r.submitted_id, (r.class, r.generated, r.output.clone()));
+            assert!(prev.is_none(), "request {} served twice", r.submitted_id);
+        }
+    }
+    (results, all_done, steals_in)
+}
+
+#[test]
+fn steal_on_off_complete_identical_request_sets() {
+    let traces = skewed_traces(0xC0FFEE);
+    let n_requests: usize = traces.iter().map(Vec::len).sum();
+
+    let (off, off_done, off_steals) = lockstep_run(traces.clone(), None);
+    let (on, on_done, on_steals) = lockstep_run(traces, Some(StealConfig::default()));
+
+    assert!(off_done && on_done, "both runs must drain the fleet");
+    assert_eq!(off_steals, 0);
+    assert!(on_steals > 0, "the skewed trace must trigger migrations");
+    assert_eq!(off.len(), n_requests);
+    assert_eq!(
+        off, on,
+        "stealing must not change which requests complete or what they generate"
+    );
+}
