@@ -1,0 +1,229 @@
+//! `bench_jobs` — deadline-aware job manager acceptance bench.
+//!
+//! Serves the FIFO-buster workload (`workload::jobs::mega_plus_tight`):
+//! one tenant's mega-job submitted at t=0 — deep enough that each
+//! shard's KV pool cannot hold its bucket at once, so a queue persists —
+//! followed by small tight-deadline jobs from other tenants, plus
+//! bursty online background traffic. The same workload runs twice:
+//!
+//! * **fifo** — plain FIFO offline admission, affinity placement;
+//! * **urgency** — EDF urgency + weighted fair share
+//!   (`fair_share=true`), deadline-aware placement, urgency-ordered
+//!   steal donation.
+//!
+//! Acceptance (asserted here):
+//!
+//! * both modes complete every job (scheduling never loses work);
+//! * FIFO misses tight deadlines (the race is real: attainment < 1);
+//! * urgency scheduling strictly beats FIFO on job-level deadline
+//!   attainment;
+//! * the online TTFT-violation rate does not regress under urgency
+//!   scheduling (deadline pressure never outranks the SLO class).
+//!
+//! Results go to `BENCH_jobs.json` (schema: rust/PERF.md §6). Scale
+//! with `JOBS_BENCH_MEGA` (mega-job request count, default 160; CI
+//! smoke uses 120 — keep `mega / 4 shards` above the ~21-request
+//! per-shard KV capacity or FIFO admits everything at once and the
+//! modes cannot differ).
+
+use conserve::batch::{run_jobs, JobManager, JobRunOpts, NOMINAL_TOK_PER_S};
+use conserve::config::EngineConfig;
+use conserve::request::{Class, Request};
+use conserve::shard::Placement;
+use conserve::util::json::{arr, num, obj, Json};
+use conserve::util::rng::Rng;
+use conserve::workload::jobs::{mega_plus_tight, MegaTightConfig};
+use conserve::workload::trace::onoff_trace;
+use std::time::Instant;
+
+const N_SHARDS: usize = 4;
+
+struct ModeRow {
+    label: &'static str,
+    wall_s: f64,
+    attainment: f64,
+    jobs_met: usize,
+    jobs_missed: usize,
+    out: conserve::batch::JobRunOutcome,
+}
+
+fn main() {
+    let mega: usize = std::env::var("JOBS_BENCH_MEGA")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(160);
+    let svc = NOMINAL_TOK_PER_S * N_SHARDS as f64;
+    let jobs_cfg = MegaTightConfig {
+        mega_requests: mega,
+        svc_tok_per_s: svc,
+        ..MegaTightConfig::default()
+    };
+    let inputs = mega_plus_tight(&jobs_cfg);
+    let total_job_tokens: u64 = inputs
+        .iter()
+        .flat_map(|j| &j.requests)
+        .map(|r| (r.prompt_len + r.max_new_tokens) as u64)
+        .sum();
+    let mega_est_s = total_job_tokens as f64 / svc;
+    let duration_s = (mega_est_s * 6.0).max(60.0);
+    let n_requests: usize = inputs.iter().map(|j| j.requests.len()).sum();
+
+    println!(
+        "=== bench_jobs ({} jobs / {n_requests} requests, mega={mega}, {N_SHARDS} shards, est drain {:.1}s) ===",
+        inputs.len(),
+        mega_est_s
+    );
+
+    let modes: [(&str, bool, Placement); 2] = [
+        ("fifo", false, Placement::affinity()),
+        ("urgency", true, Placement::deadline()),
+    ];
+    let mut rows: Vec<ModeRow> = Vec::new();
+    for (label, fair_share, placement) in modes {
+        let mut cfg = EngineConfig::sim_a100_7b();
+        cfg.sched.fair_share = fair_share;
+        // identical workload per mode: same job manager construction
+        // gives identical submission ids and sampler states
+        let mut jm = JobManager::new(svc);
+        let mut events: Vec<Request> = Vec::new();
+        for input in &inputs {
+            jm.admit(input, &mut events);
+        }
+        // bursty online background (ids 1.. are disjoint from job sids)
+        let mut rng = Rng::new(7);
+        for (i, &t) in onoff_trace(42, duration_s, 30.0, 8.0, 2.0).iter().enumerate() {
+            let input = rng.range_usize(64, 256);
+            let output = rng.range_usize(8, 24);
+            events.push(Request::new(
+                1 + i as u64,
+                Class::Online,
+                vec![],
+                input,
+                output,
+                t,
+            ));
+        }
+        let opts = JobRunOpts {
+            placement,
+            ..JobRunOpts::new(N_SHARDS, duration_s)
+        };
+        let t0 = Instant::now();
+        let out = run_jobs(&cfg, &opts, jm.board().clone(), events);
+        let wall_s = t0.elapsed().as_secs_f64();
+        let jobs_met = out
+            .jobs
+            .iter()
+            .filter(|j| j.progress.met_deadline() == Some(true))
+            .count();
+        let jobs_missed = out
+            .jobs
+            .iter()
+            .filter(|j| j.progress.deadline > 0)
+            .count()
+            - jobs_met;
+        let m = &out.run.merged;
+        println!(
+            "{label:>8}: wall={wall_s:>6.2}s makespan={:>7.1}s attainment={:>5.1}% (jobs {jobs_met} met / {jobs_missed} missed) p99TTFT={:>8.1}ms viol={:>5.2}% offline_gen={:>6.0} tok/s steals(out/in)={}/{}",
+            out.run.makespan_s,
+            out.job_attainment * 100.0,
+            m.online_p99_ttft_ms,
+            m.ttft_violations * 100.0,
+            m.offline_gen_tput,
+            m.steals_out,
+            m.steals_in,
+        );
+        rows.push(ModeRow {
+            label,
+            wall_s,
+            attainment: out.job_attainment,
+            jobs_met,
+            jobs_missed,
+            out,
+        });
+    }
+
+    // ---- acceptance ----
+    let fifo = &rows[0];
+    let urgency = &rows[1];
+    for row in &rows {
+        assert!(
+            row.out.jobs.iter().all(|j| j.progress.done()),
+            "{}: every job must complete within the duration cap",
+            row.label
+        );
+        assert_eq!(
+            row.out.run.merged.jobs_completed,
+            row.out.jobs.len() as u64,
+            "{}: board and recorder must agree on completed jobs",
+            row.label
+        );
+    }
+    assert!(
+        fifo.attainment < 1.0,
+        "the workload must make FIFO miss deadlines (attainment {:.2})",
+        fifo.attainment
+    );
+    assert!(
+        urgency.attainment > fifo.attainment,
+        "urgency scheduling must beat FIFO on deadline attainment: {:.2} vs {:.2}",
+        urgency.attainment,
+        fifo.attainment
+    );
+    assert!(
+        urgency.out.run.merged.ttft_violations
+            <= fifo.out.run.merged.ttft_violations + 0.005,
+        "online SLO violations must not regress under urgency scheduling: {:.4} vs {:.4}",
+        urgency.out.run.merged.ttft_violations,
+        fifo.out.run.merged.ttft_violations
+    );
+    println!(
+        "attainment: urgency {:.1}% vs fifo {:.1}% (+{:.1} pts)",
+        urgency.attainment * 100.0,
+        fifo.attainment * 100.0,
+        (urgency.attainment - fifo.attainment) * 100.0
+    );
+
+    // ---- emit BENCH_jobs.json (schema documented in rust/PERF.md §6) ----
+    let mode_row = |row: &ModeRow| {
+        let m = &row.out.run.merged;
+        obj(vec![
+            ("mode", Json::Str(row.label.to_string())),
+            ("wall_s", num(row.wall_s)),
+            ("makespan_s", num(row.out.run.makespan_s)),
+            ("job_attainment", num(row.attainment)),
+            ("jobs_met", num(row.jobs_met as f64)),
+            ("jobs_missed", num(row.jobs_missed as f64)),
+            ("request_deadline_met", num(m.deadline_met as f64)),
+            ("request_deadline_missed", num(m.deadline_missed as f64)),
+            ("online_p99_ttft_ms", num(m.online_p99_ttft_ms)),
+            ("online_p99_tpot_ms", num(m.online_p99_tpot_ms)),
+            ("ttft_violation_rate", num(m.ttft_violations)),
+            ("offline_gen_tok_s", num(m.offline_gen_tput)),
+            ("steals_out", num(m.steals_out as f64)),
+            ("steals_in", num(m.steals_in as f64)),
+            (
+                "per_tenant",
+                arr(m.per_tenant.iter().map(conserve::metrics::TenantCounters::to_json)),
+            ),
+        ])
+    };
+    let json = obj(vec![
+        ("jobs", num(inputs.len() as f64)),
+        ("requests", num(n_requests as f64)),
+        ("mega_requests", num(mega as f64)),
+        ("shards", num(N_SHARDS as f64)),
+        ("svc_tok_per_s", num(svc)),
+        ("est_drain_s", num(mega_est_s)),
+        ("modes", arr(rows.iter().map(mode_row))),
+        (
+            "attainment_urgency_minus_fifo",
+            num(urgency.attainment - fifo.attainment),
+        ),
+    ]);
+    let out_path =
+        std::env::var("JOBS_BENCH_OUT").unwrap_or_else(|_| "BENCH_jobs.json".into());
+    std::fs::write(&out_path, json.to_string()).expect("write BENCH_jobs.json");
+    println!("\nwrote {out_path}");
+    let _ = Json::parse(&json.to_string()).expect("self-emitted json parses");
+    println!("bench_jobs OK");
+}

@@ -17,6 +17,7 @@ pub struct SimBackend {
     pub cost: CostModel,
     clock: Clock,
     safepoint_layers: usize,
+    synth_tokens: bool,
 }
 
 impl SimBackend {
@@ -27,11 +28,34 @@ impl SimBackend {
             cost,
             clock,
             safepoint_layers,
+            synth_tokens: false,
         }
     }
 
     pub fn clock(&self) -> Clock {
         self.clock.clone()
+    }
+
+    /// Synthesize deterministic output tokens from each item's
+    /// `sample_key` (off by default — the steady-state sim loop then
+    /// allocates nothing per iteration). The key mixes the request's
+    /// sampler state with its output position, so a synthesized token
+    /// stream is invariant under chunking, batching, migration *and*
+    /// process restart — which is what lets the durable-store
+    /// kill-and-resume tests assert byte-identical outputs on the
+    /// simulator.
+    pub fn set_synth_tokens(&mut self, on: bool) {
+        self.synth_tokens = on;
+    }
+
+    fn synth(&self, plan: &IterationPlan) -> Vec<Option<crate::request::TokenId>> {
+        if !self.synth_tokens {
+            return Vec::new();
+        }
+        plan.items
+            .iter()
+            .map(|it| Some((it.sample_key & 0xFF) as crate::request::TokenId))
+            .collect()
     }
 }
 
@@ -65,7 +89,7 @@ impl ExecBackend for SimBackend {
                 if safepoint(self.clock.now()) == SafepointAction::Abort {
                     return Ok(ExecOutcome {
                         completed: false,
-                        // sim samples no tokens; empty vec allocates nothing
+                        // nothing commits from an aborted batch
                         new_tokens: Vec::new(),
                         elapsed_us: self.clock.now() - start,
                         safepoint_checks: checks,
@@ -75,7 +99,8 @@ impl ExecBackend for SimBackend {
         }
         Ok(ExecOutcome {
             completed: true,
-            new_tokens: Vec::new(),
+            // default: no tokens, no allocation (see set_synth_tokens)
+            new_tokens: self.synth(plan),
             elapsed_us: self.clock.now() - start,
             safepoint_checks: checks,
         })

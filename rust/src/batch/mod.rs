@@ -1,0 +1,876 @@
+//! Deadline-aware offline **job manager**: OpenAI-Batch-style jobs over
+//! the sharded co-serving engine.
+//!
+//! ConServe treats offline work as latency-tolerant filler, but real
+//! harvesting fleets sell it as *batch jobs* with tenants, priority
+//! tiers and soft deadlines (HyGen, arXiv 2501.14808; Echo, arXiv
+//! 2504.03651). This module gives the engine that job layer:
+//!
+//! * [`JobSpec`]/[`JobInput`] — a job groups many offline requests under
+//!   one tenant, priority tier and soft deadline.
+//! * [`JobManager`] — admits jobs, derives an **EDF-family
+//!   least-laxity urgency score** ([`urgency_score`]) from deadline
+//!   slack and estimated remaining work, and stamps it (plus tenant,
+//!   fair-share weight and deadline) onto every request. Urgency then
+//!   flows into three existing mechanisms:
+//!   1. *placement* — [`Placement::Deadline`] penalizes deep offline
+//!      backlogs proportionally to urgency, so urgent jobs land where
+//!      they start soonest;
+//!   2. *work stealing* — donors serve their highest-urgency queued
+//!      requests first
+//!      ([`ServingEngine::donate_victims`](crate::server::ServingEngine::donate_victims)),
+//!      so urgent work migrates toward idle shards ahead of lax work;
+//!   3. *scheduling* — [`SchedConfig::fair_share`](crate::config::SchedConfig::fair_share)
+//!      switches each shard's offline admission from FIFO to
+//!      (urgency desc, weighted tenant deficit, FIFO), so one tenant's
+//!      mega-job cannot starve the others.
+//! * [`JobBoard`] — lock-cheap shared progress cells the engines notify
+//!   once per finished job request: the poll-able surface behind
+//!   [`BatchHandle`](crate::server::api::BatchHandle) and the source of
+//!   job-level deadline attainment.
+//! * [`JobStore`] — a durable, resumable JSONL store (`--state-dir`):
+//!   specs, per-request [`PortableRequest`] checkpoints and completed
+//!   outputs. `--resume` reconstructs in-flight jobs after a crash or
+//!   restart and replays unfinished requests; keyed sampling makes the
+//!   replayed token streams byte-identical to an uninterrupted run.
+//! * [`run_jobs`] — the sharded trace-mode driver (admission → routing →
+//!   co-serving fleet → attainment report), built on
+//!   [`run_sharded_traces_with`].
+//!
+//! Acceptance bench: `cargo bench --bench bench_jobs` (FIFO vs urgency
+//! scheduling → `BENCH_jobs.json`, schema in `rust/PERF.md` §6).
+
+pub mod store;
+
+use crate::config::EngineConfig;
+use crate::request::{PortableRequest, Request, TokenId, URGENCY_MAX};
+use crate::request::{Class, State};
+use crate::shard::{run_sharded_traces_with, Placement, ShardRouter, ShardedRun, StealConfig};
+use crate::TimeUs;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+pub use store::{JobStore, ResumeState, StoredJob, StoredRequest};
+
+/// Job identifier (nonzero; 0 in [`Request::job`] means "no job").
+pub type JobId = u64;
+
+/// Base of the job-request submission-id namespace: below the client
+/// ticket bit (1<<63) and far above any trace id, so job request ids
+/// never collide with either.
+pub const JOB_SID_BASE: u64 = 1 << 48;
+
+/// Nominal offline service rate (processed tokens/second per shard)
+/// used for deadline-slack estimates when no measured rate is supplied.
+/// The A100/7B simulator processes ~8k offline tokens per ~0.9 s
+/// iteration in offline batching mode; co-serving with online traffic
+/// roughly halves it.
+pub const NOMINAL_TOK_PER_S: f64 = 5_000.0;
+
+/// Resolution horizon of the urgency scale: one hour of laxity maps
+/// near 0, zero laxity maps to `URGENCY_MAX`, with most of the scale's
+/// resolution in the first minute (where ordering decisions matter).
+const URGENCY_HORIZON_US: f64 = 60.0 * 1e6;
+
+/// Least-laxity urgency: score by the absolute slack left *after* the
+/// estimated remaining work — `laxity = deadline − now − est` — mapped
+/// monotonically onto `0..=URGENCY_MAX` (`MAX·H/(H+laxity)` with a
+/// 60 s horizon `H`). No deadline → 0; laxity ≤ 0 (late, or the work
+/// no longer fits) → `URGENCY_MAX`; otherwise urgency rises as the
+/// deadline nears or work piles up.
+///
+/// Laxity, not the `est/slack` ratio, is the right ordering key: a
+/// mega-job with a proportionally-scaled deadline has the same ratio
+/// as a tiny job with a near deadline, but far more absolute room —
+/// serving the tiny job first barely delays the mega-job while the
+/// reverse destroys the tiny job's deadline (the classic EDF/LLF
+/// argument).
+pub fn urgency_score(
+    deadline: TimeUs,
+    now: TimeUs,
+    remaining_tokens: u64,
+    svc_tok_per_s: f64,
+) -> u32 {
+    if deadline == 0 {
+        return 0;
+    }
+    let est_us = remaining_tokens as f64 / svc_tok_per_s.max(1.0) * 1e6;
+    let laxity_us = deadline.saturating_sub(now) as f64 - est_us;
+    if laxity_us <= 0.0 {
+        URGENCY_MAX
+    } else {
+        let u = URGENCY_MAX as f64 * URGENCY_HORIZON_US / (URGENCY_HORIZON_US + laxity_us);
+        (u as u32).clamp(1, URGENCY_MAX - 1)
+    }
+}
+
+/// Fair-share weight of a priority tier: tier 0 (premium) counts each
+/// served token as a quarter, tier 1 as a half, everything else at par.
+pub fn tier_weight(tier: u8) -> u32 {
+    match tier {
+        0 => 4,
+        1 => 2,
+        _ => 1,
+    }
+}
+
+/// Immutable identity of an admitted job (what the durable store
+/// persists alongside the request descriptors).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JobSpec {
+    pub job: JobId,
+    pub tenant: u32,
+    /// Priority tier (0 = highest; drives [`tier_weight`]).
+    pub tier: u8,
+    /// Soft deadline (µs timestamp; 0 = none).
+    pub deadline: TimeUs,
+    pub submitted_at: TimeUs,
+    /// Requests in the job at admission.
+    pub n_requests: u64,
+    /// Σ (prompt + max output) over the job — the admission-time work
+    /// estimate behind the urgency score.
+    pub total_tokens: u64,
+}
+
+/// One request of a [`JobInput`] (prompt may be empty on the simulator
+/// path — lengths drive everything there).
+#[derive(Debug, Clone)]
+pub struct JobRequest {
+    pub prompt: Vec<TokenId>,
+    pub prompt_len: usize,
+    pub max_new_tokens: usize,
+}
+
+/// A job as submitted: tenant, tier, deadline, and its requests.
+/// [`JobManager::admit`] turns it into stamped engine [`Request`]s.
+#[derive(Debug, Clone)]
+pub struct JobInput {
+    pub tenant: u32,
+    pub tier: u8,
+    pub submitted_at: TimeUs,
+    /// Soft deadline (µs timestamp; 0 = none).
+    pub deadline: TimeUs,
+    pub requests: Vec<JobRequest>,
+}
+
+// ---------------------------------------------------------------------
+// Progress board
+// ---------------------------------------------------------------------
+
+/// Poll-able per-job progress: engines bump these cells once per
+/// finished request (commit path), submitters and drivers read them
+/// lock-free after a one-time map lookup. Handles hold their own `Arc`
+/// to the cell, so the board may drop completed entries
+/// ([`JobBoard::gc_completed`]) without invalidating anyone's polling.
+#[derive(Debug)]
+pub(crate) struct JobCell {
+    total: AtomicU64,
+    finished: AtomicU64,
+    gen_tokens: AtomicU64,
+    deadline: TimeUs,
+    tenant: u32,
+    /// 0 while in flight; completion timestamp (clamped ≥ 1) once the
+    /// last request finished.
+    completed_at: AtomicU64,
+}
+
+impl JobCell {
+    pub(crate) fn snapshot(&self) -> JobProgress {
+        let at = self.completed_at.load(Ordering::Relaxed);
+        JobProgress {
+            total: self.total.load(Ordering::Relaxed),
+            finished: self.finished.load(Ordering::Relaxed),
+            gen_tokens: self.gen_tokens.load(Ordering::Relaxed),
+            deadline: self.deadline,
+            tenant: self.tenant,
+            completed_at: if at == 0 { None } else { Some(at) },
+        }
+    }
+}
+
+/// Snapshot of one job's progress (see [`JobBoard::progress`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct JobProgress {
+    pub total: u64,
+    pub finished: u64,
+    pub gen_tokens: u64,
+    pub deadline: TimeUs,
+    pub tenant: u32,
+    pub completed_at: Option<TimeUs>,
+}
+
+impl JobProgress {
+    pub fn done(&self) -> bool {
+        self.completed_at.is_some()
+    }
+
+    /// Deadline verdict: `None` while in flight or deadline-free.
+    pub fn met_deadline(&self) -> Option<bool> {
+        match (self.deadline, self.completed_at) {
+            (0, _) => None,
+            (_, None) => None,
+            (d, Some(t)) => Some(t <= d),
+        }
+    }
+}
+
+/// Returned by [`JobBoard::note_finished`] when the noted request was
+/// the job's last.
+#[derive(Debug, Clone, Copy)]
+pub struct JobCompletion {
+    pub job: JobId,
+    pub tenant: u32,
+    pub deadline: TimeUs,
+    pub completed_at: TimeUs,
+    pub met: bool,
+}
+
+/// Shared job-progress board: one cell per registered job. Engines from
+/// every shard notify the same board; all mutation after registration
+/// is a couple of relaxed atomics behind one short map-lock hold, and
+/// it runs once per *request completion*, never per token or iteration.
+#[derive(Debug, Default)]
+pub struct JobBoard {
+    cells: Mutex<BTreeMap<JobId, Arc<JobCell>>>,
+}
+
+impl JobBoard {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register (or re-register, on resume) a job expecting `total`
+    /// request completions. A memberless job (`total == 0`) is complete
+    /// on arrival — nothing will ever notify it, and a handle polling
+    /// `done()` must not spin forever.
+    pub fn register(&self, job: JobId, total: u64, deadline: TimeUs, tenant: u32) {
+        let cell = Arc::new(JobCell {
+            total: AtomicU64::new(total),
+            finished: AtomicU64::new(0),
+            gen_tokens: AtomicU64::new(0),
+            deadline,
+            tenant,
+            completed_at: AtomicU64::new(if total == 0 { 1 } else { 0 }),
+        });
+        self.cells.lock().unwrap().insert(job, cell);
+    }
+
+    /// Register a job mid-flight (durable-store resume): `total` is the
+    /// job's full size and `finished`/`gen_tokens` pre-credit the
+    /// requests whose outputs already landed before the restart, so the
+    /// resumed job reports `finished/total` over its real size instead
+    /// of claiming it only ever had the remainder.
+    pub fn register_resumed(
+        &self,
+        job: JobId,
+        total: u64,
+        finished: u64,
+        gen_tokens: u64,
+        deadline: TimeUs,
+        tenant: u32,
+    ) {
+        let cell = Arc::new(JobCell {
+            total: AtomicU64::new(total),
+            finished: AtomicU64::new(finished),
+            gen_tokens: AtomicU64::new(gen_tokens),
+            deadline,
+            tenant,
+            completed_at: AtomicU64::new(if finished >= total { 1 } else { 0 }),
+        });
+        self.cells.lock().unwrap().insert(job, cell);
+    }
+
+    pub(crate) fn cell(&self, job: JobId) -> Option<Arc<JobCell>> {
+        self.cells.lock().unwrap().get(&job).cloned()
+    }
+
+    /// Drop the board entries of completed jobs, returning how many
+    /// were collected. Safe at any time: handles poll through their own
+    /// `Arc<JobCell>`, and engines only notify in-flight jobs (whose
+    /// cells this never touches). Long-lived serving processes should
+    /// call this periodically — the map otherwise grows by one entry
+    /// per job forever.
+    pub fn gc_completed(&self) -> usize {
+        let mut cells = self.cells.lock().unwrap();
+        let before = cells.len();
+        cells.retain(|_, c| c.completed_at.load(Ordering::Relaxed) == 0);
+        before - cells.len()
+    }
+
+    /// Drop one job's board entry regardless of state. A submitter
+    /// that never wired the board to an engine (so the job can never
+    /// complete), or that abandoned a batch, uses this to keep the
+    /// board bounded. Held handles keep polling their own cell; late
+    /// engine notifications for a retired job are no-ops.
+    pub fn retire(&self, job: JobId) -> bool {
+        self.cells.lock().unwrap().remove(&job).is_some()
+    }
+
+    /// Engine hook: one request of `job` finished at `now`, generating
+    /// `gen_tokens` output tokens. Returns the completion record iff
+    /// this was the job's last request (exactly once per job — each
+    /// request finishes exactly once, so the counter crosses `total`
+    /// exactly once).
+    pub fn note_finished(
+        &self,
+        job: JobId,
+        gen_tokens: u64,
+        now: TimeUs,
+    ) -> Option<JobCompletion> {
+        let cell = self.cell(job)?;
+        cell.gen_tokens.fetch_add(gen_tokens, Ordering::Relaxed);
+        let done = cell.finished.fetch_add(1, Ordering::Relaxed) + 1;
+        if done < cell.total.load(Ordering::Relaxed) {
+            return None;
+        }
+        // compare-exchange makes completion idempotent even if a
+        // misregistered total lets the counter pass `total` more than
+        // once — exactly one notify wins the completion record
+        let at = now.max(1);
+        if cell
+            .completed_at
+            .compare_exchange(0, at, Ordering::Relaxed, Ordering::Relaxed)
+            .is_err()
+        {
+            return None;
+        }
+        Some(JobCompletion {
+            job,
+            tenant: cell.tenant,
+            deadline: cell.deadline,
+            completed_at: at,
+            met: cell.deadline == 0 || at <= cell.deadline,
+        })
+    }
+
+    /// Snapshot one job still on the board.
+    pub fn progress(&self, job: JobId) -> Option<JobProgress> {
+        self.cell(job).map(|c| c.snapshot())
+    }
+
+    /// Snapshot every registered job (ascending job id).
+    pub fn jobs(&self) -> Vec<(JobId, JobProgress)> {
+        self.cells
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(&j, c)| (j, c.snapshot()))
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Job manager
+// ---------------------------------------------------------------------
+
+/// Admission front of the job subsystem: allocates job + submission
+/// ids, computes urgency, stamps requests, registers board cells, and
+/// rebuilds all of that from a [`ResumeState`] after a restart.
+pub struct JobManager {
+    next_job: JobId,
+    next_sid: u64,
+    svc_tok_per_s: f64,
+    board: Arc<JobBoard>,
+    specs: Vec<JobSpec>,
+}
+
+impl JobManager {
+    pub fn new(svc_tok_per_s: f64) -> Self {
+        Self {
+            next_job: 1,
+            next_sid: JOB_SID_BASE,
+            svc_tok_per_s,
+            board: Arc::new(JobBoard::new()),
+            specs: Vec::new(),
+        }
+    }
+
+    /// The shared progress board (hand clones to every engine via
+    /// [`ServingEngine::set_job_board`](crate::server::ServingEngine::set_job_board)).
+    pub fn board(&self) -> &Arc<JobBoard> {
+        &self.board
+    }
+
+    /// Specs admitted so far (admission order).
+    pub fn specs(&self) -> &[JobSpec] {
+        &self.specs
+    }
+
+    /// Admit one job: appends its stamped offline [`Request`]s to `out`
+    /// (arrival = `submitted_at`) and returns the spec. Urgency is the
+    /// admission-time EDF score over the whole job's work.
+    pub fn admit(&mut self, input: &JobInput, out: &mut Vec<Request>) -> JobSpec {
+        let job = self.next_job;
+        self.next_job += 1;
+        let total_tokens: u64 = input
+            .requests
+            .iter()
+            .map(|r| (r.prompt_len + r.max_new_tokens) as u64)
+            .sum();
+        let urgency = urgency_score(
+            input.deadline,
+            input.submitted_at,
+            total_tokens,
+            self.svc_tok_per_s,
+        );
+        let weight = tier_weight(input.tier);
+        self.board
+            .register(job, input.requests.len() as u64, input.deadline, input.tenant);
+        for jr in &input.requests {
+            let sid = self.next_sid;
+            self.next_sid += 1;
+            let mut r = Request::new(
+                sid,
+                Class::Offline,
+                jr.prompt.clone(),
+                jr.prompt_len,
+                jr.max_new_tokens,
+                input.submitted_at,
+            );
+            r.job = job;
+            r.tenant = input.tenant;
+            r.urgency = urgency;
+            r.fair_weight = weight;
+            r.deadline = input.deadline;
+            out.push(r);
+        }
+        let spec = JobSpec {
+            job,
+            tenant: input.tenant,
+            tier: input.tier,
+            deadline: input.deadline,
+            submitted_at: input.submitted_at,
+            n_requests: input.requests.len() as u64,
+            total_tokens,
+        };
+        self.specs.push(spec.clone());
+        spec
+    }
+
+    /// Rebuild in-flight jobs from a durable-store [`ResumeState`]:
+    /// every stored request without a recorded output is replayed —
+    /// from its last checkpoint when one exists (outputs so far +
+    /// sampler state travel; prefill recomputes), from its spec
+    /// otherwise (recreated with the *same* submission id, so the
+    /// derived sampler state — and therefore the token stream — is
+    /// identical to the original run's). Returns the number of
+    /// requests queued for replay.
+    ///
+    /// Deadlines are restored verbatim: they are absolute timestamps of
+    /// the original run's clock, so a resumed run (clock restarts at 0)
+    /// judges them *leniently* by the time already burned before the
+    /// crash. Job-level attainment across a restart is therefore an
+    /// upper bound; per-run reports stay exact.
+    pub fn resume(&mut self, state: &ResumeState, out: &mut Vec<Request>) -> usize {
+        let mut replayed = 0;
+        for sj in &state.jobs {
+            let spec = &sj.spec;
+            self.next_job = self.next_job.max(spec.job + 1);
+            let weight = tier_weight(spec.tier);
+            // remaining work drives the *re*-computed urgency
+            let mut pending: Vec<Request> = Vec::new();
+            let mut remaining_tokens = 0u64;
+            let mut done = 0u64;
+            let mut done_tokens = 0u64;
+            for sr in &sj.requests {
+                self.next_sid = self.next_sid.max(sr.sid + 1);
+                if let Some(fin) = state.outputs.get(&sr.sid) {
+                    // already completed before the restart: pre-credit
+                    done += 1;
+                    done_tokens += fin.generated;
+                    continue;
+                }
+                let r = match state.checkpoints.get(&sr.sid) {
+                    Some(ckpt) => {
+                        let mut r = ckpt.clone().into_request();
+                        // the resumed run's clock restarts at 0: a
+                        // stale original-run arrival would park the
+                        // request in the trace source until the old
+                        // timestamp passes (possibly beyond the new
+                        // duration cap — it would never run at all)
+                        r.arrival = 0;
+                        r
+                    }
+                    None => {
+                        let mut r = Request::new(
+                            sr.sid,
+                            Class::Offline,
+                            sr.prompt.clone(),
+                            sr.prompt_len,
+                            sr.max_new_tokens,
+                            0,
+                        );
+                        r.job = spec.job;
+                        r.tenant = spec.tenant;
+                        r.fair_weight = weight;
+                        r.deadline = spec.deadline;
+                        r
+                    }
+                };
+                remaining_tokens += (r.prompt_len + r.max_new_tokens - r.generated) as u64;
+                pending.push(r);
+            }
+            if pending.is_empty() {
+                continue;
+            }
+            let urgency = urgency_score(spec.deadline, 0, remaining_tokens, self.svc_tok_per_s);
+            // full job size, with pre-crash completions pre-credited —
+            // progress reads `finished/total` over the real job
+            self.board.register_resumed(
+                spec.job,
+                spec.n_requests,
+                done,
+                done_tokens,
+                spec.deadline,
+                spec.tenant,
+            );
+            for mut r in pending {
+                r.urgency = urgency;
+                out.push(r);
+                replayed += 1;
+            }
+            self.specs.push(spec.clone());
+        }
+        replayed
+    }
+}
+
+// ---------------------------------------------------------------------
+// Sharded job-run driver
+// ---------------------------------------------------------------------
+
+/// Options for [`run_jobs`].
+#[derive(Debug, Clone)]
+pub struct JobRunOpts {
+    pub n_shards: usize,
+    pub placement: Placement,
+    pub steal: Option<StealConfig>,
+    pub duration_s: f64,
+    /// Retain finished requests and collect per-shard state (finished
+    /// outputs + cold snapshots of unfinished requests) for durable
+    /// [`JobStore`] persistence. Off for pure benchmarking runs.
+    pub collect_state: bool,
+    /// Synthesize deterministic sim tokens (keyed by sampler state ×
+    /// position) so collected outputs are byte-comparable across runs,
+    /// restarts and migrations.
+    pub synth_tokens: bool,
+}
+
+impl JobRunOpts {
+    pub fn new(n_shards: usize, duration_s: f64) -> Self {
+        Self {
+            n_shards,
+            placement: Placement::deadline(),
+            steal: Some(StealConfig::default()),
+            duration_s,
+            collect_state: false,
+            synth_tokens: false,
+        }
+    }
+}
+
+/// A finished request's durable output record.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FinishedOutput {
+    pub sid: u64,
+    pub job: JobId,
+    pub generated: u64,
+    pub output: Vec<TokenId>,
+}
+
+/// Post-run view of one job.
+#[derive(Debug, Clone, Copy)]
+pub struct JobResult {
+    pub job: JobId,
+    pub progress: JobProgress,
+}
+
+/// Everything [`run_jobs`] produces.
+#[derive(Debug)]
+pub struct JobRunOutcome {
+    pub run: ShardedRun,
+    /// One row per registered job (ascending id).
+    pub jobs: Vec<JobResult>,
+    /// Job-level deadline attainment: completed before the deadline /
+    /// jobs carrying a deadline (unfinished or late = miss; 1.0 when no
+    /// job carries one).
+    pub job_attainment: f64,
+    /// Finished request outputs (empty unless `collect_state`).
+    pub finished: Vec<FinishedOutput>,
+    /// Cold snapshots of requests still unfinished at run end (empty
+    /// unless `collect_state`) — what a durable store checkpoints.
+    pub unfinished: Vec<PortableRequest>,
+}
+
+/// Serve `events` (stamped job requests + any online background
+/// traffic) on an `opts.n_shards`-worker simulated fleet: route under
+/// `opts.placement` (urgency-aware), run with optional work stealing,
+/// notify `board` as job requests finish, and reduce job-level
+/// attainment. The engine-side urgency machinery (fair-share pick
+/// order) is enabled by `cfg.sched.fair_share`, not here.
+pub fn run_jobs(
+    cfg: &EngineConfig,
+    opts: &JobRunOpts,
+    board: Arc<JobBoard>,
+    events: Vec<Request>,
+) -> JobRunOutcome {
+    let mut router = ShardRouter::new(opts.n_shards, opts.placement, cfg);
+    for r in events {
+        router.push(r);
+    }
+    let traces = router.into_traces();
+    let collect_state = opts.collect_state;
+    let synth = opts.synth_tokens;
+    let setup_board = board.clone();
+    let (run, extras) = run_sharded_traces_with(
+        cfg,
+        traces,
+        opts.duration_s,
+        opts.steal,
+        |e| {
+            e.set_job_board(setup_board.clone());
+            if collect_state {
+                e.set_retain_finished(true);
+            }
+            if synth {
+                e.backend.set_synth_tokens(true);
+            }
+        },
+        |e| {
+            let mut finished = Vec::new();
+            let mut unfinished = Vec::new();
+            if collect_state {
+                // job-tagged requests only: online background traffic
+                // is not durable-store material, and cloning its output
+                // streams would be pure waste
+                for r in e.table.values().filter(|r| r.job != 0) {
+                    if r.state == State::Finished {
+                        finished.push(FinishedOutput {
+                            sid: r.submitted_id,
+                            job: r.job,
+                            generated: r.generated as u64,
+                            output: r.output.clone(),
+                        });
+                    } else if r.state != State::Aborted {
+                        unfinished.push(PortableRequest::snapshot_cold(r));
+                    }
+                }
+            }
+            (finished, unfinished)
+        },
+    );
+    let mut finished = Vec::new();
+    let mut unfinished = Vec::new();
+    for (f, u) in extras {
+        finished.extend(f);
+        unfinished.extend(u);
+    }
+    let jobs: Vec<JobResult> = board
+        .jobs()
+        .into_iter()
+        .map(|(job, progress)| JobResult { job, progress })
+        .collect();
+    let with_deadline = jobs.iter().filter(|j| j.progress.deadline > 0).count();
+    let met = jobs
+        .iter()
+        .filter(|j| j.progress.met_deadline() == Some(true))
+        .count();
+    let job_attainment = if with_deadline == 0 {
+        1.0
+    } else {
+        met as f64 / with_deadline as f64
+    };
+    JobRunOutcome {
+        run,
+        jobs,
+        job_attainment,
+        finished,
+        unfinished,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn input(tenant: u32, tier: u8, at: TimeUs, deadline: TimeUs, n: usize) -> JobInput {
+        JobInput {
+            tenant,
+            tier,
+            submitted_at: at,
+            deadline,
+            requests: (0..n)
+                .map(|_| JobRequest {
+                    prompt: Vec::new(),
+                    prompt_len: 256,
+                    max_new_tokens: 32,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn urgency_tracks_laxity() {
+        // no deadline: never urgent
+        assert_eq!(urgency_score(0, 0, 1_000_000, 5000.0), 0);
+        // 10k tokens at 5k tok/s = 2 s of work; deadline 20 s out =>
+        // 18 s of laxity => 1000 * 60 / 78
+        let est_2s_work = 10_000;
+        assert_eq!(urgency_score(20_000_000, 0, est_2s_work, 5000.0), 769);
+        // laxity shrinks as `now` advances: urgency grows monotonically
+        let u1 = urgency_score(20_000_000, 10_000_000, est_2s_work, 5000.0);
+        let u2 = urgency_score(20_000_000, 17_000_000, est_2s_work, 5000.0);
+        assert!(769 < u1 && u1 < u2, "{u1} < {u2}");
+        // est >= slack, or already late: pegged at max
+        assert_eq!(urgency_score(20_000_000, 18_500_000, est_2s_work, 5000.0), URGENCY_MAX);
+        assert_eq!(urgency_score(1_000, 2_000, 1, 5000.0), URGENCY_MAX);
+        // the LLF property: a tiny near-deadline job outranks a huge
+        // job whose deadline is proportionally as far (same est/slack
+        // ratio, much more absolute room)
+        let tiny = urgency_score(5_000_000, 0, 5_000, 5000.0); // 1s work, 5s deadline
+        let huge = urgency_score(500_000_000, 0, 500_000, 5000.0); // 100s work, 500s deadline
+        assert!(tiny > huge, "laxity orders correctly: {tiny} vs {huge}");
+    }
+
+    #[test]
+    fn admit_stamps_requests_and_registers_board() {
+        let mut jm = JobManager::new(5000.0);
+        let mut out = Vec::new();
+        let spec = jm.admit(&input(7, 0, 1_000, 50_000_000, 3), &mut out);
+        assert_eq!(spec.job, 1);
+        assert_eq!(spec.n_requests, 3);
+        assert_eq!(spec.total_tokens, 3 * 288);
+        assert_eq!(out.len(), 3);
+        for r in &out {
+            assert_eq!(r.job, 1);
+            assert_eq!(r.tenant, 7);
+            assert_eq!(r.fair_weight, 4, "tier 0 weighs 4x");
+            assert_eq!(r.deadline, 50_000_000);
+            assert_eq!(r.arrival, 1_000);
+            assert!(r.urgency > 0);
+            assert!(r.submitted_id >= JOB_SID_BASE);
+        }
+        // distinct sids, distinct sampler states
+        assert_ne!(out[0].submitted_id, out[1].submitted_id);
+        assert_ne!(out[0].sampler_state, out[1].sampler_state);
+        let p = jm.board().progress(1).unwrap();
+        assert_eq!(p.total, 3);
+        assert_eq!(p.finished, 0);
+        assert!(!p.done());
+        assert_eq!(p.met_deadline(), None);
+    }
+
+    #[test]
+    fn board_reports_completion_exactly_once() {
+        let board = JobBoard::new();
+        board.register(9, 2, 1_000_000, 3);
+        assert!(board.note_finished(9, 12, 400_000).is_none());
+        let done = board
+            .note_finished(9, 8, 900_000)
+            .expect("last request completes");
+        assert!(done.met);
+        assert_eq!(done.tenant, 3);
+        let p = board.progress(9).unwrap();
+        assert_eq!(p.finished, 2);
+        assert_eq!(p.gen_tokens, 20, "token credit accumulates");
+        assert_eq!(p.met_deadline(), Some(true));
+        // deadline-free jobs are never late
+        board.register(10, 1, 1_000, 0);
+        let d = board.note_finished(10, 1, 5_000).unwrap();
+        assert!(d.met, "deadline-free jobs are never late");
+        board.register(11, 1, 1_000, 0);
+        assert!(board.note_finished(99, 1, 0).is_none(), "unknown job ignored");
+        // a memberless job is complete on arrival (nothing will ever
+        // notify it; a polling handle must not spin forever)
+        board.register(12, 0, 5_000, 1);
+        let p = board.progress(12).unwrap();
+        assert!(p.done());
+        assert_eq!(p.met_deadline(), Some(true));
+        // gc drops completed entries (9, 10, 12) and keeps in-flight 11
+        assert_eq!(board.gc_completed(), 3);
+        assert!(board.progress(9).is_none());
+        assert!(board.progress(11).is_some());
+        assert_eq!(board.gc_completed(), 0, "idempotent");
+        // retire drops an entry regardless of state; later notifies no-op
+        assert!(board.retire(11));
+        assert!(!board.retire(11));
+        assert!(board.note_finished(11, 1, 99).is_none());
+    }
+
+    #[test]
+    fn sharded_job_run_completes_and_reports_attainment() {
+        let cfg = EngineConfig::sim_a100_7b();
+        let mut jm = JobManager::new(NOMINAL_TOK_PER_S);
+        let mut events = Vec::new();
+        // a generous deadline (met) and an impossible one (missed)
+        jm.admit(&input(1, 1, 0, 600_000_000, 4), &mut events);
+        jm.admit(&input(2, 2, 0, 1_000, 4), &mut events);
+        let opts = JobRunOpts {
+            steal: None,
+            ..JobRunOpts::new(2, 600.0)
+        };
+        let out = run_jobs(&cfg, &opts, jm.board().clone(), events);
+        assert_eq!(out.jobs.len(), 2);
+        assert!(out.jobs.iter().all(|j| j.progress.done()));
+        assert_eq!(out.run.merged.offline_finished, 8);
+        assert_eq!(out.run.merged.jobs_completed, 2);
+        assert!((out.job_attainment - 0.5).abs() < 1e-9, "{}", out.job_attainment);
+        // request-level counters land in the merged report too
+        assert_eq!(
+            out.run.merged.deadline_met + out.run.merged.deadline_missed,
+            8
+        );
+        let tenants = &out.run.merged.per_tenant;
+        assert_eq!(tenants.len(), 2);
+        assert!(tenants.iter().all(|t| t.finished == 4));
+    }
+
+    #[test]
+    fn collect_state_partitions_finished_and_unfinished() {
+        let cfg = EngineConfig::sim_a100_7b();
+        let mut jm = JobManager::new(NOMINAL_TOK_PER_S);
+        let mut events = Vec::new();
+        // two quick requests (finish within the cap) + four slow ones
+        // (still mid-generation when the cap hits)
+        let mut job = input(1, 2, 0, 0, 0);
+        for _ in 0..2 {
+            job.requests.push(JobRequest {
+                prompt: Vec::new(),
+                prompt_len: 256,
+                max_new_tokens: 4,
+            });
+        }
+        for _ in 0..4 {
+            job.requests.push(JobRequest {
+                prompt: Vec::new(),
+                prompt_len: 3000,
+                max_new_tokens: 256,
+            });
+        }
+        jm.admit(&job, &mut events);
+        let opts = JobRunOpts {
+            steal: None,
+            collect_state: true,
+            synth_tokens: true,
+            // a tight time cap leaves the slow requests unfinished
+            ..JobRunOpts::new(1, 1.5)
+        };
+        let out = run_jobs(&cfg, &opts, jm.board().clone(), events);
+        assert_eq!(
+            out.finished.len() + out.unfinished.len(),
+            6,
+            "every request is either finished or snapshotted"
+        );
+        assert!(!out.finished.is_empty(), "quick requests finish");
+        assert!(!out.unfinished.is_empty(), "slow requests get snapshotted");
+        for f in &out.finished {
+            assert_eq!(f.generated, 4);
+            assert_eq!(f.output.len(), 4, "synth tokens materialize outputs");
+        }
+        for p in &out.unfinished {
+            assert_eq!(p.ckpt_tokens, 0, "store snapshots are cold");
+            assert_eq!(p.job, 1);
+        }
+    }
+}

@@ -1,0 +1,447 @@
+//! Durable, resumable job store: three append-only JSONL files under a
+//! `--state-dir`.
+//!
+//! * `specs.jsonl` — one line per admitted job: the [`JobSpec`] plus
+//!   every request descriptor (submission id, prompt, lengths). Written
+//!   once, at admission.
+//! * `checkpoints.jsonl` — cold [`PortableRequest`] snapshots of
+//!   requests still unfinished when the process stops (graceful drain
+//!   or crash-time persistence). Appended; the **last** line per
+//!   submission id wins.
+//! * `outputs.jsonl` — completed request outputs (submission id, job,
+//!   token stream). Appended as requests complete or at run end.
+//!
+//! Resume protocol (`--resume`): [`JobStore::load`] replays all three
+//! files into a [`ResumeState`]; for every stored request, an output
+//! line means *done* (skip), else the newest checkpoint (outputs so
+//! far + sampler state; prefill recomputes) or, failing that, the spec
+//! descriptor recreates the request **with its original submission
+//! id** — so the derived sampler state, and therefore the keyed token
+//! stream, is byte-identical to an uninterrupted run (asserted by
+//! `tests/job_store_props.rs`).
+//!
+//! Torn writes: a process can die mid-line, so each file tolerates an
+//! unparseable **final** line (it is ignored — that record simply never
+//! durably happened). Garbage in the middle of a file is real
+//! corruption and fails the load.
+
+use super::{FinishedOutput, JobSpec};
+use crate::request::{json_f64, json_u64_str, tok_arr, tok_vec, PortableRequest, Request, TokenId};
+use crate::util::json::{arr, num, obj, Json};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Write as _};
+use std::path::{Path, PathBuf};
+
+/// One request descriptor as persisted in a spec line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StoredRequest {
+    pub sid: u64,
+    pub prompt: Vec<TokenId>,
+    pub prompt_len: usize,
+    pub max_new_tokens: usize,
+}
+
+/// One persisted job: its spec and request descriptors.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StoredJob {
+    pub spec: JobSpec,
+    pub requests: Vec<StoredRequest>,
+}
+
+/// Everything a restart can recover (see the module docs for how the
+/// three maps compose into the replay set).
+#[derive(Debug, Default)]
+pub struct ResumeState {
+    /// Jobs in spec-line order.
+    pub jobs: Vec<StoredJob>,
+    /// Completed outputs by submission id (last line wins).
+    pub outputs: BTreeMap<u64, FinishedOutput>,
+    /// Newest cold checkpoint by submission id (last line wins).
+    pub checkpoints: BTreeMap<u64, PortableRequest>,
+}
+
+/// Append-side handle. One writer per state dir; every record is one
+/// `write_all` of a full line followed by a flush, so the only torn
+/// write a crash can produce is a partial final line — exactly what
+/// [`JobStore::load`] tolerates.
+pub struct JobStore {
+    dir: PathBuf,
+    specs: BufWriter<File>,
+    checkpoints: BufWriter<File>,
+    outputs: BufWriter<File>,
+}
+
+const SPECS: &str = "specs.jsonl";
+const CHECKPOINTS: &str = "checkpoints.jsonl";
+const OUTPUTS: &str = "outputs.jsonl";
+
+impl JobStore {
+    /// Open (creating the directory and files as needed) for appending.
+    /// A torn final line left by a crash is truncated away first —
+    /// appending after it would otherwise merge the next record into
+    /// the fragment, turning a tolerated torn tail into mid-file
+    /// corruption that fails every later load.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating state dir {}", dir.display()))?;
+        let appender = |name: &str| -> Result<BufWriter<File>> {
+            let path = dir.join(name);
+            heal_torn_tail(&path)?;
+            let f = OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(&path)
+                .with_context(|| format!("opening {}", path.display()))?;
+            Ok(BufWriter::new(f))
+        };
+        Ok(Self {
+            specs: appender(SPECS)?,
+            checkpoints: appender(CHECKPOINTS)?,
+            outputs: appender(OUTPUTS)?,
+            dir,
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Persist an admitted job: its spec plus the stamped requests
+    /// (their submission ids and prompts are what resume replays from).
+    pub fn record_spec(&mut self, spec: &JobSpec, requests: &[Request]) -> Result<()> {
+        let line = obj(vec![
+            ("job", num(spec.job as f64)),
+            ("tenant", num(spec.tenant as f64)),
+            ("tier", num(spec.tier as f64)),
+            ("deadline", num(spec.deadline as f64)),
+            ("submitted_at", num(spec.submitted_at as f64)),
+            ("n_requests", num(spec.n_requests as f64)),
+            ("total_tokens", num(spec.total_tokens as f64)),
+            (
+                "requests",
+                arr(requests.iter().filter(|r| r.job == spec.job).map(|r| {
+                    obj(vec![
+                        ("sid", Json::Str(r.submitted_id.to_string())),
+                        ("prompt", tok_arr(&r.prompt)),
+                        ("prompt_len", num(r.prompt_len as f64)),
+                        ("max_new", num(r.max_new_tokens as f64)),
+                    ])
+                })),
+            ),
+        ]);
+        write_line(&mut self.specs, &line)
+    }
+
+    /// Persist a cold checkpoint of an unfinished request (newest line
+    /// per sid wins on load).
+    pub fn record_checkpoint(&mut self, p: &PortableRequest) -> Result<()> {
+        let line = p.to_json();
+        write_line(&mut self.checkpoints, &line)
+    }
+
+    /// Persist a completed request's output stream.
+    pub fn record_output(&mut self, f: &FinishedOutput) -> Result<()> {
+        let line = obj(vec![
+            ("sid", Json::Str(f.sid.to_string())),
+            ("job", num(f.job as f64)),
+            ("generated", num(f.generated as f64)),
+            ("output", tok_arr(&f.output)),
+        ]);
+        write_line(&mut self.outputs, &line)
+    }
+
+    /// Read a state dir back (missing files = empty state). Tolerates a
+    /// truncated final line per file; rejects mid-file garbage.
+    pub fn load(dir: impl AsRef<Path>) -> Result<ResumeState> {
+        let dir = dir.as_ref();
+        let mut state = ResumeState::default();
+        for line in read_jsonl(&dir.join(SPECS))? {
+            state.jobs.push(parse_spec_line(&line)?);
+        }
+        for line in read_jsonl(&dir.join(CHECKPOINTS))? {
+            let p = PortableRequest::from_json(&line)?;
+            state.checkpoints.insert(p.submitted_id, p);
+        }
+        for line in read_jsonl(&dir.join(OUTPUTS))? {
+            let f = parse_output_line(&line)?;
+            state.outputs.insert(f.sid, f);
+        }
+        Ok(state)
+    }
+}
+
+/// Truncate a torn (newline-less) final line before appending. The
+/// dropped fragment never durably happened — `load` was already
+/// ignoring it — but a record appended after it would merge into one
+/// unparseable line and corrupt the file for every later load.
+fn heal_torn_tail(path: &Path) -> Result<()> {
+    let bytes = match std::fs::read(path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(()),
+        Err(e) => return Err(e).with_context(|| format!("reading {}", path.display())),
+    };
+    if bytes.is_empty() || bytes.ends_with(b"\n") {
+        return Ok(());
+    }
+    let keep = bytes.iter().rposition(|&b| b == b'\n').map_or(0, |i| i + 1);
+    eprintln!(
+        "[job-store] {}: truncating torn final line ({} bytes) before appending",
+        path.display(),
+        bytes.len() - keep
+    );
+    let f = OpenOptions::new()
+        .write(true)
+        .open(path)
+        .with_context(|| format!("healing {}", path.display()))?;
+    f.set_len(keep as u64)
+        .with_context(|| format!("truncating {}", path.display()))?;
+    Ok(())
+}
+
+fn write_line(w: &mut BufWriter<File>, line: &Json) -> Result<()> {
+    let mut s = line.to_string();
+    s.push('\n');
+    w.write_all(s.as_bytes()).context("job store write")?;
+    w.flush().context("job store flush")?;
+    Ok(())
+}
+
+/// Parse a JSONL file, ignoring an unparseable final line (torn write).
+fn read_jsonl(path: &Path) -> Result<Vec<Json>> {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+        Err(e) => return Err(e).with_context(|| format!("reading {}", path.display())),
+    };
+    let lines: Vec<&str> = text
+        .lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty())
+        .collect();
+    let mut out = Vec::with_capacity(lines.len());
+    for (i, line) in lines.iter().enumerate() {
+        match Json::parse(line) {
+            Ok(v) => out.push(v),
+            Err(e) if i + 1 == lines.len() => {
+                // torn final line: the record never durably happened
+                eprintln!(
+                    "[job-store] {}: ignoring truncated final line ({e})",
+                    path.display()
+                );
+            }
+            Err(e) => bail!("{}: corrupt line {}: {e}", path.display(), i + 1),
+        }
+    }
+    Ok(out)
+}
+
+fn parse_spec_line(j: &Json) -> Result<StoredJob> {
+    const WHAT: &str = "spec line";
+    let f = |k: &str| json_f64(j, WHAT, k);
+    let spec = JobSpec {
+        job: f("job")? as u64,
+        tenant: f("tenant")? as u32,
+        tier: f("tier")? as u8,
+        deadline: f("deadline")? as u64,
+        submitted_at: f("submitted_at")? as u64,
+        n_requests: f("n_requests")? as u64,
+        total_tokens: f("total_tokens")? as u64,
+    };
+    let mut requests = Vec::new();
+    let Some(reqs) = j.get("requests").and_then(Json::as_arr) else {
+        bail!("spec line: missing requests array");
+    };
+    for r in reqs {
+        requests.push(StoredRequest {
+            sid: json_u64_str(r, WHAT, "sid")?,
+            prompt: tok_vec(r.get("prompt"), WHAT)?,
+            prompt_len: json_f64(r, WHAT, "prompt_len")? as usize,
+            max_new_tokens: json_f64(r, WHAT, "max_new")? as usize,
+        });
+    }
+    Ok(StoredJob { spec, requests })
+}
+
+fn parse_output_line(j: &Json) -> Result<FinishedOutput> {
+    const WHAT: &str = "output line";
+    Ok(FinishedOutput {
+        sid: json_u64_str(j, WHAT, "sid")?,
+        job: json_f64(j, WHAT, "job")? as u64,
+        generated: json_f64(j, WHAT, "generated")? as u64,
+        output: tok_vec(j.get("output"), WHAT)?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batch::{JobInput, JobManager, JobRequest};
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "conserve-store-{tag}-{}-{}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn spec_checkpoint_output_round_trip() {
+        let dir = tmp_dir("rt");
+        let mut jm = JobManager::new(5_000.0);
+        let mut reqs = Vec::new();
+        let spec = jm.admit(
+            &JobInput {
+                tenant: 3,
+                tier: 1,
+                submitted_at: 42,
+                deadline: 9_000_000,
+                requests: vec![
+                    JobRequest {
+                        prompt: vec![1, 2, 3],
+                        prompt_len: 3,
+                        max_new_tokens: 5,
+                    },
+                    JobRequest {
+                        prompt: Vec::new(),
+                        prompt_len: 64,
+                        max_new_tokens: 8,
+                    },
+                ],
+            },
+            &mut reqs,
+        );
+        {
+            let mut store = JobStore::open(&dir).unwrap();
+            store.record_spec(&spec, &reqs).unwrap();
+            let p = PortableRequest::snapshot_cold(&reqs[0]);
+            store.record_checkpoint(&p).unwrap();
+            store
+                .record_output(&FinishedOutput {
+                    sid: reqs[1].submitted_id,
+                    job: spec.job,
+                    generated: 8,
+                    output: vec![7; 8],
+                })
+                .unwrap();
+        }
+        let state = JobStore::load(&dir).unwrap();
+        assert_eq!(state.jobs.len(), 1);
+        assert_eq!(state.jobs[0].spec, spec);
+        assert_eq!(state.jobs[0].requests.len(), 2);
+        assert_eq!(state.jobs[0].requests[0].prompt, vec![1, 2, 3]);
+        assert_eq!(state.checkpoints.len(), 1);
+        assert!(state.checkpoints.contains_key(&reqs[0].submitted_id));
+        assert_eq!(state.outputs[&reqs[1].submitted_id].output, vec![7; 8]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn truncated_final_line_is_tolerated_mid_file_garbage_is_not() {
+        let dir = tmp_dir("torn");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join(OUTPUTS),
+            "{\"sid\":\"1\",\"job\":1,\"generated\":1,\"output\":[9]}\n{\"sid\":\"2\",\"job\":1,\"gen",
+        )
+        .unwrap();
+        let state = JobStore::load(&dir).unwrap();
+        assert_eq!(state.outputs.len(), 1, "torn tail ignored");
+        assert!(state.outputs.contains_key(&1));
+
+        std::fs::write(
+            dir.join(OUTPUTS),
+            "garbage\n{\"sid\":\"1\",\"job\":1,\"generated\":1,\"output\":[9]}\n",
+        )
+        .unwrap();
+        assert!(JobStore::load(&dir).is_err(), "mid-file corruption fails");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn reopening_after_torn_write_heals_the_tail() {
+        // crash run 1 mid-append, resume run 2 appends a record, run 3
+        // loads: the torn fragment must not merge with run 2's record
+        let dir = tmp_dir("heal");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join(OUTPUTS),
+            "{\"sid\":\"1\",\"job\":1,\"generated\":1,\"output\":[9]}\n{\"sid\":\"2\",\"job\":1,\"gen",
+        )
+        .unwrap();
+        {
+            let mut store = JobStore::open(&dir).unwrap();
+            store
+                .record_output(&FinishedOutput {
+                    sid: 3,
+                    job: 1,
+                    generated: 2,
+                    output: vec![5, 6],
+                })
+                .unwrap();
+        }
+        let state = JobStore::load(&dir).unwrap();
+        assert_eq!(state.outputs.len(), 2, "torn tail healed, new record intact");
+        assert!(state.outputs.contains_key(&1));
+        assert_eq!(state.outputs[&3].output, vec![5, 6]);
+        assert!(!state.outputs.contains_key(&2), "the torn record is gone");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_dir_loads_empty() {
+        let dir = tmp_dir("none");
+        let state = JobStore::load(&dir).unwrap();
+        assert!(state.jobs.is_empty());
+        assert!(state.outputs.is_empty());
+        assert!(state.checkpoints.is_empty());
+    }
+
+    #[test]
+    fn newest_checkpoint_wins() {
+        let dir = tmp_dir("newest");
+        let mut jm = JobManager::new(5_000.0);
+        let mut reqs = Vec::new();
+        jm.admit(
+            &JobInput {
+                tenant: 1,
+                tier: 2,
+                submitted_at: 0,
+                deadline: 0,
+                requests: vec![JobRequest {
+                    prompt: Vec::new(),
+                    prompt_len: 32,
+                    max_new_tokens: 16,
+                }],
+            },
+            &mut reqs,
+        );
+        {
+            let mut store = JobStore::open(&dir).unwrap();
+            let mut r = reqs[0].clone();
+            r.generated = 2;
+            r.output = vec![1, 2];
+            store
+                .record_checkpoint(&PortableRequest::snapshot_cold(&r))
+                .unwrap();
+            r.generated = 5;
+            r.output = vec![1, 2, 3, 4, 5];
+            store
+                .record_checkpoint(&PortableRequest::snapshot_cold(&r))
+                .unwrap();
+        }
+        let state = JobStore::load(&dir).unwrap();
+        let p = &state.checkpoints[&reqs[0].submitted_id];
+        assert_eq!(p.generated, 5, "last checkpoint line wins");
+        assert_eq!(p.output.len(), 5);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -42,6 +42,11 @@ pub struct SchedConfig {
     /// Layers per safepoint interval (§6.4.2: 8 balances overhead vs
     /// responsiveness).
     pub safepoint_layers: usize,
+    /// Job-aware offline admission order (crate::batch): pick the next
+    /// offline request by (urgency desc, weighted tenant deficit,
+    /// FIFO) instead of plain FIFO. Off by default — standalone offline
+    /// requests carry no job identity and see pure FIFO either way.
+    pub fair_share: bool,
 }
 
 /// KV memory pools, in blocks of `block_tokens` token-slots.
@@ -87,6 +92,7 @@ impl EngineConfig {
                 layerwise_preempt: true,
                 ckpt_free_watermark: 0.5,
                 safepoint_layers: 8,
+                fair_share: false,
             },
             mem: MemConfig {
                 // 40 GB - 13.5 weights - ~2.5 activations => ~24 GB KV;
@@ -120,6 +126,7 @@ impl EngineConfig {
                 layerwise_preempt: true,
                 ckpt_free_watermark: 0.5,
                 safepoint_layers: 1, // 4-layer model: safepoint every layer
+                fair_share: false,
             },
             mem: MemConfig {
                 // Tight pool so preemption/checkpointing paths actually
@@ -151,6 +158,7 @@ impl EngineConfig {
             "layerwise_preempt" => self.sched.layerwise_preempt = parse_bool(v)?,
             "ckpt_free_watermark" => self.sched.ckpt_free_watermark = parse(v)?,
             "safepoint_layers" => self.sched.safepoint_layers = parse(v)?,
+            "fair_share" => self.sched.fair_share = parse_bool(v)?,
             "gpu_blocks" => self.mem.gpu_blocks = parse(v)?,
             "host_blocks" => self.mem.host_blocks = parse(v)?,
             "block_tokens" => self.mem.block_tokens = parse(v)?,

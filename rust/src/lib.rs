@@ -24,6 +24,10 @@
 //! One engine is one worker shard; [`shard`] scales the same machinery
 //! to N workers behind a placement layer with nothing shared on any hot
 //! path (ids carry their shard index, so routing is a mask+shift).
+//! [`batch`] layers an offline *job manager* on top: tenants, priority
+//! tiers, soft deadlines with EDF urgency (driving placement, work
+//! stealing and a fair-share pick order), and a durable JSONL store
+//! that makes batch jobs survive restarts with byte-identical outputs.
 //!
 //! Quickstart: `examples/quickstart.rs`; architecture (module map, the
 //! schedule→execute→commit loop, the id layout, shard ownership):
@@ -31,6 +35,7 @@
 //! buffers, streaming metrics): `rust/PERF.md`.
 
 pub mod backend;
+pub mod batch;
 pub mod clock;
 pub mod config;
 pub mod kvcache;
@@ -69,3 +74,6 @@ pub use server::ServingEngine;
 pub use shard::{Placement, ShardRouter, ShardedClient};
 /// Cross-shard offline work stealing (checkpoint-backed migration).
 pub use shard::{StealConfig, StealCoordinator};
+/// Deadline-aware offline job management: admission, EDF urgency,
+/// poll-able progress, durable resume (`--state-dir` / `--resume`).
+pub use batch::{JobBoard, JobManager, JobSpec, JobStore};

@@ -23,12 +23,36 @@
 //!
 //! conserve trace    [--duration S] [--rate R]
 //!     Emit the BurstGPT-like rate series (Figure 1 data).
+//!
+//! conserve jobs     [--jobs N] [--tenants K] [--span S] [--shards N]
+//!                   [--placement deadline|affinity|...] [--steal on|off]
+//!                   [--sched fifo|urgency] [--rate R] [--duration S]
+//!                   [--state-dir DIR] [--resume] [--set key=value ...]
+//!     Run a multi-tenant batch-job experiment (deadline-aware job
+//!     manager over the sharded fleet) and print per-job deadline
+//!     attainment. --sched urgency enables EDF placement + fair-share
+//!     scheduling; fifo is the baseline. With --state-dir the job
+//!     specs, outputs and checkpoints of unfinished requests persist
+//!     as JSONL; --resume reloads them and replays unfinished work
+//!     (byte-identical token streams — sampling is keyed).
 //! ```
 
 use anyhow::{bail, Context, Result};
 use conserve::config::EngineConfig;
 use conserve::report::{Report, SimExperiment};
 use conserve::workload::{self, Lengths};
+
+/// Flags that may appear without a value (`--resume` == `--resume true`).
+const BARE_BOOL_FLAGS: &[&str] = &["resume"];
+
+/// Parse an on/off flag value (one accepted set for every boolean flag).
+fn parse_switch(name: &str, v: &str) -> Result<bool> {
+    match v {
+        "on" | "true" | "1" | "yes" => Ok(true),
+        "off" | "false" | "0" | "no" => Ok(false),
+        other => bail!("--{name} expects on|off, got `{other}`"),
+    }
+}
 
 struct Args {
     flags: Vec<(String, String)>,
@@ -43,9 +67,24 @@ impl Args {
             if let Some(key) = a.strip_prefix("--") {
                 if let Some((k, v)) = key.split_once('=') {
                     flags.push((k.to_string(), v.to_string()));
+                } else if BARE_BOOL_FLAGS.contains(&key) {
+                    // known boolean switches may omit their value; every
+                    // other flag still hard-errors on a missing one so a
+                    // forgotten argument cannot silently become "true"
+                    match argv.get(i + 1) {
+                        Some(v) if !v.starts_with("--") => {
+                            flags.push((key.to_string(), v.clone()));
+                            i += 1;
+                        }
+                        _ => flags.push((key.to_string(), "true".to_string())),
+                    }
                 } else {
+                    // a following `--flag` is never a value: error out
+                    // instead of silently consuming it (`--state-dir
+                    // --resume` must not create a dir named `--resume`)
                     let v = argv
                         .get(i + 1)
+                        .filter(|v| !v.starts_with("--"))
                         .with_context(|| format!("--{key} needs a value"))?;
                     flags.push((key.to_string(), v.clone()));
                     i += 1;
@@ -96,7 +135,7 @@ impl Args {
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first() else {
-        eprintln!("usage: conserve <simulate|serve|profile|trace> [flags]");
+        eprintln!("usage: conserve <simulate|serve|profile|trace|jobs> [flags]");
         std::process::exit(2);
     };
     let args = Args::parse(&argv[1..])?;
@@ -105,8 +144,174 @@ fn main() -> Result<()> {
         "serve" => serve(&args),
         "profile" => profile(&args),
         "trace" => trace(&args),
+        "jobs" => jobs(&args),
         other => bail!("unknown command `{other}`"),
     }
+}
+
+/// Multi-tenant batch-job experiment: admit (or resume) a job trace,
+/// serve it on a sharded simulated fleet alongside online background
+/// traffic, and report deadline attainment.
+fn jobs(args: &Args) -> Result<()> {
+    use conserve::batch::{self, JobManager, JobStore};
+    use conserve::request::{Class, Request};
+    use conserve::workload::jobs::JobTraceConfig;
+
+    let mut cfg = EngineConfig::sim_a100_7b();
+    args.apply_sets(&mut cfg)?;
+    let shards = args.get_usize("shards", 4)?;
+    let duration = args.get_f64("duration", 240.0)?;
+    let rate = args.get_f64("rate", 2.0)?;
+    let sched = args.get("sched").unwrap_or("urgency");
+    let urgency_mode = match sched {
+        "urgency" | "edf" => true,
+        "fifo" => false,
+        other => bail!("--sched expects fifo|urgency, got `{other}`"),
+    };
+    cfg.sched.fair_share = urgency_mode;
+    let placement: conserve::shard::Placement = match args.get("placement") {
+        Some(p) => p.parse()?,
+        None if urgency_mode => conserve::shard::Placement::deadline(),
+        None => conserve::shard::Placement::affinity(),
+    };
+    let steal = parse_switch("steal", args.get("steal").unwrap_or("on"))?
+        .then(conserve::StealConfig::default);
+    let state_dir = args.get("state-dir").map(std::path::PathBuf::from);
+    let resume = match args.get("resume") {
+        None => false,
+        Some(v) => parse_switch("resume", v)?,
+    };
+
+    // A fresh (non-resume) run must not append into an existing state
+    // dir: job and submission ids restart from the same bases every
+    // run, so mixing two runs' records would silently cross-wire a
+    // later --resume (an old output line would mark a new request as
+    // already complete).
+    if !resume {
+        if let Some(dir) = &state_dir {
+            let specs = dir.join("specs.jsonl");
+            if std::fs::metadata(&specs).map(|m| m.len() > 0).unwrap_or(false) {
+                bail!(
+                    "state dir {} already holds a run; pass --resume to continue it \
+                     or point --state-dir at a fresh directory",
+                    dir.display()
+                );
+            }
+        }
+    }
+
+    // per-shard nominal rate scaled by the fleet size
+    let svc = batch::NOMINAL_TOK_PER_S * shards as f64;
+    let mut jm = JobManager::new(svc);
+    let mut events: Vec<Request> = Vec::new();
+    let mut store = match &state_dir {
+        Some(dir) => Some(JobStore::open(dir)?),
+        None => None,
+    };
+    if resume {
+        let dir = state_dir
+            .as_ref()
+            .context("--resume requires --state-dir")?;
+        let state = JobStore::load(dir)?;
+        let replayed = jm.resume(&state, &mut events);
+        println!(
+            "resumed {} jobs from {} ({} requests to replay, {} already complete)",
+            jm.specs().len(),
+            dir.display(),
+            replayed,
+            state.outputs.len()
+        );
+    } else {
+        let trace_cfg = JobTraceConfig {
+            seed: cfg.seed ^ 0x1057,
+            n_jobs: args.get_usize("jobs", 24)?,
+            n_tenants: args.get_usize("tenants", 4)? as u32,
+            span_s: args.get_f64("span", duration / 4.0)?,
+            svc_tok_per_s: svc,
+        };
+        for input in conserve::workload::jobs::job_trace(&trace_cfg) {
+            let before = events.len();
+            let spec = jm.admit(&input, &mut events);
+            if let Some(store) = store.as_mut() {
+                store.record_spec(&spec, &events[before..])?;
+            }
+        }
+    }
+
+    // online background traffic (ids 1.. never collide with job sids)
+    let mut lg = workload::LoadGen::new(cfg.seed, rate, 1.0);
+    let mut rng = conserve::util::rng::Rng::new(cfg.seed ^ 0xB06);
+    let mut next_id = 1u64;
+    for t in lg.arrivals_until(duration) {
+        let l = Lengths::online_paper().sample(&mut rng);
+        events.push(Request::new(next_id, Class::Online, vec![], l.input, l.output, t));
+        next_id += 1;
+    }
+
+    let opts = conserve::batch::JobRunOpts {
+        n_shards: shards,
+        placement,
+        steal,
+        duration_s: duration,
+        collect_state: store.is_some(),
+        synth_tokens: store.is_some(),
+    };
+    let board = jm.board().clone();
+    let out = batch::run_jobs(&cfg, &opts, board, events);
+
+    if let Some(store) = store.as_mut() {
+        // collect_state already restricts these to job-tagged requests
+        for f in &out.finished {
+            store.record_output(f)?;
+        }
+        for p in &out.unfinished {
+            store.record_checkpoint(p)?;
+        }
+        println!(
+            "persisted {} outputs + {} checkpoints to {}",
+            out.finished.len(),
+            out.unfinished.len(),
+            store.dir().display()
+        );
+    }
+
+    println!(
+        "== jobs: {} jobs, {shards} shards, {placement} placement, sched {} ==",
+        out.jobs.len(),
+        if urgency_mode { "urgency" } else { "fifo" },
+    );
+    for j in &out.jobs {
+        let p = &j.progress;
+        println!(
+            "  job {:>4} tenant {:>3}  {:>4}/{:<4} done{}{}",
+            j.job,
+            p.tenant,
+            p.finished,
+            p.total,
+            match p.completed_at {
+                Some(t) => format!("  at {:>7.1}s", t as f64 / 1e6),
+                None => "  (in flight)".to_string(),
+            },
+            match p.met_deadline() {
+                Some(true) => "  deadline MET",
+                Some(false) => "  deadline MISSED",
+                None => "",
+            }
+        );
+    }
+    println!("  job deadline attainment: {:.1}%", out.job_attainment * 100.0);
+    for t in &out.run.merged.per_tenant {
+        println!(
+            "  tenant {:>3}: finished {:>5}, gen tokens {:>8}, deadline {}/{} met",
+            t.tenant,
+            t.finished,
+            t.gen_tokens,
+            t.deadline_met,
+            t.deadline_met + t.deadline_missed
+        );
+    }
+    print_report(&out.run.merged);
+    Ok(())
 }
 
 fn simulate(args: &Args) -> Result<()> {
@@ -122,11 +327,8 @@ fn simulate(args: &Args) -> Result<()> {
     let shards = args.get_usize("shards", 1)?;
     let placement: conserve::shard::Placement =
         args.get("placement").unwrap_or("affinity").parse()?;
-    let steal = match args.get("steal").unwrap_or("off") {
-        "on" | "true" | "1" => Some(conserve::StealConfig::default()),
-        "off" | "false" | "0" => None,
-        other => bail!("--steal expects on|off, got `{other}`"),
-    };
+    let steal = parse_switch("steal", args.get("steal").unwrap_or("off"))?
+        .then(conserve::StealConfig::default);
 
     let mut lg = workload::LoadGen::new(cfg.seed, rate, cv);
     let arrivals = lg.arrivals_until(duration);

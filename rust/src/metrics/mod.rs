@@ -142,6 +142,34 @@ impl WindowRing {
     }
 }
 
+/// Per-tenant completion counters (batch jobs, crate::batch): who got
+/// served how much, and how their deadline-carrying requests fared.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TenantCounters {
+    pub tenant: u32,
+    /// Job-tagged requests finished for this tenant.
+    pub finished: u64,
+    /// Output tokens generated for this tenant's job requests.
+    pub gen_tokens: u64,
+    pub deadline_met: u64,
+    pub deadline_missed: u64,
+}
+
+impl TenantCounters {
+    /// The per-tenant JSON row shared by `Report::to_json` and the
+    /// bench emitters — one place to extend when a counter is added.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{num, obj};
+        obj(vec![
+            ("tenant", num(self.tenant as f64)),
+            ("finished", num(self.finished as f64)),
+            ("gen_tokens", num(self.gen_tokens as f64)),
+            ("deadline_met", num(self.deadline_met as f64)),
+            ("deadline_missed", num(self.deadline_missed as f64)),
+        ])
+    }
+}
+
 /// Streaming metrics recorder. Aggregates (histograms, totals) are
 /// maintained on record; the raw event log feeds post-run timeseries
 /// analysis and can be switched off for long traces (windowed series
@@ -168,6 +196,19 @@ pub struct Recorder {
     /// Committed tokens whose host checkpoints travelled with stolen
     /// requests (0 for cold steals).
     pub stolen_ckpt_tokens: u64,
+    /// Deadline-carrying requests finished at/after their soft deadline
+    /// (crate::batch; requests without a deadline count in neither).
+    pub deadline_met: u64,
+    pub deadline_missed: u64,
+    /// Batch jobs whose last request finished on this shard, and how
+    /// many of those with deadlines made/missed them (job-level
+    /// attainment; the fleet aggregate comes from `merge`).
+    pub jobs_completed: u64,
+    pub jobs_deadline_met: u64,
+    pub jobs_deadline_missed: u64,
+    /// Per-tenant completion counters for job-tagged requests (short
+    /// linear list — a handful of tenants per shard).
+    pub tenants: Vec<TenantCounters>,
     capture_events: bool,
     ring: Option<WindowRing>,
     ttft_hist: [LogHistogram; 2],
@@ -199,6 +240,12 @@ impl Recorder {
             steals_out: 0,
             steals_in: 0,
             stolen_ckpt_tokens: 0,
+            deadline_met: 0,
+            deadline_missed: 0,
+            jobs_completed: 0,
+            jobs_deadline_met: 0,
+            jobs_deadline_missed: 0,
+            tenants: Vec::new(),
             capture_events: true,
             ring: None,
             ttft_hist: [LogHistogram::new(), LogHistogram::new()],
@@ -285,6 +332,45 @@ impl Recorder {
         self.finished[cidx(class)] += 1;
     }
 
+    /// One job-tagged request finished for `tenant`; `deadline_met` is
+    /// `None` when the request carried no deadline.
+    pub fn note_tenant_finished(
+        &mut self,
+        tenant: u32,
+        gen_tokens: u64,
+        deadline_met: Option<bool>,
+    ) {
+        let idx = match self.tenants.iter().position(|t| t.tenant == tenant) {
+            Some(i) => i,
+            None => {
+                self.tenants.push(TenantCounters {
+                    tenant,
+                    ..TenantCounters::default()
+                });
+                self.tenants.len() - 1
+            }
+        };
+        let cell = &mut self.tenants[idx];
+        cell.finished += 1;
+        cell.gen_tokens += gen_tokens;
+        match deadline_met {
+            Some(true) => cell.deadline_met += 1,
+            Some(false) => cell.deadline_missed += 1,
+            None => {}
+        }
+    }
+
+    /// Fraction of deadline-carrying requests that met their deadline
+    /// (1.0 when none carried one — nothing was late).
+    pub fn deadline_attainment(&self) -> f64 {
+        let total = self.deadline_met + self.deadline_missed;
+        if total == 0 {
+            1.0
+        } else {
+            self.deadline_met as f64 / total as f64
+        }
+    }
+
     /// Fold another recorder into this one (sharded runs: one recorder
     /// per worker shard, merged for the aggregate report). Event logs
     /// append, histograms merge bucket-wise, streaming totals add — so
@@ -335,6 +421,22 @@ impl Recorder {
         self.steals_out += other.steals_out;
         self.steals_in += other.steals_in;
         self.stolen_ckpt_tokens += other.stolen_ckpt_tokens;
+        self.deadline_met += other.deadline_met;
+        self.deadline_missed += other.deadline_missed;
+        self.jobs_completed += other.jobs_completed;
+        self.jobs_deadline_met += other.jobs_deadline_met;
+        self.jobs_deadline_missed += other.jobs_deadline_missed;
+        for t in &other.tenants {
+            match self.tenants.iter_mut().find(|c| c.tenant == t.tenant) {
+                Some(c) => {
+                    c.finished += t.finished;
+                    c.gen_tokens += t.gen_tokens;
+                    c.deadline_met += t.deadline_met;
+                    c.deadline_missed += t.deadline_missed;
+                }
+                None => self.tenants.push(*t),
+            }
+        }
         for i in 0..2 {
             self.finished[i] += other.finished[i];
             self.gen_tokens[i] += other.gen_tokens[i];
@@ -828,5 +930,34 @@ mod tests {
             r.record_first_token(0, Class::Online, ttft);
         }
         assert_eq!(r.ttft_violation_rate(Class::Online, 1500.0), 0.25);
+    }
+
+    #[test]
+    fn tenant_and_deadline_counters_accumulate_and_merge() {
+        let mut a = Recorder::new();
+        assert_eq!(a.deadline_attainment(), 1.0, "no deadlines => nothing late");
+        a.deadline_met = 3;
+        a.deadline_missed = 1;
+        a.note_tenant_finished(7, 100, Some(true));
+        a.note_tenant_finished(7, 50, Some(false));
+        a.note_tenant_finished(9, 10, None);
+        assert_eq!(a.deadline_attainment(), 0.75);
+        assert_eq!(a.tenants.len(), 2);
+        let t7 = a.tenants.iter().find(|t| t.tenant == 7).unwrap();
+        assert_eq!((t7.finished, t7.gen_tokens), (2, 150));
+        assert_eq!((t7.deadline_met, t7.deadline_missed), (1, 1));
+
+        let mut b = Recorder::new();
+        b.note_tenant_finished(7, 5, Some(true));
+        b.note_tenant_finished(11, 1, None);
+        b.jobs_completed = 2;
+        b.jobs_deadline_met = 1;
+        b.jobs_deadline_missed = 1;
+        a.merge(&b);
+        assert_eq!(a.tenants.len(), 3, "new tenant appended on merge");
+        let t7 = a.tenants.iter().find(|t| t.tenant == 7).unwrap();
+        assert_eq!((t7.finished, t7.gen_tokens, t7.deadline_met), (3, 155, 2));
+        assert_eq!(a.jobs_completed, 2);
+        assert_eq!((a.jobs_deadline_met, a.jobs_deadline_missed), (1, 1));
     }
 }

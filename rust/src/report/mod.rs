@@ -5,7 +5,7 @@
 use crate::backend::{CostModel, SimBackend};
 use crate::clock::Clock;
 use crate::config::EngineConfig;
-use crate::metrics::WindowStats;
+use crate::metrics::{TenantCounters, WindowStats};
 use crate::profiler::LatencyProfile;
 use crate::request::{Class, Request};
 use crate::scheduler::Policy;
@@ -105,6 +105,19 @@ pub struct Report {
     /// fleet total, for a merged report) via cross-shard work stealing.
     pub steals_out: u64,
     pub steals_in: u64,
+    /// Deadline-carrying job requests finished before / after their
+    /// soft deadline, and the derived attainment fraction (1.0 when no
+    /// request carried a deadline). See crate::batch.
+    pub deadline_met: u64,
+    pub deadline_missed: u64,
+    pub deadline_attainment: f64,
+    /// Batch jobs fully completed, and job-level deadline attainment
+    /// (a job meets its deadline iff its *last* request does).
+    pub jobs_completed: u64,
+    pub jobs_deadline_met: u64,
+    pub jobs_deadline_missed: u64,
+    /// Per-tenant completion counters for job-tagged requests.
+    pub per_tenant: Vec<TenantCounters>,
     pub ttft_violations: f64,
     pub online_timeseries: Vec<WindowStats>,
     pub all_timeseries: Vec<WindowStats>,
@@ -138,6 +151,13 @@ impl Report {
             blocking_swap_ms: rec.blocking_swap_us as f64 / 1000.0,
             steals_out: rec.steals_out,
             steals_in: rec.steals_in,
+            deadline_met: rec.deadline_met,
+            deadline_missed: rec.deadline_missed,
+            deadline_attainment: rec.deadline_attainment(),
+            jobs_completed: rec.jobs_completed,
+            jobs_deadline_met: rec.jobs_deadline_met,
+            jobs_deadline_missed: rec.jobs_deadline_missed,
+            per_tenant: rec.tenants.clone(),
             ttft_violations: rec.ttft_violation_rate(Class::Online, 1500.0),
             online_timeseries: rec.timeseries(Some(Class::Online), 15 * US_PER_SEC, dur),
             all_timeseries: rec.timeseries(None, 15 * US_PER_SEC, dur),
@@ -179,6 +199,16 @@ impl Report {
             ("blocking_swap_ms", num(self.blocking_swap_ms)),
             ("steals_out", num(self.steals_out as f64)),
             ("steals_in", num(self.steals_in as f64)),
+            ("deadline_met", num(self.deadline_met as f64)),
+            ("deadline_missed", num(self.deadline_missed as f64)),
+            ("deadline_attainment", num(self.deadline_attainment)),
+            ("jobs_completed", num(self.jobs_completed as f64)),
+            ("jobs_deadline_met", num(self.jobs_deadline_met as f64)),
+            ("jobs_deadline_missed", num(self.jobs_deadline_missed as f64)),
+            (
+                "per_tenant",
+                arr(self.per_tenant.iter().map(TenantCounters::to_json)),
+            ),
             ("ttft_violation_rate", num(self.ttft_violations)),
             (
                 "online_timeseries",

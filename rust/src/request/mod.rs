@@ -9,6 +9,7 @@
 
 pub mod arena;
 
+use crate::util::json::{arr, num, obj, Json};
 use crate::TimeUs;
 
 pub use arena::RequestArena;
@@ -76,6 +77,12 @@ pub fn rid_pack_sharded(shard: usize, slot: usize, generation: u32) -> RequestId
 }
 
 pub type TokenId = u16; // byte-level vocab (256) fits easily
+
+/// Top of the EDF urgency scale carried by [`Request::urgency`]: a job
+/// whose estimated remaining work consumes its whole deadline slack (or
+/// that is already late) scores `URGENCY_MAX`; a job with no deadline
+/// scores 0. See [`crate::batch::JobManager`] for the formula.
+pub const URGENCY_MAX: u32 = 1000;
 
 /// Priority class. Ordering: Online > Offline.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -169,6 +176,32 @@ pub struct Request {
     /// token streams reproducible regardless of which shard (or chunking)
     /// serves the request.
     pub sampler_state: u64,
+
+    // ---- batch-job identity (crate::batch; all zero for standalone
+    // requests, stamped by the JobManager on admission) ----
+    /// Owning batch job (0 = not part of a job).
+    pub job: u64,
+    /// Tenant the owning job bills to (0 = default tenant).
+    pub tenant: u32,
+    /// EDF-style urgency score in `0..=batch::URGENCY_MAX`, derived from
+    /// the job's deadline slack and remaining work at admission. 0 means
+    /// no deadline pressure; the fair-share offline pick order and the
+    /// steal donor's victim ordering both serve higher urgency first.
+    pub urgency: u32,
+    /// Weighted fair-share weight of the owning tenant (from the job's
+    /// priority tier; 1 = baseline). First admission charges
+    /// `total_len * 16 / fair_weight` to the tenant's served account.
+    pub fair_weight: u32,
+    /// Soft deadline for this request's job (µs timestamp, 0 = none) —
+    /// finishing later is allowed but counted as a deadline miss.
+    pub deadline: TimeUs,
+    /// Scheduler-local flag: this request's footprint has been charged
+    /// to its tenant's fair-share account *in the current scheduler*.
+    /// Deliberately not portable (resets on migration and durable-store
+    /// resume): each shard/process keeps its own accounts, so a request
+    /// entering a new account domain must be charged there — while a
+    /// locally preempted request re-admitting must not pay twice.
+    pub fair_charged: bool,
 }
 
 impl Request {
@@ -201,6 +234,12 @@ impl Request {
             preemptions: 0,
             recomputed_tokens: 0,
             sampler_state: crate::util::rng::mix64(id ^ 0x5EED_C0DE),
+            job: 0,
+            tenant: 0,
+            urgency: 0,
+            fair_weight: 1,
+            deadline: 0,
+            fair_charged: false,
         }
     }
 
@@ -312,6 +351,13 @@ pub struct PortableRequest {
     pub last_token_at: Option<TimeUs>,
     /// Per-request sampler key seed (see [`Request::sampler_state`]).
     pub sampler_state: u64,
+    /// Batch-job identity (see the corresponding [`Request`] fields);
+    /// travels with the request across shards and process restarts.
+    pub job: u64,
+    pub tenant: u32,
+    pub urgency: u32,
+    pub fair_weight: u32,
+    pub deadline: TimeUs,
 }
 
 impl PortableRequest {
@@ -338,7 +384,30 @@ impl PortableRequest {
             first_token_at: r.first_token_at,
             last_token_at: r.last_token_at,
             sampler_state: r.sampler_state,
+            job: r.job,
+            tenant: r.tenant,
+            urgency: r.urgency,
+            fair_weight: r.fair_weight,
+            deadline: r.deadline,
         }
+    }
+
+    /// Snapshot a live request as a *cold* portable (no KV travels): the
+    /// durable-store checkpoint form ([`crate::batch::JobStore`]). Host
+    /// checkpoints are process-lifetime state, so a crash/restart resume
+    /// always recomputes prefill — the token stream is still exact
+    /// because sampling is keyed by `(sampler_state, position)`.
+    pub fn snapshot_cold(r: &Request) -> Self {
+        // the committed context is forfeited by the snapshot without a
+        // recompute charge — the resume run accounts its own recompute
+        Self::detach(
+            Request {
+                ctx_len: 0,
+                ckpt_len: 0,
+                ..r.clone()
+            },
+            0,
+        )
     }
 
     /// Rebuild an insertable [`Request`] on the target shard. The id is
@@ -359,6 +428,11 @@ impl PortableRequest {
         );
         r.submitted_id = self.submitted_id;
         r.sampler_state = self.sampler_state;
+        r.job = self.job;
+        r.tenant = self.tenant;
+        r.urgency = self.urgency;
+        r.fair_weight = self.fair_weight;
+        r.deadline = self.deadline;
         r.output = self.output;
         r.generated = self.generated;
         r.ctx_len = ckpt;
@@ -374,6 +448,127 @@ impl PortableRequest {
             KvResidence::Gpu
         };
         r
+    }
+
+    /// Serialize for the durable job store (one JSONL line). Exhaustive:
+    /// every field round-trips, so a resumed request is indistinguishable
+    /// from the in-memory original (see `from_json`).
+    pub fn to_json(&self) -> Json {
+        // sid and sampler_state are full 64-bit values (tickets set bit
+        // 63; sampler states are mix64 outputs): JSON numbers are f64
+        // and would silently round above 2^53, so both go as decimal
+        // strings to keep resume byte-exact.
+        obj(vec![
+            ("sid", Json::Str(self.submitted_id.to_string())),
+            (
+                "class",
+                Json::Str(
+                    match self.class {
+                        Class::Online => "online",
+                        Class::Offline => "offline",
+                    }
+                    .to_string(),
+                ),
+            ),
+            ("prompt", tok_arr(&self.prompt)),
+            ("prompt_len", num(self.prompt_len as f64)),
+            ("max_new", num(self.max_new_tokens as f64)),
+            ("arrival", num(self.arrival as f64)),
+            ("output", tok_arr(&self.output)),
+            ("generated", num(self.generated as f64)),
+            ("ckpt_tokens", num(self.ckpt_tokens as f64)),
+            ("preemptions", num(self.preemptions as f64)),
+            ("recomputed", num(self.recomputed_tokens as f64)),
+            ("first_token_at", opt_num(self.first_token_at)),
+            ("last_token_at", opt_num(self.last_token_at)),
+            ("sampler_state", Json::Str(self.sampler_state.to_string())),
+            ("job", num(self.job as f64)),
+            ("tenant", num(self.tenant as f64)),
+            ("urgency", num(self.urgency as f64)),
+            ("fair_weight", num(self.fair_weight as f64)),
+            ("deadline", num(self.deadline as f64)),
+        ])
+    }
+
+    /// Parse a store line back into a portable request. Checkpoints
+    /// written by [`snapshot_cold`](Self::snapshot_cold) always carry
+    /// `ckpt_tokens == 0`; a nonzero value from a hand-edited store is
+    /// clamped to 0 (host KV never survives the process).
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        const WHAT: &str = "portable request";
+        let f = |k: &str| json_f64(j, WHAT, k);
+        let class = match j.get("class").and_then(Json::as_str) {
+            Some("online") => Class::Online,
+            Some("offline") => Class::Offline,
+            other => anyhow::bail!("portable request: bad class {other:?}"),
+        };
+        Ok(Self {
+            submitted_id: json_u64_str(j, WHAT, "sid")?,
+            class,
+            prompt: tok_vec(j.get("prompt"), WHAT)?,
+            prompt_len: f("prompt_len")? as usize,
+            max_new_tokens: f("max_new")? as usize,
+            arrival: f("arrival")? as TimeUs,
+            output: tok_vec(j.get("output"), WHAT)?,
+            generated: f("generated")? as usize,
+            ckpt_tokens: 0,
+            preemptions: f("preemptions")? as u32,
+            recomputed_tokens: f("recomputed")? as usize,
+            first_token_at: j.get("first_token_at").and_then(Json::as_f64).map(|v| v as TimeUs),
+            last_token_at: j.get("last_token_at").and_then(Json::as_f64).map(|v| v as TimeUs),
+            sampler_state: json_u64_str(j, WHAT, "sampler_state")?,
+            job: f("job")? as u64,
+            tenant: f("tenant")? as u32,
+            urgency: f("urgency")? as u32,
+            fair_weight: f("fair_weight")? as u32,
+            deadline: f("deadline")? as TimeUs,
+        })
+    }
+}
+
+/// Shared serde helpers for the request/store JSONL surface (`what`
+/// names the record kind in error messages) — the durable job store
+/// ([`crate::batch::store`]) parses with these same functions, so the
+/// two surfaces cannot drift.
+pub(crate) fn tok_arr(toks: &[TokenId]) -> Json {
+    arr(toks.iter().map(|&t| num(t as f64)))
+}
+
+pub(crate) fn tok_vec(j: Option<&Json>, what: &str) -> anyhow::Result<Vec<TokenId>> {
+    match j {
+        Some(Json::Arr(a)) => a
+            .iter()
+            .map(|v| {
+                v.as_f64()
+                    .map(|n| n as TokenId)
+                    .ok_or_else(|| anyhow::anyhow!("{what}: non-numeric token"))
+            })
+            .collect(),
+        _ => anyhow::bail!("{what}: missing token array"),
+    }
+}
+
+/// Required numeric field.
+pub(crate) fn json_f64(j: &Json, what: &str, k: &str) -> anyhow::Result<f64> {
+    j.get(k)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow::anyhow!("{what}: missing field `{k}`"))
+}
+
+/// Required full-width u64 field, stored as a decimal string (JSON
+/// numbers are f64 and would round above 2^53).
+pub(crate) fn json_u64_str(j: &Json, what: &str, k: &str) -> anyhow::Result<u64> {
+    j.get(k)
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow::anyhow!("{what}: missing field `{k}`"))?
+        .parse()
+        .map_err(|e| anyhow::anyhow!("{what}: bad u64 `{k}`: {e}"))
+}
+
+fn opt_num(v: Option<TimeUs>) -> Json {
+    match v {
+        Some(t) => num(t as f64),
+        None => Json::Null,
     }
 }
 
@@ -514,6 +709,55 @@ mod tests {
         assert_eq!(back.ctx_len, 0);
         assert_eq!(back.remaining_feed(), 103);
         assert_eq!(back.phase(), Phase::Prefill);
+    }
+
+    #[test]
+    fn portable_json_round_trip_is_lossless() {
+        let mut r = Request::new(0x8000_0000_0000_002A, Class::Offline, vec![5, 6, 7], 3, 9, 123);
+        r.output = vec![1, 2];
+        r.generated = 2;
+        r.preemptions = 1;
+        r.first_token_at = Some(777);
+        r.job = 3;
+        r.tenant = 4;
+        r.urgency = 800;
+        r.fair_weight = 2;
+        r.deadline = 999_999;
+        let p = PortableRequest::snapshot_cold(&r);
+        let line = p.to_json().to_string();
+        let back = PortableRequest::from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(back.submitted_id, p.submitted_id, "ticket-bit sid survives");
+        assert_eq!(back.sampler_state, p.sampler_state, "full 64-bit state survives");
+        assert_eq!(back.prompt, p.prompt);
+        assert_eq!(back.output, p.output);
+        assert_eq!(back.generated, 2);
+        assert_eq!(back.ckpt_tokens, 0, "store checkpoints are always cold");
+        assert_eq!(back.first_token_at, Some(777));
+        assert_eq!(back.last_token_at, None);
+        assert_eq!(
+            (back.job, back.tenant, back.urgency, back.fair_weight, back.deadline),
+            (3, 4, 800, 2, 999_999)
+        );
+        // a resumed request regenerates the same keyed token stream
+        let resumed = back.into_request();
+        assert_eq!(resumed.sampler_state, r.sampler_state);
+        assert_eq!(resumed.remaining_feed(), 3 + 2, "cold resume recomputes prefill");
+    }
+
+    #[test]
+    fn snapshot_cold_drops_kv_but_keeps_progress() {
+        let mut r = Request::new(11, Class::Offline, vec![], 64, 8, 0);
+        r.ctx_len = 40;
+        r.ckpt_len = 32;
+        r.generated = 3;
+        let p = PortableRequest::snapshot_cold(&r);
+        assert_eq!(p.ckpt_tokens, 0);
+        assert_eq!(p.generated, 3);
+        assert_eq!(p.recomputed_tokens, 0, "snapshot itself charges no recompute");
+        let back = p.into_request();
+        assert_eq!(back.ctx_len, 0);
+        assert_eq!(back.generated, 3);
+        assert_eq!(back.residence, KvResidence::Gpu);
     }
 
     #[test]

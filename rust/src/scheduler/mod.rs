@@ -148,6 +148,13 @@ pub struct UnifiedScheduler {
     /// load board ([`crate::shard::ShardLoads`]) for placement; costs
     /// nothing extra — the admission pass computes it anyway.
     reserved_online: usize,
+    /// Weighted per-tenant served account (job-aware fair share,
+    /// [`SchedConfig::fair_share`]): admission of a job request charges
+    /// `total_len * 16 / fair_weight` to its tenant, and the offline
+    /// pick order prefers the lowest account among equal urgencies, so
+    /// one tenant's mega-job cannot starve the others. A short linear
+    /// list — deployments see a handful of tenants per shard.
+    tenant_served: Vec<(u32, u64)>,
     // ---- persistent scratch (capacity reused across iterations) ----
     /// Running set sorted for this iteration's passes.
     scratch_order: Vec<RequestId>,
@@ -177,6 +184,7 @@ impl UnifiedScheduler {
             offline_q: VecDeque::new(),
             running: Vec::new(),
             reserved_online: 0,
+            tenant_served: Vec::new(),
             scratch_order: Vec::new(),
             scratch_cont: Vec::new(),
             scratch_deferred: Vec::new(),
@@ -255,6 +263,60 @@ impl UnifiedScheduler {
     /// (snapshot from the last scheduling step; see the field docs).
     pub fn reserved_online_blocks(&self) -> usize {
         self.reserved_online
+    }
+
+    /// Weighted tokens already served to `tenant` (fair-share account).
+    fn tenant_deficit(&self, tenant: u32) -> u64 {
+        self.tenant_served
+            .iter()
+            .find(|&&(t, _)| t == tenant)
+            .map_or(0, |&(_, v)| v)
+    }
+
+    fn charge_tenant(&mut self, tenant: u32, weighted: u64) {
+        match self.tenant_served.iter_mut().find(|(t, _)| *t == tenant) {
+            Some((_, v)) => *v = v.saturating_add(weighted),
+            None => {
+                // a tenant first seen now joins at the current floor,
+                // not at zero: accounts are lifetime totals, and a
+                // zero-initialized newcomer would out-rank established
+                // tenants on every admission until it had "caught up"
+                // with their entire history — the exact starvation this
+                // mechanism exists to prevent, inverted
+                let floor = self
+                    .tenant_served
+                    .iter()
+                    .map(|&(_, v)| v)
+                    .min()
+                    .unwrap_or(0);
+                self.tenant_served
+                    .push((tenant, floor.saturating_add(weighted)));
+            }
+        }
+    }
+
+    /// Job-aware offline pick: the queue index to admit next, by
+    /// (urgency desc, weighted tenant deficit asc, FIFO). O(queue) per
+    /// admission — admissions are rare relative to scheduling iterations
+    /// and the scan allocates nothing; an indexed priority structure is
+    /// a future rung if deep multi-tenant backlogs make this shards'
+    /// bottleneck.
+    fn pick_offline_index(&self, table: &RequestArena) -> usize {
+        let mut best = 0usize;
+        let mut best_key: Option<(std::cmp::Reverse<u32>, u64, usize)> = None;
+        for (i, &id) in self.offline_q.iter().enumerate() {
+            let Some(r) = table.get(id) else { continue };
+            let key = (
+                std::cmp::Reverse(r.urgency),
+                self.tenant_deficit(r.tenant),
+                i,
+            );
+            if best_key.is_none_or(|b| key < b) {
+                best = i;
+                best_key = Some(key);
+            }
+        }
+        best
     }
 
     pub fn has_work(&self, table: &RequestArena) -> bool {
@@ -580,14 +642,22 @@ impl UnifiedScheduler {
             const MAX_HEAD_SKIPS: usize = 4;
             let mut deferred = std::mem::take(&mut self.scratch_deferred);
             deferred.clear();
-            while let Some(&id) = self.offline_q.front() {
-                if items.len() >= self.cfg.max_batch_reqs
+            loop {
+                if self.offline_q.is_empty()
+                    || items.len() >= self.cfg.max_batch_reqs
                     || tokens_used >= self.cfg.max_batch_tokens
                     || est_us + coef[1] > offline_budget_us
                 {
                     break;
                 }
-                self.offline_q.pop_front();
+                // job-aware mode picks by (urgency, tenant fair share)
+                // instead of the queue head; plain FIFO otherwise
+                let id = if self.cfg.fair_share {
+                    let i = self.pick_offline_index(c.table);
+                    self.offline_q.remove(i).unwrap()
+                } else {
+                    self.offline_q.pop_front().unwrap()
+                };
                 let victim_this_round = out.evicted.contains(&id)
                     || out.discarded.contains(&id)
                     || out.swapped_out.contains(&id);
@@ -615,6 +685,24 @@ impl UnifiedScheduler {
                     // Either way it moves to the running set (a request is
                     // never in the queue and the running set at once) and
                     // is visible to victim selection / continuing passes.
+                    if self.cfg.fair_share && res == Admit::Planned {
+                        // charge the full expected footprint once per
+                        // account domain, at first admission (starvation
+                        // happens at admission granularity, not per
+                        // chunk). The flag is scheduler-local and does
+                        // not travel: a locally preempted request
+                        // re-admitting never pays twice, while a
+                        // migrated or resumed request pays in its new
+                        // shard's/process's fresh accounts.
+                        let r = c.table.get_mut(id).unwrap();
+                        if r.job != 0 && !r.fair_charged {
+                            r.fair_charged = true;
+                            let w = (r.total_len() as u64 * 16)
+                                / u64::from(r.fair_weight.max(1));
+                            let tenant = r.tenant;
+                            self.charge_tenant(tenant, w);
+                        }
+                    }
                     let r = c.table.get_mut(id).unwrap();
                     r.state = State::Running;
                     if !self.running.contains(&id) {
@@ -1185,6 +1273,69 @@ mod tests {
         let rev: Vec<_> = s.offline_queue_rev().collect();
         assert_eq!(rev, vec![c, a]);
         assert_eq!(s.offline_waiting(), 2);
+    }
+
+    #[test]
+    fn fair_share_prefers_urgent_then_starved_tenant() {
+        let (mut s, mut table, mut kv) = setup(Policy::ConServe);
+        s.cfg.fair_share = true;
+        // tenant 1 floods the queue first (a mega-job); tenant 2 submits
+        // one urgent request behind it
+        for _ in 0..6 {
+            let id = add(&mut table, Class::Offline, 2048, 128);
+            let r = table.get_mut(id).unwrap();
+            r.job = 1;
+            r.tenant = 1;
+            r.urgency = 0;
+            s.enqueue(id, Class::Offline);
+        }
+        let tight = add(&mut table, Class::Offline, 256, 32);
+        {
+            let r = table.get_mut(tight).unwrap();
+            r.job = 2;
+            r.tenant = 2;
+            r.urgency = 900;
+        }
+        s.enqueue(tight, Class::Offline);
+        let out = sched_once(&mut s, &mut table, &mut kv, 4096);
+        let first_offline = out
+            .plan
+            .items
+            .iter()
+            .find(|i| i.class == Class::Offline)
+            .expect("offline admitted");
+        assert_eq!(first_offline.req, tight, "urgent request jumps the mega-job");
+    }
+
+    #[test]
+    fn fair_share_balances_equal_urgency_tenants() {
+        let (mut s, mut table, _kv) = setup(Policy::ConServe);
+        s.cfg.fair_share = true;
+        let mk = |table: &mut RequestArena, tenant: u32| {
+            let id = add(table, Class::Offline, 512, 64);
+            let r = table.get_mut(id).unwrap();
+            r.job = u64::from(tenant);
+            r.tenant = tenant;
+            id
+        };
+        // queue: two of tenant 1, then one of tenant 2
+        let a1 = mk(&mut table, 1);
+        let a2 = mk(&mut table, 1);
+        let b1 = mk(&mut table, 2);
+        for id in [a1, a2, b1] {
+            s.enqueue(id, Class::Offline);
+        }
+        // tenant 1 already consumed an admission's worth of service
+        s.charge_tenant(1, 512 * 16);
+        assert_eq!(s.pick_offline_index(&table), 2, "starved tenant 2 first");
+        // a first-seen tenant joins at the current floor (tenant 1's
+        // account), so its total = floor + its own charge — lifetime
+        // totals never let a newcomer out-rank everyone indefinitely
+        s.charge_tenant(2, 512 * 16 * 2);
+        assert_eq!(s.pick_offline_index(&table), 0, "FIFO among the rest");
+        assert_eq!(s.tenant_deficit(1), 512 * 16);
+        assert_eq!(s.tenant_deficit(2), 512 * 16 + 512 * 16 * 2);
+        assert_eq!(s.tenant_deficit(3), 0);
     }
 
     #[test]

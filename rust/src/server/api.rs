@@ -9,6 +9,7 @@
 //!   polls between iterations and at safepoints, which is exactly where
 //!   the paper's async arrival handler fires.
 
+use crate::batch::{JobBoard, JobProgress};
 use crate::request::{Class, Request, RequestId, TokenId};
 use crate::TimeUs;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -43,9 +44,22 @@ impl ArrivalSource {
     /// tickets stay globally unique across shards (see
     /// [`sharded_channel`](crate::shard::sharded_channel)).
     pub fn channel_shared(next_id: Arc<AtomicU64>) -> (EngineClient, Self) {
+        Self::channel_with_board(next_id, Arc::new(JobBoard::new()))
+    }
+
+    /// Channel source with an explicit shared [`JobBoard`]: sharded
+    /// frontends pass one board to every shard's client so a batch job
+    /// spanning shards still reports unified progress. Attach the same
+    /// board to each engine
+    /// ([`ServingEngine::set_job_board`](super::ServingEngine::set_job_board))
+    /// or batch progress will never advance.
+    pub fn channel_with_board(
+        next_id: Arc<AtomicU64>,
+        jobs: Arc<JobBoard>,
+    ) -> (EngineClient, Self) {
         let (tx, rx) = channel();
         (
-            EngineClient { tx, next_id },
+            EngineClient { tx, next_id, jobs },
             ArrivalSource::Channel {
                 rx,
                 peeked: None,
@@ -152,21 +166,81 @@ pub const CLIENT_TICKET_BIT: u64 = 1 << 63;
 pub struct EngineClient {
     tx: Sender<Request>,
     next_id: Arc<AtomicU64>,
+    /// Batch-job progress board shared with the serving engine(s); see
+    /// [`BatchHandle`].
+    jobs: Arc<JobBoard>,
+}
+
+/// Handle to a submitted batch job: the per-request tickets plus a
+/// poll-able progress snapshot — the status surface `submit_batch` used
+/// to lack. Progress advances when the engine(s) serving this client
+/// share its [`JobBoard`]
+/// ([`ServingEngine::set_job_board`](super::ServingEngine::set_job_board));
+/// callers throttle on it instead of firing and forgetting:
+/// `while !h.progress().done() { ... }`. The handle owns its progress
+/// cell, so it stays valid even after the board garbage-collects the
+/// completed job ([`JobBoard::gc_completed`]).
+#[derive(Clone)]
+pub struct BatchHandle {
+    /// Job id under which the members were stamped (the engine-side
+    /// correlation key, [`Request::job`]).
+    pub job: u64,
+    /// Submission tickets, one per member, in submission order.
+    pub tickets: Vec<RequestId>,
+    cell: Arc<crate::batch::JobCell>,
+}
+
+impl BatchHandle {
+    pub fn len(&self) -> usize {
+        self.tickets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tickets.is_empty()
+    }
+
+    pub fn ids(&self) -> &[RequestId] {
+        &self.tickets
+    }
+
+    /// Poll the job's progress (total / finished / generated tokens /
+    /// completion). Lock-free: a few relaxed atomic loads on the
+    /// handle-owned cell.
+    pub fn progress(&self) -> JobProgress {
+        self.cell.snapshot()
+    }
+
+    /// All members finished?
+    pub fn done(&self) -> bool {
+        self.progress().done()
+    }
 }
 
 impl EngineClient {
-    fn submit(
+    fn submit_stamped(
         &self,
         class: Class,
         prompt: Vec<TokenId>,
         max_new_tokens: usize,
+        stamp: impl FnOnce(&mut Request),
     ) -> RequestId {
         let id = CLIENT_TICKET_BIT | self.next_id.fetch_add(1, Ordering::Relaxed);
         let len = prompt.len();
         // arrival == 0 => stamped by the engine on receipt
-        let req = Request::new(id, class, prompt, len, max_new_tokens, 0);
+        let mut req = Request::new(id, class, prompt, len, max_new_tokens, 0);
+        stamp(&mut req);
         let _ = self.tx.send(req);
         id
+    }
+
+    fn submit(&self, class: Class, prompt: Vec<TokenId>, max_new_tokens: usize) -> RequestId {
+        self.submit_stamped(class, prompt, max_new_tokens, |_| {})
+    }
+
+    /// The job-progress board this client registers batches on. Attach
+    /// a clone to every engine serving this client's requests.
+    pub fn job_board(&self) -> &Arc<JobBoard> {
+        &self.jobs
     }
 
     /// Real-time streaming API: one latency-critical request.
@@ -180,15 +254,79 @@ impl EngineClient {
         self.submit(Class::Offline, prompt, max_new_tokens)
     }
 
-    /// Batch API: a pool of best-effort requests (returns their ids).
-    pub fn submit_batch(
+    /// Batch API: a pool of best-effort requests under one anonymous
+    /// job (default tenant, no deadline). Returns a [`BatchHandle`]
+    /// whose progress the serving engine advances.
+    ///
+    /// Every batch registers one board cell. Wire the board to the
+    /// serving engine(s) (`engine.set_job_board(client.job_board()
+    /// .clone())`) or progress never advances and the cell can never
+    /// complete; a long-lived submitter that does not wire (or that
+    /// abandons batches) should bound the board with
+    /// `job_board().retire(handle.job)` /
+    /// [`gc_completed`](JobBoard::gc_completed).
+    pub fn submit_batch(&self, prompts: Vec<(Vec<TokenId>, usize)>) -> BatchHandle {
+        self.submit_job(prompts, 0, 0, 0)
+    }
+
+    /// Batch API with job identity: `tenant`, `urgency` (EDF score, see
+    /// [`crate::batch::urgency_score`]) and a soft `deadline` (µs
+    /// timestamp, 0 = none) stamp every member, feeding the fair-share
+    /// pick order and urgency-aware stealing on the serving side.
+    pub fn submit_job(
         &self,
         prompts: Vec<(Vec<TokenId>, usize)>,
-    ) -> Vec<RequestId> {
-        prompts
+        tenant: u32,
+        urgency: u32,
+        deadline: TimeUs,
+    ) -> BatchHandle {
+        let job = self.register_job(prompts.len() as u64, tenant, deadline);
+        let tickets = prompts
             .into_iter()
-            .map(|(p, n)| self.submit(Class::Offline, p, n))
-            .collect()
+            .map(|(p, n)| self.submit_job_member(job, tenant, urgency, deadline, p, n))
+            .collect();
+        self.handle(job, tickets)
+    }
+
+    /// Allocate + register a job on this client's board. Job ids share
+    /// the ticket counter: unique against every other job from any
+    /// clone (the ticket bit stays clear — jobs are not request ids).
+    /// Sharded frontends register once here, then place members shard
+    /// by shard with [`submit_job_member`](Self::submit_job_member).
+    pub(crate) fn register_job(&self, total: u64, tenant: u32, deadline: TimeUs) -> u64 {
+        let job = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.jobs.register(job, total, deadline, tenant);
+        job
+    }
+
+    /// Submit one member of an already-registered job.
+    pub(crate) fn submit_job_member(
+        &self,
+        job: u64,
+        tenant: u32,
+        urgency: u32,
+        deadline: TimeUs,
+        prompt: Vec<TokenId>,
+        max_new_tokens: usize,
+    ) -> RequestId {
+        self.submit_stamped(Class::Offline, prompt, max_new_tokens, |r| {
+            r.job = job;
+            r.tenant = tenant;
+            r.urgency = urgency;
+            r.deadline = deadline;
+        })
+    }
+
+    /// Build a handle over this client's board for a registered job.
+    pub(crate) fn handle(&self, job: u64, tickets: Vec<RequestId>) -> BatchHandle {
+        BatchHandle {
+            job,
+            tickets,
+            cell: self
+                .jobs
+                .cell(job)
+                .expect("handle() is only called for jobs registered on this board"),
+        }
     }
 }
 
@@ -226,6 +364,47 @@ mod tests {
         drop(client);
         let _ = src.poll(778);
         assert!(src.exhausted());
+    }
+
+    #[test]
+    fn batch_handle_polls_progress() {
+        let (client, mut src) = ArrivalSource::channel();
+        let h = client.submit_batch(vec![(vec![1], 2), (vec![2], 3)]);
+        assert_eq!(h.len(), 2);
+        assert!(!h.done());
+        let p = h.progress();
+        assert_eq!((p.total, p.finished), (2, 0));
+        // members arrive stamped with the job id
+        let got = src.poll(5);
+        assert_eq!(got.len(), 2);
+        assert!(got.iter().all(|r| r.job == h.job && r.class == Class::Offline));
+        // engine-side completion notifications drive the handle
+        assert!(client.job_board().note_finished(h.job, 2, 10).is_none());
+        assert!(client.job_board().note_finished(h.job, 3, 11).is_some());
+        assert!(h.done());
+        assert_eq!(h.progress().met_deadline(), None, "deadline-free job");
+        // the handle owns its cell: board gc does not invalidate it
+        assert_eq!(client.job_board().gc_completed(), 1);
+        assert!(h.done());
+        assert_eq!(h.progress().gen_tokens, 5);
+    }
+
+    #[test]
+    fn submit_job_stamps_identity() {
+        let (client, mut src) = ArrivalSource::channel();
+        let h = client.submit_job(vec![(vec![1], 2)], 7, 500, 123_456);
+        let got = src.poll(1);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].tenant, 7);
+        assert_eq!(got[0].urgency, 500);
+        assert_eq!(got[0].deadline, 123_456);
+        assert_eq!(got[0].job, h.job);
+        // job ids live outside the ticket namespace; tickets stay in it
+        assert_eq!(h.job & CLIENT_TICKET_BIT, 0);
+        assert!(h.tickets.iter().all(|&t| t & CLIENT_TICKET_BIT != 0));
+        // a second batch from a clone gets a distinct job id
+        let h2 = client.clone().submit_batch(vec![(vec![3], 1)]);
+        assert_ne!(h.job, h2.job);
     }
 
     #[test]

@@ -31,6 +31,7 @@
 pub mod api;
 
 use crate::backend::{ExecBackend, ExecOutcome, IterationPlan, PlanSummary, SafepointAction};
+use crate::batch::JobBoard;
 use crate::clock::Clock;
 use crate::config::EngineConfig;
 use crate::kvcache::{BlockId, CkptController, Direction, KvManager, SwapEngine, SwapOp};
@@ -43,7 +44,7 @@ use crate::shard::ShardLoads;
 use crate::TimeUs;
 use std::sync::Arc;
 
-pub use api::{ArrivalSource, EngineClient};
+pub use api::{ArrivalSource, BatchHandle, EngineClient};
 
 /// Per-token observer (streaming API sink).
 pub type TokenCallback = Box<dyn FnMut(RequestId, TokenId, TimeUs)>;
@@ -96,6 +97,16 @@ pub struct ServingEngine<B: ExecBackend> {
     /// within the per-iteration budget, post hunger (see
     /// [`crate::shard::steal`]).
     steal: Option<Arc<StealCoordinator>>,
+    /// Shared batch-job progress board ([`crate::batch`]): when set, the
+    /// commit path notifies it once per finished job-tagged request (the
+    /// poll-able surface behind [`api::BatchHandle`] and the job
+    /// manager's deadline attainment).
+    job_board: Option<Arc<JobBoard>>,
+    /// Decaying recent-thief counter (1/16ths): +16 per adopted steal,
+    /// x7/8 per load publish. Published as
+    /// [`LoadSnapshot::steal_score`](crate::shard::placement::LoadSnapshot::steal_score)
+    /// so placement can bias fresh offline work toward recent thieves.
+    steal_heat: u64,
     // ---- persistent scratch (reused every iteration) ----
     io_scratch: Vec<SwapOp>,
     ids_scratch: Vec<RequestId>,
@@ -157,6 +168,8 @@ impl<B: ExecBackend> ServingEngine<B> {
             prefetch_watch: Vec::new(),
             loads: None,
             steal: None,
+            job_board: None,
+            steal_heat: 0,
             io_scratch: Vec::new(),
             ids_scratch: Vec::new(),
             blk_scratch: Vec::new(),
@@ -186,6 +199,17 @@ impl<B: ExecBackend> ServingEngine<B> {
     /// iteration.
     pub fn set_steal_coordinator(&mut self, steal: Arc<StealCoordinator>) {
         self.steal = Some(steal);
+    }
+
+    /// Attach a batch-job progress board ([`crate::batch::JobBoard`]).
+    /// The commit path then notifies it for every finished request with
+    /// a nonzero [`Request::job`](crate::request::Request::job), which
+    /// drives poll-able [`api::BatchHandle`] progress and job-level
+    /// deadline attainment. For the live channel path, attach the
+    /// board the [`EngineClient`] carries:
+    /// `engine.set_job_board(client.job_board().clone())`.
+    pub fn set_job_board(&mut self, board: Arc<JobBoard>) {
+        self.job_board = Some(board);
     }
 
     /// True when this engine has no admitted work left and its arrival
@@ -284,7 +308,11 @@ impl<B: ExecBackend> ServingEngine<B> {
                     self.sched.reserved_online_blocks() as u64,
                     (self.sched.online_waiting() + self.sched.offline_waiting()) as u64,
                     self.sched.offline_waiting() as u64,
+                    self.steal_heat,
                 );
+                // decay the recent-thief signal once per publish (x7/8
+                // reaches zero, unlike h - h/8 which floors at 1)
+                self.steal_heat = self.steal_heat * 7 / 8;
             }
 
             self.apply_victims(&out, now);
@@ -450,6 +478,8 @@ impl<B: ExecBackend> ServingEngine<B> {
                 }
                 r.last_token_at = Some(now);
                 let done = r.is_done();
+                let (job, tenant, deadline, gen) =
+                    (r.job, r.tenant, r.deadline, r.generated as u64);
                 if done {
                     r.state = State::Finished;
                     r.finished_at = Some(now);
@@ -459,11 +489,52 @@ impl<B: ExecBackend> ServingEngine<B> {
                 }
                 if done {
                     self.rec.record_finished(class);
+                    if job != 0 || deadline > 0 {
+                        self.note_job_finish(job, tenant, deadline, gen, now);
+                    }
                     self.kv.release(item.req, false);
                     self.backend.drop_request(item.req);
                     self.swap.drop_request(item.req);
                     if !self.retain_finished {
                         self.table.remove(item.req);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Deadline + job bookkeeping for one finished request (off the
+    /// token hot path — runs once per request completion). Per-request
+    /// deadline attainment and per-tenant counters land in the
+    /// [`Recorder`]; the shared [`JobBoard`] (if attached) learns the
+    /// completion and reports job-level attainment when the last request
+    /// of a job finishes.
+    fn note_job_finish(
+        &mut self,
+        job: u64,
+        tenant: u32,
+        deadline: TimeUs,
+        gen_tokens: u64,
+        now: TimeUs,
+    ) {
+        let met = if deadline > 0 { Some(now <= deadline) } else { None };
+        match met {
+            Some(true) => self.rec.deadline_met += 1,
+            Some(false) => self.rec.deadline_missed += 1,
+            None => {}
+        }
+        if job == 0 {
+            return;
+        }
+        self.rec.note_tenant_finished(tenant, gen_tokens, met);
+        if let Some(board) = &self.job_board {
+            if let Some(completed) = board.note_finished(job, gen_tokens, now) {
+                self.rec.jobs_completed += 1;
+                if completed.deadline > 0 {
+                    if completed.met {
+                        self.rec.jobs_deadline_met += 1;
+                    } else {
+                        self.rec.jobs_deadline_missed += 1;
                     }
                 }
             }
@@ -768,6 +839,11 @@ impl<B: ExecBackend> ServingEngine<B> {
     /// requests, half-restored prefetches, and sequences with in-flight
     /// I/O are never touched, so donating is always a host-side handoff
     /// with zero GPU cost.
+    /// Victims leave in urgency order: the donor over-collects (up to
+    /// 4x the budget) from the tail, then serves the highest-urgency
+    /// candidates first — an urgent deadline job stranded behind a
+    /// backlog is exactly the work that should reach an idle shard
+    /// soonest. Among equal urgencies the tail-first order is preserved.
     pub fn donate_victims(&mut self, max: usize, out: &mut Vec<MigratedRequest>) {
         if max == 0 {
             return;
@@ -775,7 +851,7 @@ impl<B: ExecBackend> ServingEngine<B> {
         let mut ids = std::mem::take(&mut self.ids_scratch);
         ids.clear();
         for id in self.sched.offline_queue_rev() {
-            if ids.len() >= max {
+            if ids.len() >= max.saturating_mul(4) {
                 break;
             }
             let Some(r) = self.table.get(id) else { continue };
@@ -798,6 +874,12 @@ impl<B: ExecBackend> ServingEngine<B> {
                 ids.push(id);
             }
         }
+        if ids.len() > 1 && ids.iter().any(|&id| self.table[id].urgency > 0) {
+            // stable: equal urgencies keep the tail-first harvest order
+            let table = &self.table;
+            ids.sort_by_key(|&id| std::cmp::Reverse(table[id].urgency));
+        }
+        ids.truncate(max);
         for &id in &ids {
             if !self.sched.remove_offline(id) {
                 continue;
@@ -869,6 +951,7 @@ impl<B: ExecBackend> ServingEngine<B> {
             }
             self.sched.enqueue(id, Class::Offline);
             self.rec.steals_in += 1;
+            self.steal_heat += 16;
         }
     }
 

@@ -38,6 +38,7 @@ pub mod placement;
 pub mod steal;
 
 use crate::backend::{CostModel, ExecBackend, SimBackend};
+use crate::batch::JobBoard;
 use crate::clock::Clock;
 use crate::config::EngineConfig;
 use crate::metrics::Recorder;
@@ -70,6 +71,10 @@ struct LoadCell {
     /// Offline backlog (queued offline requests) — the work-stealing
     /// imbalance signal.
     offline_waiting: AtomicU64,
+    /// Decaying recent-thief score (steal-aware placement; see
+    /// [`LoadSnapshot::steal_score`]): the engine bumps it by 16 per
+    /// adopted steal and decays it x7/8 per publish.
+    steal_score: AtomicU64,
     /// Bumped on every publish; lets submitters expire their optimistic
     /// in-flight charges once the engine has seen the queued arrivals.
     seq: AtomicU64,
@@ -93,7 +98,9 @@ impl ShardLoads {
     /// Publish shard `shard`'s current load (called by its engine once
     /// per iteration; relaxed stores, no synchronization).
     /// `offline_waiting` is the queued-offline share of `waiting` — the
-    /// backlog signal the steal coordinator balances.
+    /// backlog signal the steal coordinator balances — and
+    /// `steal_score` is the engine's decayed recent-thief counter
+    /// (steal-aware placement bias).
     pub fn publish(
         &self,
         shard: usize,
@@ -101,12 +108,14 @@ impl ShardLoads {
         online_blocks: u64,
         waiting: u64,
         offline_waiting: u64,
+        steal_score: u64,
     ) {
         let c = &self.cells[shard];
         c.resident.store(resident_blocks, Ordering::Relaxed);
         c.online.store(online_blocks, Ordering::Relaxed);
         c.waiting.store(waiting, Ordering::Relaxed);
         c.offline_waiting.store(offline_waiting, Ordering::Relaxed);
+        c.steal_score.store(steal_score, Ordering::Relaxed);
         c.seq.fetch_add(1, Ordering::Relaxed);
     }
 
@@ -126,6 +135,7 @@ impl ShardLoads {
             online_blocks: c.online.load(Ordering::Relaxed),
             waiting: c.waiting.load(Ordering::Relaxed),
             offline_waiting: c.offline_waiting.load(Ordering::Relaxed),
+            steal_score: c.steal_score.load(Ordering::Relaxed),
             capacity_blocks: self.capacity_blocks,
         }
     }
@@ -187,7 +197,9 @@ impl ShardRouter {
     /// to also bucket it.
     pub fn route(&mut self, req: &Request) -> usize {
         let need = req.total_len().div_ceil(self.block_tokens) as u64;
-        let s = self.policy.pick(req.class, need, &self.est, self.tick);
+        let s = self
+            .policy
+            .pick(req.class, need, req.urgency, &self.est, self.tick);
         self.tick += 1;
         let e = &mut self.est[s];
         e.resident_blocks += need;
@@ -324,6 +336,24 @@ pub fn run_sharded_traces(
     duration_s: f64,
     steal: Option<StealConfig>,
 ) -> ShardedRun {
+    run_sharded_traces_with(cfg, traces, duration_s, steal, |_| {}, |_| ()).0
+}
+
+/// Generic [`run_sharded_traces`]: `setup` runs on every shard's engine
+/// before serving (attach a job board, re-enable finished-request
+/// retention, switch on token synthesis, ...) and `collect` extracts a
+/// per-shard value after the shard drains but before its engine is torn
+/// down (harvest finished outputs, snapshot unfinished requests for a
+/// durable store). The batch-job driver ([`crate::batch::run_jobs`]) is
+/// the in-tree consumer; plain runs pass no-ops.
+pub fn run_sharded_traces_with<T: Send>(
+    cfg: &EngineConfig,
+    traces: Vec<Vec<Request>>,
+    duration_s: f64,
+    steal: Option<StealConfig>,
+    setup: impl Fn(&mut ServingEngine<SimBackend>) + Sync,
+    collect: impl Fn(&mut ServingEngine<SimBackend>) -> T + Sync,
+) -> (ShardedRun, Vec<T>) {
     let n_shards = traces.len();
     assert!(
         (1..=MAX_SHARDS).contains(&n_shards),
@@ -346,7 +376,9 @@ pub fn run_sharded_traces(
     let steal_co: Option<Arc<StealCoordinator>> =
         steal.map(|sc| Arc::new(StealCoordinator::new(sc, loads.clone())));
 
-    let results: Vec<(Recorder, TimeUs)> = std::thread::scope(|scope| {
+    let results: Vec<(Recorder, TimeUs, T)> = std::thread::scope(|scope| {
+        let setup = &setup;
+        let collect = &collect;
         let handles: Vec<_> = traces
             .into_iter()
             .enumerate()
@@ -362,6 +394,7 @@ pub fn run_sharded_traces(
                     let mut engine =
                         ServingEngine::for_shard(shard, cfg, backend, clock, profile, arrivals);
                     engine.set_retain_finished(false);
+                    setup(&mut engine);
                     let end = match &steal_co {
                         Some(st) => {
                             engine.set_shard_loads(loads);
@@ -374,7 +407,8 @@ pub fn run_sharded_traces(
                         engine.kv.check_conservation(),
                         "shard {shard}: KV conservation violated"
                     );
-                    (std::mem::take(&mut engine.rec), end)
+                    let extra = collect(&mut engine);
+                    (std::mem::take(&mut engine.rec), end, extra)
                 })
             })
             .collect();
@@ -386,25 +420,29 @@ pub fn run_sharded_traces(
 
     let makespan = results
         .iter()
-        .map(|&(_, end)| end.min(until))
+        .map(|&(_, end, _)| end.min(until))
         .max()
         .unwrap_or(1)
         .max(1);
     let per_shard: Vec<Report> = results
         .iter()
-        .map(|(rec, end)| Report::from_engine(rec, sched_policy, (*end).min(until).max(1)))
+        .map(|(rec, end, _)| Report::from_engine(rec, sched_policy, (*end).min(until).max(1)))
         .collect();
     let mut merged_rec = Recorder::new();
-    for (rec, _) in &results {
+    for (rec, _, _) in &results {
         merged_rec.merge(rec);
     }
     let merged = Report::from_engine(&merged_rec, sched_policy, makespan);
-    ShardedRun {
-        per_shard,
-        shard_requests,
-        merged,
-        makespan_s: makespan as f64 / US_PER_SEC as f64,
-    }
+    let extras = results.into_iter().map(|(_, _, e)| e).collect();
+    (
+        ShardedRun {
+            per_shard,
+            shard_requests,
+            merged,
+            makespan_s: makespan as f64 / US_PER_SEC as f64,
+        },
+        extras,
+    )
 }
 
 /// A submission ticket plus the shard it was routed to (results are
@@ -449,6 +487,13 @@ struct PendingCell {
     seq: AtomicU64,
     blocks: AtomicU64,
     online_blocks: AtomicU64,
+    /// Offline submissions since the shard's last publish — the
+    /// queue-depth complement of `blocks`. Without it, a multi-member
+    /// urgent job under [`Placement::Deadline`] would herd onto the one
+    /// shallow-queue shard (each member's footprint charge never
+    /// outweighs the 32-block-per-queued-request penalty the other
+    /// shards pay), building exactly the backlog the policy avoids.
+    offline: AtomicU64,
 }
 
 impl ShardedClient {
@@ -461,7 +506,21 @@ impl ShardedClient {
         self.clients.len()
     }
 
-    fn place(&self, class: Class, prompt_len: usize, max_new_tokens: usize) -> usize {
+    /// The per-shard submission client — entry-point routing (sticky
+    /// sessions, one tenant's dedicated ingress) that bypasses the
+    /// placement policy. The live work-stealing test drives a skewed
+    /// load through one shard's client this way.
+    pub fn client(&self, shard: usize) -> &EngineClient {
+        &self.clients[shard]
+    }
+
+    fn place(
+        &self,
+        class: Class,
+        prompt_len: usize,
+        max_new_tokens: usize,
+        urgency: u32,
+    ) -> usize {
         let need = (prompt_len + max_new_tokens).div_ceil(self.block_tokens) as u64;
         // submission path, off every engine's hot loop: a small snapshot
         // buffer per call is fine
@@ -475,38 +534,77 @@ impl ShardedClient {
                 // already covers what we had charged
                 cell.blocks.store(0, Ordering::Relaxed);
                 cell.online_blocks.store(0, Ordering::Relaxed);
+                cell.offline.store(0, Ordering::Relaxed);
             }
             snap.resident_blocks += cell.blocks.load(Ordering::Relaxed);
             snap.online_blocks += cell.online_blocks.load(Ordering::Relaxed);
+            snap.offline_waiting += cell.offline.load(Ordering::Relaxed);
         }
         let s = self
             .policy
-            .pick(class, need, &snaps, self.tick.fetch_add(1, Ordering::Relaxed));
+            .pick(class, need, urgency, &snaps, self.tick.fetch_add(1, Ordering::Relaxed));
         let cell = &self.pending[s];
         cell.blocks.fetch_add(need, Ordering::Relaxed);
-        if class == Class::Online {
-            cell.online_blocks.fetch_add(need, Ordering::Relaxed);
+        match class {
+            Class::Online => {
+                cell.online_blocks.fetch_add(need, Ordering::Relaxed);
+            }
+            Class::Offline => {
+                cell.offline.fetch_add(1, Ordering::Relaxed);
+            }
         }
         s
     }
 
     /// Route one latency-critical request to a shard.
     pub fn submit_online(&self, prompt: Vec<TokenId>, max_new_tokens: usize) -> ShardTicket {
-        let shard = self.place(Class::Online, prompt.len(), max_new_tokens);
+        let shard = self.place(Class::Online, prompt.len(), max_new_tokens, 0);
         let ticket = self.clients[shard].submit_online(prompt, max_new_tokens);
         ShardTicket { shard, ticket }
     }
 
-    /// Route a pool of best-effort requests, placing each independently.
-    pub fn submit_batch(&self, prompts: Vec<(Vec<TokenId>, usize)>) -> Vec<ShardTicket> {
-        prompts
+    /// Route a pool of best-effort requests as one anonymous job
+    /// (default tenant, no urgency, no deadline), placing each member
+    /// independently. Returns the poll-able [`BatchHandle`] — the same
+    /// status surface as [`EngineClient::submit_batch`] — plus each
+    /// member's shard.
+    pub fn submit_batch(
+        &self,
+        prompts: Vec<(Vec<TokenId>, usize)>,
+    ) -> (crate::server::BatchHandle, Vec<ShardTicket>) {
+        self.submit_job(prompts, 0, 0, 0)
+    }
+
+    /// Route a batch *job* across the fleet: one job id on the shared
+    /// board, each member placed independently with its urgency (so a
+    /// [`Placement::Deadline`] policy actually sees it — urgent members
+    /// land on shallow-backlog shards). Returns the poll-able handle
+    /// plus each member's shard.
+    pub fn submit_job(
+        &self,
+        prompts: Vec<(Vec<TokenId>, usize)>,
+        tenant: u32,
+        urgency: u32,
+        deadline: crate::TimeUs,
+    ) -> (crate::server::BatchHandle, Vec<ShardTicket>) {
+        let job = self.clients[0].register_job(prompts.len() as u64, tenant, deadline);
+        let tickets: Vec<ShardTicket> = prompts
             .into_iter()
             .map(|(prompt, max_new_tokens)| {
-                let shard = self.place(Class::Offline, prompt.len(), max_new_tokens);
-                let ticket = self.clients[shard].submit_offline(prompt, max_new_tokens);
+                let shard = self.place(Class::Offline, prompt.len(), max_new_tokens, urgency);
+                let ticket = self.clients[shard].submit_job_member(
+                    job,
+                    tenant,
+                    urgency,
+                    deadline,
+                    prompt,
+                    max_new_tokens,
+                );
                 ShardTicket { shard, ticket }
             })
-            .collect()
+            .collect();
+        let handle = self.clients[0].handle(job, tickets.iter().map(|t| t.ticket).collect());
+        (handle, tickets)
     }
 }
 
@@ -523,10 +621,14 @@ pub fn sharded_channel(
 ) -> (ShardedClient, Arc<ShardLoads>, Vec<ArrivalSource>) {
     let loads = Arc::new(ShardLoads::new(n_shards, cfg.mem.gpu_blocks));
     let tickets = Arc::new(AtomicU64::new(1));
+    // one job board across all shards: a batch whose members land on
+    // different shards still reports unified progress (wire it to each
+    // engine via set_job_board)
+    let jobs = Arc::new(JobBoard::new());
     let mut clients = Vec::with_capacity(n_shards);
     let mut sources = Vec::with_capacity(n_shards);
     for _ in 0..n_shards {
-        let (c, s) = ArrivalSource::channel_shared(tickets.clone());
+        let (c, s) = ArrivalSource::channel_with_board(tickets.clone(), jobs.clone());
         clients.push(c);
         sources.push(s);
     }
@@ -592,12 +694,13 @@ mod tests {
     #[test]
     fn loads_publish_snapshot_round_trip() {
         let loads = ShardLoads::new(3, 1000);
-        loads.publish(1, 42, 7, 3, 2);
+        loads.publish(1, 42, 7, 3, 2, 5);
         let s = loads.snapshot(1);
         assert_eq!(s.resident_blocks, 42);
         assert_eq!(s.online_blocks, 7);
         assert_eq!(s.waiting, 3);
         assert_eq!(s.offline_waiting, 2);
+        assert_eq!(s.steal_score, 5);
         assert_eq!(s.capacity_blocks, 1000);
         let mut all = Vec::new();
         loads.snapshot_into(&mut all);
@@ -611,11 +714,13 @@ mod tests {
         let (client, loads, mut sources) = sharded_channel(2, Placement::LeastKv, &cfg);
         assert_eq!(client.n_shards(), 2);
         // shard 0 reports heavy load; placement must pick shard 1
-        loads.publish(0, 500, 100, 9, 4);
-        loads.publish(1, 10, 5, 0, 0);
+        loads.publish(0, 500, 100, 9, 4, 0);
+        loads.publish(1, 10, 5, 0, 0, 0);
         let t1 = client.submit_online(vec![1, 2, 3], 4);
         assert_eq!(t1.shard, 1);
-        let batch = client.submit_batch(vec![(vec![4], 2), (vec![5], 2)]);
+        let (handle, batch) = client.submit_batch(vec![(vec![4], 2), (vec![5], 2)]);
+        assert_eq!(handle.len(), 2);
+        assert!(!handle.done());
         assert!(batch.iter().all(|t| t.shard == 1));
         // globally unique tickets despite independent per-shard clients
         let mut all = vec![t1];
@@ -628,6 +733,41 @@ mod tests {
         // the requests actually arrive on shard 1's source
         assert_eq!(sources[1].poll(100).len(), 3);
         assert!(sources[0].poll(100).is_empty());
+    }
+
+    #[test]
+    fn sharded_client_job_routes_by_urgency_and_shares_board() {
+        use crate::request::URGENCY_MAX;
+        let cfg = EngineConfig::sim_a100_7b();
+        let (client, loads, mut sources) = sharded_channel(2, Placement::deadline(), &cfg);
+        // shard 0: lighter footprint but a deep offline backlog;
+        // shard 1: heavier footprint, empty queue
+        loads.publish(0, 20, 0, 10, 10, 0);
+        loads.publish(1, 60, 0, 0, 0, 0);
+        // a lax job (urgency 0) balances footprint -> shard 0
+        let (h_lax, t_lax) = client.submit_job(vec![(vec![1], 4)], 7, 0, 0);
+        assert_eq!(t_lax[0].shard, 0);
+        // an urgent job pays the queue penalty -> shard 1
+        let (h_urgent, t_urgent) =
+            client.submit_job(vec![(vec![2], 4)], 7, URGENCY_MAX, 123);
+        assert_eq!(t_urgent[0].shard, 1, "deadline placement must see urgency");
+        assert_ne!(h_lax.job, h_urgent.job);
+        // the member arrives stamped with its job identity
+        let got = sources[1].poll(50);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].job, h_urgent.job);
+        assert_eq!(got[0].tenant, 7);
+        assert_eq!(got[0].urgency, URGENCY_MAX);
+        assert_eq!(got[0].deadline, 123);
+        // every shard's client shares one board, so any engine's
+        // completion notify drives the handle
+        assert!(!h_urgent.done());
+        let done = client
+            .client(0)
+            .job_board()
+            .note_finished(h_urgent.job, 4, 10);
+        assert!(done.is_some());
+        assert!(h_urgent.done());
     }
 
     #[test]
@@ -705,7 +845,7 @@ mod tests {
         // herding it onto the single argmin shard
         let cfg = EngineConfig::sim_a100_7b();
         let (client, loads, _sources) = sharded_channel(4, Placement::LeastKv, &cfg);
-        let batch = client.submit_batch(vec![(vec![1], 8); 8]);
+        let (_handle, batch) = client.submit_batch(vec![(vec![1], 8); 8]);
         let mut counts = [0usize; 4];
         for t in &batch {
             counts[t.shard] += 1;
@@ -713,7 +853,7 @@ mod tests {
         assert_eq!(counts, [2, 2, 2, 2], "burst herded: {counts:?}");
         // a publish expires the charges: placement follows the board again
         for s in 0..4 {
-            loads.publish(s, if s == 3 { 0 } else { 100 }, 0, 0, 0);
+            loads.publish(s, if s == 3 { 0 } else { 100 }, 0, 0, 0, 0);
         }
         let t = client.submit_online(vec![1], 4);
         assert_eq!(t.shard, 3);

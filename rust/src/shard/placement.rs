@@ -7,7 +7,7 @@
 //! publish through [`ShardLoads`](super::ShardLoads) as relaxed atomics.
 //! Nothing here takes a lock.
 //!
-//! Three policies (mirroring the global admission layers of HyGen and
+//! Four policies (mirroring the global admission layers of HyGen and
 //! Echo, which route hybrid online/offline load across replicas):
 //!
 //! * [`Placement::RoundRobin`] — stateless rotation; the baseline.
@@ -21,8 +21,20 @@
 //!   offline drifts away from online-heavy shards in proportion to
 //!   their SLO-critical load) and avoid shards that would cross the
 //!   absolute `headroom` reserve line.
+//! * [`Placement::Deadline`] — job-aware offline placement
+//!   (crate::batch): affinity's scoring plus a queue-delay penalty that
+//!   scales with the request's EDF urgency, so an urgent job request
+//!   lands where it *starts soonest* (shallow offline backlog) while a
+//!   lax one still balances footprint.
+//!
+//! Offline scoring under `Affinity`/`Deadline` is additionally
+//! *steal-aware*: each shard's published [`LoadSnapshot::steal_score`]
+//! (a decaying count of recently adopted steals) earns a discount —
+//! a shard that recently acted as a thief is demonstrably under-loaded,
+//! and routing fresh offline work straight there saves the migration
+//! the steal coordinator would otherwise perform.
 
-use crate::request::Class;
+use crate::request::{Class, URGENCY_MAX};
 
 /// Per-shard load summary consumed by [`Placement::pick`] and the
 /// work-stealing imbalance detector ([`crate::shard::steal`]).
@@ -39,9 +51,27 @@ pub struct LoadSnapshot {
     /// steal coordinator balances (deep offline tails migrate to shards
     /// reporting zero here).
     pub offline_waiting: u64,
+    /// Decaying count of offline requests this shard recently adopted
+    /// via work stealing, in 1/16ths (one fresh steal publishes as 16
+    /// and decays by x7/8 per engine iteration). Placement discounts
+    /// offline scores by [`STEAL_BIAS_BLOCKS`] per fresh steal (score
+    /// 16) — recent thieves attract fresh offline work directly.
+    pub steal_score: u64,
     /// The shard's GPU KV pool size in blocks.
     pub capacity_blocks: u64,
 }
+
+/// Offline-score discount, in blocks, per *freshly adopted steal*: a
+/// steal publishes as 16 units of [`LoadSnapshot::steal_score`] (which
+/// then decay x7/8 per iteration), and each fresh steal is worth this
+/// many blocks of head start in the offline placement argmin.
+pub const STEAL_BIAS_BLOCKS: u64 = 8;
+
+/// Queue-delay penalty (blocks-equivalent per queued offline request)
+/// applied by [`Placement::Deadline`] at full urgency; scales linearly
+/// down to 0 for urgency-0 requests, where the policy degenerates to
+/// affinity scoring.
+pub const QUEUE_PENALTY_BLOCKS: u64 = 32;
 
 /// Pluggable shard-placement policy. See the module docs for the
 /// semantics of each variant.
@@ -61,6 +91,15 @@ pub enum Placement {
         /// (offline placement avoids shards that would cross it).
         headroom: f64,
     },
+    /// Deadline-aware job placement: affinity scoring plus an
+    /// urgency-scaled queue-delay penalty per queued offline request
+    /// ([`QUEUE_PENALTY_BLOCKS`]), so urgent job requests land on the
+    /// shard where they start soonest. Online requests place exactly as
+    /// under [`Placement::Affinity`].
+    Deadline {
+        /// Online reserve fraction, as in [`Placement::Affinity`].
+        headroom: f64,
+    },
 }
 
 impl Placement {
@@ -69,14 +108,22 @@ impl Placement {
         Placement::Affinity { headroom: 0.1 }
     }
 
+    /// The default deadline-aware policy (10% online reserve per shard).
+    pub fn deadline() -> Self {
+        Placement::Deadline { headroom: 0.1 }
+    }
+
     /// Choose a shard for a request of `class` needing `need_blocks` KV
-    /// blocks at full length. `loads` has one entry per shard; `tick` is
-    /// a caller-maintained monotone counter (drives round-robin).
+    /// blocks at full length. `urgency` is the request's EDF score
+    /// (0 for standalone requests; only [`Placement::Deadline`] reads
+    /// it). `loads` has one entry per shard; `tick` is a
+    /// caller-maintained monotone counter (drives round-robin).
     /// Deterministic: ties always resolve to the lowest shard index.
     pub fn pick(
         &self,
         class: Class,
         need_blocks: u64,
+        urgency: u32,
         loads: &[LoadSnapshot],
         tick: usize,
     ) -> usize {
@@ -84,44 +131,62 @@ impl Placement {
         match *self {
             Placement::RoundRobin => tick % loads.len(),
             Placement::LeastKv => argmin(loads, |l| (l.resident_blocks, l.waiting)),
-            Placement::Affinity { headroom } => match class {
-                Class::Online => {
-                    // spread by online footprint, but never route onto a
-                    // shard whose pool can't fit the request while an
-                    // alternative can — a packed shard would have to
-                    // preempt offline work (recompute churn) where an
-                    // emptier one starts instantly. Online may use the
-                    // reserve, so the fit check is against full capacity.
-                    let fits = |l: &LoadSnapshot| {
-                        l.resident_blocks + need_blocks <= l.capacity_blocks
-                    };
-                    argmin(loads, |l| {
-                        (u8::from(!fits(l)), l.online_blocks, l.resident_blocks)
-                    })
+            Placement::Affinity { headroom } | Placement::Deadline { headroom } => {
+                match class {
+                    Class::Online => {
+                        // spread by online footprint, but never route onto a
+                        // shard whose pool can't fit the request while an
+                        // alternative can — a packed shard would have to
+                        // preempt offline work (recompute churn) where an
+                        // emptier one starts instantly. Online may use the
+                        // reserve, so the fit check is against full capacity.
+                        let fits = |l: &LoadSnapshot| {
+                            l.resident_blocks + need_blocks <= l.capacity_blocks
+                        };
+                        argmin(loads, |l| {
+                            (u8::from(!fits(l)), l.online_blocks, l.resident_blocks)
+                        })
+                    }
+                    Class::Offline => {
+                        // prefer shards that can take this request and still
+                        // keep the absolute online reserve clear; among them
+                        // (or among all, when none fits — e.g. the cumulative
+                        // estimates of a long trace) score by the
+                        // online-weighted footprint: an online block counts
+                        // 3x an offline one (resident charge + 2x on top),
+                        // so offline load drifts away from online-heavy
+                        // shards in proportion to their latency-critical
+                        // demand. Recent thieves earn a steal-score
+                        // discount, and the Deadline policy adds an
+                        // urgency-scaled penalty per queued offline
+                        // request so urgent jobs start soonest.
+                        let queue_penalty = match self {
+                            Placement::Deadline { .. } => {
+                                QUEUE_PENALTY_BLOCKS * u64::from(urgency)
+                                    / u64::from(URGENCY_MAX)
+                            }
+                            _ => 0,
+                        };
+                        let fits = |l: &LoadSnapshot| {
+                            let limit =
+                                (l.capacity_blocks as f64 * (1.0 - headroom)) as u64;
+                            l.resident_blocks + need_blocks <= limit
+                        };
+                        argmin(loads, |l| {
+                            let weighted = l
+                                .resident_blocks
+                                .saturating_add(l.online_blocks.saturating_mul(2))
+                                .saturating_add(
+                                    l.offline_waiting.saturating_mul(queue_penalty),
+                                )
+                                .saturating_sub(
+                                    l.steal_score.saturating_mul(STEAL_BIAS_BLOCKS) / 16,
+                                );
+                            (u8::from(!fits(l)), weighted, l.waiting)
+                        })
+                    }
                 }
-                Class::Offline => {
-                    // prefer shards that can take this request and still
-                    // keep the absolute online reserve clear; among them
-                    // (or among all, when none fits — e.g. the cumulative
-                    // estimates of a long trace) score by the
-                    // online-weighted footprint: an online block counts
-                    // 3x an offline one (resident charge + 2x on top),
-                    // so offline load drifts away from online-heavy
-                    // shards in proportion to their latency-critical
-                    // demand
-                    let fits = |l: &LoadSnapshot| {
-                        let limit =
-                            (l.capacity_blocks as f64 * (1.0 - headroom)) as u64;
-                        l.resident_blocks + need_blocks <= limit
-                    };
-                    argmin(loads, |l| {
-                        let weighted = l
-                            .resident_blocks
-                            .saturating_add(l.online_blocks.saturating_mul(2));
-                        (u8::from(!fits(l)), weighted, l.waiting)
-                    })
-                }
-            },
+            }
         }
     }
 }
@@ -154,20 +219,32 @@ impl std::str::FromStr for Placement {
             "affinity" | "online-affinity" | "online_affinity" => {
                 Ok(Placement::affinity())
             }
-            other => match other.strip_prefix("affinity:") {
-                // "affinity:H" carries an explicit headroom fraction, the
-                // form Display emits so round-trips are lossless
-                Some(h) => {
+            "deadline" | "edf" | "deadline-aware" => Ok(Placement::deadline()),
+            other => {
+                // "affinity:H" / "deadline:H" carry an explicit headroom
+                // fraction, the form Display emits so round-trips are
+                // lossless
+                fn headroom_of(h: &str) -> anyhow::Result<f64> {
                     let headroom: f64 = h
                         .parse()
-                        .map_err(|e| anyhow::anyhow!("bad affinity headroom `{h}`: {e}"))?;
+                        .map_err(|e| anyhow::anyhow!("bad headroom `{h}`: {e}"))?;
                     if !(0.0..1.0).contains(&headroom) {
-                        anyhow::bail!("affinity headroom must be in [0, 1): `{h}`");
+                        anyhow::bail!("headroom must be in [0, 1): `{h}`");
                     }
-                    Ok(Placement::Affinity { headroom })
+                    Ok(headroom)
                 }
-                None => Err(anyhow::anyhow!("unknown placement policy `{other}`")),
-            },
+                if let Some(h) = other.strip_prefix("affinity:") {
+                    Ok(Placement::Affinity {
+                        headroom: headroom_of(h)?,
+                    })
+                } else if let Some(h) = other.strip_prefix("deadline:") {
+                    Ok(Placement::Deadline {
+                        headroom: headroom_of(h)?,
+                    })
+                } else {
+                    Err(anyhow::anyhow!("unknown placement policy `{other}`"))
+                }
+            }
         }
     }
 }
@@ -179,6 +256,7 @@ impl std::fmt::Display for Placement {
             Placement::LeastKv => f.write_str("least-kv"),
             // explicit headroom so Display/FromStr round-trip losslessly
             Placement::Affinity { headroom } => write!(f, "affinity:{headroom}"),
+            Placement::Deadline { headroom } => write!(f, "deadline:{headroom}"),
         }
     }
 }
@@ -193,6 +271,7 @@ mod tests {
             online_blocks: online,
             waiting,
             offline_waiting: 0,
+            steal_score: 0,
             capacity_blocks: 100,
         }
     }
@@ -202,7 +281,7 @@ mod tests {
         let loads = vec![snap(9, 0, 0), snap(0, 0, 0), snap(5, 0, 0)];
         let p = Placement::RoundRobin;
         let picks: Vec<usize> = (0..6)
-            .map(|t| p.pick(Class::Online, 1, &loads, t))
+            .map(|t| p.pick(Class::Online, 1, 0, &loads, t))
             .collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
     }
@@ -211,10 +290,10 @@ mod tests {
     fn least_kv_picks_min_resident_then_waiting() {
         let p = Placement::LeastKv;
         let loads = vec![snap(30, 0, 0), snap(10, 0, 5), snap(10, 0, 1)];
-        assert_eq!(p.pick(Class::Offline, 1, &loads, 0), 2);
+        assert_eq!(p.pick(Class::Offline, 1, 0, &loads, 0), 2);
         // ties resolve to the lowest index
         let even = vec![snap(10, 0, 1), snap(10, 0, 1)];
-        assert_eq!(p.pick(Class::Online, 1, &even, 7), 0);
+        assert_eq!(p.pick(Class::Online, 1, 0, &even, 7), 0);
     }
 
     #[test]
@@ -222,13 +301,13 @@ mod tests {
         let p = Placement::affinity();
         // shard 0 has less total KV but more *online* KV than shard 1
         let loads = vec![snap(20, 18, 0), snap(40, 2, 0)];
-        assert_eq!(p.pick(Class::Online, 1, &loads, 0), 1);
+        assert_eq!(p.pick(Class::Online, 1, 0, &loads, 0), 1);
         // offline also dodges the online-heavy shard: weighted scores
         // 20 + 2*18 = 56 vs 40 + 2*2 = 44
-        assert_eq!(p.pick(Class::Offline, 1, &loads, 0), 1);
+        assert_eq!(p.pick(Class::Offline, 1, 0, &loads, 0), 1);
         // with equal online load, offline goes to the emptier shard
         let even_online = vec![snap(20, 5, 0), snap(40, 5, 0)];
-        assert_eq!(p.pick(Class::Offline, 1, &even_online, 0), 0);
+        assert_eq!(p.pick(Class::Offline, 1, 0, &even_online, 0), 0);
     }
 
     #[test]
@@ -238,10 +317,10 @@ mod tests {
         // lower weighted score (75 vs 60 + 2*30 = 120) but would cross
         // the reserve line (75 + 10 > 80); shard 0 still fits (70 <= 80)
         let loads = vec![snap(60, 30, 0), snap(75, 0, 0)];
-        assert_eq!(p.pick(Class::Offline, 10, &loads, 0), 0);
+        assert_eq!(p.pick(Class::Offline, 10, 0, &loads, 0), 0);
         // when nothing fits, fall back to weighted least-loaded
         let full = vec![snap(95, 60, 0), snap(99, 0, 0)];
-        assert_eq!(p.pick(Class::Offline, 10, &full, 0), 1);
+        assert_eq!(p.pick(Class::Offline, 10, 0, &full, 0), 1);
     }
 
     #[test]
@@ -250,14 +329,46 @@ mod tests {
         // shard 0 has fewer online blocks but its pool can't fit the
         // request (95 + 8 > 100); shard 1 can and must win
         let loads = vec![snap(95, 5, 0), snap(10, 6, 0)];
-        assert_eq!(p.pick(Class::Online, 8, &loads, 0), 1);
+        assert_eq!(p.pick(Class::Online, 8, 0, &loads, 0), 1);
         // with room everywhere, least-online still wins
-        assert_eq!(p.pick(Class::Online, 1, &loads, 0), 0);
+        assert_eq!(p.pick(Class::Online, 1, 0, &loads, 0), 0);
+    }
+
+    #[test]
+    fn deadline_policy_sends_urgent_work_to_shallow_queues() {
+        let p = Placement::deadline();
+        // shard 0: lighter footprint but a deep offline backlog;
+        // shard 1: heavier footprint, empty queue
+        let mut loads = vec![snap(20, 0, 10), snap(50, 0, 0)];
+        loads[0].offline_waiting = 10;
+        // a lax request (urgency 0) balances footprint: shard 0
+        assert_eq!(p.pick(Class::Offline, 1, 0, &loads, 0), 0);
+        // an urgent one pays 32 blocks per queued request at full
+        // urgency: 20 + 10*32 >> 50, so it starts on the empty shard
+        assert_eq!(p.pick(Class::Offline, 1, URGENCY_MAX, &loads, 0), 1);
+        // online placement is unchanged affinity behavior
+        assert_eq!(p.pick(Class::Online, 1, URGENCY_MAX, &loads, 0), 0);
+    }
+
+    #[test]
+    fn offline_placement_prefers_recent_thieves() {
+        let p = Placement::affinity();
+        // equal footprints; shard 1 recently adopted a steal (score 16
+        // => 8-block discount) and must win the offline argmin
+        let mut loads = vec![snap(40, 0, 0), snap(40, 0, 0)];
+        loads[1].steal_score = 16;
+        assert_eq!(p.pick(Class::Offline, 1, 0, &loads, 0), 1);
+        // the discount is bounded: a clearly lighter shard still wins
+        let mut uneven = vec![snap(10, 0, 0), snap(40, 0, 0)];
+        uneven[1].steal_score = 16;
+        assert_eq!(p.pick(Class::Offline, 1, 0, &uneven, 0), 0);
+        // online placement ignores the steal signal
+        assert_eq!(p.pick(Class::Online, 1, 0, &loads, 0), 0);
     }
 
     #[test]
     fn parse_and_display_round_trip() {
-        for s in ["rr", "least-kv", "affinity", "affinity:0.25"] {
+        for s in ["rr", "least-kv", "affinity", "affinity:0.25", "deadline", "deadline:0.2"] {
             let p: Placement = s.parse().unwrap();
             let back: Placement = p.to_string().parse().unwrap();
             assert_eq!(p, back);
@@ -266,8 +377,13 @@ mod tests {
             "affinity:0.25".parse::<Placement>().unwrap(),
             Placement::Affinity { headroom: 0.25 }
         );
+        assert_eq!(
+            "deadline:0.2".parse::<Placement>().unwrap(),
+            Placement::Deadline { headroom: 0.2 }
+        );
         assert!("nope".parse::<Placement>().is_err());
         assert!("affinity:1.5".parse::<Placement>().is_err());
         assert!("affinity:x".parse::<Placement>().is_err());
+        assert!("deadline:2".parse::<Placement>().is_err());
     }
 }

@@ -368,9 +368,9 @@ mod tests {
     fn pick_donor_follows_published_backlog() {
         let (st, loads) = coordinator(4);
         assert_eq!(st.pick_donor(1), None, "no surplus published yet");
-        loads.publish(0, 10, 0, 30, 30);
-        loads.publish(2, 10, 0, 90, 90);
-        loads.publish(3, 10, 0, 2, 2); // at/below the donor floor
+        loads.publish(0, 10, 0, 30, 30, 0);
+        loads.publish(2, 10, 0, 90, 90, 0);
+        loads.publish(3, 10, 0, 2, 2, 0); // at/below the donor floor
         assert_eq!(st.pick_donor(1), Some(2));
         assert_eq!(st.pick_donor(2), Some(0), "never picks itself");
     }

@@ -1,0 +1,242 @@
+//! Batch-job trace synthesis: mixed tenants, priority tiers, deadlines
+//! and job sizes for the deadline-aware job manager ([`crate::batch`]).
+//!
+//! Two generators:
+//!
+//! * [`job_trace`] — a randomized multi-tenant mix (mega-jobs among
+//!   small ones, tight and lax deadlines, deadline-free stragglers):
+//!   the general-purpose workload behind `conserve jobs`.
+//! * [`mega_plus_tight`] — the adversarial shape the acceptance bench
+//!   keys on: one tenant's mega-job submitted first, then a stream of
+//!   small tight-deadline jobs from other tenants. FIFO admission
+//!   serves the mega-job's queue first and misses the tight deadlines;
+//!   EDF urgency + fair share meets them while the lax mega-job still
+//!   makes its generous deadline.
+
+use crate::batch::{JobInput, JobRequest};
+use crate::util::rng::Rng;
+use crate::TimeUs;
+use crate::US_PER_SEC;
+
+/// Knobs for [`job_trace`].
+#[derive(Debug, Clone)]
+pub struct JobTraceConfig {
+    pub seed: u64,
+    pub n_jobs: usize,
+    pub n_tenants: u32,
+    /// Submission window (s): `submitted_at` is uniform over it.
+    pub span_s: f64,
+    /// Nominal fleet service rate (tokens/s) used to size deadlines
+    /// relative to each job's work estimate.
+    pub svc_tok_per_s: f64,
+}
+
+impl Default for JobTraceConfig {
+    fn default() -> Self {
+        Self {
+            seed: 0xBA7C_4,
+            n_jobs: 24,
+            n_tenants: 4,
+            span_s: 60.0,
+            svc_tok_per_s: crate::batch::NOMINAL_TOK_PER_S,
+        }
+    }
+}
+
+fn requests(
+    rng: &mut Rng,
+    n: usize,
+    in_lo: usize,
+    in_hi: usize,
+    out_lo: usize,
+    out_hi: usize,
+) -> Vec<JobRequest> {
+    (0..n)
+        .map(|_| JobRequest {
+            prompt: Vec::new(),
+            prompt_len: rng.range_usize(in_lo, in_hi),
+            max_new_tokens: rng.range_usize(out_lo, out_hi),
+        })
+        .collect()
+}
+
+fn total_tokens(reqs: &[JobRequest]) -> u64 {
+    reqs.iter()
+        .map(|r| (r.prompt_len + r.max_new_tokens) as u64)
+        .sum()
+}
+
+/// Randomized multi-tenant job mix (see module docs). Sorted by
+/// submission time.
+pub fn job_trace(cfg: &JobTraceConfig) -> Vec<JobInput> {
+    let mut rng = Rng::new(cfg.seed);
+    let span_us = (cfg.span_s * US_PER_SEC as f64) as TimeUs;
+    let mut jobs = Vec::with_capacity(cfg.n_jobs);
+    for _ in 0..cfg.n_jobs {
+        let tenant = 1 + rng.range_usize(0, cfg.n_tenants.max(1) as usize) as u32;
+        let tier = rng.range_usize(0, 3) as u8;
+        let submitted_at = rng.range_usize(0, span_us.max(1) as usize) as TimeUs;
+        let mega = rng.range_usize(0, 8) == 0;
+        let reqs = if mega {
+            let n = rng.range_usize(24, 48);
+            requests(&mut rng, n, 1024, 4096, 64, 256)
+        } else {
+            let n = rng.range_usize(3, 8);
+            requests(&mut rng, n, 256, 1024, 16, 64)
+        };
+        // deadline: 15% none; 40% tight (1.5-2.5x the work estimate);
+        // the rest lax (4-10x)
+        let est_us = (total_tokens(&reqs) as f64 / cfg.svc_tok_per_s * 1e6) as TimeUs;
+        let roll = rng.range_usize(0, 100);
+        let deadline = if roll < 15 {
+            0
+        } else if roll < 55 {
+            submitted_at + est_us * rng.range_usize(15, 25) as TimeUs / 10
+        } else {
+            submitted_at + est_us * rng.range_usize(40, 100) as TimeUs / 10
+        };
+        jobs.push(JobInput {
+            tenant,
+            tier,
+            submitted_at,
+            deadline,
+            requests: reqs,
+        });
+    }
+    jobs.sort_by_key(|j| j.submitted_at);
+    jobs
+}
+
+/// Knobs for [`mega_plus_tight`].
+#[derive(Debug, Clone)]
+pub struct MegaTightConfig {
+    pub seed: u64,
+    /// Requests in the mega-job (tenant 1, tier 2, submitted at t=0).
+    /// Keep `mega_requests / n_shards` above the per-shard KV capacity
+    /// (~21 concurrent mega-sized requests on the A100 preset) or FIFO
+    /// admits everything immediately and nothing separates the modes.
+    pub mega_requests: usize,
+    /// Number of small tight-deadline jobs (tenants 2.., tier 0).
+    pub tight_jobs: usize,
+    /// Requests per tight job.
+    pub tight_requests: usize,
+    /// Nominal fleet service rate (tokens/s) for deadline sizing.
+    pub svc_tok_per_s: f64,
+    /// Tight-job deadline as a fraction of the mega-job's drain
+    /// estimate: far below 1.0 (hopeless behind the mega backlog under
+    /// FIFO) yet several times a tight job's own service time (easy
+    /// when served promptly).
+    pub tight_deadline_frac: f64,
+    /// Mega-job deadline as a multiple of its own drain estimate
+    /// (generous — it meets it under either discipline).
+    pub mega_deadline_mult: f64,
+}
+
+impl Default for MegaTightConfig {
+    fn default() -> Self {
+        Self {
+            seed: 0x71_647,
+            mega_requests: 160,
+            tight_jobs: 8,
+            tight_requests: 4,
+            svc_tok_per_s: crate::batch::NOMINAL_TOK_PER_S,
+            tight_deadline_frac: 0.5,
+            mega_deadline_mult: 3.0,
+        }
+    }
+}
+
+/// The FIFO-buster (see module docs): a mega-job at t=0 whose deadline
+/// is generous even behind everything else, then tight jobs whose
+/// deadlines sit at `tight_deadline_frac` of the mega-job's drain time.
+/// Tight outputs are small (≤ 16 tokens) so completion is dominated by
+/// *when the scheduler starts them* — the quantity FIFO vs EDF actually
+/// disagree about — not by decode cadence. Deterministic per seed.
+pub fn mega_plus_tight(cfg: &MegaTightConfig) -> Vec<JobInput> {
+    let mut rng = Rng::new(cfg.seed);
+    let mut jobs = Vec::with_capacity(1 + cfg.tight_jobs);
+    let mega_reqs = requests(&mut rng, cfg.mega_requests, 1024, 3072, 32, 128);
+    let mega_est_us = (total_tokens(&mega_reqs) as f64 / cfg.svc_tok_per_s * 1e6) as TimeUs;
+    jobs.push(JobInput {
+        tenant: 1,
+        tier: 2,
+        submitted_at: 0,
+        deadline: (mega_est_us as f64 * cfg.mega_deadline_mult) as TimeUs,
+        requests: mega_reqs,
+    });
+    for t in 0..cfg.tight_jobs {
+        // small outputs: completion is admission-bound (what FIFO vs
+        // EDF disagree about), not decode-cadence-bound
+        let reqs = requests(&mut rng, cfg.tight_requests, 256, 768, 4, 8);
+        // staggered shortly after the mega-job is already queued
+        let submitted_at = 200_000 * (t as TimeUs + 1);
+        jobs.push(JobInput {
+            tenant: 2 + (t as u32 % 3),
+            tier: 0,
+            submitted_at,
+            deadline: submitted_at
+                + (mega_est_us as f64 * cfg.tight_deadline_frac) as TimeUs,
+            requests: reqs,
+        });
+    }
+    jobs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_trace_is_mixed_and_ordered() {
+        let cfg = JobTraceConfig {
+            n_jobs: 64,
+            ..JobTraceConfig::default()
+        };
+        let jobs = job_trace(&cfg);
+        assert_eq!(jobs.len(), 64);
+        assert!(jobs.windows(2).all(|w| w[0].submitted_at <= w[1].submitted_at));
+        let tenants: std::collections::BTreeSet<u32> =
+            jobs.iter().map(|j| j.tenant).collect();
+        assert!(tenants.len() >= 3, "mixed tenants: {tenants:?}");
+        assert!(jobs.iter().any(|j| j.deadline == 0), "some deadline-free");
+        assert!(jobs.iter().any(|j| j.deadline > 0), "some with deadlines");
+        assert!(jobs.iter().any(|j| j.requests.len() >= 24), "some mega");
+        assert!(jobs.iter().any(|j| j.requests.len() <= 8), "some small");
+        for j in &jobs {
+            assert!(j.deadline == 0 || j.deadline > j.submitted_at);
+            assert!(!j.requests.is_empty());
+        }
+        // deterministic under the seed
+        let again = job_trace(&cfg);
+        assert_eq!(jobs.len(), again.len());
+        assert!(jobs
+            .iter()
+            .zip(&again)
+            .all(|(a, b)| a.submitted_at == b.submitted_at && a.tenant == b.tenant));
+    }
+
+    #[test]
+    fn mega_plus_tight_shapes_the_race() {
+        let cfg = MegaTightConfig::default();
+        let jobs = mega_plus_tight(&cfg);
+        assert_eq!(jobs.len(), 1 + cfg.tight_jobs);
+        let mega = &jobs[0];
+        assert_eq!(mega.requests.len(), cfg.mega_requests);
+        for tight in &jobs[1..] {
+            assert_eq!(tight.requests.len(), cfg.tight_requests);
+            assert!(tight.deadline > tight.submitted_at);
+            // the race: tight deadlines expire long before the mega-job
+            // could drain ahead of them under FIFO
+            assert!(tight.deadline < mega.deadline / 4);
+            assert_ne!(tight.tenant, mega.tenant);
+            // ...but comfortably cover the tight job's own work
+            let own: u64 = tight
+                .requests
+                .iter()
+                .map(|r| (r.prompt_len + r.max_new_tokens) as u64)
+                .sum();
+            let own_est = (own as f64 / cfg.svc_tok_per_s * 1e6) as u64;
+            assert!(tight.deadline - tight.submitted_at > own_est * 10);
+        }
+    }
+}

@@ -4,9 +4,11 @@
 //! ON/OFF phased loads (§6.3.1), and request-length datasets.
 
 pub mod datasets;
+pub mod jobs;
 pub mod loadgen;
 pub mod trace;
 
 pub use datasets::{LengthSample, Lengths};
+pub use jobs::{job_trace, JobTraceConfig};
 pub use loadgen::LoadGen;
 pub use trace::{onoff_trace, burstgpt_like_rate, TraceEvent};

@@ -82,12 +82,20 @@ fn engine_with_channel_source_and_sim_backend() {
     };
     let (client, src) = ArrivalSource::channel();
     client.submit_online(vec![0; 128], 8);
-    client.submit_batch(vec![(vec![0; 256], 16), (vec![0; 256], 16)]);
+    let batch = client.submit_batch(vec![(vec![0; 256], 16), (vec![0; 256], 16)]);
+    assert!(!batch.done(), "nothing served yet");
+    let board = client.job_board().clone();
     drop(client);
     let mut engine = ServingEngine::new(cfg, backend, clock, profile, src);
+    engine.set_job_board(board);
     engine.run(60_000_000);
     assert_eq!(engine.rec.finished[0], 1);
     assert_eq!(engine.rec.finished[1], 2);
+    // the engine drove the poll-able batch handle to completion
+    assert!(batch.done());
+    let p = batch.progress();
+    assert_eq!((p.total, p.finished), (2, 2));
+    assert_eq!(engine.rec.jobs_completed, 1);
 }
 
 #[test]

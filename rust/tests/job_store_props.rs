@@ -1,0 +1,242 @@
+//! Durable job-store properties: randomized JSONL round-trips,
+//! resume-after-partial-write tolerance, and the headline guarantee —
+//! a run that is killed mid-flight and resumed from the store produces
+//! **byte-identical** token streams to an uninterrupted run (keyed
+//! sampling + same submission ids ⇒ same draws at every position).
+
+use conserve::batch::{
+    run_jobs, FinishedOutput, JobInput, JobManager, JobRequest, JobRunOpts, JobStore,
+};
+use conserve::config::EngineConfig;
+use conserve::request::{PortableRequest, TokenId};
+use conserve::util::json::Json;
+use conserve::util::rng::Rng;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "conserve-jobprops-{tag}-{}-{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// The job mix both runs serve: a couple of medium jobs plus a slow
+/// one, so a tight time cap reliably leaves work unfinished.
+fn job_inputs() -> Vec<JobInput> {
+    let mut rng = Rng::new(0xD00D);
+    let mut jobs = Vec::new();
+    for (n, in_lo, in_hi, out) in [(5, 128, 512, 12), (4, 256, 768, 16), (3, 2048, 3072, 384)] {
+        jobs.push(JobInput {
+            tenant: 1 + jobs.len() as u32,
+            tier: (jobs.len() % 3) as u8,
+            submitted_at: 0,
+            deadline: 0,
+            requests: (0..n)
+                .map(|_| JobRequest {
+                    prompt: Vec::new(),
+                    prompt_len: rng.range_usize(in_lo, in_hi),
+                    max_new_tokens: out,
+                })
+                .collect(),
+        });
+    }
+    jobs
+}
+
+fn admit_all(jm: &mut JobManager) -> Vec<conserve::request::Request> {
+    let mut events = Vec::new();
+    for input in job_inputs() {
+        jm.admit(&input, &mut events);
+    }
+    events
+}
+
+fn opts(duration_s: f64) -> JobRunOpts {
+    JobRunOpts {
+        steal: None,
+        collect_state: true,
+        synth_tokens: true,
+        ..JobRunOpts::new(1, duration_s)
+    }
+}
+
+fn outputs_by_sid(fins: &[FinishedOutput]) -> BTreeMap<u64, Vec<TokenId>> {
+    fins.iter().map(|f| (f.sid, f.output.clone())).collect()
+}
+
+#[test]
+fn kill_and_resume_token_streams_are_byte_identical() {
+    let cfg = EngineConfig::sim_a100_7b();
+
+    // ---- reference: one uninterrupted run ----
+    let mut jm = JobManager::new(5_000.0);
+    let events = admit_all(&mut jm);
+    let reference = run_jobs(&cfg, &opts(600.0), jm.board().clone(), events);
+    let want = outputs_by_sid(&reference.finished);
+    assert_eq!(want.len(), 12, "reference run finishes everything");
+    assert!(want.values().all(|o| !o.is_empty()));
+
+    // ---- crash run: same admission, killed at 2.5 s — late enough
+    // that the small jobs finished, early enough that the slow job's
+    // long decode tail has not ----
+    let dir = tmp_dir("resume");
+    let mut jm2 = JobManager::new(5_000.0);
+    let events2 = admit_all(&mut jm2);
+    {
+        let mut store = JobStore::open(&dir).unwrap();
+        // persist specs at admission (group requests per job)
+        for spec in jm2.specs().to_vec() {
+            store.record_spec(&spec, &events2).unwrap();
+        }
+        let partial = run_jobs(&cfg, &opts(2.5), jm2.board().clone(), events2);
+        assert!(
+            !partial.unfinished.is_empty(),
+            "the tight cap must leave work unfinished (got {} finished)",
+            partial.finished.len()
+        );
+        for f in &partial.finished {
+            store.record_output(f).unwrap();
+        }
+        for p in &partial.unfinished {
+            store.record_checkpoint(p).unwrap();
+        }
+    } // store dropped = process "death"
+
+    // ---- restart: rebuild from disk, replay what's missing ----
+    let state = JobStore::load(&dir).unwrap();
+    let mut jm3 = JobManager::new(5_000.0);
+    let mut replay = Vec::new();
+    let n = jm3.resume(&state, &mut replay);
+    assert_eq!(n, replay.len());
+    assert!(n > 0 && n < 12, "resume replays exactly the unfinished work");
+    // a checkpointed request resumes with its output prefix intact
+    assert!(replay
+        .iter()
+        .any(|r| r.generated > 0 && !r.output.is_empty() && r.ctx_len == 0));
+    let resumed = run_jobs(&cfg, &opts(600.0), jm3.board().clone(), replay);
+    assert_eq!(resumed.finished.len(), n, "replayed work completes");
+
+    // ---- union of pre-crash + post-resume == uninterrupted, bytewise ----
+    let mut got: BTreeMap<u64, Vec<TokenId>> = state
+        .outputs
+        .values()
+        .map(|f| (f.sid, f.output.clone()))
+        .collect();
+    for (sid, out) in outputs_by_sid(&resumed.finished) {
+        let prev = got.insert(sid, out);
+        assert!(prev.is_none(), "request {sid} served in both runs");
+    }
+    assert_eq!(got, want, "kill-and-resume must be byte-identical");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn portable_request_json_round_trip_property() {
+    // randomized round-trips: every field survives, including full
+    // 64-bit sampler states and ticket-bit submission ids
+    let mut rng = Rng::new(0xF00D);
+    for case in 0..200 {
+        let sid = rng.next_u64() | if case % 2 == 0 { 1 << 63 } else { 0 };
+        let prompt: Vec<TokenId> = (0..rng.range_usize(0, 20))
+            .map(|_| rng.range_usize(0, 256) as TokenId)
+            .collect();
+        let prompt_len = prompt.len();
+        let mut r = conserve::request::Request::new(
+            sid,
+            if case % 3 == 0 {
+                conserve::request::Class::Online
+            } else {
+                conserve::request::Class::Offline
+            },
+            prompt,
+            prompt_len,
+            1 + rng.range_usize(0, 100),
+            rng.range_usize(0, 1_000_000) as u64,
+        );
+        r.generated = rng.range_usize(0, 50);
+        r.output = (0..r.generated)
+            .map(|_| rng.range_usize(0, 256) as TokenId)
+            .collect();
+        r.preemptions = rng.range_usize(0, 5) as u32;
+        r.recomputed_tokens = rng.range_usize(0, 1000);
+        r.first_token_at = (case % 4 == 0).then(|| rng.range_usize(0, 1 << 40) as u64);
+        r.last_token_at = r.first_token_at.map(|t| t + 17);
+        r.job = rng.range_usize(0, 1000) as u64;
+        r.tenant = rng.range_usize(0, 64) as u32;
+        r.urgency = rng.range_usize(0, 1001) as u32;
+        r.fair_weight = 1 + rng.range_usize(0, 4) as u32;
+        r.deadline = rng.range_usize(0, 1 << 40) as u64;
+
+        let p = PortableRequest::snapshot_cold(&r);
+        let parsed = Json::parse(&p.to_json().to_string()).unwrap();
+        let q = PortableRequest::from_json(&parsed).unwrap();
+        assert_eq!(q.submitted_id, p.submitted_id);
+        assert_eq!(q.sampler_state, p.sampler_state);
+        assert_eq!(q.class, p.class);
+        assert_eq!(q.prompt, p.prompt);
+        assert_eq!(q.prompt_len, p.prompt_len);
+        assert_eq!(q.max_new_tokens, p.max_new_tokens);
+        assert_eq!(q.arrival, p.arrival);
+        assert_eq!(q.output, p.output);
+        assert_eq!(q.generated, p.generated);
+        assert_eq!(q.preemptions, p.preemptions);
+        assert_eq!(q.recomputed_tokens, p.recomputed_tokens);
+        assert_eq!(q.first_token_at, p.first_token_at);
+        assert_eq!(q.last_token_at, p.last_token_at);
+        assert_eq!(
+            (q.job, q.tenant, q.urgency, q.fair_weight, q.deadline),
+            (p.job, p.tenant, p.urgency, p.fair_weight, p.deadline)
+        );
+    }
+}
+
+#[test]
+fn resume_after_partial_spec_write() {
+    // a torn final spec line loses only that job; everything durable
+    // before it resumes normally
+    let dir = tmp_dir("torn-spec");
+    let mut jm = JobManager::new(5_000.0);
+    let mut events = Vec::new();
+    let spec = jm.admit(
+        &JobInput {
+            tenant: 1,
+            tier: 1,
+            submitted_at: 0,
+            deadline: 0,
+            requests: vec![JobRequest {
+                prompt: vec![1, 2],
+                prompt_len: 2,
+                max_new_tokens: 3,
+            }],
+        },
+        &mut events,
+    );
+    {
+        let mut store = JobStore::open(&dir).unwrap();
+        store.record_spec(&spec, &events).unwrap();
+    }
+    // simulate a torn append of a second spec line
+    use std::io::Write as _;
+    let mut f = std::fs::OpenOptions::new()
+        .append(true)
+        .open(dir.join("specs.jsonl"))
+        .unwrap();
+    f.write_all(b"{\"job\":2,\"tenant\":9,\"tier\":0,\"dead").unwrap();
+    drop(f);
+
+    let state = JobStore::load(&dir).unwrap();
+    assert_eq!(state.jobs.len(), 1, "only the durable job survives");
+    let mut jm2 = JobManager::new(5_000.0);
+    let mut replay = Vec::new();
+    assert_eq!(jm2.resume(&state, &mut replay), 1);
+    assert_eq!(replay[0].submitted_id, events[0].submitted_id);
+    assert_eq!(replay[0].prompt, vec![1, 2]);
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -1,0 +1,174 @@
+//! Channel-mode work-stealing wiring: a threaded live fleet behind a
+//! [`ShardedClient`] serves a deliberately skewed workload (the whole
+//! offline burst enters through shard 0's per-shard client — one
+//! tenant's dedicated ingress) with stealing on and off, and must
+//! complete the identical request set either way, with the idle shard
+//! demonstrably absorbing migrated work when stealing is on.
+//!
+//! This exercises the engine-generic steal hooks (`poll_steals` /
+//! `post_hunger` / `drained` and the idle/retire termination protocol)
+//! over *live* channel arrival sources — the path `run_sharded_traces`
+//! never touches.
+
+use conserve::backend::{CostModel, SimBackend};
+use conserve::clock::Clock;
+use conserve::config::EngineConfig;
+use conserve::profiler::LatencyProfile;
+use conserve::request::State;
+use conserve::server::ServingEngine;
+use conserve::shard::{sharded_channel, Placement, StealConfig, StealCoordinator};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+fn profile() -> LatencyProfile {
+    LatencyProfile {
+        c: [1200.0, 96.0, 40.0, 0.385],
+    }
+}
+
+const N_SHARDS: usize = 2;
+const UNTIL: u64 = 600_000_000; // generous virtual cap
+
+/// (submitted_id -> generated) over every finished request, plus the
+/// fleet's steal counters.
+fn live_run(steal: bool) -> (BTreeMap<u64, usize>, u64, u64) {
+    let cfg = EngineConfig::sim_a100_7b();
+    let (client, loads, sources) = sharded_channel(N_SHARDS, Placement::affinity(), &cfg);
+    let st = steal.then(|| {
+        Arc::new(StealCoordinator::new(
+            StealConfig::default(),
+            loads.clone(),
+        ))
+    });
+
+    // Submit everything up front, then hang up: the completed set is
+    // then identical across runs regardless of thread interleaving.
+    let mut expected = Vec::new();
+    for _ in 0..8 {
+        let t = client.submit_online(vec![1; 64], 4);
+        assert!(t.shard < N_SHARDS);
+        expected.push(t.ticket);
+    }
+    // entry-point skew: the whole offline burst through shard 0. Each
+    // request is memory-heavy (~129 KV blocks of the 3072-block pool),
+    // so shard 0 can only run ~24 at once and a real backlog persists —
+    // the signal that makes shard 1 hungry enough to steal.
+    let burst = client
+        .client(0)
+        .submit_batch(vec![(vec![2; 2048], 8); 40]);
+    expected.extend_from_slice(burst.ids());
+    drop(client);
+
+    let results: Vec<(BTreeMap<u64, usize>, u64, u64)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = sources
+            .into_iter()
+            .enumerate()
+            .map(|(shard, src)| {
+                let cfg = cfg.clone();
+                let loads = loads.clone();
+                let st = st.clone();
+                scope.spawn(move || {
+                    let clock = Clock::virtual_at(0);
+                    let backend = SimBackend::new(
+                        CostModel::a100_llama2_7b(),
+                        clock.clone(),
+                        cfg.sched.safepoint_layers,
+                    );
+                    let mut engine = ServingEngine::for_shard(
+                        shard,
+                        cfg.clone(),
+                        backend,
+                        clock,
+                        profile(),
+                        src,
+                    );
+                    engine.set_shard_loads(loads);
+                    if let Some(st) = &st {
+                        engine.set_steal_coordinator(st.clone());
+                    }
+                    match &st {
+                        Some(st) => {
+                            // the fleet idle/retire protocol, over live
+                            // channel sources
+                            let started = std::time::Instant::now();
+                            'serve: loop {
+                                engine.run(UNTIL);
+                                if !engine.drained() {
+                                    break; // time cap with work admitted
+                                }
+                                if engine.poll_steals() {
+                                    continue;
+                                }
+                                st.enter_idle(shard);
+                                loop {
+                                    if st.finished() {
+                                        break 'serve;
+                                    }
+                                    if engine.poll_steals() {
+                                        st.leave_idle(shard);
+                                        continue 'serve;
+                                    }
+                                    engine.post_hunger();
+                                    if started.elapsed()
+                                        > std::time::Duration::from_secs(30)
+                                    {
+                                        break 'serve; // never hang the test
+                                    }
+                                    std::thread::sleep(
+                                        std::time::Duration::from_micros(50),
+                                    );
+                                }
+                            }
+                            st.retire(shard);
+                        }
+                        None => {
+                            engine.run(UNTIL);
+                        }
+                    }
+                    assert!(engine.kv.check_conservation(), "shard {shard}");
+                    let mut fins = BTreeMap::new();
+                    for r in engine.table.values() {
+                        if r.state == State::Finished {
+                            let prev = fins.insert(r.submitted_id, r.generated);
+                            assert!(prev.is_none(), "request finished twice on one shard");
+                        }
+                    }
+                    (fins, engine.rec.steals_in, engine.rec.steals_out)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("shard thread panicked"))
+            .collect()
+    });
+
+    let mut all = BTreeMap::new();
+    let (mut steals_in, mut steals_out) = (0, 0);
+    for (fins, si, so) in results {
+        for (sid, gen) in fins {
+            let prev = all.insert(sid, gen);
+            assert!(prev.is_none(), "request {sid} finished on two shards");
+        }
+        steals_in += si;
+        steals_out += so;
+    }
+    assert_eq!(all.len(), expected.len(), "every submission completes");
+    for sid in expected {
+        assert!(all.contains_key(&sid), "submission {sid} lost");
+    }
+    (all, steals_in, steals_out)
+}
+
+#[test]
+fn live_sharded_client_steal_on_off_equivalence() {
+    let (off, off_in, _off_out) = live_run(false);
+    let (on, on_in, on_out) = live_run(true);
+    assert_eq!(off_in, 0, "no coordinator, no steals");
+    assert!(on_in > 0, "the skewed live burst must trigger migrations");
+    assert_eq!(on_in, on_out, "every migration adopted exactly once");
+    assert_eq!(
+        off, on,
+        "stealing must not change which requests complete or their lengths"
+    );
+}

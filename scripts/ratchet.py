@@ -1,0 +1,119 @@
+#!/usr/bin/env python3
+"""Bench-regression ratchet (scaffold).
+
+Diffs freshly produced bench result files (BENCH_sched.json,
+BENCH_jobs.json, ...) against a checked-in baseline and *warns* on
+regressions. Non-fatal by default: hosted-runner numbers are too noisy
+to gate on until a stable baseline exists (see ROADMAP.md) — pass
+--fail to turn warnings into a nonzero exit once that day comes.
+
+Baseline format (scripts/bench_baseline.json):
+
+    {
+      "<metric name>": {
+        "file": "BENCH_jobs.json",        # bench output file
+        "path": "attainment_urgency_minus_fifo",  # dotted path, [i] indexes arrays
+        "direction": "min",               # "min": value must stay >= baseline*(1-tol)
+                                          # "max": value must stay <= baseline*(1+tol)
+        "baseline": null,                 # null = unpopulated (record-only)
+        "tolerance": 0.10
+      }, ...
+    }
+
+A null baseline never warns — the script prints the measured value so a
+maintainer (or a future CI job) can ratchet it in.
+
+Usage: python3 scripts/ratchet.py [--dir .] [--baseline scripts/bench_baseline.json] [--fail]
+"""
+
+import argparse
+import json
+import os
+import re
+import sys
+
+
+def dig(obj, path):
+    """Resolve a dotted path with optional [i] array indexing."""
+    for part in path.split("."):
+        m = re.fullmatch(r"(.*?)((?:\[\d+\])*)", part)
+        key, idxs = m.group(1), re.findall(r"\[(\d+)\]", m.group(2))
+        if key:
+            if not isinstance(obj, dict) or key not in obj:
+                raise KeyError(f"missing key {key!r} in path {path!r}")
+            obj = obj[key]
+        for i in idxs:
+            obj = obj[int(i)]
+    return obj
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dir", default=".", help="directory holding BENCH_*.json files")
+    ap.add_argument(
+        "--baseline",
+        default=os.path.join(os.path.dirname(__file__), "bench_baseline.json"),
+    )
+    ap.add_argument(
+        "--fail",
+        action="store_true",
+        help="exit nonzero on regressions (default: warn only)",
+    )
+    args = ap.parse_args()
+
+    try:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+    except FileNotFoundError:
+        print(f"ratchet: no baseline at {args.baseline}; nothing to check")
+        return 0
+
+    warnings = 0
+    missing = 0
+    for name, spec in sorted(baseline.items()):
+        path = os.path.join(args.dir, spec["file"])
+        try:
+            with open(path) as f:
+                results = json.load(f)
+            value = dig(results, spec["path"])
+        except FileNotFoundError:
+            print(f"ratchet: {name}: {spec['file']} not found (bench not run?) -- skipped")
+            missing += 1
+            continue
+        except (KeyError, IndexError, TypeError) as e:
+            print(f"ratchet: {name}: cannot resolve {spec['path']!r}: {e} -- skipped")
+            missing += 1
+            continue
+
+        base = spec.get("baseline")
+        if base is None:
+            print(f"ratchet: {name}: measured {value} (baseline unpopulated -- record-only)")
+            continue
+        tol = float(spec.get("tolerance", 0.10))
+        direction = spec.get("direction", "min")
+        if direction == "min":
+            limit = base * (1.0 - tol)
+            ok = value >= limit
+            rel = "<" if not ok else ">="
+        else:
+            limit = base * (1.0 + tol)
+            ok = value <= limit
+            rel = ">" if not ok else "<="
+        if ok:
+            print(f"ratchet: {name}: OK ({value} {rel} limit {limit:.4g}, baseline {base})")
+        else:
+            print(
+                f"ratchet: WARNING: {name} regressed: {value} {rel} limit {limit:.4g} "
+                f"(baseline {base}, tolerance {tol:.0%})"
+            )
+            warnings += 1
+
+    print(
+        f"ratchet: {warnings} regression warning(s), {missing} metric(s) skipped"
+        + ("" if args.fail or warnings == 0 else " -- non-fatal (pass --fail to gate)")
+    )
+    return 1 if (args.fail and warnings) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
