@@ -1,0 +1,259 @@
+//! `bench_fault` — fault-tolerance acceptance bench.
+//!
+//! Serves one job workload (a spread of short-decode jobs plus a
+//! long-decode straggler) with bursty online background traffic on a
+//! 4-shard fleet, twice:
+//!
+//! * **baseline** — crash-free, no store, no faults;
+//! * **faulted** — the full failure menu from one deterministic
+//!   [`FaultPlan`]: shard 1 is killed mid-run, its first durable
+//!   checkpoint write is torn, steal polls are delayed and the first
+//!   deliveries dropped — then the crash-recovery driver
+//!   ([`run_jobs_with_recovery`]) rebuilds the dead shard's work from
+//!   the durable store on the 3 survivors under degraded offline
+//!   budgets.
+//!
+//! Acceptance (asserted here):
+//!
+//! * exactly the planned shard dies, with the injected panic payload;
+//! * the durable store ends with the **same completed set and
+//!   byte-identical token streams** as the crash-free run;
+//! * online requests routed to the dead shard surface in the
+//!   fail-fast set (never silently dropped);
+//! * the survivors' online TTFT-violation rate stays within 5 points
+//!   of the baseline — recovery sheds offline throughput, not online
+//!   latency.
+//!
+//! Results go to `BENCH_fault.json` (schema: rust/PERF.md §7). Scale
+//! with `FAULT_BENCH_JOBS` (short jobs, default 16; CI smoke uses 8)
+//! and `FAULT_BENCH_KILL_ITER` (default 30 — early enough that every
+//! shard is still busy, so the kill lands deterministically).
+
+use conserve::batch::{
+    run_jobs, run_jobs_with_recovery, FinishedOutput, JobInput, JobManager, JobRequest,
+    JobRunOpts, JobStore, NOMINAL_TOK_PER_S,
+};
+use conserve::config::EngineConfig;
+use conserve::request::{Class, Request, TokenId};
+use conserve::util::fault::{silence_injected_panics, FaultPlan, INJECTED_PANIC_MARKER};
+use conserve::util::json::{num, obj, Json};
+use conserve::util::rng::Rng;
+use conserve::workload::trace::onoff_trace;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+const N_SHARDS: usize = 4;
+const ONLINE_SPAN_S: f64 = 30.0;
+
+fn job_inputs(n_jobs: usize) -> Vec<JobInput> {
+    let mut rng = Rng::new(0xFA17);
+    let mut jobs = Vec::new();
+    for _ in 0..n_jobs {
+        jobs.push(JobInput {
+            tenant: 1 + (jobs.len() % 5) as u32,
+            tier: (jobs.len() % 3) as u8,
+            submitted_at: 0,
+            deadline: 0,
+            requests: (0..3)
+                .map(|_| JobRequest {
+                    prompt: Vec::new(),
+                    prompt_len: rng.range_usize(128, 1024),
+                    max_new_tokens: 32,
+                })
+                .collect(),
+        });
+    }
+    // one long-decode straggler so the fleet stays busy and steals
+    jobs.push(JobInput {
+        tenant: 9,
+        tier: 2,
+        submitted_at: 0,
+        deadline: 0,
+        requests: (0..3)
+            .map(|_| JobRequest {
+                prompt: Vec::new(),
+                prompt_len: rng.range_usize(1536, 2560),
+                max_new_tokens: 256,
+            })
+            .collect(),
+    });
+    jobs
+}
+
+/// Admit the workload into a fresh manager and append the online
+/// background trace (ids 1.. are disjoint from ticket-bit job sids).
+fn build_events(jm: &mut JobManager, n_jobs: usize) -> (Vec<Request>, usize) {
+    let mut events = Vec::new();
+    for input in job_inputs(n_jobs) {
+        jm.admit(&input, &mut events);
+    }
+    let n_job_requests = events.len();
+    let mut rng = Rng::new(7);
+    for (i, &t) in onoff_trace(42, ONLINE_SPAN_S, 20.0, 6.0, 2.0).iter().enumerate() {
+        let input = rng.range_usize(64, 256);
+        let output = rng.range_usize(8, 24);
+        events.push(Request::new(
+            1 + i as u64,
+            Class::Online,
+            vec![],
+            input,
+            output,
+            t,
+        ));
+    }
+    (events, n_job_requests)
+}
+
+fn outputs_by_sid(fins: &[FinishedOutput]) -> BTreeMap<u64, Vec<TokenId>> {
+    fins.iter().map(|f| (f.sid, f.output.clone())).collect()
+}
+
+fn main() {
+    let n_jobs: usize = std::env::var("FAULT_BENCH_JOBS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(16);
+    let kill_iter: u64 = std::env::var("FAULT_BENCH_KILL_ITER")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(30);
+    silence_injected_panics();
+    let cfg = EngineConfig::sim_a100_7b();
+    let svc = NOMINAL_TOK_PER_S * N_SHARDS as f64;
+    let total_job_tokens: u64 = job_inputs(n_jobs)
+        .iter()
+        .flat_map(|j| &j.requests)
+        .map(|r| (r.prompt_len + r.max_new_tokens) as u64)
+        .sum();
+    let duration_s = (total_job_tokens as f64 / svc * 6.0).max(60.0);
+    let opts = JobRunOpts {
+        collect_state: true,
+        synth_tokens: true,
+        ckpt_every: 10,
+        svc_tok_per_s: svc,
+        ..JobRunOpts::new(N_SHARDS, duration_s)
+    };
+
+    // ---- baseline: crash-free ----
+    let mut jm = JobManager::new(svc);
+    let (events, n_job_requests) = build_events(&mut jm, n_jobs);
+    let n_online = events.len() - n_job_requests;
+    println!(
+        "=== bench_fault ({} jobs / {n_job_requests} job requests + {n_online} online, {N_SHARDS} shards, kill=1@{kill_iter}) ===",
+        n_jobs + 1
+    );
+    let t0 = Instant::now();
+    let base = run_jobs(&cfg, &opts, jm.board().clone(), events);
+    let base_wall = t0.elapsed().as_secs_f64();
+    assert!(base.deaths.is_empty(), "baseline must be healthy");
+    let want = outputs_by_sid(&base.finished);
+    assert_eq!(want.len(), n_job_requests, "baseline completes every job request");
+    let base_viol = base.run.merged.ttft_violations;
+    println!(
+        "baseline: wall={base_wall:.2}s makespan={:.1}s viol={:.2}% offline_fin={}",
+        base.run.makespan_s,
+        base_viol * 100.0,
+        base.run.merged.offline_finished,
+    );
+
+    // ---- faulted: kill + torn checkpoint + degraded steal channel ----
+    let dir = std::env::temp_dir().join(format!("conserve-bench-fault-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let plan = FaultPlan::parse(&format!(
+        "kill=1@{kill_iter},delay-steals=3,drop-steals=2,torn-ckpt=1"
+    ))
+    .unwrap();
+    let mut jm2 = JobManager::new(svc);
+    let (events2, _) = build_events(&mut jm2, n_jobs);
+    let store = {
+        let mut s = JobStore::open(&dir).expect("open job store");
+        for spec in jm2.specs().to_vec() {
+            s.record_spec(&spec, &events2).expect("record spec");
+        }
+        Arc::new(Mutex::new(s))
+    };
+    let t1 = Instant::now();
+    let rec = run_jobs_with_recovery(
+        &cfg,
+        &opts,
+        jm2.board().clone(),
+        events2,
+        store.clone(),
+        Some(&plan),
+    )
+    .expect("recovery driver");
+    let fault_wall = t1.elapsed().as_secs_f64();
+    drop(store);
+
+    // ---- acceptance ----
+    assert_eq!(rec.first.deaths.len(), 1, "exactly the planned shard dies");
+    assert_eq!(rec.first.deaths[0].shard, 1);
+    assert!(rec.first.deaths[0].payload.contains(INJECTED_PANIC_MARKER));
+    assert!(rec.recovery.is_some(), "a death must trigger the recovery round");
+    let fault_viol = rec.first.run.merged.ttft_violations;
+    let got: BTreeMap<u64, Vec<TokenId>> = JobStore::load(&dir)
+        .expect("reload store")
+        .outputs
+        .values()
+        .map(|f| (f.sid, f.output.clone()))
+        .collect();
+    let outputs_match = got == want;
+    assert!(
+        outputs_match,
+        "recovered outputs must match the crash-free run byte for byte \
+         ({} recovered vs {} baseline)",
+        got.len(),
+        want.len()
+    );
+    assert!(
+        fault_viol <= base_viol + 0.05,
+        "survivor TTFT-violation rate must stay within 5 points of baseline: \
+         {fault_viol:.4} vs {base_viol:.4}"
+    );
+    let flush_records = rec.first.run.merged.ckpt_flush_records
+        + rec.recovery.as_ref().map_or(0, |r| r.run.merged.ckpt_flush_records);
+    println!(
+        "faulted:  wall={fault_wall:.2}s deaths=1 failed_online={} resumed={} torn_lines={} flush_records={} viol={:.2}%",
+        rec.first.failed_online.len(),
+        rec.resumed_requests,
+        rec.torn_checkpoint_lines,
+        flush_records,
+        fault_viol * 100.0,
+    );
+    println!(
+        "recovery matched the crash-free run: {} streams byte-identical",
+        got.len()
+    );
+
+    // ---- emit BENCH_fault.json (schema documented in rust/PERF.md §7) ----
+    let json = obj(vec![
+        ("jobs", num((n_jobs + 1) as f64)),
+        ("job_requests", num(n_job_requests as f64)),
+        ("online_requests", num(n_online as f64)),
+        ("shards", num(N_SHARDS as f64)),
+        ("kill_iter", num(kill_iter as f64)),
+        ("plan", Json::Str(plan.to_string())),
+        ("baseline_wall_s", num(base_wall)),
+        ("faulted_wall_s", num(fault_wall)),
+        ("baseline_ttft_violation_rate", num(base_viol)),
+        ("survivor_ttft_violation_rate", num(fault_viol)),
+        ("outputs_match", num(f64::from(u8::from(outputs_match)))),
+        ("deaths", num(rec.first.deaths.len() as f64)),
+        ("failed_online", num(rec.first.failed_online.len() as f64)),
+        ("resumed_requests", num(rec.resumed_requests as f64)),
+        ("torn_checkpoint_lines", num(rec.torn_checkpoint_lines as f64)),
+        ("ckpt_flush_records", num(flush_records as f64)),
+        (
+            "flush_write_amplification",
+            num(flush_records as f64 / n_job_requests as f64),
+        ),
+    ]);
+    let out_path =
+        std::env::var("FAULT_BENCH_OUT").unwrap_or_else(|_| "BENCH_fault.json".into());
+    std::fs::write(&out_path, json.to_string()).expect("write BENCH_fault.json");
+    println!("\nwrote {out_path}");
+    let _ = Json::parse(&json.to_string()).expect("self-emitted json parses");
+    let _ = std::fs::remove_dir_all(&dir);
+    println!("bench_fault OK");
+}

@@ -34,18 +34,30 @@
 //!   restart and replays unfinished requests; keyed sampling makes the
 //!   replayed token streams byte-identical to an uninterrupted run.
 //! * [`run_jobs`] — the sharded trace-mode driver (admission → routing →
-//!   co-serving fleet → attainment report), built on
-//!   [`run_sharded_traces_with`].
+//!   co-serving fleet → attainment report), built on the supervised
+//!   fleet runner ([`run_sharded_traces_supervised`]).
+//! * [`run_jobs_with_store`]/[`run_jobs_with_recovery`] — the
+//!   fault-tolerance surface: periodic durable checkpoint flushes
+//!   ([`JobRunOpts::ckpt_every`]), deterministic fault injection
+//!   ([`FaultPlan`]), structured shard deaths with fail-fast online
+//!   reporting, and checkpoint-backed offline recovery on the
+//!   surviving shards under degraded offline budgets (failure model in
+//!   `rust/ARCHITECTURE.md` §8).
 //!
-//! Acceptance bench: `cargo bench --bench bench_jobs` (FIFO vs urgency
-//! scheduling → `BENCH_jobs.json`, schema in `rust/PERF.md` §6).
+//! Acceptance benches: `cargo bench --bench bench_jobs` (FIFO vs
+//! urgency scheduling → `BENCH_jobs.json`, schema in `rust/PERF.md`
+//! §6) and `cargo bench --bench bench_fault` (kill/recovery equivalence
+//! → `BENCH_fault.json`, schema in `rust/PERF.md` §7).
 
 pub mod store;
 
 use crate::config::EngineConfig;
 use crate::request::{PortableRequest, Request, TokenId, URGENCY_MAX};
 use crate::request::{Class, State};
-use crate::shard::{run_sharded_traces_with, Placement, ShardRouter, ShardedRun, StealConfig};
+use crate::shard::{
+    run_sharded_traces_supervised, Placement, ShardDied, ShardRouter, ShardedRun, StealConfig,
+};
+use crate::util::fault::FaultPlan;
 use crate::TimeUs;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -555,6 +567,16 @@ pub struct JobRunOpts {
     /// position) so collected outputs are byte-comparable across runs,
     /// restarts and migrations.
     pub synth_tokens: bool,
+    /// Flush cold snapshots of in-progress job work to the attached
+    /// [`JobStore`] every this many engine iterations (0 = end-of-run
+    /// persistence only). Only meaningful with a store sink
+    /// ([`run_jobs_with_store`]/[`run_jobs_with_recovery`]).
+    pub ckpt_every: u64,
+    /// Re-stamp queued-offline urgency on this virtual-time interval
+    /// (µs; 0 = admission-time stamps only).
+    pub restamp_every_us: u64,
+    /// Service-rate estimate behind urgency (re-)computation.
+    pub svc_tok_per_s: f64,
 }
 
 impl JobRunOpts {
@@ -566,6 +588,9 @@ impl JobRunOpts {
             duration_s,
             collect_state: false,
             synth_tokens: false,
+            ckpt_every: 0,
+            restamp_every_us: 0,
+            svc_tok_per_s: NOMINAL_TOK_PER_S,
         }
     }
 }
@@ -600,7 +625,19 @@ pub struct JobRunOutcome {
     pub finished: Vec<FinishedOutput>,
     /// Cold snapshots of requests still unfinished at run end (empty
     /// unless `collect_state`) — what a durable store checkpoints.
+    /// Dead shards contribute nothing here: their in-memory state died
+    /// with them, which is exactly what the periodic store flush
+    /// bounds.
     pub unfinished: Vec<PortableRequest>,
+    /// Structured shard deaths (empty on a healthy run). See
+    /// [`crate::shard::supervisor`].
+    pub deaths: Vec<ShardDied>,
+    /// Submission ids of *online* requests routed to shards that died —
+    /// fail-fast set for client retry. Conservative superset: routing
+    /// is known, per-request completion on the dead shard is not (its
+    /// recorder died with it), so ids that finished before the crash
+    /// are included.
+    pub failed_online: Vec<u64>,
 }
 
 /// Serve `events` (stamped job requests + any online background
@@ -615,15 +652,50 @@ pub fn run_jobs(
     board: Arc<JobBoard>,
     events: Vec<Request>,
 ) -> JobRunOutcome {
+    run_jobs_with_store(cfg, opts, board, events, None, None)
+}
+
+/// [`run_jobs`] with the full fault-tolerance surface: an optional
+/// durable [`JobStore`] sink (periodic checkpoint flushes every
+/// [`JobRunOpts::ckpt_every`] iterations) and an optional deterministic
+/// [`FaultPlan`]. Runs on the *supervised* fleet
+/// ([`run_sharded_traces_supervised`]): a shard death does not
+/// propagate — it surfaces in [`JobRunOutcome::deaths`], with the
+/// shard's online routing reported in [`JobRunOutcome::failed_online`]
+/// for client retry. Use [`run_jobs_with_recovery`] to also rebuild the
+/// dead shard's offline work from the store.
+pub fn run_jobs_with_store(
+    cfg: &EngineConfig,
+    opts: &JobRunOpts,
+    board: Arc<JobBoard>,
+    events: Vec<Request>,
+    sink: Option<Arc<Mutex<JobStore>>>,
+    faults: Option<&FaultPlan>,
+) -> JobRunOutcome {
     let mut router = ShardRouter::new(opts.n_shards, opts.placement, cfg);
     for r in events {
         router.push(r);
     }
     let traces = router.into_traces();
+    // online routing per shard, captured before the run: if a shard
+    // dies, these are the requests whose clients must fail fast/retry
+    let online_by_shard: Vec<Vec<u64>> = traces
+        .iter()
+        .map(|t| {
+            t.iter()
+                .filter(|r| r.class == Class::Online)
+                .map(|r| r.submitted_id)
+                .collect()
+        })
+        .collect();
     let collect_state = opts.collect_state;
     let synth = opts.synth_tokens;
+    let ckpt_every = opts.ckpt_every;
+    let restamp_every_us = opts.restamp_every_us;
+    let svc = opts.svc_tok_per_s;
+    let plan = faults.cloned();
     let setup_board = board.clone();
-    let (run, extras) = run_sharded_traces_with(
+    let fleet = run_sharded_traces_supervised(
         cfg,
         traces,
         opts.duration_s,
@@ -635,6 +707,18 @@ pub fn run_jobs(
             }
             if synth {
                 e.backend.set_synth_tokens(true);
+            }
+            if let Some(sink) = &sink {
+                if ckpt_every > 0 {
+                    e.set_ckpt_sink(sink.clone(), ckpt_every);
+                }
+            }
+            if restamp_every_us > 0 {
+                e.set_urgency_restamp(restamp_every_us, svc);
+            }
+            if let Some(p) = &plan {
+                let shard = e.shard();
+                e.set_fault_injector(p.injector_for(shard));
             }
         },
         |e| {
@@ -660,9 +744,14 @@ pub fn run_jobs(
             (finished, unfinished)
         },
     );
+    let deaths = fleet.deaths;
+    let mut failed_online = Vec::new();
+    for d in &deaths {
+        failed_online.extend(online_by_shard.get(d.shard).into_iter().flatten().copied());
+    }
     let mut finished = Vec::new();
     let mut unfinished = Vec::new();
-    for (f, u) in extras {
+    for (f, u) in fleet.extras.into_iter().flatten() {
         finished.extend(f);
         unfinished.extend(u);
     }
@@ -682,12 +771,110 @@ pub fn run_jobs(
         met as f64 / with_deadline as f64
     };
     JobRunOutcome {
-        run,
+        run: fleet.run,
         jobs,
         job_attainment,
         finished,
         unfinished,
+        deaths,
+        failed_online,
     }
+}
+
+/// Everything [`run_jobs_with_recovery`] produces: the faulted first
+/// round, the recovery round on the surviving shard count (if any
+/// shard died), and how much work recovery replayed.
+#[derive(Debug)]
+pub struct RecoveryOutcome {
+    pub first: JobRunOutcome,
+    /// `Some` iff the first round lost a shard.
+    pub recovery: Option<JobRunOutcome>,
+    /// Requests the recovery round replayed (from checkpoints or
+    /// specs).
+    pub resumed_requests: usize,
+    /// Garbled checkpoint lines skipped while loading the store for
+    /// recovery (torn writes).
+    pub torn_checkpoint_lines: usize,
+}
+
+/// Crash-recovery driver: one supervised, checkpointing run, then — if
+/// any shard died — a recovery round on the survivors.
+///
+/// Round 1 serves `events` with `store` attached as the periodic
+/// checkpoint sink (so a crash loses at most [`JobRunOpts::ckpt_every`]
+/// iterations of progress) and persists the surviving shards'
+/// end-of-run state. If every shard survived, that is the whole story.
+/// Otherwise the store — specs, periodic checkpoints, outputs — is
+/// reloaded, a fresh [`JobManager`] [`resume`](JobManager::resume)s
+/// every un-output request (same submission ids ⇒ same keyed sampler
+/// states ⇒ byte-identical streams), and a recovery fleet of
+/// `n_shards − deaths` survivors re-serves them under **degraded
+/// offline budgets** (three-quarter batch-token cap: online admits
+/// first under the paper's scheduler, so shrinking the cap sheds
+/// offline throughput, not online latency). Online requests are *not*
+/// replayed — they failed fast in
+/// [`JobRunOutcome::failed_online`] and retry client-side.
+pub fn run_jobs_with_recovery(
+    cfg: &EngineConfig,
+    opts: &JobRunOpts,
+    board: Arc<JobBoard>,
+    events: Vec<Request>,
+    store: Arc<Mutex<JobStore>>,
+    faults: Option<&FaultPlan>,
+) -> anyhow::Result<RecoveryOutcome> {
+    let first = run_jobs_with_store(cfg, opts, board, events, Some(store.clone()), faults);
+    persist_outcome(&store, &first)?;
+    if first.deaths.is_empty() {
+        return Ok(RecoveryOutcome {
+            first,
+            recovery: None,
+            resumed_requests: 0,
+            torn_checkpoint_lines: 0,
+        });
+    }
+    let dir = store.lock().unwrap().dir().to_path_buf();
+    let state = JobStore::load(&dir)?;
+    let torn_checkpoint_lines = state.torn_checkpoint_lines;
+    let mut jm = JobManager::new(opts.svc_tok_per_s);
+    let mut replay = Vec::new();
+    let resumed_requests = jm.resume(&state, &mut replay);
+    let survivors = opts.n_shards.saturating_sub(first.deaths.len()).max(1);
+    // graceful degradation: the survivor fleet sheds offline first
+    let mut rcfg = cfg.clone();
+    rcfg.sched.max_batch_tokens = (rcfg.sched.max_batch_tokens * 3 / 4).max(1);
+    let ropts = JobRunOpts {
+        n_shards: survivors,
+        ..opts.clone()
+    };
+    let recovery = run_jobs_with_store(
+        &rcfg,
+        &ropts,
+        jm.board().clone(),
+        replay,
+        Some(store.clone()),
+        None,
+    );
+    persist_outcome(&store, &recovery)?;
+    Ok(RecoveryOutcome {
+        first,
+        recovery: Some(recovery),
+        resumed_requests,
+        torn_checkpoint_lines,
+    })
+}
+
+/// Persist a run's end state: durable outputs for everything finished,
+/// a final cold checkpoint for everything not. Duplicates against the
+/// periodic flushes are harmless — last line per sid wins on load.
+fn persist_outcome(store: &Arc<Mutex<JobStore>>, out: &JobRunOutcome) -> anyhow::Result<()> {
+    let mut s = store.lock().unwrap();
+    for f in &out.finished {
+        s.record_output(f)?;
+    }
+    for p in &out.unfinished {
+        s.record_checkpoint(p)?;
+    }
+    Ok(())
 }
 
 #[cfg(test)]

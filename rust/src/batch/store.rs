@@ -22,8 +22,15 @@
 //!
 //! Torn writes: a process can die mid-line, so each file tolerates an
 //! unparseable **final** line (it is ignored — that record simply never
-//! durably happened). Garbage in the middle of a file is real
-//! corruption and fails the load.
+//! durably happened). For `specs.jsonl` and `outputs.jsonl`, garbage in
+//! the *middle* of a file is real corruption and fails the load: those
+//! records exist nowhere else. `checkpoints.jsonl` reads leniently
+//! instead — any unparseable line is skipped and counted
+//! ([`ResumeState::torn_checkpoint_lines`]) — because checkpoints are
+//! redundant by construction: an older checkpoint or the spec line
+//! always covers the same request, so a line garbled by a crash
+//! mid-append (which a later append can merge into) costs bounded
+//! decode progress, never recoverability.
 
 use super::{FinishedOutput, JobSpec};
 use crate::request::{json_f64, json_u64_str, tok_arr, tok_vec, PortableRequest, Request, TokenId};
@@ -60,6 +67,10 @@ pub struct ResumeState {
     pub outputs: BTreeMap<u64, FinishedOutput>,
     /// Newest cold checkpoint by submission id (last line wins).
     pub checkpoints: BTreeMap<u64, PortableRequest>,
+    /// Unparseable lines skipped while reading `checkpoints.jsonl`
+    /// (torn writes and the appends that merged into them). Nonzero
+    /// means recovery fell back past some newest-checkpoint state.
+    pub torn_checkpoint_lines: usize,
 }
 
 /// Append-side handle. One writer per state dir; every record is one
@@ -142,6 +153,22 @@ impl JobStore {
         write_line(&mut self.checkpoints, &line)
     }
 
+    /// Fault-injection hook (`torn-ckpt`, see [`crate::util::fault`]):
+    /// write `p`'s checkpoint record torn mid-line — a prefix of the
+    /// JSON with no terminating newline, flushed — modeling a crash (or
+    /// partial sector write) mid-append. Recovery skips the garbled
+    /// line (lenient checkpoint read) and falls back to the previous
+    /// checkpoint or the spec.
+    pub fn record_checkpoint_torn(&mut self, p: &PortableRequest) -> Result<()> {
+        let s = p.to_json().to_string();
+        let cut = (s.len() * 2 / 3).max(1);
+        self.checkpoints
+            .write_all(&s.as_bytes()[..cut])
+            .context("job store write (torn)")?;
+        self.checkpoints.flush().context("job store flush")?;
+        Ok(())
+    }
+
     /// Persist a completed request's output stream.
     pub fn record_output(&mut self, f: &FinishedOutput) -> Result<()> {
         let line = obj(vec![
@@ -161,7 +188,9 @@ impl JobStore {
         for line in read_jsonl(&dir.join(SPECS))? {
             state.jobs.push(parse_spec_line(&line)?);
         }
-        for line in read_jsonl(&dir.join(CHECKPOINTS))? {
+        let (ckpt_lines, torn) = read_jsonl_lenient(&dir.join(CHECKPOINTS))?;
+        state.torn_checkpoint_lines = torn;
+        for line in ckpt_lines {
             let p = PortableRequest::from_json(&line)?;
             state.checkpoints.insert(p.submitted_id, p);
         }
@@ -236,6 +265,34 @@ fn read_jsonl(path: &Path) -> Result<Vec<Json>> {
         }
     }
     Ok(out)
+}
+
+/// Parse a JSONL file leniently: unparseable lines anywhere are skipped
+/// and counted instead of failing the load. Only the checkpoint file
+/// reads this way — see the module docs for why that is safe there and
+/// nowhere else.
+fn read_jsonl_lenient(path: &Path) -> Result<(Vec<Json>, usize)> {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok((Vec::new(), 0)),
+        Err(e) => return Err(e).with_context(|| format!("reading {}", path.display())),
+    };
+    let mut out = Vec::new();
+    let mut skipped = 0usize;
+    for (i, line) in text.lines().map(str::trim).filter(|l| !l.is_empty()).enumerate() {
+        match Json::parse(line) {
+            Ok(v) => out.push(v),
+            Err(e) => {
+                skipped += 1;
+                eprintln!(
+                    "[job-store] {}: skipping unparseable checkpoint line {} ({e})",
+                    path.display(),
+                    i + 1
+                );
+            }
+        }
+    }
+    Ok((out, skipped))
 }
 
 fn parse_spec_line(j: &Json) -> Result<StoredJob> {
@@ -393,6 +450,54 @@ mod tests {
         assert!(state.outputs.contains_key(&1));
         assert_eq!(state.outputs[&3].output, vec![5, 6]);
         assert!(!state.outputs.contains_key(&2), "the torn record is gone");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn torn_mid_run_checkpoint_falls_back_without_failing_the_load() {
+        // a torn checkpoint write *mid-run* (process keeps appending
+        // afterwards) garbles one mid-file line: the torn fragment and
+        // the next append merge. The lenient checkpoint read must skip
+        // and count it, and later clean checkpoints must still win.
+        let dir = tmp_dir("torn-mid");
+        let mut jm = JobManager::new(5_000.0);
+        let mut reqs = Vec::new();
+        jm.admit(
+            &JobInput {
+                tenant: 1,
+                tier: 2,
+                submitted_at: 0,
+                deadline: 0,
+                requests: vec![JobRequest {
+                    prompt: Vec::new(),
+                    prompt_len: 32,
+                    max_new_tokens: 16,
+                }],
+            },
+            &mut reqs,
+        );
+        {
+            let mut store = JobStore::open(&dir).unwrap();
+            let mut r = reqs[0].clone();
+            r.generated = 2;
+            r.output = vec![1, 2];
+            store.record_checkpoint(&PortableRequest::snapshot_cold(&r)).unwrap();
+            r.generated = 3;
+            r.output = vec![1, 2, 3];
+            store.record_checkpoint_torn(&PortableRequest::snapshot_cold(&r)).unwrap();
+            // this append merges into the torn fragment -> one garbled line
+            r.generated = 5;
+            r.output = vec![1, 2, 3, 4, 5];
+            store.record_checkpoint(&PortableRequest::snapshot_cold(&r)).unwrap();
+            // and a later clean line still wins
+            r.generated = 7;
+            r.output = vec![1, 2, 3, 4, 5, 6, 7];
+            store.record_checkpoint(&PortableRequest::snapshot_cold(&r)).unwrap();
+        }
+        let state = JobStore::load(&dir).unwrap();
+        assert_eq!(state.torn_checkpoint_lines, 1, "garbled merged line counted");
+        let p = &state.checkpoints[&reqs[0].submitted_id];
+        assert_eq!(p.generated, 7, "clean checkpoint after the tear wins");
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

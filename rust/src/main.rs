@@ -27,14 +27,26 @@
 //! conserve jobs     [--jobs N] [--tenants K] [--span S] [--shards N]
 //!                   [--placement deadline|affinity|...] [--steal on|off]
 //!                   [--sched fifo|urgency] [--rate R] [--duration S]
-//!                   [--state-dir DIR] [--resume] [--set key=value ...]
+//!                   [--state-dir DIR] [--resume] [--ckpt-every K]
+//!                   [--restamp-every S] [--faults SPEC]
+//!                   [--set key=value ...]
 //!     Run a multi-tenant batch-job experiment (deadline-aware job
 //!     manager over the sharded fleet) and print per-job deadline
 //!     attainment. --sched urgency enables EDF placement + fair-share
 //!     scheduling; fifo is the baseline. With --state-dir the job
 //!     specs, outputs and checkpoints of unfinished requests persist
 //!     as JSONL; --resume reloads them and replays unfinished work
-//!     (byte-identical token streams — sampling is keyed).
+//!     (byte-identical token streams — sampling is keyed), and
+//!     --ckpt-every K flushes cold checkpoints of in-progress work
+//!     every K engine iterations (crash loses at most one interval).
+//!     --restamp-every S recomputes queued-offline deadline urgency
+//!     every S seconds of virtual time. --faults injects deterministic
+//!     failures (`kill=SHARD@ITER,delay-steals=N,drop-steals=M,
+//!     torn-ckpt=SHARD`): the fleet is supervised, a killed shard is
+//!     retired, its online requests fail fast for client retry, and —
+//!     with --state-dir — its offline work is recovered from the
+//!     durable store onto the survivors under degraded offline
+//!     budgets. See rust/ARCHITECTURE.md §8.
 //! ```
 
 use anyhow::{bail, Context, Result};
@@ -181,6 +193,24 @@ fn jobs(args: &Args) -> Result<()> {
         None => false,
         Some(v) => parse_switch("resume", v)?,
     };
+    let faults = match args.get("faults") {
+        Some(spec) => {
+            let p = conserve::util::fault::FaultPlan::parse(spec)?;
+            (!p.is_noop()).then_some(p)
+        }
+        None => None,
+    };
+    if faults.as_ref().is_some_and(|p| p.kill_shard.is_some()) {
+        if state_dir.is_none() {
+            bail!(
+                "--faults with a kill requires --state-dir: recovery rebuilds the dead \
+                 shard's offline work from the durable store"
+            );
+        }
+        conserve::util::fault::silence_injected_panics();
+    }
+    let ckpt_every = args.get_usize("ckpt-every", 50)? as u64;
+    let restamp_s = args.get_f64("restamp-every", if urgency_mode { 5.0 } else { 0.0 })?;
 
     // A fresh (non-resume) run must not append into an existing state
     // dir: job and submission ids restart from the same bases every
@@ -255,23 +285,50 @@ fn jobs(args: &Args) -> Result<()> {
         duration_s: duration,
         collect_state: store.is_some(),
         synth_tokens: store.is_some(),
+        ckpt_every: if store.is_some() { ckpt_every } else { 0 },
+        restamp_every_us: (restamp_s * 1e6) as u64,
+        svc_tok_per_s: svc,
     };
     let board = jm.board().clone();
-    let out = batch::run_jobs(&cfg, &opts, board, events);
-
-    if let Some(store) = store.as_mut() {
-        // collect_state already restricts these to job-tagged requests
-        for f in &out.finished {
-            store.record_output(f)?;
+    let store = store.map(|s| std::sync::Arc::new(std::sync::Mutex::new(s)));
+    let (out, recovery) = match &store {
+        Some(s) => {
+            // supervised run with the durable sink; on a shard death
+            // the store-backed recovery round runs automatically
+            let rec = batch::run_jobs_with_recovery(
+                &cfg,
+                &opts,
+                board,
+                events,
+                s.clone(),
+                faults.as_ref(),
+            )?;
+            println!(
+                "persisted {} outputs + {} checkpoints to {}",
+                rec.first.finished.len(),
+                rec.first.unfinished.len(),
+                s.lock().unwrap().dir().display()
+            );
+            if rec.recovery.is_some() {
+                println!(
+                    "recovery: replayed {} requests on the survivors ({} torn checkpoint line(s) skipped)",
+                    rec.resumed_requests, rec.torn_checkpoint_lines
+                );
+            }
+            (rec.first, rec.recovery)
         }
-        for p in &out.unfinished {
-            store.record_checkpoint(p)?;
-        }
+        None => (
+            batch::run_jobs_with_store(&cfg, &opts, board, events, None, faults.as_ref()),
+            None,
+        ),
+    };
+    for d in &out.deaths {
+        println!("  SHARD DEATH: {d}");
+    }
+    if !out.failed_online.is_empty() {
         println!(
-            "persisted {} outputs + {} checkpoints to {}",
-            out.finished.len(),
-            out.unfinished.len(),
-            store.dir().display()
+            "  {} online requests failed fast (routed to a dead shard) — clients must retry",
+            out.failed_online.len()
         );
     }
 
@@ -311,6 +368,13 @@ fn jobs(args: &Args) -> Result<()> {
         );
     }
     print_report(&out.run.merged);
+    if let Some(r) = &recovery {
+        println!(
+            "== recovery round: {} survivor shards, degraded offline budgets ==",
+            shards - out.deaths.len()
+        );
+        print_report(&r.run.merged);
+    }
     Ok(())
 }
 
@@ -515,5 +579,11 @@ fn print_report(r: &Report) {
     println!("  preemptions         {:>6} (layer aborts {})", r.preemptions, r.layer_aborts);
     println!("  ckpt/prefetch blks  {:>6} / {}", r.ckpt_blocks, r.prefetch_blocks);
     println!("  blocking swap       {:>10.1} ms", r.blocking_swap_ms);
+    if r.ckpt_flush_records > 0 || r.urgency_restamps > 0 {
+        println!(
+            "  flush recs/restamps {:>6} / {}",
+            r.ckpt_flush_records, r.urgency_restamps
+        );
+    }
     println!("  TTFT SLO violations {:>9.1} %", r.ttft_violations * 100.0);
 }

@@ -206,6 +206,13 @@ pub struct Recorder {
     pub jobs_completed: u64,
     pub jobs_deadline_met: u64,
     pub jobs_deadline_missed: u64,
+    /// Records written by the periodic durable store flush (checkpoint
+    /// lines + finished outputs) — the write-amplification counter of
+    /// the crash-recovery path.
+    pub ckpt_flush_records: u64,
+    /// Queued-offline urgency values changed by the periodic deadline
+    /// re-stamp.
+    pub urgency_restamps: u64,
     /// Per-tenant completion counters for job-tagged requests (short
     /// linear list — a handful of tenants per shard).
     pub tenants: Vec<TenantCounters>,
@@ -245,6 +252,8 @@ impl Recorder {
             jobs_completed: 0,
             jobs_deadline_met: 0,
             jobs_deadline_missed: 0,
+            ckpt_flush_records: 0,
+            urgency_restamps: 0,
             tenants: Vec::new(),
             capture_events: true,
             ring: None,
@@ -426,6 +435,8 @@ impl Recorder {
         self.jobs_completed += other.jobs_completed;
         self.jobs_deadline_met += other.jobs_deadline_met;
         self.jobs_deadline_missed += other.jobs_deadline_missed;
+        self.ckpt_flush_records += other.ckpt_flush_records;
+        self.urgency_restamps += other.urgency_restamps;
         for t in &other.tenants {
             match self.tenants.iter_mut().find(|c| c.tenant == t.tenant) {
                 Some(c) => {

@@ -116,6 +116,11 @@ pub struct Report {
     pub jobs_completed: u64,
     pub jobs_deadline_met: u64,
     pub jobs_deadline_missed: u64,
+    /// Records written by the periodic durable store flush (write
+    /// amplification of the crash-recovery path; 0 without a sink).
+    pub ckpt_flush_records: u64,
+    /// Queued-offline urgency values changed by the periodic re-stamp.
+    pub urgency_restamps: u64,
     /// Per-tenant completion counters for job-tagged requests.
     pub per_tenant: Vec<TenantCounters>,
     pub ttft_violations: f64,
@@ -157,6 +162,8 @@ impl Report {
             jobs_completed: rec.jobs_completed,
             jobs_deadline_met: rec.jobs_deadline_met,
             jobs_deadline_missed: rec.jobs_deadline_missed,
+            ckpt_flush_records: rec.ckpt_flush_records,
+            urgency_restamps: rec.urgency_restamps,
             per_tenant: rec.tenants.clone(),
             ttft_violations: rec.ttft_violation_rate(Class::Online, 1500.0),
             online_timeseries: rec.timeseries(Some(Class::Online), 15 * US_PER_SEC, dur),
@@ -205,6 +212,8 @@ impl Report {
             ("jobs_completed", num(self.jobs_completed as f64)),
             ("jobs_deadline_met", num(self.jobs_deadline_met as f64)),
             ("jobs_deadline_missed", num(self.jobs_deadline_missed as f64)),
+            ("ckpt_flush_records", num(self.ckpt_flush_records as f64)),
+            ("urgency_restamps", num(self.urgency_restamps as f64)),
             (
                 "per_tenant",
                 arr(self.per_tenant.iter().map(TenantCounters::to_json)),

@@ -8,6 +8,21 @@
 //!   (`submit_batch`). Producers run on their own threads; the engine
 //!   polls between iterations and at safepoints, which is exactly where
 //!   the paper's async arrival handler fires.
+//!
+//! # Fail-fast semantics under shard loss
+//!
+//! Online submissions are **not** durable: if the shard a request was
+//! routed to dies (see [`crate::shard::supervisor`]), the request is
+//! reported in
+//! [`JobRunOutcome::failed_online`](crate::batch::JobRunOutcome::failed_online)
+//! as a structured fail-fast set and the client is expected to retry —
+//! resubmission mints a fresh ticket, so a retry can never collide with
+//! the lost request's id. Offline *job* work takes the opposite
+//! contract: specs and periodic checkpoints live in the durable
+//! [`JobStore`](crate::batch::JobStore), and crash recovery
+//! ([`crate::batch::run_jobs_with_recovery`]) replays it with the same
+//! submission ids, so keyed sampling regenerates byte-identical
+//! streams instead of asking the submitter to retry.
 
 use crate::batch::{JobBoard, JobProgress};
 use crate::request::{Class, Request, RequestId, TokenId};

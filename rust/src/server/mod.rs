@@ -13,6 +13,8 @@
 //!   commit results          -> tokens, metrics, KV accounting
 //!   checkpoint tick         -> adaptive incremental checkpointing (§4.4)
 //!   issue prefetches        -> background swap-in within the I/O budget
+//!   store flush tick        -> durable JobStore snapshots every K iters
+//!   urgency restamp tick    -> recompute queued-offline laxity scores
 //! ```
 //!
 //! The loop is allocation-free in steady state: requests live in a slab
@@ -31,7 +33,7 @@
 pub mod api;
 
 use crate::backend::{ExecBackend, ExecOutcome, IterationPlan, PlanSummary, SafepointAction};
-use crate::batch::JobBoard;
+use crate::batch::{FinishedOutput, JobBoard, JobStore};
 use crate::clock::Clock;
 use crate::config::EngineConfig;
 use crate::kvcache::{BlockId, CkptController, Direction, KvManager, SwapEngine, SwapOp};
@@ -41,8 +43,10 @@ use crate::request::{Class, KvResidence, PortableRequest, RequestArena, RequestI
 use crate::scheduler::{budget, preempt, Ctx, Policy, ScheduleOutcome, UnifiedScheduler};
 use crate::shard::steal::{MigratedRequest, StealCoordinator};
 use crate::shard::ShardLoads;
+use crate::util::fault::FaultInjector;
 use crate::TimeUs;
-use std::sync::Arc;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
 
 pub use api::{ArrivalSource, BatchHandle, EngineClient};
 
@@ -107,6 +111,26 @@ pub struct ServingEngine<B: ExecBackend> {
     /// [`LoadSnapshot::steal_score`](crate::shard::placement::LoadSnapshot::steal_score)
     /// so placement can bias fresh offline work toward recent thieves.
     steal_heat: u64,
+    /// Deterministic fault injection ([`crate::util::fault`]): consulted
+    /// at fixed points of the run loop (kill at iteration N, delayed
+    /// polls, dropped deliveries, torn store writes). `None` — and
+    /// zero-cost — outside fault-injected runs.
+    fault: Option<FaultInjector>,
+    /// Durable checkpoint sink: when set, job-tagged offline progress
+    /// flushes as cold [`PortableRequest`] snapshots (and finished
+    /// outputs) every `ckpt_every` iterations, so a crash loses at most
+    /// one flush interval of decode progress.
+    ckpt_sink: Option<Arc<Mutex<JobStore>>>,
+    ckpt_every: u64,
+    /// sid -> decode progress at its last flush (`usize::MAX` once the
+    /// finished output is recorded) — bounds write amplification to one
+    /// line per request per interval, and only on progress.
+    flushed: BTreeMap<u64, usize>,
+    /// Recompute queued-offline urgency on this virtual-time interval
+    /// (0 = off).
+    restamp_every_us: TimeUs,
+    restamp_svc_tok_per_s: f64,
+    next_restamp_at: TimeUs,
     // ---- persistent scratch (reused every iteration) ----
     io_scratch: Vec<SwapOp>,
     ids_scratch: Vec<RequestId>,
@@ -170,6 +194,13 @@ impl<B: ExecBackend> ServingEngine<B> {
             steal: None,
             job_board: None,
             steal_heat: 0,
+            fault: None,
+            ckpt_sink: None,
+            ckpt_every: 0,
+            flushed: BTreeMap::new(),
+            restamp_every_us: 0,
+            restamp_svc_tok_per_s: 0.0,
+            next_restamp_at: 0,
             io_scratch: Vec::new(),
             ids_scratch: Vec::new(),
             blk_scratch: Vec::new(),
@@ -234,6 +265,37 @@ impl<B: ExecBackend> ServingEngine<B> {
         self.retain_finished = retain;
     }
 
+    /// Arm deterministic fault injection for this shard (built from a
+    /// [`FaultPlan`](crate::util::fault::FaultPlan) via
+    /// [`injector_for`](crate::util::fault::FaultPlan::injector_for)).
+    /// The run loop consults it at fixed points: kill at the top of an
+    /// iteration (outside every lock), delayed steal polls, dropped
+    /// steal deliveries, and one torn store write.
+    pub fn set_fault_injector(&mut self, f: FaultInjector) {
+        self.fault = Some(f);
+    }
+
+    /// Attach a durable checkpoint sink: every `every` engine
+    /// iterations the engine flushes cold snapshots of in-progress
+    /// job-tagged requests (and the outputs of newly finished ones) to
+    /// `store`. A crash then loses at most one flush interval of decode
+    /// progress — recovery resumes from the newest checkpoint, and
+    /// keyed sampling makes the re-decoded stream byte-identical.
+    pub fn set_ckpt_sink(&mut self, store: Arc<Mutex<JobStore>>, every: u64) {
+        self.ckpt_sink = Some(store);
+        self.ckpt_every = every.max(1);
+    }
+
+    /// Re-stamp queued offline urgency every `every_us` of virtual time
+    /// (service rate `svc_tok_per_s`), so a request whose deadline
+    /// laxity eroded while it sat queued climbs the admission order
+    /// instead of keeping its stale arrival-time score.
+    pub fn set_urgency_restamp(&mut self, every_us: TimeUs, svc_tok_per_s: f64) {
+        self.restamp_every_us = every_us;
+        self.restamp_svc_tok_per_s = svc_tok_per_s;
+        self.next_restamp_at = every_us;
+    }
+
     /// Run until `until` (µs) has passed *and* all admitted work is done,
     /// or all sources are exhausted. Returns the finish time.
     pub fn run(&mut self, until: TimeUs) -> TimeUs {
@@ -248,6 +310,18 @@ impl<B: ExecBackend> ServingEngine<B> {
         loop {
             let now = self.clock.now();
             self.rec.engine_iters += 1;
+            if let Some(f) = &self.fault {
+                if f.should_kill(self.rec.engine_iters) {
+                    // outside every lock: an injected death can never
+                    // poison shared state (inboxes, the store mutex)
+                    panic!(
+                        "{}: shard {} at iteration {}",
+                        crate::util::fault::INJECTED_PANIC_MARKER,
+                        self.table.shard(),
+                        self.rec.engine_iters
+                    );
+                }
+            }
             if let Some(d) = dbg.as_mut() {
                 if now >= d.last_print + 5_000_000 {
                     d.last_print = now;
@@ -322,6 +396,8 @@ impl<B: ExecBackend> ServingEngine<B> {
                 // blocked on prefetch would otherwise deadlock the queue
                 self.checkpoint_tick();
                 self.prefetch_tick();
+                self.store_flush_tick();
+                self.restamp_tick();
                 self.idle_advance(until);
                 continue;
             }
@@ -347,6 +423,8 @@ impl<B: ExecBackend> ServingEngine<B> {
             // ---- post-iteration memory management (§4.4/§4.5) ----
             self.checkpoint_tick();
             self.prefetch_tick();
+            self.store_flush_tick();
+            self.restamp_tick();
         }
         self.clock.now()
     }
@@ -713,6 +791,108 @@ impl<B: ExecBackend> ServingEngine<B> {
         self.pf_scratch = cands;
     }
 
+    /// Periodic durable flush to the attached [`JobStore`] (see
+    /// [`set_ckpt_sink`](Self::set_ckpt_sink)): every `ckpt_every`
+    /// iterations, write a cold [`PortableRequest`] snapshot for each
+    /// in-progress job-tagged request that made decode progress since
+    /// its last flush, and a durable [`FinishedOutput`] record for each
+    /// newly finished one. Write amplification is bounded: at most one
+    /// line per request per interval, and only on progress (`flushed`
+    /// tracks the generated count at the last flush; `usize::MAX` marks
+    /// a recorded output). A crash therefore loses at most one interval
+    /// of progress, and replaying from the newest checkpoint reproduces
+    /// byte-identical streams via keyed sampling.
+    fn store_flush_tick(&mut self) {
+        let Some(sink) = self.ckpt_sink.clone() else {
+            return;
+        };
+        if self.ckpt_every == 0 || self.rec.engine_iters % self.ckpt_every != 0 {
+            return;
+        }
+        // one-shot injected torn write: consumed only when a checkpoint
+        // record is actually about to be written, so a flush tick with
+        // nothing to say cannot silently eat the armed fault
+        let mut store = sink.lock().unwrap();
+        for r in self.table.values() {
+            if r.job == 0 {
+                continue;
+            }
+            match r.state {
+                State::Aborted => continue,
+                State::Finished => {
+                    if self.flushed.get(&r.submitted_id) != Some(&usize::MAX) {
+                        let f = FinishedOutput {
+                            sid: r.submitted_id,
+                            job: r.job,
+                            generated: r.generated as u64,
+                            output: r.output.clone(),
+                        };
+                        if store.record_output(&f).is_ok() {
+                            self.flushed.insert(r.submitted_id, usize::MAX);
+                            self.rec.ckpt_flush_records += 1;
+                        }
+                    }
+                }
+                _ => {
+                    if r.generated == 0 || self.flushed.get(&r.submitted_id) == Some(&r.generated) {
+                        continue;
+                    }
+                    let p = PortableRequest::snapshot_cold(r);
+                    let torn = self.fault.as_mut().is_some_and(|f| f.take_torn());
+                    let res = if torn {
+                        store.record_checkpoint_torn(&p)
+                    } else {
+                        store.record_checkpoint(&p)
+                    };
+                    if res.is_ok() {
+                        self.flushed.insert(r.submitted_id, r.generated);
+                        self.rec.ckpt_flush_records += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Periodic urgency re-stamp (see
+    /// [`set_urgency_restamp`](Self::set_urgency_restamp)): recompute
+    /// the deadline-laxity urgency of every *queued* offline request at
+    /// the current virtual time. The scheduler reads `urgency` live out
+    /// of the arena on every admission decision, so updating the field
+    /// in place is the whole job — no queue surgery. Running requests
+    /// keep their stamp (they are already past admission), and
+    /// best-effort work (deadline 0) is never stamped.
+    fn restamp_tick(&mut self) {
+        if self.restamp_every_us == 0 {
+            return;
+        }
+        let now = self.clock.now();
+        if now < self.next_restamp_at {
+            return;
+        }
+        self.next_restamp_at = now + self.restamp_every_us;
+        let mut ids = std::mem::take(&mut self.ids_scratch);
+        ids.clear();
+        ids.extend(self.sched.offline_queue_rev());
+        for &id in &ids {
+            let Some(r) = self.table.get_mut(id) else { continue };
+            if r.deadline == 0 {
+                continue;
+            }
+            let remaining = (r.prompt_len + r.max_new_tokens).saturating_sub(r.generated) as u64;
+            let u = crate::batch::urgency_score(
+                r.deadline,
+                now,
+                remaining,
+                self.restamp_svc_tok_per_s,
+            );
+            if u != r.urgency {
+                r.urgency = u;
+                self.rec.urgency_restamps += 1;
+            }
+        }
+        self.ids_scratch = ids;
+    }
+
     /// Complete async swap ops whose modelled time has passed.
     fn complete_io(&mut self, now: TimeUs) {
         if self.swap.is_idle() {
@@ -789,7 +969,13 @@ impl<B: ExecBackend> ServingEngine<B> {
                 out.clear();
                 self.donate_victims(n, &mut out);
                 budget = budget.saturating_sub(out.len());
-                st.deliver(thief, &mut out);
+                if !out.is_empty() && self.fault.as_mut().is_some_and(|f| f.drop_delivery()) {
+                    // injected lost delivery: the orphan pool keeps the
+                    // requests adoptable by any live shard
+                    st.divert_to_orphans(&mut out);
+                } else {
+                    st.deliver(thief, &mut out);
+                }
             }
             self.donate_scratch = out;
             demands.clear();
@@ -805,6 +991,9 @@ impl<B: ExecBackend> ServingEngine<B> {
         let Some(st) = self.steal.clone() else {
             return false;
         };
+        if self.fault.as_mut().is_some_and(|f| f.delay_poll()) {
+            return false; // injected slow mailbox: defer, never lose
+        }
         let mut migs = std::mem::take(&mut self.mig_scratch);
         let n = st.drain_inbox(self.table.shard(), &mut migs);
         if n > 0 {

@@ -30,12 +30,22 @@
 //!   one submission handle; placement reads the [`ShardLoads`] snapshots
 //!   the engines publish each iteration.
 //!
+//! Fleet runs are *supervised* ([`supervisor`]): every worker executes
+//! inside a panic-isolation boundary, a dead shard is retired from the
+//! steal protocol (its mailbox drains to the orphan pool, so nothing
+//! migrated is stranded), and [`run_sharded_traces_supervised`] reports
+//! deaths as structured [`ShardDied`] values on the [`FleetRun`]
+//! instead of propagating the panic. Deterministic fault injection
+//! ([`crate::util::fault`]) exercises every failure path; the failure
+//! model and recovery sequence live in `rust/ARCHITECTURE.md` §8.
+//!
 //! The scaling acceptance bench is `cargo bench --bench
 //! bench_shard_scale` (results: `BENCH_shard.json`; schema in
 //! `rust/PERF.md`).
 
 pub mod placement;
 pub mod steal;
+pub mod supervisor;
 
 use crate::backend::{CostModel, ExecBackend, SimBackend};
 use crate::batch::JobBoard;
@@ -52,6 +62,7 @@ use std::sync::Arc;
 
 pub use placement::{LoadSnapshot, Placement};
 pub use steal::{MigratedRequest, StealConfig, StealCoordinator};
+pub use supervisor::{FleetSupervisor, ShardDied};
 
 /// Lock-free per-shard load board. Engines publish a summary once per
 /// scheduling iteration (three relaxed stores); placement reads a
@@ -125,6 +136,15 @@ impl ShardLoads {
     /// reflects the arrivals queued since the last one).
     pub fn publish_seq(&self, shard: usize) -> u64 {
         self.cells[shard].seq.load(Ordering::Relaxed)
+    }
+
+    /// Heartbeat: bump `shard`'s publish sequence without touching its
+    /// load values. The idle-wait loop of a steal-enabled worker calls
+    /// this (it is not iterating, so it publishes nothing), keeping the
+    /// sequence advancing while the shard is alive — the liveness
+    /// signal [`FleetSupervisor`] samples.
+    pub fn beat(&self, shard: usize) {
+        self.cells[shard].seq.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Read one shard's snapshot.
@@ -294,6 +314,7 @@ fn run_shard_with_steals<B: ExecBackend>(
     engine: &mut ServingEngine<B>,
     until: TimeUs,
     st: &Arc<StealCoordinator>,
+    loads: &ShardLoads,
     shard: usize,
 ) -> TimeUs {
     let mut end;
@@ -308,6 +329,9 @@ fn run_shard_with_steals<B: ExecBackend>(
         st.enter_idle(shard);
         let idle_since = std::time::Instant::now();
         loop {
+            // idle-waiting, not iterating: heartbeat by hand so the
+            // supervisor's liveness sampling keeps seeing this shard
+            loads.beat(shard);
             if st.finished() {
                 break 'serve;
             }
@@ -346,6 +370,13 @@ pub fn run_sharded_traces(
 /// down (harvest finished outputs, snapshot unfinished requests for a
 /// durable store). The batch-job driver ([`crate::batch::run_jobs`]) is
 /// the in-tree consumer; plain runs pass no-ops.
+///
+/// This entry point has no recovery driver behind it, so a shard death
+/// here is a genuine bug: it is surfaced as a panic carrying the
+/// structured [`ShardDied`] record — but only *after* supervision has
+/// retired the dead shard and re-drained its mailbox, so no migrated
+/// request is stranded. Callers that expect (or inject) deaths use
+/// [`run_sharded_traces_supervised`] and get them as data instead.
 pub fn run_sharded_traces_with<T: Send>(
     cfg: &EngineConfig,
     traces: Vec<Vec<Request>>,
@@ -354,6 +385,65 @@ pub fn run_sharded_traces_with<T: Send>(
     setup: impl Fn(&mut ServingEngine<SimBackend>) + Sync,
     collect: impl Fn(&mut ServingEngine<SimBackend>) -> T + Sync,
 ) -> (ShardedRun, Vec<T>) {
+    let fleet = run_sharded_traces_supervised(cfg, traces, duration_s, steal, setup, collect);
+    if let Some(d) = fleet.deaths.first() {
+        panic!("{d}");
+    }
+    let extras = fleet
+        .extras
+        .into_iter()
+        .map(|e| e.expect("no deaths => every collect value present"))
+        .collect();
+    (fleet.run, extras)
+}
+
+/// One supervised fleet run's results: the aggregate [`ShardedRun`]
+/// (a dead shard contributes an empty per-shard report — its recorder
+/// unwound with it), each shard's `collect` value (`None` for dead
+/// shards), and the structured death log.
+#[derive(Debug)]
+pub struct FleetRun<T> {
+    pub run: ShardedRun,
+    /// Per-shard `collect` results; `None` where the worker died.
+    pub extras: Vec<Option<T>>,
+    /// Shards that panicked mid-run, in observation order. Empty on a
+    /// healthy run.
+    pub deaths: Vec<ShardDied>,
+}
+
+/// Stringify a panic payload for a [`ShardDied`] record.
+fn panic_payload_string(payload: &(dyn std::any::Any + Send)) -> String {
+    payload
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_else(|| "<non-string panic payload>".to_string())
+}
+
+/// [`run_sharded_traces_with`] under full supervision: every worker
+/// runs inside a panic-isolation boundary ([`supervisor`]), and a death
+/// becomes data — the dying thread itself marks the shard dead (so the
+/// steal coordinator retires it *immediately*, long before join: its
+/// inbox re-drains to the orphan pool and survivors' termination checks
+/// stop waiting on it), the join handles are resolved without
+/// `.expect`, and the [`FleetRun`] carries the per-shard outcomes plus
+/// the death log. A warn-only watchdog thread samples the heartbeat
+/// sequence numbers ([`ShardLoads::beat`]) while workers run and logs
+/// shards whose heartbeat froze.
+///
+/// Fault injection hooks in through `setup`: arm each engine with
+/// [`ServingEngine::set_fault_injector`] from a
+/// [`FaultPlan`](crate::util::fault::FaultPlan) to kill shards, delay
+/// or drop steal deliveries, and tear checkpoint writes —
+/// deterministically, keyed on iteration counts.
+pub fn run_sharded_traces_supervised<T: Send>(
+    cfg: &EngineConfig,
+    traces: Vec<Vec<Request>>,
+    duration_s: f64,
+    steal: Option<StealConfig>,
+    setup: impl Fn(&mut ServingEngine<SimBackend>) + Sync,
+    collect: impl Fn(&mut ServingEngine<SimBackend>) -> T + Sync,
+) -> FleetRun<T> {
     let n_shards = traces.len();
     assert!(
         (1..=MAX_SHARDS).contains(&n_shards),
@@ -371,14 +461,38 @@ pub fn run_sharded_traces_with<T: Send>(
         LatencyProfile::profile(&mut pb, 4096, 128, 2048).expect("profiling failed")
     };
     let sched_policy = cfg.sched.policy;
-    // stealing needs the load board (backlog signals) even in trace mode
+    // stealing needs the load board (backlog signals) even in trace
+    // mode, and heartbeats ride on its sequence numbers always
     let loads = Arc::new(ShardLoads::new(n_shards, cfg.mem.gpu_blocks));
     let steal_co: Option<Arc<StealCoordinator>> =
         steal.map(|sc| Arc::new(StealCoordinator::new(sc, loads.clone())));
+    let sup = Arc::new(FleetSupervisor::new(loads.clone(), steal_co.clone()));
 
-    let results: Vec<(Recorder, TimeUs, T)> = std::thread::scope(|scope| {
+    let results: Vec<Option<(Recorder, TimeUs, T)>> = std::thread::scope(|scope| {
         let setup = &setup;
         let collect = &collect;
+        // Warn-only stall watchdog: samples heartbeats every ~200 ms of
+        // wall time while any worker still runs. Short ticks keep the
+        // post-run exit latency negligible. Panics are caught directly
+        // at the isolation boundary below, so in-process this only
+        // flags hangs; it never kills anything.
+        let monitor = {
+            let sup = sup.clone();
+            scope.spawn(move || {
+                let mut tick = 0u32;
+                while !sup.all_settled() {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                    tick += 1;
+                    if tick % 40 == 0 {
+                        for shard in sup.sample_stalled() {
+                            eprintln!(
+                                "[supervisor] shard {shard}: heartbeat frozen since last sample"
+                            );
+                        }
+                    }
+                }
+            })
+        };
         let handles: Vec<_> = traces
             .into_iter()
             .enumerate()
@@ -386,63 +500,97 @@ pub fn run_sharded_traces_with<T: Send>(
                 let cfg = cfg.clone();
                 let loads = loads.clone();
                 let steal_co = steal_co.clone();
+                let sup = sup.clone();
                 scope.spawn(move || {
-                    let clock = Clock::virtual_at(0);
-                    let backend =
-                        SimBackend::new(cost, clock.clone(), cfg.sched.safepoint_layers);
-                    let arrivals = ArrivalSource::from_trace(trace);
-                    let mut engine =
-                        ServingEngine::for_shard(shard, cfg, backend, clock, profile, arrivals);
-                    engine.set_retain_finished(false);
-                    setup(&mut engine);
-                    let end = match &steal_co {
-                        Some(st) => {
-                            engine.set_shard_loads(loads);
-                            engine.set_steal_coordinator(st.clone());
-                            run_shard_with_steals(&mut engine, until, st, shard)
+                    let worker = std::panic::AssertUnwindSafe(|| {
+                        let clock = Clock::virtual_at(0);
+                        let backend =
+                            SimBackend::new(cost, clock.clone(), cfg.sched.safepoint_layers);
+                        let arrivals = ArrivalSource::from_trace(trace);
+                        let mut engine =
+                            ServingEngine::for_shard(shard, cfg, backend, clock, profile, arrivals);
+                        engine.set_retain_finished(false);
+                        engine.set_shard_loads(loads.clone());
+                        setup(&mut engine);
+                        let end = match &steal_co {
+                            Some(st) => {
+                                engine.set_steal_coordinator(st.clone());
+                                run_shard_with_steals(&mut engine, until, st, &loads, shard)
+                            }
+                            None => engine.run(until),
+                        };
+                        assert!(
+                            engine.kv.check_conservation(),
+                            "shard {shard}: KV conservation violated"
+                        );
+                        let extra = collect(&mut engine);
+                        (std::mem::take(&mut engine.rec), end, extra)
+                    });
+                    match std::panic::catch_unwind(worker) {
+                        Ok(res) => {
+                            sup.mark_done(shard);
+                            Some(res)
                         }
-                        None => engine.run(until),
-                    };
-                    assert!(
-                        engine.kv.check_conservation(),
-                        "shard {shard}: KV conservation violated"
-                    );
-                    let extra = collect(&mut engine);
-                    (std::mem::take(&mut engine.rec), end, extra)
+                        Err(payload) => {
+                            // the dying thread performs its own death
+                            // bookkeeping: retire must not wait for join
+                            sup.mark_dead(shard, panic_payload_string(payload.as_ref()));
+                            None
+                        }
+                    }
                 })
             })
             .collect();
-        handles
+        let results = handles
             .into_iter()
-            .map(|h| h.join().expect("shard worker panicked"))
-            .collect()
+            .enumerate()
+            .map(|(shard, h)| {
+                // the catch_unwind boundary spans the whole worker body,
+                // so join errors should be impossible — but even one of
+                // those resolves to a structured death, never an .expect
+                h.join().unwrap_or_else(|payload| {
+                    sup.mark_dead(shard, panic_payload_string(payload.as_ref()));
+                    None
+                })
+            })
+            .collect();
+        let _ = monitor.join();
+        results
     });
 
+    let deaths = sup.deaths();
     let makespan = results
         .iter()
+        .flatten()
         .map(|&(_, end, _)| end.min(until))
         .max()
         .unwrap_or(1)
         .max(1);
     let per_shard: Vec<Report> = results
         .iter()
-        .map(|(rec, end, _)| Report::from_engine(rec, sched_policy, (*end).min(until).max(1)))
+        .map(|res| match res {
+            Some((rec, end, _)) => {
+                Report::from_engine(rec, sched_policy, (*end).min(until).max(1))
+            }
+            None => Report::from_engine(&Recorder::new(), sched_policy, makespan),
+        })
         .collect();
     let mut merged_rec = Recorder::new();
-    for (rec, _, _) in &results {
+    for (rec, _, _) in results.iter().flatten() {
         merged_rec.merge(rec);
     }
     let merged = Report::from_engine(&merged_rec, sched_policy, makespan);
-    let extras = results.into_iter().map(|(_, _, e)| e).collect();
-    (
-        ShardedRun {
+    let extras = results.into_iter().map(|res| res.map(|(_, _, e)| e)).collect();
+    FleetRun {
+        run: ShardedRun {
             per_shard,
             shard_requests,
             merged,
             makespan_s: makespan as f64 / US_PER_SEC as f64,
         },
         extras,
-    )
+        deaths,
+    }
 }
 
 /// A submission ticket plus the shard it was routed to (results are
@@ -836,6 +984,40 @@ mod tests {
             "the idle shard must finish stolen offline work: {:?}",
             run.per_shard[1]
         );
+    }
+
+    #[test]
+    fn supervised_run_isolates_an_injected_kill() {
+        use crate::util::fault::{silence_injected_panics, FaultPlan, INJECTED_PANIC_MARKER};
+        silence_injected_panics();
+        let cfg = EngineConfig::sim_a100_7b();
+        let plan = FaultPlan::parse("kill=0@3").unwrap();
+        let mk_trace = || -> Vec<Request> {
+            (0..10).map(|i| req(Class::Online, 128, 8, i * 400_000)).collect()
+        };
+        let fleet = run_sharded_traces_supervised(
+            &cfg,
+            vec![mk_trace(), mk_trace()],
+            600.0,
+            Some(StealConfig::default()),
+            |e| {
+                let shard = e.shard();
+                e.set_fault_injector(plan.injector_for(shard));
+            },
+            |e| e.shard(),
+        );
+        assert_eq!(fleet.deaths.len(), 1, "exactly the injected death");
+        assert_eq!(fleet.deaths[0].shard, 0);
+        assert!(
+            fleet.deaths[0].payload.contains(INJECTED_PANIC_MARKER),
+            "payload travels: {}",
+            fleet.deaths[0].payload
+        );
+        assert!(fleet.extras[0].is_none(), "dead shard yields no collect value");
+        assert_eq!(fleet.extras[1], Some(1));
+        // the survivor's own work completed despite the sibling's death
+        assert_eq!(fleet.run.per_shard[1].online_finished, 10);
+        assert_eq!(fleet.run.merged.online_finished, 10);
     }
 
     #[test]

@@ -33,6 +33,15 @@
 //! a shard that recently acted as a thief is demonstrably under-loaded,
 //! and routing fresh offline work straight there saves the migration
 //! the steal coordinator would otherwise perform.
+//!
+//! Placement is also the layer crash recovery leans on: after a shard
+//! death, the recovery driver ([`crate::batch::run_jobs_with_recovery`])
+//! re-routes the dead shard's resumed work through a fresh router over
+//! the *survivor* fleet. Because load estimates accumulate as requests
+//! are placed, a recovery burst — many checkpointed requests arriving
+//! at once at t=0 — spreads across the survivors instead of piling onto
+//! one shard (asserted by `recovery_burst_spreads_across_survivors`
+//! below).
 
 use crate::request::{Class, URGENCY_MAX};
 
@@ -364,6 +373,39 @@ mod tests {
         assert_eq!(p.pick(Class::Offline, 1, 0, &uneven, 0), 0);
         // online placement ignores the steal signal
         assert_eq!(p.pick(Class::Online, 1, 0, &loads, 0), 0);
+    }
+
+    #[test]
+    fn recovery_burst_spreads_across_survivors() {
+        // a recovery round re-places a burst of resumed offline
+        // requests onto the survivor fleet at t=0: with cumulative
+        // admission-time estimates (what ShardRouter maintains), the
+        // argmin must rotate across survivors, not dogpile shard 0
+        let p = Placement::deadline();
+        let mut loads = vec![LoadSnapshot::default(); 3];
+        for l in &mut loads {
+            l.capacity_blocks = 100;
+        }
+        let need = 4u64;
+        let mut per_shard = [0usize; 3];
+        for _ in 0..24 {
+            let s = p.pick(Class::Offline, need, 0, &loads, 0);
+            per_shard[s] += 1;
+            // what the router's estimate update does on admission
+            loads[s].resident_blocks += need;
+            loads[s].waiting += 1;
+            loads[s].offline_waiting += 1;
+        }
+        assert!(
+            per_shard.iter().all(|&n| n == 8),
+            "24 uniform resumed requests over 3 survivors must land 8/8/8, got {per_shard:?}"
+        );
+        // an uneven start self-corrects: the lighter survivors absorb
+        // the burst first
+        let mut uneven = loads.clone();
+        uneven[0].resident_blocks += 40;
+        let s = p.pick(Class::Offline, need, 0, &uneven, 0);
+        assert_ne!(s, 0, "the pre-loaded survivor must not take the first resumed request");
     }
 
     #[test]

@@ -323,6 +323,18 @@ impl StealCoordinator {
         }
     }
 
+    /// Fault-injection hook (`drop-steals`, see [`crate::util::fault`]):
+    /// route a prepared delivery straight into the orphan pool instead
+    /// of the thief's inbox — models a dropped mailbox delivery without
+    /// losing the requests, since any live shard's idle drain adopts
+    /// orphans. Drains `migs`.
+    pub fn divert_to_orphans(&self, migs: &mut Vec<MigratedRequest>) {
+        if migs.is_empty() {
+            return;
+        }
+        self.orphans.lock().unwrap().append(migs);
+    }
+
     /// Orphaned migrations currently awaiting adoption (observability).
     pub fn orphan_count(&self) -> usize {
         self.orphans.lock().unwrap().len()
@@ -401,6 +413,18 @@ mod tests {
         st.leave_idle(1);
         st.enter_idle(1);
         assert!(st.finished());
+    }
+
+    #[test]
+    fn diverted_deliveries_survive_as_orphans() {
+        let (st, _loads) = coordinator(2);
+        let mut migs = vec![mig(11), mig(12)];
+        st.divert_to_orphans(&mut migs);
+        assert!(migs.is_empty(), "divert drains the buffer like deliver");
+        assert_eq!(st.orphan_count(), 2);
+        let mut inbox = Vec::new();
+        assert_eq!(st.drain_inbox(1, &mut inbox), 2, "a live shard adopts them");
+        assert_eq!(st.orphan_count(), 0);
     }
 
     #[test]

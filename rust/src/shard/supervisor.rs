@@ -1,0 +1,228 @@
+//! Fleet supervision: panic isolation for shard workers, death
+//! bookkeeping, and the heartbeat protocol over [`ShardLoads`]
+//! sequence numbers.
+//!
+//! A shard worker that panics must not take the fleet down with it
+//! (the pre-supervision runner joined with `.expect`, so one death
+//! poisoned every caller) — and it must not strand work either: its
+//! steal mailbox may hold migrated requests no other shard knows
+//! about, and the termination protocol waits on its idle flag forever
+//! if nobody retires it. The supervisor closes both holes:
+//!
+//! * Workers run inside `catch_unwind`; a panic resolves to
+//!   [`FleetSupervisor::mark_dead`], which **retires the shard in the
+//!   [`StealCoordinator`]** — its inbox drains into the orphan pool
+//!   (any live shard adopts the migrations), its pending demands are
+//!   cancelled, and the fleet-done check no longer waits on it.
+//! * Deaths are recorded as structured [`ShardDied`] values (shard
+//!   index + stringified panic payload) that surface in
+//!   [`FleetRun::deaths`](crate::shard::FleetRun) instead of a
+//!   propagated panic, so drivers can run recovery (re-place the dead
+//!   shard's offline work from its newest `JobStore` checkpoints,
+//!   report its online requests as failed for client retry — see
+//!   `crate::batch::run_jobs_with_recovery`).
+//!
+//! ## Heartbeats
+//!
+//! Liveness detection rides on the load board: every engine iteration
+//! bumps the shard's [`ShardLoads`] publish sequence number, and the
+//! idle-wait loop bumps it too ([`ShardLoads::beat`]), so a healthy
+//! shard's sequence always advances between supervisor samples. A
+//! still-`RUNNING` shard whose sequence number froze is *stalled* —
+//! [`FleetSupervisor::sample_stalled`] reports it. Panics are caught
+//! directly (above), so in-process the heartbeat is a watchdog for
+//! hangs, not the primary death signal; a multi-process deployment
+//! would promote it to one.
+
+use super::steal::StealCoordinator;
+use super::ShardLoads;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// A shard worker terminated by panic instead of running to
+/// completion: the structured death record drivers receive in place of
+/// a propagated panic.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardDied {
+    pub shard: usize,
+    /// The panic payload, stringified (`<non-string panic payload>`
+    /// when the payload was neither `String` nor `&str`).
+    pub payload: String,
+}
+
+impl std::fmt::Display for ShardDied {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "shard {} died: {}", self.shard, self.payload)
+    }
+}
+
+impl std::error::Error for ShardDied {}
+
+const RUNNING: u8 = 0;
+const DONE: u8 = 1;
+const DEAD: u8 = 2;
+
+/// Shared supervision state for one fleet run: per-shard lifecycle
+/// flags (running / done / dead), the death log, and the last-seen
+/// heartbeat sequence numbers. All methods are `&self` and lock-free
+/// on the lifecycle path — workers touch it twice (once at startup via
+/// construction, once at exit), never per iteration.
+pub struct FleetSupervisor {
+    states: Vec<AtomicU8>,
+    deaths: Mutex<Vec<ShardDied>>,
+    loads: Arc<ShardLoads>,
+    steal: Option<Arc<StealCoordinator>>,
+    last_seqs: Mutex<Vec<u64>>,
+}
+
+impl FleetSupervisor {
+    /// A supervisor over the shards of `loads`, retiring dead shards in
+    /// `steal` (when the fleet runs the steal protocol).
+    pub fn new(loads: Arc<ShardLoads>, steal: Option<Arc<StealCoordinator>>) -> Self {
+        let n = loads.n_shards();
+        Self {
+            states: (0..n).map(|_| AtomicU8::new(RUNNING)).collect(),
+            deaths: Mutex::new(Vec::new()),
+            loads,
+            steal,
+            // u64::MAX: the first heartbeat sample never reports a
+            // stall (any real sequence value counts as an advance)
+            last_seqs: Mutex::new(vec![u64::MAX; n]),
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.states.len()
+    }
+
+    /// `shard`'s worker ran to completion.
+    pub fn mark_done(&self, shard: usize) {
+        let _ = self.states[shard].compare_exchange(
+            RUNNING,
+            DONE,
+            Ordering::AcqRel,
+            Ordering::Acquire,
+        );
+    }
+
+    /// `shard`'s worker panicked. Idempotent (first caller wins);
+    /// retires the shard in the steal coordinator — stranded inbox
+    /// deliveries drain to the orphan pool, pending demands are
+    /// cancelled, fleet termination stops waiting on it — and records
+    /// the death. Returns true iff this call performed the transition.
+    pub fn mark_dead(&self, shard: usize, payload: String) -> bool {
+        if self.states[shard]
+            .compare_exchange(RUNNING, DEAD, Ordering::AcqRel, Ordering::Acquire)
+            .is_err()
+        {
+            return false;
+        }
+        if let Some(st) = &self.steal {
+            st.retire(shard);
+        }
+        self.deaths.lock().unwrap().push(ShardDied { shard, payload });
+        true
+    }
+
+    pub fn is_dead(&self, shard: usize) -> bool {
+        self.states[shard].load(Ordering::Acquire) == DEAD
+    }
+
+    pub fn dead_count(&self) -> usize {
+        self.states
+            .iter()
+            .filter(|s| s.load(Ordering::Acquire) == DEAD)
+            .count()
+    }
+
+    /// All recorded deaths, in the order they were observed.
+    pub fn deaths(&self) -> Vec<ShardDied> {
+        self.deaths.lock().unwrap().clone()
+    }
+
+    /// True once every shard has exited (done or dead) — the stall
+    /// monitor's termination condition.
+    pub fn all_settled(&self) -> bool {
+        self.states
+            .iter()
+            .all(|s| s.load(Ordering::Acquire) != RUNNING)
+    }
+
+    /// Take one heartbeat sample: returns the shards still marked
+    /// running whose [`ShardLoads`] publish sequence did not advance
+    /// since the previous sample. The first sample never reports a
+    /// stall (there is no previous observation to compare against).
+    pub fn sample_stalled(&self) -> Vec<usize> {
+        let mut last = self.last_seqs.lock().unwrap();
+        let mut stalled = Vec::new();
+        for shard in 0..self.states.len() {
+            let seq = self.loads.publish_seq(shard);
+            let moved = seq != last[shard];
+            last[shard] = seq;
+            if !moved && self.states[shard].load(Ordering::Acquire) == RUNNING {
+                stalled.push(shard);
+            }
+        }
+        stalled
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::shard::StealConfig;
+
+    fn supervisor(n: usize) -> (FleetSupervisor, Arc<ShardLoads>) {
+        let loads = Arc::new(ShardLoads::new(n, 1000));
+        (FleetSupervisor::new(loads.clone(), None), loads)
+    }
+
+    #[test]
+    fn lifecycle_and_death_log() {
+        let (sup, _loads) = supervisor(3);
+        assert_eq!(sup.n_shards(), 3);
+        assert!(!sup.all_settled());
+        sup.mark_done(0);
+        assert!(sup.mark_dead(1, "boom".into()));
+        assert!(!sup.mark_dead(1, "again".into()), "death is idempotent");
+        assert!(!sup.mark_dead(0, "late".into()), "done shards cannot die");
+        assert!(sup.is_dead(1));
+        assert!(!sup.is_dead(0));
+        assert_eq!(sup.dead_count(), 1);
+        assert!(!sup.all_settled(), "shard 2 still running");
+        sup.mark_done(2);
+        assert!(sup.all_settled());
+        let deaths = sup.deaths();
+        assert_eq!(deaths.len(), 1);
+        assert_eq!(deaths[0], ShardDied { shard: 1, payload: "boom".into() });
+        assert_eq!(deaths[0].to_string(), "shard 1 died: boom");
+    }
+
+    #[test]
+    fn mark_dead_retires_the_shard_in_the_coordinator() {
+        let loads = Arc::new(ShardLoads::new(2, 1000));
+        let st = Arc::new(StealCoordinator::new(StealConfig::default(), loads.clone()));
+        let sup = FleetSupervisor::new(loads, Some(st.clone()));
+        // the dead shard's idle flag flips via retire, so a lone
+        // survivor entering idle can finish the fleet
+        sup.mark_dead(1, "kill".into());
+        st.enter_idle(0);
+        assert!(st.finished(), "fleet termination must not wait on a corpse");
+    }
+
+    #[test]
+    fn heartbeat_sampling_reports_frozen_running_shards() {
+        let (sup, loads) = supervisor(2);
+        assert!(sup.sample_stalled().is_empty(), "first sample never stalls");
+        loads.beat(0); // shard 0 heartbeats, shard 1 does not
+        assert_eq!(sup.sample_stalled(), vec![1]);
+        // settled shards are exempt even when frozen
+        sup.mark_done(1);
+        loads.beat(0);
+        assert!(sup.sample_stalled().is_empty());
+        // a publish counts as a heartbeat too
+        loads.publish(0, 1, 0, 0, 0, 0);
+        sup.mark_dead(0, "x".into()); // dead shards are exempt as well
+        assert!(sup.sample_stalled().is_empty());
+    }
+}

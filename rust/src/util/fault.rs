@@ -1,0 +1,255 @@
+//! Deterministic fault injection: a parseable [`FaultPlan`] describing
+//! which failures to inject into a sharded run, and the per-shard
+//! [`FaultInjector`] state the engine consults on its run loop.
+//!
+//! Every trigger is keyed on *engine iteration counts* — never wall
+//! time, never randomness — so a plan replays identically under the
+//! virtual clock: the same plan over the same trace kills the same
+//! shard at the same point of its schedule, every run. Four failure
+//! modes (failure model in `rust/ARCHITECTURE.md` §8):
+//!
+//! * `kill=S@N` — shard `S` panics at the top of its `N`-th engine
+//!   iteration. The panic is caught by the fleet supervisor's isolation
+//!   boundary ([`crate::shard::supervisor`]); the rest of the fleet
+//!   keeps serving.
+//! * `delay-steals=N` — the first `N` steal-inbox polls on every shard
+//!   return empty without draining (a slow mailbox). Deliveries are
+//!   merely deferred, never lost.
+//! * `drop-steals=N` — the first `N` outbound steal deliveries on every
+//!   shard divert to the coordinator's orphan pool instead of the
+//!   thief's inbox (a lost delivery). The orphan pool guarantees some
+//!   live shard still adopts the migrated requests.
+//! * `torn-ckpt=S` — shard `S`'s next periodic [`JobStore`] flush
+//!   writes one checkpoint record torn mid-line (a crash mid-write).
+//!   Recovery skips the torn line and falls back to the previous
+//!   checkpoint or the job spec — bounded, not fatal, loss.
+//!
+//! [`JobStore`]: crate::batch::JobStore
+
+use std::fmt;
+
+/// Marker carried by every fault-injected kill panic. The quiet panic
+/// hook ([`silence_injected_panics`]) recognizes expected deaths by it,
+/// and death payloads containing it are self-describing in reports.
+pub const INJECTED_PANIC_MARKER: &str = "fault-injected kill";
+
+/// A deterministic fault-injection plan for one sharded run. Parsed
+/// from the `--faults` CLI spec; see the module docs for the failure
+/// modes and [`FaultPlan::parse`] for the grammar.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Shard to kill (panic) mid-run, if any.
+    pub kill_shard: Option<usize>,
+    /// Engine iteration (1-based, per-shard counter) at which the kill
+    /// fires. Meaningless unless `kill_shard` is set.
+    pub kill_at_iter: u64,
+    /// Number of initial steal-inbox polls (per shard) that return
+    /// empty without draining.
+    pub delay_steal_polls: u64,
+    /// Number of initial outbound steal deliveries (per shard) diverted
+    /// to the orphan pool.
+    pub drop_steal_deliveries: u64,
+    /// Shard whose next periodic checkpoint flush writes one torn
+    /// (truncated, unterminated) record, if any.
+    pub torn_ckpt_shard: Option<usize>,
+}
+
+impl FaultPlan {
+    /// Parse a comma-separated fault spec:
+    /// `kill=SHARD@ITER,delay-steals=N,drop-steals=M,torn-ckpt=SHARD`.
+    /// Clauses may appear in any order; each at most once (later wins).
+    pub fn parse(spec: &str) -> anyhow::Result<Self> {
+        let mut plan = FaultPlan::default();
+        for clause in spec.split(',').map(str::trim).filter(|c| !c.is_empty()) {
+            let (key, val) = clause
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("bad fault clause `{clause}` (want key=value)"))?;
+            let val = val.trim();
+            match key.trim() {
+                "kill" => {
+                    let (shard, iter) = val.split_once('@').ok_or_else(|| {
+                        anyhow::anyhow!("bad kill spec `{val}` (want SHARD@ITER)")
+                    })?;
+                    plan.kill_shard = Some(shard.trim().parse()?);
+                    plan.kill_at_iter = iter.trim().parse()?;
+                }
+                "delay-steals" => plan.delay_steal_polls = val.parse()?,
+                "drop-steals" => plan.drop_steal_deliveries = val.parse()?,
+                "torn-ckpt" => plan.torn_ckpt_shard = Some(val.parse()?),
+                other => anyhow::bail!(
+                    "unknown fault kind `{other}` (know kill, delay-steals, drop-steals, torn-ckpt)"
+                ),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// True when the plan injects nothing (the default).
+    pub fn is_noop(&self) -> bool {
+        *self == FaultPlan::default()
+    }
+
+    /// The injector state shard `shard` carries into its run. Global
+    /// budgets (`delay-steals`, `drop-steals`) are handed to every
+    /// shard; targeted faults (`kill`, `torn-ckpt`) arm only on theirs.
+    pub fn injector_for(&self, shard: usize) -> FaultInjector {
+        FaultInjector {
+            kill_at_iter: (self.kill_shard == Some(shard)).then_some(self.kill_at_iter.max(1)),
+            delay_polls_left: self.delay_steal_polls,
+            drop_deliveries_left: self.drop_steal_deliveries,
+            torn_ckpt: self.torn_ckpt_shard == Some(shard),
+        }
+    }
+}
+
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut parts: Vec<String> = Vec::new();
+        if let Some(s) = self.kill_shard {
+            parts.push(format!("kill={s}@{}", self.kill_at_iter));
+        }
+        if self.delay_steal_polls > 0 {
+            parts.push(format!("delay-steals={}", self.delay_steal_polls));
+        }
+        if self.drop_steal_deliveries > 0 {
+            parts.push(format!("drop-steals={}", self.drop_steal_deliveries));
+        }
+        if let Some(s) = self.torn_ckpt_shard {
+            parts.push(format!("torn-ckpt={s}"));
+        }
+        f.write_str(&parts.join(","))
+    }
+}
+
+/// Per-shard mutable injection state (built by
+/// [`FaultPlan::injector_for`]). The engine consults it at fixed points
+/// of the run loop; a default injector is inert on every path.
+#[derive(Debug, Clone, Default)]
+pub struct FaultInjector {
+    kill_at_iter: Option<u64>,
+    delay_polls_left: u64,
+    drop_deliveries_left: u64,
+    torn_ckpt: bool,
+}
+
+impl FaultInjector {
+    /// True when this shard's kill is due at iteration `iter` (checked
+    /// at the top of the run loop, outside every lock, so a kill can
+    /// never poison shared state).
+    pub fn should_kill(&self, iter: u64) -> bool {
+        self.kill_at_iter.is_some_and(|k| iter >= k)
+    }
+
+    /// Consume one delayed-poll token; true while the poll should
+    /// pretend the mailbox is empty.
+    pub fn delay_poll(&mut self) -> bool {
+        if self.delay_polls_left > 0 {
+            self.delay_polls_left -= 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Consume one dropped-delivery token; true while the next outbound
+    /// delivery should divert to the orphan pool.
+    pub fn drop_delivery(&mut self) -> bool {
+        if self.drop_deliveries_left > 0 {
+            self.drop_deliveries_left -= 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// One-shot: true exactly once if a torn checkpoint write is armed
+    /// for this shard.
+    pub fn take_torn(&mut self) -> bool {
+        std::mem::take(&mut self.torn_ckpt)
+    }
+}
+
+/// Install (once, process-wide) a panic hook that suppresses the
+/// default stderr spam for *injected* kills while delegating every
+/// other panic to the previous hook. Tests, benches and the CLI call
+/// this before a run that injects kills, so an expected death does not
+/// read like a failure in the output.
+pub fn silence_injected_panics() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let injected = info
+                .payload()
+                .downcast_ref::<String>()
+                .map(String::as_str)
+                .or_else(|| info.payload().downcast_ref::<&str>().copied())
+                .is_some_and(|m| m.contains(INJECTED_PANIC_MARKER));
+            if !injected {
+                prev(info);
+            }
+        }));
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_through_display() {
+        let spec = "kill=1@40,delay-steals=3,drop-steals=2,torn-ckpt=0";
+        let plan = FaultPlan::parse(spec).unwrap();
+        assert_eq!(plan.kill_shard, Some(1));
+        assert_eq!(plan.kill_at_iter, 40);
+        assert_eq!(plan.delay_steal_polls, 3);
+        assert_eq!(plan.drop_steal_deliveries, 2);
+        assert_eq!(plan.torn_ckpt_shard, Some(0));
+        assert_eq!(plan.to_string(), spec);
+        assert_eq!(FaultPlan::parse(&plan.to_string()).unwrap(), plan);
+        assert!(!plan.is_noop());
+        assert!(FaultPlan::parse("").unwrap().is_noop());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        assert!(FaultPlan::parse("kill=1").is_err(), "missing @ITER");
+        assert!(FaultPlan::parse("kill=x@2").is_err(), "non-numeric shard");
+        assert!(FaultPlan::parse("explode=3").is_err(), "unknown kind");
+        assert!(FaultPlan::parse("delay-steals").is_err(), "missing value");
+    }
+
+    #[test]
+    fn injector_targets_and_budgets() {
+        let plan = FaultPlan::parse("kill=1@40,delay-steals=2,drop-steals=1,torn-ckpt=0").unwrap();
+        let mut on_target = plan.injector_for(1);
+        let mut bystander = plan.injector_for(0);
+        assert!(!on_target.should_kill(39));
+        assert!(on_target.should_kill(40));
+        assert!(on_target.should_kill(41), "kill stays armed past its iter");
+        assert!(!bystander.should_kill(u64::MAX - 1));
+        // budgets are per shard and run dry
+        assert!(on_target.delay_poll());
+        assert!(on_target.delay_poll());
+        assert!(!on_target.delay_poll());
+        assert!(bystander.drop_delivery());
+        assert!(!bystander.drop_delivery());
+        // torn write only on its shard, one-shot
+        assert!(bystander.take_torn());
+        assert!(!bystander.take_torn());
+        assert!(!on_target.take_torn());
+        // a default injector is inert everywhere
+        let mut inert = FaultInjector::default();
+        assert!(!inert.should_kill(1));
+        assert!(!inert.delay_poll());
+        assert!(!inert.drop_delivery());
+        assert!(!inert.take_torn());
+    }
+
+    #[test]
+    fn kill_at_iter_zero_still_fires() {
+        // iterations are 1-based; an `@0` spec clamps to the first one
+        let plan = FaultPlan::parse("kill=0@0").unwrap();
+        assert!(plan.injector_for(0).should_kill(1));
+    }
+}

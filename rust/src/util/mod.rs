@@ -1,7 +1,9 @@
 //! Small self-contained utilities: deterministic PRNG + distribution
 //! sampling, a minimal JSON parser/emitter (the environment vendors no
-//! serde), and shape/bucket helpers shared by the engine.
+//! serde), deterministic fault injection ([`fault`]), and shape/bucket
+//! helpers shared by the engine.
 
+pub mod fault;
 pub mod json;
 pub mod rng;
 

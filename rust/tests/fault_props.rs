@@ -1,0 +1,321 @@
+//! Fault-injection properties: the headline crash-recovery guarantee.
+//!
+//! A run that loses a shard to a deterministic injected kill
+//! ([`conserve::util::fault::FaultPlan`]) and recovers through the
+//! durable [`JobStore`] must end with the **same completed set and
+//! byte-identical token streams** as a crash-free run of the identical
+//! workload — keyed sampling ties every stream to its submission id,
+//! not to the shard (or the process) that happened to serve it.
+//! Steal-channel faults (delayed polls, dropped deliveries) must lose
+//! nothing even without a kill, torn checkpoint writes must be skipped
+//! without poisoning the load, and online requests routed to a dead
+//! shard must surface exactly in the fail-fast set.
+
+use conserve::batch::{
+    run_jobs, run_jobs_with_recovery, run_jobs_with_store, FinishedOutput, JobInput,
+    JobManager, JobRequest, JobRunOpts, JobStore,
+};
+use conserve::config::EngineConfig;
+use conserve::request::{Class, Request, TokenId};
+use conserve::shard::ShardRouter;
+use conserve::util::fault::{silence_injected_panics, FaultPlan, INJECTED_PANIC_MARKER};
+use conserve::util::rng::Rng;
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+const N_SHARDS: usize = 2;
+const DURATION_S: f64 = 600.0;
+const N_REQUESTS: usize = 12;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "conserve-faultprops-{tag}-{}-{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// The job mix every test serves: two batches of short requests plus a
+/// long-decode job, so a mid-run kill reliably strands work on the dead
+/// shard while the survivors stay busy long enough to steal.
+fn job_inputs() -> Vec<JobInput> {
+    let mut rng = Rng::new(0xFA17);
+    let mut jobs = Vec::new();
+    for (n, in_lo, in_hi, out) in [(5, 128, 512, 12), (4, 256, 768, 16), (3, 2048, 3072, 384)] {
+        jobs.push(JobInput {
+            tenant: 1 + jobs.len() as u32,
+            tier: (jobs.len() % 3) as u8,
+            submitted_at: 0,
+            deadline: 0,
+            requests: (0..n)
+                .map(|_| JobRequest {
+                    prompt: Vec::new(),
+                    prompt_len: rng.range_usize(in_lo, in_hi),
+                    max_new_tokens: out,
+                })
+                .collect(),
+        });
+    }
+    jobs
+}
+
+fn admit_all(jm: &mut JobManager) -> Vec<Request> {
+    let mut events = Vec::new();
+    for input in job_inputs() {
+        jm.admit(&input, &mut events);
+    }
+    events
+}
+
+fn opts(ckpt_every: u64) -> JobRunOpts {
+    JobRunOpts {
+        collect_state: true,
+        synth_tokens: true,
+        ckpt_every,
+        ..JobRunOpts::new(N_SHARDS, DURATION_S)
+    }
+}
+
+fn outputs_by_sid(fins: &[FinishedOutput]) -> BTreeMap<u64, Vec<TokenId>> {
+    fins.iter().map(|f| (f.sid, f.output.clone())).collect()
+}
+
+/// One crash-free run of the workload: the ground truth every faulted
+/// variant must reproduce.
+fn reference_outputs(cfg: &EngineConfig) -> BTreeMap<u64, Vec<TokenId>> {
+    let mut jm = JobManager::new(5_000.0);
+    let events = admit_all(&mut jm);
+    let out = run_jobs(cfg, &opts(0), jm.board().clone(), events);
+    assert!(out.deaths.is_empty(), "the reference run must be healthy");
+    let want = outputs_by_sid(&out.finished);
+    assert_eq!(want.len(), N_REQUESTS, "reference run finishes everything");
+    assert!(want.values().all(|o| !o.is_empty()));
+    want
+}
+
+/// Open a store in `dir` and persist the job specs (what the CLI does
+/// at admission time) so recovery can rebuild never-checkpointed work.
+fn store_with_specs(
+    dir: &std::path::Path,
+    jm: &JobManager,
+    events: &[Request],
+) -> Arc<Mutex<JobStore>> {
+    let mut store = JobStore::open(dir).unwrap();
+    for spec in jm.specs().to_vec() {
+        store.record_spec(&spec, events).unwrap();
+    }
+    Arc::new(Mutex::new(store))
+}
+
+fn durable_outputs(dir: &std::path::Path) -> BTreeMap<u64, Vec<TokenId>> {
+    JobStore::load(dir)
+        .unwrap()
+        .outputs
+        .values()
+        .map(|f| (f.sid, f.output.clone()))
+        .collect()
+}
+
+#[test]
+fn injected_kill_recovery_matches_crash_free_run() {
+    silence_injected_panics();
+    let cfg = EngineConfig::sim_a100_7b();
+    let want = reference_outputs(&cfg);
+
+    // three kill points: early (mid-prefill), mid (short jobs landing),
+    // late (deep in the long job's decode tail)
+    for kill_iter in [20u64, 35, 50] {
+        let dir = tmp_dir(&format!("kill{kill_iter}"));
+        let mut jm = JobManager::new(5_000.0);
+        let events = admit_all(&mut jm);
+        let store = store_with_specs(&dir, &jm, &events);
+        let plan = FaultPlan::parse(&format!("kill=1@{kill_iter},delay-steals=2")).unwrap();
+        let rec = run_jobs_with_recovery(
+            &cfg,
+            &opts(10),
+            jm.board().clone(),
+            events,
+            store.clone(),
+            Some(&plan),
+        )
+        .unwrap();
+
+        assert_eq!(
+            rec.first.deaths.len(),
+            1,
+            "kill@{kill_iter}: exactly one shard dies"
+        );
+        let d = &rec.first.deaths[0];
+        assert_eq!(d.shard, 1, "the planned shard dies");
+        assert!(
+            d.payload.contains(INJECTED_PANIC_MARKER),
+            "structured death carries the injected payload: {}",
+            d.payload
+        );
+        assert!(
+            rec.first.failed_online.is_empty(),
+            "no online traffic, no fail-fast set"
+        );
+        assert!(rec.recovery.is_some(), "a death must trigger a recovery round");
+        assert!(
+            rec.resumed_requests > 0,
+            "kill@{kill_iter}: the dead shard must strand work for recovery to replay"
+        );
+
+        drop(store);
+        assert_eq!(
+            durable_outputs(&dir),
+            want,
+            "kill@{kill_iter}: completed set + token streams must match the \
+             crash-free run byte for byte"
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}
+
+#[test]
+fn steal_faults_without_a_kill_lose_nothing() {
+    let cfg = EngineConfig::sim_a100_7b();
+    let want = reference_outputs(&cfg);
+
+    // delay every steal poll and drop (divert to the orphan pool) the
+    // first few deliveries: the protocol must re-adopt, never lose
+    let mut jm = JobManager::new(5_000.0);
+    let events = admit_all(&mut jm);
+    let plan = FaultPlan::parse("delay-steals=4,drop-steals=2").unwrap();
+    let out = run_jobs_with_store(
+        &cfg,
+        &opts(0),
+        jm.board().clone(),
+        events,
+        None,
+        Some(&plan),
+    );
+
+    assert!(out.deaths.is_empty(), "steal faults alone kill nobody");
+    assert!(out.failed_online.is_empty());
+    assert!(
+        out.unfinished.is_empty(),
+        "dropped deliveries must be re-adopted from the orphan pool, not lost"
+    );
+    assert_eq!(
+        outputs_by_sid(&out.finished),
+        want,
+        "a degraded steal channel must not change a single byte"
+    );
+}
+
+#[test]
+fn torn_checkpoint_writes_are_skipped_and_recovered() {
+    silence_injected_panics();
+    let cfg = EngineConfig::sim_a100_7b();
+    let want = reference_outputs(&cfg);
+
+    let dir = tmp_dir("torn");
+    let mut jm = JobManager::new(5_000.0);
+    let events = admit_all(&mut jm);
+    let store = store_with_specs(&dir, &jm, &events);
+    // tight flush cadence so the armed torn write lands well before the
+    // kill, and later appends merge into the fragment
+    let plan = FaultPlan::parse("kill=1@50,torn-ckpt=1").unwrap();
+    let rec = run_jobs_with_recovery(
+        &cfg,
+        &opts(5),
+        jm.board().clone(),
+        events,
+        store.clone(),
+        Some(&plan),
+    )
+    .unwrap();
+
+    assert_eq!(rec.first.deaths.len(), 1);
+    assert!(
+        rec.torn_checkpoint_lines >= 1,
+        "the armed torn write must surface as a skipped checkpoint line \
+         (got {})",
+        rec.torn_checkpoint_lines
+    );
+    drop(store);
+    assert_eq!(
+        durable_outputs(&dir),
+        want,
+        "a torn checkpoint costs at most one flush interval, never correctness"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn online_requests_routed_to_the_dead_shard_fail_fast() {
+    silence_injected_panics();
+    let cfg = EngineConfig::sim_a100_7b();
+
+    let dir = tmp_dir("online");
+    let mut jm = JobManager::new(5_000.0);
+    let mut events = admit_all(&mut jm);
+    // specs are recorded against the job-only event list — online
+    // background traffic is not durable-store material
+    let store = store_with_specs(&dir, &jm, &events);
+    let mut rng = Rng::new(11);
+    for i in 0..16u64 {
+        let input = rng.range_usize(64, 256);
+        let output = rng.range_usize(4, 12);
+        events.push(Request::new(
+            1 + i,
+            Class::Online,
+            vec![],
+            input,
+            output,
+            i * 200_000,
+        ));
+    }
+
+    // placement is deterministic (admission-time estimates, lowest-index
+    // ties), so an identical router predicts exactly which online sids
+    // land on the doomed shard
+    let o = opts(10);
+    let mut router = ShardRouter::new(o.n_shards, o.placement, &cfg);
+    for r in events.clone() {
+        router.push(r);
+    }
+    let expected: BTreeSet<u64> = router.into_traces()[1]
+        .iter()
+        .filter(|r| r.class == Class::Online)
+        .map(|r| r.submitted_id)
+        .collect();
+    assert!(
+        !expected.is_empty(),
+        "the workload must route some online work to shard 1"
+    );
+
+    let plan = FaultPlan::parse("kill=1@30").unwrap();
+    let rec = run_jobs_with_recovery(
+        &cfg,
+        &o,
+        jm.board().clone(),
+        events,
+        store.clone(),
+        Some(&plan),
+    )
+    .unwrap();
+
+    let failed: BTreeSet<u64> = rec.first.failed_online.iter().copied().collect();
+    assert_eq!(
+        failed, expected,
+        "the fail-fast set is exactly the dead shard's online routing"
+    );
+    // offline work still fully recovers with online traffic in the mix
+    drop(rec);
+    drop(store);
+    assert_eq!(
+        durable_outputs(&dir).len(),
+        N_REQUESTS,
+        "every job request's output is durable after recovery"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
