@@ -1,0 +1,509 @@
+//! `bench_admission` — front-door overload/drain acceptance bench.
+//!
+//! Runs the live HTTP front door ([`conserve::server::http`]) against a
+//! deliberately small fleet (2 shards, shrunken KV) under a sped-up
+//! cost model and measures the online TTFT-violation rate in four
+//! scenarios:
+//!
+//! * **baseline** — light closed-loop traffic (4 workers), admission on:
+//!   the unloaded violation rate;
+//! * **overload_off** — a 3× burst (24 workers against 8 KV-resident
+//!   slots) with `AdmissionConfig::admit_all()`: queueing delay lands on
+//!   every request and the violation rate blows past the baseline;
+//! * **overload_on** — the same burst with the queue-depth gate armed:
+//!   excess load is shed with structured `429 Retry-After` responses
+//!   (every shed carries a positive `retry_after_ms` — counted here)
+//!   and the *accepted* requests keep a violation rate within 5 points
+//!   of the unloaded baseline;
+//! * **drain_resume** — an offline job is submitted, online burst
+//!   traffic runs, and `/drain` lands mid-flight: zero accepted-request
+//!   loss, unfinished offline work checkpointed, and after a restart the
+//!   job's final outputs are byte-identical to an undrained reference
+//!   run.
+//!
+//! Acceptance (asserted here):
+//!
+//! * `overload_off` violation rate ≥ baseline + 0.05 (the overload is
+//!   real);
+//! * `overload_on` violation rate ≤ baseline + 0.05 (admission defends
+//!   the SLO);
+//! * every shed response carries a positive retry hint;
+//! * every drain ends with `lost_online == 0`; the mid-burst drain
+//!   checkpoints offline progress and the restarted server resumes it to
+//!   byte-identical outputs.
+//!
+//! Results go to `BENCH_admission.json` (schema: rust/PERF.md §8).
+//! Scale with `ADMIT_BENCH_SECS` (seconds per load phase, default 3).
+
+use conserve::backend::CostModel;
+use conserve::batch::JobStore;
+use conserve::config::EngineConfig;
+use conserve::request::TokenId;
+use conserve::server::admission::AdmissionConfig;
+use conserve::server::http::{HttpServer, ServeOptions, ServeSummary};
+use conserve::util::json::{num, obj, Json};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+const N_SHARDS: usize = 2;
+/// Shrunken per-shard KV so a couple dozen workers constitute genuine
+/// overload: (256+512) tokens / 16 per block = 48 blocks per request,
+/// 4 resident per shard, 8 fleet-wide.
+const GPU_BLOCKS: usize = 192;
+const PROMPT_LEN: usize = 256;
+const MAX_TOKENS: usize = 512;
+const SLO_TTFT_MS: f64 = 50.0;
+const BASE_WORKERS: usize = 4;
+const BURST_WORKERS: usize = 24;
+
+/// Same shape as the A100 model, ~50x faster (see the loopback tests).
+fn fast_cost() -> CostModel {
+    CostModel {
+        fixed_us: 50.0,
+        us_per_token: 1.0,
+        weights_load_us: 200.0,
+        us_per_ctx_token: 0.01,
+        us_per_seq: 1.0,
+        ..CostModel::a100_llama2_7b()
+    }
+}
+
+/// Admission for the measured phases: rate bucket neutralized (the
+/// queue-depth gate is the lever under test), shallow online queue.
+fn tuned_admission() -> AdmissionConfig {
+    AdmissionConfig {
+        online_rate: 100_000.0,
+        online_burst: 100_000.0,
+        max_waiting_online: 2,
+        ..AdmissionConfig::default()
+    }
+}
+
+fn start(
+    admission: AdmissionConfig,
+    state_dir: Option<PathBuf>,
+) -> (SocketAddr, JoinHandle<ServeSummary>) {
+    let mut cfg = EngineConfig::sim_a100_7b();
+    cfg.mem.gpu_blocks = GPU_BLOCKS;
+    let opts = ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        shards: N_SHARDS,
+        cost: fast_cost(),
+        admission,
+        state_dir,
+        ckpt_every: 10,
+        ..ServeOptions::default()
+    };
+    let server = HttpServer::bind(cfg, opts).expect("bind front door");
+    let addr = server.local_addr();
+    let handle = std::thread::spawn(move || server.run().expect("serve run"));
+    wait_healthy(addr);
+    (addr, handle)
+}
+
+fn wait_healthy(addr: SocketAddr) {
+    let t0 = Instant::now();
+    loop {
+        if let Some((200, _)) = try_http(addr, "GET", "/healthz", "") {
+            return;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(30), "server never came up");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+fn try_http(addr: SocketAddr, method: &str, path: &str, body: &str) -> Option<(u16, String)> {
+    let mut s = TcpStream::connect(addr).ok()?;
+    s.set_read_timeout(Some(Duration::from_secs(60))).ok()?;
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: b\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(req.as_bytes()).ok()?;
+    let mut raw = Vec::new();
+    s.read_to_end(&mut raw).ok()?;
+    let text = String::from_utf8_lossy(&raw).to_string();
+    let status: u16 = text.split(' ').nth(1)?.parse().ok()?;
+    let body = text
+        .find("\r\n\r\n")
+        .map(|i| text[i + 4..].to_string())
+        .unwrap_or_default();
+    Some((status, body))
+}
+
+fn http(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, String) {
+    try_http(addr, method, path, body).expect("http round trip")
+}
+
+fn drain_and_join(addr: SocketAddr, handle: JoinHandle<ServeSummary>) -> ServeSummary {
+    let (status, _) = http(addr, "POST", "/drain", "");
+    assert_eq!(status, 202);
+    let summary = handle.join().expect("serve thread");
+    assert_eq!(
+        summary.lost_online, 0,
+        "accepted-request loss after drain: {summary:?}"
+    );
+    summary
+}
+
+enum Outcome {
+    Accepted { ttft_ms: f64 },
+    Shed { has_hint: bool },
+    Other,
+    Gone,
+}
+
+/// One streaming completion; TTFT is wall-clock from request write to
+/// the first `"token"` line on the wire.
+fn stream_once(addr: SocketAddr) -> Outcome {
+    let Ok(mut s) = TcpStream::connect(addr) else {
+        return Outcome::Gone;
+    };
+    let _ = s.set_read_timeout(Some(Duration::from_secs(60)));
+    let body =
+        format!(r#"{{"prompt_len": {PROMPT_LEN}, "max_tokens": {MAX_TOKENS}, "stream": true}}"#);
+    let req = format!(
+        "POST /v1/completions HTTP/1.1\r\nHost: b\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    let t0 = Instant::now();
+    if s.write_all(req.as_bytes()).is_err() {
+        return Outcome::Gone;
+    }
+    let mut buf = Vec::new();
+    let mut chunk = [0u8; 4096];
+    let mut ttft: Option<f64> = None;
+    loop {
+        match s.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => {
+                buf.extend_from_slice(&chunk[..n]);
+                if ttft.is_none() && buf.windows(7).any(|w| w == b"\"token\"") {
+                    ttft = Some(t0.elapsed().as_secs_f64() * 1e3);
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    let text = String::from_utf8_lossy(&buf).into_owned();
+    let status: u16 = match text.split(' ').nth(1).and_then(|c| c.parse().ok()) {
+        Some(c) => c,
+        None => return Outcome::Gone,
+    };
+    match status {
+        200 => match ttft {
+            Some(ttft_ms) => Outcome::Accepted { ttft_ms },
+            None => Outcome::Other, // stream ended without a token (drain race)
+        },
+        429 => {
+            let hint = text
+                .find("\r\n\r\n")
+                .and_then(|i| Json::parse(text[i + 4..].trim()).ok())
+                .and_then(|j| j.req("error").req("retry_after_ms").as_f64())
+                .is_some_and(|ms| ms >= 1.0);
+            Outcome::Shed { has_hint: hint }
+        }
+        _ => Outcome::Other,
+    }
+}
+
+#[derive(Default)]
+struct PhaseStats {
+    accepted: u64,
+    shed: u64,
+    sheds_without_hint: u64,
+    other: u64,
+    violations: u64,
+    ttfts: Vec<f64>,
+}
+
+impl PhaseStats {
+    fn violation_rate(&self) -> f64 {
+        if self.accepted == 0 {
+            1.0
+        } else {
+            self.violations as f64 / self.accepted as f64
+        }
+    }
+
+    fn p99_ttft_ms(&self) -> f64 {
+        if self.ttfts.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.ttfts.clone();
+        v.sort_by(f64::total_cmp);
+        v[(v.len() - 1).min(v.len() * 99 / 100)]
+    }
+
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("accepted", num(self.accepted as f64)),
+            ("shed", num(self.shed as f64)),
+            ("sheds_without_hint", num(self.sheds_without_hint as f64)),
+            ("other", num(self.other as f64)),
+            ("ttft_violation_rate", num(self.violation_rate())),
+            ("p99_ttft_ms", num(self.p99_ttft_ms())),
+        ])
+    }
+}
+
+/// Closed-loop load: `workers` threads each looping requests until the
+/// deadline, finishing their in-flight request before exiting.
+fn run_phase(addr: SocketAddr, workers: usize, secs: f64) -> PhaseStats {
+    let deadline = Instant::now() + Duration::from_secs_f64(secs);
+    let stats = Arc::new(Mutex::new(PhaseStats::default()));
+    let handles: Vec<_> = (0..workers)
+        .map(|_| {
+            let stats = Arc::clone(&stats);
+            std::thread::spawn(move || {
+                while Instant::now() < deadline {
+                    let o = stream_once(addr);
+                    let mut st = stats.lock().unwrap();
+                    match o {
+                        Outcome::Accepted { ttft_ms } => {
+                            st.accepted += 1;
+                            if ttft_ms > SLO_TTFT_MS {
+                                st.violations += 1;
+                            }
+                            st.ttfts.push(ttft_ms);
+                        }
+                        Outcome::Shed { has_hint } => {
+                            st.shed += 1;
+                            if !has_hint {
+                                st.sheds_without_hint += 1;
+                            }
+                            drop(st);
+                            // back off as the Retry-After contract asks
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                        Outcome::Other => st.other += 1,
+                        Outcome::Gone => break,
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("load worker");
+    }
+    Arc::try_unwrap(stats)
+        .unwrap_or_else(|_| panic!("stats still shared"))
+        .into_inner()
+        .unwrap()
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "conserve-bench-admission-{tag}-{}-{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+const JOB_BODY: &str = r#"{"n_requests": 4, "prompt_len": 64, "max_tokens": 3000}"#;
+
+fn submit_job(addr: SocketAddr) -> u64 {
+    let (status, body) = http(addr, "POST", "/v1/batches", JOB_BODY);
+    assert_eq!(status, 202, "job submit: {body}");
+    Json::parse(body.trim()).unwrap().req("id").as_f64().unwrap() as u64
+}
+
+fn poll_job_done(addr: SocketAddr, id: u64) {
+    let t0 = Instant::now();
+    loop {
+        let (status, body) = http(addr, "GET", &format!("/v1/batches/{id}"), "");
+        // a completed job may already be garbage-collected (404)
+        if status == 404
+            || (status == 200
+                && Json::parse(body.trim()).unwrap().req("done").as_bool() == Some(true))
+        {
+            return;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(120),
+            "job {id} never finished: {body}"
+        );
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+fn job_outputs(dir: &Path) -> BTreeMap<u64, (u64, Vec<TokenId>)> {
+    let rs = JobStore::load(dir).expect("load job store");
+    rs.outputs
+        .iter()
+        .map(|(&sid, f)| (sid, (f.generated, f.output.clone())))
+        .collect()
+}
+
+fn main() {
+    let secs: f64 = std::env::var("ADMIT_BENCH_SECS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3.0);
+    println!(
+        "=== bench_admission ({N_SHARDS} shards, {GPU_BLOCKS} KV blocks/shard, \
+         {secs:.1}s/phase, SLO {SLO_TTFT_MS}ms TTFT) ==="
+    );
+
+    // ---- baseline: light load, admission on ----
+    let (addr, handle) = start(tuned_admission(), None);
+    let base = run_phase(addr, BASE_WORKERS, secs);
+    drain_and_join(addr, handle);
+    println!(
+        "baseline:     {} accepted, {} shed, violation rate {:.3}, p99 TTFT {:.1}ms",
+        base.accepted,
+        base.shed,
+        base.violation_rate(),
+        base.p99_ttft_ms()
+    );
+    assert!(base.accepted > 0, "baseline produced no accepted requests");
+
+    // ---- 3x burst, admission off: the overload is real ----
+    let (addr, handle) = start(AdmissionConfig::admit_all(), None);
+    let off = run_phase(addr, BURST_WORKERS, secs);
+    drain_and_join(addr, handle);
+    println!(
+        "overload off: {} accepted, {} shed, violation rate {:.3}, p99 TTFT {:.1}ms",
+        off.accepted,
+        off.shed,
+        off.violation_rate(),
+        off.p99_ttft_ms()
+    );
+
+    // ---- same burst, admission on: the SLO holds, excess is shed ----
+    let (addr, handle) = start(tuned_admission(), None);
+    let on = run_phase(addr, BURST_WORKERS, secs);
+    drain_and_join(addr, handle);
+    println!(
+        "overload on:  {} accepted, {} shed ({} without hint), violation rate {:.3}, p99 TTFT {:.1}ms",
+        on.accepted,
+        on.shed,
+        on.sheds_without_hint,
+        on.violation_rate(),
+        on.p99_ttft_ms()
+    );
+
+    let gap_off = off.violation_rate() - base.violation_rate();
+    let gap_on = on.violation_rate() - base.violation_rate();
+    assert!(
+        gap_off >= 0.05,
+        "admission-off burst should violate the TTFT SLO: gap {gap_off:.3} \
+         (off {:.3} vs base {:.3})",
+        off.violation_rate(),
+        base.violation_rate()
+    );
+    assert!(
+        gap_on <= 0.05,
+        "admission-on burst must stay within 5 points of the unloaded baseline: \
+         gap {gap_on:.3} (on {:.3} vs base {:.3})",
+        on.violation_rate(),
+        base.violation_rate()
+    );
+    assert!(on.shed > 0, "the burst should shed under admission control");
+    assert_eq!(
+        on.sheds_without_hint, 0,
+        "every shed must carry a positive retry_after_ms"
+    );
+
+    // ---- drain mid-burst: zero loss, byte-identical offline resume ----
+    // reference: same job, no drain
+    let ref_dir = tmp_dir("ref");
+    let (addr, handle) = start(tuned_admission(), Some(ref_dir.clone()));
+    let ref_id = submit_job(addr);
+    poll_job_done(addr, ref_id);
+    drain_and_join(addr, handle);
+    let ref_outputs = job_outputs(&ref_dir);
+    assert_eq!(ref_outputs.len(), 4, "reference run outputs");
+
+    // drained: job first (identical submission ids), then burst, then a
+    // mid-burst /drain, then restart + resume
+    let drain_dir = tmp_dir("drain");
+    let (addr, handle) = start(tuned_admission(), Some(drain_dir.clone()));
+    let drain_id = submit_job(addr);
+    assert_eq!(drain_id, ref_id, "submission order must match the reference run");
+    let burst = {
+        let deadline = Instant::now() + Duration::from_millis(400);
+        let hs: Vec<_> = (0..BASE_WORKERS)
+            .map(|_| {
+                std::thread::spawn(move || {
+                    while Instant::now() < deadline {
+                        if matches!(stream_once(addr), Outcome::Gone) {
+                            break;
+                        }
+                    }
+                })
+            })
+            .collect();
+        hs
+    };
+    std::thread::sleep(Duration::from_millis(150));
+    let summary = drain_and_join(addr, handle); // mid-burst
+    for h in burst {
+        h.join().expect("burst worker");
+    }
+    assert!(
+        summary.drain_checkpoints > 0,
+        "mid-flight offline work should checkpoint on drain: {summary:?}"
+    );
+    let (addr, handle) = start(tuned_admission(), Some(drain_dir.clone()));
+    poll_job_done(addr, drain_id);
+    let resumed = drain_and_join(addr, handle);
+    assert!(
+        resumed.resumed_requests > 0,
+        "restart should re-dispatch the unfinished job: {resumed:?}"
+    );
+    let drained_outputs = job_outputs(&drain_dir);
+    let outputs_match = ref_outputs == drained_outputs;
+    assert!(
+        outputs_match,
+        "resumed outputs diverge from the undrained reference: \
+         ref {:?} vs drained {:?}",
+        ref_outputs.iter().map(|(s, (g, _))| (*s, *g)).collect::<Vec<_>>(),
+        drained_outputs.iter().map(|(s, (g, _))| (*s, *g)).collect::<Vec<_>>()
+    );
+    println!(
+        "drain:        {} checkpoints at drain, {} requests resumed, outputs byte-identical",
+        summary.drain_checkpoints, resumed.resumed_requests
+    );
+    std::fs::remove_dir_all(&ref_dir).ok();
+    std::fs::remove_dir_all(&drain_dir).ok();
+
+    // ---- emit BENCH_admission.json (schema: rust/PERF.md §8) ----
+    let json = obj(vec![
+        ("shards", num(N_SHARDS as f64)),
+        ("gpu_blocks", num(GPU_BLOCKS as f64)),
+        ("phase_secs", num(secs)),
+        ("slo_ttft_ms", num(SLO_TTFT_MS)),
+        ("burst_workers", num(BURST_WORKERS as f64)),
+        ("baseline", base.to_json()),
+        ("overload_off", off.to_json()),
+        ("overload_on", on.to_json()),
+        ("violation_gap_off_minus_base", num(gap_off)),
+        ("violation_gap_on_minus_base", num(gap_on)),
+        (
+            "drain",
+            obj(vec![
+                ("lost_online", num(summary.lost_online as f64)),
+                ("drain_checkpoints", num(summary.drain_checkpoints as f64)),
+                ("resumed_requests", num(resumed.resumed_requests as f64)),
+                ("outputs_match", num(f64::from(u8::from(outputs_match)))),
+            ]),
+        ),
+    ]);
+    let out_path =
+        std::env::var("ADMIT_BENCH_OUT").unwrap_or_else(|_| "BENCH_admission.json".into());
+    std::fs::write(&out_path, json.to_string()).expect("write BENCH_admission.json");
+    println!("\nwrote {out_path}");
+    let _ = Json::parse(&json.to_string()).expect("self-emitted json parses");
+    println!("bench_admission OK");
+}

@@ -21,14 +21,28 @@ pub struct SimBackend {
 }
 
 impl SimBackend {
+    /// Under a virtual clock the backend *advances* time by the modelled
+    /// cost (deterministic discrete-event mode, used by every benchmark).
+    /// Under a real clock it *sleeps* the modelled cost instead, pacing
+    /// wall time like the modelled GPU — the live front door
+    /// ([`crate::server::http`]) runs this mode so loopback smoke tests
+    /// exercise real threads, sockets and timing without hardware.
     pub fn new(cost: CostModel, clock: Clock, safepoint_layers: usize) -> Self {
-        assert!(clock.is_virtual(), "SimBackend requires a virtual clock");
         let safepoint_layers = safepoint_layers.clamp(1, cost.n_layers);
         Self {
             cost,
             clock,
             safepoint_layers,
             synth_tokens: false,
+        }
+    }
+
+    /// Pass modelled time: advance a virtual clock, sleep a real one.
+    fn pace(&self, dt: u64) {
+        if self.clock.is_virtual() {
+            self.clock.advance(dt);
+        } else {
+            std::thread::sleep(std::time::Duration::from_micros(dt));
         }
     }
 
@@ -81,10 +95,10 @@ impl ExecBackend for SimBackend {
             } else {
                 per_group
             };
-            self.clock.advance(dt);
+            self.pace(dt);
             if plan.preemptible && g + 1 < groups {
                 // barrier + flag check between layer groups (§4.3)
-                self.clock.advance(self.cost.safepoint_us);
+                self.pace(self.cost.safepoint_us);
                 checks += 1;
                 if safepoint(self.clock.now()) == SafepointAction::Abort {
                     return Ok(ExecOutcome {

@@ -12,10 +12,24 @@
 //!     thread) and per-shard plus merged reports are printed;
 //!     --steal on adds cross-shard offline work stealing.
 //!
-//! conserve serve    [--artifacts DIR] [--duration S] [--rate R]
-//!                   [--set key=value ...]
-//!     Serve the real tiny-Llama model end-to-end on the CPU PJRT
-//!     runtime with a live gamma load (online) + offline pool.
+//! conserve serve    [--addr HOST:PORT] [--shards N] [--duration S]
+//!                   [--state-dir DIR] [--ckpt-every K]
+//!                   [--admission on|off] [--set key=value ...]
+//!     Run the live HTTP front door over a sharded simulated fleet:
+//!     OpenAI-style `POST /v1/completions` (chunked token streaming
+//!     with `"stream": true`), `POST /v1/batches` for offline jobs
+//!     (deadline-feasibility admission: accept / down-tier / reject),
+//!     `GET /v1/batches/{id}`, `GET /healthz`, and `POST /drain` for
+//!     graceful shutdown (flush accepted online work, checkpoint
+//!     in-flight offline work to --state-dir, exit with zero
+//!     accepted-request loss). Overload is shed with structured
+//!     `429 + Retry-After` responses, offline first. --duration 0
+//!     (default) serves until `/drain`. A restart on the same
+//!     --state-dir resumes unfinished offline jobs byte-identically.
+//!     --admission off disables every gate (overload benchmarking).
+//!     With `--backend pjrt` (requires the `pjrt` feature) this
+//!     instead serves the real tiny-Llama model end-to-end on the CPU
+//!     PJRT runtime with a trace-driven load.
 //!
 //! conserve profile  [--artifacts DIR]
 //!     Run the offline profiler against the PJRT backend and print the
@@ -464,8 +478,62 @@ fn simulate_sharded(
     Ok(())
 }
 
+/// The live HTTP front door (default), or the PJRT tiny-model demo
+/// with `--backend pjrt`.
+fn serve(args: &Args) -> Result<()> {
+    match args.get("backend") {
+        Some("pjrt") => return serve_pjrt(args),
+        Some(other) if other != "sim" => {
+            bail!("--backend expects sim|pjrt, got `{other}`")
+        }
+        _ => {}
+    }
+    use conserve::server::admission::AdmissionConfig;
+    use conserve::server::http::{HttpServer, ServeOptions};
+
+    let mut cfg = EngineConfig::sim_a100_7b();
+    args.apply_sets(&mut cfg)?;
+    let mut opts = ServeOptions {
+        addr: args.get("addr").unwrap_or("127.0.0.1:8077").to_string(),
+        shards: args.get_usize("shards", 2)?,
+        duration_s: args.get_f64("duration", 0.0)?,
+        state_dir: args.get("state-dir").map(std::path::PathBuf::from),
+        ckpt_every: args.get_usize("ckpt-every", 50)? as u64,
+        ..ServeOptions::default()
+    };
+    if !parse_switch("admission", args.get("admission").unwrap_or("on"))? {
+        opts.admission = AdmissionConfig::admit_all();
+    }
+
+    let server = HttpServer::bind(cfg, opts)?;
+    println!("conserve serve: listening on http://{}", server.local_addr());
+    println!("  POST /v1/completions  POST /v1/batches  GET /v1/batches/{{id}}");
+    println!("  GET /healthz          POST /drain");
+    let summary = server.run()?;
+
+    println!("serve summary: {}", summary.to_json());
+    if !summary.failed_online.is_empty() {
+        println!(
+            "  {} online requests failed on dead shards (each answered with a structured 503)",
+            summary.failed_online.len()
+        );
+    }
+    print_report(&summary.report);
+    if summary.lost_online > 0 {
+        bail!(
+            "{} accepted online requests were lost (accepted {} != completed {} + cancelled {} + failed {})",
+            summary.lost_online,
+            summary.accepted_online,
+            summary.completed_online,
+            summary.cancelled_online,
+            summary.failed_online.len()
+        );
+    }
+    Ok(())
+}
+
 #[cfg(not(feature = "pjrt"))]
-fn serve(_args: &Args) -> Result<()> {
+fn serve_pjrt(_args: &Args) -> Result<()> {
     bail!("this binary was built without the `pjrt` feature; rebuild with --features pjrt")
 }
 
@@ -475,7 +543,7 @@ fn profile(_args: &Args) -> Result<()> {
 }
 
 #[cfg(feature = "pjrt")]
-fn serve(args: &Args) -> Result<()> {
+fn serve_pjrt(args: &Args) -> Result<()> {
     use conserve::backend::PjrtBackend;
     use conserve::profiler::LatencyProfile;
     use conserve::request::{Class, Request};

@@ -213,6 +213,18 @@ pub struct Recorder {
     /// Queued-offline urgency values changed by the periodic deadline
     /// re-stamp.
     pub urgency_restamps: u64,
+    /// Requests aborted before completion by client cancellation
+    /// (disconnect mid-stream on the live path).
+    pub cancelled: u64,
+    /// Front-door admission decisions (stamped onto the merged recorder
+    /// by the serve loop; per-shard recorders leave these zero):
+    /// requests shed with a structured 429 per class, and job verdicts
+    /// at submit.
+    pub shed_online: u64,
+    pub shed_offline: u64,
+    pub jobs_admitted: u64,
+    pub jobs_downtiered: u64,
+    pub jobs_rejected: u64,
     /// Per-tenant completion counters for job-tagged requests (short
     /// linear list — a handful of tenants per shard).
     pub tenants: Vec<TenantCounters>,
@@ -254,6 +266,12 @@ impl Recorder {
             jobs_deadline_missed: 0,
             ckpt_flush_records: 0,
             urgency_restamps: 0,
+            cancelled: 0,
+            shed_online: 0,
+            shed_offline: 0,
+            jobs_admitted: 0,
+            jobs_downtiered: 0,
+            jobs_rejected: 0,
             tenants: Vec::new(),
             capture_events: true,
             ring: None,
@@ -437,6 +455,12 @@ impl Recorder {
         self.jobs_deadline_missed += other.jobs_deadline_missed;
         self.ckpt_flush_records += other.ckpt_flush_records;
         self.urgency_restamps += other.urgency_restamps;
+        self.cancelled += other.cancelled;
+        self.shed_online += other.shed_online;
+        self.shed_offline += other.shed_offline;
+        self.jobs_admitted += other.jobs_admitted;
+        self.jobs_downtiered += other.jobs_downtiered;
+        self.jobs_rejected += other.jobs_rejected;
         for t in &other.tenants {
             match self.tenants.iter_mut().find(|c| c.tenant == t.tenant) {
                 Some(c) => {

@@ -121,6 +121,15 @@ pub struct Report {
     pub ckpt_flush_records: u64,
     /// Queued-offline urgency values changed by the periodic re-stamp.
     pub urgency_restamps: u64,
+    /// Requests aborted by client cancellation (live path disconnects).
+    pub cancelled: u64,
+    /// Front-door admission outcomes (zero outside `conserve serve`):
+    /// structured-429 sheds per class and job verdicts at submit.
+    pub shed_online: u64,
+    pub shed_offline: u64,
+    pub jobs_admitted: u64,
+    pub jobs_downtiered: u64,
+    pub jobs_rejected: u64,
     /// Per-tenant completion counters for job-tagged requests.
     pub per_tenant: Vec<TenantCounters>,
     pub ttft_violations: f64,
@@ -164,6 +173,12 @@ impl Report {
             jobs_deadline_missed: rec.jobs_deadline_missed,
             ckpt_flush_records: rec.ckpt_flush_records,
             urgency_restamps: rec.urgency_restamps,
+            cancelled: rec.cancelled,
+            shed_online: rec.shed_online,
+            shed_offline: rec.shed_offline,
+            jobs_admitted: rec.jobs_admitted,
+            jobs_downtiered: rec.jobs_downtiered,
+            jobs_rejected: rec.jobs_rejected,
             per_tenant: rec.tenants.clone(),
             ttft_violations: rec.ttft_violation_rate(Class::Online, 1500.0),
             online_timeseries: rec.timeseries(Some(Class::Online), 15 * US_PER_SEC, dur),
@@ -214,6 +229,12 @@ impl Report {
             ("jobs_deadline_missed", num(self.jobs_deadline_missed as f64)),
             ("ckpt_flush_records", num(self.ckpt_flush_records as f64)),
             ("urgency_restamps", num(self.urgency_restamps as f64)),
+            ("cancelled", num(self.cancelled as f64)),
+            ("shed_online", num(self.shed_online as f64)),
+            ("shed_offline", num(self.shed_offline as f64)),
+            ("jobs_admitted", num(self.jobs_admitted as f64)),
+            ("jobs_downtiered", num(self.jobs_downtiered as f64)),
+            ("jobs_rejected", num(self.jobs_rejected as f64)),
             (
                 "per_tenant",
                 arr(self.per_tenant.iter().map(TenantCounters::to_json)),

@@ -238,6 +238,21 @@ impl UnifiedScheduler {
         }
     }
 
+    /// Remove a specific id from the online waiting queue
+    /// (client-disconnect cancellation before admission). Returns false
+    /// if it was not queued. Same back-scan as
+    /// [`remove_offline`](Self::remove_offline); runs only on the
+    /// cancellation path, never in the scheduling loop.
+    pub fn remove_online(&mut self, id: RequestId) -> bool {
+        match self.online_q.iter().rposition(|&x| x == id) {
+            Some(i) => {
+                self.online_q.remove(i);
+                true
+            }
+            None => false,
+        }
+    }
+
     pub fn online_waiting(&self) -> usize {
         self.online_q.len()
     }

@@ -1,0 +1,709 @@
+//! SLO-aware admission control for the live front door (ISSUE 7; the
+//! EconoServe/HyGen framing of co-serving: admission is where online
+//! SLOs are defended, and offline work gets *enforced* latency
+//! constraints, not mere tolerance).
+//!
+//! Three gates, evaluated in order, cheapest first:
+//!
+//! 1. **Drain gate** — a draining server accepts nothing (structured
+//!    `503 "draining"`).
+//! 2. **Queue-depth + occupancy gates** — fed by the live
+//!    [`FleetOccupancy`] aggregate of the shards' published loads.
+//!    Offline thresholds sit *below* online ones, and offline is
+//!    additionally shed while online queueing pressure exists at all —
+//!    so under overload the offline class always sheds first, before
+//!    online TTFT degrades (the paper's harvest-must-never-hurt
+//!    invariant, applied at the door).
+//! 3. **Per-class token buckets** — rate-limit what the queues cannot
+//!    see yet: a burst arriving between engine publishes.
+//!
+//! Every shed carries a machine-readable retry hint
+//! ([`Decision::Shed`], surfaced as `429` + `Retry-After`); nothing is
+//! silently dropped.
+//!
+//! Batch jobs additionally pass a **deadline-feasibility** check at
+//! submit ([`AdmissionController::admit_job`]): the estimated fleet
+//! finish time under current load ([`estimate_finish_us`]) is compared
+//! with the job's deadline slack — infeasible-now-but-close jobs are
+//! *down-tiered* to best-effort (deadline stripped) rather than queued
+//! to die, hopeless ones are rejected with a retry hint, and every
+//! verdict is recorded per tenant. The estimator is deliberately
+//! **monotone**: adding load (more resident KV, deeper queues, more
+//! online share) never decreases the finish estimate, so added load can
+//! never flip a job from infeasible to feasible
+//! (`tests/admission_props.rs` holds this as a property).
+
+use crate::shard::FleetOccupancy;
+use crate::TimeUs;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Nominal per-shard decode service rate (tokens/s) used by the
+/// feasibility estimator when the caller provides no measured rate. The
+/// modelled A100/7B testbed sustains roughly this in steady state.
+pub const NOMINAL_TOK_PER_S: f64 = 5000.0;
+
+/// Admission policy knobs. Defaults defend a small (2-4 shard) simulated
+/// fleet; `conserve serve --set admission.<knob>=v` overrides.
+#[derive(Debug, Clone)]
+pub struct AdmissionConfig {
+    /// Online request token bucket: sustained rate (req/s) and burst.
+    pub online_rate: f64,
+    pub online_burst: f64,
+    /// Offline/batch-member token bucket.
+    pub offline_rate: f64,
+    pub offline_burst: f64,
+    /// Shed online work when the fleet's waiting-online depth (waiting
+    /// minus offline backlog) reaches this.
+    pub max_waiting_online: u64,
+    /// Shed offline work when the fleet's offline backlog reaches this.
+    /// Sits far below the online gate: offline sheds first.
+    pub max_waiting_offline: u64,
+    /// Shed online work above this fleet KV occupancy fraction.
+    pub online_occupancy_max: f64,
+    /// Shed offline work above this fleet KV occupancy fraction
+    /// (< `online_occupancy_max`: offline sheds first).
+    pub offline_occupancy_max: f64,
+    /// Shed offline work while fleet online queueing pressure is at or
+    /// above this many waiting online requests (harvest never queues
+    /// behind a degrading online class).
+    pub offline_online_pressure: u64,
+    /// Per-shard decode service rate (tokens/s) for the feasibility
+    /// estimator.
+    pub svc_tok_per_s: f64,
+    /// Harvest-capacity safety margin in (0, 1]: the estimator assumes
+    /// only this fraction of the idle capacity is actually harvestable.
+    pub feasibility_margin: f64,
+    /// Work estimate (tokens) per already-queued offline request, for
+    /// backlog ahead of a new job.
+    pub est_tokens_per_offline: u64,
+    /// Queue-delay estimate (µs) per waiting online request (they run
+    /// first and push offline service out).
+    pub online_queue_delay_us: u64,
+    /// A job whose estimated finish exceeds its slack but stays within
+    /// `slack * reject_over` is down-tiered to best-effort instead of
+    /// rejected; beyond that it is rejected outright.
+    pub reject_over: f64,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        Self {
+            online_rate: 50.0,
+            online_burst: 100.0,
+            offline_rate: 25.0,
+            offline_burst: 50.0,
+            max_waiting_online: 64,
+            max_waiting_offline: 32,
+            online_occupancy_max: 0.97,
+            offline_occupancy_max: 0.85,
+            offline_online_pressure: 16,
+            svc_tok_per_s: NOMINAL_TOK_PER_S,
+            feasibility_margin: 0.7,
+            est_tokens_per_offline: 1024,
+            online_queue_delay_us: 50_000,
+            reject_over: 4.0,
+        }
+    }
+}
+
+impl AdmissionConfig {
+    /// A gate that admits everything (the `--admission off` baseline of
+    /// the bench: overload then lands on the queues unchecked).
+    pub fn admit_all() -> Self {
+        Self {
+            online_rate: f64::INFINITY,
+            online_burst: f64::INFINITY,
+            offline_rate: f64::INFINITY,
+            offline_burst: f64::INFINITY,
+            max_waiting_online: u64::MAX,
+            max_waiting_offline: u64::MAX,
+            online_occupancy_max: f64::INFINITY,
+            offline_occupancy_max: f64::INFINITY,
+            offline_online_pressure: u64::MAX,
+            reject_over: f64::INFINITY,
+            ..Self::default()
+        }
+    }
+}
+
+/// Why a request was shed (the `reason` field of the structured 429).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// Token bucket empty: sustained rate exceeded.
+    RateLimit,
+    /// Fleet waiting-queue depth at the class's gate.
+    QueueFull,
+    /// Fleet KV occupancy above the class's gate.
+    Occupancy,
+    /// Server is draining: retry against another replica.
+    Draining,
+}
+
+impl ShedReason {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ShedReason::RateLimit => "rate_limit",
+            ShedReason::QueueFull => "queue_full",
+            ShedReason::Occupancy => "occupancy",
+            ShedReason::Draining => "draining",
+        }
+    }
+}
+
+/// Per-request admission decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decision {
+    Admit,
+    /// Shed with a structured retry hint (always >= 1 ms — a 0 would
+    /// read as "retry immediately" and re-herd the burst).
+    Shed {
+        retry_after_ms: u64,
+        reason: ShedReason,
+    },
+}
+
+impl Decision {
+    pub fn admitted(&self) -> bool {
+        matches!(self, Decision::Admit)
+    }
+}
+
+/// Job-level admission verdict (deadline feasibility at submit).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum JobVerdict {
+    /// Deadline (or no deadline) is feasible under current load.
+    Accept { est_finish_ms: u64 },
+    /// Deadline is infeasible but the job is worth running best-effort:
+    /// deadline stripped, urgency zeroed, tier demoted.
+    DownTier { est_finish_ms: u64 },
+    /// Hopeless under current load (or the door is closed): not queued.
+    Reject {
+        retry_after_ms: u64,
+        reason: ShedReason,
+    },
+}
+
+/// The slice of fleet state the estimator reads — a plain value type so
+/// the monotonicity property can enumerate it directly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FleetView {
+    pub n_shards: u64,
+    /// Per-shard KV capacity in blocks.
+    pub capacity_blocks: u64,
+    /// Σ online-reserved KV blocks.
+    pub online_blocks: u64,
+    /// Σ waiting online requests.
+    pub waiting_online: u64,
+    /// Σ queued offline requests.
+    pub offline_waiting: u64,
+}
+
+impl From<FleetOccupancy> for FleetView {
+    fn from(o: FleetOccupancy) -> Self {
+        FleetView {
+            n_shards: o.n_shards as u64,
+            capacity_blocks: o.capacity_blocks,
+            online_blocks: o.online_blocks,
+            waiting_online: o.waiting.saturating_sub(o.offline_waiting),
+            offline_waiting: o.offline_waiting,
+        }
+    }
+}
+
+/// Estimated time (µs from now) for a new offline job of `job_tokens`
+/// total work to finish under the current fleet load.
+///
+/// Model: each shard harvests `svc * margin * (1 - online_frac)` tokens
+/// per second, where `online_frac` is the online-reserved share of fleet
+/// KV (capped at 0.95 so harvest never estimates exactly zero — the
+/// slack-harvesting floor). The job waits behind the current offline
+/// backlog and behind online queueing delay.
+///
+/// **Monotone by construction** in every load component: increasing
+/// `online_blocks`, `waiting_online` or `offline_waiting` never
+/// decreases the estimate (property-tested). Conservative, not exact —
+/// the gate errs toward down-tiering.
+pub fn estimate_finish_us(view: &FleetView, cfg: &AdmissionConfig, job_tokens: u64) -> u64 {
+    let shards = view.n_shards.max(1) as f64;
+    let cap = (view.n_shards.max(1) * view.capacity_blocks.max(1)) as f64;
+    let online_frac = (view.online_blocks as f64 / cap).min(0.95);
+    let harvest =
+        shards * cfg.svc_tok_per_s.max(1.0) * cfg.feasibility_margin.clamp(0.01, 1.0)
+            * (1.0 - online_frac);
+    let backlog_tokens =
+        view.offline_waiting.saturating_mul(cfg.est_tokens_per_offline) as f64;
+    let queue_delay_us =
+        view.waiting_online.saturating_mul(cfg.online_queue_delay_us) as f64;
+    let decode_us = (backlog_tokens + job_tokens as f64) / harvest * 1e6;
+    let total = queue_delay_us + decode_us;
+    if total >= u64::MAX as f64 {
+        u64::MAX
+    } else {
+        total as u64
+    }
+}
+
+/// Is a job of `job_tokens` total work feasible within `slack_us` of
+/// deadline headroom under the current load?
+pub fn deadline_feasible(
+    view: &FleetView,
+    cfg: &AdmissionConfig,
+    job_tokens: u64,
+    slack_us: u64,
+) -> bool {
+    estimate_finish_us(view, cfg, job_tokens) <= slack_us
+}
+
+/// Classic token bucket over a microsecond clock.
+#[derive(Debug)]
+struct TokenBucket {
+    rate_per_us: f64,
+    burst: f64,
+    tokens: f64,
+    last: TimeUs,
+}
+
+impl TokenBucket {
+    fn new(rate_per_s: f64, burst: f64) -> Self {
+        Self {
+            rate_per_us: rate_per_s / 1e6,
+            burst,
+            tokens: burst,
+            last: 0,
+        }
+    }
+
+    /// Take one token, or report how long (µs) until one accrues.
+    fn try_take(&mut self, now: TimeUs) -> Result<(), u64> {
+        if self.burst.is_infinite() {
+            return Ok(());
+        }
+        // clock-regression guard: never refill backwards
+        if now > self.last {
+            self.tokens =
+                (self.tokens + (now - self.last) as f64 * self.rate_per_us).min(self.burst);
+            self.last = now;
+        }
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            Ok(())
+        } else {
+            let deficit = 1.0 - self.tokens;
+            let eta = if self.rate_per_us > 0.0 {
+                (deficit / self.rate_per_us) as u64
+            } else {
+                u64::MAX / 2
+            };
+            Err(eta.max(1))
+        }
+    }
+}
+
+/// Per-tenant admission ledger (job verdicts recorded at submit).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TenantAdmissions {
+    pub accepted: u64,
+    pub downtiered: u64,
+    pub rejected: u64,
+}
+
+/// Counter snapshot ([`AdmissionController::counters`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AdmissionCounters {
+    pub admitted_online: u64,
+    pub admitted_offline: u64,
+    pub shed_online: u64,
+    pub shed_offline: u64,
+    pub jobs_accepted: u64,
+    pub jobs_downtiered: u64,
+    pub jobs_rejected: u64,
+}
+
+/// The front door's admission gate. Thread-safe: per-class buckets
+/// behind one short-critical-section mutex, everything else atomics.
+pub struct AdmissionController {
+    cfg: AdmissionConfig,
+    buckets: Mutex<[TokenBucket; 2]>, // [online, offline]
+    draining: AtomicBool,
+    admitted_online: AtomicU64,
+    admitted_offline: AtomicU64,
+    shed_online: AtomicU64,
+    shed_offline: AtomicU64,
+    jobs_accepted: AtomicU64,
+    jobs_downtiered: AtomicU64,
+    jobs_rejected: AtomicU64,
+    tenant_log: Mutex<BTreeMap<u32, TenantAdmissions>>,
+}
+
+impl AdmissionController {
+    pub fn new(cfg: AdmissionConfig) -> Self {
+        let buckets = Mutex::new([
+            TokenBucket::new(cfg.online_rate, cfg.online_burst),
+            TokenBucket::new(cfg.offline_rate, cfg.offline_burst),
+        ]);
+        Self {
+            cfg,
+            buckets,
+            draining: AtomicBool::new(false),
+            admitted_online: AtomicU64::new(0),
+            admitted_offline: AtomicU64::new(0),
+            shed_online: AtomicU64::new(0),
+            shed_offline: AtomicU64::new(0),
+            jobs_accepted: AtomicU64::new(0),
+            jobs_downtiered: AtomicU64::new(0),
+            jobs_rejected: AtomicU64::new(0),
+            tenant_log: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    pub fn config(&self) -> &AdmissionConfig {
+        &self.cfg
+    }
+
+    /// Close the door: every subsequent decision sheds with
+    /// [`ShedReason::Draining`]. One-way.
+    pub fn begin_drain(&self) {
+        self.draining.store(true, Ordering::Release);
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::Acquire)
+    }
+
+    fn shed(&self, online: bool, retry_after_ms: u64, reason: ShedReason) -> Decision {
+        if online {
+            self.shed_online.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.shed_offline.fetch_add(1, Ordering::Relaxed);
+        }
+        Decision::Shed {
+            retry_after_ms: retry_after_ms.max(1),
+            reason,
+        }
+    }
+
+    /// Gate one online request.
+    pub fn admit_online(&self, view: &FleetView, now: TimeUs) -> Decision {
+        if self.is_draining() {
+            return self.shed(true, 1_000, ShedReason::Draining);
+        }
+        if view.waiting_online >= self.cfg.max_waiting_online {
+            // ~time to serve half the backlog ahead
+            let ms = (view.waiting_online * self.cfg.online_queue_delay_us / 2_000).max(1);
+            return self.shed(true, ms, ShedReason::QueueFull);
+        }
+        let cap = (view.n_shards.max(1) * view.capacity_blocks.max(1)) as f64;
+        if view.online_blocks as f64 / cap > self.cfg.online_occupancy_max {
+            return self.shed(true, 250, ShedReason::Occupancy);
+        }
+        match self.buckets.lock().unwrap()[0].try_take(now) {
+            Ok(()) => {
+                self.admitted_online.fetch_add(1, Ordering::Relaxed);
+                Decision::Admit
+            }
+            Err(eta_us) => self.shed(true, eta_us.div_ceil(1_000), ShedReason::RateLimit),
+        }
+    }
+
+    /// Gate one offline request (or one batch member). Sheds strictly
+    /// earlier than [`admit_online`](Self::admit_online): lower queue +
+    /// occupancy thresholds, plus an online-pressure gate.
+    pub fn admit_offline(&self, view: &FleetView, now: TimeUs) -> Decision {
+        if self.is_draining() {
+            return self.shed(false, 1_000, ShedReason::Draining);
+        }
+        if view.offline_waiting >= self.cfg.max_waiting_offline
+            || view.waiting_online >= self.cfg.offline_online_pressure
+        {
+            let ms = ((view.offline_waiting + view.waiting_online) * 20).max(1);
+            return self.shed(false, ms, ShedReason::QueueFull);
+        }
+        let cap = (view.n_shards.max(1) * view.capacity_blocks.max(1)) as f64;
+        let resident_frac = view.online_blocks as f64 / cap;
+        if resident_frac > self.cfg.offline_occupancy_max {
+            return self.shed(false, 500, ShedReason::Occupancy);
+        }
+        match self.buckets.lock().unwrap()[1].try_take(now) {
+            Ok(()) => {
+                self.admitted_offline.fetch_add(1, Ordering::Relaxed);
+                Decision::Admit
+            }
+            Err(eta_us) => self.shed(false, eta_us.div_ceil(1_000), ShedReason::RateLimit),
+        }
+    }
+
+    /// Deadline-feasibility verdict for a whole job of `job_tokens`
+    /// total work with `deadline` (µs timestamp, 0 = best-effort) at
+    /// `now`. Recorded per tenant.
+    pub fn admit_job(
+        &self,
+        view: &FleetView,
+        tenant: u32,
+        job_tokens: u64,
+        deadline: TimeUs,
+        now: TimeUs,
+    ) -> JobVerdict {
+        let v = self.job_verdict(view, job_tokens, deadline, now);
+        let mut log = self.tenant_log.lock().unwrap();
+        let t = log.entry(tenant).or_default();
+        match v {
+            JobVerdict::Accept { .. } => {
+                t.accepted += 1;
+                self.jobs_accepted.fetch_add(1, Ordering::Relaxed);
+            }
+            JobVerdict::DownTier { .. } => {
+                t.downtiered += 1;
+                self.jobs_downtiered.fetch_add(1, Ordering::Relaxed);
+            }
+            JobVerdict::Reject { .. } => {
+                t.rejected += 1;
+                self.jobs_rejected.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        v
+    }
+
+    fn job_verdict(
+        &self,
+        view: &FleetView,
+        job_tokens: u64,
+        deadline: TimeUs,
+        now: TimeUs,
+    ) -> JobVerdict {
+        if self.is_draining() {
+            return JobVerdict::Reject {
+                retry_after_ms: 1_000,
+                reason: ShedReason::Draining,
+            };
+        }
+        if view.offline_waiting >= self.cfg.max_waiting_offline {
+            let ms = (view.offline_waiting * 20).max(1);
+            return JobVerdict::Reject {
+                retry_after_ms: ms,
+                reason: ShedReason::QueueFull,
+            };
+        }
+        let est = estimate_finish_us(view, &self.cfg, job_tokens);
+        let est_ms = est.div_ceil(1_000);
+        if deadline == 0 {
+            // best-effort jobs carry no promise to break
+            return JobVerdict::Accept { est_finish_ms: est_ms };
+        }
+        let slack = deadline.saturating_sub(now);
+        if est <= slack {
+            JobVerdict::Accept { est_finish_ms: est_ms }
+        } else if (est as f64) <= slack as f64 * self.cfg.reject_over.max(1.0) {
+            JobVerdict::DownTier { est_finish_ms: est_ms }
+        } else {
+            // hopeless: suggest retrying once roughly half the estimated
+            // backlog has drained
+            JobVerdict::Reject {
+                retry_after_ms: (est_ms / 2).max(1),
+                reason: ShedReason::QueueFull,
+            }
+        }
+    }
+
+    /// Snapshot of the admission counters (merged into the serve
+    /// report).
+    pub fn counters(&self) -> AdmissionCounters {
+        AdmissionCounters {
+            admitted_online: self.admitted_online.load(Ordering::Relaxed),
+            admitted_offline: self.admitted_offline.load(Ordering::Relaxed),
+            shed_online: self.shed_online.load(Ordering::Relaxed),
+            shed_offline: self.shed_offline.load(Ordering::Relaxed),
+            jobs_accepted: self.jobs_accepted.load(Ordering::Relaxed),
+            jobs_downtiered: self.jobs_downtiered.load(Ordering::Relaxed),
+            jobs_rejected: self.jobs_rejected.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Per-tenant job-verdict ledger (ascending tenant id).
+    pub fn tenant_ledger(&self) -> Vec<(u32, TenantAdmissions)> {
+        self.tenant_log
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(&t, &a)| (t, a))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quiet_view() -> FleetView {
+        FleetView {
+            n_shards: 2,
+            capacity_blocks: 1000,
+            online_blocks: 0,
+            waiting_online: 0,
+            offline_waiting: 0,
+        }
+    }
+
+    #[test]
+    fn token_bucket_rate_limits_and_reports_eta() {
+        let mut b = TokenBucket::new(10.0, 2.0); // 10/s, burst 2
+        assert!(b.try_take(0).is_ok());
+        assert!(b.try_take(0).is_ok());
+        let eta = b.try_take(0).unwrap_err();
+        // one token accrues in 100ms
+        assert!((90_000..=110_000).contains(&eta), "eta={eta}");
+        assert!(b.try_take(eta).is_ok());
+        // clock regression: no refill, no panic
+        let mut b2 = TokenBucket::new(10.0, 1.0);
+        assert!(b2.try_take(500_000).is_ok());
+        assert!(b2.try_take(400_000).is_err());
+    }
+
+    #[test]
+    fn offline_sheds_before_online() {
+        let ctl = AdmissionController::new(AdmissionConfig::default());
+        // online queueing pressure alone sheds offline but not online
+        let view = FleetView {
+            waiting_online: 20, // >= offline_online_pressure, < max_waiting_online
+            ..quiet_view()
+        };
+        assert!(ctl.admit_online(&view, 0).admitted());
+        let d = ctl.admit_offline(&view, 0);
+        assert!(matches!(
+            d,
+            Decision::Shed {
+                reason: ShedReason::QueueFull,
+                ..
+            }
+        ));
+        // occupancy band between the two gates: offline sheds only
+        let view = FleetView {
+            online_blocks: 1800, // 0.9 of 2000: > 0.85, < 0.97
+            ..quiet_view()
+        };
+        assert!(ctl.admit_online(&view, 1).admitted());
+        assert!(!ctl.admit_offline(&view, 1).admitted());
+        let c = ctl.counters();
+        assert_eq!(c.shed_online, 0);
+        assert_eq!(c.shed_offline, 2);
+        assert_eq!(c.admitted_online, 2);
+    }
+
+    #[test]
+    fn every_shed_carries_positive_retry_hint() {
+        let ctl = AdmissionController::new(AdmissionConfig {
+            online_rate: 0.001,
+            online_burst: 1.0,
+            ..Default::default()
+        });
+        let view = quiet_view();
+        assert!(ctl.admit_online(&view, 0).admitted());
+        for now in [0, 1, 2] {
+            match ctl.admit_online(&view, now) {
+                Decision::Shed { retry_after_ms, .. } => assert!(retry_after_ms >= 1),
+                d => panic!("expected shed, got {d:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn draining_sheds_everything() {
+        let ctl = AdmissionController::new(AdmissionConfig::default());
+        ctl.begin_drain();
+        let view = quiet_view();
+        assert!(matches!(
+            ctl.admit_online(&view, 0),
+            Decision::Shed {
+                reason: ShedReason::Draining,
+                ..
+            }
+        ));
+        assert!(matches!(
+            ctl.admit_offline(&view, 0),
+            Decision::Shed {
+                reason: ShedReason::Draining,
+                ..
+            }
+        ));
+        assert!(matches!(
+            ctl.admit_job(&view, 0, 100, 0, 0),
+            JobVerdict::Reject {
+                reason: ShedReason::Draining,
+                ..
+            }
+        ));
+    }
+
+    #[test]
+    fn job_verdicts_accept_downtier_reject() {
+        let cfg = AdmissionConfig::default();
+        let ctl = AdmissionController::new(cfg.clone());
+        let view = quiet_view();
+        let now = 1_000_000;
+        // generous deadline: accept
+        let est = estimate_finish_us(&view, &cfg, 10_000);
+        match ctl.admit_job(&view, 1, 10_000, now + est * 2, now) {
+            JobVerdict::Accept { .. } => {}
+            v => panic!("expected accept, got {v:?}"),
+        }
+        // slack below the estimate but within reject_over: down-tier
+        match ctl.admit_job(&view, 1, 10_000, now + est / 2, now) {
+            JobVerdict::DownTier { .. } => {}
+            v => panic!("expected downtier, got {v:?}"),
+        }
+        // hopeless slack: reject with a positive hint
+        match ctl.admit_job(&view, 2, 10_000, now + 1, now) {
+            JobVerdict::Reject { retry_after_ms, .. } => assert!(retry_after_ms >= 1),
+            v => panic!("expected reject, got {v:?}"),
+        }
+        // no deadline: always accept (best-effort carries no promise)
+        match ctl.admit_job(&view, 3, 1_000_000_000, 0, now) {
+            JobVerdict::Accept { .. } => {}
+            v => panic!("expected accept, got {v:?}"),
+        }
+        let ledger = ctl.tenant_ledger();
+        assert_eq!(
+            ledger,
+            vec![
+                (1, TenantAdmissions { accepted: 1, downtiered: 1, rejected: 0 }),
+                (2, TenantAdmissions { accepted: 0, downtiered: 0, rejected: 1 }),
+                (3, TenantAdmissions { accepted: 1, downtiered: 0, rejected: 0 }),
+            ]
+        );
+        let c = ctl.counters();
+        assert_eq!((c.jobs_accepted, c.jobs_downtiered, c.jobs_rejected), (2, 1, 1));
+    }
+
+    #[test]
+    fn admit_all_never_sheds() {
+        let ctl = AdmissionController::new(AdmissionConfig::admit_all());
+        let view = FleetView {
+            n_shards: 1,
+            capacity_blocks: 10,
+            online_blocks: 10,
+            waiting_online: 1_000_000,
+            offline_waiting: 1_000_000,
+        };
+        for now in 0..100 {
+            assert!(ctl.admit_online(&view, now).admitted());
+            assert!(ctl.admit_offline(&view, now).admitted());
+        }
+    }
+
+    #[test]
+    fn estimator_monotone_spot_checks() {
+        let cfg = AdmissionConfig::default();
+        let base = quiet_view();
+        let e0 = estimate_finish_us(&base, &cfg, 10_000);
+        for bumped in [
+            FleetView { online_blocks: 500, ..base },
+            FleetView { waiting_online: 10, ..base },
+            FleetView { offline_waiting: 10, ..base },
+        ] {
+            assert!(estimate_finish_us(&bumped, &cfg, 10_000) >= e0);
+        }
+        // more work never finishes sooner
+        assert!(estimate_finish_us(&base, &cfg, 20_000) >= e0);
+    }
+}

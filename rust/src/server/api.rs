@@ -17,19 +17,63 @@
 //! [`JobRunOutcome::failed_online`](crate::batch::JobRunOutcome::failed_online)
 //! as a structured fail-fast set and the client is expected to retry —
 //! resubmission mints a fresh ticket, so a retry can never collide with
-//! the lost request's id. Offline *job* work takes the opposite
-//! contract: specs and periodic checkpoints live in the durable
+//! the lost request's id. On the live HTTP path
+//! ([`crate::server::http`]) the same set surfaces as a structured
+//! `503` body carrying the failed request ids and a retry hint, so
+//! network clients can implement this contract without scraping logs.
+//! Offline *job* work takes the opposite contract: specs and periodic
+//! checkpoints live in the durable
 //! [`JobStore`](crate::batch::JobStore), and crash recovery
 //! ([`crate::batch::run_jobs_with_recovery`]) replays it with the same
 //! submission ids, so keyed sampling regenerates byte-identical
 //! streams instead of asking the submitter to retry.
+//!
+//! # Backpressure, shedding and drain
+//!
+//! The submission channel is **bounded** ([`SUBMIT_CHANNEL_CAP`]): a
+//! producer that outruns the engine blocks (`submit_*`) or gets
+//! [`SubmitError::Full`] (`try_submit_*`) instead of growing an
+//! unbounded queue. Above the channel, the front door's admission
+//! controller ([`crate::server::admission`]) sheds work *before* it is
+//! submitted — shed requests receive a structured `429` with a
+//! `Retry-After` hint, offline load is shed first, and a draining
+//! server answers `503` with `"draining"` — so a request that makes it
+//! into this channel has been *accepted*: graceful drain
+//! ([`ServingEngine::set_drain_flag`](super::ServingEngine::set_drain_flag))
+//! finishes accepted online work and checkpoints accepted offline work
+//! to the `JobStore` rather than dropping either.
 
 use crate::batch::{JobBoard, JobProgress};
 use crate::request::{Class, Request, RequestId, TokenId};
 use crate::TimeUs;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError, TrySendError};
 use std::sync::Arc;
+
+/// Default bound of the live submission channel. Deep enough that a
+/// normal burst never blocks (the engine drains arrivals every
+/// iteration), shallow enough that a runaway producer is backpressured
+/// in ~requests, not in memory.
+pub const SUBMIT_CHANNEL_CAP: usize = 4096;
+
+/// Why a non-blocking submission was refused.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The bounded submission channel is at capacity: the engine is not
+    /// draining arrivals fast enough. Shed or retry after a backoff.
+    Full,
+    /// The serving engine is gone (its arrival source was dropped).
+    Closed,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Full => write!(f, "submission channel full (engine backlogged)"),
+            SubmitError::Closed => write!(f, "serving engine gone (channel closed)"),
+        }
+    }
+}
 
 pub enum ArrivalSource {
     Trace {
@@ -72,7 +116,17 @@ impl ArrivalSource {
         next_id: Arc<AtomicU64>,
         jobs: Arc<JobBoard>,
     ) -> (EngineClient, Self) {
-        let (tx, rx) = channel();
+        Self::channel_with_board_cap(next_id, jobs, SUBMIT_CHANNEL_CAP)
+    }
+
+    /// [`channel_with_board`](Self::channel_with_board) with an explicit
+    /// channel bound (tests use tiny caps to exercise backpressure).
+    pub fn channel_with_board_cap(
+        next_id: Arc<AtomicU64>,
+        jobs: Arc<JobBoard>,
+        cap: usize,
+    ) -> (EngineClient, Self) {
+        let (tx, rx) = sync_channel(cap.max(1));
         (
             EngineClient { tx, next_id, jobs },
             ArrivalSource::Channel {
@@ -179,7 +233,7 @@ pub const CLIENT_TICKET_BIT: u64 = 1 << 63;
 /// field — e.g. `engine.table.values().find(|r| r.submitted_id == ticket)`.
 #[derive(Clone)]
 pub struct EngineClient {
-    tx: Sender<Request>,
+    tx: SyncSender<Request>,
     next_id: Arc<AtomicU64>,
     /// Batch-job progress board shared with the serving engine(s); see
     /// [`BatchHandle`].
@@ -232,6 +286,41 @@ impl BatchHandle {
 }
 
 impl EngineClient {
+    /// Mint a ticket and construct the request without sending it. The
+    /// split lets non-blocking submitters (`try_submit_*`) and the
+    /// recorded-job path build first, then choose how to send.
+    fn build_stamped(
+        &self,
+        class: Class,
+        prompt: Vec<TokenId>,
+        max_new_tokens: usize,
+        stamp: impl FnOnce(&mut Request),
+    ) -> Request {
+        let id = CLIENT_TICKET_BIT | self.next_id.fetch_add(1, Ordering::Relaxed);
+        let len = prompt.len();
+        // arrival == 0 => stamped by the engine on receipt
+        let mut req = Request::new(id, class, prompt, len, max_new_tokens, 0);
+        stamp(&mut req);
+        req
+    }
+
+    /// Blocking send: backpressures the caller when the bounded channel
+    /// is full instead of growing memory.
+    pub(crate) fn send(&self, req: Request) {
+        let _ = self.tx.send(req);
+    }
+
+    /// Non-blocking send. On `Full` the request is dropped here (the
+    /// ticket was never observable by the engine, so no state leaks) and
+    /// the caller sheds or retries.
+    pub(crate) fn try_send(&self, req: Request) -> Result<(), SubmitError> {
+        match self.tx.try_send(req) {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Full(_)) => Err(SubmitError::Full),
+            Err(TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
+        }
+    }
+
     fn submit_stamped(
         &self,
         class: Class,
@@ -239,17 +328,41 @@ impl EngineClient {
         max_new_tokens: usize,
         stamp: impl FnOnce(&mut Request),
     ) -> RequestId {
-        let id = CLIENT_TICKET_BIT | self.next_id.fetch_add(1, Ordering::Relaxed);
-        let len = prompt.len();
-        // arrival == 0 => stamped by the engine on receipt
-        let mut req = Request::new(id, class, prompt, len, max_new_tokens, 0);
-        stamp(&mut req);
-        let _ = self.tx.send(req);
+        let req = self.build_stamped(class, prompt, max_new_tokens, stamp);
+        let id = req.id;
+        self.send(req);
         id
     }
 
     fn submit(&self, class: Class, prompt: Vec<TokenId>, max_new_tokens: usize) -> RequestId {
         self.submit_stamped(class, prompt, max_new_tokens, |_| {})
+    }
+
+    /// Non-blocking [`submit_online`](Self::submit_online): refuses with
+    /// [`SubmitError::Full`] instead of blocking when the engine is
+    /// backlogged. The front door uses this so a slow engine turns into
+    /// a structured shed, never a stuck accept thread.
+    pub fn try_submit_online(
+        &self,
+        prompt: Vec<TokenId>,
+        max_new_tokens: usize,
+    ) -> Result<RequestId, SubmitError> {
+        let req = self.build_stamped(Class::Online, prompt, max_new_tokens, |_| {});
+        let id = req.id;
+        self.try_send(req)?;
+        Ok(id)
+    }
+
+    /// Non-blocking [`submit_offline`](Self::submit_offline).
+    pub fn try_submit_offline(
+        &self,
+        prompt: Vec<TokenId>,
+        max_new_tokens: usize,
+    ) -> Result<RequestId, SubmitError> {
+        let req = self.build_stamped(Class::Offline, prompt, max_new_tokens, |_| {});
+        let id = req.id;
+        self.try_send(req)?;
+        Ok(id)
     }
 
     /// The job-progress board this client registers batches on. Attach
@@ -312,6 +425,33 @@ impl EngineClient {
         let job = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.jobs.register(job, total, deadline, tenant);
         job
+    }
+
+    /// Build (without sending) one member of an already-registered job,
+    /// stamped with the full durable-job identity including the
+    /// fair-share weight. The prepared-job path
+    /// ([`ShardedClient::prepare_job`](crate::shard::ShardedClient::prepare_job))
+    /// persists the built requests into the `JobStore` spec before
+    /// dispatching, so a drain checkpoint can rebuild them
+    /// byte-identically.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn build_job_member(
+        &self,
+        job: u64,
+        tenant: u32,
+        urgency: u32,
+        deadline: TimeUs,
+        fair_weight: u32,
+        prompt: Vec<TokenId>,
+        max_new_tokens: usize,
+    ) -> Request {
+        self.build_stamped(Class::Offline, prompt, max_new_tokens, |r| {
+            r.job = job;
+            r.tenant = tenant;
+            r.urgency = urgency;
+            r.deadline = deadline;
+            r.fair_weight = fair_weight;
+        })
     }
 
     /// Submit one member of an already-registered job.
@@ -439,6 +579,30 @@ mod tests {
         assert!(arena.get(ticket).is_none());
         // ...and the preserved submitted_id is the correlation path
         assert_eq!(arena[id].submitted_id, ticket);
+    }
+
+    #[test]
+    fn bounded_channel_backpressures_bursts() {
+        use crate::batch::JobBoard;
+        // cap 2: the third non-blocking submit must shed, not grow memory
+        let (client, mut src) = ArrivalSource::channel_with_board_cap(
+            Arc::new(AtomicU64::new(1)),
+            Arc::new(JobBoard::new()),
+            2,
+        );
+        assert!(client.try_submit_online(vec![1], 1).is_ok());
+        assert!(client.try_submit_offline(vec![2], 1).is_ok());
+        assert_eq!(client.try_submit_online(vec![3], 1), Err(SubmitError::Full));
+        // the engine draining arrivals frees credit for the next burst
+        assert_eq!(src.poll(10).len(), 2);
+        let t = client.try_submit_online(vec![4], 1).expect("credit freed");
+        assert!(t & CLIENT_TICKET_BIT != 0);
+        // channel gone => Closed, not Full
+        drop(src);
+        assert_eq!(
+            client.try_submit_online(vec![5], 1),
+            Err(SubmitError::Closed)
+        );
     }
 
     #[test]

@@ -1,0 +1,1425 @@
+//! The live front door: a hand-rolled HTTP/1.1 server over the sharded
+//! engine fleet, with SLO-aware admission control, structured overload
+//! shedding, and graceful drain.
+//!
+//! No HTTP library — the workspace's only dependency is `anyhow`, so
+//! requests are parsed and responses framed directly over
+//! [`std::net::TcpStream`] (bounded header/body reads, chunked
+//! transfer-encoding for token streams). The protocol surface is a
+//! minimal OpenAI-style dialect:
+//!
+//! * `POST /v1/completions` — one online request. Body
+//!   `{"prompt": [tokens] | "text", "max_tokens": N, "stream": bool}`.
+//!   With `stream: true` the response is chunked NDJSON: one
+//!   `{"token": t}` line per sampled token and a final
+//!   `{"done": true, ...}` line. Shed requests get a structured
+//!   `429` with a `Retry-After` header and a machine-readable reason.
+//! * `POST /v1/batches` — submit an offline job. The deadline-
+//!   feasibility gate ([`AdmissionController::admit_job`]) accepts,
+//!   down-tiers (deadline stripped, tier demoted) or rejects it; a
+//!   rejected job still carries a correlatable id in its `429` body,
+//!   and its board entry is retired immediately so the long-running
+//!   server's board stays bounded.
+//! * `GET /v1/batches/{id}` — poll job progress (completed jobs are
+//!   garbage-collected from the board and eventually answer `404`).
+//! * `GET /healthz` — liveness + fleet occupancy snapshot.
+//! * `POST /drain` — graceful shutdown: stop admitting, flush accepted
+//!   online work, checkpoint in-flight offline work to the
+//!   [`JobStore`], exit with zero accepted-request loss.
+//!
+//! ## Backpressure and loss accounting
+//!
+//! Every accepted online request is tracked in a per-server stream hub
+//! keyed by submission ticket. Token buffers are bounded
+//! ([`STREAM_BUF_CAP`]): a slow reader stops accumulating tokens (the
+//! final frame reports `lagged: true`) instead of growing the buffer.
+//! A disconnected or timed-out client pushes its ticket onto the
+//! engine's cancellation inbox, freeing the slot and its KV. The serve
+//! summary proves the drain invariant arithmetically:
+//! `lost_online = accepted - completed - cancelled - failed` must be 0.
+//!
+//! ## Drain state machine
+//!
+//! `accepting -> draining -> flushing -> checkpoint -> exit`:
+//! `POST /drain` (or the `--duration` timer) closes the admission door
+//! (every new request sheds with `reason: "draining"`); the accept
+//! loop waits for in-flight connections to finish (their accepted work
+//! is already in the engines); then the engine drain flag is raised —
+//! each engine finishes its admitted *online* work, breaks, and
+//! flushes unfinished offline work to the store via
+//! [`ServingEngine::drain_to_store`]. A later `conserve serve` on the
+//! same state dir resumes those jobs byte-identically (keyed synthetic
+//! sampling, [`crate::backend::SimBackend::set_synth_tokens`]).
+
+use crate::backend::{CostModel, SimBackend};
+use crate::batch::{tier_weight, urgency_score, JobStore, ResumeState};
+use crate::clock::Clock;
+use crate::config::EngineConfig;
+use crate::metrics::Recorder;
+use crate::profiler::LatencyProfile;
+use crate::report::Report;
+use crate::request::{Class, Request, TokenId};
+use crate::server::admission::{
+    AdmissionConfig, AdmissionController, AdmissionCounters, Decision, FleetView, JobVerdict,
+    ShedReason,
+};
+use crate::server::api::CLIENT_TICKET_BIT;
+use crate::server::{ServingEngine, StreamEvent, StreamSink};
+use crate::shard::{sharded_channel, Placement, ShardedClient};
+use crate::util::json::{arr, num, obj, Json};
+use crate::TimeUs;
+use anyhow::{Context, Result};
+use std::collections::{HashMap, VecDeque};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Per-request token-stream buffer bound: a reader this far behind is
+/// "lagged" — the hub stops buffering (the stream stays live, the
+/// final frame reports the gap) rather than growing without bound.
+pub const STREAM_BUF_CAP: usize = 256;
+
+/// Handler poll interval against the stream hub (ms).
+const POLL_MS: u64 = 2;
+
+/// Per-socket read/write timeout. A peer that stalls longer is treated
+/// as disconnected (its request is cancelled, not buffered).
+const SOCKET_TIMEOUT: Duration = Duration::from_secs(2);
+
+// ---------------------------------------------------------------------------
+// Options / summary
+// ---------------------------------------------------------------------------
+
+/// Front-door configuration (`conserve serve` flags map 1:1).
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Bind address; port 0 picks a free port (tests).
+    pub addr: String,
+    pub shards: usize,
+    /// Wall-clock serving duration in seconds; 0 = run until `/drain`.
+    pub duration_s: f64,
+    /// Durable job store directory. `None` disables checkpointing (a
+    /// drain then still flushes online work, but offline progress is
+    /// not persisted).
+    pub state_dir: Option<PathBuf>,
+    /// Engine iterations between durable checkpoint flushes.
+    pub ckpt_every: u64,
+    pub admission: AdmissionConfig,
+    /// Execution cost model. Tests substitute a sped-up model so
+    /// real-clock pacing stays in the milliseconds.
+    pub cost: CostModel,
+    pub max_header_bytes: usize,
+    pub max_body_bytes: usize,
+    /// Cap on how long a connection may wait for its completion before
+    /// the server cancels the request and answers `504`.
+    pub request_timeout_ms: u64,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            addr: "127.0.0.1:8077".to_string(),
+            shards: 2,
+            duration_s: 0.0,
+            state_dir: None,
+            ckpt_every: 50,
+            admission: AdmissionConfig::default(),
+            cost: CostModel::a100_llama2_7b(),
+            max_header_bytes: 8 << 10,
+            max_body_bytes: 256 << 10,
+            request_timeout_ms: 120_000,
+        }
+    }
+}
+
+/// End-of-serve accounting returned by [`HttpServer::run`].
+#[derive(Debug)]
+pub struct ServeSummary {
+    pub report: Report,
+    pub admission: AdmissionCounters,
+    /// Online requests accepted past admission (submitted to engines).
+    pub accepted_online: u64,
+    /// ... of which finished and were delivered (or were deliverable).
+    pub completed_online: u64,
+    /// ... of which were cancelled (client disconnect / timeout).
+    pub cancelled_online: u64,
+    /// Accepted online tickets stranded by a shard death, each answered
+    /// with a structured `503` carrying the request id.
+    pub failed_online: Vec<u64>,
+    /// The drain invariant: `accepted - completed - cancelled - failed`.
+    /// Zero on a clean run; anything else is silent loss.
+    pub lost_online: u64,
+    /// Offline outputs / cold checkpoints flushed by the final drain.
+    pub drain_outputs: u64,
+    pub drain_checkpoints: u64,
+    pub shard_deaths: usize,
+    /// Offline requests re-dispatched from the durable store at boot.
+    pub resumed_requests: usize,
+    /// HTTP requests handled (any route, any outcome).
+    pub requests_served: u64,
+}
+
+// ---------------------------------------------------------------------------
+// Stream hub
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+struct DoneInfo {
+    generated: u64,
+    output: Vec<TokenId>,
+}
+
+/// Per-accepted-request mailbox between the engine's stream sink and
+/// the connection handler, keyed by submission ticket.
+#[derive(Debug, Default)]
+struct StreamSlot {
+    shard: usize,
+    buf: VecDeque<TokenId>,
+    /// Reader fell behind `STREAM_BUF_CAP`; buffering stopped.
+    lagged: bool,
+    done: Option<DoneInfo>,
+    aborted: bool,
+    /// Stranded by a shard death (answered with a structured 503).
+    failed: bool,
+    /// The handler is gone (disconnect/timeout); the sink removes the
+    /// slot itself on the terminal event.
+    orphaned: bool,
+}
+
+enum Terminal {
+    Done(DoneInfo, bool),
+    Aborted,
+    Failed,
+}
+
+// ---------------------------------------------------------------------------
+// Shared server state
+// ---------------------------------------------------------------------------
+
+struct ServeState {
+    client: ShardedClient,
+    admission: AdmissionController,
+    clock: Clock,
+    hub: Mutex<HashMap<u64, StreamSlot>>,
+    /// Per-shard cancellation inboxes (wired to the engines).
+    cancels: Vec<Arc<Mutex<Vec<u64>>>>,
+    /// Raised only after the accept loop settles — engines then finish
+    /// online work and break.
+    engine_drain: Arc<AtomicBool>,
+    /// Raised by `POST /drain` or the duration timer.
+    drain_requested: AtomicBool,
+    /// Open connections currently being handled.
+    inflight: AtomicU64,
+    accepted_online: AtomicU64,
+    completed_online: AtomicU64,
+    cancelled_online: AtomicU64,
+    failed_count: AtomicU64,
+    failed_online: Mutex<Vec<u64>>,
+    shard_dead: Vec<AtomicBool>,
+    requests_served: AtomicU64,
+    store: Option<Arc<Mutex<JobStore>>>,
+    opts: ServeOptions,
+}
+
+impl ServeState {
+    fn fleet_view(&self) -> FleetView {
+        FleetView::from(self.client.loads().fleet_occupancy())
+    }
+
+    fn dead_shards(&self) -> usize {
+        self.shard_dead
+            .iter()
+            .filter(|d| d.load(Ordering::Relaxed))
+            .count()
+    }
+
+    /// A shard died: every accepted online ticket routed to it is
+    /// marked failed so its waiting handler can answer a structured
+    /// 503 instead of hanging until the request timeout.
+    fn fail_shard(&self, shard: usize) {
+        self.shard_dead[shard].store(true, Ordering::Release);
+        let mut hub = self.hub.lock().unwrap();
+        let mut failed = self.failed_online.lock().unwrap();
+        hub.retain(|&sid, slot| {
+            if slot.shard != shard || slot.done.is_some() || slot.aborted || slot.failed {
+                return true;
+            }
+            slot.failed = true;
+            failed.push(sid);
+            self.failed_count.fetch_add(1, Ordering::Relaxed);
+            // an orphaned slot has no reader left to deliver the 503 to
+            !slot.orphaned
+        });
+    }
+
+    /// Handler gave up on `sid` (disconnect or timeout): cancel it on
+    /// its shard and leave the slot for the sink to reap on the
+    /// terminal event (so the loss accounting still sees it).
+    fn orphan(&self, sid: u64, shard: usize) {
+        let mut hub = self.hub.lock().unwrap();
+        if let Some(slot) = hub.get_mut(&sid) {
+            if slot.done.is_some() || slot.aborted || slot.failed {
+                // terminal already counted — nothing left to cancel
+                hub.remove(&sid);
+                return;
+            }
+            if self.shard_dead[shard].load(Ordering::Relaxed) {
+                // no terminal event will ever come: account it as
+                // failed here so the loss arithmetic stays closed
+                hub.remove(&sid);
+                self.failed_online.lock().unwrap().push(sid);
+                self.failed_count.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+            slot.orphaned = true;
+        }
+        drop(hub);
+        self.cancels[shard].lock().unwrap().push(sid);
+    }
+}
+
+/// The engine-side stream sink for one shard: routes lifecycle events
+/// into the hub. Only *online* events materialize slots (offline job
+/// members account through the job board and the durable store).
+fn make_sink(state: Arc<ServeState>, shard: usize) -> StreamSink {
+    Box::new(move |ev| match ev {
+        StreamEvent::Token {
+            sid, class, token, ..
+        } => {
+            if class != Class::Online {
+                return;
+            }
+            let mut hub = state.hub.lock().unwrap();
+            let slot = hub.entry(sid).or_insert_with(|| StreamSlot {
+                shard,
+                ..StreamSlot::default()
+            });
+            if slot.buf.len() >= STREAM_BUF_CAP {
+                slot.lagged = true;
+            } else {
+                slot.buf.push_back(token);
+            }
+        }
+        StreamEvent::Done {
+            sid,
+            class,
+            generated,
+            output,
+            ..
+        } => {
+            if class != Class::Online {
+                return;
+            }
+            let mut hub = state.hub.lock().unwrap();
+            let slot = hub.entry(sid).or_insert_with(|| StreamSlot {
+                shard,
+                ..StreamSlot::default()
+            });
+            if slot.failed {
+                return; // already accounted as failed (shard death race)
+            }
+            state.completed_online.fetch_add(1, Ordering::Relaxed);
+            if slot.orphaned {
+                hub.remove(&sid);
+            } else {
+                slot.done = Some(DoneInfo { generated, output });
+            }
+        }
+        StreamEvent::Aborted { sid, class, .. } => {
+            if class != Class::Online {
+                return;
+            }
+            let mut hub = state.hub.lock().unwrap();
+            let slot = hub.entry(sid).or_insert_with(|| StreamSlot {
+                shard,
+                ..StreamSlot::default()
+            });
+            if slot.failed {
+                return;
+            }
+            state.cancelled_online.fetch_add(1, Ordering::Relaxed);
+            if slot.orphaned {
+                hub.remove(&sid);
+            } else {
+                slot.aborted = true;
+            }
+        }
+    })
+}
+
+// ---------------------------------------------------------------------------
+// HTTP plumbing (hand-rolled; no dependencies)
+// ---------------------------------------------------------------------------
+
+struct HttpRequest {
+    method: String,
+    path: String,
+    body: Vec<u8>,
+}
+
+enum HttpFail {
+    Malformed,
+    HeaderTooLarge,
+    BodyTooLarge,
+    Disconnected,
+}
+
+fn find_subslice(hay: &[u8], needle: &[u8]) -> Option<usize> {
+    hay.windows(needle.len()).position(|w| w == needle)
+}
+
+/// Read and frame one request: bounded header scan, `Content-Length`
+/// body read. Any torn, oversized or non-HTTP input maps to a
+/// structured 4xx via [`HttpFail`].
+fn read_request(
+    stream: &mut TcpStream,
+    max_header: usize,
+    max_body: usize,
+) -> std::result::Result<HttpRequest, HttpFail> {
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut tmp = [0u8; 2048];
+    let header_end = loop {
+        if let Some(pos) = find_subslice(&buf, b"\r\n\r\n") {
+            break pos;
+        }
+        if buf.len() > max_header {
+            return Err(HttpFail::HeaderTooLarge);
+        }
+        match stream.read(&mut tmp) {
+            Ok(0) => return Err(HttpFail::Disconnected),
+            Ok(n) => buf.extend_from_slice(&tmp[..n]),
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => return Err(HttpFail::Disconnected),
+        }
+    };
+    let head = std::str::from_utf8(&buf[..header_end]).map_err(|_| HttpFail::Malformed)?;
+    let mut lines = head.split("\r\n");
+    let req_line = lines.next().ok_or(HttpFail::Malformed)?;
+    let mut parts = req_line.split(' ');
+    let method = parts.next().ok_or(HttpFail::Malformed)?;
+    let path = parts.next().ok_or(HttpFail::Malformed)?;
+    let version = parts.next().ok_or(HttpFail::Malformed)?;
+    if !version.starts_with("HTTP/1.") || parts.next().is_some() || path.is_empty() {
+        return Err(HttpFail::Malformed);
+    }
+    let mut content_len = 0usize;
+    for line in lines {
+        if let Some((k, v)) = line.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_len = v.trim().parse().map_err(|_| HttpFail::Malformed)?;
+            }
+        }
+    }
+    if content_len > max_body {
+        return Err(HttpFail::BodyTooLarge);
+    }
+    let mut body = buf[header_end + 4..].to_vec();
+    while body.len() < content_len {
+        match stream.read(&mut tmp) {
+            Ok(0) => return Err(HttpFail::Disconnected),
+            Ok(n) => body.extend_from_slice(&tmp[..n]),
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => return Err(HttpFail::Disconnected),
+        }
+    }
+    body.truncate(content_len);
+    Ok(HttpRequest {
+        method: method.to_string(),
+        path: path.to_string(),
+        body,
+    })
+}
+
+fn status_reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Internal Server Error",
+    }
+}
+
+fn respond(
+    stream: &mut TcpStream,
+    status: u16,
+    extra_headers: &[(&str, String)],
+    body: &Json,
+) -> std::io::Result<()> {
+    let body = body.to_string();
+    let mut head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n",
+        status,
+        status_reason(status),
+        body.len()
+    );
+    for (k, v) in extra_headers {
+        head.push_str(k);
+        head.push_str(": ");
+        head.push_str(v);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+fn error_body(kind: &str, fields: Vec<(&str, Json)>) -> Json {
+    let mut inner = vec![("type", Json::Str(kind.to_string()))];
+    inner.extend(fields);
+    obj(vec![("error", obj(inner))])
+}
+
+fn respond_fail(stream: &mut TcpStream, fail: HttpFail) {
+    let (status, kind) = match fail {
+        HttpFail::Malformed | HttpFail::Disconnected => (400, "malformed"),
+        HttpFail::HeaderTooLarge => (431, "header_too_large"),
+        HttpFail::BodyTooLarge => (413, "body_too_large"),
+    };
+    let _ = respond(stream, status, &[], &error_body(kind, vec![]));
+}
+
+/// One chunk of a `Transfer-Encoding: chunked` NDJSON stream.
+fn write_chunk(stream: &mut TcpStream, line: &str) -> std::io::Result<()> {
+    // +1 for the trailing newline that makes the body NDJSON
+    let chunk = format!("{:x}\r\n{}\n\r\n", line.len() + 1, line);
+    stream.write_all(chunk.as_bytes())?;
+    stream.flush()
+}
+
+fn finish_chunked(stream: &mut TcpStream) -> std::io::Result<()> {
+    stream.write_all(b"0\r\n\r\n")?;
+    stream.flush()
+}
+
+/// Shed response: structured 429 (503 while draining) with both a
+/// `Retry-After` header (whole seconds, ceiling) and a millisecond
+/// hint in the body.
+fn respond_shed(stream: &mut TcpStream, retry_after_ms: u64, reason: ShedReason) {
+    let status = if reason == ShedReason::Draining { 503 } else { 429 };
+    let secs = retry_after_ms.div_ceil(1000).max(1);
+    let _ = respond(
+        stream,
+        status,
+        &[("Retry-After", secs.to_string())],
+        &error_body(
+            "shed",
+            vec![
+                ("reason", Json::Str(reason.as_str().to_string())),
+                ("retry_after_ms", num(retry_after_ms as f64)),
+            ],
+        ),
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Request parsing helpers
+// ---------------------------------------------------------------------------
+
+const MAX_PROMPT_TOKENS: usize = 8192;
+const MAX_NEW_TOKENS: usize = 8192;
+const MAX_BATCH_REQUESTS: usize = 4096;
+
+/// Prompt tokens from a request object: an int array, a UTF-8 string
+/// (bytes as tokens — the sim path only needs lengths), or a
+/// `prompt_len` with synthesized content.
+fn parse_prompt(j: &Json) -> Option<Vec<TokenId>> {
+    if let Some(p) = j.get("prompt") {
+        if let Some(a) = p.as_arr() {
+            if a.len() > MAX_PROMPT_TOKENS {
+                return None;
+            }
+            return a
+                .iter()
+                .map(|t| t.as_f64().map(|n| n as TokenId))
+                .collect::<Option<Vec<_>>>()
+                .filter(|v| !v.is_empty());
+        }
+        if let Some(s) = p.as_str() {
+            let b: Vec<TokenId> = s.bytes().map(|b| b as TokenId).collect();
+            return (!b.is_empty() && b.len() <= MAX_PROMPT_TOKENS).then_some(b);
+        }
+        return None;
+    }
+    let n = j.get("prompt_len")?.as_usize()?;
+    if n == 0 || n > MAX_PROMPT_TOKENS {
+        return None;
+    }
+    Some((0..n).map(|i| (i & 0xFF) as TokenId).collect())
+}
+
+fn parse_max_tokens(j: &Json) -> Option<usize> {
+    match j.get("max_tokens") {
+        None => Some(16),
+        Some(v) => v.as_usize().filter(|&n| n >= 1 && n <= MAX_NEW_TOKENS),
+    }
+}
+
+/// Batch member list: explicit `requests: [{prompt, max_tokens}, ...]`
+/// or the shorthand `{n_requests, prompt_len, max_tokens}`.
+fn parse_batch_members(j: &Json) -> Option<Vec<(Vec<TokenId>, usize)>> {
+    if let Some(reqs) = j.get("requests") {
+        let reqs = reqs.as_arr()?;
+        if reqs.is_empty() || reqs.len() > MAX_BATCH_REQUESTS {
+            return None;
+        }
+        return reqs
+            .iter()
+            .map(|r| Some((parse_prompt(r)?, parse_max_tokens(r)?)))
+            .collect();
+    }
+    let n = j.get("n_requests")?.as_usize()?;
+    if n == 0 || n > MAX_BATCH_REQUESTS {
+        return None;
+    }
+    let prompt = parse_prompt(j)?;
+    let max_new = parse_max_tokens(j)?;
+    Some((0..n).map(|_| (prompt.clone(), max_new)).collect())
+}
+
+// ---------------------------------------------------------------------------
+// Route handlers
+// ---------------------------------------------------------------------------
+
+fn handle_healthz(stream: &mut TcpStream, state: &ServeState) {
+    let v = state.fleet_view();
+    let draining = state.admission.is_draining();
+    let body = obj(vec![
+        (
+            "status",
+            Json::Str(if draining { "draining" } else { "ok" }.to_string()),
+        ),
+        ("draining", Json::Bool(draining)),
+        ("shards", num(v.n_shards as f64)),
+        ("dead_shards", num(state.dead_shards() as f64)),
+        ("online_blocks", num(v.online_blocks as f64)),
+        ("capacity_blocks", num((v.n_shards * v.capacity_blocks) as f64)),
+        ("waiting_online", num(v.waiting_online as f64)),
+        ("waiting_offline", num(v.offline_waiting as f64)),
+    ]);
+    let _ = respond(stream, 200, &[], &body);
+}
+
+fn handle_drain(stream: &mut TcpStream, state: &ServeState) {
+    state.admission.begin_drain();
+    state.drain_requested.store(true, Ordering::Release);
+    let _ = respond(
+        stream,
+        202,
+        &[],
+        &obj(vec![("status", Json::Str("draining".to_string()))]),
+    );
+}
+
+fn handle_completions(mut stream: TcpStream, state: &Arc<ServeState>, body: &[u8]) {
+    let Ok(text) = std::str::from_utf8(body) else {
+        let _ = respond(&mut stream, 400, &[], &error_body("malformed", vec![]));
+        return;
+    };
+    let Ok(j) = Json::parse(text) else {
+        let _ = respond(&mut stream, 400, &[], &error_body("malformed", vec![]));
+        return;
+    };
+    let (Some(prompt), Some(max_tokens)) = (parse_prompt(&j), parse_max_tokens(&j)) else {
+        let _ = respond(&mut stream, 400, &[], &error_body("invalid_request", vec![]));
+        return;
+    };
+    let streaming = j.get("stream").and_then(Json::as_bool).unwrap_or(false);
+
+    let view = state.fleet_view();
+    if let Decision::Shed {
+        retry_after_ms,
+        reason,
+    } = state.admission.admit_online(&view, state.clock.now())
+    {
+        respond_shed(&mut stream, retry_after_ms, reason);
+        return;
+    }
+    let ticket = match state.client.try_submit_online(prompt, max_tokens) {
+        Ok(t) => t,
+        Err(_) => {
+            // bounded submission channel at capacity — shed rather
+            // than block the accept path
+            let _ = respond(
+                &mut stream,
+                503,
+                &[("Retry-After", "1".to_string())],
+                &error_body("backpressure", vec![("retry_after_ms", num(100.0))]),
+            );
+            return;
+        }
+    };
+    state.accepted_online.fetch_add(1, Ordering::Relaxed);
+    let sid = ticket.ticket;
+    {
+        // adopt the slot (the sink may already have created it)
+        let mut hub = state.hub.lock().unwrap();
+        hub.entry(sid).or_default().shard = ticket.shard;
+    }
+    if streaming {
+        stream_completion(stream, state, sid, ticket.shard);
+    } else {
+        wait_completion(stream, state, sid, ticket.shard);
+    }
+}
+
+/// Take whatever the slot holds right now: buffered tokens plus, if
+/// present, the terminal state (which also removes the slot).
+fn poll_slot(state: &ServeState, sid: u64) -> (Vec<TokenId>, Option<Terminal>) {
+    let mut hub = state.hub.lock().unwrap();
+    let Some(slot) = hub.get_mut(&sid) else {
+        // only terminal paths remove slots, so a vanished slot means
+        // the request is gone — report it as failed
+        return (Vec::new(), Some(Terminal::Failed));
+    };
+    let tokens: Vec<TokenId> = slot.buf.drain(..).collect();
+    let term = if let Some(d) = slot.done.clone() {
+        Some(Terminal::Done(d, slot.lagged))
+    } else if slot.failed {
+        Some(Terminal::Failed)
+    } else if slot.aborted {
+        Some(Terminal::Aborted)
+    } else {
+        None
+    };
+    if term.is_some() {
+        hub.remove(&sid);
+    }
+    (tokens, term)
+}
+
+fn shard_failed_body(sid: u64) -> Json {
+    error_body(
+        "shard_failed",
+        vec![
+            ("request_ids", arr([Json::Str(sid.to_string())])),
+            ("retry_after_ms", num(1000.0)),
+            (
+                "hint",
+                Json::Str("resubmit: a retry mints a fresh ticket on a live shard".to_string()),
+            ),
+        ],
+    )
+}
+
+fn wait_completion(mut stream: TcpStream, state: &Arc<ServeState>, sid: u64, shard: usize) {
+    let deadline = Instant::now() + Duration::from_millis(state.opts.request_timeout_ms);
+    let mut tokens: Vec<TokenId> = Vec::new();
+    loop {
+        let (mut fresh, term) = poll_slot(state, sid);
+        tokens.append(&mut fresh);
+        match term {
+            Some(Terminal::Done(d, lagged)) => {
+                // Done carries the full output — authoritative even if
+                // the incremental buffer lagged
+                let out = if d.output.is_empty() { tokens } else { d.output };
+                let body = obj(vec![
+                    ("id", Json::Str(sid.to_string())),
+                    ("generated", num(d.generated as f64)),
+                    ("tokens", arr(out.iter().map(|&t| num(t as f64)))),
+                    ("lagged", Json::Bool(lagged)),
+                ]);
+                let _ = respond(&mut stream, 200, &[], &body);
+                return;
+            }
+            Some(Terminal::Failed) => {
+                let _ = respond(
+                    &mut stream,
+                    503,
+                    &[("Retry-After", "1".to_string())],
+                    &shard_failed_body(sid),
+                );
+                return;
+            }
+            Some(Terminal::Aborted) => {
+                let _ = respond(&mut stream, 503, &[], &error_body("cancelled", vec![]));
+                return;
+            }
+            None => {
+                if Instant::now() >= deadline {
+                    state.orphan(sid, shard);
+                    let _ = respond(&mut stream, 504, &[], &error_body("timeout", vec![]));
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(POLL_MS));
+            }
+        }
+    }
+}
+
+fn stream_completion(mut stream: TcpStream, state: &Arc<ServeState>, sid: u64, shard: usize) {
+    let head = "HTTP/1.1 200 OK\r\nContent-Type: application/x-ndjson\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n";
+    if stream.write_all(head.as_bytes()).is_err() {
+        state.orphan(sid, shard);
+        return;
+    }
+    let deadline = Instant::now() + Duration::from_millis(state.opts.request_timeout_ms);
+    loop {
+        let (tokens, term) = poll_slot(state, sid);
+        for t in tokens {
+            let line = obj(vec![("token", num(t as f64))]).to_string();
+            if write_chunk(&mut stream, &line).is_err() {
+                // reader went away mid-stream: cancel, free the slot
+                state.orphan(sid, shard);
+                return;
+            }
+        }
+        match term {
+            Some(Terminal::Done(d, lagged)) => {
+                let line = obj(vec![
+                    ("done", Json::Bool(true)),
+                    ("id", Json::Str(sid.to_string())),
+                    ("generated", num(d.generated as f64)),
+                    ("lagged", Json::Bool(lagged)),
+                ])
+                .to_string();
+                let _ = write_chunk(&mut stream, &line).and_then(|_| finish_chunked(&mut stream));
+                return;
+            }
+            Some(Terminal::Failed) => {
+                let line = shard_failed_body(sid).to_string();
+                let _ = write_chunk(&mut stream, &line).and_then(|_| finish_chunked(&mut stream));
+                return;
+            }
+            Some(Terminal::Aborted) => {
+                let line = error_body("cancelled", vec![]).to_string();
+                let _ = write_chunk(&mut stream, &line).and_then(|_| finish_chunked(&mut stream));
+                return;
+            }
+            None => {
+                if Instant::now() >= deadline {
+                    state.orphan(sid, shard);
+                    let line = error_body("timeout", vec![]).to_string();
+                    let _ =
+                        write_chunk(&mut stream, &line).and_then(|_| finish_chunked(&mut stream));
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(POLL_MS));
+            }
+        }
+    }
+}
+
+fn handle_batch_submit(stream: &mut TcpStream, state: &ServeState, body: &[u8]) {
+    let parsed = std::str::from_utf8(body).ok().and_then(|t| Json::parse(t).ok());
+    let Some(j) = parsed else {
+        let _ = respond(stream, 400, &[], &error_body("malformed", vec![]));
+        return;
+    };
+    let Some(members) = parse_batch_members(&j) else {
+        let _ = respond(stream, 400, &[], &error_body("invalid_request", vec![]));
+        return;
+    };
+    let tenant = j.get("tenant").and_then(Json::as_usize).unwrap_or(0) as u32;
+    let tier = j.get("tier").and_then(Json::as_usize).unwrap_or(1).min(255) as u8;
+    let deadline_ms = j
+        .get("deadline_ms")
+        .and_then(Json::as_f64)
+        .map(|n| n.max(0.0) as u64)
+        .unwrap_or(0);
+    let now = state.clock.now();
+    let deadline: TimeUs = if deadline_ms > 0 {
+        now + deadline_ms * 1000
+    } else {
+        0
+    };
+    let job_tokens: u64 = members.iter().map(|(p, m)| (p.len() + m) as u64).sum();
+    let n_requests = members.len() as u64;
+
+    let view = state.fleet_view();
+    match state
+        .admission
+        .admit_job(&view, tenant, job_tokens, deadline, now)
+    {
+        JobVerdict::Reject {
+            retry_after_ms,
+            reason,
+        } => {
+            // mint + immediately retire a board id so even a rejected
+            // job is correlatable in the tenant's logs
+            let job = state.client.reserve_job(n_requests, tenant, deadline);
+            state.client.retire_job(job);
+            let status = if reason == ShedReason::Draining { 503 } else { 429 };
+            let secs = retry_after_ms.div_ceil(1000).max(1);
+            let mut body = error_body(
+                "job_rejected",
+                vec![
+                    ("reason", Json::Str(reason.as_str().to_string())),
+                    ("retry_after_ms", num(retry_after_ms as f64)),
+                ],
+            );
+            if let Json::Obj(m) = &mut body {
+                m.insert("id".to_string(), num(job as f64));
+            }
+            let _ = respond(stream, status, &[("Retry-After", secs.to_string())], &body);
+        }
+        verdict @ (JobVerdict::Accept { .. } | JobVerdict::DownTier { .. }) => {
+            let (eff_deadline, eff_tier, urgency, status_str, est_ms) = match verdict {
+                JobVerdict::Accept { est_finish_ms } => {
+                    let urg = urgency_score(
+                        deadline,
+                        now,
+                        job_tokens,
+                        state.admission.config().svc_tok_per_s,
+                    );
+                    (deadline, tier, urg, "accepted", est_finish_ms)
+                }
+                // infeasible deadline: run best-effort — deadline
+                // stripped, urgency zeroed, tier demoted
+                JobVerdict::DownTier { est_finish_ms } => (0, 2u8, 0u32, "downtiered", est_finish_ms),
+                JobVerdict::Reject { .. } => unreachable!(),
+            };
+            let prepared =
+                state
+                    .client
+                    .prepare_job(members, tenant, eff_tier, urgency, eff_deadline, now);
+            let job = prepared.spec.job;
+            if let Some(store) = &state.store {
+                if let Err(e) = store
+                    .lock()
+                    .unwrap()
+                    .record_spec(&prepared.spec, &prepared.members)
+                {
+                    state.client.retire_job(job);
+                    let _ = respond(
+                        stream,
+                        500,
+                        &[],
+                        &error_body(
+                            "store_error",
+                            vec![("detail", Json::Str(format!("{e:#}")))],
+                        ),
+                    );
+                    return;
+                }
+            }
+            state.client.dispatch_job(prepared);
+            let body = obj(vec![
+                ("id", num(job as f64)),
+                ("status", Json::Str(status_str.to_string())),
+                ("n_requests", num(n_requests as f64)),
+                ("est_finish_ms", num(est_ms as f64)),
+            ]);
+            let _ = respond(stream, 202, &[], &body);
+        }
+    }
+}
+
+fn handle_batch_status(stream: &mut TcpStream, state: &ServeState, path: &str) {
+    let id = path
+        .strip_prefix("/v1/batches/")
+        .and_then(|s| s.parse::<u64>().ok());
+    let Some(id) = id else {
+        let _ = respond(stream, 400, &[], &error_body("invalid_job_id", vec![]));
+        return;
+    };
+    match state.client.job_board().progress(id) {
+        Some(p) => {
+            let body = obj(vec![
+                ("id", num(id as f64)),
+                ("total", num(p.total as f64)),
+                ("finished", num(p.finished as f64)),
+                ("gen_tokens", num(p.gen_tokens as f64)),
+                ("done", Json::Bool(p.done())),
+                ("tenant", num(p.tenant as f64)),
+            ]);
+            let _ = respond(stream, 200, &[], &body);
+        }
+        None => {
+            let _ = respond(
+                stream,
+                404,
+                &[],
+                &error_body(
+                    "unknown_job",
+                    vec![(
+                        "hint",
+                        Json::Str("completed jobs are garbage-collected from the board".to_string()),
+                    )],
+                ),
+            );
+        }
+    }
+}
+
+fn handle_connection(mut stream: TcpStream, state: &Arc<ServeState>) {
+    let _ = stream.set_read_timeout(Some(SOCKET_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(SOCKET_TIMEOUT));
+    let _ = stream.set_nodelay(true);
+    state.requests_served.fetch_add(1, Ordering::Relaxed);
+    let req = match read_request(
+        &mut stream,
+        state.opts.max_header_bytes,
+        state.opts.max_body_bytes,
+    ) {
+        Ok(r) => r,
+        Err(f) => {
+            respond_fail(&mut stream, f);
+            return;
+        }
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => handle_healthz(&mut stream, state),
+        ("POST", "/drain") => handle_drain(&mut stream, state),
+        ("POST", "/v1/completions") => handle_completions(stream, state, &req.body),
+        ("POST", "/v1/batches") => handle_batch_submit(&mut stream, state, &req.body),
+        ("GET", p) if p.starts_with("/v1/batches/") => handle_batch_status(&mut stream, state, p),
+        (_, "/healthz" | "/drain" | "/v1/completions" | "/v1/batches") => {
+            let _ = respond(&mut stream, 405, &[], &error_body("method_not_allowed", vec![]));
+        }
+        _ => {
+            let _ = respond(&mut stream, 404, &[], &error_body("not_found", vec![]));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Resume
+// ---------------------------------------------------------------------------
+
+/// Rebuild unfinished offline work from the durable store and
+/// re-dispatch it round-robin over the live shard clients. Per
+/// request, the newest checkpoint wins (arrival reset so waiting time
+/// does not predate the restart); a request without one restarts from
+/// its recorded spec under the *same* sid — keyed sampling then makes
+/// its resumed output byte-identical. Finally the shared ticket
+/// counter is seeded past every stored id so fresh tickets cannot
+/// collide with resumed submission ids.
+fn resume_jobs(client: &ShardedClient, rs: &ResumeState) -> usize {
+    let n = client.n_shards();
+    let mut max_id = 0u64;
+    let mut resumed = 0usize;
+    let mut rr = 0usize;
+    for sj in &rs.jobs {
+        let spec = &sj.spec;
+        max_id = max_id.max(spec.job);
+        let mut done = 0u64;
+        let mut done_tokens = 0u64;
+        let mut pending: Vec<Request> = Vec::new();
+        for sr in &sj.requests {
+            max_id = max_id.max(sr.sid & !CLIENT_TICKET_BIT);
+            if let Some(out) = rs.outputs.get(&sr.sid) {
+                done += 1;
+                done_tokens += out.generated;
+                continue;
+            }
+            let mut r = if let Some(ck) = rs.checkpoints.get(&sr.sid) {
+                let mut r = ck.clone().into_request();
+                r.arrival = 0;
+                r
+            } else {
+                let mut r = Request::new(
+                    sr.sid,
+                    Class::Offline,
+                    sr.prompt.clone(),
+                    sr.prompt_len,
+                    sr.max_new_tokens,
+                    0,
+                );
+                r.job = spec.job;
+                r.tenant = spec.tenant;
+                r.fair_weight = tier_weight(spec.tier);
+                r.deadline = spec.deadline;
+                r
+            };
+            r.urgency = 0; // the restamp hook re-scores queued urgency
+            pending.push(r);
+        }
+        if done >= spec.n_requests && pending.is_empty() {
+            continue; // job fully finished before the restart
+        }
+        client.job_board().register_resumed(
+            spec.job,
+            spec.n_requests,
+            done,
+            done_tokens,
+            spec.deadline,
+            spec.tenant,
+        );
+        for r in pending {
+            client.client(rr % n).send(r);
+            rr += 1;
+            resumed += 1;
+        }
+    }
+    client.seed_tickets(max_id + 1);
+    resumed
+}
+
+// ---------------------------------------------------------------------------
+// The server
+// ---------------------------------------------------------------------------
+
+struct ShardOutcome {
+    rec: Option<Recorder>,
+    end: TimeUs,
+    outs: u64,
+    ckpts: u64,
+}
+
+/// Decrements the in-flight connection gauge even if a handler panics
+/// (a stuck gauge would deadlock the drain sequence).
+struct InflightGuard(Arc<ServeState>);
+impl Drop for InflightGuard {
+    fn drop(&mut self) {
+        self.0.inflight.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// The bound-but-not-yet-serving front door. Splitting bind from
+/// [`run`](Self::run) lets tests bind port 0 and read the real
+/// address before traffic starts.
+pub struct HttpServer {
+    listener: TcpListener,
+    cfg: EngineConfig,
+    opts: ServeOptions,
+}
+
+impl HttpServer {
+    pub fn bind(cfg: EngineConfig, opts: ServeOptions) -> Result<Self> {
+        let listener = TcpListener::bind(&opts.addr)
+            .with_context(|| format!("binding front door to {}", opts.addr))?;
+        listener.set_nonblocking(true).context("nonblocking listener")?;
+        Ok(HttpServer { listener, cfg, opts })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.listener.local_addr().expect("bound listener has an address")
+    }
+
+    /// Serve until drained (via `POST /drain` or the configured
+    /// duration), then flush, checkpoint, and account for every
+    /// accepted request.
+    pub fn run(self) -> Result<ServeSummary> {
+        let HttpServer { listener, cfg, opts } = self;
+        let n_shards = opts.shards.max(1);
+        let (client, _loads, sources) = sharded_channel(n_shards, Placement::affinity(), &cfg);
+
+        let store = match &opts.state_dir {
+            Some(dir) => Some((
+                Arc::new(Mutex::new(JobStore::open(dir).context("opening job store")?)),
+                JobStore::load(dir).context("loading job store")?,
+            )),
+            None => None,
+        };
+        let (store, resume_state) = match store {
+            Some((s, rs)) => (Some(s), Some(rs)),
+            None => (None, None),
+        };
+
+        // one offline profiling pass shared by all (identical) shards
+        let profile = {
+            let pclock = Clock::virtual_at(0);
+            let mut pb = SimBackend::new(opts.cost, pclock, cfg.sched.safepoint_layers);
+            LatencyProfile::profile(&mut pb, 4096, 128, 2048).context("offline profiling pass")?
+        };
+
+        let clock = Clock::real();
+        let cancels: Vec<Arc<Mutex<Vec<u64>>>> = (0..n_shards)
+            .map(|_| Arc::new(Mutex::new(Vec::new())))
+            .collect();
+        let state = Arc::new(ServeState {
+            client,
+            admission: AdmissionController::new(opts.admission.clone()),
+            clock: clock.clone(),
+            hub: Mutex::new(HashMap::new()),
+            cancels,
+            engine_drain: Arc::new(AtomicBool::new(false)),
+            drain_requested: AtomicBool::new(false),
+            inflight: AtomicU64::new(0),
+            accepted_online: AtomicU64::new(0),
+            completed_online: AtomicU64::new(0),
+            cancelled_online: AtomicU64::new(0),
+            failed_count: AtomicU64::new(0),
+            failed_online: Mutex::new(Vec::new()),
+            shard_dead: (0..n_shards).map(|_| AtomicBool::new(false)).collect(),
+            requests_served: AtomicU64::new(0),
+            store: store.clone(),
+            opts,
+        });
+
+        // ---- shard engines (constructed inside their threads) ----
+        let (outcome_tx, outcome_rx) = mpsc::channel::<ShardOutcome>();
+        let mut shard_threads = Vec::with_capacity(n_shards);
+        for (shard, arrivals) in sources.into_iter().enumerate() {
+            let st = state.clone();
+            let cfg = cfg.clone();
+            let clock = clock.clone();
+            let tx = outcome_tx.clone();
+            shard_threads.push(std::thread::spawn(move || {
+                let cost = st.opts.cost;
+                let ckpt_every = st.opts.ckpt_every;
+                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    let mut backend = SimBackend::new(cost, clock.clone(), cfg.sched.safepoint_layers);
+                    backend.set_synth_tokens(true);
+                    let mut engine =
+                        ServingEngine::for_shard(shard, cfg, backend, clock, profile, arrivals);
+                    engine.set_retain_finished(false);
+                    engine.set_shard_loads(st.client.loads().clone());
+                    engine.set_job_board(st.client.job_board().clone());
+                    engine.set_job_gc(512);
+                    engine.set_stream_sink(make_sink(st.clone(), shard));
+                    engine.set_cancel_queue(st.cancels[shard].clone());
+                    engine.set_drain_flag(st.engine_drain.clone());
+                    if let Some(store) = &st.store {
+                        engine.set_ckpt_sink(store.clone(), ckpt_every);
+                    }
+                    let end = engine.run(TimeUs::MAX);
+                    let (outs, ckpts) = engine.drain_to_store();
+                    (std::mem::take(&mut engine.rec), end, outs, ckpts)
+                }));
+                match result {
+                    Ok((rec, end, outs, ckpts)) => {
+                        let _ = tx.send(ShardOutcome {
+                            rec: Some(rec),
+                            end,
+                            outs,
+                            ckpts,
+                        });
+                    }
+                    Err(_) => {
+                        st.fail_shard(shard);
+                        let _ = tx.send(ShardOutcome {
+                            rec: None,
+                            end: 0,
+                            outs: 0,
+                            ckpts: 0,
+                        });
+                    }
+                }
+            }));
+        }
+        drop(outcome_tx);
+
+        // ---- resume after the engines are live (sends drain as the
+        // engines pull arrivals, so a large backlog cannot deadlock the
+        // bounded channels) ----
+        let resumed_requests = match &resume_state {
+            Some(rs) => resume_jobs(&state.client, rs),
+            None => 0,
+        };
+
+        // ---- accept loop ----
+        let serve_deadline = (state.opts.duration_s > 0.0)
+            .then(|| Instant::now() + Duration::from_secs_f64(state.opts.duration_s));
+        loop {
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    state.inflight.fetch_add(1, Ordering::AcqRel);
+                    let st = state.clone();
+                    std::thread::spawn(move || {
+                        let _guard = InflightGuard(st.clone());
+                        handle_connection(stream, &st);
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e).context("accepting connection"),
+            }
+            if let Some(d) = serve_deadline {
+                if Instant::now() >= d && !state.drain_requested.load(Ordering::Acquire) {
+                    state.admission.begin_drain();
+                    state.drain_requested.store(true, Ordering::Release);
+                }
+            }
+            if state.drain_requested.load(Ordering::Acquire)
+                && state.inflight.load(Ordering::Acquire) == 0
+            {
+                break;
+            }
+        }
+        drop(listener);
+
+        // ---- drain: every accepted submission has reached its engine
+        // (its handler finished), so the flag can go up ----
+        state.engine_drain.store(true, Ordering::Release);
+        let mut merged = Recorder::new();
+        let mut end: TimeUs = 0;
+        let (mut drain_outputs, mut drain_checkpoints) = (0u64, 0u64);
+        let mut shard_deaths = 0usize;
+        for _ in 0..n_shards {
+            match outcome_rx.recv_timeout(Duration::from_secs(120)) {
+                Ok(o) => {
+                    end = end.max(o.end);
+                    drain_outputs += o.outs;
+                    drain_checkpoints += o.ckpts;
+                    match o.rec {
+                        Some(rec) => merged.merge(&rec),
+                        None => shard_deaths += 1,
+                    }
+                }
+                Err(_) => shard_deaths += 1,
+            }
+        }
+        for t in shard_threads {
+            let _ = t.join();
+        }
+
+        // admission outcomes ride on the merged recorder so the serve
+        // report carries them alongside the engine counters
+        let counters = state.admission.counters();
+        merged.shed_online = counters.shed_online;
+        merged.shed_offline = counters.shed_offline;
+        merged.jobs_admitted = counters.jobs_accepted;
+        merged.jobs_downtiered = counters.jobs_downtiered;
+        merged.jobs_rejected = counters.jobs_rejected;
+        let report = Report::from_engine(&merged, cfg.sched.policy, end.max(1));
+
+        let accepted = state.accepted_online.load(Ordering::Relaxed);
+        let completed = state.completed_online.load(Ordering::Relaxed);
+        let cancelled = state.cancelled_online.load(Ordering::Relaxed);
+        let failed = state.failed_count.load(Ordering::Relaxed);
+        let failed_online = state.failed_online.lock().unwrap().clone();
+        Ok(ServeSummary {
+            report,
+            admission: counters,
+            accepted_online: accepted,
+            completed_online: completed,
+            cancelled_online: cancelled,
+            failed_online,
+            lost_online: accepted
+                .saturating_sub(completed)
+                .saturating_sub(cancelled)
+                .saturating_sub(failed),
+            drain_outputs,
+            drain_checkpoints,
+            shard_deaths,
+            resumed_requests,
+            requests_served: state.requests_served.load(Ordering::Relaxed),
+        })
+    }
+}
+
+impl ServeSummary {
+    /// JSON rendering for operator tooling and the CI smoke job.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("accepted_online", num(self.accepted_online as f64)),
+            ("completed_online", num(self.completed_online as f64)),
+            ("cancelled_online", num(self.cancelled_online as f64)),
+            ("failed_online", num(self.failed_online.len() as f64)),
+            ("lost_online", num(self.lost_online as f64)),
+            ("shed_online", num(self.admission.shed_online as f64)),
+            ("shed_offline", num(self.admission.shed_offline as f64)),
+            ("jobs_accepted", num(self.admission.jobs_accepted as f64)),
+            ("jobs_downtiered", num(self.admission.jobs_downtiered as f64)),
+            ("jobs_rejected", num(self.admission.jobs_rejected as f64)),
+            ("drain_outputs", num(self.drain_outputs as f64)),
+            ("drain_checkpoints", num(self.drain_checkpoints as f64)),
+            ("shard_deaths", num(self.shard_deaths as f64)),
+            ("resumed_requests", num(self.resumed_requests as f64)),
+            ("requests_served", num(self.requests_served as f64)),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tests (pure plumbing; the loopback integration tests live in
+// rust/tests/admission_props.rs)
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_framing_round_trip() {
+        let (a, b) = loopback_pair();
+        let mut client = a;
+        let mut server = b;
+        let body = br#"{"x":1}"#;
+        let req = format!(
+            "POST /v1/completions HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n",
+            body.len()
+        );
+        client.write_all(req.as_bytes()).unwrap();
+        client.write_all(body).unwrap();
+        let parsed = read_request(&mut server, 8192, 65536).ok().unwrap();
+        assert_eq!(parsed.method, "POST");
+        assert_eq!(parsed.path, "/v1/completions");
+        assert_eq!(parsed.body, body);
+    }
+
+    #[test]
+    fn oversized_header_and_body_are_rejected() {
+        let (mut client, mut server) = loopback_pair();
+        let req = format!("GET /x HTTP/1.1\r\nPad: {}\r\n\r\n", "y".repeat(9000));
+        client.write_all(req.as_bytes()).unwrap();
+        assert!(matches!(
+            read_request(&mut server, 8192, 65536),
+            Err(HttpFail::HeaderTooLarge)
+        ));
+
+        let (mut client, mut server) = loopback_pair();
+        client
+            .write_all(b"POST /x HTTP/1.1\r\nContent-Length: 999999\r\n\r\n")
+            .unwrap();
+        assert!(matches!(
+            read_request(&mut server, 8192, 65536),
+            Err(HttpFail::BodyTooLarge)
+        ));
+    }
+
+    #[test]
+    fn torn_request_is_malformed_or_disconnect() {
+        let (client, mut server) = loopback_pair();
+        {
+            let mut c = client;
+            c.write_all(b"POST /v1/comp").unwrap();
+            // dropped here: torn mid-request-line
+        }
+        assert!(matches!(
+            read_request(&mut server, 8192, 65536),
+            Err(HttpFail::Disconnected)
+        ));
+    }
+
+    #[test]
+    fn prompt_parsing_accepts_tokens_text_and_length() {
+        let j = Json::parse(r#"{"prompt": [1, 2, 3]}"#).unwrap();
+        assert_eq!(parse_prompt(&j), Some(vec![1, 2, 3]));
+        let j = Json::parse(r#"{"prompt": "hi"}"#).unwrap();
+        assert_eq!(parse_prompt(&j), Some(vec![b'h' as TokenId, b'i' as TokenId]));
+        let j = Json::parse(r#"{"prompt_len": 4}"#).unwrap();
+        assert_eq!(parse_prompt(&j).map(|p| p.len()), Some(4));
+        let j = Json::parse(r#"{"prompt": []}"#).unwrap();
+        assert_eq!(parse_prompt(&j), None);
+        let j = Json::parse(r#"{}"#).unwrap();
+        assert_eq!(parse_prompt(&j), None);
+    }
+
+    #[test]
+    fn batch_member_shorthand_expands() {
+        let j = Json::parse(r#"{"n_requests": 3, "prompt_len": 8, "max_tokens": 4}"#).unwrap();
+        let m = parse_batch_members(&j).unwrap();
+        assert_eq!(m.len(), 3);
+        assert!(m.iter().all(|(p, mx)| p.len() == 8 && *mx == 4));
+        let j = Json::parse(r#"{"requests": [{"prompt": [5], "max_tokens": 2}]}"#).unwrap();
+        let m = parse_batch_members(&j).unwrap();
+        assert_eq!(m, vec![(vec![5], 2)]);
+    }
+
+    /// A connected TcpStream pair over an ephemeral loopback listener.
+    fn loopback_pair() -> (TcpStream, TcpStream) {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server, _) = l.accept().unwrap();
+        server
+            .set_read_timeout(Some(Duration::from_secs(2)))
+            .unwrap();
+        (client, server)
+    }
+}

@@ -30,7 +30,9 @@
 //! optional once-per-iteration load publish (three relaxed atomic
 //! stores).
 
+pub mod admission;
 pub mod api;
+pub mod http;
 
 use crate::backend::{ExecBackend, ExecOutcome, IterationPlan, PlanSummary, SafepointAction};
 use crate::batch::{FinishedOutput, JobBoard, JobStore};
@@ -46,12 +48,46 @@ use crate::shard::ShardLoads;
 use crate::util::fault::FaultInjector;
 use crate::TimeUs;
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 
-pub use api::{ArrivalSource, BatchHandle, EngineClient};
+pub use api::{ArrivalSource, BatchHandle, EngineClient, SubmitError, SUBMIT_CHANNEL_CAP};
 
 /// Per-token observer (streaming API sink).
 pub type TokenCallback = Box<dyn FnMut(RequestId, TokenId, TimeUs)>;
+
+/// Engine-side lifecycle event for live submissions, keyed by the
+/// *submission ticket* (`sid`, [`Request::submitted_id`](crate::request::Request::submitted_id))
+/// rather than the arena id — arena slots are recycled at commit time
+/// when finished requests are reaped, so the ticket is the only key a
+/// frontend can correlate on. The front door ([`http`]) consumes these
+/// to feed per-connection token streams and completion bookkeeping.
+#[derive(Debug, Clone)]
+pub enum StreamEvent {
+    /// One sampled token (emitted only when the backend produces token
+    /// data, e.g. with synth tokens on).
+    Token {
+        sid: u64,
+        class: Class,
+        token: TokenId,
+        at: TimeUs,
+    },
+    /// The request finished; carries the full output because the arena
+    /// slot may already be recycled when the consumer looks.
+    Done {
+        sid: u64,
+        class: Class,
+        job: u64,
+        generated: u64,
+        output: Vec<TokenId>,
+        at: TimeUs,
+    },
+    /// The request was cancelled before completion (client disconnect).
+    Aborted { sid: u64, class: Class, at: TimeUs },
+}
+
+/// Stream-event sink (see [`ServingEngine::set_stream_sink`]).
+pub type StreamSink = Box<dyn FnMut(StreamEvent)>;
 
 /// Debug-only loop bookkeeping; only materialized (and only paid for)
 /// when `CONSERVE_DEBUG` is set.
@@ -122,6 +158,25 @@ pub struct ServingEngine<B: ExecBackend> {
     /// one flush interval of decode progress.
     ckpt_sink: Option<Arc<Mutex<JobStore>>>,
     ckpt_every: u64,
+    /// Live lifecycle sink ([`set_stream_sink`](Self::set_stream_sink)):
+    /// the front door's bridge from commit-time events to per-connection
+    /// token streams. `None` — and zero-cost — outside HTTP serving.
+    stream_sink: Option<StreamSink>,
+    /// Graceful-drain request ([`set_drain_flag`](Self::set_drain_flag)):
+    /// once raised, the run loop exits as soon as no unfinished online
+    /// work remains, leaving offline work for
+    /// [`drain_to_store`](Self::drain_to_store).
+    drain_flag: Option<Arc<AtomicBool>>,
+    /// Cancellation inbox ([`set_cancel_queue`](Self::set_cancel_queue)):
+    /// submission tickets whose client disconnected. Drained once per
+    /// iteration.
+    cancel_queue: Option<Arc<Mutex<Vec<u64>>>>,
+    /// Cancellations not yet matched to an arena slot (the submission
+    /// may still be in the channel), with a retry TTL.
+    cancel_pending: Vec<(u64, u8)>,
+    /// Run [`JobBoard::gc_completed`] every N iterations (0 = never) so
+    /// a long-lived server's board stays bounded.
+    gc_jobs_every: u64,
     /// sid -> decode progress at its last flush (`usize::MAX` once the
     /// finished output is recorded) — bounds write amplification to one
     /// line per request per interval, and only on progress.
@@ -197,6 +252,11 @@ impl<B: ExecBackend> ServingEngine<B> {
             fault: None,
             ckpt_sink: None,
             ckpt_every: 0,
+            stream_sink: None,
+            drain_flag: None,
+            cancel_queue: None,
+            cancel_pending: Vec::new(),
+            gc_jobs_every: 0,
             flushed: BTreeMap::new(),
             restamp_every_us: 0,
             restamp_svc_tok_per_s: 0.0,
@@ -296,6 +356,42 @@ impl<B: ExecBackend> ServingEngine<B> {
         self.next_restamp_at = every_us;
     }
 
+    /// Attach a lifecycle sink: the commit path emits a
+    /// [`StreamEvent`] per sampled token and per completion, and the
+    /// cancellation path per abort. The front door uses this to feed
+    /// chunked token streams and to account completions without keeping
+    /// finished requests resident.
+    pub fn set_stream_sink(&mut self, sink: StreamSink) {
+        self.stream_sink = Some(sink);
+    }
+
+    /// Attach a shared graceful-drain flag. Once raised (by the front
+    /// door after it stopped accepting), the run loop keeps iterating
+    /// until every admitted *online* request has finished, then breaks —
+    /// offline work still in flight is left for
+    /// [`drain_to_store`](Self::drain_to_store) to checkpoint.
+    pub fn set_drain_flag(&mut self, flag: Arc<AtomicBool>) {
+        self.drain_flag = Some(flag);
+    }
+
+    /// Attach a cancellation inbox of submission tickets (client
+    /// disconnects). Each iteration the engine resolves queued tickets:
+    /// waiting requests are removed and their KV freed immediately;
+    /// running ones are clamped to finish at the next sampled token
+    /// (their slot and KV then free through the normal commit path).
+    pub fn set_cancel_queue(&mut self, queue: Arc<Mutex<Vec<u64>>>) {
+        self.cancel_queue = Some(queue);
+    }
+
+    /// Garbage-collect completed jobs from the attached [`JobBoard`]
+    /// every `every` iterations (0 disables). Long-running serve loops
+    /// enable this so the board does not grow by one entry per completed
+    /// batch forever; trace-driven experiment runs leave it off because
+    /// they read the board's completed cells for end-of-run reports.
+    pub fn set_job_gc(&mut self, every: u64) {
+        self.gc_jobs_every = every;
+    }
+
     /// Run until `until` (µs) has passed *and* all admitted work is done,
     /// or all sources are exhausted. Returns the finish time.
     pub fn run(&mut self, until: TimeUs) -> TimeUs {
@@ -353,6 +449,31 @@ impl<B: ExecBackend> ServingEngine<B> {
             self.complete_io(now);
             if self.steal.is_some() {
                 self.steal_tick();
+            }
+            if self.cancel_queue.is_some() || !self.cancel_pending.is_empty() {
+                self.cancel_tick(now);
+            }
+            if self.gc_jobs_every > 0 && self.rec.engine_iters % self.gc_jobs_every == 0 {
+                if let Some(board) = &self.job_board {
+                    board.gc_completed();
+                }
+            }
+            if let Some(flag) = &self.drain_flag {
+                // the front door raises this only after it stopped
+                // accepting and its last submission reached the channel,
+                // so the arrival drain above has made every accepted
+                // online request visible — finish them, then exit and
+                // let drain_to_store checkpoint the offline remainder
+                if flag.load(Ordering::Acquire) {
+                    let online_left = self.table.values().any(|r| {
+                        r.class == Class::Online
+                            && r.state != State::Finished
+                            && r.state != State::Aborted
+                    });
+                    if !online_left {
+                        break;
+                    }
+                }
             }
 
             let more_arrivals = !self.arrivals.exhausted();
@@ -558,12 +679,61 @@ impl<B: ExecBackend> ServingEngine<B> {
                 let done = r.is_done();
                 let (job, tenant, deadline, gen) =
                     (r.job, r.tenant, r.deadline, r.generated as u64);
+                let sid = r.submitted_id;
+                // the Done event carries the whole output: when finished
+                // requests are reaped the slot is recycled before any
+                // consumer could read it back out of the arena
+                let done_output = if done
+                    && (self.stream_sink.is_some()
+                        || (job != 0 && self.ckpt_sink.is_some()))
+                {
+                    r.output.clone()
+                } else {
+                    Vec::new()
+                };
                 if done {
                     r.state = State::Finished;
                     r.finished_at = Some(now);
                 }
+                // flush a finished job member's output to the durable
+                // store now: with finished requests reaped at commit
+                // time this is the last point that still holds the
+                // output, and a restart must not re-run completed work
+                if done && job != 0 {
+                    if let Some(sink) = self.ckpt_sink.clone() {
+                        let f = FinishedOutput {
+                            sid,
+                            job,
+                            generated: gen,
+                            output: done_output.clone(),
+                        };
+                        if sink.lock().unwrap().record_output(&f).is_ok() {
+                            self.flushed.insert(sid, usize::MAX);
+                            self.rec.ckpt_flush_records += 1;
+                        }
+                    }
+                }
                 if let (Some(cb), Some(t)) = (self.on_token.as_mut(), tok) {
                     cb(item.req, t, now);
+                }
+                if let Some(sink) = self.stream_sink.as_mut() {
+                    if done {
+                        sink(StreamEvent::Done {
+                            sid,
+                            class,
+                            job,
+                            generated: gen,
+                            output: done_output,
+                            at: now,
+                        });
+                    } else if let Some(t) = tok {
+                        sink(StreamEvent::Token {
+                            sid,
+                            class,
+                            token: t,
+                            at: now,
+                        });
+                    }
                 }
                 if done {
                     self.rec.record_finished(class);
@@ -617,6 +787,115 @@ impl<B: ExecBackend> ServingEngine<B> {
                 }
             }
         }
+    }
+
+    /// Resolve client cancellations (see
+    /// [`set_cancel_queue`](Self::set_cancel_queue)). A ticket that does
+    /// not match an arena slot yet (the submission may still be sitting
+    /// in the channel) is retried for a bounded number of iterations,
+    /// then dropped — the worst case is one fully-served request nobody
+    /// reads, never a leak.
+    fn cancel_tick(&mut self, now: TimeUs) {
+        if let Some(q) = &self.cancel_queue {
+            let mut q = q.lock().unwrap();
+            for sid in q.drain(..) {
+                self.cancel_pending.push((sid, 16));
+            }
+        }
+        if self.cancel_pending.is_empty() {
+            return;
+        }
+        let mut pending = std::mem::take(&mut self.cancel_pending);
+        pending.retain_mut(|(sid, ttl)| {
+            let found = self
+                .table
+                .iter()
+                .find(|(_, r)| r.submitted_id == *sid)
+                .map(|(id, r)| (id, r.state, r.class));
+            let Some((id, state, class)) = found else {
+                *ttl = ttl.saturating_sub(1);
+                return *ttl > 0; // not visible yet: retry next iteration
+            };
+            match state {
+                State::Finished | State::Aborted => {}
+                _ => {
+                    if self.sched.remove_online(id) || self.sched.remove_offline(id) {
+                        // still queued: abort outright, free slot + KV now
+                        self.kv.release(id, false);
+                        self.backend.drop_request(id);
+                        self.swap.drop_request(id);
+                        self.table.remove(id);
+                        self.rec.cancelled += 1;
+                        if let Some(sink) = self.stream_sink.as_mut() {
+                            sink(StreamEvent::Aborted {
+                                sid: *sid,
+                                class,
+                                at: now,
+                            });
+                        }
+                    } else if let Some(r) = self.table.get_mut(id) {
+                        // admitted (running or preempted): clamp so the
+                        // next sampled token finishes it — slot and KV
+                        // then free through the normal commit path
+                        r.max_new_tokens = r.generated.max(1);
+                    }
+                }
+            }
+            false
+        });
+        self.cancel_pending = pending;
+    }
+
+    /// Flush every job-tagged request to the durable store
+    /// unconditionally (the graceful-drain final pass): a
+    /// [`FinishedOutput`] for each finished request whose output was not
+    /// yet recorded, and a cold checkpoint for each unfinished request
+    /// with decode progress. Zero-progress members need no record — the
+    /// job's spec line already covers them, and keyed sampling makes the
+    /// post-resume stream byte-identical either way. Returns
+    /// `(outputs, checkpoints)` written. Call after [`run`](Self::run)
+    /// breaks on the drain flag.
+    pub fn drain_to_store(&mut self) -> (u64, u64) {
+        let Some(sink) = self.ckpt_sink.clone() else {
+            return (0, 0);
+        };
+        let mut store = sink.lock().unwrap();
+        let (mut outs, mut ckpts) = (0u64, 0u64);
+        for r in self.table.values() {
+            if r.job == 0 {
+                continue;
+            }
+            match r.state {
+                State::Aborted => continue,
+                State::Finished => {
+                    if self.flushed.get(&r.submitted_id) != Some(&usize::MAX) {
+                        let f = FinishedOutput {
+                            sid: r.submitted_id,
+                            job: r.job,
+                            generated: r.generated as u64,
+                            output: r.output.clone(),
+                        };
+                        if store.record_output(&f).is_ok() {
+                            self.flushed.insert(r.submitted_id, usize::MAX);
+                            self.rec.ckpt_flush_records += 1;
+                            outs += 1;
+                        }
+                    }
+                }
+                _ => {
+                    if r.generated == 0 || self.flushed.get(&r.submitted_id) == Some(&r.generated) {
+                        continue;
+                    }
+                    let p = PortableRequest::snapshot_cold(r);
+                    if store.record_checkpoint(&p).is_ok() {
+                        self.flushed.insert(r.submitted_id, r.generated);
+                        self.rec.ckpt_flush_records += 1;
+                        ckpts += 1;
+                    }
+                }
+            }
+        }
+        (outs, ckpts)
     }
 
     /// Adaptive incremental checkpointing (§4.4): quota from the RED-style

@@ -48,14 +48,14 @@ pub mod steal;
 pub mod supervisor;
 
 use crate::backend::{CostModel, ExecBackend, SimBackend};
-use crate::batch::JobBoard;
+use crate::batch::{tier_weight, JobBoard, JobSpec};
 use crate::clock::Clock;
 use crate::config::EngineConfig;
 use crate::metrics::Recorder;
 use crate::profiler::LatencyProfile;
 use crate::report::Report;
 use crate::request::{Class, Request, RequestId, TokenId, MAX_SHARDS};
-use crate::server::{ArrivalSource, EngineClient, ServingEngine};
+use crate::server::{ArrivalSource, EngineClient, ServingEngine, SubmitError};
 use crate::{TimeUs, US_PER_SEC};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -166,6 +166,43 @@ impl ShardLoads {
         out.clear();
         out.extend((0..self.cells.len()).map(|s| self.snapshot(s)));
     }
+
+    /// Fleet-wide occupancy aggregate — the live capacity signal the
+    /// front door's admission controller
+    /// ([`crate::server::admission`]) gates on. Staleness is bounded by
+    /// one engine iteration per shard, same as placement.
+    pub fn fleet_occupancy(&self) -> FleetOccupancy {
+        let mut o = FleetOccupancy {
+            n_shards: self.cells.len(),
+            capacity_blocks: self.capacity_blocks,
+            ..Default::default()
+        };
+        for c in &self.cells {
+            o.resident_blocks += c.resident.load(Ordering::Relaxed);
+            o.online_blocks += c.online.load(Ordering::Relaxed);
+            o.waiting += c.waiting.load(Ordering::Relaxed);
+            o.offline_waiting += c.offline_waiting.load(Ordering::Relaxed);
+        }
+        o
+    }
+}
+
+/// Summed load-board snapshot across all shards (see
+/// [`ShardLoads::fleet_occupancy`]). `capacity_blocks` is *per shard*;
+/// the fleet total is `n_shards * capacity_blocks`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FleetOccupancy {
+    pub n_shards: usize,
+    /// Per-shard GPU KV pool size (blocks).
+    pub capacity_blocks: u64,
+    /// Σ resident KV blocks across shards.
+    pub resident_blocks: u64,
+    /// Σ online-reserved KV blocks across shards.
+    pub online_blocks: u64,
+    /// Σ waiting requests (both classes) across shards.
+    pub waiting: u64,
+    /// Σ queued offline requests across shards.
+    pub offline_waiting: u64,
 }
 
 /// Trace-mode request router: assigns each request to a shard under a
@@ -625,6 +662,29 @@ pub struct ShardedClient {
     tick: AtomicUsize,
     block_tokens: usize,
     pending: Vec<PendingCell>,
+    /// The shared ticket counter all per-shard clients mint from (kept
+    /// here so a restarted server can seed it past resumed sids, see
+    /// [`seed_tickets`](Self::seed_tickets)).
+    tickets: Arc<AtomicU64>,
+}
+
+/// A job built but not yet dispatched ([`ShardedClient::prepare_job`]):
+/// members are placed and fully stamped, the job is registered on the
+/// shared board, but nothing has been sent to any engine. The split lets
+/// the front door persist the job's [`JobSpec`] + member descriptors to
+/// the durable [`JobStore`](crate::batch::JobStore) *before* any member
+/// can start (no window where work exists only in volatile queues), then
+/// [`dispatch`](ShardedClient::dispatch_job) it.
+pub struct PreparedJob {
+    pub handle: crate::server::BatchHandle,
+    pub tickets: Vec<ShardTicket>,
+    pub spec: JobSpec,
+    /// Stamped member requests in submission order — the slice
+    /// [`JobStore::record_spec`](crate::batch::JobStore::record_spec)
+    /// persists.
+    pub members: Vec<Request>,
+    /// Placement decision per member (parallel to `members`).
+    shards: Vec<usize>,
 }
 
 /// Per-shard optimistic charge (see [`ShardedClient`] docs). Relaxed
@@ -711,6 +771,132 @@ impl ShardedClient {
         ShardTicket { shard, ticket }
     }
 
+    /// Non-blocking [`submit_online`](Self::submit_online): refuses with
+    /// [`SubmitError::Full`] when the chosen shard's bounded channel is
+    /// at capacity instead of blocking the caller. On refusal the
+    /// optimistic placement charge stays until that shard's next publish
+    /// — it only softens the estimate, in the conservative direction.
+    pub fn try_submit_online(
+        &self,
+        prompt: Vec<TokenId>,
+        max_new_tokens: usize,
+    ) -> Result<ShardTicket, SubmitError> {
+        let shard = self.place(Class::Online, prompt.len(), max_new_tokens, 0);
+        let ticket = self.clients[shard].try_submit_online(prompt, max_new_tokens)?;
+        Ok(ShardTicket { shard, ticket })
+    }
+
+    /// The shared job-progress board (wire a clone to every engine).
+    pub fn job_board(&self) -> &Arc<JobBoard> {
+        self.clients[0].job_board()
+    }
+
+    /// Mint + register a job id without building or sending any member
+    /// — the front door does this first so even an admission-*rejected*
+    /// job has a correlatable id in its structured 429 body.
+    pub fn reserve_job(&self, n_requests: u64, tenant: u32, deadline: TimeUs) -> u64 {
+        self.clients[0].register_job(n_requests, tenant, deadline)
+    }
+
+    /// Drop a job's board entry (admission rejection, abandoned batch).
+    /// Keeps a long-lived server's board bounded; see
+    /// [`JobBoard::retire`].
+    pub fn retire_job(&self, job: u64) -> bool {
+        self.job_board().retire(job)
+    }
+
+    /// Seed the shared ticket counter to at least `min_next` (the ticket
+    /// namespace bit is masked off). A restarted server calls this with
+    /// 1 + the highest sid found in the durable store, so freshly minted
+    /// tickets can never collide with resumed submission ids.
+    pub fn seed_tickets(&self, min_next: u64) {
+        self.tickets.fetch_max(
+            min_next & !crate::server::api::CLIENT_TICKET_BIT,
+            Ordering::Relaxed,
+        );
+    }
+
+    /// Place and stamp every member of a job *without dispatching it*:
+    /// the job is registered on the shared board (deadline as given —
+    /// pass the post-verdict deadline, not the requested one) and each
+    /// member carries the full durable identity (job, tenant, urgency,
+    /// tier weight, deadline). The caller persists
+    /// `(prepared.spec, &prepared.members)` to the store, then calls
+    /// [`dispatch_job`](Self::dispatch_job).
+    #[allow(clippy::too_many_arguments)]
+    pub fn prepare_job(
+        &self,
+        prompts: Vec<(Vec<TokenId>, usize)>,
+        tenant: u32,
+        tier: u8,
+        urgency: u32,
+        deadline: TimeUs,
+        submitted_at: TimeUs,
+    ) -> PreparedJob {
+        let job = self.clients[0].register_job(prompts.len() as u64, tenant, deadline);
+        let fair = tier_weight(tier);
+        let n_requests = prompts.len() as u64;
+        let mut members = Vec::with_capacity(prompts.len());
+        let mut shards = Vec::with_capacity(prompts.len());
+        let mut tickets = Vec::with_capacity(prompts.len());
+        let mut total_tokens = 0u64;
+        for (prompt, max_new_tokens) in prompts {
+            let shard = self.place(Class::Offline, prompt.len(), max_new_tokens, urgency);
+            let req = self.clients[shard].build_job_member(
+                job,
+                tenant,
+                urgency,
+                deadline,
+                fair,
+                prompt,
+                max_new_tokens,
+            );
+            total_tokens += (req.prompt_len + req.max_new_tokens) as u64;
+            tickets.push(ShardTicket {
+                shard,
+                ticket: req.id,
+            });
+            shards.push(shard);
+            members.push(req);
+        }
+        let handle = self.clients[0].handle(job, tickets.iter().map(|t| t.ticket).collect());
+        PreparedJob {
+            handle,
+            tickets,
+            spec: JobSpec {
+                job,
+                tenant,
+                tier,
+                deadline,
+                submitted_at,
+                n_requests,
+                total_tokens,
+            },
+            members,
+            shards,
+        }
+    }
+
+    /// Send a prepared job's members to their shards (blocking sends —
+    /// an accepted job is never shed here). Returns the poll-able handle
+    /// and the member tickets.
+    pub fn dispatch_job(
+        &self,
+        prepared: PreparedJob,
+    ) -> (crate::server::BatchHandle, Vec<ShardTicket>) {
+        let PreparedJob {
+            handle,
+            tickets,
+            members,
+            shards,
+            ..
+        } = prepared;
+        for (shard, req) in shards.into_iter().zip(members) {
+            self.clients[shard].send(req);
+        }
+        (handle, tickets)
+    }
+
     /// Route a pool of best-effort requests as one anonymous job
     /// (default tenant, no urgency, no deadline), placing each member
     /// independently. Returns the poll-able [`BatchHandle`] — the same
@@ -788,6 +974,7 @@ pub fn sharded_channel(
             tick: AtomicUsize::new(0),
             block_tokens: cfg.mem.block_tokens,
             pending: (0..n_shards).map(|_| PendingCell::default()).collect(),
+            tickets,
         },
         loads,
         sources,

@@ -1,0 +1,510 @@
+//! Front-door admission properties and loopback integration tests.
+//!
+//! * the deadline-feasibility estimator is **monotone**: adding load
+//!   (KV occupancy, online queueing, offline backlog) never flips a
+//!   job from infeasible to feasible (randomized property);
+//! * hostile clients — torn requests, oversized headers/bodies, bad
+//!   JSON, disconnects mid-stream — get structured errors and never
+//!   strand engine-side work;
+//! * a live serve loop under mixed traffic drains with **zero
+//!   accepted-request loss**, checkpoints unfinished offline work, and
+//!   resumes it after a restart.
+//!
+//! The HTTP tests run real sockets and real threads against the
+//! simulated backend under a sped-up cost model (real-clock pacing in
+//! the hundreds of microseconds per iteration).
+
+use conserve::backend::CostModel;
+use conserve::config::EngineConfig;
+use conserve::server::admission::{
+    deadline_feasible, estimate_finish_us, AdmissionConfig, FleetView,
+};
+use conserve::server::http::{HttpServer, ServeOptions, ServeSummary};
+use conserve::util::json::Json;
+use conserve::util::rng::Rng;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------------
+// Helpers
+// ---------------------------------------------------------------------------
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "conserve-admission-{tag}-{}-{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Sped-up cost model: same structure as the A100 model, ~50x faster,
+/// so real-clock loopback tests finish in milliseconds-to-seconds.
+fn fast_cost() -> CostModel {
+    CostModel {
+        fixed_us: 50.0,
+        us_per_token: 1.0,
+        weights_load_us: 200.0,
+        us_per_ctx_token: 0.01,
+        us_per_seq: 1.0,
+        ..CostModel::a100_llama2_7b()
+    }
+}
+
+fn serve_opts(shards: usize) -> ServeOptions {
+    ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        shards,
+        cost: fast_cost(),
+        request_timeout_ms: 60_000,
+        ..ServeOptions::default()
+    }
+}
+
+fn start(opts: ServeOptions) -> (SocketAddr, std::thread::JoinHandle<ServeSummary>) {
+    let server = HttpServer::bind(EngineConfig::sim_a100_7b(), opts).expect("bind");
+    let addr = server.local_addr();
+    let handle = std::thread::spawn(move || server.run().expect("serve run"));
+    (addr, handle)
+}
+
+/// Minimal HTTP/1.1 client: one request, read to EOF (the server
+/// closes every connection), return (status, full body text).
+fn http(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, String) {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(90))).unwrap();
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(req.as_bytes()).unwrap();
+    read_response(&mut s)
+}
+
+fn read_response(s: &mut TcpStream) -> (u16, String) {
+    let mut buf = Vec::new();
+    let _ = s.read_to_end(&mut buf);
+    let text = String::from_utf8_lossy(&buf).to_string();
+    let status: u16 = text
+        .split(' ')
+        .nth(1)
+        .and_then(|c| c.parse().ok())
+        .unwrap_or_else(|| panic!("unparseable response: {text:?}"));
+    let body = match text.find("\r\n\r\n") {
+        Some(i) => text[i + 4..].to_string(),
+        None => String::new(),
+    };
+    (status, body)
+}
+
+/// Parse a (non-chunked) JSON response body.
+fn json_body(body: &str) -> Json {
+    Json::parse(body.trim()).unwrap_or_else(|e| panic!("bad json {body:?}: {e:?}"))
+}
+
+fn drain_and_join(
+    addr: SocketAddr,
+    handle: std::thread::JoinHandle<ServeSummary>,
+) -> ServeSummary {
+    let (status, _) = http(addr, "POST", "/drain", "");
+    assert_eq!(status, 202);
+    handle.join().expect("serve thread")
+}
+
+fn assert_no_loss(summary: &ServeSummary) {
+    assert_eq!(
+        summary.lost_online, 0,
+        "accepted-request loss: accepted {} completed {} cancelled {} failed {}",
+        summary.accepted_online,
+        summary.completed_online,
+        summary.cancelled_online,
+        summary.failed_online.len()
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Feasibility-estimator monotonicity (satellite: property test)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn estimator_is_monotone_under_added_load() {
+    let cfg = AdmissionConfig::default();
+    let mut rng = Rng::new(0xFEA51B1E);
+    for _ in 0..400 {
+        let n_shards = rng.range(1, 9);
+        let capacity_blocks = rng.range(64, 4096);
+        let mut v = FleetView {
+            n_shards,
+            capacity_blocks,
+            online_blocks: rng.range(0, n_shards * capacity_blocks + 1),
+            waiting_online: rng.range(0, 64),
+            offline_waiting: rng.range(0, 128),
+        };
+        let job_tokens = rng.range(0, 1 << 20);
+        let slack = rng.range(1, 1 << 22);
+        let mut est = estimate_finish_us(&v, &cfg, job_tokens);
+        for _ in 0..6 {
+            let mut w = v;
+            match rng.range(0, 3) {
+                0 => w.online_blocks += rng.range(1, 512),
+                1 => w.waiting_online += rng.range(1, 32),
+                _ => w.offline_waiting += rng.range(1, 64),
+            }
+            let est2 = estimate_finish_us(&w, &cfg, job_tokens);
+            assert!(
+                est2 >= est,
+                "estimate decreased when load grew: {est} -> {est2} ({v:?} -> {w:?})"
+            );
+            // the headline property: added load never flips a job from
+            // infeasible to feasible
+            if !deadline_feasible(&v, &cfg, job_tokens, slack) {
+                assert!(
+                    !deadline_feasible(&w, &cfg, job_tokens, slack),
+                    "added load made an infeasible deadline feasible ({v:?} -> {w:?})"
+                );
+            }
+            v = w;
+            est = est2;
+        }
+    }
+}
+
+#[test]
+fn estimator_also_monotone_in_job_size() {
+    let cfg = AdmissionConfig::default();
+    let v = FleetView {
+        n_shards: 2,
+        capacity_blocks: 1024,
+        online_blocks: 700,
+        waiting_online: 5,
+        offline_waiting: 10,
+    };
+    let mut last = 0;
+    for toks in [0u64, 10, 1_000, 100_000, 10_000_000] {
+        let est = estimate_finish_us(&v, &cfg, toks);
+        assert!(est >= last, "estimate not monotone in job tokens");
+        last = est;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Hostile clients (satellite: torn/partial HTTP, oversized bodies)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn hostile_clients_get_structured_errors() {
+    let (addr, handle) = start(serve_opts(1));
+
+    // torn request: half a request line, then half-close
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        s.write_all(b"POST /v1/comp").unwrap();
+        s.shutdown(std::net::Shutdown::Write).unwrap();
+        let (status, body) = read_response(&mut s);
+        assert_eq!(status, 400, "torn request: {body}");
+    }
+    // not HTTP at all
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        s.write_all(b"garbage\r\n\r\n").unwrap();
+        let (status, _) = read_response(&mut s);
+        assert_eq!(status, 400);
+    }
+    // oversized declared body
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        s.write_all(b"POST /v1/completions HTTP/1.1\r\nContent-Length: 99999999\r\n\r\n")
+            .unwrap();
+        let (status, body) = read_response(&mut s);
+        assert_eq!(status, 413, "{body}");
+        assert!(body.contains("body_too_large"), "{body}");
+    }
+    // oversized header block
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let huge = format!("GET /healthz HTTP/1.1\r\nPad: {}\r\n\r\n", "x".repeat(16384));
+        s.write_all(huge.as_bytes()).unwrap();
+        let (status, _) = read_response(&mut s);
+        assert_eq!(status, 431);
+    }
+    // bad JSON, unknown route, wrong method
+    let (status, body) = http(addr, "POST", "/v1/completions", "{not json");
+    assert_eq!(status, 400, "{body}");
+    let (status, _) = http(addr, "GET", "/nope", "");
+    assert_eq!(status, 404);
+    let (status, _) = http(addr, "GET", "/v1/completions", "");
+    assert_eq!(status, 405);
+    // valid JSON, invalid shape
+    let (status, body) = http(addr, "POST", "/v1/completions", r#"{"prompt": []}"#);
+    assert_eq!(status, 400, "{body}");
+
+    let summary = drain_and_join(addr, handle);
+    assert_no_loss(&summary);
+    assert_eq!(summary.accepted_online, 0);
+    assert!(summary.requests_served >= 8);
+}
+
+// ---------------------------------------------------------------------------
+// Live traffic, streaming, disconnect, drain (the tentpole invariants)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn completions_round_trip_and_drain_cleanly() {
+    let (addr, handle) = start(serve_opts(2));
+
+    let (status, body) = http(addr, "GET", "/healthz", "");
+    assert_eq!(status, 200);
+    assert!(body.contains("\"ok\""), "{body}");
+
+    for _ in 0..3 {
+        let (status, body) = http(
+            addr,
+            "POST",
+            "/v1/completions",
+            r#"{"prompt_len": 8, "max_tokens": 4}"#,
+        );
+        assert_eq!(status, 200, "{body}");
+        let j = json_body(&body);
+        assert_eq!(j.req("generated").as_usize(), Some(4), "{body}");
+        assert_eq!(j.req("tokens").as_arr().map(<[Json]>::len), Some(4));
+    }
+
+    // streaming: chunked NDJSON with per-token lines and a final done
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        let body = r#"{"prompt_len": 8, "max_tokens": 6, "stream": true}"#;
+        let req = format!(
+            "POST /v1/completions HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        s.write_all(req.as_bytes()).unwrap();
+        let (status, raw) = read_response(&mut s);
+        assert_eq!(status, 200);
+        assert_eq!(raw.matches("\"token\"").count(), 6, "{raw}");
+        assert!(raw.contains("\"done\""), "{raw}");
+    }
+
+    let summary = drain_and_join(addr, handle);
+    assert_no_loss(&summary);
+    assert_eq!(summary.accepted_online, 4);
+    assert_eq!(summary.completed_online, 4);
+    assert_eq!(summary.admission.admitted_online, 4);
+}
+
+#[test]
+fn disconnect_mid_stream_cancels_and_loses_nothing() {
+    let (addr, handle) = start(serve_opts(1));
+
+    // a long streaming request we will abandon mid-flight
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let body = r#"{"prompt_len": 8, "max_tokens": 8000, "stream": true}"#;
+        let req = format!(
+            "POST /v1/completions HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        s.write_all(req.as_bytes()).unwrap();
+        // read a little to prove the stream is live, then vanish
+        let mut first = [0u8; 64];
+        let _ = s.read(&mut first).unwrap();
+        drop(s);
+    }
+    // give the handler time to hit the broken pipe and the engine a
+    // cancel tick to clamp the request
+    std::thread::sleep(Duration::from_millis(500));
+
+    let t0 = Instant::now();
+    let summary = drain_and_join(addr, handle);
+    assert_no_loss(&summary);
+    assert_eq!(summary.accepted_online, 1);
+    // a cancel caught while queued settles as cancelled; one caught
+    // while running clamps max_new_tokens and settles as completed —
+    // both are accounted, neither is lost
+    assert_eq!(
+        summary.completed_online + summary.cancelled_online,
+        1,
+        "abandoned request must settle as completed (clamped) or cancelled"
+    );
+    assert!(
+        t0.elapsed() < Duration::from_secs(30),
+        "drain stalled behind an abandoned request"
+    );
+}
+
+#[test]
+fn overload_sheds_with_retry_hints_and_drain_sheds_everything() {
+    // tiny token bucket: 2 requests burst, 1/s sustained; a slightly
+    // slower cost model keeps the held stream (below) alive across the
+    // drain handshake
+    let mut opts = serve_opts(1);
+    opts.cost = CostModel {
+        fixed_us: 150.0,
+        ..fast_cost()
+    };
+    opts.admission = AdmissionConfig {
+        online_rate: 1.0,
+        online_burst: 2.0,
+        ..AdmissionConfig::default()
+    };
+    let (addr, handle) = start(opts);
+
+    let mut ok = 0u32;
+    let mut shed = 0u32;
+    for _ in 0..8 {
+        let (status, body) = http(
+            addr,
+            "POST",
+            "/v1/completions",
+            r#"{"prompt_len": 4, "max_tokens": 2}"#,
+        );
+        match status {
+            200 => ok += 1,
+            429 => {
+                shed += 1;
+                let j = json_body(&body);
+                let hint = j.req("error").req("retry_after_ms").as_f64().unwrap();
+                assert!(hint >= 1.0, "shed without a positive retry hint: {body}");
+            }
+            other => panic!("unexpected status {other}: {body}"),
+        }
+    }
+    assert!(ok >= 2, "burst capacity should admit at least 2");
+    assert!(shed >= 1, "sustained overload should shed");
+
+    // draining: hold a connection open so the accept loop stays alive
+    // long enough to observe the draining shed
+    let mut held = TcpStream::connect(addr).unwrap();
+    held.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let body = r#"{"prompt_len": 4, "max_tokens": 8000, "stream": true}"#;
+    let req = format!(
+        "POST /v1/completions HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    held.write_all(req.as_bytes()).unwrap();
+    let mut first = [0u8; 32];
+    let _ = held.read(&mut first).unwrap();
+
+    let (status, _) = http(addr, "POST", "/drain", "");
+    assert_eq!(status, 202);
+    let (status, body) = http(
+        addr,
+        "POST",
+        "/v1/completions",
+        r#"{"prompt_len": 4, "max_tokens": 2}"#,
+    );
+    assert_eq!(status, 503, "draining server must shed: {body}");
+    assert!(body.contains("draining"), "{body}");
+
+    // the held stream still finishes: accepted work flushes on drain
+    let (_, raw) = read_response(&mut held);
+    assert!(raw.contains("\"done\""), "accepted stream cut off by drain: {raw}");
+
+    let summary = handle.join().expect("serve thread");
+    assert_no_loss(&summary);
+    assert!(summary.admission.shed_online >= u64::from(shed + 1));
+}
+
+// ---------------------------------------------------------------------------
+// Batches: verdicts over HTTP, drain checkpointing, restart resume
+// ---------------------------------------------------------------------------
+
+#[test]
+fn batch_jobs_complete_rejects_are_retired_and_drain_resumes() {
+    let dir = tmp_dir("resume");
+    let mut opts = serve_opts(2);
+    opts.state_dir = Some(dir.clone());
+    opts.ckpt_every = 20;
+    let (addr, handle) = start(opts);
+
+    // a small feasible job: completes while we watch
+    let (status, body) = http(
+        addr,
+        "POST",
+        "/v1/batches",
+        r#"{"n_requests": 2, "prompt_len": 8, "max_tokens": 4, "tenant": 7, "deadline_ms": 600000}"#,
+    );
+    assert_eq!(status, 202, "{body}");
+    let j = json_body(&body);
+    assert_eq!(j.req("status").as_str(), Some("accepted"), "{body}");
+    let quick_id = j.req("id").as_usize().unwrap();
+
+    let t0 = Instant::now();
+    loop {
+        let (status, body) = http(addr, "GET", &format!("/v1/batches/{quick_id}"), "");
+        // completed jobs are garbage-collected from the board: both
+        // "done": true and a 404-after-done are success
+        if status == 404 || (status == 200 && json_body(&body).req("done").as_bool() == Some(true))
+        {
+            break;
+        }
+        assert_eq!(status, 200, "{body}");
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "job never completed: {body}"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // an impossible deadline on a big job: rejected with a retry hint,
+    // board entry retired
+    let (status, body) = http(
+        addr,
+        "POST",
+        "/v1/batches",
+        r#"{"n_requests": 64, "prompt_len": 512, "max_tokens": 4096, "deadline_ms": 1}"#,
+    );
+    assert!(status == 429 || status == 202, "{status}: {body}");
+    if status == 429 {
+        let j = json_body(&body);
+        let rejected_id = j.req("id").as_usize().unwrap();
+        let (status, _) = http(addr, "GET", &format!("/v1/batches/{rejected_id}"), "");
+        assert_eq!(status, 404, "rejected job's board entry must be retired");
+    }
+
+    // a big best-effort job that cannot finish before we drain: 8000
+    // tokens/request needs ~450ms of paced decode under fast_cost, so
+    // a 300ms head start leaves it mid-flight with progress to persist
+    let (status, body) = http(
+        addr,
+        "POST",
+        "/v1/batches",
+        r#"{"n_requests": 4, "prompt_len": 64, "max_tokens": 8000}"#,
+    );
+    assert_eq!(status, 202, "{body}");
+    let slow_id = json_body(&body).req("id").as_usize().unwrap();
+    std::thread::sleep(Duration::from_millis(300));
+
+    let summary = drain_and_join(addr, handle);
+    assert_no_loss(&summary);
+    assert!(summary.admission.jobs_accepted >= 2);
+    assert!(
+        summary.drain_checkpoints > 0,
+        "drain should checkpoint the unfinished job: {summary:?}"
+    );
+
+    // restart on the same state dir: the unfinished job is resumed
+    let mut opts = serve_opts(2);
+    opts.state_dir = Some(dir.clone());
+    let (addr, handle) = start(opts);
+    let (status, body) = http(addr, "GET", &format!("/v1/batches/{slow_id}"), "");
+    assert_eq!(status, 200, "resumed job missing from the board: {body}");
+    let summary = drain_and_join(addr, handle);
+    assert!(
+        summary.resumed_requests > 0,
+        "restart should re-dispatch unfinished work: {summary:?}"
+    );
+    assert_no_loss(&summary);
+    std::fs::remove_dir_all(&dir).ok();
+}

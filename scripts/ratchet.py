@@ -68,6 +68,24 @@ def main():
         print(f"ratchet: no baseline at {args.baseline}; nothing to check")
         return 0
 
+    # surface bench outputs the baseline doesn't know about: a new
+    # BENCH_*.json with no metric entry silently escapes the ratchet
+    covered = {spec["file"] for spec in baseline.values()}
+    try:
+        produced = sorted(
+            f
+            for f in os.listdir(args.dir)
+            if re.fullmatch(r"BENCH_\w+\.json", f)
+        )
+    except FileNotFoundError:
+        produced = []
+    for f in produced:
+        if f not in covered:
+            print(
+                f"ratchet: WARNING: {f} present in {args.dir} but no baseline "
+                f"metric references it -- add an entry to {args.baseline}"
+            )
+
     warnings = 0
     missing = 0
     for name, spec in sorted(baseline.items()):
