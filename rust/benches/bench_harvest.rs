@@ -1,0 +1,196 @@
+//! `bench_harvest` — closed-loop harvest controller frontier bench.
+//!
+//! Sweeps static offline token budgets against the adaptive controller
+//! (`conserve::scheduler::harvest`) on a shared flash-crowd trace:
+//! steady online load with one 3x burst mid-run and a deep offline pool
+//! submitted at t=0. Layerwise preemption is off, so the offline budget
+//! is the lever that bounds how long an online arrival waits behind a
+//! running offline batch — the regime the controller exists for.
+//!
+//! Each point reports two axes:
+//!
+//! * **online SLO attainment** — `1 - ttft_violation_rate` at the
+//!   paper's 1.5s online TTFT SLO;
+//! * **offline harvest** — offline processed throughput (tok/s).
+//!
+//! Acceptance (asserted here):
+//!
+//! * the controller decided at least once, in both directions
+//!   (tighten under the burst, open in the troughs);
+//! * **frontier** — no static point strictly dominates the controller:
+//!   for every static budget `s`, NOT
+//!   (`s.attain > ctl.attain + 0.01` AND
+//!   `s.offline_tput > ctl.offline_tput * 1.05`). A static point may
+//!   beat the controller on one axis (tight wins attainment, open wins
+//!   harvest) but never on both — that trade-off is the controller's
+//!   whole job.
+//!
+//! Results go to `BENCH_harvest.json` (schema: rust/PERF.md §9).
+//! Scale with `HARVEST_BENCH_SECS` (trace seconds, default 150).
+
+use conserve::config::EngineConfig;
+use conserve::report::{Report, SimExperiment};
+use conserve::util::json::{arr, num, obj, Json};
+use conserve::workload::{flash_crowd_trace, Lengths};
+
+const SEED: u64 = 0x5B1CE;
+const BASE_RATE: f64 = 2.0;
+const BURST_MULT: f64 = 3.0;
+/// Attainment slack: a static point must beat the controller by more
+/// than one percentage point to count as better on the online axis.
+const EPS_ATTAIN: f64 = 0.01;
+/// Harvest slack: and by more than 5% on the offline axis.
+const EPS_TPUT: f64 = 0.05;
+
+/// Base config for every point: simulated A100-7B, layerwise off.
+fn base_cfg() -> EngineConfig {
+    let mut cfg = EngineConfig::sim_a100_7b();
+    cfg.sched.layerwise_preempt = false;
+    cfg
+}
+
+/// The shared spike workload, scaled to `secs` (burst in the middle,
+/// offline pool sized so work outlasts the run).
+fn experiment(cfg: EngineConfig, secs: f64) -> SimExperiment {
+    let burst_start = 0.5 * secs;
+    let burst_len = (0.15 * secs).max(5.0);
+    SimExperiment {
+        cfg,
+        online_arrivals: flash_crowd_trace(
+            SEED,
+            secs,
+            BASE_RATE,
+            burst_start,
+            burst_len,
+            BURST_MULT,
+            1.0,
+        ),
+        online_lengths: Lengths::online_paper(),
+        offline_pool: (secs * 4.0 / 3.0).ceil() as usize,
+        offline_lengths: Lengths::offline_paper(),
+        duration_s: secs,
+    }
+}
+
+struct Point {
+    label: String,
+    attain: f64,
+    offline_tput: f64,
+    report: Report,
+}
+
+impl Point {
+    fn from_report(label: String, report: Report) -> Self {
+        Self {
+            label,
+            attain: 1.0 - report.ttft_violations,
+            offline_tput: report.offline_processed_tput,
+            report,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("label", Json::Str(self.label.clone())),
+            ("slo_attainment", num(self.attain)),
+            ("offline_processed_tput", num(self.offline_tput)),
+            ("ttft_violation_rate", num(self.report.ttft_violations)),
+            ("online_finished", num(self.report.online_finished as f64)),
+            ("offline_finished", num(self.report.offline_finished as f64)),
+            ("harvest_decisions", num(self.report.harvest_decisions as f64)),
+            ("harvest_tightens", num(self.report.harvest_tightens as f64)),
+            ("harvest_opens", num(self.report.harvest_opens as f64)),
+        ])
+    }
+}
+
+fn run_static(budget: usize, secs: f64) -> Point {
+    let mut cfg = base_cfg();
+    cfg.sched.max_batch_tokens = budget;
+    let report = experiment(cfg, secs).run();
+    Point::from_report(format!("static_{budget}"), report)
+}
+
+fn run_controller(secs: f64) -> Point {
+    let mut cfg = base_cfg();
+    cfg.sched.harvest = true;
+    let report = experiment(cfg, secs).run();
+    Point::from_report("controller".to_string(), report)
+}
+
+fn main() {
+    let secs: f64 = std::env::var("HARVEST_BENCH_SECS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(150.0);
+    let base = base_cfg();
+    let budgets = [base.sched.min_chunk, 1024, base.sched.max_batch_tokens];
+    println!(
+        "=== bench_harvest ({secs:.0}s flash-crowd trace, {BASE_RATE} req/s x{BURST_MULT} \
+         burst, static budgets {budgets:?} vs controller) ==="
+    );
+
+    let statics: Vec<Point> = budgets.iter().map(|&b| run_static(b, secs)).collect();
+    let ctl = run_controller(secs);
+    for p in statics.iter().chain(std::iter::once(&ctl)) {
+        println!(
+            "{:>14}: attainment {:.4}, offline {:.0} tok/s, {} decisions \
+             ({} tighten / {} open)",
+            p.label,
+            p.attain,
+            p.offline_tput,
+            p.report.harvest_decisions,
+            p.report.harvest_tightens,
+            p.report.harvest_opens
+        );
+    }
+
+    // ---- acceptance ----
+    assert!(ctl.report.harvest_decisions > 0, "controller never decided");
+    assert!(
+        ctl.report.harvest_opens > 0,
+        "calm stretches of the trace must open the budget"
+    );
+    let mut frontier_ok = true;
+    for s in &statics {
+        let dominates = s.attain > ctl.attain + EPS_ATTAIN
+            && s.offline_tput > ctl.offline_tput * (1.0 + EPS_TPUT);
+        if dominates {
+            frontier_ok = false;
+            println!(
+                "FRONTIER VIOLATION: {} dominates the controller \
+                 (attain {:.4} > {:.4}+{EPS_ATTAIN}, offline {:.0} > {:.0}*{:.2})",
+                s.label,
+                s.attain,
+                ctl.attain,
+                s.offline_tput,
+                ctl.offline_tput,
+                1.0 + EPS_TPUT
+            );
+        }
+    }
+
+    // ---- emit BENCH_harvest.json (schema: rust/PERF.md §9) ----
+    let json = obj(vec![
+        ("trace_secs", num(secs)),
+        ("base_rate", num(BASE_RATE)),
+        ("burst_mult", num(BURST_MULT)),
+        ("eps_attain", num(EPS_ATTAIN)),
+        ("eps_tput", num(EPS_TPUT)),
+        ("statics", arr(statics.iter().map(Point::to_json))),
+        ("controller", ctl.to_json()),
+        ("controller_attainment", num(ctl.attain)),
+        ("controller_offline_tput", num(ctl.offline_tput)),
+        ("frontier_ok", num(f64::from(u8::from(frontier_ok)))),
+    ]);
+    let out_path =
+        std::env::var("HARVEST_BENCH_OUT").unwrap_or_else(|_| "BENCH_harvest.json".into());
+    std::fs::write(&out_path, json.to_string()).expect("write BENCH_harvest.json");
+    println!("\nwrote {out_path}");
+    let _ = Json::parse(&json.to_string()).expect("self-emitted json parses");
+    assert!(
+        frontier_ok,
+        "a static budget strictly dominates the controller (see above)"
+    );
+    println!("bench_harvest OK");
+}

@@ -47,6 +47,23 @@ pub struct SchedConfig {
     /// FIFO) instead of plain FIFO. Off by default — standalone offline
     /// requests carry no job identity and see pure FIFO either way.
     pub fair_share: bool,
+    // ---- closed-loop harvest controller (scheduler::harvest) ----
+    /// Enable the per-shard feedback controller that retunes the
+    /// offline token budget / chunk size from live TTFT/TPOT
+    /// percentiles (AIMD with hysteresis). Off by default: the static
+    /// `max_batch_tokens` budget applies unchanged.
+    pub harvest: bool,
+    /// Controller TTFT target in µs (0 = derive from `slo.ttft_ms`).
+    /// The `--harvest on:SLO_US` CLI form sets this.
+    pub harvest_slo_us: u64,
+    /// Lower clamp of the controller's budget/chunk actuation (tokens).
+    /// Also the safe initial budget a fresh (or recovered) shard's
+    /// controller starts from.
+    pub min_chunk: usize,
+    /// Offline prefill chunk override (tokens; 0 = use `chunk_size`).
+    /// Runtime-actuated by the harvest controller; online prefill
+    /// chunking always uses `chunk_size`.
+    pub offline_chunk: usize,
 }
 
 /// KV memory pools, in blocks of `block_tokens` token-slots.
@@ -93,6 +110,10 @@ impl EngineConfig {
                 ckpt_free_watermark: 0.5,
                 safepoint_layers: 8,
                 fair_share: false,
+                harvest: false,
+                harvest_slo_us: 0,
+                min_chunk: 64,
+                offline_chunk: 0,
             },
             mem: MemConfig {
                 // 40 GB - 13.5 weights - ~2.5 activations => ~24 GB KV;
@@ -127,6 +148,10 @@ impl EngineConfig {
                 ckpt_free_watermark: 0.5,
                 safepoint_layers: 1, // 4-layer model: safepoint every layer
                 fair_share: false,
+                harvest: false,
+                harvest_slo_us: 0,
+                min_chunk: 16,
+                offline_chunk: 0,
             },
             mem: MemConfig {
                 // Tight pool so preemption/checkpointing paths actually
@@ -159,6 +184,10 @@ impl EngineConfig {
             "ckpt_free_watermark" => self.sched.ckpt_free_watermark = parse(v)?,
             "safepoint_layers" => self.sched.safepoint_layers = parse(v)?,
             "fair_share" => self.sched.fair_share = parse_bool(v)?,
+            "harvest" => self.sched.harvest = parse_bool(v)?,
+            "harvest_slo_us" => self.sched.harvest_slo_us = parse(v)?,
+            "min_chunk" => self.sched.min_chunk = parse(v)?,
+            "offline_chunk" => self.sched.offline_chunk = parse(v)?,
             "gpu_blocks" => self.mem.gpu_blocks = parse(v)?,
             "host_blocks" => self.mem.host_blocks = parse(v)?,
             "block_tokens" => self.mem.block_tokens = parse(v)?,

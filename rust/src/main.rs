@@ -4,7 +4,8 @@
 //! conserve simulate [--policy conserve|vllm++|online-only] [--rate R]
 //!                   [--cv CV] [--duration S] [--offline-pool N]
 //!                   [--shards N] [--placement rr|least-kv|affinity[:headroom]]
-//!                   [--steal on|off] [--set key=value ...]
+//!                   [--steal on|off] [--harvest on|off[:SLO_US]]
+//!                   [--set key=value ...]
 //!     Run a co-serving experiment on the simulated A100/Llama-2-7B
 //!     testbed and print the report. With --shards N > 1 the trace is
 //!     routed across N independent worker shards (each its own
@@ -14,7 +15,8 @@
 //!
 //! conserve serve    [--addr HOST:PORT] [--shards N] [--duration S]
 //!                   [--state-dir DIR] [--ckpt-every K]
-//!                   [--admission on|off] [--set key=value ...]
+//!                   [--admission on|off] [--harvest on|off[:SLO_US]]
+//!                   [--set key=value ...]
 //!     Run the live HTTP front door over a sharded simulated fleet:
 //!     OpenAI-style `POST /v1/completions` (chunked token streaming
 //!     with `"stream": true`), `POST /v1/batches` for offline jobs
@@ -43,7 +45,7 @@
 //!                   [--sched fifo|urgency] [--rate R] [--duration S]
 //!                   [--state-dir DIR] [--resume] [--ckpt-every K]
 //!                   [--restamp-every S] [--faults SPEC]
-//!                   [--set key=value ...]
+//!                   [--harvest on|off[:SLO_US]] [--set key=value ...]
 //!     Run a multi-tenant batch-job experiment (deadline-aware job
 //!     manager over the sharded fleet) and print per-job deadline
 //!     attainment. --sched urgency enables EDF placement + fair-share
@@ -61,6 +63,13 @@
 //!     with --state-dir — its offline work is recovered from the
 //!     durable store onto the survivors under degraded offline
 //!     budgets. See rust/ARCHITECTURE.md §8.
+//!
+//! `--harvest on` (simulate / serve / jobs) enables the per-shard
+//! closed-loop harvest controller (rust/ARCHITECTURE.md §10): the
+//! offline token budget and prefill chunk retune each iteration from
+//! live online TTFT/TPOT percentiles instead of the static
+//! `max_batch_tokens`. `--harvest on:SLO_US` overrides the controller's
+//! TTFT target in microseconds (default: the `ttft_ms` SLO).
 //! ```
 
 use anyhow::{bail, Context, Result};
@@ -158,6 +167,26 @@ impl Args {
     }
 }
 
+/// Apply `--harvest on|off[:SLO_US]`: toggles the closed-loop harvest
+/// controller, with an optional TTFT-target override in µs
+/// (`--harvest on:250000`).
+fn apply_harvest_flag(args: &Args, cfg: &mut EngineConfig) -> Result<()> {
+    let Some(v) = args.get("harvest") else {
+        return Ok(());
+    };
+    let (head, slo) = match v.split_once(':') {
+        Some((h, s)) => (h, Some(s)),
+        None => (v, None),
+    };
+    cfg.sched.harvest = parse_switch("harvest", head)?;
+    if let Some(s) = slo {
+        cfg.sched.harvest_slo_us = s
+            .parse()
+            .with_context(|| format!("--harvest {v}: bad SLO_US `{s}`"))?;
+    }
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first() else {
@@ -185,6 +214,7 @@ fn jobs(args: &Args) -> Result<()> {
 
     let mut cfg = EngineConfig::sim_a100_7b();
     args.apply_sets(&mut cfg)?;
+    apply_harvest_flag(args, &mut cfg)?;
     let shards = args.get_usize("shards", 4)?;
     let duration = args.get_f64("duration", 240.0)?;
     let rate = args.get_f64("rate", 2.0)?;
@@ -398,6 +428,7 @@ fn simulate(args: &Args) -> Result<()> {
         cfg.set("policy", p)?;
     }
     args.apply_sets(&mut cfg)?;
+    apply_harvest_flag(args, &mut cfg)?;
     let rate = args.get_f64("rate", 2.0)?;
     let cv = args.get_f64("cv", 1.0)?;
     let duration = args.get_f64("duration", 120.0)?;
@@ -493,6 +524,7 @@ fn serve(args: &Args) -> Result<()> {
 
     let mut cfg = EngineConfig::sim_a100_7b();
     args.apply_sets(&mut cfg)?;
+    apply_harvest_flag(args, &mut cfg)?;
     let mut opts = ServeOptions {
         addr: args.get("addr").unwrap_or("127.0.0.1:8077").to_string(),
         shards: args.get_usize("shards", 2)?,
@@ -651,6 +683,12 @@ fn print_report(r: &Report) {
         println!(
             "  flush recs/restamps {:>6} / {}",
             r.ckpt_flush_records, r.urgency_restamps
+        );
+    }
+    if r.harvest_decisions > 0 {
+        println!(
+            "  harvest decisions   {:>6} ({} tighten / {} open)",
+            r.harvest_decisions, r.harvest_tightens, r.harvest_opens
         );
     }
     println!("  TTFT SLO violations {:>9.1} %", r.ttft_violations * 100.0);

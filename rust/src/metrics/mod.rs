@@ -225,6 +225,12 @@ pub struct Recorder {
     pub jobs_admitted: u64,
     pub jobs_downtiered: u64,
     pub jobs_rejected: u64,
+    /// Closed-loop harvest controller decisions
+    /// ([`crate::scheduler::harvest`]): total audited decisions and the
+    /// tighten/open breakdown (holds = decisions - tightens - opens).
+    pub harvest_decisions: u64,
+    pub harvest_tightens: u64,
+    pub harvest_opens: u64,
     /// Per-tenant completion counters for job-tagged requests (short
     /// linear list — a handful of tenants per shard).
     pub tenants: Vec<TenantCounters>,
@@ -272,6 +278,9 @@ impl Recorder {
             jobs_admitted: 0,
             jobs_downtiered: 0,
             jobs_rejected: 0,
+            harvest_decisions: 0,
+            harvest_tightens: 0,
+            harvest_opens: 0,
             tenants: Vec::new(),
             capture_events: true,
             ring: None,
@@ -461,6 +470,9 @@ impl Recorder {
         self.jobs_admitted += other.jobs_admitted;
         self.jobs_downtiered += other.jobs_downtiered;
         self.jobs_rejected += other.jobs_rejected;
+        self.harvest_decisions += other.harvest_decisions;
+        self.harvest_tightens += other.harvest_tightens;
+        self.harvest_opens += other.harvest_opens;
         for t in &other.tenants {
             match self.tenants.iter_mut().find(|c| c.tenant == t.tenant) {
                 Some(c) => {

@@ -130,6 +130,11 @@ pub struct Report {
     pub jobs_admitted: u64,
     pub jobs_downtiered: u64,
     pub jobs_rejected: u64,
+    /// Closed-loop harvest controller activity (zero with `--harvest`
+    /// off): audited decisions and the tighten/open breakdown.
+    pub harvest_decisions: u64,
+    pub harvest_tightens: u64,
+    pub harvest_opens: u64,
     /// Per-tenant completion counters for job-tagged requests.
     pub per_tenant: Vec<TenantCounters>,
     pub ttft_violations: f64,
@@ -179,6 +184,9 @@ impl Report {
             jobs_admitted: rec.jobs_admitted,
             jobs_downtiered: rec.jobs_downtiered,
             jobs_rejected: rec.jobs_rejected,
+            harvest_decisions: rec.harvest_decisions,
+            harvest_tightens: rec.harvest_tightens,
+            harvest_opens: rec.harvest_opens,
             per_tenant: rec.tenants.clone(),
             ttft_violations: rec.ttft_violation_rate(Class::Online, 1500.0),
             online_timeseries: rec.timeseries(Some(Class::Online), 15 * US_PER_SEC, dur),
@@ -235,6 +243,9 @@ impl Report {
             ("jobs_admitted", num(self.jobs_admitted as f64)),
             ("jobs_downtiered", num(self.jobs_downtiered as f64)),
             ("jobs_rejected", num(self.jobs_rejected as f64)),
+            ("harvest_decisions", num(self.harvest_decisions as f64)),
+            ("harvest_tightens", num(self.harvest_tightens as f64)),
+            ("harvest_opens", num(self.harvest_opens as f64)),
             (
                 "per_tenant",
                 arr(self.per_tenant.iter().map(TenantCounters::to_json)),

@@ -1,0 +1,592 @@
+//! Closed-loop harvest controller: adaptive offline token budgets from
+//! live latency feedback.
+//!
+//! The static `max_batch_tokens` budget fixes one operating point at
+//! startup; under bursty traces any single point either starves offline
+//! throughput in troughs or blows the online TTFT/TPOT tail under
+//! spikes. This per-shard controller closes the loop the paper's
+//! harvesting story implies: it observes windowed online TTFT/TPOT
+//! percentiles (O(1) per sample via [`LogHistogram`]) and retunes the
+//! offline token budget and prefill chunk each window with an
+//! AIMD-style rule —
+//!
+//! * **Tighten** (multiplicative): the observed p99 crossed the
+//!   headroom fraction of the SLO — halve the budget.
+//! * **Open** (additive): the window was calm for
+//!   [`HarvestConfig::calm_windows`] consecutive windows (hysteresis
+//!   against single-window noise), or saw no online pressure at all —
+//!   grow the budget by one step.
+//! * **Hold**: calm but still inside the hysteresis streak.
+//!
+//! A **spike fast-path** runs every engine iteration, ahead of window
+//! boundaries: when the online waiting queue reaches
+//! [`HarvestConfig::spike_depth`], the budget tightens immediately —
+//! one iteration of reaction, not one window — so a flash crowd never
+//! waits out a calm window while a mega-batch forms.
+//!
+//! Budget and chunk are clamped to `[min_chunk, max_batch_tokens]` /
+//! `[min_chunk, chunk_size]`; a fresh controller starts at the *tight*
+//! end (safe-start — also what a crash-recovered shard resumes with).
+//!
+//! ## Audit trail
+//!
+//! Every decision — including Hold, so hysteresis state is
+//! reconstructible — appends an [`AuditRecord`]: the trigger (window
+//! boundary or spike), the observed percentiles, the old → new budget
+//! and chunk, and the rule fired. The decision core
+//! ([`decide`]) is a pure function of (config, state, trigger,
+//! observation), so [`replay`] can re-run a recorded trail
+//! decision-for-decision and reproduce it byte-identically
+//! ([`AuditRecord::line`] is the canonical serialization) — the
+//! audited-scheduler property tests in `tests/harvest_props.rs` hold
+//! the controller to exactly that.
+
+use crate::config::SchedConfig;
+use crate::metrics::LogHistogram;
+use crate::TimeUs;
+
+/// Controller tuning, derived from [`SchedConfig`] at engine
+/// construction ([`HarvestConfig::from_sched`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HarvestConfig {
+    /// p99 TTFT target (µs) the controller holds online traffic under.
+    pub slo_ttft_us: u64,
+    /// p99 TPOT target (µs).
+    pub slo_tpot_us: u64,
+    /// Budget clamp: `[min_budget, max_budget]` tokens per iteration.
+    pub min_budget: usize,
+    pub max_budget: usize,
+    /// Offline chunk clamp: `[min_chunk, max_chunk]` tokens.
+    pub min_chunk: usize,
+    pub max_chunk: usize,
+    /// Observation window width (µs of engine time).
+    pub window_us: TimeUs,
+    /// Tighten when the observed p99 reaches this percentage of the
+    /// SLO (headroom — react before the SLO is breached, not after).
+    pub headroom_pct: u64,
+    /// Multiplicative tighten divisor (budget /= this).
+    pub tighten_div: usize,
+    /// Additive open step (tokens).
+    pub open_step: usize,
+    /// Consecutive calm windows required before opening (hysteresis).
+    pub calm_windows: u32,
+    /// Online waiting-queue depth that trips the spike fast-path.
+    pub spike_depth: usize,
+}
+
+impl HarvestConfig {
+    /// Derive the controller tuning from a scheduler config: SLO
+    /// targets from `slo` (TTFT overridable via `harvest_slo_us`),
+    /// clamps from `[min_chunk, max_batch_tokens]` / `chunk_size`.
+    pub fn from_sched(s: &SchedConfig) -> Self {
+        let min = s.min_chunk.max(1);
+        let max_budget = s.max_batch_tokens.max(min);
+        HarvestConfig {
+            slo_ttft_us: if s.harvest_slo_us > 0 {
+                s.harvest_slo_us
+            } else {
+                (s.slo.ttft_ms * 1000.0) as u64
+            },
+            slo_tpot_us: (s.slo.tpot_ms * 1000.0) as u64,
+            min_budget: min,
+            max_budget,
+            min_chunk: min,
+            max_chunk: s.chunk_size.max(min),
+            window_us: 1_000_000,
+            headroom_pct: 80,
+            tighten_div: 2,
+            open_step: (max_budget / 16).max(min),
+            calm_windows: 2,
+            spike_depth: 4,
+        }
+    }
+}
+
+/// What fired a decision: the periodic window boundary, or the
+/// per-iteration spike fast-path. Part of the recorded event (an
+/// *input* to the rule), distinct from the [`Rule`] that resulted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Trigger {
+    Window,
+    Spike,
+}
+
+impl Trigger {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Trigger::Window => "window",
+            Trigger::Spike => "spike",
+        }
+    }
+}
+
+/// The rule a decision fired (the *output* of [`decide`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rule {
+    /// Multiplicative budget cut (p99 near SLO, or spike).
+    Tighten,
+    /// Additive budget growth (sustained calm / trough).
+    Open,
+    /// No change (calm, but inside the hysteresis streak).
+    Hold,
+}
+
+impl Rule {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Rule::Tighten => "tighten",
+            Rule::Open => "open",
+            Rule::Hold => "hold",
+        }
+    }
+}
+
+/// What the controller saw when it decided (window aggregates for a
+/// [`Trigger::Window`], the running partial window for a spike).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Observation {
+    pub p99_ttft_us: u64,
+    pub p99_tpot_us: u64,
+    /// Online TTFT samples inside the window (0 + empty queue = trough).
+    pub ttft_samples: u64,
+    /// Online waiting-queue depth at decision time.
+    pub online_waiting: u64,
+}
+
+/// The replayable decision state: everything [`decide`] reads besides
+/// the immutable config and the observation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CtlState {
+    /// Current offline token budget (actuates `max_batch_tokens`).
+    pub budget: usize,
+    /// Consecutive calm windows seen (hysteresis counter).
+    pub calm: u32,
+}
+
+/// One audited controller decision. `line()` is the canonical
+/// serialization the replay test byte-compares.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AuditRecord {
+    /// Engine iteration the decision fired on.
+    pub iter: u64,
+    /// Engine time (µs) of the decision.
+    pub now: TimeUs,
+    pub trigger: Trigger,
+    pub obs: Observation,
+    pub old_budget: usize,
+    pub new_budget: usize,
+    pub old_chunk: usize,
+    pub new_chunk: usize,
+    pub rule: Rule,
+}
+
+impl AuditRecord {
+    /// Canonical one-line serialization (deterministic: fixed field
+    /// order, integer-only values).
+    pub fn line(&self) -> String {
+        format!(
+            "iter={} now={} trig={} p99_ttft_us={} p99_tpot_us={} samples={} waiting={} budget={}->{} chunk={}->{} rule={}",
+            self.iter,
+            self.now,
+            self.trigger.as_str(),
+            self.obs.p99_ttft_us,
+            self.obs.p99_tpot_us,
+            self.obs.ttft_samples,
+            self.obs.online_waiting,
+            self.old_budget,
+            self.new_budget,
+            self.old_chunk,
+            self.new_chunk,
+            self.rule.as_str(),
+        )
+    }
+}
+
+/// Chunk actuation is derived from the budget (one degree of freedom,
+/// two clamped actuators): the offline prefill chunk follows the
+/// budget down into `[min_chunk, max_chunk]`.
+pub fn chunk_for(cfg: &HarvestConfig, budget: usize) -> usize {
+    budget.clamp(cfg.min_chunk, cfg.max_chunk)
+}
+
+/// The pure decision core: next state + rule from (config, state,
+/// trigger, observation). No clocks, no histograms, no I/O — replay
+/// and the monotonicity property test call exactly this.
+pub fn decide(
+    cfg: &HarvestConfig,
+    state: CtlState,
+    trigger: Trigger,
+    obs: &Observation,
+) -> (CtlState, Rule) {
+    let tighten = |b: usize| (b / cfg.tighten_div.max(2)).max(cfg.min_budget);
+    let open = |b: usize| b.saturating_add(cfg.open_step).min(cfg.max_budget);
+    match trigger {
+        Trigger::Spike => {
+            // emergency path: queue depth says a burst is forming NOW;
+            // cut ahead of the window boundary. Only meaningful while
+            // there is budget left to cut.
+            if obs.online_waiting >= cfg.spike_depth as u64 && state.budget > cfg.min_budget {
+                (
+                    CtlState {
+                        budget: tighten(state.budget),
+                        calm: 0,
+                    },
+                    Rule::Tighten,
+                )
+            } else {
+                (state, Rule::Hold)
+            }
+        }
+        Trigger::Window => {
+            let ttft_limit = cfg.slo_ttft_us.saturating_mul(cfg.headroom_pct) / 100;
+            let tpot_limit = cfg.slo_tpot_us.saturating_mul(cfg.headroom_pct) / 100;
+            let hot = (obs.ttft_samples > 0 && obs.p99_ttft_us >= ttft_limit)
+                || obs.p99_tpot_us >= tpot_limit;
+            if hot {
+                (
+                    CtlState {
+                        budget: tighten(state.budget),
+                        calm: 0,
+                    },
+                    Rule::Tighten,
+                )
+            } else if obs.ttft_samples == 0 && obs.online_waiting == 0 {
+                // trough: no online traffic at all — open without
+                // waiting out the hysteresis streak
+                (
+                    CtlState {
+                        budget: open(state.budget),
+                        calm: 0,
+                    },
+                    Rule::Open,
+                )
+            } else {
+                let calm = state.calm + 1;
+                if calm >= cfg.calm_windows {
+                    (
+                        CtlState {
+                            budget: open(state.budget),
+                            calm: 0,
+                        },
+                        Rule::Open,
+                    )
+                } else {
+                    (
+                        CtlState {
+                            budget: state.budget,
+                            calm,
+                        },
+                        Rule::Hold,
+                    )
+                }
+            }
+        }
+    }
+}
+
+/// Re-run a recorded audit trail decision-for-decision from the
+/// initial state: feed each record's (trigger, observation) into
+/// [`decide`] and emit the records that produces. A faithful recording
+/// replays byte-identically (`line()` for `line()`); any divergence
+/// means the controller read state outside its audited inputs.
+pub fn replay(cfg: &HarvestConfig, trail: &[AuditRecord]) -> Vec<AuditRecord> {
+    let mut state = CtlState {
+        budget: cfg.min_budget,
+        calm: 0,
+    };
+    let mut out = Vec::with_capacity(trail.len());
+    for r in trail {
+        let old_budget = state.budget;
+        let old_chunk = chunk_for(cfg, old_budget);
+        let (next, rule) = decide(cfg, state, r.trigger, &r.obs);
+        state = next;
+        out.push(AuditRecord {
+            iter: r.iter,
+            now: r.now,
+            trigger: r.trigger,
+            obs: r.obs,
+            old_budget,
+            new_budget: state.budget,
+            old_chunk,
+            new_chunk: chunk_for(cfg, state.budget),
+            rule,
+        });
+    }
+    out
+}
+
+/// The per-shard controller: windowed online-latency histograms plus
+/// the replayable decision state, with the audit trail of every
+/// decision taken.
+#[derive(Debug)]
+pub struct HarvestController {
+    cfg: HarvestConfig,
+    state: CtlState,
+    ttft: LogHistogram,
+    tpot: LogHistogram,
+    window_start: TimeUs,
+    audit: Vec<AuditRecord>,
+}
+
+impl HarvestController {
+    /// A fresh controller starts at the *tight* end of the clamp
+    /// (safe-start): budget opens additively only as observed calm
+    /// earns it. A crash-recovered shard constructing a fresh engine
+    /// therefore resumes harvesting from the safe initial budget, not
+    /// the dead shard's last operating point.
+    pub fn new(cfg: HarvestConfig) -> Self {
+        let state = CtlState {
+            budget: cfg.min_budget,
+            calm: 0,
+        };
+        Self {
+            cfg,
+            state,
+            ttft: LogHistogram::new(),
+            tpot: LogHistogram::new(),
+            window_start: 0,
+            audit: Vec::new(),
+        }
+    }
+
+    pub fn config(&self) -> &HarvestConfig {
+        &self.cfg
+    }
+
+    /// Current offline token budget (tokens per iteration).
+    pub fn budget(&self) -> usize {
+        self.state.budget
+    }
+
+    /// Current offline prefill chunk (derived from the budget).
+    pub fn chunk(&self) -> usize {
+        chunk_for(&self.cfg, self.state.budget)
+    }
+
+    /// Budget as a fraction of the static maximum, in permille —
+    /// the effective-capacity signal published to the shard load board
+    /// for placement and admission.
+    pub fn budget_permille(&self) -> u64 {
+        (self.state.budget as u64 * 1000 / self.cfg.max_budget.max(1) as u64).min(1000)
+    }
+
+    /// The audit trail so far (every decision, including Holds).
+    pub fn audit_log(&self) -> &[AuditRecord] {
+        &self.audit
+    }
+
+    /// Feed one online TTFT sample (µs) into the current window.
+    pub fn observe_ttft(&mut self, ttft_us: u64) {
+        self.ttft.record(ttft_us);
+    }
+
+    /// Feed one online inter-token gap (µs) into the current window.
+    pub fn observe_tpot(&mut self, gap_us: u64) {
+        self.tpot.record(gap_us);
+    }
+
+    /// One controller tick, called every engine iteration before
+    /// scheduling. Returns the rule fired if a decision was taken
+    /// (spike fast-path, or a window boundary elapsed); `None` on the
+    /// overwhelmingly common no-decision iterations. The caller
+    /// re-reads [`budget`](Self::budget) / [`chunk`](Self::chunk)
+    /// after a `Some` and actuates the scheduler config.
+    pub fn tick(&mut self, iter: u64, now: TimeUs, online_waiting: usize) -> Option<Rule> {
+        // spike fast-path: fires between window boundaries, at most
+        // once per budget level (each fire strictly shrinks the budget
+        // until the floor disarms it)
+        if online_waiting >= self.cfg.spike_depth && self.state.budget > self.cfg.min_budget {
+            let obs = Observation {
+                p99_ttft_us: self.ttft.quantile(99.0),
+                p99_tpot_us: self.tpot.quantile(99.0),
+                ttft_samples: self.ttft.count(),
+                online_waiting: online_waiting as u64,
+            };
+            return Some(self.apply(iter, now, Trigger::Spike, obs));
+        }
+        if now < self.window_start.saturating_add(self.cfg.window_us) {
+            return None;
+        }
+        let obs = Observation {
+            p99_ttft_us: self.ttft.quantile(99.0),
+            p99_tpot_us: self.tpot.quantile(99.0),
+            ttft_samples: self.ttft.count(),
+            online_waiting: online_waiting as u64,
+        };
+        let rule = self.apply(iter, now, Trigger::Window, obs);
+        self.ttft.clear();
+        self.tpot.clear();
+        self.window_start = now;
+        Some(rule)
+    }
+
+    fn apply(&mut self, iter: u64, now: TimeUs, trigger: Trigger, obs: Observation) -> Rule {
+        let old_budget = self.state.budget;
+        let old_chunk = chunk_for(&self.cfg, old_budget);
+        let (next, rule) = decide(&self.cfg, self.state, trigger, &obs);
+        self.state = next;
+        self.audit.push(AuditRecord {
+            iter,
+            now,
+            trigger,
+            obs,
+            old_budget,
+            new_budget: self.state.budget,
+            old_chunk,
+            new_chunk: chunk_for(&self.cfg, self.state.budget),
+            rule,
+        });
+        rule
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EngineConfig;
+
+    fn cfg() -> HarvestConfig {
+        let mut s = EngineConfig::sim_a100_7b();
+        s.sched.harvest = true;
+        HarvestConfig::from_sched(&s.sched)
+    }
+
+    #[test]
+    fn from_sched_derives_targets_and_clamps() {
+        let c = cfg();
+        assert_eq!(c.slo_ttft_us, 1_500_000);
+        assert_eq!(c.slo_tpot_us, 110_000);
+        assert_eq!(c.min_budget, 64);
+        assert_eq!(c.max_budget, 8192);
+        assert_eq!(c.max_chunk, 512);
+        // explicit override wins over the derived TTFT target
+        let mut s = EngineConfig::sim_a100_7b();
+        s.sched.harvest_slo_us = 250_000;
+        assert_eq!(HarvestConfig::from_sched(&s.sched).slo_ttft_us, 250_000);
+    }
+
+    #[test]
+    fn fresh_controller_starts_tight() {
+        let h = HarvestController::new(cfg());
+        assert_eq!(h.budget(), h.config().min_budget);
+        assert_eq!(h.chunk(), h.config().min_chunk);
+        assert!(h.audit_log().is_empty());
+    }
+
+    #[test]
+    fn hot_window_tightens_calm_windows_open_with_hysteresis() {
+        let c = cfg();
+        let mut h = HarvestController::new(c.clone());
+        // trough windows open the budget without traffic
+        let mut t = c.window_us;
+        let mut opens = 0;
+        while h.budget() < c.max_budget {
+            assert_eq!(h.tick(opens, t, 0), Some(Rule::Open));
+            t += c.window_us;
+            opens += 1;
+        }
+        assert_eq!(h.budget(), c.max_budget);
+        // a hot window (p99 at the SLO) halves it
+        h.observe_ttft(c.slo_ttft_us);
+        assert_eq!(h.tick(opens, t, 1), Some(Rule::Tighten));
+        assert_eq!(h.budget(), c.max_budget / 2);
+        // calm-but-loaded windows hold for calm_windows - 1, then open
+        t += c.window_us;
+        h.observe_ttft(1_000);
+        assert_eq!(h.tick(opens + 1, t, 1), Some(Rule::Hold));
+        t += c.window_us;
+        h.observe_ttft(1_000);
+        assert_eq!(h.tick(opens + 2, t, 1), Some(Rule::Open));
+        assert_eq!(h.budget(), c.max_budget / 2 + c.open_step);
+    }
+
+    #[test]
+    fn spike_fast_path_fires_between_windows_until_floor() {
+        let c = cfg();
+        let mut h = HarvestController::new(c.clone());
+        // open up first
+        let mut t = c.window_us;
+        for i in 0..40 {
+            h.tick(i, t, 0);
+            t += c.window_us;
+        }
+        assert_eq!(h.budget(), c.max_budget);
+        // mid-window spike: tightens immediately, repeatedly, to floor
+        let mid = t + 10; // far from the next boundary
+        let mut iters = 100;
+        while h.budget() > c.min_budget {
+            assert_eq!(h.tick(iters, mid, c.spike_depth), Some(Rule::Tighten));
+            iters += 1;
+        }
+        // at the floor the fast-path disarms (no decision, no record)
+        let n = h.audit_log().len();
+        assert_eq!(h.tick(iters, mid, c.spike_depth), None);
+        assert_eq!(h.audit_log().len(), n);
+    }
+
+    #[test]
+    fn no_decision_without_audit_record_and_vice_versa() {
+        let c = cfg();
+        let mut h = HarvestController::new(c.clone());
+        let mut budget_changes = 0;
+        let mut last = h.budget();
+        let mut t = 0;
+        for i in 0..10_000u64 {
+            t += 7_321; // irregular iteration cadence
+            let waiting = (i % 11) as usize; // crosses spike_depth often
+            if i % 3 == 0 {
+                h.observe_ttft(5_000 + (i * 977) % 2_000_000);
+            }
+            h.tick(i, t, waiting);
+            if h.budget() != last {
+                budget_changes += 1;
+                last = h.budget();
+            }
+            assert!(h.budget() >= c.min_budget && h.budget() <= c.max_budget);
+            assert!(h.chunk() >= c.min_chunk && h.chunk() <= c.max_chunk);
+        }
+        let logged_changes = h
+            .audit_log()
+            .iter()
+            .filter(|r| r.new_budget != r.old_budget)
+            .count();
+        assert_eq!(budget_changes, logged_changes);
+        assert!(budget_changes > 0, "the walk must exercise the loop");
+    }
+
+    #[test]
+    fn replay_reproduces_the_trail_byte_identically() {
+        let c = cfg();
+        let mut h = HarvestController::new(c.clone());
+        let mut t = 0;
+        for i in 0..5_000u64 {
+            t += 9_173;
+            if i % 2 == 0 {
+                h.observe_ttft((i * 6_151) % 3_000_000);
+            }
+            if i % 5 == 0 {
+                h.observe_tpot((i * 431) % 200_000);
+            }
+            h.tick(i, t, (i % 9) as usize);
+        }
+        assert!(!h.audit_log().is_empty());
+        let replayed = replay(&c, h.audit_log());
+        assert_eq!(replayed.len(), h.audit_log().len());
+        for (a, b) in h.audit_log().iter().zip(&replayed) {
+            assert_eq!(a.line(), b.line());
+        }
+    }
+
+    #[test]
+    fn budget_permille_tracks_the_clamp_range() {
+        let c = cfg();
+        let mut h = HarvestController::new(c.clone());
+        assert_eq!(h.budget_permille(), 1000 * c.min_budget as u64 / c.max_budget as u64);
+        let mut t = c.window_us;
+        for i in 0..40 {
+            h.tick(i, t, 0);
+            t += c.window_us;
+        }
+        assert_eq!(h.budget_permille(), 1000);
+    }
+}

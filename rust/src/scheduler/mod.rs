@@ -26,6 +26,7 @@
 //! is shared across shards.
 
 pub mod budget;
+pub mod harvest;
 pub mod preempt;
 
 use crate::backend::{IterationPlan, WorkItem};
@@ -805,9 +806,17 @@ impl UnifiedScheduler {
         };
         let cap = self.cfg.max_batch_tokens.saturating_sub(*tokens_used);
         let room = c.max_model_len.saturating_sub(r.ctx_len);
+        // class-aware chunk: the harvest controller actuates
+        // `offline_chunk` (0 = disabled) so best-effort prefills shrink
+        // under online pressure; online chunking is never touched
+        let chunk = if r.class == Class::Offline && self.cfg.offline_chunk != 0 {
+            self.cfg.offline_chunk
+        } else {
+            self.cfg.chunk_size
+        };
         let n = r
             .remaining_feed()
-            .min(self.cfg.chunk_size)
+            .min(chunk)
             .min(slack_tokens)
             .min(cap)
             .min(room);

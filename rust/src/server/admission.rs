@@ -198,6 +198,11 @@ pub struct FleetView {
     pub waiting_online: u64,
     /// Σ queued offline requests.
     pub offline_waiting: u64,
+    /// Mean live offline token budget across shards, permille of the
+    /// static `max_batch_tokens` (published by harvest controllers via
+    /// [`crate::shard::ShardLoads::publish_budget`]; 1000 when no
+    /// controller is tightening).
+    pub budget_permille: u64,
 }
 
 impl From<FleetOccupancy> for FleetView {
@@ -208,6 +213,7 @@ impl From<FleetOccupancy> for FleetView {
             online_blocks: o.online_blocks,
             waiting_online: o.waiting.saturating_sub(o.offline_waiting),
             offline_waiting: o.offline_waiting,
+            budget_permille: o.budget_permille,
         }
     }
 }
@@ -221,17 +227,29 @@ impl From<FleetOccupancy> for FleetView {
 /// slack-harvesting floor). The job waits behind the current offline
 /// backlog and behind online queueing delay.
 ///
+/// The harvest rate is further scaled by the *live published budget*
+/// (`budget_permille / 1000`, floored at 5 %): a fleet whose harvest
+/// controllers have tightened to a fraction of the static
+/// `max_batch_tokens` can only finish offline work at that fraction of
+/// the nominal rate, and admission must not accept jobs the tightened
+/// harvester can no longer finish. The floor keeps the estimate finite
+/// (mirroring the 0.95 occupancy cap) and 1000 — the no-controller
+/// default — reproduces the pre-harvest estimate exactly.
+///
 /// **Monotone by construction** in every load component: increasing
 /// `online_blocks`, `waiting_online` or `offline_waiting` never
-/// decreases the estimate (property-tested). Conservative, not exact —
+/// decreases the estimate, and *decreasing* `budget_permille` never
+/// decreases it either (property-tested). Conservative, not exact —
 /// the gate errs toward down-tiering.
 pub fn estimate_finish_us(view: &FleetView, cfg: &AdmissionConfig, job_tokens: u64) -> u64 {
     let shards = view.n_shards.max(1) as f64;
     let cap = (view.n_shards.max(1) * view.capacity_blocks.max(1)) as f64;
     let online_frac = (view.online_blocks as f64 / cap).min(0.95);
+    let budget_frac = view.budget_permille.clamp(50, 1000) as f64 / 1000.0;
     let harvest =
         shards * cfg.svc_tok_per_s.max(1.0) * cfg.feasibility_margin.clamp(0.01, 1.0)
-            * (1.0 - online_frac);
+            * (1.0 - online_frac)
+            * budget_frac;
     let backlog_tokens =
         view.offline_waiting.saturating_mul(cfg.est_tokens_per_offline) as f64;
     let queue_delay_us =
@@ -542,6 +560,7 @@ mod tests {
             online_blocks: 0,
             waiting_online: 0,
             offline_waiting: 0,
+            budget_permille: 1000,
         }
     }
 
@@ -684,6 +703,7 @@ mod tests {
             online_blocks: 10,
             waiting_online: 1_000_000,
             offline_waiting: 1_000_000,
+            budget_permille: 1000,
         };
         for now in 0..100 {
             assert!(ctl.admit_online(&view, now).admitted());

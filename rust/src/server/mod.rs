@@ -42,6 +42,7 @@ use crate::kvcache::{BlockId, CkptController, Direction, KvManager, SwapEngine, 
 use crate::metrics::Recorder;
 use crate::profiler::LatencyProfile;
 use crate::request::{Class, KvResidence, PortableRequest, RequestArena, RequestId, State, TokenId};
+use crate::scheduler::harvest::{HarvestConfig, HarvestController, Rule as HarvestRule};
 use crate::scheduler::{budget, preempt, Ctx, Policy, ScheduleOutcome, UnifiedScheduler};
 use crate::shard::steal::{MigratedRequest, StealCoordinator};
 use crate::shard::ShardLoads;
@@ -186,6 +187,13 @@ pub struct ServingEngine<B: ExecBackend> {
     restamp_every_us: TimeUs,
     restamp_svc_tok_per_s: f64,
     next_restamp_at: TimeUs,
+    /// Closed-loop harvest controller ([`crate::scheduler::harvest`]):
+    /// when `cfg.sched.harvest` is on, one tick per iteration retunes
+    /// the scheduler's live offline token budget (`max_batch_tokens`)
+    /// and offline prefill chunk (`offline_chunk`) from windowed online
+    /// TTFT/TPOT percentiles. The engine's own `cfg` clone stays
+    /// pristine — only the scheduler's working copy is actuated.
+    harvest: Option<HarvestController>,
     // ---- persistent scratch (reused every iteration) ----
     io_scratch: Vec<SwapOp>,
     ids_scratch: Vec<RequestId>,
@@ -228,8 +236,22 @@ impl<B: ExecBackend> ServingEngine<B> {
             cfg.mem.block_tokens,
         );
         let ckpt = CkptController::new(cfg.sched.ckpt_free_watermark, 64);
+        // Safe-start: a fresh engine's controller begins at the tight
+        // end of the clamp and actuates the scheduler's working config
+        // before the first iteration. Crash recovery constructs a fresh
+        // engine, so a recovered shard automatically resumes harvesting
+        // from the safe initial budget, not the dead shard's last one.
+        let harvest = cfg
+            .sched
+            .harvest
+            .then(|| HarvestController::new(HarvestConfig::from_sched(&cfg.sched)));
+        let mut sched_cfg = cfg.sched.clone();
+        if let Some(h) = &harvest {
+            sched_cfg.max_batch_tokens = h.budget();
+            sched_cfg.offline_chunk = h.chunk();
+        }
         Self {
-            sched: UnifiedScheduler::new(cfg.sched.clone()),
+            sched: UnifiedScheduler::new(sched_cfg),
             cfg,
             backend,
             clock,
@@ -261,6 +283,7 @@ impl<B: ExecBackend> ServingEngine<B> {
             restamp_every_us: 0,
             restamp_svc_tok_per_s: 0.0,
             next_restamp_at: 0,
+            harvest,
             io_scratch: Vec::new(),
             ids_scratch: Vec::new(),
             blk_scratch: Vec::new(),
@@ -301,6 +324,14 @@ impl<B: ExecBackend> ServingEngine<B> {
     /// `engine.set_job_board(client.job_board().clone())`.
     pub fn set_job_board(&mut self, board: Arc<JobBoard>) {
         self.job_board = Some(board);
+    }
+
+    /// The closed-loop harvest controller, when enabled
+    /// (`cfg.sched.harvest`). Tests and reports read the audit trail
+    /// and live budget through this; `None` when the static budget
+    /// applies.
+    pub fn harvest_controller(&self) -> Option<&HarvestController> {
+        self.harvest.as_ref()
     }
 
     /// True when this engine has no admitted work left and its arrival
@@ -482,6 +513,23 @@ impl<B: ExecBackend> ServingEngine<B> {
                 break;
             }
 
+            // ---- harvest controller tick (ARCHITECTURE.md §10) ----
+            if let Some(h) = self.harvest.as_mut() {
+                let waiting = self.sched.online_waiting();
+                if let Some(rule) = h.tick(self.rec.engine_iters, now, waiting) {
+                    // actuate the scheduler's working config this same
+                    // iteration; the audit trail already recorded it
+                    self.sched.cfg.max_batch_tokens = h.budget();
+                    self.sched.cfg.offline_chunk = h.chunk();
+                    self.rec.harvest_decisions += 1;
+                    match rule {
+                        HarvestRule::Tighten => self.rec.harvest_tightens += 1,
+                        HarvestRule::Open => self.rec.harvest_opens += 1,
+                        HarvestRule::Hold => {}
+                    }
+                }
+            }
+
             // ---- schedule (Algorithm 1) ----
             {
                 let mut ctx = Ctx {
@@ -508,6 +556,9 @@ impl<B: ExecBackend> ServingEngine<B> {
                 // decay the recent-thief signal once per publish (x7/8
                 // reaches zero, unlike h - h/8 which floors at 1)
                 self.steal_heat = self.steal_heat * 7 / 8;
+                if let Some(h) = &self.harvest {
+                    loads.publish_budget(self.table.shard(), h.budget_permille());
+                }
             }
 
             self.apply_victims(&out, now);
@@ -671,9 +722,22 @@ impl<B: ExecBackend> ServingEngine<B> {
                     r.first_token_at = Some(now);
                     let ttft = now.saturating_sub(r.arrival);
                     self.rec.record_first_token(now, class, ttft);
+                    // harvest controller observes *online* latency only:
+                    // offline latency is the thing being traded away
+                    if class == Class::Online {
+                        if let Some(h) = self.harvest.as_mut() {
+                            h.observe_ttft(ttft);
+                        }
+                    }
                 } else {
                     let last = r.last_token_at.unwrap_or(now);
-                    self.rec.record_token(now, class, now.saturating_sub(last));
+                    let gap = now.saturating_sub(last);
+                    self.rec.record_token(now, class, gap);
+                    if class == Class::Online {
+                        if let Some(h) = self.harvest.as_mut() {
+                            h.observe_tpot(gap);
+                        }
+                    }
                 }
                 r.last_token_at = Some(now);
                 let done = r.is_done();

@@ -74,7 +74,7 @@ pub struct ShardLoads {
     cells: Vec<LoadCell>,
 }
 
-#[derive(Debug, Default)]
+#[derive(Debug)]
 struct LoadCell {
     resident: AtomicU64,
     online: AtomicU64,
@@ -89,6 +89,28 @@ struct LoadCell {
     /// Bumped on every publish; lets submitters expire their optimistic
     /// in-flight charges once the engine has seen the queued arrivals.
     seq: AtomicU64,
+    /// Live offline token budget as a fraction of the static
+    /// `max_batch_tokens`, in permille. 1000 (= full static budget)
+    /// unless a harvest controller is actively tightening — published
+    /// via [`ShardLoads::publish_budget`], read by the admission
+    /// estimator as effective offline capacity.
+    budget_permille: AtomicU64,
+}
+
+impl Default for LoadCell {
+    fn default() -> Self {
+        Self {
+            resident: AtomicU64::new(0),
+            online: AtomicU64::new(0),
+            waiting: AtomicU64::new(0),
+            offline_waiting: AtomicU64::new(0),
+            steal_score: AtomicU64::new(0),
+            seq: AtomicU64::new(0),
+            // full static budget until a controller says otherwise —
+            // fleets without harvesting see unchanged estimates
+            budget_permille: AtomicU64::new(1000),
+        }
+    }
 }
 
 impl ShardLoads {
@@ -128,6 +150,17 @@ impl ShardLoads {
         c.offline_waiting.store(offline_waiting, Ordering::Relaxed);
         c.steal_score.store(steal_score, Ordering::Relaxed);
         c.seq.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Publish shard `shard`'s live offline token budget (permille of
+    /// the static `max_batch_tokens`). Harvest-enabled engines post
+    /// this alongside [`publish`](Self::publish); it has its own setter
+    /// so budget-less fleets keep the 1000 default without every
+    /// publish call site growing an argument.
+    pub fn publish_budget(&self, shard: usize, permille: u64) {
+        self.cells[shard]
+            .budget_permille
+            .store(permille.min(1000), Ordering::Relaxed);
     }
 
     /// Publish count for `shard`: how many times its engine has posted a
@@ -177,12 +210,15 @@ impl ShardLoads {
             capacity_blocks: self.capacity_blocks,
             ..Default::default()
         };
+        let mut budget_sum = 0u64;
         for c in &self.cells {
             o.resident_blocks += c.resident.load(Ordering::Relaxed);
             o.online_blocks += c.online.load(Ordering::Relaxed);
             o.waiting += c.waiting.load(Ordering::Relaxed);
             o.offline_waiting += c.offline_waiting.load(Ordering::Relaxed);
+            budget_sum += c.budget_permille.load(Ordering::Relaxed);
         }
+        o.budget_permille = budget_sum / self.cells.len().max(1) as u64;
         o
     }
 }
@@ -203,6 +239,10 @@ pub struct FleetOccupancy {
     pub waiting: u64,
     /// Σ queued offline requests across shards.
     pub offline_waiting: u64,
+    /// Mean live offline token budget across shards, permille of the
+    /// static `max_batch_tokens` (1000 = every shard at full static
+    /// budget; lower = harvest controllers are tightening).
+    pub budget_permille: u64,
 }
 
 /// Trace-mode request router: assigns each request to a shard under a

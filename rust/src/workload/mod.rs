@@ -11,4 +11,4 @@ pub mod trace;
 pub use datasets::{LengthSample, Lengths};
 pub use jobs::{job_trace, JobTraceConfig};
 pub use loadgen::LoadGen;
-pub use trace::{onoff_trace, burstgpt_like_rate, TraceEvent};
+pub use trace::{burstgpt_like_rate, flash_crowd_trace, onoff_trace, square_wave_trace, TraceEvent};

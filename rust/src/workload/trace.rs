@@ -93,6 +93,74 @@ pub fn onoff_trace(
     out
 }
 
+/// Bursty square-wave arrivals with a nonzero floor: `on_rate` req/s
+/// during ON phases, `off_rate` during OFF (alternating `phase_s`-long
+/// phases, starting ON), with seeded gamma jitter (`cv`) inside each
+/// phase. Unlike [`onoff_trace`], the OFF floor keeps online latency
+/// samples flowing through the troughs — the regime the harvest
+/// controller's hysteresis is tuned against.
+pub fn square_wave_trace(
+    seed: u64,
+    duration_s: f64,
+    phase_s: f64,
+    on_rate: f64,
+    off_rate: f64,
+    cv: f64,
+) -> Vec<TimeUs> {
+    let peak = on_rate.max(off_rate).max(1e-9);
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::new();
+    let mut t = 0.0f64;
+    loop {
+        t += rng.gamma_interarrival(peak, cv);
+        if t >= duration_s {
+            break;
+        }
+        let rate = if ((t / phase_s) as u64) % 2 == 0 {
+            on_rate
+        } else {
+            off_rate
+        };
+        if rng.f64() < rate / peak {
+            out.push((t * US_PER_SEC as f64) as TimeUs);
+        }
+    }
+    out
+}
+
+/// Flash-crowd arrivals: a steady `base_rate` with one `mult`x burst
+/// over `[burst_start_s, burst_start_s + burst_s)`, gamma-jittered
+/// (`cv`) and fully determined by `seed`. Models the paper's Fig.-1b
+/// "rate increases by 3x" spike as an isolated event a controller must
+/// react to within the burst, not after it.
+#[allow(clippy::too_many_arguments)]
+pub fn flash_crowd_trace(
+    seed: u64,
+    duration_s: f64,
+    base_rate: f64,
+    burst_start_s: f64,
+    burst_s: f64,
+    mult: f64,
+    cv: f64,
+) -> Vec<TimeUs> {
+    let peak = base_rate * mult.max(1.0);
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::new();
+    let mut t = 0.0f64;
+    loop {
+        t += rng.gamma_interarrival(peak, cv);
+        if t >= duration_s {
+            break;
+        }
+        let in_burst = t >= burst_start_s && t < burst_start_s + burst_s;
+        let rate = if in_burst { base_rate * mult } else { base_rate };
+        if rng.f64() < rate / peak {
+            out.push((t * US_PER_SEC as f64) as TimeUs);
+        }
+    }
+    out
+}
+
 /// Summarize a trace into per-window token rates (for Fig.-1 style
 /// reporting): returns (window_start_s, requests, est_tokens_per_s).
 pub fn rate_series(
@@ -163,6 +231,42 @@ mod tests {
             burst_window as f64 > 1.5 * early_max as f64,
             "burst={burst_window} early={early_max}"
         );
+    }
+
+    #[test]
+    fn square_wave_holds_both_rates_and_is_seeded() {
+        let a = square_wave_trace(21, 600.0, 150.0, 8.0, 1.0, 1.0);
+        let on: usize = a
+            .iter()
+            .filter(|&&t| ((t / US_PER_SEC) / 150) % 2 == 0)
+            .count();
+        let off = a.len() - on;
+        // two ON + two OFF phases of 150 s each
+        let on_rate = on as f64 / 300.0;
+        let off_rate = off as f64 / 300.0;
+        assert!((on_rate - 8.0).abs() < 1.2, "on_rate={on_rate}");
+        assert!((off_rate - 1.0).abs() < 0.5, "off_rate={off_rate}");
+        assert!(off > 0, "OFF floor must keep samples flowing");
+        // deterministic in the seed
+        assert_eq!(a, square_wave_trace(21, 600.0, 150.0, 8.0, 1.0, 1.0));
+        assert_ne!(a, square_wave_trace(22, 600.0, 150.0, 8.0, 1.0, 1.0));
+    }
+
+    #[test]
+    fn flash_crowd_concentrates_in_the_burst() {
+        let a = flash_crowd_trace(31, 600.0, 2.0, 300.0, 60.0, 4.0, 1.0);
+        let in_burst = a
+            .iter()
+            .filter(|&&t| (300..360).contains(&(t / US_PER_SEC)))
+            .count();
+        let burst_rate = in_burst as f64 / 60.0;
+        let base_rate = (a.len() - in_burst) as f64 / 540.0;
+        assert!(
+            burst_rate > 2.5 * base_rate,
+            "burst_rate={burst_rate} base_rate={base_rate}"
+        );
+        assert!(a.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(a, flash_crowd_trace(31, 600.0, 2.0, 300.0, 60.0, 4.0, 1.0));
     }
 
     #[test]

@@ -145,6 +145,7 @@ fn estimator_is_monotone_under_added_load() {
             online_blocks: rng.range(0, n_shards * capacity_blocks + 1),
             waiting_online: rng.range(0, 64),
             offline_waiting: rng.range(0, 128),
+            budget_permille: rng.range(0, 1001),
         };
         let job_tokens = rng.range(0, 1 << 20);
         let slack = rng.range(1, 1 << 22);
@@ -184,12 +185,67 @@ fn estimator_also_monotone_in_job_size() {
         online_blocks: 700,
         waiting_online: 5,
         offline_waiting: 10,
+        budget_permille: 1000,
     };
     let mut last = 0;
     for toks in [0u64, 10, 1_000, 100_000, 10_000_000] {
         let est = estimate_finish_us(&v, &cfg, toks);
         assert!(est >= last, "estimate not monotone in job tokens");
         last = est;
+    }
+}
+
+/// Regression (harvest satellite): the estimator reads the *live*
+/// published offline budget. Tightening the budget (lower permille)
+/// never shortens the estimate, never flips an infeasible deadline
+/// feasible, and the no-controller default of 1000 permille reproduces
+/// the pre-harvest estimate exactly.
+#[test]
+fn estimator_tracks_published_budget_tightening() {
+    let cfg = AdmissionConfig::default();
+    let mut rng = Rng::new(0xB0D6E7);
+    for _ in 0..200 {
+        let n_shards = rng.range(1, 9);
+        let capacity_blocks = rng.range(64, 4096);
+        let base = FleetView {
+            n_shards,
+            capacity_blocks,
+            online_blocks: rng.range(0, n_shards * capacity_blocks + 1),
+            waiting_online: rng.range(0, 64),
+            offline_waiting: rng.range(0, 128),
+            budget_permille: 1000,
+        };
+        let job_tokens = rng.range(1, 1 << 20);
+        let slack = rng.range(1, 1 << 22);
+        let mut prev = estimate_finish_us(&base, &cfg, job_tokens);
+        let mut prev_view = base;
+        // walk the budget down from wide open to fully tightened
+        for permille in [800u64, 500, 250, 100, 50, 0] {
+            let v = FleetView { budget_permille: permille, ..base };
+            let est = estimate_finish_us(&v, &cfg, job_tokens);
+            assert!(
+                est >= prev,
+                "tightening the budget shortened the estimate: \
+                 {prev} -> {est} ({prev_view:?} -> {v:?})"
+            );
+            if !deadline_feasible(&prev_view, &cfg, job_tokens, slack) {
+                assert!(
+                    !deadline_feasible(&v, &cfg, job_tokens, slack),
+                    "budget tightening flipped infeasible -> feasible"
+                );
+            }
+            prev = est;
+            prev_view = v;
+        }
+        // the 5 % floor keeps the estimate finite: a fully-tightened
+        // budget (0) estimates the same as the floor (50 permille)
+        let floored = FleetView { budget_permille: 50, ..base };
+        let zeroed = FleetView { budget_permille: 0, ..base };
+        assert_eq!(
+            estimate_finish_us(&floored, &cfg, job_tokens),
+            estimate_finish_us(&zeroed, &cfg, job_tokens),
+            "budget floor not applied"
+        );
     }
 }
 

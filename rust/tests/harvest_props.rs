@@ -1,0 +1,247 @@
+//! Property tests for the closed-loop harvest controller
+//! (`conserve::scheduler::harvest`):
+//!
+//! * **Replay** — the audit trail of a full engine run replays
+//!   byte-identically through the pure decision core, and the whole
+//!   run is deterministic (two identical runs, identical trails);
+//! * **Clamps & audit completeness** — the live budget never leaves
+//!   `[min_budget, max_budget]` and never changes without a logged
+//!   decision (consecutive records chain exactly);
+//! * **Lockstep spike trace** — with the controller on, the online
+//!   TTFT-violation rate stays no worse than a static-tight baseline
+//!   while offline throughput is at least as high;
+//! * **Monotonicity** — a strictly worse observed percentile never
+//!   raises the budget within one window (pure-core property).
+
+use conserve::backend::{CostModel, SimBackend};
+use conserve::clock::Clock;
+use conserve::config::EngineConfig;
+use conserve::profiler::LatencyProfile;
+use conserve::report::{Report, SimExperiment};
+use conserve::scheduler::harvest::{decide, replay, CtlState, Observation, Rule, Trigger};
+use conserve::server::{ArrivalSource, ServingEngine};
+use conserve::util::rng::Rng;
+use conserve::workload::{flash_crowd_trace, Lengths};
+use conserve::US_PER_SEC;
+
+// ---------------------------------------------------------------------------
+// Fixtures
+// ---------------------------------------------------------------------------
+
+/// Harvest-enabled simulation config. Layerwise preemption is off so
+/// the offline token budget is the lever that bounds how long an online
+/// arrival can wait behind a running offline batch — the regime the
+/// controller exists for.
+fn harvest_cfg() -> EngineConfig {
+    let mut cfg = EngineConfig::sim_a100_7b();
+    cfg.sched.harvest = true;
+    cfg.sched.layerwise_preempt = false;
+    cfg
+}
+
+const SPIKE_DURATION_S: f64 = 150.0;
+
+/// The shared spike workload: steady 2 req/s online with a 3x flash
+/// crowd mid-run, plus a deep offline pool submitted at t=0.
+fn spike_experiment(cfg: &EngineConfig) -> SimExperiment {
+    SimExperiment {
+        cfg: cfg.clone(),
+        online_arrivals: flash_crowd_trace(0x5B1CE, SPIKE_DURATION_S, 2.0, 75.0, 20.0, 3.0, 1.0),
+        online_lengths: Lengths::online_paper(),
+        offline_pool: 200,
+        offline_lengths: Lengths::offline_paper(),
+        duration_s: SPIKE_DURATION_S,
+    }
+}
+
+/// Run the experiment's exact event trace on a single engine and return
+/// it (tests need the controller's audit trail, which `Report` does not
+/// carry). Mirrors `SimExperiment::run`.
+fn run_engine(exp: &SimExperiment) -> ServingEngine<SimBackend> {
+    let clock = Clock::virtual_at(0);
+    let cost = CostModel::a100_llama2_7b();
+    let backend = SimBackend::new(cost, clock.clone(), exp.cfg.sched.safepoint_layers);
+    let profile = {
+        let pclock = Clock::virtual_at(0);
+        let mut pb = SimBackend::new(cost, pclock, exp.cfg.sched.safepoint_layers);
+        LatencyProfile::profile(&mut pb, 4096, 128, 2048).expect("profiling failed")
+    };
+    let arrivals = ArrivalSource::from_trace(exp.events());
+    let mut engine = ServingEngine::new(exp.cfg.clone(), backend, clock, profile, arrivals);
+    engine.run((exp.duration_s * US_PER_SEC as f64) as u64);
+    engine
+}
+
+// ---------------------------------------------------------------------------
+// (a) deterministic byte-identical audit replay
+// ---------------------------------------------------------------------------
+
+#[test]
+fn audit_trail_replays_byte_identically_and_runs_are_deterministic() {
+    let exp = spike_experiment(&harvest_cfg());
+    let engine = run_engine(&exp);
+    let ctl = engine
+        .harvest_controller()
+        .expect("harvest on must attach a controller");
+    let trail = ctl.audit_log();
+    assert!(
+        trail.len() > 20,
+        "a {SPIKE_DURATION_S}s run with 1s windows must decide often, got {}",
+        trail.len()
+    );
+
+    // replay through the pure decision core: byte-for-byte identical
+    let replayed = replay(ctl.config(), trail);
+    assert_eq!(replayed.len(), trail.len());
+    for (i, (a, b)) in trail.iter().zip(&replayed).enumerate() {
+        assert_eq!(a.line(), b.line(), "replay diverged at decision {i}");
+    }
+
+    // the whole engine run is deterministic: a second identical run
+    // produces the identical serialized trail
+    let engine2 = run_engine(&exp);
+    let text: Vec<String> = trail.iter().map(|r| r.line()).collect();
+    let text2: Vec<String> = engine2
+        .harvest_controller()
+        .unwrap()
+        .audit_log()
+        .iter()
+        .map(|r| r.line())
+        .collect();
+    assert_eq!(text.join("\n"), text2.join("\n"));
+}
+
+// ---------------------------------------------------------------------------
+// (b) clamps, chaining, and no unaudited budget change
+// ---------------------------------------------------------------------------
+
+#[test]
+fn budget_stays_clamped_and_every_change_is_audited() {
+    let engine = run_engine(&spike_experiment(&harvest_cfg()));
+    let ctl = engine.harvest_controller().unwrap();
+    let cfg = ctl.config();
+    let trail = ctl.audit_log();
+    assert!(!trail.is_empty());
+
+    // safe-start: the first decision departs from the tight end
+    assert_eq!(trail[0].old_budget, cfg.min_budget);
+
+    let mut prev_budget = cfg.min_budget;
+    for (i, r) in trail.iter().enumerate() {
+        // consecutive records chain exactly: the budget can only move
+        // through logged decisions
+        assert_eq!(
+            r.old_budget, prev_budget,
+            "unaudited budget change before decision {i}"
+        );
+        assert!(
+            (cfg.min_budget..=cfg.max_budget).contains(&r.new_budget),
+            "decision {i} left the clamp: {}",
+            r.line()
+        );
+        assert!(
+            (cfg.min_chunk..=cfg.max_chunk).contains(&r.new_chunk),
+            "decision {i} chunk left the clamp: {}",
+            r.line()
+        );
+        // Hold is what it says
+        if r.rule == Rule::Hold {
+            assert_eq!(r.old_budget, r.new_budget, "Hold changed the budget: {}", r.line());
+        }
+        prev_budget = r.new_budget;
+    }
+    // the live budget is the last audited one
+    assert_eq!(ctl.budget(), prev_budget);
+
+    // recorder counters agree with the trail
+    let tightens = trail.iter().filter(|r| r.rule == Rule::Tighten).count() as u64;
+    let opens = trail.iter().filter(|r| r.rule == Rule::Open).count() as u64;
+    assert_eq!(engine.rec.harvest_decisions, trail.len() as u64);
+    assert_eq!(engine.rec.harvest_tightens, tightens);
+    assert_eq!(engine.rec.harvest_opens, opens);
+    assert!(opens > 0, "calm stretches of the trace must open the budget");
+}
+
+// ---------------------------------------------------------------------------
+// (c) lockstep spike trace: controller vs static-tight baseline
+// ---------------------------------------------------------------------------
+
+#[test]
+fn controller_matches_tight_baseline_slo_with_more_offline_work() {
+    // static-tight baseline: the controller's own floor, fixed
+    let mut tight = harvest_cfg();
+    tight.sched.harvest = false;
+    tight.sched.max_batch_tokens = tight.sched.min_chunk;
+    let tight_report: Report = spike_experiment(&tight).run();
+
+    let ctl_report: Report = spike_experiment(&harvest_cfg()).run();
+    assert!(ctl_report.harvest_decisions > 0, "controller never decided");
+
+    // online SLO: no worse than the safest static point...
+    assert!(
+        ctl_report.ttft_violations <= tight_report.ttft_violations,
+        "controller violated more than static-tight: {} > {}",
+        ctl_report.ttft_violations,
+        tight_report.ttft_violations
+    );
+    // ...while harvesting at least as much offline work (the budget
+    // never drops below the baseline's static setting)
+    assert!(
+        ctl_report.offline_processed_tput >= tight_report.offline_processed_tput,
+        "controller harvested less than static-tight: {} < {}",
+        ctl_report.offline_processed_tput,
+        tight_report.offline_processed_tput
+    );
+}
+
+// ---------------------------------------------------------------------------
+// (d) monotone: strictly worse percentiles never raise the budget
+// ---------------------------------------------------------------------------
+
+#[test]
+fn worse_percentiles_never_raise_the_budget() {
+    let cfg = conserve::scheduler::harvest::HarvestConfig::from_sched(&harvest_cfg().sched);
+    let mut rng = Rng::new(0x4A12E57);
+    for _ in 0..5_000 {
+        let state = CtlState {
+            budget: rng.range(cfg.min_budget as u64, cfg.max_budget as u64 + 1) as usize,
+            calm: rng.range(0, u64::from(cfg.calm_windows) + 1) as u32,
+        };
+        let base = Observation {
+            p99_ttft_us: rng.range(0, 3_000_000),
+            p99_tpot_us: rng.range(0, 300_000),
+            ttft_samples: rng.range(1, 500),
+            online_waiting: rng.range(0, 8),
+        };
+        // strictly worse: same window population, higher percentiles
+        let worse = Observation {
+            p99_ttft_us: base.p99_ttft_us + rng.range(1, 2_000_000),
+            p99_tpot_us: base.p99_tpot_us + rng.range(0, 200_000),
+            ..base
+        };
+        let (next_base, _) = decide(&cfg, state, Trigger::Window, &base);
+        let (next_worse, rule_worse) = decide(&cfg, state, Trigger::Window, &worse);
+        assert!(
+            next_worse.budget <= next_base.budget,
+            "worse percentiles raised the budget: {base:?} -> {} vs {worse:?} -> {} (state {state:?})",
+            next_base.budget,
+            next_worse.budget
+        );
+        // and never open the budget above where it started
+        if rule_worse == Rule::Open {
+            assert!(
+                next_base.budget >= state.budget,
+                "worse obs opened while better obs did not hold/open"
+            );
+        }
+        // spike trigger: deeper queues never raise the budget either
+        let deeper = Observation {
+            online_waiting: base.online_waiting + rng.range(1, 64),
+            ..base
+        };
+        let (spike_base, _) = decide(&cfg, state, Trigger::Spike, &base);
+        let (spike_deep, _) = decide(&cfg, state, Trigger::Spike, &deeper);
+        assert!(spike_deep.budget <= spike_base.budget);
+        assert!(spike_deep.budget <= state.budget, "a spike decision must never open");
+    }
+}
