@@ -1,0 +1,216 @@
+//! `bench_prefix` — cross-request prefix KV sharing acceptance bench.
+//!
+//! Drives one multi-turn chat trace (shared system prompt + growing
+//! per-session histories, real token vectors) through a 2-shard fleet
+//! three ways at equal load:
+//!
+//! * `off`      — prefix cache off, prefix-affinity placement;
+//! * `on`       — prefix cache on, prefix-affinity placement (same
+//!                routing as `off`, so the only delta is sharing);
+//! * `on_rr`    — prefix cache on, round-robin placement (what sharing
+//!                is worth when the router ignores prefix residency).
+//!
+//! Acceptance (asserted here):
+//!
+//! * **prefill cut** — `on` skips prefill for a positive number of
+//!   prompt tokens (`prefill_tokens_skipped > 0`) while `off` skips
+//!   none;
+//! * **TTFT win** — `on` mean online TTFT < `off` mean online TTFT,
+//!   and the TTFT-violation rate does not regress;
+//! * **correctness** — completed token streams are byte-identical
+//!   between `on` and `off` (same finished set, same outputs);
+//! * **placement** — prefix-affinity beats round-robin on token hit
+//!   rate (`prefill_tokens_skipped / total_prompt_tokens`).
+//!
+//! Results go to `BENCH_prefix.json` (schema: rust/PERF.md §10).
+//! Scale with `PREFIX_BENCH_SESSIONS` (chat sessions, default 32).
+
+use std::collections::BTreeMap;
+
+use conserve::config::EngineConfig;
+use conserve::report::Report;
+use conserve::request::{State, TokenId};
+use conserve::shard::{run_sharded_traces_with, Placement, ShardRouter};
+use conserve::util::json::{arr, num, obj, Json};
+use conserve::workload::{chat_trace, ChatTraceConfig};
+
+const SHARDS: usize = 2;
+const SPAN_S: f64 = 60.0;
+/// Serve window: span plus drain slack so every turn finishes and the
+/// on/off completed sets are comparable.
+const DURATION_S: f64 = 90.0;
+
+fn trace_cfg(sessions: usize) -> ChatTraceConfig {
+    ChatTraceConfig {
+        sessions,
+        turns: 6,
+        span_s: SPAN_S,
+        ..ChatTraceConfig::default()
+    }
+}
+
+/// One measured run: route the shared trace under `placement`, serve it
+/// with the prefix cache on or off, and keep every finished request's
+/// output stream for the byte-identity check.
+struct Point {
+    label: String,
+    report: Report,
+    hit_rate: f64,
+    outputs: BTreeMap<u64, Vec<TokenId>>,
+}
+
+fn run_point(
+    label: &str,
+    sessions: usize,
+    prefix_on: bool,
+    placement: Placement,
+) -> Point {
+    let mut cfg = EngineConfig::sim_a100_7b();
+    cfg.sched.prefix_cache = prefix_on;
+    let trace = chat_trace(&trace_cfg(sessions));
+    let total_prompt_tokens: usize = trace.iter().map(|r| r.prompt_len).sum();
+    let mut router = ShardRouter::new(SHARDS, placement, &cfg);
+    for r in trace {
+        router.push(r);
+    }
+    let (run, outputs) = run_sharded_traces_with(
+        &cfg,
+        router.into_traces(),
+        DURATION_S,
+        None,
+        |e| {
+            e.set_retain_finished(true);
+            e.backend.set_synth_tokens(true);
+        },
+        |e| {
+            e.table
+                .values()
+                .filter(|r| r.state == State::Finished)
+                .map(|r| (r.submitted_id, r.output.clone()))
+                .collect::<Vec<_>>()
+        },
+    );
+    let outputs: BTreeMap<u64, Vec<TokenId>> = outputs.into_iter().flatten().collect();
+    let report = run.merged;
+    let hit_rate = report.prefill_tokens_skipped as f64 / total_prompt_tokens.max(1) as f64;
+    Point {
+        label: label.to_string(),
+        report,
+        hit_rate,
+        outputs,
+    }
+}
+
+fn point_json(p: &Point) -> Json {
+    obj(vec![
+        ("label", Json::Str(p.label.clone())),
+        ("online_mean_ttft_ms", num(p.report.online_mean_ttft_ms)),
+        ("online_p99_ttft_ms", num(p.report.online_p99_ttft_ms)),
+        ("ttft_violation_rate", num(p.report.ttft_violations)),
+        ("online_finished", num(p.report.online_finished as f64)),
+        ("prefix_hits", num(p.report.prefix_hits as f64)),
+        (
+            "prefill_tokens_skipped",
+            num(p.report.prefill_tokens_skipped as f64),
+        ),
+        (
+            "shared_block_residency",
+            num(p.report.shared_block_residency as f64),
+        ),
+        ("token_hit_rate", num(p.hit_rate)),
+    ])
+}
+
+fn main() {
+    let sessions: usize = std::env::var("PREFIX_BENCH_SESSIONS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(32);
+    println!(
+        "=== bench_prefix ({sessions} chat sessions x {} turns over {SPAN_S:.0}s, \
+         {SHARDS} shards) ===",
+        trace_cfg(sessions).turns
+    );
+
+    let off = run_point("off", sessions, false, Placement::prefix_affinity());
+    let on = run_point("on", sessions, true, Placement::prefix_affinity());
+    let on_rr = run_point("on_rr", sessions, true, Placement::RoundRobin);
+    for p in [&off, &on, &on_rr] {
+        println!(
+            "{:>6}: mean TTFT {:.1} ms, violations {:.4}, hits {}, skipped {} tok \
+             (hit rate {:.3}), shared peak {}",
+            p.label,
+            p.report.online_mean_ttft_ms,
+            p.report.ttft_violations,
+            p.report.prefix_hits,
+            p.report.prefill_tokens_skipped,
+            p.hit_rate,
+            p.report.shared_block_residency
+        );
+    }
+
+    // ---- acceptance ----
+    assert_eq!(
+        off.report.prefill_tokens_skipped, 0,
+        "sharing off must skip nothing"
+    );
+    assert!(
+        on.report.prefix_hits > 0 && on.report.prefill_tokens_skipped > 0,
+        "sharing on must attach shared blocks on this trace"
+    );
+    assert!(
+        on.report.online_mean_ttft_ms < off.report.online_mean_ttft_ms,
+        "sharing must cut mean TTFT at equal load: on {:.2} ms vs off {:.2} ms",
+        on.report.online_mean_ttft_ms,
+        off.report.online_mean_ttft_ms
+    );
+    assert!(
+        on.report.ttft_violations <= off.report.ttft_violations,
+        "sharing must not add TTFT violations: on {:.4} vs off {:.4}",
+        on.report.ttft_violations,
+        off.report.ttft_violations
+    );
+    assert_eq!(
+        on.outputs.len(),
+        off.outputs.len(),
+        "on/off must complete the same number of requests"
+    );
+    assert!(
+        on.outputs == off.outputs,
+        "completed token streams must be byte-identical with sharing on"
+    );
+    assert!(
+        on.hit_rate > on_rr.hit_rate,
+        "prefix-affinity must beat round-robin on token hit rate: \
+         {:.4} vs {:.4}",
+        on.hit_rate,
+        on_rr.hit_rate
+    );
+
+    // ---- emit BENCH_prefix.json (schema: rust/PERF.md §10) ----
+    let json = obj(vec![
+        ("sessions", num(sessions as f64)),
+        ("turns", num(trace_cfg(sessions).turns as f64)),
+        ("span_s", num(SPAN_S)),
+        ("shards", num(SHARDS as f64)),
+        ("points", arr([&off, &on, &on_rr].into_iter().map(point_json))),
+        ("mean_ttft_off_ms", num(off.report.online_mean_ttft_ms)),
+        ("mean_ttft_on_ms", num(on.report.online_mean_ttft_ms)),
+        (
+            "ttft_improvement",
+            num(1.0 - on.report.online_mean_ttft_ms / off.report.online_mean_ttft_ms.max(1e-9)),
+        ),
+        ("affinity_hit_rate", num(on.hit_rate)),
+        ("rr_hit_rate", num(on_rr.hit_rate)),
+        (
+            "streams_identical",
+            num(f64::from(u8::from(on.outputs == off.outputs))),
+        ),
+    ]);
+    let out_path =
+        std::env::var("PREFIX_BENCH_OUT").unwrap_or_else(|_| "BENCH_prefix.json".into());
+    std::fs::write(&out_path, json.to_string()).expect("write BENCH_prefix.json");
+    println!("\nwrote {out_path}");
+    let _ = Json::parse(&json.to_string()).expect("self-emitted json parses");
+    println!("bench_prefix OK");
+}

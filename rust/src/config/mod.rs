@@ -64,6 +64,11 @@ pub struct SchedConfig {
     /// Runtime-actuated by the harvest controller; online prefill
     /// chunking always uses `chunk_size`.
     pub offline_chunk: usize,
+    /// Cross-request prefix KV sharing: refcounted blocks, an
+    /// admission-time prefix trie, and prefill skipping over shared
+    /// blocks (`kvcache::prefix`). Off by default: every path behaves
+    /// exactly as before sharing existed.
+    pub prefix_cache: bool,
 }
 
 /// KV memory pools, in blocks of `block_tokens` token-slots.
@@ -114,6 +119,7 @@ impl EngineConfig {
                 harvest_slo_us: 0,
                 min_chunk: 64,
                 offline_chunk: 0,
+                prefix_cache: false,
             },
             mem: MemConfig {
                 // 40 GB - 13.5 weights - ~2.5 activations => ~24 GB KV;
@@ -152,6 +158,7 @@ impl EngineConfig {
                 harvest_slo_us: 0,
                 min_chunk: 16,
                 offline_chunk: 0,
+                prefix_cache: false,
             },
             mem: MemConfig {
                 // Tight pool so preemption/checkpointing paths actually
@@ -188,6 +195,7 @@ impl EngineConfig {
             "harvest_slo_us" => self.sched.harvest_slo_us = parse(v)?,
             "min_chunk" => self.sched.min_chunk = parse(v)?,
             "offline_chunk" => self.sched.offline_chunk = parse(v)?,
+            "prefix_cache" => self.sched.prefix_cache = parse_bool(v)?,
             "gpu_blocks" => self.mem.gpu_blocks = parse(v)?,
             "host_blocks" => self.mem.host_blocks = parse(v)?,
             "block_tokens" => self.mem.block_tokens = parse(v)?,

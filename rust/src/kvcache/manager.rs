@@ -14,14 +14,22 @@
 //! of every id, so a request id from another shard can never read or
 //! mutate this shard's block tables.
 
+use super::prefix::{chain_hash, PrefixIndex, PREFIX_DIGEST_WORDS, PREFIX_SEED};
 use super::BlockId;
-use crate::request::{rid_gen, rid_shard, rid_slot, RequestId, MAX_SHARDS};
+use crate::request::{rid_gen, rid_shard, rid_slot, RequestId, TokenId, MAX_SHARDS};
 
-/// A pool of fixed-size blocks; O(1) alloc/free via a free list.
+/// A pool of fixed-size blocks; O(1) alloc/free via a free list, with a
+/// per-block reference count so prefix-shared blocks survive until the
+/// last owner (a sequence or the prefix trie) drops them.
 #[derive(Debug)]
 pub struct BlockPool {
     total: usize,
     free: Vec<BlockId>,
+    /// Per-block reference count: 0 = free, 1 = exclusively owned,
+    /// >= 2 = shared across owners.
+    refs: Vec<u32>,
+    /// Blocks with refs >= 2 (O(1) shared-residency gauge).
+    shared: usize,
 }
 
 impl BlockPool {
@@ -29,16 +37,70 @@ impl BlockPool {
         Self {
             total,
             free: (0..total as BlockId).rev().collect(),
+            refs: vec![0; total],
+            shared: 0,
         }
     }
 
     pub fn alloc(&mut self) -> Option<BlockId> {
-        self.free.pop()
+        let b = self.free.pop()?;
+        self.refs[b as usize] = 1;
+        Some(b)
     }
 
+    /// Free an exclusively-owned block. Paths that may hold shared
+    /// blocks go through [`release`](Self::release) instead, which frees
+    /// only on the last drop.
     pub fn free(&mut self, b: BlockId) {
         debug_assert!(!self.free.contains(&b), "double free of block {b}");
+        debug_assert_eq!(self.refs[b as usize], 1, "free of shared block {b}");
+        self.refs[b as usize] = 0;
         self.free.push(b);
+    }
+
+    /// Add a reference to a live block (prefix-cache sharing).
+    pub fn retain(&mut self, b: BlockId) {
+        let r = &mut self.refs[b as usize];
+        debug_assert!(*r > 0, "retain of free block {b}");
+        *r += 1;
+        if *r == 2 {
+            self.shared += 1;
+        }
+    }
+
+    /// Drop one reference; the last dropper frees. Returns whether the
+    /// block actually went back to the free list.
+    pub fn release(&mut self, b: BlockId) -> bool {
+        let r = &mut self.refs[b as usize];
+        debug_assert!(*r > 0, "release of free block {b}");
+        if *r == 2 {
+            self.shared -= 1;
+        }
+        *r -= 1;
+        if *r == 0 {
+            self.free.push(b);
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn refcount(&self, b: BlockId) -> u32 {
+        self.refs[b as usize]
+    }
+
+    /// Blocks currently referenced by more than one owner (O(1)).
+    pub fn shared_count(&self) -> usize {
+        self.shared
+    }
+
+    /// Free-list/refcount agreement (conservation-check support): every
+    /// free-listed block has refcount 0, every block is free or
+    /// referenced, and the shared gauge matches the refcounts.
+    fn consistent(&self) -> bool {
+        self.free.iter().all(|&b| self.refs[b as usize] == 0)
+            && self.free.len() + self.refs.iter().filter(|&&r| r > 0).count() == self.total
+            && self.shared == self.refs.iter().filter(|&&r| r >= 2).count()
     }
 
     pub fn available(&self) -> usize {
@@ -80,6 +142,13 @@ pub struct SeqKv {
     /// Completed host checkpoints, maintained on finish/invalidate so
     /// `fully_checkpointed` is O(1).
     host_done: usize,
+    /// Prompt blocks already published to (or attached from) the shard's
+    /// prefix trie — the next candidate index for
+    /// [`KvManager::prefix_publish`]. Monotone within a registration.
+    published: usize,
+    /// Rolling prefix hash through `published` blocks, so publishing the
+    /// next block is O(block_tokens), not O(prefix).
+    chain: u64,
 }
 
 impl SeqKv {
@@ -90,6 +159,8 @@ impl SeqKv {
             tokens: 0,
             resident: 0,
             host_done: 0,
+            published: 0,
+            chain: PREFIX_SEED,
         }
     }
 
@@ -167,6 +238,9 @@ pub struct KvManager {
     gpu: BlockPool,
     host: BlockPool,
     seqs: Vec<SeqEntry>,
+    /// Cross-request prefix sharing index (None = sharing off, the
+    /// default: every path below behaves exactly as before).
+    prefix: Option<PrefixIndex>,
 }
 
 impl KvManager {
@@ -190,6 +264,7 @@ impl KvManager {
             gpu: BlockPool::new(gpu_blocks),
             host: BlockPool::new(host_blocks),
             seqs: Vec::new(),
+            prefix: None,
         }
     }
 
@@ -248,7 +323,7 @@ impl KvManager {
     fn purge_entry(gpu: &mut BlockPool, host: &mut BlockPool, kv: &mut SeqKv) {
         for slot in kv.gpu.iter_mut() {
             if let Some(b) = slot.take() {
-                gpu.free(b);
+                gpu.release(b); // shared blocks survive under other refs
             }
         }
         for c in kv.host.iter_mut() {
@@ -259,6 +334,8 @@ impl KvManager {
         }
         kv.resident = 0;
         kv.host_done = 0;
+        kv.published = 0;
+        kv.chain = PREFIX_SEED;
     }
 
     pub fn register(&mut self, id: RequestId) {
@@ -301,7 +378,6 @@ impl KvManager {
     /// Fails atomically (no partial allocation) if the pool is short.
     pub fn grow(&mut self, id: RequestId, new_total: usize) -> Result<(), KvError> {
         let block_tokens = self.block_tokens;
-        let gpu_avail = self.gpu.available();
         let seq = self.seq(id).ok_or(KvError::UnknownSeq(id))?;
         let needed_slots = new_total.div_ceil(block_tokens);
         // Fill gaps (evicted blocks being re-fetched keep their slot) and
@@ -313,6 +389,13 @@ impl KvManager {
                 _ => need += 1,
             }
         }
+        if need > self.gpu.available() {
+            // take cache-only trie blocks back before declaring the pool
+            // short — the prefix cache only ever borrows slack capacity
+            let short = need - self.gpu.available();
+            self.prefix_reclaim(short);
+        }
+        let gpu_avail = self.gpu.available();
         if need > gpu_avail {
             return Err(KvError::OutOfGpu {
                 need,
@@ -439,7 +522,9 @@ impl KvManager {
     /// Evict all GPU blocks of `id` (host checkpoints retained). This is
     /// the O(µs) "discard + remap" release of §4.4 — legal only when the
     /// caller either has full checkpoints or accepts recompute. Returns
-    /// the freed GPU block count.
+    /// the GPU blocks actually freed: a prefix-shared block only drops
+    /// this sequence's reference and survives under the remaining ones
+    /// (the last dropper frees it).
     pub fn evict_gpu(&mut self, id: RequestId) -> usize {
         if !self.owns(id) {
             return 0;
@@ -458,8 +543,9 @@ impl KvManager {
         let mut n = 0;
         for s in seq.gpu.iter_mut() {
             if let Some(b) = s.take() {
-                self.gpu.free(b);
-                n += 1;
+                if self.gpu.release(b) {
+                    n += 1;
+                }
             }
         }
         seq.resident = 0;
@@ -485,7 +571,7 @@ impl KvManager {
         };
         for s in seq.gpu.iter_mut() {
             if let Some(b) = s.take() {
-                self.gpu.free(b);
+                self.gpu.release(b);
             }
         }
         seq.resident = 0;
@@ -590,6 +676,12 @@ impl KvManager {
             .host
             .iter()
             .any(|c| matches!(c, BlockCkpt::InFlight(_)));
+        // `resident != 0` is also the prefix-sharing guard: a sequence
+        // holding *any* GPU block — in particular one whose refcount > 1
+        // because other requests or the trie still reference it — must
+        // evict first, which drops only this sequence's references.
+        // Migration therefore can never detach a block another request
+        // still uses; only private host checkpoints travel.
         if seq.resident != 0 || in_flight || !seq.fully_checkpointed(bt) {
             return Err(KvError::NotPortable(id));
         }
@@ -636,6 +728,9 @@ impl KvManager {
 
     /// Allocate a GPU block for a prefetched logical block and return it.
     pub fn begin_prefetch(&mut self, id: RequestId, idx: usize) -> Result<BlockId, KvError> {
+        if self.gpu.available() == 0 {
+            self.prefix_reclaim(1); // cache-only blocks yield to swap-ins
+        }
         let gb = self.gpu.alloc().ok_or(KvError::OutOfGpu { need: 1, free: 0 })?;
         let Some(seq) = self.seq_mut(id) else {
             self.gpu.free(gb);
@@ -647,21 +742,183 @@ impl KvManager {
         Ok(gb)
     }
 
-    /// Invariant check used by property tests: every block is either free
-    /// or owned by exactly one sequence slot, and the O(1) counters agree
-    /// with the block tables they summarize.
+    // ---- cross-request prefix sharing ----
+
+    /// Turn on the prefix cache for this shard: admitted prompts map
+    /// onto already-resident shared blocks ([`Self::prefix_attach`]) and
+    /// freshly-prefilled prompt blocks are indexed for later requests
+    /// ([`Self::prefix_publish`]). Off by default; with it off every
+    /// path behaves exactly as before sharing existed.
+    pub fn enable_prefix_cache(&mut self) {
+        if self.prefix.is_none() {
+            self.prefix = Some(PrefixIndex::new());
+        }
+    }
+
+    pub fn prefix_enabled(&self) -> bool {
+        self.prefix.is_some()
+    }
+
+    /// Cumulative (hits, lookups) of admission-time prefix attachment.
+    pub fn prefix_stats(&self) -> (u64, u64) {
+        self.prefix.as_ref().map(|p| p.stats()).unwrap_or((0, 0))
+    }
+
+    /// Blocks currently indexed by the trie (each holds one cache ref).
+    pub fn prefix_cached_blocks(&self) -> usize {
+        self.prefix.as_ref().map(|p| p.len()).unwrap_or(0)
+    }
+
+    /// GPU blocks referenced by more than one owner right now (O(1)).
+    pub fn shared_gpu_blocks(&self) -> usize {
+        self.gpu.shared_count()
+    }
+
+    /// Membership digest over the trie's prefix hashes (zeros when
+    /// sharing is off) — what `ShardLoads` publishes so the router can
+    /// score prefix affinity without touching this shard.
+    pub fn prefix_digest(&mut self) -> [u64; PREFIX_DIGEST_WORDS] {
+        match self.prefix.as_mut() {
+            Some(p) => p.digest(),
+            None => [0; PREFIX_DIGEST_WORDS],
+        }
+    }
+
+    /// Map a freshly-registered sequence's prompt onto already-resident
+    /// shared blocks. Walks the trie along the prompt's block hash chain
+    /// and attaches every hit: the block is retained (refcount + 1) and
+    /// becomes the next entry of the sequence's table, and the committed
+    /// token count jumps past it — the scheduler's prefill planning then
+    /// skips those tokens entirely. Returns the tokens covered (0 = no
+    /// hit, sharing off, or the sequence already holds state).
+    ///
+    /// Copy-on-write boundary, structurally: attachment never covers the
+    /// block holding the last prompt token, so the first divergent block
+    /// is always private — every subsequent write (`grow` + `commit`)
+    /// lands at or after the write frontier in freshly-allocated blocks,
+    /// and shared ancestors stay frozen. At least one prefill token
+    /// always remains, keeping the first-token sample local.
+    pub fn prefix_attach(&mut self, id: RequestId, prompt: &[TokenId]) -> usize {
+        let bt = self.block_tokens;
+        if self.prefix.is_none() || prompt.len() <= bt || !self.owns(id) {
+            return 0;
+        }
+        // only a fresh, empty sequence may attach: shared ancestors must
+        // form the table prefix, ahead of any private block
+        match self.seq(id) {
+            Some(s) if s.tokens == 0 && s.gpu.is_empty() => {}
+            _ => return 0,
+        }
+        let max_blocks = (prompt.len() - 1) / bt;
+        let pfx = self.prefix.as_mut().unwrap();
+        pfx.record_lookup();
+        let mut h = PREFIX_SEED;
+        let mut chain = PREFIX_SEED; // chain through the *matched* blocks
+        let mut matched: Vec<BlockId> = Vec::new();
+        for blk in 0..max_blocks {
+            for &t in &prompt[blk * bt..(blk + 1) * bt] {
+                h = chain_hash(h, t);
+            }
+            match pfx.get(h) {
+                Some(b) => {
+                    matched.push(b);
+                    chain = h;
+                }
+                None => break,
+            }
+        }
+        if matched.is_empty() {
+            return 0;
+        }
+        pfx.record_hit();
+        let k = matched.len();
+        let seq = self.seqs[rid_slot(id)].kv.as_mut().unwrap();
+        for b in matched {
+            self.gpu.retain(b);
+            seq.gpu.push(Some(b));
+            seq.host.push(BlockCkpt::None);
+            seq.resident += 1;
+        }
+        seq.tokens = k * bt;
+        seq.published = k;
+        seq.chain = chain;
+        k * bt
+    }
+
+    /// Publish `id`'s committed full prompt blocks into the trie so later
+    /// requests with the same prefix can attach them. Idempotent and
+    /// incremental: the engine calls this after every prefill commit and
+    /// only the newly-completed blocks past the publish cursor are
+    /// hashed. The trie takes one reference per indexed block, so an
+    /// entry outlives its publisher; the first publisher of a hash wins.
+    pub fn prefix_publish(&mut self, id: RequestId, prompt: &[TokenId]) {
+        if self.prefix.is_none() || !self.owns(id) {
+            return;
+        }
+        let bt = self.block_tokens;
+        let full = prompt.len() / bt; // blocks holding only prompt tokens
+        let Some(entry) = self
+            .seqs
+            .get_mut(rid_slot(id))
+            .filter(|e| e.generation == rid_gen(id))
+        else {
+            return;
+        };
+        let Some(seq) = entry.kv.as_mut() else {
+            return;
+        };
+        let pfx = self.prefix.as_mut().unwrap();
+        while seq.published < full && (seq.published + 1) * bt <= seq.tokens {
+            let idx = seq.published;
+            let Some(&Some(b)) = seq.gpu.get(idx) else {
+                break; // evicted mid-prefill: nothing publishable here
+            };
+            let mut h = seq.chain;
+            for &t in &prompt[idx * bt..(idx + 1) * bt] {
+                h = chain_hash(h, t);
+            }
+            if pfx.get(h).is_none() {
+                self.gpu.retain(b); // the trie's own reference
+                pfx.insert(h, b);
+            }
+            seq.published = idx + 1;
+            seq.chain = h;
+        }
+    }
+
+    /// Evict cache-only trie entries (blocks whose sole reference is the
+    /// trie's) to free `need` blocks for live sequences. Entries another
+    /// sequence still shares are never torn. Returns blocks freed.
+    fn prefix_reclaim(&mut self, need: usize) -> usize {
+        let Some(pfx) = self.prefix.as_mut() else {
+            return 0;
+        };
+        let gpu = &mut self.gpu;
+        pfx.reclaim(need, |b| {
+            if gpu.refcount(b) == 1 {
+                gpu.release(b);
+                true
+            } else {
+                false
+            }
+        })
+    }
+
+    /// Invariant check used by property tests: for every GPU block, the
+    /// references held by sequence tables plus the prefix trie equal the
+    /// pool's refcount, and a block is free exactly when that count is
+    /// zero (so the last dropper frees, with no double-free and no
+    /// leak). Host blocks stay exclusively owned, and the O(1) counters
+    /// (`resident`, `host_done`, the shared gauge) must agree with the
+    /// tables they summarize.
     pub fn check_conservation(&self) -> bool {
-        let mut gpu_owned = 0usize;
+        let mut expect = vec![0u32; self.gpu.total()];
         let mut host_owned = 0usize;
-        let mut seen_gpu = std::collections::HashSet::new();
         let mut seen_host = std::collections::HashSet::new();
         for seq in self.seqs.iter().filter_map(|e| e.kv.as_ref()) {
             let mut resident = 0;
             for b in seq.gpu.iter().flatten() {
-                if !seen_gpu.insert(*b) {
-                    return false; // double ownership
-                }
-                gpu_owned += 1;
+                expect[*b as usize] += 1;
                 resident += 1;
             }
             if resident != seq.resident {
@@ -671,7 +928,7 @@ impl KvManager {
             for c in &seq.host {
                 if let BlockCkpt::Done(hb) | BlockCkpt::InFlight(hb) = c {
                     if !seen_host.insert(*hb) {
-                        return false;
+                        return false; // host blocks are never shared
                     }
                     host_owned += 1;
                 }
@@ -683,7 +940,14 @@ impl KvManager {
                 return false;
             }
         }
-        gpu_owned + self.gpu.available() == self.gpu.total()
+        if let Some(pfx) = self.prefix.as_ref() {
+            for b in pfx.blocks() {
+                expect[b as usize] += 1;
+            }
+        }
+        (0..self.gpu.total()).all(|b| expect[b] == self.gpu.refcount(b as BlockId))
+            && self.gpu.consistent()
+            && self.host.consistent()
             && host_owned + self.host.available() == self.host.total()
     }
 }
@@ -931,5 +1195,164 @@ mod tests {
         assert_eq!(m.evict_gpu(old), 0);
         assert_eq!(m.seq(new).unwrap().tokens, 32);
         assert!(m.check_conservation());
+    }
+
+    // ---- prefix sharing ----
+
+    fn prefix_mgr() -> KvManager {
+        let mut m = mgr();
+        m.enable_prefix_cache();
+        m
+    }
+
+    /// 48-token prompt = 3 full blocks at block_tokens 16.
+    fn prompt48() -> Vec<TokenId> {
+        (0..48).map(|i| (i % 7) as TokenId).collect()
+    }
+
+    /// Prefill + publish the canonical prompt under id 1, then attach a
+    /// second request to it — the shared fixture for the sharing tests.
+    fn publish_and_attach(m: &mut KvManager) -> Vec<TokenId> {
+        let p = prompt48();
+        m.register(1);
+        m.grow(1, 48).unwrap();
+        m.commit(1, 48).unwrap();
+        m.prefix_publish(1, &p);
+        m.register(2);
+        assert_eq!(m.prefix_attach(2, &p), 32);
+        p
+    }
+
+    #[test]
+    fn publish_then_attach_skips_shared_prefix() {
+        let mut m = prefix_mgr();
+        let p = publish_and_attach(&mut m);
+        assert_eq!(m.prefix_cached_blocks(), 3);
+        // CoW boundary: the block holding the last prompt token stays
+        // private, so only 2 of the 3 full blocks attach
+        assert_eq!(m.seq(2).unwrap().tokens, 32);
+        assert_eq!(m.seq(2).unwrap().gpu_blocks(), 2);
+        assert_eq!(m.shared_gpu_blocks(), 3);
+        // the divergent tail grows a fresh private block and commits
+        // normally from the write frontier
+        assert_eq!(m.blocks_needed(2, 48), 1);
+        m.grow(2, 48).unwrap();
+        m.commit(2, 16).unwrap();
+        assert_eq!(m.seq(2).unwrap().tokens, 48);
+        assert_eq!(m.prefix_stats(), (1, 1));
+        // a different prompt misses without attaching anything
+        let q: Vec<TokenId> = (0..48).map(|i| (i % 5) as TokenId).collect();
+        m.register(3);
+        assert_eq!(m.prefix_attach(3, &q), 0);
+        assert_eq!(m.prefix_stats(), (1, 2));
+        assert!(m.check_conservation());
+    }
+
+    #[test]
+    fn last_dropper_frees_and_trie_pins_survivors() {
+        let mut m = prefix_mgr();
+        publish_and_attach(&mut m);
+        // publisher drops: its blocks survive under the trie's refs (and
+        // two of them under seq 2); nothing returns to the free list
+        m.release(1, false);
+        assert_eq!(m.gpu_free(), 8 - 3);
+        assert!(m.check_conservation());
+        // sharer drops too: blocks are cache-only now, still resident
+        m.release(2, false);
+        assert_eq!(m.gpu_free(), 8 - 3);
+        assert_eq!(m.prefix_cached_blocks(), 3);
+        assert_eq!(m.shared_gpu_blocks(), 0, "cache-only refs are exclusive");
+        // pool pressure reclaims cache-only blocks instead of failing
+        m.register(3);
+        m.grow(3, 8 * 16).unwrap();
+        assert_eq!(m.prefix_cached_blocks(), 0);
+        assert!(m.check_conservation());
+    }
+
+    #[test]
+    fn reclaim_never_tears_a_live_sharer() {
+        let mut m = prefix_mgr();
+        publish_and_attach(&mut m);
+        m.release(1, false);
+        // seq 2 still shares the first two blocks; only the cache-only
+        // third block may be reclaimed, so an 8-block grow stays short
+        m.register(3);
+        let err = m.grow(3, 8 * 16).unwrap_err();
+        assert_eq!(err, KvError::OutOfGpu { need: 8, free: 6 });
+        assert_eq!(m.prefix_cached_blocks(), 2, "live-shared entries survive");
+        assert_eq!(m.seq(2).unwrap().gpu_blocks(), 2);
+        assert!(m.check_conservation());
+    }
+
+    #[test]
+    fn export_host_rejects_sequences_holding_shared_blocks() {
+        let mut m = prefix_mgr();
+        publish_and_attach(&mut m);
+        // the sharer finishes its prefill and takes private checkpoints
+        // of everything — it is still not portable while it references
+        // shared GPU blocks
+        m.grow(2, 48).unwrap();
+        m.commit(2, 16).unwrap();
+        for i in m.checkpoint_candidates(2) {
+            m.begin_ckpt(2, i).unwrap();
+            m.finish_ckpt(2, i);
+        }
+        assert_eq!(m.export_host(2), Err(KvError::NotPortable(2)));
+        // evicting drops only this sequence's references: the private
+        // divergent block frees, shared ancestors survive untouched
+        assert_eq!(m.evict_gpu(2), 1);
+        let tokens = m.export_host(2).unwrap();
+        assert_eq!(tokens, 48);
+        assert_eq!(m.shared_gpu_blocks(), 3, "publisher + trie still share");
+        assert_eq!(m.seq(1).unwrap().gpu_blocks(), 3, "donor untouched by export");
+        assert!(m.check_conservation());
+    }
+
+    #[test]
+    fn attach_never_covers_the_whole_prompt() {
+        let mut m = prefix_mgr();
+        // 32-token prompt: 2 full blocks published, but at most 1 attaches
+        let p: Vec<TokenId> = (0..32).map(|i| i as TokenId).collect();
+        m.register(1);
+        m.grow(1, 32).unwrap();
+        m.commit(1, 32).unwrap();
+        m.prefix_publish(1, &p);
+        assert_eq!(m.prefix_cached_blocks(), 2);
+        m.register(2);
+        assert_eq!(m.prefix_attach(2, &p), 16);
+        // a one-block prompt has nothing shareable to gain (and does not
+        // even count as a lookup)
+        m.register(3);
+        assert_eq!(m.prefix_attach(3, &p[..16].to_vec()), 0);
+        assert_eq!(m.prefix_stats(), (1, 1));
+        assert!(m.check_conservation());
+    }
+
+    #[test]
+    fn sharing_off_changes_nothing() {
+        let mut m = mgr(); // prefix cache NOT enabled
+        let p = prompt48();
+        m.register(1);
+        m.grow(1, 48).unwrap();
+        m.commit(1, 48).unwrap();
+        m.prefix_publish(1, &p); // no-op
+        m.register(2);
+        assert_eq!(m.prefix_attach(2, &p), 0);
+        assert_eq!(m.prefix_stats(), (0, 0));
+        assert_eq!(m.shared_gpu_blocks(), 0);
+        assert_eq!(m.prefix_digest(), [0u64; PREFIX_DIGEST_WORDS]);
+        assert!(m.check_conservation());
+    }
+
+    #[test]
+    fn digest_reflects_published_prefixes() {
+        use crate::kvcache::prefix::{digest_contains, prefix_probes};
+        let mut m = prefix_mgr();
+        assert_eq!(m.prefix_digest(), [0u64; PREFIX_DIGEST_WORDS]);
+        let p = publish_and_attach(&mut m);
+        let d = m.prefix_digest();
+        for h in prefix_probes(&p, 16, 8) {
+            assert!(digest_contains(&d, h), "published probe missing from digest");
+        }
     }
 }

@@ -10,10 +10,12 @@
 
 pub mod checkpoint;
 pub mod manager;
+pub mod prefix;
 pub mod swap;
 
 pub type BlockId = u32;
 
 pub use checkpoint::CkptController;
 pub use manager::{KvManager, SeqKv};
+pub use prefix::{prefix_probes, PrefixIndex, PREFIX_DIGEST_WORDS};
 pub use swap::{Direction, SwapEngine, SwapOp};

@@ -1,0 +1,254 @@
+//! Cross-request prefix KV sharing: the admission-time trie.
+//!
+//! At production scale most traffic shares long common prefixes — system
+//! prompts, few-shot templates, multi-turn history — yet without sharing
+//! every request re-prefills and stores its own copy of that KV. This
+//! module indexes already-resident **full** prompt blocks by a rolling
+//! hash chain over their tokens, so admission can map a new prompt onto
+//! blocks other requests already computed
+//! ([`crate::kvcache::KvManager::prefix_attach`]) and skip their
+//! prefill.
+//!
+//! The "trie" is flattened: because each block's hash chains over *all*
+//! tokens before it, a single `hash -> block` map encodes exactly the
+//! trie of block-granular prefixes — matching hashes imply matching
+//! whole prefixes (modulo 64-bit collisions), so walking chain hashes
+//! left-to-right until the first miss *is* the trie descent, without
+//! child pointers.
+//!
+//! The index also folds its hashes into a compact 512-bit membership
+//! digest that [`ShardLoads`](crate::shard::ShardLoads) publishes, so
+//! the router can score shards by how much of a prompt's prefix is
+//! already resident there (prefix-affinity placement) with eight words
+//! per shard and no cross-thread chatter.
+
+use std::collections::{HashMap, VecDeque};
+
+use super::BlockId;
+use crate::request::TokenId;
+use crate::util::rng::mix64;
+
+/// Words in the per-shard prefix membership digest (8 × 64 = 512 bits).
+pub const PREFIX_DIGEST_WORDS: usize = 8;
+const DIGEST_BITS: u64 = (PREFIX_DIGEST_WORDS * 64) as u64;
+
+/// Hash-chain seed. Any fixed constant works; sharing only requires that
+/// every shard chains identically.
+pub const PREFIX_SEED: u64 = 0x436f_6e53_6572_7665; // "ConServe"
+
+/// Extend a rolling prefix hash by one token. The `+ 1` keeps token 0
+/// from being an identity fold.
+#[inline]
+pub fn chain_hash(prev: u64, tok: TokenId) -> u64 {
+    mix64(prev ^ (tok as u64 + 1))
+}
+
+/// Hash of each full-block prefix of `prompt` (block `i`'s hash covers
+/// tokens `0..(i+1)*block_tokens`), capped at `cap` blocks. These are
+/// the probes the router tests against shard digests, and exactly the
+/// keys [`crate::kvcache::KvManager::prefix_attach`] walks — the two
+/// sides cannot drift.
+pub fn prefix_probes(prompt: &[TokenId], block_tokens: usize, cap: usize) -> Vec<u64> {
+    let full = (prompt.len() / block_tokens).min(cap);
+    let mut out = Vec::with_capacity(full);
+    let mut h = PREFIX_SEED;
+    for blk in 0..full {
+        for &t in &prompt[blk * block_tokens..(blk + 1) * block_tokens] {
+            h = chain_hash(h, t);
+        }
+        out.push(h);
+    }
+    out
+}
+
+/// Fold a prefix hash into a membership digest.
+#[inline]
+pub fn digest_insert(digest: &mut [u64; PREFIX_DIGEST_WORDS], h: u64) {
+    let bit = h % DIGEST_BITS;
+    digest[(bit / 64) as usize] |= 1u64 << (bit % 64);
+}
+
+/// May the digest contain `h`? One-sided like any Bloom-style filter:
+/// false means definitely absent; true means probably present.
+#[inline]
+pub fn digest_contains(digest: &[u64; PREFIX_DIGEST_WORDS], h: u64) -> bool {
+    let bit = h % DIGEST_BITS;
+    digest[(bit / 64) as usize] & (1u64 << (bit % 64)) != 0
+}
+
+/// The per-shard prefix index: `hash -> resident GPU block`, plus the
+/// reclaim queue, hit accounting, and the lazily-recomputed digest.
+///
+/// The index *owns one reference* on every block it maps (taken by
+/// [`crate::kvcache::KvManager::prefix_publish`]), so an indexed block
+/// outlives its publisher and can seed later requests; pool pressure
+/// takes cache-only blocks back through [`Self::reclaim`] — never
+/// blocks a live sequence still references.
+#[derive(Debug, Default)]
+pub struct PrefixIndex {
+    entries: HashMap<u64, BlockId>,
+    /// Hashes in insertion order — the reclaim scan order. May briefly
+    /// hold re-queued duplicates of hot entries; `entries` is the source
+    /// of truth.
+    order: VecDeque<u64>,
+    hits: u64,
+    lookups: u64,
+    digest: [u64; PREFIX_DIGEST_WORDS],
+    dirty: bool,
+}
+
+impl PrefixIndex {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Indexed blocks (each holding one cache reference).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn get(&self, h: u64) -> Option<BlockId> {
+        self.entries.get(&h).copied()
+    }
+
+    /// Index `h -> b`. First publisher wins; the caller must have taken
+    /// the cache's reference on `b` before inserting.
+    pub fn insert(&mut self, h: u64, b: BlockId) {
+        if self.entries.insert(h, b).is_none() {
+            self.order.push_back(h);
+        }
+        self.dirty = true;
+    }
+
+    pub fn record_lookup(&mut self) {
+        self.lookups += 1;
+    }
+
+    pub fn record_hit(&mut self) {
+        self.hits += 1;
+    }
+
+    /// Cumulative (hits, lookups) of admission-time attachment.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits, self.lookups)
+    }
+
+    /// Membership digest over the indexed hashes, recomputed only when
+    /// the index changed since the last call.
+    pub fn digest(&mut self) -> [u64; PREFIX_DIGEST_WORDS] {
+        if self.dirty {
+            self.digest = [0; PREFIX_DIGEST_WORDS];
+            for h in self.entries.keys() {
+                digest_insert(&mut self.digest, *h);
+            }
+            self.dirty = false;
+        }
+        self.digest
+    }
+
+    /// Iterate the indexed blocks (conservation checks).
+    pub fn blocks(&self) -> impl Iterator<Item = BlockId> + '_ {
+        self.entries.values().copied()
+    }
+
+    /// Drop up to `need` entries whose block `can_free` accepts (the
+    /// manager passes "refcount is exactly the cache's own reference"),
+    /// oldest first; entries still shared with live sequences are
+    /// re-queued, not torn. Returns how many were freed.
+    pub fn reclaim(&mut self, need: usize, mut can_free: impl FnMut(BlockId) -> bool) -> usize {
+        let mut freed = 0;
+        for _ in 0..self.order.len() {
+            if freed >= need {
+                break;
+            }
+            let Some(h) = self.order.pop_front() else {
+                break;
+            };
+            let Some(&b) = self.entries.get(&h) else {
+                continue; // stale queue slot from a re-queue
+            };
+            if can_free(b) {
+                self.entries.remove(&h);
+                self.dirty = true;
+                freed += 1;
+            } else {
+                self.order.push_back(h);
+            }
+        }
+        freed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_hash_is_positional() {
+        // same multiset, different order => different chains
+        let a = chain_hash(chain_hash(PREFIX_SEED, 1), 2);
+        let b = chain_hash(chain_hash(PREFIX_SEED, 2), 1);
+        assert_ne!(a, b);
+        // deterministic
+        assert_eq!(a, chain_hash(chain_hash(PREFIX_SEED, 1), 2));
+    }
+
+    #[test]
+    fn probes_cover_full_blocks_only() {
+        let prompt: Vec<TokenId> = (0..40).map(|i| i as TokenId).collect();
+        let probes = prefix_probes(&prompt, 16, 8);
+        assert_eq!(probes.len(), 2, "40 tokens = 2 full 16-token blocks");
+        assert_eq!(prefix_probes(&prompt, 16, 1).len(), 1, "cap respected");
+        // probe i is the chain through block i — extending the prompt
+        // does not change earlier probes (prefix property)
+        let longer: Vec<TokenId> = (0..64).map(|i| i as TokenId).collect();
+        assert_eq!(prefix_probes(&longer, 16, 8)[..2], probes[..]);
+        assert!(prefix_probes(&prompt[..16], 16, 8).len() == 1);
+        assert!(prefix_probes(&prompt[..15], 16, 8).is_empty());
+    }
+
+    #[test]
+    fn digest_membership_is_one_sided() {
+        let mut d = [0u64; PREFIX_DIGEST_WORDS];
+        assert!(!digest_contains(&d, 12345));
+        digest_insert(&mut d, 12345);
+        assert!(digest_contains(&d, 12345));
+        // inserted hashes are always found (no false negatives)
+        let mut d2 = [0u64; PREFIX_DIGEST_WORDS];
+        for h in 0..1000u64 {
+            digest_insert(&mut d2, mix64(h));
+        }
+        for h in 0..1000u64 {
+            assert!(digest_contains(&d2, mix64(h)));
+        }
+    }
+
+    #[test]
+    fn reclaim_skips_refused_blocks_and_keeps_order() {
+        let mut idx = PrefixIndex::new();
+        for (h, b) in [(10u64, 0u32), (20, 1), (30, 2)] {
+            idx.insert(h, b);
+        }
+        // block 1 is "still shared": refused, re-queued, survives
+        let freed = idx.reclaim(3, |b| b != 1);
+        assert_eq!(freed, 2);
+        assert_eq!(idx.len(), 1);
+        assert_eq!(idx.get(20), Some(1));
+        // once releasable, a later pass takes it
+        assert_eq!(idx.reclaim(1, |_| true), 1);
+        assert!(idx.is_empty());
+    }
+
+    #[test]
+    fn insert_is_idempotent_on_hash() {
+        let mut idx = PrefixIndex::new();
+        idx.insert(7, 3);
+        idx.insert(7, 3);
+        assert_eq!(idx.len(), 1);
+        assert_eq!(idx.reclaim(8, |_| true), 1, "no duplicate queue entries freed");
+    }
+}

@@ -5,7 +5,7 @@
 //!                   [--cv CV] [--duration S] [--offline-pool N]
 //!                   [--shards N] [--placement rr|least-kv|affinity[:headroom]]
 //!                   [--steal on|off] [--harvest on|off[:SLO_US]]
-//!                   [--set key=value ...]
+//!                   [--prefix-cache on|off] [--set key=value ...]
 //!     Run a co-serving experiment on the simulated A100/Llama-2-7B
 //!     testbed and print the report. With --shards N > 1 the trace is
 //!     routed across N independent worker shards (each its own
@@ -16,7 +16,7 @@
 //! conserve serve    [--addr HOST:PORT] [--shards N] [--duration S]
 //!                   [--state-dir DIR] [--ckpt-every K]
 //!                   [--admission on|off] [--harvest on|off[:SLO_US]]
-//!                   [--set key=value ...]
+//!                   [--prefix-cache on|off] [--set key=value ...]
 //!     Run the live HTTP front door over a sharded simulated fleet:
 //!     OpenAI-style `POST /v1/completions` (chunked token streaming
 //!     with `"stream": true`), `POST /v1/batches` for offline jobs
@@ -45,7 +45,8 @@
 //!                   [--sched fifo|urgency] [--rate R] [--duration S]
 //!                   [--state-dir DIR] [--resume] [--ckpt-every K]
 //!                   [--restamp-every S] [--faults SPEC]
-//!                   [--harvest on|off[:SLO_US]] [--set key=value ...]
+//!                   [--harvest on|off[:SLO_US]] [--prefix-cache on|off]
+//!                   [--set key=value ...]
 //!     Run a multi-tenant batch-job experiment (deadline-aware job
 //!     manager over the sharded fleet) and print per-job deadline
 //!     attainment. --sched urgency enables EDF placement + fair-share
@@ -70,6 +71,14 @@
 //! live online TTFT/TPOT percentiles instead of the static
 //! `max_batch_tokens`. `--harvest on:SLO_US` overrides the controller's
 //! TTFT target in microseconds (default: the `ttft_ms` SLO).
+//!
+//! `--prefix-cache on` (simulate / serve / jobs) enables cross-request
+//! prefix KV sharing (rust/ARCHITECTURE.md §11): committed whole prompt
+//! blocks are indexed in a prefix trie and later prompts with the same
+//! token prefix attach the resident blocks refcounted instead of
+//! re-running their prefill. Pair with `--placement prefix-affinity`
+//! so the router steers repeat prefixes to the shard already holding
+//! them. Off by default.
 //! ```
 
 use anyhow::{bail, Context, Result};
@@ -187,6 +196,15 @@ fn apply_harvest_flag(args: &Args, cfg: &mut EngineConfig) -> Result<()> {
     Ok(())
 }
 
+/// Apply `--prefix-cache on|off`: toggles cross-request prefix KV
+/// sharing (admission-time trie attach over refcounted blocks).
+fn apply_prefix_flag(args: &Args, cfg: &mut EngineConfig) -> Result<()> {
+    if let Some(v) = args.get("prefix-cache") {
+        cfg.sched.prefix_cache = parse_switch("prefix-cache", v)?;
+    }
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first() else {
@@ -215,6 +233,7 @@ fn jobs(args: &Args) -> Result<()> {
     let mut cfg = EngineConfig::sim_a100_7b();
     args.apply_sets(&mut cfg)?;
     apply_harvest_flag(args, &mut cfg)?;
+    apply_prefix_flag(args, &mut cfg)?;
     let shards = args.get_usize("shards", 4)?;
     let duration = args.get_f64("duration", 240.0)?;
     let rate = args.get_f64("rate", 2.0)?;
@@ -429,6 +448,7 @@ fn simulate(args: &Args) -> Result<()> {
     }
     args.apply_sets(&mut cfg)?;
     apply_harvest_flag(args, &mut cfg)?;
+    apply_prefix_flag(args, &mut cfg)?;
     let rate = args.get_f64("rate", 2.0)?;
     let cv = args.get_f64("cv", 1.0)?;
     let duration = args.get_f64("duration", 120.0)?;
@@ -525,6 +545,7 @@ fn serve(args: &Args) -> Result<()> {
     let mut cfg = EngineConfig::sim_a100_7b();
     args.apply_sets(&mut cfg)?;
     apply_harvest_flag(args, &mut cfg)?;
+    apply_prefix_flag(args, &mut cfg)?;
     let mut opts = ServeOptions {
         addr: args.get("addr").unwrap_or("127.0.0.1:8077").to_string(),
         shards: args.get_usize("shards", 2)?,

@@ -231,6 +231,15 @@ pub struct Recorder {
     pub harvest_decisions: u64,
     pub harvest_tightens: u64,
     pub harvest_opens: u64,
+    /// Cross-request prefix KV sharing ([`crate::kvcache::prefix`]):
+    /// admissions that attached ≥1 shared block, and the prompt tokens
+    /// whose prefill those attachments skipped.
+    pub prefix_hits: u64,
+    pub prefill_tokens_skipped: u64,
+    /// Peak GPU blocks simultaneously shared (refcount > 1) on this
+    /// shard; `merge` sums per-shard peaks (Σ per-shard peaks, not a
+    /// fleet-instant peak — the shards don't share a clock).
+    pub shared_block_residency: u64,
     /// Per-tenant completion counters for job-tagged requests (short
     /// linear list — a handful of tenants per shard).
     pub tenants: Vec<TenantCounters>,
@@ -281,6 +290,9 @@ impl Recorder {
             harvest_decisions: 0,
             harvest_tightens: 0,
             harvest_opens: 0,
+            prefix_hits: 0,
+            prefill_tokens_skipped: 0,
+            shared_block_residency: 0,
             tenants: Vec::new(),
             capture_events: true,
             ring: None,
@@ -473,6 +485,9 @@ impl Recorder {
         self.harvest_decisions += other.harvest_decisions;
         self.harvest_tightens += other.harvest_tightens;
         self.harvest_opens += other.harvest_opens;
+        self.prefix_hits += other.prefix_hits;
+        self.prefill_tokens_skipped += other.prefill_tokens_skipped;
+        self.shared_block_residency += other.shared_block_residency;
         for t in &other.tenants {
             match self.tenants.iter_mut().find(|c| c.tenant == t.tenant) {
                 Some(c) => {

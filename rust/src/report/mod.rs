@@ -135,6 +135,13 @@ pub struct Report {
     pub harvest_decisions: u64,
     pub harvest_tightens: u64,
     pub harvest_opens: u64,
+    /// Cross-request prefix KV sharing (zero with `--prefix-cache`
+    /// off): admissions that attached shared blocks, the prompt tokens
+    /// whose prefill they skipped, and the peak shared-block residency
+    /// (Σ per-shard peaks in a merged report).
+    pub prefix_hits: u64,
+    pub prefill_tokens_skipped: u64,
+    pub shared_block_residency: u64,
     /// Per-tenant completion counters for job-tagged requests.
     pub per_tenant: Vec<TenantCounters>,
     pub ttft_violations: f64,
@@ -187,6 +194,9 @@ impl Report {
             harvest_decisions: rec.harvest_decisions,
             harvest_tightens: rec.harvest_tightens,
             harvest_opens: rec.harvest_opens,
+            prefix_hits: rec.prefix_hits,
+            prefill_tokens_skipped: rec.prefill_tokens_skipped,
+            shared_block_residency: rec.shared_block_residency,
             per_tenant: rec.tenants.clone(),
             ttft_violations: rec.ttft_violation_rate(Class::Online, 1500.0),
             online_timeseries: rec.timeseries(Some(Class::Online), 15 * US_PER_SEC, dur),
@@ -246,6 +256,15 @@ impl Report {
             ("harvest_decisions", num(self.harvest_decisions as f64)),
             ("harvest_tightens", num(self.harvest_tightens as f64)),
             ("harvest_opens", num(self.harvest_opens as f64)),
+            ("prefix_hits", num(self.prefix_hits as f64)),
+            (
+                "prefill_tokens_skipped",
+                num(self.prefill_tokens_skipped as f64),
+            ),
+            (
+                "shared_block_residency",
+                num(self.shared_block_residency as f64),
+            ),
             (
                 "per_tenant",
                 arr(self.per_tenant.iter().map(TenantCounters::to_json)),

@@ -94,6 +94,12 @@ pub struct ScheduleOutcome {
     pub blocking_io_blocks: usize,
     /// Prefill-token budget that applied to offline admission.
     pub token_budget: usize,
+    /// Admissions this step that attached shared prefix blocks from the
+    /// KV manager's prefix trie.
+    pub prefix_hits: u64,
+    /// Prefill tokens those attachments covered — work the plan never
+    /// has to feed (the headline prefix-sharing speedup).
+    pub prefill_tokens_skipped: u64,
 }
 
 impl ScheduleOutcome {
@@ -108,6 +114,8 @@ impl ScheduleOutcome {
         self.blocking_io_us = 0;
         self.blocking_io_blocks = 0;
         self.token_budget = 0;
+        self.prefix_hits = 0;
+        self.prefill_tokens_skipped = 0;
     }
 }
 
@@ -535,6 +543,7 @@ impl UnifiedScheduler {
                 break;
             }
             c.kv.register(id);
+            Self::try_prefix_attach(c, out, id);
             let res = self.admit(
                 c,
                 out,
@@ -685,6 +694,7 @@ impl UnifiedScheduler {
                     continue;
                 }
                 c.kv.register(id);
+                Self::try_prefix_attach(c, out, id);
                 let res = self.admit(
                     c,
                     out,
@@ -749,6 +759,25 @@ impl UnifiedScheduler {
             && self.cfg.policy == Policy::ConServe;
         self.scratch_order = run_order;
         self.scratch_cont = cont;
+    }
+
+    /// Map a freshly-registered request's prompt onto shared prefix
+    /// blocks already resident in the KV manager's trie (no-op when the
+    /// prefix cache is off). A hit fast-forwards `ctx_len` past the
+    /// covered tokens, so the prefill planning below only feeds the
+    /// remainder — `feed_target`, `generated`, and the keyed sampling
+    /// positions are untouched, keeping token streams byte-identical to
+    /// the sharing-off run.
+    fn try_prefix_attach(c: &mut Ctx, out: &mut ScheduleOutcome, id: RequestId) {
+        let Some(r) = c.table.get_mut(id) else {
+            return;
+        };
+        let covered = c.kv.prefix_attach(id, &r.prompt);
+        if covered > 0 {
+            r.ctx_len = covered;
+            out.prefix_hits += 1;
+            out.prefill_tokens_skipped += covered as u64;
+        }
     }
 
     /// Admit the next work of `id` (prefill chunk or decode step) within

@@ -594,6 +594,15 @@ fn parse_batch_members(j: &Json) -> Option<Vec<(Vec<TokenId>, usize)>> {
 fn handle_healthz(stream: &mut TcpStream, state: &ServeState) {
     let v = state.fleet_view();
     let draining = state.admission.is_draining();
+    // prefix-cache effectiveness straight off the load board (the
+    // FleetView used for admission doesn't carry it): 0.0 both when the
+    // cache is off and before the first lookup
+    let occ = state.client.loads().fleet_occupancy();
+    let prefix_hit_rate = if occ.prefix_lookups == 0 {
+        0.0
+    } else {
+        occ.prefix_hits as f64 / occ.prefix_lookups as f64
+    };
     let body = obj(vec![
         (
             "status",
@@ -606,6 +615,8 @@ fn handle_healthz(stream: &mut TcpStream, state: &ServeState) {
         ("capacity_blocks", num((v.n_shards * v.capacity_blocks) as f64)),
         ("waiting_online", num(v.waiting_online as f64)),
         ("waiting_offline", num(v.offline_waiting as f64)),
+        ("prefix_hits", num(occ.prefix_hits as f64)),
+        ("prefix_hit_rate", num(prefix_hit_rate)),
     ]);
     let _ = respond(stream, 200, &[], &body);
 }

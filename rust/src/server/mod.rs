@@ -229,12 +229,15 @@ impl<B: ExecBackend> ServingEngine<B> {
         arrivals: ArrivalSource,
     ) -> Self {
         let swap = SwapEngine::new(backend.block_bytes(), backend.link_bandwidth());
-        let kv = KvManager::for_shard(
+        let mut kv = KvManager::for_shard(
             shard,
             cfg.mem.gpu_blocks,
             cfg.mem.host_blocks,
             cfg.mem.block_tokens,
         );
+        if cfg.sched.prefix_cache {
+            kv.enable_prefix_cache();
+        }
         let ckpt = CkptController::new(cfg.sched.ckpt_free_watermark, 64);
         // Safe-start: a fresh engine's controller begins at the tight
         // end of the clamp and actuates the scheduler's working config
@@ -541,6 +544,14 @@ impl<B: ExecBackend> ServingEngine<B> {
                 };
                 self.sched.schedule(&mut ctx, &mut out);
             }
+            // prefix-sharing accounting: admission-time attach results
+            // from this schedule pass, plus the shared-residency peak
+            self.rec.prefix_hits += out.prefix_hits;
+            self.rec.prefill_tokens_skipped += out.prefill_tokens_skipped;
+            self.rec.shared_block_residency = self
+                .rec
+                .shared_block_residency
+                .max(self.kv.shared_gpu_blocks() as u64);
             if let Some(d) = dbg.as_mut() {
                 d.last_plan = out.plan.summary();
             }
@@ -558,6 +569,11 @@ impl<B: ExecBackend> ServingEngine<B> {
                 self.steal_heat = self.steal_heat * 7 / 8;
                 if let Some(h) = &self.harvest {
                     loads.publish_budget(self.table.shard(), h.budget_permille());
+                }
+                if self.kv.prefix_enabled() {
+                    let (hits, lookups) = self.kv.prefix_stats();
+                    let digest = self.kv.prefix_digest();
+                    loads.publish_prefix(self.table.shard(), hits, lookups, &digest);
                 }
             }
 
@@ -707,6 +723,11 @@ impl<B: ExecBackend> ServingEngine<B> {
                 .commit(item.req, item.n_tokens)
                 .expect("scheduled item without grown blocks");
             r.ctx_len += item.n_tokens;
+            if self.kv.prefix_enabled() && r.ctx_len <= r.prompt_len {
+                // prefill progress committed whole prompt blocks: index
+                // them so later prompts with this prefix can attach
+                self.kv.prefix_publish(item.req, &r.prompt);
+            }
             self.rec.record_processed(now, item.class, item.n_tokens);
 
             if r.ctx_len == r.feed_target() {

@@ -51,6 +51,8 @@ use crate::backend::{CostModel, ExecBackend, SimBackend};
 use crate::batch::{tier_weight, JobBoard, JobSpec};
 use crate::clock::Clock;
 use crate::config::EngineConfig;
+use crate::kvcache::prefix::digest_insert;
+use crate::kvcache::{prefix_probes, PREFIX_DIGEST_WORDS};
 use crate::metrics::Recorder;
 use crate::profiler::LatencyProfile;
 use crate::report::Report;
@@ -61,6 +63,12 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 
 pub use placement::{LoadSnapshot, Placement};
+
+/// Cap on per-request prefix probes computed at routing/placement time:
+/// bounds the hashing cost per submission while still covering prompts
+/// far longer than any realistic shared prefix (64 blocks = 1024 tokens
+/// at the default 16-token blocks).
+pub const ROUTE_PROBE_CAP: usize = 64;
 pub use steal::{MigratedRequest, StealConfig, StealCoordinator};
 pub use supervisor::{FleetSupervisor, ShardDied};
 
@@ -95,6 +103,16 @@ struct LoadCell {
     /// via [`ShardLoads::publish_budget`], read by the admission
     /// estimator as effective offline capacity.
     budget_permille: AtomicU64,
+    /// Cumulative prefix-cache hits / lookups on this shard's engine
+    /// (prefix sharing, `kvcache::prefix`) — published via
+    /// [`ShardLoads::publish_prefix`], summed into
+    /// [`FleetOccupancy`] for the `/healthz` hit rate.
+    prefix_hits: AtomicU64,
+    prefix_lookups: AtomicU64,
+    /// Membership digest of the shard's prefix cache, word by word
+    /// (see [`LoadSnapshot::prefix_digest`]). All-zero with the prefix
+    /// cache off.
+    prefix_digest: [AtomicU64; PREFIX_DIGEST_WORDS],
 }
 
 impl Default for LoadCell {
@@ -109,6 +127,9 @@ impl Default for LoadCell {
             // full static budget until a controller says otherwise —
             // fleets without harvesting see unchanged estimates
             budget_permille: AtomicU64::new(1000),
+            prefix_hits: AtomicU64::new(0),
+            prefix_lookups: AtomicU64::new(0),
+            prefix_digest: Default::default(),
         }
     }
 }
@@ -163,6 +184,26 @@ impl ShardLoads {
             .store(permille.min(1000), Ordering::Relaxed);
     }
 
+    /// Publish shard `shard`'s prefix-cache state: cumulative attachment
+    /// hits/lookups plus the membership digest of its indexed prefix
+    /// hashes. Prefix-enabled engines post this alongside
+    /// [`publish`](Self::publish); like the budget it has its own
+    /// setter so prefix-less fleets never touch these words.
+    pub fn publish_prefix(
+        &self,
+        shard: usize,
+        hits: u64,
+        lookups: u64,
+        digest: &[u64; PREFIX_DIGEST_WORDS],
+    ) {
+        let c = &self.cells[shard];
+        c.prefix_hits.store(hits, Ordering::Relaxed);
+        c.prefix_lookups.store(lookups, Ordering::Relaxed);
+        for (cell, &w) in c.prefix_digest.iter().zip(digest) {
+            cell.store(w, Ordering::Relaxed);
+        }
+    }
+
     /// Publish count for `shard`: how many times its engine has posted a
     /// load summary. The sharded client uses advances of this counter to
     /// expire its optimistic in-flight charges (a fresh publish already
@@ -190,6 +231,7 @@ impl ShardLoads {
             offline_waiting: c.offline_waiting.load(Ordering::Relaxed),
             steal_score: c.steal_score.load(Ordering::Relaxed),
             capacity_blocks: self.capacity_blocks,
+            prefix_digest: std::array::from_fn(|i| c.prefix_digest[i].load(Ordering::Relaxed)),
         }
     }
 
@@ -216,6 +258,8 @@ impl ShardLoads {
             o.online_blocks += c.online.load(Ordering::Relaxed);
             o.waiting += c.waiting.load(Ordering::Relaxed);
             o.offline_waiting += c.offline_waiting.load(Ordering::Relaxed);
+            o.prefix_hits += c.prefix_hits.load(Ordering::Relaxed);
+            o.prefix_lookups += c.prefix_lookups.load(Ordering::Relaxed);
             budget_sum += c.budget_permille.load(Ordering::Relaxed);
         }
         o.budget_permille = budget_sum / self.cells.len().max(1) as u64;
@@ -243,6 +287,11 @@ pub struct FleetOccupancy {
     /// static `max_batch_tokens` (1000 = every shard at full static
     /// budget; lower = harvest controllers are tightening).
     pub budget_permille: u64,
+    /// Σ prefix-cache attachment hits across shards (prefix sharing;
+    /// 0 everywhere when the cache is off).
+    pub prefix_hits: u64,
+    /// Σ prefix-cache lookups across shards — the hit-rate denominator.
+    pub prefix_lookups: u64,
 }
 
 /// Trace-mode request router: assigns each request to a shard under a
@@ -292,11 +341,23 @@ impl ShardRouter {
     /// Choose a shard for `req` and charge its estimated KV footprint to
     /// that shard. Does not store the request — use [`push`](Self::push)
     /// to also bucket it.
+    ///
+    /// Under [`Placement::PrefixAffinity`] the router also hashes the
+    /// request's prompt into block-prefix probes and folds them into the
+    /// chosen shard's estimated digest — the admission-time analogue of
+    /// a live engine publishing its prefix index, so later requests with
+    /// the same prompt prefix follow the first one to its shard.
     pub fn route(&mut self, req: &Request) -> usize {
         let need = req.total_len().div_ceil(self.block_tokens) as u64;
+        let probes = match self.policy {
+            Placement::PrefixAffinity { .. } => {
+                prefix_probes(&req.prompt, self.block_tokens, ROUTE_PROBE_CAP)
+            }
+            _ => Vec::new(),
+        };
         let s = self
             .policy
-            .pick(req.class, need, req.urgency, &self.est, self.tick);
+            .pick_prefix(req.class, need, req.urgency, &self.est, self.tick, &probes);
         self.tick += 1;
         let e = &mut self.est[s];
         e.resident_blocks += need;
@@ -304,6 +365,9 @@ impl ShardRouter {
         match req.class {
             Class::Online => e.online_blocks += need,
             Class::Offline => e.offline_waiting += 1,
+        }
+        for h in probes {
+            digest_insert(&mut e.prefix_digest, h);
         }
         s
     }
@@ -765,11 +829,19 @@ impl ShardedClient {
     fn place(
         &self,
         class: Class,
-        prompt_len: usize,
+        prompt: &[TokenId],
         max_new_tokens: usize,
         urgency: u32,
     ) -> usize {
-        let need = (prompt_len + max_new_tokens).div_ceil(self.block_tokens) as u64;
+        let need = (prompt.len() + max_new_tokens).div_ceil(self.block_tokens) as u64;
+        // hash the prompt's block prefixes only under a prefix-aware
+        // policy — every other policy ignores the probes
+        let probes = match self.policy {
+            Placement::PrefixAffinity { .. } => {
+                prefix_probes(prompt, self.block_tokens, ROUTE_PROBE_CAP)
+            }
+            _ => Vec::new(),
+        };
         // submission path, off every engine's hot loop: a small snapshot
         // buffer per call is fine
         let mut snaps = Vec::with_capacity(self.clients.len());
@@ -788,9 +860,14 @@ impl ShardedClient {
             snap.online_blocks += cell.online_blocks.load(Ordering::Relaxed);
             snap.offline_waiting += cell.offline.load(Ordering::Relaxed);
         }
-        let s = self
-            .policy
-            .pick(class, need, urgency, &snaps, self.tick.fetch_add(1, Ordering::Relaxed));
+        let s = self.policy.pick_prefix(
+            class,
+            need,
+            urgency,
+            &snaps,
+            self.tick.fetch_add(1, Ordering::Relaxed),
+            &probes,
+        );
         let cell = &self.pending[s];
         cell.blocks.fetch_add(need, Ordering::Relaxed);
         match class {
@@ -806,7 +883,7 @@ impl ShardedClient {
 
     /// Route one latency-critical request to a shard.
     pub fn submit_online(&self, prompt: Vec<TokenId>, max_new_tokens: usize) -> ShardTicket {
-        let shard = self.place(Class::Online, prompt.len(), max_new_tokens, 0);
+        let shard = self.place(Class::Online, &prompt, max_new_tokens, 0);
         let ticket = self.clients[shard].submit_online(prompt, max_new_tokens);
         ShardTicket { shard, ticket }
     }
@@ -821,7 +898,7 @@ impl ShardedClient {
         prompt: Vec<TokenId>,
         max_new_tokens: usize,
     ) -> Result<ShardTicket, SubmitError> {
-        let shard = self.place(Class::Online, prompt.len(), max_new_tokens, 0);
+        let shard = self.place(Class::Online, &prompt, max_new_tokens, 0);
         let ticket = self.clients[shard].try_submit_online(prompt, max_new_tokens)?;
         Ok(ShardTicket { shard, ticket })
     }
@@ -881,7 +958,7 @@ impl ShardedClient {
         let mut tickets = Vec::with_capacity(prompts.len());
         let mut total_tokens = 0u64;
         for (prompt, max_new_tokens) in prompts {
-            let shard = self.place(Class::Offline, prompt.len(), max_new_tokens, urgency);
+            let shard = self.place(Class::Offline, &prompt, max_new_tokens, urgency);
             let req = self.clients[shard].build_job_member(
                 job,
                 tenant,
@@ -965,7 +1042,7 @@ impl ShardedClient {
         let tickets: Vec<ShardTicket> = prompts
             .into_iter()
             .map(|(prompt, max_new_tokens)| {
-                let shard = self.place(Class::Offline, prompt.len(), max_new_tokens, urgency);
+                let shard = self.place(Class::Offline, &prompt, max_new_tokens, urgency);
                 let ticket = self.clients[shard].submit_job_member(
                     job,
                     tenant,
@@ -1077,10 +1154,37 @@ mod tests {
         assert_eq!(s.offline_waiting, 2);
         assert_eq!(s.steal_score, 5);
         assert_eq!(s.capacity_blocks, 1000);
+        assert_eq!(s.prefix_digest, [0; PREFIX_DIGEST_WORDS], "prefix-less default");
         let mut all = Vec::new();
         loads.snapshot_into(&mut all);
         assert_eq!(all.len(), 3);
         assert_eq!(all[0], loads.snapshot(0));
+        // prefix publication travels word-for-word and sums fleet-wide
+        let mut digest = [0u64; PREFIX_DIGEST_WORDS];
+        digest_insert(&mut digest, 77);
+        digest_insert(&mut digest, 600);
+        loads.publish_prefix(1, 3, 9, &digest);
+        loads.publish_prefix(2, 1, 4, &[0; PREFIX_DIGEST_WORDS]);
+        assert_eq!(loads.snapshot(1).prefix_digest, digest);
+        let o = loads.fleet_occupancy();
+        assert_eq!((o.prefix_hits, o.prefix_lookups), (4, 13));
+    }
+
+    #[test]
+    fn router_prefix_affinity_steers_repeat_prompts() {
+        let cfg = EngineConfig::sim_a100_7b();
+        let mut r = ShardRouter::new(2, Placement::prefix_affinity(), &cfg);
+        let shared: Vec<TokenId> = (0..64).map(|i| i as TokenId).collect();
+        let first = r.push(Request::new(0, Class::Online, shared.clone(), 64, 8, 0));
+        // the same prefix follows the first request to its shard, even
+        // though the other shard is now emptier
+        let second = r.push(Request::new(0, Class::Online, shared, 64, 8, 1));
+        assert_eq!(first, second, "repeat prompt must follow its prefix");
+        // a cold prompt sees zero digest hits everywhere and balances
+        // load onto the emptier shard
+        let other: Vec<TokenId> = (1000..1064).map(|i| i as TokenId).collect();
+        let cold = r.push(Request::new(0, Class::Online, other, 64, 8, 2));
+        assert_ne!(cold, first, "cold prompts must still spread");
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! publish through [`ShardLoads`](super::ShardLoads) as relaxed atomics.
 //! Nothing here takes a lock.
 //!
-//! Four policies (mirroring the global admission layers of HyGen and
+//! Five policies (mirroring the global admission layers of HyGen and
 //! Echo, which route hybrid online/offline load across replicas):
 //!
 //! * [`Placement::RoundRobin`] — stateless rotation; the baseline.
@@ -21,6 +21,16 @@
 //!   offline drifts away from online-heavy shards in proportion to
 //!   their SLO-critical load) and avoid shards that would cross the
 //!   absolute `headroom` reserve line.
+//! * [`Placement::PrefixAffinity`] — prefix-aware routing for shared-
+//!   prompt traffic (`kvcache::prefix`): shards publish a compact
+//!   membership digest of their prefix-cache contents through
+//!   [`LoadSnapshot::prefix_digest`], the router hashes the incoming
+//!   prompt's block prefixes ([`crate::kvcache::prefix_probes`]) via
+//!   [`Placement::pick_prefix`], and the shard whose digest may hold
+//!   the longest leading run of those hashes wins — so repeat prompts
+//!   land where their KV already lives. Load scoring (affinity-style)
+//!   breaks ties, and a shard that cannot fit the request never wins
+//!   on digest hits alone.
 //! * [`Placement::Deadline`] — job-aware offline placement
 //!   (crate::batch): affinity's scoring plus a queue-delay penalty that
 //!   scales with the request's EDF urgency, so an urgent job request
@@ -43,6 +53,8 @@
 //! one shard (asserted by `recovery_burst_spreads_across_survivors`
 //! below).
 
+use crate::kvcache::prefix::digest_contains;
+use crate::kvcache::PREFIX_DIGEST_WORDS;
 use crate::request::{Class, URGENCY_MAX};
 
 /// Per-shard load summary consumed by [`Placement::pick`] and the
@@ -68,6 +80,11 @@ pub struct LoadSnapshot {
     pub steal_score: u64,
     /// The shard's GPU KV pool size in blocks.
     pub capacity_blocks: u64,
+    /// Membership digest of the shard's prefix cache
+    /// ([`crate::kvcache::PrefixIndex::digest`]): one-sided, so a zero
+    /// word pattern means "definitely not resident". All-zero when the
+    /// shard runs with the prefix cache off.
+    pub prefix_digest: [u64; PREFIX_DIGEST_WORDS],
 }
 
 /// Offline-score discount, in blocks, per *freshly adopted steal*: a
@@ -100,6 +117,16 @@ pub enum Placement {
         /// (offline placement avoids shards that would cross it).
         headroom: f64,
     },
+    /// Prefix-affinity: among shards that fit the request, prefer the
+    /// one whose published prefix digest may hold the longest leading
+    /// run of the prompt's block-prefix hashes (the request's KV is
+    /// already resident there); affinity-style load scores break ties.
+    /// Without probes (no prompt, or prefix cache off) this degenerates
+    /// to [`Placement::Affinity`] scoring.
+    PrefixAffinity {
+        /// Online reserve fraction, as in [`Placement::Affinity`].
+        headroom: f64,
+    },
     /// Deadline-aware job placement: affinity scoring plus an
     /// urgency-scaled queue-delay penalty per queued offline request
     /// ([`QUEUE_PENALTY_BLOCKS`]), so urgent job requests land on the
@@ -122,6 +149,11 @@ impl Placement {
         Placement::Deadline { headroom: 0.1 }
     }
 
+    /// The default prefix-affinity policy (10% online reserve per shard).
+    pub fn prefix_affinity() -> Self {
+        Placement::PrefixAffinity { headroom: 0.1 }
+    }
+
     /// Choose a shard for a request of `class` needing `need_blocks` KV
     /// blocks at full length. `urgency` is the request's EDF score
     /// (0 for standalone requests; only [`Placement::Deadline`] reads
@@ -136,10 +168,66 @@ impl Placement {
         loads: &[LoadSnapshot],
         tick: usize,
     ) -> usize {
+        self.pick_prefix(class, need_blocks, urgency, loads, tick, &[])
+    }
+
+    /// [`pick`](Self::pick) with the prompt's block-prefix hashes
+    /// ([`crate::kvcache::prefix_probes`]). Only
+    /// [`Placement::PrefixAffinity`] reads `probes`; every other policy
+    /// (and an empty slice) behaves exactly as `pick`.
+    pub fn pick_prefix(
+        &self,
+        class: Class,
+        need_blocks: u64,
+        urgency: u32,
+        loads: &[LoadSnapshot],
+        tick: usize,
+        probes: &[u64],
+    ) -> usize {
         assert!(!loads.is_empty(), "placement over zero shards");
         match *self {
             Placement::RoundRobin => tick % loads.len(),
             Placement::LeastKv => argmin(loads, |l| (l.resident_blocks, l.waiting)),
+            Placement::PrefixAffinity { headroom } => {
+                use std::cmp::Reverse;
+                // resident-prefix estimate: leading probes the shard's
+                // digest may contain. One-sided (no false negatives), so
+                // a zero score means the prefix is definitely cold there.
+                let hit_len = |l: &LoadSnapshot| {
+                    probes
+                        .iter()
+                        .take_while(|&&h| digest_contains(&l.prefix_digest, h))
+                        .count()
+                };
+                match class {
+                    Class::Online => {
+                        let fits = |l: &LoadSnapshot| {
+                            l.resident_blocks + need_blocks <= l.capacity_blocks
+                        };
+                        argmin(loads, |l| {
+                            (
+                                u8::from(!fits(l)),
+                                Reverse(hit_len(l)),
+                                l.online_blocks,
+                                l.resident_blocks,
+                            )
+                        })
+                    }
+                    Class::Offline => {
+                        let fits = |l: &LoadSnapshot| {
+                            let limit =
+                                (l.capacity_blocks as f64 * (1.0 - headroom)) as u64;
+                            l.resident_blocks + need_blocks <= limit
+                        };
+                        argmin(loads, |l| {
+                            let weighted = l
+                                .resident_blocks
+                                .saturating_add(l.online_blocks.saturating_mul(2));
+                            (u8::from(!fits(l)), Reverse(hit_len(l)), weighted, l.waiting)
+                        })
+                    }
+                }
+            }
             Placement::Affinity { headroom } | Placement::Deadline { headroom } => {
                 match class {
                     Class::Online => {
@@ -229,6 +317,9 @@ impl std::str::FromStr for Placement {
                 Ok(Placement::affinity())
             }
             "deadline" | "edf" | "deadline-aware" => Ok(Placement::deadline()),
+            "prefix" | "prefix-affinity" | "prefix_affinity" => {
+                Ok(Placement::prefix_affinity())
+            }
             other => {
                 // "affinity:H" / "deadline:H" carry an explicit headroom
                 // fraction, the form Display emits so round-trips are
@@ -250,6 +341,10 @@ impl std::str::FromStr for Placement {
                     Ok(Placement::Deadline {
                         headroom: headroom_of(h)?,
                     })
+                } else if let Some(h) = other.strip_prefix("prefix-affinity:") {
+                    Ok(Placement::PrefixAffinity {
+                        headroom: headroom_of(h)?,
+                    })
                 } else {
                     Err(anyhow::anyhow!("unknown placement policy `{other}`"))
                 }
@@ -266,6 +361,9 @@ impl std::fmt::Display for Placement {
             // explicit headroom so Display/FromStr round-trip losslessly
             Placement::Affinity { headroom } => write!(f, "affinity:{headroom}"),
             Placement::Deadline { headroom } => write!(f, "deadline:{headroom}"),
+            Placement::PrefixAffinity { headroom } => {
+                write!(f, "prefix-affinity:{headroom}")
+            }
         }
     }
 }
@@ -279,9 +377,8 @@ mod tests {
             resident_blocks: resident,
             online_blocks: online,
             waiting,
-            offline_waiting: 0,
-            steal_score: 0,
             capacity_blocks: 100,
+            ..LoadSnapshot::default()
         }
     }
 
@@ -409,8 +506,45 @@ mod tests {
     }
 
     #[test]
+    fn prefix_affinity_prefers_resident_prefixes() {
+        use crate::kvcache::prefix::digest_insert;
+        let p = Placement::prefix_affinity();
+        let probes = [111u64, 222, 333];
+        // shard 1 holds the first two prefix blocks, shard 0 none; shard
+        // 1 is heavier but the resident prefix must win
+        let mut loads = vec![snap(10, 2, 0), snap(40, 20, 0)];
+        for h in [111u64, 222] {
+            digest_insert(&mut loads[1].prefix_digest, h);
+        }
+        assert_eq!(p.pick_prefix(Class::Online, 1, 0, &loads, 0, &probes), 1);
+        assert_eq!(p.pick_prefix(Class::Offline, 1, 0, &loads, 0, &probes), 1);
+        // only the *leading* run counts: a shard holding probe 1 but not
+        // probe 0 cannot serve any prefix blocks and scores zero
+        let mut gap = vec![snap(10, 2, 0), snap(10, 2, 0)];
+        digest_insert(&mut gap[1].prefix_digest, 222);
+        assert_eq!(p.pick_prefix(Class::Online, 1, 0, &gap, 0, &probes), 0);
+        // without probes the policy degenerates to affinity scoring
+        assert_eq!(p.pick(Class::Online, 1, 0, &loads, 0), 0);
+        // digest hits never beat a shard that cannot fit the request
+        let mut full = vec![snap(5, 0, 0), snap(98, 0, 0)];
+        for h in probes {
+            digest_insert(&mut full[1].prefix_digest, h);
+        }
+        assert_eq!(p.pick_prefix(Class::Online, 8, 0, &full, 0, &probes), 0);
+    }
+
+    #[test]
     fn parse_and_display_round_trip() {
-        for s in ["rr", "least-kv", "affinity", "affinity:0.25", "deadline", "deadline:0.2"] {
+        for s in [
+            "rr",
+            "least-kv",
+            "affinity",
+            "affinity:0.25",
+            "deadline",
+            "deadline:0.2",
+            "prefix",
+            "prefix-affinity:0.25",
+        ] {
             let p: Placement = s.parse().unwrap();
             let back: Placement = p.to_string().parse().unwrap();
             assert_eq!(p, back);

@@ -11,4 +11,7 @@ pub mod trace;
 pub use datasets::{LengthSample, Lengths};
 pub use jobs::{job_trace, JobTraceConfig};
 pub use loadgen::LoadGen;
-pub use trace::{burstgpt_like_rate, flash_crowd_trace, onoff_trace, square_wave_trace, TraceEvent};
+pub use trace::{
+    burstgpt_like_rate, chat_trace, flash_crowd_trace, onoff_trace, square_wave_trace,
+    ChatTraceConfig, TraceEvent,
+};

@@ -6,6 +6,7 @@
 //! synthesize a rate curve with the same published statistics and drive a
 //! non-homogeneous gamma/Poisson arrival process from it.
 
+use crate::request::{Class, Request, TokenId};
 use crate::util::rng::Rng;
 use crate::{TimeUs, US_PER_SEC};
 
@@ -161,6 +162,102 @@ pub fn flash_crowd_trace(
     out
 }
 
+/// Knobs for [`chat_trace`].
+#[derive(Debug, Clone)]
+pub struct ChatTraceConfig {
+    pub seed: u64,
+    /// Concurrent chat sessions, started staggered across the window.
+    pub sessions: usize,
+    /// Turns per session; each turn resubmits the whole history.
+    pub turns: usize,
+    /// Shared system-prompt length (tokens) — identical across all
+    /// sessions, so it is the cross-*session* shareable prefix.
+    pub system_tokens: usize,
+    /// Fresh user tokens appended per turn.
+    pub user_tokens: usize,
+    /// Assistant-reply tokens appended to the history after each turn
+    /// (the sim backend synthesizes outputs, so the history carries a
+    /// seeded stand-in of the same length).
+    pub reply_tokens: usize,
+    /// Decode budget per turn.
+    pub max_new_tokens: usize,
+    /// Submission window (s): sessions start uniformly over the first
+    /// half; think-time between turns fills the rest.
+    pub span_s: f64,
+}
+
+impl Default for ChatTraceConfig {
+    fn default() -> Self {
+        Self {
+            seed: 0xC4A7,
+            sessions: 16,
+            turns: 6,
+            system_tokens: 96,
+            user_tokens: 24,
+            reply_tokens: 32,
+            max_new_tokens: 32,
+            span_s: 60.0,
+        }
+    }
+}
+
+/// Multi-turn chat trace with *real* prompt token vectors — the
+/// workload cross-request prefix KV sharing is built for
+/// ([`crate::kvcache::prefix`]).
+///
+/// Every session opens with the same system prompt (cross-session
+/// sharing) and each turn resubmits the full history — system prompt,
+/// prior user turns, and seeded stand-ins for the assistant replies —
+/// plus one fresh user utterance (cross-turn sharing: turn `t+1`'s
+/// prompt extends turn `t`'s). Arrivals interleave sessions: staggered
+/// starts plus seeded think-time between turns, globally sorted, so
+/// consecutive admissions usually belong to *different* sessions and a
+/// cache keyed on exact last-request state (rather than a prefix trie)
+/// would miss.
+///
+/// Requests are `Class::Online` with unique ids (stable across runs of
+/// the same config), so token streams replay byte-identically and runs
+/// with sharing on/off are directly comparable.
+pub fn chat_trace(cfg: &ChatTraceConfig) -> Vec<Request> {
+    let mut rng = Rng::new(cfg.seed);
+    // byte-level vocab: keep token values in 0..256 like the datasets
+    let tok = |rng: &mut Rng| rng.range(0, 256) as TokenId;
+    let system: Vec<TokenId> = (0..cfg.system_tokens).map(|_| tok(&mut rng)).collect();
+    let mut out = Vec::with_capacity(cfg.sessions * cfg.turns);
+    let mut id: u64 = 1;
+    for _ in 0..cfg.sessions {
+        let mut history = system.clone();
+        // stagger session starts over the first half of the window
+        let mut t_s = rng.f64() * cfg.span_s * 0.5;
+        for _ in 0..cfg.turns {
+            for _ in 0..cfg.user_tokens {
+                history.push(tok(&mut rng));
+            }
+            let prompt = history.clone();
+            let plen = prompt.len();
+            let arrival = (t_s * US_PER_SEC as f64) as TimeUs;
+            out.push(Request::new(
+                id,
+                Class::Online,
+                prompt,
+                plen,
+                cfg.max_new_tokens,
+                arrival,
+            ));
+            id += 1;
+            // stand-in assistant reply joins the history for next turn
+            for _ in 0..cfg.reply_tokens {
+                history.push(tok(&mut rng));
+            }
+            // think-time: mean half the remaining per-turn budget
+            let mean_gap = (cfg.span_s * 0.5 / cfg.turns.max(1) as f64).max(0.1);
+            t_s += rng.exp(1.0 / mean_gap);
+        }
+    }
+    out.sort_by_key(|r| r.arrival);
+    out
+}
+
 /// Summarize a trace into per-window token rates (for Fig.-1 style
 /// reporting): returns (window_start_s, requests, est_tokens_per_s).
 pub fn rate_series(
@@ -267,6 +364,64 @@ mod tests {
         );
         assert!(a.windows(2).all(|w| w[0] <= w[1]));
         assert_eq!(a, flash_crowd_trace(31, 600.0, 2.0, 300.0, 60.0, 4.0, 1.0));
+    }
+
+    #[test]
+    fn chat_trace_is_deterministic_and_sorted() {
+        let cfg = ChatTraceConfig::default();
+        let a = chat_trace(&cfg);
+        assert_eq!(a.len(), cfg.sessions * cfg.turns);
+        let b = chat_trace(&cfg);
+        assert!(
+            a.iter().zip(&b).all(|(x, y)| {
+                (x.id, x.arrival, &x.prompt) == (y.id, y.arrival, &y.prompt)
+            }),
+            "same seed must replay"
+        );
+        let other = chat_trace(&ChatTraceConfig { seed: 7, ..cfg.clone() });
+        assert!(
+            a.iter().zip(&other).any(|(x, y)| x.prompt != y.prompt),
+            "different seed must differ"
+        );
+        assert!(a.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+        let mut ids: Vec<_> = a.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), a.len(), "ids must be unique");
+        for r in &a {
+            assert_eq!(r.prompt.len(), r.prompt_len);
+        }
+    }
+
+    #[test]
+    fn chat_trace_shares_the_system_prompt_across_sessions() {
+        let cfg = ChatTraceConfig::default();
+        let a = chat_trace(&cfg);
+        let system = &a[0].prompt[..cfg.system_tokens];
+        for r in &a {
+            assert_eq!(
+                &r.prompt[..cfg.system_tokens],
+                system,
+                "every prompt opens with the shared system prompt"
+            );
+        }
+    }
+
+    #[test]
+    fn chat_trace_turns_extend_their_session_history() {
+        // one session: sorted order == turn order, so each prompt must
+        // be a strict extension of the previous one
+        let cfg = ChatTraceConfig {
+            sessions: 1,
+            turns: 5,
+            ..ChatTraceConfig::default()
+        };
+        let a = chat_trace(&cfg);
+        for w in a.windows(2) {
+            let (prev, next) = (&w[0].prompt, &w[1].prompt);
+            assert!(next.len() > prev.len(), "histories must grow");
+            assert_eq!(&next[..prev.len()], &prev[..], "turn t+1 extends turn t");
+        }
     }
 
     #[test]

@@ -1,9 +1,13 @@
 //! Property tests on KV-cache invariants: random interleavings of grow /
 //! commit / checkpoint / evict / prefetch / discard / release must never
 //! violate block conservation, double-own a block, or lose committed
-//! tokens without an explicit discard.
+//! tokens without an explicit discard. With the prefix cache enabled the
+//! same invariants must hold over *refcounted* blocks: trie + sequence
+//! references always sum to the pool refcount, shared blocks survive any
+//! one owner's eviction, and migration never detaches a shared block.
 
 use conserve::kvcache::manager::KvManager;
+use conserve::request::TokenId;
 use conserve::util::rng::Rng;
 
 #[derive(Debug)]
@@ -118,6 +122,157 @@ fn conservation_under_random_interleavings() {
                 assert_eq!(have, c, "token count drift for {id} at seed {seed} step {step}");
             }
         }
+    }
+}
+
+/// Per-id prompts with overlapping block-aligned prefixes: ids share
+/// 2..=5 leading blocks of one base prompt, then diverge into a private
+/// tail — so prefix attach genuinely hits across ids.
+fn overlapping_prompts(ids: &[u64], block_tokens: usize) -> Vec<Vec<TokenId>> {
+    let mut base_rng = Rng::new(0xBEEF);
+    let base: Vec<TokenId> = (0..6 * block_tokens)
+        .map(|_| base_rng.range(0, 256) as TokenId)
+        .collect();
+    ids.iter()
+        .map(|&id| {
+            let shared = (2 + (id as usize % 4)) * block_tokens;
+            let mut p = base[..shared].to_vec();
+            let mut tail = Rng::new(id);
+            for _ in 0..block_tokens + 5 {
+                p.push(tail.range(0, 256) as TokenId);
+            }
+            p
+        })
+        .collect()
+}
+
+/// The conservation property extended over refcounted shared blocks:
+/// the grow/commit/ckpt/evict/prefetch/discard/release mix plus prefix
+/// attach (admission sharing), publish (indexing), and export (steal
+/// migration), under random interleavings. Checks after every step that
+/// sequence-table + trie references sum exactly to pool refcounts and
+/// committed tokens never drift — i.e. a shared block is never freed
+/// under a surviving owner, never double-freed by the last one, and
+/// never torn out by migration.
+#[test]
+fn conservation_with_prefix_sharing_under_hostile_interleavings() {
+    for seed in 0..30u64 {
+        let mut rng = Rng::new(seed);
+        let mut kv = KvManager::new(64, 128, 16);
+        kv.enable_prefix_cache();
+        let ids: Vec<u64> = (1..=6).collect();
+        let prompts = overlapping_prompts(&ids, 16);
+        let mut committed: std::collections::HashMap<u64, usize> =
+            ids.iter().map(|&i| (i, 0)).collect();
+        let mut inflight: std::collections::HashMap<u64, Vec<usize>> = Default::default();
+        for id in &ids {
+            kv.register(*id);
+        }
+
+        for step in 0..400 {
+            let i = rng.range_usize(0, ids.len());
+            let id = ids[i];
+            let prompt = &prompts[i];
+            match rng.range(0, 11) {
+                0 => {
+                    let target = committed[&id] + rng.range_usize(1, 200);
+                    let _ = kv.grow(id, target);
+                }
+                1 => {
+                    let n = rng.range_usize(1, 40);
+                    let cap = kv.seq(id).map(|s| s.gpu.len() * 16).unwrap_or(0);
+                    let cur = committed[&id];
+                    let fully_resident = kv
+                        .seq(id)
+                        .map(|s| s.gpu_blocks() == s.gpu.len())
+                        .unwrap_or(false);
+                    if fully_resident && cur + n <= cap {
+                        kv.commit(id, n).unwrap();
+                        *committed.get_mut(&id).unwrap() += n;
+                    }
+                }
+                2 => {
+                    if let Some(&idx) = kv.checkpoint_candidates(id).first() {
+                        if kv.begin_ckpt(id, idx).is_ok() {
+                            inflight.entry(id).or_default().push(idx);
+                        }
+                    }
+                }
+                3 => {
+                    if let Some(v) = inflight.get_mut(&id) {
+                        if let Some(idx) = v.pop() {
+                            kv.finish_ckpt(id, idx);
+                        }
+                    }
+                }
+                4 => {
+                    // preempt: drops only this sequence's references;
+                    // shared ancestors must survive under other owners
+                    if inflight.get(&id).is_none_or(|v| v.is_empty()) {
+                        kv.evict_gpu(id);
+                    }
+                }
+                5 => {
+                    for (idx, _hb) in kv.prefetch_candidates(id) {
+                        if kv.begin_prefetch(id, idx).is_err() {
+                            break;
+                        }
+                    }
+                }
+                6 => {
+                    if inflight.get(&id).is_none_or(|v| v.is_empty()) {
+                        kv.discard(id);
+                        *committed.get_mut(&id).unwrap() = 0;
+                    }
+                }
+                7 => {
+                    if inflight.get(&id).is_none_or(|v| v.is_empty()) {
+                        let keep = rng.range(0, 2) == 0;
+                        kv.release(id, keep);
+                        if !keep {
+                            *committed.get_mut(&id).unwrap() = 0;
+                            kv.register(id);
+                        }
+                    }
+                }
+                8 => {
+                    // admission-time attach: only a fresh sequence may
+                    // map onto shared blocks, and it jumps committed
+                    let got = kv.prefix_attach(id, prompt);
+                    if got > 0 {
+                        assert_eq!(committed[&id], 0, "attach over live state");
+                        *committed.get_mut(&id).unwrap() = got;
+                    }
+                }
+                9 => kv.prefix_publish(id, prompt),
+                _ => {
+                    // steal migration round-trip: export must refuse
+                    // while any GPU block (shared ones included) is
+                    // resident; a legal export re-imports losslessly
+                    if let Ok(tokens) = kv.export_host(id) {
+                        if kv.import_host(id, tokens).is_err() {
+                            *committed.get_mut(&id).unwrap() = 0;
+                        }
+                    }
+                }
+            }
+            assert!(
+                kv.check_conservation(),
+                "conservation violated at seed {seed} step {step}"
+            );
+            for (&id, &c) in &committed {
+                let have = kv.seq(id).map(|s| s.tokens).unwrap_or(0);
+                assert_eq!(have, c, "token count drift for {id} at seed {seed} step {step}");
+            }
+        }
+
+        // teardown: every owner releases; cache-only trie references
+        // must be the sole survivors and still conserve
+        for id in &ids {
+            kv.release(*id, false);
+        }
+        assert!(kv.check_conservation(), "teardown violated at seed {seed}");
+        assert_eq!(kv.shared_gpu_blocks(), 0, "no owners left => nothing shared");
     }
 }
 

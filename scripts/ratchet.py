@@ -95,7 +95,14 @@ def main():
                 results = json.load(f)
             value = dig(results, spec["path"])
         except FileNotFoundError:
-            print(f"ratchet: {name}: {spec['file']} not found (bench not run?) -- skipped")
+            # a baseline-covered bench that produced no result file is a
+            # regression signal too (a renamed output or a bench dropped
+            # from CI would otherwise escape the ratchet silently)
+            print(
+                f"ratchet: WARNING: {name}: {spec['file']} not found in {args.dir} "
+                f"(bench not run, or its output file was renamed?)"
+            )
+            warnings += 1
             missing += 1
             continue
         except (KeyError, IndexError, TypeError) as e:
