@@ -1,0 +1,206 @@
+//! `bench_trace` — flight-recorder acceptance bench: tracing must be
+//! (nearly) free, and the exported artifacts must be structurally
+//! sound.
+//!
+//! Runs the skewed steal workload (offline burst pinned to shard 0, so
+//! migrations are guaranteed) twice per repetition — tracing off, then
+//! tracing on — in alternation, and takes the best wall time per mode
+//! so a single noisy neighbour cannot decide the verdict.
+//!
+//! Acceptance (asserted here):
+//!
+//! * tracing-on throughput is ≥ 97 % of tracing-off (the emit path is
+//!   a few relaxed atomic stores — it must not show up);
+//! * the Perfetto export validates: a JSON array, one named track per
+//!   shard, `X` iteration slices with durations, and flow ids that
+//!   link a donate on one track to an absorb on another (requests are
+//!   followable across migration);
+//! * request spans are well-formed: every span reaches a terminal
+//!   event, none are orphaned.
+//!
+//! Results go to `BENCH_trace.json` (schema: rust/PERF.md §11); the
+//! Perfetto file itself goes to `BENCH_trace.perfetto.json`. Scale
+//! with `TRACE_BENCH_REQS` (default 20_000; CI smoke uses a small
+//! value).
+
+use conserve::config::EngineConfig;
+use conserve::request::{Class, Request};
+use conserve::shard::{run_sharded_traces_with, ShardedRun, StealConfig};
+use conserve::trace::{analyze_spans, perfetto, FleetTracer};
+use conserve::util::json::{num, obj, Json};
+use conserve::util::rng::Rng;
+use conserve::workload::trace::onoff_trace;
+use std::sync::Arc;
+use std::time::Instant;
+
+const N_SHARDS: usize = 4;
+
+/// Online spread evenly, offline burst pinned to shard 0 (guarantees
+/// steal migrations, hence cross-track flow arrows in the export).
+fn skewed_traces(n_reqs: usize) -> (Vec<Vec<Request>>, f64) {
+    let n_online = n_reqs * 3 / 4;
+    let n_offline = n_reqs - n_online;
+    let on_rate = 60.0;
+    let duration_s = 2.0 * n_online as f64 / on_rate;
+    let arrivals = onoff_trace(42, duration_s, 30.0, on_rate, 2.0);
+    let mut rng = Rng::new(7);
+    let mut traces: Vec<Vec<Request>> = (0..N_SHARDS).map(|_| Vec::new()).collect();
+    let mut next_id = 1u64;
+    for (i, &t) in arrivals.iter().take(n_online).enumerate() {
+        let input = rng.range_usize(64, 256);
+        let output = rng.range_usize(8, 24);
+        traces[i % N_SHARDS].push(Request::new(next_id, Class::Online, vec![], input, output, t));
+        next_id += 1;
+    }
+    for _ in 0..n_offline {
+        let input = rng.range_usize(512, 2048);
+        let output = rng.range_usize(32, 96);
+        traces[0].push(Request::new(next_id, Class::Offline, vec![], input, output, 0));
+        next_id += 1;
+    }
+    (traces, duration_s)
+}
+
+fn run_mode(
+    cfg: &EngineConfig,
+    traces: &[Vec<Request>],
+    duration_s: f64,
+    tracer: Option<Arc<FleetTracer>>,
+) -> (f64, ShardedRun) {
+    let t0 = Instant::now();
+    let (run, _) = run_sharded_traces_with(
+        cfg,
+        traces.to_vec(),
+        duration_s,
+        Some(StealConfig::default()),
+        |e| {
+            if let Some(t) = &tracer {
+                e.set_tracer(t.shard(e.shard()));
+            }
+        },
+        |_| (),
+    );
+    (t0.elapsed().as_secs_f64(), run)
+}
+
+fn main() {
+    let n_reqs: usize = std::env::var("TRACE_BENCH_REQS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(20_000);
+    let (traces, duration_s) = skewed_traces(n_reqs);
+    let n_events: usize = traces.iter().map(Vec::len).sum();
+    let cfg = EngineConfig::sim_a100_7b();
+    // ring sized to hold the whole run so the span check is exact
+    let ring_cap = (n_events * 16 / N_SHARDS + 65_536).next_power_of_two();
+    let reps: usize = if n_events <= 20_000 { 5 } else { 3 };
+
+    println!("=== bench_trace ({n_events} requests, {N_SHARDS} shards, {reps} reps/mode) ===");
+    let mut best_off = f64::INFINITY;
+    let mut best_on = f64::INFINITY;
+    let mut last_tracer: Option<Arc<FleetTracer>> = None;
+    let mut last_run: Option<ShardedRun> = None;
+    for rep in 0..reps {
+        let (w_off, run_off) = run_mode(&cfg, &traces, duration_s * 6.0, None);
+        let tracer = FleetTracer::new(N_SHARDS, ring_cap);
+        let (w_on, run_on) = run_mode(&cfg, &traces, duration_s * 6.0, Some(tracer.clone()));
+        let same = run_off.merged.online_finished + run_off.merged.offline_finished
+            == run_on.merged.online_finished + run_on.merged.offline_finished;
+        assert!(same, "tracing must not change what the fleet serves");
+        println!(
+            "  rep {rep}: off {w_off:.3}s  on {w_on:.3}s  ({} events, {} dropped)",
+            tracer.total_events(),
+            tracer.dropped()
+        );
+        best_off = best_off.min(w_off);
+        best_on = best_on.min(w_on);
+        last_tracer = Some(tracer);
+        last_run = Some(run_on);
+    }
+    let tracer = last_tracer.unwrap();
+    let run = last_run.unwrap();
+    // same work both modes, so the throughput ratio is the wall ratio
+    let throughput_ratio = best_off / best_on;
+    println!(
+        "best wall: off {best_off:.3}s  on {best_on:.3}s  → tracing-on throughput {:.1}% of off",
+        throughput_ratio * 100.0
+    );
+
+    // ---- acceptance: overhead ----
+    assert!(
+        throughput_ratio >= 0.97,
+        "tracing costs more than 3% throughput: on/off ratio {throughput_ratio:.4}"
+    );
+
+    // ---- acceptance: export validity ----
+    assert!(
+        run.merged.steals_in > 0,
+        "the skewed trace must trigger migrations (got none)"
+    );
+    let text = perfetto::export_perfetto(&tracer);
+    let st = perfetto::validate(&text).expect("export must be valid trace-event JSON");
+    assert_eq!(st.tracks, N_SHARDS, "one named track per shard");
+    assert!(st.iterations > 0, "iteration slices must be present");
+    assert!(st.flow_starts > 0 && st.flow_ends > 0, "steal flows must be present");
+    assert!(
+        st.flows_linked > 0,
+        "flow ids must link donates to absorbs across tracks"
+    );
+
+    // ---- acceptance: span well-formedness ----
+    let had_drops = tracer.dropped() > 0;
+    let rep = analyze_spans(&tracer.merged(), &[], had_drops, had_drops);
+    assert!(rep.spans > 0);
+    assert!(
+        rep.ok(),
+        "orphan request spans in the trace: {:?} (of {})",
+        &rep.orphans[..rep.orphans.len().min(8)],
+        rep.spans
+    );
+    println!(
+        "perfetto: {} events on {} tracks, {} iterations, {} linked flows; {} spans ({} finished)",
+        st.events, st.tracks, st.iterations, st.flows_linked, rep.spans, rep.finished
+    );
+
+    // ---- emit BENCH_trace.json + the Perfetto artifact ----
+    let json = obj(vec![
+        ("requests", num(n_events as f64)),
+        ("shards", num(N_SHARDS as f64)),
+        ("reps_per_mode", num(reps as f64)),
+        ("ring_capacity", num(ring_cap as f64)),
+        ("wall_off_s", num(best_off)),
+        ("wall_on_s", num(best_on)),
+        ("throughput_ratio", num(throughput_ratio)),
+        ("trace_events", num(tracer.total_events() as f64)),
+        ("trace_dropped", num(tracer.dropped() as f64)),
+        (
+            "perfetto",
+            obj(vec![
+                ("events", num(st.events as f64)),
+                ("tracks", num(st.tracks as f64)),
+                ("iterations", num(st.iterations as f64)),
+                ("flow_starts", num(st.flow_starts as f64)),
+                ("flow_ends", num(st.flow_ends as f64)),
+                ("flows_linked", num(st.flows_linked as f64)),
+            ]),
+        ),
+        ("perfetto_ok", num(1.0)),
+        (
+            "spans",
+            obj(vec![
+                ("spans", num(rep.spans as f64)),
+                ("finished", num(rep.finished as f64)),
+                ("killed", num(rep.killed as f64)),
+                ("orphans", num(rep.orphans.len() as f64)),
+            ]),
+        ),
+    ]);
+    let out_path = std::env::var("TRACE_BENCH_OUT").unwrap_or_else(|_| "BENCH_trace.json".into());
+    std::fs::write(&out_path, json.to_string()).expect("write BENCH_trace.json");
+    let pf_path = std::env::var("TRACE_BENCH_PERFETTO_OUT")
+        .unwrap_or_else(|_| "BENCH_trace.perfetto.json".into());
+    std::fs::write(&pf_path, &text).expect("write perfetto artifact");
+    println!("\nwrote {out_path} and {pf_path}");
+    let _ = Json::parse(&json.to_string()).expect("self-emitted json parses");
+    println!("bench_trace OK");
+}

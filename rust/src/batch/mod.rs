@@ -577,6 +577,12 @@ pub struct JobRunOpts {
     pub restamp_every_us: u64,
     /// Service-rate estimate behind urgency (re-)computation.
     pub svc_tok_per_s: f64,
+    /// Fleet flight recorder: each shard's engine attaches
+    /// `tracer.shard(i)` before serving, so admission/scheduling/steal
+    /// decisions land in the per-shard rings. Shared across recovery
+    /// rounds ([`run_jobs_with_recovery`]) so one export covers the
+    /// crash and the replay.
+    pub tracer: Option<Arc<crate::trace::FleetTracer>>,
 }
 
 impl JobRunOpts {
@@ -591,6 +597,7 @@ impl JobRunOpts {
             ckpt_every: 0,
             restamp_every_us: 0,
             svc_tok_per_s: NOMINAL_TOK_PER_S,
+            tracer: None,
         }
     }
 }
@@ -694,6 +701,7 @@ pub fn run_jobs_with_store(
     let restamp_every_us = opts.restamp_every_us;
     let svc = opts.svc_tok_per_s;
     let plan = faults.cloned();
+    let tracer = opts.tracer.clone();
     let setup_board = board.clone();
     let fleet = run_sharded_traces_supervised(
         cfg,
@@ -702,6 +710,9 @@ pub fn run_jobs_with_store(
         opts.steal,
         |e| {
             e.set_job_board(setup_board.clone());
+            if let Some(t) = &tracer {
+                e.set_tracer(t.shard(e.shard()));
+            }
             if collect_state {
                 e.set_retain_finished(true);
             }
@@ -839,6 +850,20 @@ pub fn run_jobs_with_recovery(
     let mut replay = Vec::new();
     let resumed_requests = jm.resume(&state, &mut replay);
     let survivors = opts.n_shards.saturating_sub(first.deaths.len()).max(1);
+    if let Some(t) = &opts.tracer {
+        // mark the crash→replay seam in the shared flight record: one
+        // Recover event per death (a = dead shard, b = replayed work),
+        // stamped on the survivor fleet's first shard at its epoch
+        for d in &first.deaths {
+            t.shard(0).emit(
+                0,
+                crate::trace::EventKind::Recover,
+                0,
+                d.shard as u64,
+                resumed_requests as u64,
+            );
+        }
+    }
     // graceful degradation: the survivor fleet sheds offline first
     let mut rcfg = cfg.clone();
     rcfg.sched.max_batch_tokens = (rcfg.sched.max_batch_tokens * 3 / 4).max(1);

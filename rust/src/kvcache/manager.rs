@@ -769,6 +769,12 @@ impl KvManager {
         self.prefix.as_ref().map(|p| p.len()).unwrap_or(0)
     }
 
+    /// Cumulative trie blocks freed by reclaim under memory pressure
+    /// (drives the engine's `PrefixReclaim` trace events).
+    pub fn prefix_reclaimed_blocks(&self) -> u64 {
+        self.prefix.as_ref().map(|p| p.reclaimed_blocks()).unwrap_or(0)
+    }
+
     /// GPU blocks referenced by more than one owner right now (O(1)).
     pub fn shared_gpu_blocks(&self) -> usize {
         self.gpu.shared_count()

@@ -93,6 +93,9 @@ pub struct PrefixIndex {
     order: VecDeque<u64>,
     hits: u64,
     lookups: u64,
+    /// Cumulative blocks freed by [`Self::reclaim`] (observability:
+    /// the engine emits a `PrefixReclaim` trace event on each delta).
+    reclaimed: u64,
     digest: [u64; PREFIX_DIGEST_WORDS],
     dirty: bool,
 }
@@ -137,6 +140,11 @@ impl PrefixIndex {
         (self.hits, self.lookups)
     }
 
+    /// Cumulative blocks freed by [`Self::reclaim`].
+    pub fn reclaimed_blocks(&self) -> u64 {
+        self.reclaimed
+    }
+
     /// Membership digest over the indexed hashes, recomputed only when
     /// the index changed since the last call.
     pub fn digest(&mut self) -> [u64; PREFIX_DIGEST_WORDS] {
@@ -179,6 +187,7 @@ impl PrefixIndex {
                 self.order.push_back(h);
             }
         }
+        self.reclaimed += freed as u64;
         freed
     }
 }

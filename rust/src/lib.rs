@@ -47,6 +47,7 @@ pub mod runtime;
 pub mod scheduler;
 pub mod server;
 pub mod shard;
+pub mod trace;
 pub mod util;
 pub mod workload;
 

@@ -5,7 +5,8 @@
 //!                   [--cv CV] [--duration S] [--offline-pool N]
 //!                   [--shards N] [--placement rr|least-kv|affinity[:headroom]]
 //!                   [--steal on|off] [--harvest on|off[:SLO_US]]
-//!                   [--prefix-cache on|off] [--set key=value ...]
+//!                   [--prefix-cache on|off] [--trace-out FILE]
+//!                   [--set key=value ...]
 //!     Run a co-serving experiment on the simulated A100/Llama-2-7B
 //!     testbed and print the report. With --shards N > 1 the trace is
 //!     routed across N independent worker shards (each its own
@@ -16,7 +17,8 @@
 //! conserve serve    [--addr HOST:PORT] [--shards N] [--duration S]
 //!                   [--state-dir DIR] [--ckpt-every K]
 //!                   [--admission on|off] [--harvest on|off[:SLO_US]]
-//!                   [--prefix-cache on|off] [--set key=value ...]
+//!                   [--prefix-cache on|off] [--trace-out FILE]
+//!                   [--set key=value ...]
 //!     Run the live HTTP front door over a sharded simulated fleet:
 //!     OpenAI-style `POST /v1/completions` (chunked token streaming
 //!     with `"stream": true`), `POST /v1/batches` for offline jobs
@@ -37,8 +39,12 @@
 //!     Run the offline profiler against the PJRT backend and print the
 //!     fitted latency model.
 //!
-//! conserve trace    [--duration S] [--rate R]
-//!     Emit the BurstGPT-like rate series (Figure 1 data).
+//! conserve trace    [--duration S] [--rate R] | --in FILE [--top K]
+//!     Without --in: emit the BurstGPT-like rate series (Figure 1
+//!     data). With --in FILE: summarize a Perfetto trace previously
+//!     written by --trace-out — event counts per track, the top-K
+//!     slowest engine iterations (estimated vs actual latency), and
+//!     per-request span timelines.
 //!
 //! conserve jobs     [--jobs N] [--tenants K] [--span S] [--shards N]
 //!                   [--placement deadline|affinity|...] [--steal on|off]
@@ -46,7 +52,7 @@
 //!                   [--state-dir DIR] [--resume] [--ckpt-every K]
 //!                   [--restamp-every S] [--faults SPEC]
 //!                   [--harvest on|off[:SLO_US]] [--prefix-cache on|off]
-//!                   [--set key=value ...]
+//!                   [--trace-out FILE] [--set key=value ...]
 //!     Run a multi-tenant batch-job experiment (deadline-aware job
 //!     manager over the sharded fleet) and print per-job deadline
 //!     attainment. --sched urgency enables EDF placement + fair-share
@@ -71,6 +77,14 @@
 //! live online TTFT/TPOT percentiles instead of the static
 //! `max_batch_tokens`. `--harvest on:SLO_US` overrides the controller's
 //! TTFT target in microseconds (default: the `ttft_ms` SLO).
+//!
+//! `--trace-out FILE` (simulate / serve / jobs) attaches the fleet
+//! flight recorder (rust/ARCHITECTURE.md §12) — a fixed-size per-shard
+//! ring of binary trace events covering every scheduling decision — and
+//! writes the run's merged Perfetto/Chrome trace-event JSON to FILE at
+//! exit (open in https://ui.perfetto.dev, or summarize with
+//! `conserve trace --in FILE`). Simulated clocks make two identical-seed
+//! runs produce byte-identical trace files.
 //!
 //! `--prefix-cache on` (simulate / serve / jobs) enables cross-request
 //! prefix KV sharing (rust/ARCHITECTURE.md §11): committed whole prompt
@@ -274,6 +288,10 @@ fn jobs(args: &Args) -> Result<()> {
     }
     let ckpt_every = args.get_usize("ckpt-every", 50)? as u64;
     let restamp_s = args.get_f64("restamp-every", if urgency_mode { 5.0 } else { 0.0 })?;
+    let trace_out = args.get("trace-out").map(std::path::PathBuf::from);
+    let tracer = trace_out
+        .as_ref()
+        .map(|_| conserve::trace::FleetTracer::new(shards, conserve::trace::DEFAULT_RING_EVENTS));
 
     // A fresh (non-resume) run must not append into an existing state
     // dir: job and submission ids restart from the same bases every
@@ -351,6 +369,7 @@ fn jobs(args: &Args) -> Result<()> {
         ckpt_every: if store.is_some() { ckpt_every } else { 0 },
         restamp_every_us: (restamp_s * 1e6) as u64,
         svc_tok_per_s: svc,
+        tracer: tracer.clone(),
     };
     let board = jm.board().clone();
     let store = store.map(|s| std::sync::Arc::new(std::sync::Mutex::new(s)));
@@ -387,6 +406,25 @@ fn jobs(args: &Args) -> Result<()> {
     };
     for d in &out.deaths {
         println!("  SHARD DEATH: {d}");
+    }
+    if let (Some(path), Some(t)) = (&trace_out, &tracer) {
+        if !out.deaths.is_empty() {
+            if let Some(dir) = &state_dir {
+                match conserve::trace::flight_dump(dir, "jobs-death", t, conserve::trace::DEFAULT_DUMP_LAST)
+                {
+                    Ok(p) => println!("  flight record dumped to {}", p.display()),
+                    Err(e) => eprintln!("  flight dump failed: {e}"),
+                }
+            }
+        }
+        std::fs::write(path, conserve::trace::perfetto::export_perfetto(t))
+            .with_context(|| format!("writing trace to {}", path.display()))?;
+        println!(
+            "trace: wrote {} events ({} dropped) to {}",
+            t.total_events(),
+            t.dropped(),
+            path.display()
+        );
     }
     if !out.failed_online.is_empty() {
         println!(
@@ -458,10 +496,13 @@ fn simulate(args: &Args) -> Result<()> {
         args.get("placement").unwrap_or("affinity").parse()?;
     let steal = parse_switch("steal", args.get("steal").unwrap_or("off"))?
         .then(conserve::StealConfig::default);
+    let trace_out = args.get("trace-out").map(std::path::PathBuf::from);
 
     let mut lg = workload::LoadGen::new(cfg.seed, rate, cv);
     let arrivals = lg.arrivals_until(duration);
-    if shards > 1 {
+    // tracing rides the sharded runner (the only path with a tracer
+    // attach hook); a single-shard traced run is just a 1-shard fleet
+    if shards > 1 || trace_out.is_some() {
         return simulate_sharded(
             cfg,
             shards,
@@ -470,6 +511,7 @@ fn simulate(args: &Args) -> Result<()> {
             offline_pool,
             duration,
             steal,
+            trace_out,
         );
     }
     let report = SimExperiment {
@@ -497,8 +539,9 @@ fn simulate_sharded(
     offline_pool: usize,
     duration: f64,
     steal: Option<conserve::StealConfig>,
+    trace_out: Option<std::path::PathBuf>,
 ) -> Result<()> {
-    use conserve::shard::run_sharded_sim_steal;
+    use conserve::shard::run_sharded_sim_traced;
 
     let exp = SimExperiment {
         cfg: cfg.clone(),
@@ -509,7 +552,28 @@ fn simulate_sharded(
         duration_s: duration,
     };
     let stealing = steal.is_some();
-    let run = run_sharded_sim_steal(&cfg, shards, placement, exp.events(), duration, steal);
+    let tracer = trace_out
+        .as_ref()
+        .map(|_| conserve::trace::FleetTracer::new(shards, conserve::trace::DEFAULT_RING_EVENTS));
+    let run = run_sharded_sim_traced(
+        &cfg,
+        shards,
+        placement,
+        exp.events(),
+        duration,
+        steal,
+        tracer.clone(),
+    );
+    if let (Some(path), Some(t)) = (&trace_out, &tracer) {
+        std::fs::write(path, conserve::trace::perfetto::export_perfetto(t))
+            .with_context(|| format!("writing trace to {}", path.display()))?;
+        println!(
+            "trace: wrote {} events ({} dropped) to {}",
+            t.total_events(),
+            t.dropped(),
+            path.display()
+        );
+    }
     for (i, r) in run.per_shard.iter().enumerate() {
         println!("-- shard {i} ({} requests) --", run.shard_requests[i]);
         print_report(r);
@@ -552,6 +616,7 @@ fn serve(args: &Args) -> Result<()> {
         duration_s: args.get_f64("duration", 0.0)?,
         state_dir: args.get("state-dir").map(std::path::PathBuf::from),
         ckpt_every: args.get_usize("ckpt-every", 50)? as u64,
+        trace_out: args.get("trace-out").map(std::path::PathBuf::from),
         ..ServeOptions::default()
     };
     if !parse_switch("admission", args.get("admission").unwrap_or("on"))? {
@@ -675,6 +740,16 @@ fn profile(args: &Args) -> Result<()> {
 }
 
 fn trace(args: &Args) -> Result<()> {
+    // `--in FILE`: summarize a Perfetto trace written by --trace-out
+    // instead of emitting the synthetic BurstGPT rate series.
+    if let Some(path) = args.get("in") {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading trace {path}"))?;
+        let top_k = args.get_usize("top", 10)?;
+        let max_spans = args.get_usize("spans", 20)?;
+        print!("{}", conserve::trace::perfetto::summarize(&text, top_k, max_spans)?);
+        return Ok(());
+    }
     let duration = args.get_f64("duration", 900.0)?;
     let rate = args.get_f64("rate", 2.0)?;
     let arrivals = workload::trace::burstgpt_like_arrivals(42, duration, rate, 1.0);

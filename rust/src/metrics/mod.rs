@@ -156,6 +156,17 @@ pub struct TenantCounters {
 }
 
 impl TenantCounters {
+    /// Fraction of this tenant's deadline-carrying requests that met
+    /// their deadline (1.0 when none carried one).
+    pub fn attainment(&self) -> f64 {
+        let total = self.deadline_met + self.deadline_missed;
+        if total == 0 {
+            1.0
+        } else {
+            self.deadline_met as f64 / total as f64
+        }
+    }
+
     /// The per-tenant JSON row shared by `Report::to_json` and the
     /// bench emitters — one place to extend when a counter is added.
     pub fn to_json(&self) -> crate::util::json::Json {

@@ -66,6 +66,8 @@ use crate::server::admission::{
 use crate::server::api::CLIENT_TICKET_BIT;
 use crate::server::{ServingEngine, StreamEvent, StreamSink};
 use crate::shard::{sharded_channel, Placement, ShardedClient};
+use crate::trace::prometheus::{write_family, write_sample, MetricsHub};
+use crate::trace::{flight_dump, perfetto, EventKind, FleetTracer, DEFAULT_DUMP_LAST};
 use crate::util::json::{arr, num, obj, Json};
 use crate::TimeUs;
 use anyhow::{Context, Result};
@@ -116,6 +118,13 @@ pub struct ServeOptions {
     /// Cap on how long a connection may wait for its completion before
     /// the server cancels the request and answers `504`.
     pub request_timeout_ms: u64,
+    /// Write a Perfetto/Chrome trace-event JSON of the run here at
+    /// shutdown (`--trace-out`). Tracing itself is always on (the ring
+    /// is a fixed-size flight recorder feeding `/metrics` and
+    /// post-mortem dumps); this only controls the export.
+    pub trace_out: Option<PathBuf>,
+    /// Per-track flight-recorder ring capacity (events).
+    pub trace_cap: usize,
 }
 
 impl Default for ServeOptions {
@@ -131,6 +140,8 @@ impl Default for ServeOptions {
             max_header_bytes: 8 << 10,
             max_body_bytes: 256 << 10,
             request_timeout_ms: 120_000,
+            trace_out: None,
+            trace_cap: crate::trace::DEFAULT_RING_EVENTS,
         }
     }
 }
@@ -221,12 +232,51 @@ struct ServeState {
     shard_dead: Vec<AtomicBool>,
     requests_served: AtomicU64,
     store: Option<Arc<Mutex<JobStore>>>,
+    /// Fleet flight recorder: one ring per shard plus a front-door
+    /// track for admission verdicts. Always on (fixed memory).
+    tracer: Arc<FleetTracer>,
+    /// Live per-shard metric cells behind `GET /metrics`.
+    metrics: Arc<MetricsHub>,
+    /// One-shot latch per post-mortem dump trigger, so a TTFT-violation
+    /// burst or a run of shard deaths writes one dump, not thousands.
+    dumped_ttft_burst: AtomicBool,
     opts: ServeOptions,
+}
+
+/// Trace payload code for a shed/reject reason (`a` word of
+/// `ShedOnline` / `JobReject` events).
+fn shed_code(r: ShedReason) -> u64 {
+    match r {
+        ShedReason::RateLimit => 0,
+        ShedReason::QueueFull => 1,
+        ShedReason::Occupancy => 2,
+        ShedReason::Draining => 3,
+    }
 }
 
 impl ServeState {
     fn fleet_view(&self) -> FleetView {
         FleetView::from(self.client.loads().fleet_occupancy())
+    }
+
+    /// Emit an admission-side event on the front-door trace track.
+    /// Timestamped off the serve clock (real time), like every engine
+    /// event in this deployment mode.
+    fn front_emit(&self, kind: EventKind, sid: u64, a: u64, b: u64) {
+        if let Some(front) = self.tracer.front() {
+            front.emit(self.clock.now(), kind, sid, a, b);
+        }
+    }
+
+    /// Write a post-mortem flight-recorder dump (`flight-{tag}.jsonl`
+    /// under the state dir): the newest events of every track. Quiet
+    /// no-op without a state dir.
+    fn dump_flight(&self, tag: &str) {
+        if let Some(dir) = &self.opts.state_dir {
+            if let Err(e) = flight_dump(dir, tag, &self.tracer, DEFAULT_DUMP_LAST) {
+                eprintln!("flight dump {tag} failed: {e}");
+            }
+        }
     }
 
     fn dead_shards(&self) -> usize {
@@ -241,6 +291,9 @@ impl ServeState {
     /// 503 instead of hanging until the request timeout.
     fn fail_shard(&self, shard: usize) {
         self.shard_dead[shard].store(true, Ordering::Release);
+        // post-mortem first: the dump captures the dead shard's final
+        // ring (including its ShardDeath event) before the hub churns
+        self.dump_flight(&format!("shard{shard}-death"));
         let mut hub = self.hub.lock().unwrap();
         let mut failed = self.failed_online.lock().unwrap();
         hub.retain(|&sid, slot| {
@@ -474,6 +527,21 @@ fn respond(
     stream.flush()
 }
 
+/// Plain-text response (the Prometheus exposition format is not JSON,
+/// so `/metrics` cannot ride on [`respond`]).
+fn respond_text(stream: &mut TcpStream, status: u16, content_type: &str, body: &str) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        status,
+        status_reason(status),
+        content_type,
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
 fn error_body(kind: &str, fields: Vec<(&str, Json)>) -> Json {
     let mut inner = vec![("type", Json::Str(kind.to_string()))];
     inner.extend(fields);
@@ -603,6 +671,15 @@ fn handle_healthz(stream: &mut TcpStream, state: &ServeState) {
     } else {
         occ.prefix_hits as f64 / occ.prefix_lookups as f64
     };
+    // per-tenant deadline attainment off the live metric cells, keyed
+    // by tenant id (deterministic order: merged_tenants sorts)
+    let tenant_pairs: Vec<(String, Json)> = state
+        .metrics
+        .merged_tenants()
+        .iter()
+        .map(|t| (t.tenant.to_string(), num(t.attainment())))
+        .collect();
+    let tenants = Json::Obj(tenant_pairs.into_iter().collect());
     let body = obj(vec![
         (
             "status",
@@ -617,8 +694,61 @@ fn handle_healthz(stream: &mut TcpStream, state: &ServeState) {
         ("waiting_offline", num(v.offline_waiting as f64)),
         ("prefix_hits", num(occ.prefix_hits as f64)),
         ("prefix_hit_rate", num(prefix_hit_rate)),
+        // live harvest posture: mean offline token budget across
+        // shards, permille of the static budget (1000 = wide open)
+        ("harvest_budget_permille", num(occ.budget_permille as f64)),
+        ("deadline_attainment", num(state.metrics.deadline_attainment())),
+        ("tenant_deadline_attainment", tenants),
     ]);
     let _ = respond(stream, 200, &[], &body);
+}
+
+/// `GET /metrics`: Prometheus text exposition — the engines' live cells
+/// ([`MetricsHub::render_into`]) plus the front door's own families.
+fn handle_metrics(stream: &mut TcpStream, state: &ServeState) {
+    let mut out = String::with_capacity(8 << 10);
+    state.metrics.render_into(&mut out);
+    let occ = state.client.loads().fleet_occupancy();
+    write_family(
+        &mut out,
+        "conserve_harvest_budget_permille",
+        "Mean live offline token budget across shards (permille of static)",
+        "gauge",
+    );
+    write_sample(&mut out, "conserve_harvest_budget_permille", "", occ.budget_permille as f64);
+    let hit_rate = if occ.prefix_lookups == 0 {
+        0.0
+    } else {
+        occ.prefix_hits as f64 / occ.prefix_lookups as f64
+    };
+    write_family(
+        &mut out,
+        "conserve_prefix_hit_rate",
+        "Fleet prefix-cache attach hit rate",
+        "gauge",
+    );
+    write_sample(&mut out, "conserve_prefix_hit_rate", "", hit_rate);
+    let c = state.admission.counters();
+    let front: &[(&str, &str, &str, u64)] = &[
+        ("conserve_http_requests_total", "counter", "HTTP requests handled (any route)", state.requests_served.load(Ordering::Relaxed)),
+        ("conserve_accepted_online_total", "counter", "Online requests accepted past admission", state.accepted_online.load(Ordering::Relaxed)),
+        ("conserve_completed_online_total", "counter", "Accepted online requests completed", state.completed_online.load(Ordering::Relaxed)),
+        ("conserve_cancelled_online_total", "counter", "Accepted online requests cancelled", state.cancelled_online.load(Ordering::Relaxed)),
+        ("conserve_failed_online_total", "counter", "Accepted online requests stranded by shard deaths", state.failed_count.load(Ordering::Relaxed)),
+        ("conserve_shed_online_total", "counter", "Online requests shed at admission", c.shed_online),
+        ("conserve_jobs_accepted_total", "counter", "Batch jobs accepted", c.jobs_accepted),
+        ("conserve_jobs_downtiered_total", "counter", "Batch jobs admitted best-effort (deadline infeasible)", c.jobs_downtiered),
+        ("conserve_jobs_rejected_total", "counter", "Batch jobs rejected", c.jobs_rejected),
+        ("conserve_inflight_connections", "gauge", "Open HTTP connections", state.inflight.load(Ordering::Relaxed)),
+        ("conserve_dead_shards", "gauge", "Shards currently dead", state.dead_shards() as u64),
+        ("conserve_trace_events_total", "counter", "Trace events emitted (all tracks)", state.tracer.total_events()),
+        ("conserve_trace_dropped_total", "counter", "Trace events overwritten in the rings", state.tracer.dropped()),
+    ];
+    for (name, typ, help, v) in front {
+        write_family(&mut out, name, help, typ);
+        write_sample(&mut out, name, "", *v as f64);
+    }
+    let _ = respond_text(stream, 200, "text/plain; version=0.0.4", &out);
 }
 
 fn handle_drain(stream: &mut TcpStream, state: &ServeState) {
@@ -653,6 +783,7 @@ fn handle_completions(mut stream: TcpStream, state: &Arc<ServeState>, body: &[u8
         reason,
     } = state.admission.admit_online(&view, state.clock.now())
     {
+        state.front_emit(EventKind::ShedOnline, 0, shed_code(reason), retry_after_ms);
         respond_shed(&mut stream, retry_after_ms, reason);
         return;
     }
@@ -661,6 +792,7 @@ fn handle_completions(mut stream: TcpStream, state: &Arc<ServeState>, body: &[u8
         Err(_) => {
             // bounded submission channel at capacity — shed rather
             // than block the accept path
+            state.front_emit(EventKind::ShedOnline, 0, shed_code(ShedReason::QueueFull), 100);
             let _ = respond(
                 &mut stream,
                 503,
@@ -672,6 +804,7 @@ fn handle_completions(mut stream: TcpStream, state: &Arc<ServeState>, body: &[u8
     };
     state.accepted_online.fetch_add(1, Ordering::Relaxed);
     let sid = ticket.ticket;
+    state.front_emit(EventKind::AdmitOnline, sid, ticket.shard as u64, 0);
     {
         // adopt the slot (the sink may already have created it)
         let mut hub = state.hub.lock().unwrap();
@@ -860,6 +993,7 @@ fn handle_batch_submit(stream: &mut TcpStream, state: &ServeState, body: &[u8]) 
             // job is correlatable in the tenant's logs
             let job = state.client.reserve_job(n_requests, tenant, deadline);
             state.client.retire_job(job);
+            state.front_emit(EventKind::JobReject, job, shed_code(reason), retry_after_ms);
             let status = if reason == ShedReason::Draining { 503 } else { 429 };
             let secs = retry_after_ms.div_ceil(1000).max(1);
             let mut body = error_body(
@@ -915,6 +1049,16 @@ fn handle_batch_submit(stream: &mut TcpStream, state: &ServeState, body: &[u8]) 
                 }
             }
             state.client.dispatch_job(prepared);
+            state.front_emit(
+                if status_str == "accepted" {
+                    EventKind::JobAccept
+                } else {
+                    EventKind::JobDownTier
+                },
+                job,
+                est_ms,
+                n_requests,
+            );
             let body = obj(vec![
                 ("id", num(job as f64)),
                 ("status", Json::Str(status_str.to_string())),
@@ -981,11 +1125,12 @@ fn handle_connection(mut stream: TcpStream, state: &Arc<ServeState>) {
     };
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => handle_healthz(&mut stream, state),
+        ("GET", "/metrics") => handle_metrics(&mut stream, state),
         ("POST", "/drain") => handle_drain(&mut stream, state),
         ("POST", "/v1/completions") => handle_completions(stream, state, &req.body),
         ("POST", "/v1/batches") => handle_batch_submit(&mut stream, state, &req.body),
         ("GET", p) if p.starts_with("/v1/batches/") => handle_batch_status(&mut stream, state, p),
-        (_, "/healthz" | "/drain" | "/v1/completions" | "/v1/batches") => {
+        (_, "/healthz" | "/metrics" | "/drain" | "/v1/completions" | "/v1/batches") => {
             let _ = respond(&mut stream, 405, &[], &error_body("method_not_allowed", vec![]));
         }
         _ => {
@@ -1139,6 +1284,8 @@ impl HttpServer {
         let cancels: Vec<Arc<Mutex<Vec<u64>>>> = (0..n_shards)
             .map(|_| Arc::new(Mutex::new(Vec::new())))
             .collect();
+        let tracer = FleetTracer::with_front(n_shards, opts.trace_cap);
+        let metrics = MetricsHub::new(n_shards);
         let state = Arc::new(ServeState {
             client,
             admission: AdmissionController::new(opts.admission.clone()),
@@ -1156,6 +1303,9 @@ impl HttpServer {
             shard_dead: (0..n_shards).map(|_| AtomicBool::new(false)).collect(),
             requests_served: AtomicU64::new(0),
             store: store.clone(),
+            tracer,
+            metrics,
+            dumped_ttft_burst: AtomicBool::new(false),
             opts,
         });
 
@@ -1182,11 +1332,16 @@ impl HttpServer {
                     engine.set_stream_sink(make_sink(st.clone(), shard));
                     engine.set_cancel_queue(st.cancels[shard].clone());
                     engine.set_drain_flag(st.engine_drain.clone());
+                    engine.set_tracer(st.tracer.shard(shard));
+                    engine.set_live_stats(st.metrics.shard(shard));
                     if let Some(store) = &st.store {
                         engine.set_ckpt_sink(store.clone(), ckpt_every);
                     }
                     let end = engine.run(TimeUs::MAX);
                     let (outs, ckpts) = engine.drain_to_store();
+                    // exact final scrape (the in-loop publish is
+                    // one iteration behind by construction)
+                    st.metrics.shard(shard).publish_all(&engine.rec);
                     (std::mem::take(&mut engine.rec), end, outs, ckpts)
                 }));
                 match result {
@@ -1245,6 +1400,20 @@ impl HttpServer {
                     state.drain_requested.store(true, Ordering::Release);
                 }
             }
+            // TTFT-violation burst: any shard's published online P99
+            // far past the SLO latches one post-mortem flight dump (the
+            // incident's ring, not an ever-growing series of them)
+            if !state.dumped_ttft_burst.load(Ordering::Relaxed) {
+                let burst_us = (cfg.sched.slo.ttft_ms * 1_000.0 * 5.0) as u64;
+                let violated = state
+                    .metrics
+                    .cells()
+                    .iter()
+                    .any(|s| s.p99_ttft_us.load(Ordering::Relaxed) > burst_us);
+                if violated && !state.dumped_ttft_burst.swap(true, Ordering::Relaxed) {
+                    state.dump_flight("ttft-burst");
+                }
+            }
             if state.drain_requested.load(Ordering::Acquire)
                 && state.inflight.load(Ordering::Acquire) == 0
             {
@@ -1276,6 +1445,16 @@ impl HttpServer {
         }
         for t in shard_threads {
             let _ = t.join();
+        }
+
+        // flight record of the whole run at drain (the serve analogue
+        // of a black box readout), and the optional Perfetto export —
+        // both after the join, so every ring is final and tear-free
+        state.dump_flight("drain");
+        if let Some(path) = &state.opts.trace_out {
+            if let Err(e) = std::fs::write(path, perfetto::export_perfetto(&state.tracer)) {
+                eprintln!("writing trace to {} failed: {e}", path.display());
+            }
         }
 
         // admission outcomes ride on the merged recorder so the serve

@@ -20,9 +20,10 @@
 //! The loop is allocation-free in steady state: requests live in a slab
 //! arena ([`RequestArena`]) whose slots the KV manager shares, the
 //! [`ScheduleOutcome`] and every I/O / candidate list are persistent
-//! buffers reused across iterations, and debug-only bookkeeping is fully
-//! gated behind `CONSERVE_DEBUG` (checked once at construction). See
-//! `rust/PERF.md`.
+//! buffers reused across iterations, and observability goes through the
+//! lock-free trace ring ([`crate::trace`], attached via
+//! [`ServingEngine::set_tracer`] — a handful of relaxed atomic stores
+//! per event, nothing when detached). See `rust/PERF.md`.
 //!
 //! One engine serves one worker shard. Multi-worker deployments run N
 //! engines ([`ServingEngine::for_shard`]) behind the routing layer in
@@ -34,7 +35,7 @@ pub mod admission;
 pub mod api;
 pub mod http;
 
-use crate::backend::{ExecBackend, ExecOutcome, IterationPlan, PlanSummary, SafepointAction};
+use crate::backend::{ExecBackend, ExecOutcome, IterationPlan, SafepointAction};
 use crate::batch::{FinishedOutput, JobBoard, JobStore};
 use crate::clock::Clock;
 use crate::config::EngineConfig;
@@ -46,6 +47,7 @@ use crate::scheduler::harvest::{HarvestConfig, HarvestController, Rule as Harves
 use crate::scheduler::{budget, preempt, Ctx, Policy, ScheduleOutcome, UnifiedScheduler};
 use crate::shard::steal::{MigratedRequest, StealCoordinator};
 use crate::shard::ShardLoads;
+use crate::trace::{prometheus, prometheus::ShardStats as LiveShardStats, EventKind, ShardTracer};
 use crate::util::fault::FaultInjector;
 use crate::TimeUs;
 use std::collections::BTreeMap;
@@ -90,12 +92,22 @@ pub enum StreamEvent {
 /// Stream-event sink (see [`ServingEngine::set_stream_sink`]).
 pub type StreamSink = Box<dyn FnMut(StreamEvent)>;
 
-/// Debug-only loop bookkeeping; only materialized (and only paid for)
-/// when `CONSERVE_DEBUG` is set.
-#[derive(Default)]
-struct DebugStats {
-    last_print: TimeUs,
-    last_plan: PlanSummary,
+/// Trace event code for a request class (`a`/`b` payload convention:
+/// `Online = 0`, `Offline = 1` everywhere a class rides in a trace word).
+#[inline]
+fn class_code(c: Class) -> u64 {
+    match c {
+        Class::Online => 0,
+        Class::Offline => 1,
+    }
+}
+
+/// Pack two counters into one trace payload word (`hi << 32 | lo`),
+/// saturating each half at `u32::MAX` so a pathological value cannot
+/// bleed into the other half.
+#[inline]
+fn pack2(hi: u64, lo: u64) -> u64 {
+    (hi.min(u32::MAX as u64) << 32) | lo.min(u32::MAX as u64)
 }
 
 pub struct ServingEngine<B: ExecBackend> {
@@ -117,9 +129,19 @@ pub struct ServingEngine<B: ExecBackend> {
     on_token: Option<TokenCallback>,
     /// Last iteration's estimate (drives the I/O budget of §4.5).
     last_iter_est_us: u64,
-    /// `CONSERVE_DEBUG` checked once — the run loop never calls the
-    /// (syscall-backed) env lookup.
-    debug: bool,
+    /// This shard's lock-free flight-recorder ring
+    /// ([`set_tracer`](Self::set_tracer)): every decision point emits a
+    /// compact event (a few relaxed atomic stores). `None` — and
+    /// zero-cost — when tracing is off.
+    tracer: Option<Arc<ShardTracer>>,
+    /// Live metrics mirror for the Prometheus `/metrics` endpoint
+    /// ([`set_live_stats`](Self::set_live_stats)): counters publish every
+    /// iteration, quantiles/tenants every
+    /// [`prometheus::QUANTILE_EVERY`] iterations.
+    live: Option<Arc<LiveShardStats>>,
+    /// Prefix blocks reclaimed as of the last loop pass — the engine
+    /// emits one `PrefixReclaim` event per positive delta.
+    last_prefix_reclaims: u64,
     /// When false, finished requests are removed from the arena at
     /// commit time and their slots recycled — flat memory on
     /// million-request traces.
@@ -267,7 +289,9 @@ impl<B: ExecBackend> ServingEngine<B> {
             arrivals,
             on_token: None,
             last_iter_est_us: 10_000,
-            debug: std::env::var("CONSERVE_DEBUG").is_ok(),
+            tracer: None,
+            live: None,
+            last_prefix_reclaims: 0,
             retain_finished: true,
             prefetch_watch: Vec::new(),
             loads: None,
@@ -307,6 +331,36 @@ impl<B: ExecBackend> ServingEngine<B> {
     /// per iteration.
     pub fn set_shard_loads(&mut self, loads: Arc<ShardLoads>) {
         self.loads = Some(loads);
+    }
+
+    /// Attach this shard's flight-recorder ring
+    /// ([`crate::trace::ShardTracer`], usually
+    /// `fleet.shard(self.shard())` of a
+    /// [`FleetTracer`](crate::trace::FleetTracer)). Every decision point
+    /// of the loop then emits a compact binary event — admission to the
+    /// queues, prefill chunks, per-iteration plan + est/actual latency,
+    /// preemptions, steals, checkpoints, harvest retunes, prefix
+    /// attach/publish/reclaim, death and recovery. Timestamps come from
+    /// this engine's [`Clock`], so simulated traces are deterministic.
+    pub fn set_tracer(&mut self, tracer: Arc<ShardTracer>) {
+        self.tracer = Some(tracer);
+    }
+
+    /// Attach the live metrics cell this engine publishes its
+    /// [`Recorder`] aggregates into (the Prometheus `/metrics` surface,
+    /// [`crate::trace::prometheus::MetricsHub`]). Counter publishes are
+    /// ~20 relaxed stores per iteration; quantile/tenant publishes run
+    /// every [`prometheus::QUANTILE_EVERY`] iterations.
+    pub fn set_live_stats(&mut self, cell: Arc<LiveShardStats>) {
+        self.live = Some(cell);
+    }
+
+    /// Emit one trace event if a tracer is attached (no-op otherwise).
+    #[inline]
+    fn emit(&self, t: TimeUs, kind: EventKind, sid: u64, a: u64, b: u64) {
+        if let Some(tr) = &self.tracer {
+            tr.emit(t, kind, sid, a, b);
+        }
     }
 
     /// Attach the fleet's work-stealing coordinator
@@ -432,16 +486,16 @@ impl<B: ExecBackend> ServingEngine<B> {
         // The ScheduleOutcome (plan + victim lists) lives across
         // iterations so its buffers recycle their capacity.
         let mut out = ScheduleOutcome::default();
-        let mut dbg: Option<DebugStats> = if self.debug {
-            Some(DebugStats::default())
-        } else {
-            None
-        };
         loop {
             let now = self.clock.now();
             self.rec.engine_iters += 1;
             if let Some(f) = &self.fault {
                 if f.should_kill(self.rec.engine_iters) {
+                    // the flight recorder's last word: the supervisor's
+                    // ShardDied payload carries this same iteration, so
+                    // post-mortem dumps and supervision agree on where
+                    // the shard stopped
+                    self.emit(now, EventKind::ShardDeath, 0, self.rec.engine_iters, 0);
                     // outside every lock: an injected death can never
                     // poison shared state (inboxes, the store mutex)
                     panic!(
@@ -449,30 +503,6 @@ impl<B: ExecBackend> ServingEngine<B> {
                         crate::util::fault::INJECTED_PANIC_MARKER,
                         self.table.shard(),
                         self.rec.engine_iters
-                    );
-                }
-            }
-            if let Some(d) = dbg.as_mut() {
-                if now >= d.last_print + 5_000_000 {
-                    d.last_print = now;
-                    let head = self
-                        .sched
-                        .offline_head()
-                        .and_then(|id| self.table.get(id).map(|r| (id, r.state, r.residence)));
-                    eprintln!(
-                        "[t={:>7.1}s it={}] online_q={} offline_q={} running={} gpu_free={}/{} host_free={} table={} plan={:?} head={head:?} h2d_inflight={}",
-                        now as f64 / 1e6,
-                        self.rec.engine_iters,
-                        self.sched.online_waiting(),
-                        self.sched.offline_waiting(),
-                        self.sched.running_ids().len(),
-                        self.kv.gpu_free(),
-                        self.kv.gpu_total(),
-                        self.kv.host_free(),
-                        self.table.len(),
-                        d.last_plan,
-                        head.map(|(id, _, _)| self.swap.inflight_for(id, Direction::H2D))
-                            .unwrap_or(0),
                     );
                 }
             }
@@ -525,9 +555,20 @@ impl<B: ExecBackend> ServingEngine<B> {
                     self.sched.cfg.max_batch_tokens = h.budget();
                     self.sched.cfg.offline_chunk = h.chunk();
                     self.rec.harvest_decisions += 1;
+                    // trace payload: a = audit id (1-based index into
+                    // the controller's audit log, which just recorded
+                    // this decision), b = the budget permille actuated
+                    let audit_id = h.audit_log().len() as u64;
+                    let permille = h.budget_permille();
                     match rule {
-                        HarvestRule::Tighten => self.rec.harvest_tightens += 1,
-                        HarvestRule::Open => self.rec.harvest_opens += 1,
+                        HarvestRule::Tighten => {
+                            self.rec.harvest_tightens += 1;
+                            self.emit(now, EventKind::HarvestTighten, 0, audit_id, permille);
+                        }
+                        HarvestRule::Open => {
+                            self.rec.harvest_opens += 1;
+                            self.emit(now, EventKind::HarvestOpen, 0, audit_id, permille);
+                        }
                         HarvestRule::Hold => {}
                     }
                 }
@@ -552,8 +593,27 @@ impl<B: ExecBackend> ServingEngine<B> {
                 .rec
                 .shared_block_residency
                 .max(self.kv.shared_gpu_blocks() as u64);
-            if let Some(d) = dbg.as_mut() {
-                d.last_plan = out.plan.summary();
+            if out.prefix_hits > 0 {
+                self.emit(
+                    now,
+                    EventKind::PrefixAttach,
+                    0,
+                    out.prefix_hits,
+                    out.prefill_tokens_skipped,
+                );
+            }
+            if self.kv.prefix_enabled() {
+                let reclaimed = self.kv.prefix_reclaimed_blocks();
+                if reclaimed > self.last_prefix_reclaims {
+                    self.emit(
+                        now,
+                        EventKind::PrefixReclaim,
+                        0,
+                        reclaimed - self.last_prefix_reclaims,
+                        0,
+                    );
+                    self.last_prefix_reclaims = reclaimed;
+                }
             }
             if let Some(loads) = &self.loads {
                 loads.publish(
@@ -576,6 +636,17 @@ impl<B: ExecBackend> ServingEngine<B> {
                     loads.publish_prefix(self.table.shard(), hits, lookups, &digest);
                 }
             }
+            if let Some(cell) = &self.live {
+                // live Prometheus mirror: counters every iteration (a
+                // batch of relaxed stores), quantiles and per-tenant
+                // counters on a coarser cadence (they walk histogram
+                // buckets / take a mutex)
+                cell.publish_counters(&self.rec);
+                if self.rec.engine_iters % prometheus::QUANTILE_EVERY == 0 {
+                    cell.publish_quantiles(&self.rec);
+                    cell.publish_tenants(&self.rec);
+                }
+            }
 
             self.apply_victims(&out, now);
 
@@ -592,16 +663,29 @@ impl<B: ExecBackend> ServingEngine<B> {
 
             // ---- execute with safepoints (Algorithm 2) ----
             let sched_at = self.clock.now();
-            let est = self.profile.estimate_us(&out.plan.summary());
+            let summary = out.plan.summary();
+            let est = self.profile.estimate_us(&summary);
             self.last_iter_est_us = est.max(1_000);
             let outcome = self.execute_plan(&out.plan, sched_at, est);
+            let done_at = self.clock.now();
 
             match outcome {
                 Ok(o) if o.completed => {
+                    // plan shape + estimated-vs-actual latency; the
+                    // Perfetto exporter unpacks this into a duration
+                    // slice per iteration
+                    self.emit(
+                        done_at,
+                        EventKind::Iteration,
+                        0,
+                        pack2(summary.prefill_tokens as u64, summary.decode_seqs as u64),
+                        pack2(est, done_at.saturating_sub(sched_at)),
+                    );
                     self.commit(&out.plan, &o);
                 }
                 Ok(_aborted) => {
                     self.rec.layer_aborts += 1;
+                    self.emit(done_at, EventKind::LayerAbort, 0, summary.prefill_tokens as u64, 0);
                     // nothing committed; scheduler re-plans next loop with
                     // the online arrivals now visible
                 }
@@ -631,12 +715,18 @@ impl<B: ExecBackend> ServingEngine<B> {
                 self.prefetch_watch.push(id);
             }
         }
+        // Preempt trace payload: a = mode (0 discard/recompute,
+        // 1 evict-to-checkpoint, 2 blocking swap-out)
         for &id in &out.discarded {
+            let sid = self.table.get(id).map(|r| r.submitted_id).unwrap_or(0);
+            self.emit(now, EventKind::Preempt, sid, 0, 0);
             self.backend.drop_request(id);
             self.swap.drop_request(id);
             self.rec.preemptions += 1;
         }
         for &id in &out.evicted {
+            let sid = self.table.get(id).map(|r| r.submitted_id).unwrap_or(0);
+            self.emit(now, EventKind::Preempt, sid, 1, 0);
             self.rec.preemptions += 1;
             // data already mirrored by incremental checkpoints; free
             // the device copy (prefetch will restore it)
@@ -644,6 +734,8 @@ impl<B: ExecBackend> ServingEngine<B> {
         }
         for &id in &out.swapped_out {
             // blocking D2H of every resident block (vLLM++ path)
+            let sid = self.table.get(id).map(|r| r.submitted_id).unwrap_or(0);
+            self.emit(now, EventKind::Preempt, sid, 2, 0);
             let seq_tokens = self.kv.seq(id).map(|s| s.tokens).unwrap_or(0);
             let blocks = seq_tokens.div_ceil(self.kv.block_tokens);
             for b in 0..blocks {
@@ -682,6 +774,7 @@ impl<B: ExecBackend> ServingEngine<B> {
         let sched = &mut self.sched;
         let table = &mut self.table;
         let profile = &self.profile;
+        let tracer = self.tracer.clone();
         let slo_us = (self.cfg.sched.slo.ttft_ms * 1000.0) as u64;
         let chunk = self.cfg.sched.chunk_size;
         let layerwise = self.cfg.sched.layerwise_preempt;
@@ -690,6 +783,15 @@ impl<B: ExecBackend> ServingEngine<B> {
             // arrivals become visible at safepoints (§4.3)
             arrivals.poll_each(now, &mut |req| {
                 let class = req.class;
+                if let Some(tr) = &tracer {
+                    tr.emit(
+                        now,
+                        EventKind::QueueEnter,
+                        req.submitted_id,
+                        class_code(class),
+                        req.prompt_len as u64,
+                    );
+                }
                 let id = table.insert(req);
                 sched.enqueue(id, class);
             });
@@ -722,11 +824,33 @@ impl<B: ExecBackend> ServingEngine<B> {
             self.kv
                 .commit(item.req, item.n_tokens)
                 .expect("scheduled item without grown blocks");
+            if item.n_tokens > 1 {
+                // a prefill chunk (decode commits exactly one token);
+                // b carries the context length *before* this chunk
+                if let Some(tr) = &self.tracer {
+                    tr.emit(
+                        now,
+                        EventKind::PrefillChunk,
+                        r.submitted_id,
+                        item.n_tokens as u64,
+                        r.ctx_len as u64,
+                    );
+                }
+            }
             r.ctx_len += item.n_tokens;
             if self.kv.prefix_enabled() && r.ctx_len <= r.prompt_len {
                 // prefill progress committed whole prompt blocks: index
                 // them so later prompts with this prefix can attach
                 self.kv.prefix_publish(item.req, &r.prompt);
+                if let Some(tr) = &self.tracer {
+                    tr.emit(
+                        now,
+                        EventKind::PrefixPublish,
+                        r.submitted_id,
+                        0,
+                        r.ctx_len as u64,
+                    );
+                }
             }
             self.rec.record_processed(now, item.class, item.n_tokens);
 
@@ -743,6 +867,15 @@ impl<B: ExecBackend> ServingEngine<B> {
                     r.first_token_at = Some(now);
                     let ttft = now.saturating_sub(r.arrival);
                     self.rec.record_first_token(now, class, ttft);
+                    if let Some(tr) = &self.tracer {
+                        tr.emit(
+                            now,
+                            EventKind::FirstToken,
+                            r.submitted_id,
+                            ttft,
+                            class_code(class),
+                        );
+                    }
                     // harvest controller observes *online* latency only:
                     // offline latency is the thing being traded away
                     if class == Class::Online {
@@ -821,6 +954,7 @@ impl<B: ExecBackend> ServingEngine<B> {
                     }
                 }
                 if done {
+                    self.emit(now, EventKind::Finish, sid, class_code(class), gen);
                     self.rec.record_finished(class);
                     if job != 0 || deadline > 0 {
                         self.note_job_finish(job, tenant, deadline, gen, now);
@@ -911,6 +1045,9 @@ impl<B: ExecBackend> ServingEngine<B> {
                         self.swap.drop_request(id);
                         self.table.remove(id);
                         self.rec.cancelled += 1;
+                        if let Some(tr) = &self.tracer {
+                            tr.emit(now, EventKind::Abort, *sid, class_code(class), 0);
+                        }
                         if let Some(sink) = self.stream_sink.as_mut() {
                             sink(StreamEvent::Aborted {
                                 sid: *sid,
@@ -944,6 +1081,7 @@ impl<B: ExecBackend> ServingEngine<B> {
         let Some(sink) = self.ckpt_sink.clone() else {
             return (0, 0);
         };
+        let now = self.clock.now();
         let mut store = sink.lock().unwrap();
         let (mut outs, mut ckpts) = (0u64, 0u64);
         for r in self.table.values() {
@@ -976,6 +1114,17 @@ impl<B: ExecBackend> ServingEngine<B> {
                         self.flushed.insert(r.submitted_id, r.generated);
                         self.rec.ckpt_flush_records += 1;
                         ckpts += 1;
+                        // terminal for this shard's span: the request
+                        // leaves the arena world as a cold checkpoint
+                        if let Some(tr) = &self.tracer {
+                            tr.emit(
+                                now,
+                                EventKind::Drain,
+                                r.submitted_id,
+                                r.generated as u64,
+                                0,
+                            );
+                        }
                     }
                 }
             }
@@ -1108,16 +1257,15 @@ impl<B: ExecBackend> ServingEngine<B> {
                     .kv
                     .seq(id)
                     .is_some_and(|s| s.gpu_blocks() >= s.tokens.div_ceil(bt));
+                let tokens = self.kv.seq(id).map(|s| s.tokens).unwrap_or(0);
                 let r = self.table.get_mut(id).unwrap();
                 if resident {
                     r.residence = KvResidence::Gpu;
                 } else {
-                    if self.debug {
-                        eprintln!(
-                            "[repair] req {id}: prefetch holes (tokens={}, gpu_blocks={:?}) -> recompute",
-                            self.kv.seq(id).map(|s| s.tokens).unwrap_or(0),
-                            self.kv.seq(id).map(|s| s.gpu_blocks())
-                        );
+                    // prefetch holes (lost host copies): discard to the
+                    // recompute path rather than linger in the queue
+                    if let Some(tr) = &self.tracer {
+                        tr.emit(now, EventKind::Repair, r.submitted_id, tokens as u64, 0);
                     }
                     r.discard_to_recompute();
                     self.kv.discard(id);
@@ -1176,6 +1324,7 @@ impl<B: ExecBackend> ServingEngine<B> {
         // one-shot injected torn write: consumed only when a checkpoint
         // record is actually about to be written, so a flush tick with
         // nothing to say cannot silently eat the armed fault
+        let flushed_before = self.rec.ckpt_flush_records;
         let mut store = sink.lock().unwrap();
         for r in self.table.values() {
             if r.job == 0 {
@@ -1214,6 +1363,10 @@ impl<B: ExecBackend> ServingEngine<B> {
                     }
                 }
             }
+        }
+        let wrote = self.rec.ckpt_flush_records - flushed_before;
+        if wrote > 0 {
+            self.emit(self.clock.now(), EventKind::CkptFlush, 0, wrote, 0);
         }
     }
 
@@ -1290,8 +1443,18 @@ impl<B: ExecBackend> ServingEngine<B> {
 
     fn drain_arrivals(&mut self, now: TimeUs) {
         let (arrivals, table, sched) = (&mut self.arrivals, &mut self.table, &mut self.sched);
+        let tracer = &self.tracer;
         arrivals.poll_each(now, &mut |req| {
             let class = req.class;
+            if let Some(tr) = tracer {
+                tr.emit(
+                    now,
+                    EventKind::QueueEnter,
+                    req.submitted_id,
+                    class_code(class),
+                    req.prompt_len as u64,
+                );
+            }
             let id = table.insert(req);
             sched.enqueue(id, class);
         });
@@ -1376,6 +1539,7 @@ impl<B: ExecBackend> ServingEngine<B> {
         let shard = self.table.shard();
         if self.sched.offline_waiting() <= st.config().hungry_below {
             if let Some(donor) = st.pick_donor(shard) {
+                self.emit(self.clock.now(), EventKind::StealDemand, 0, donor as u64, 0);
                 st.post_demand(shard, donor, st.config().budget_per_iter);
             }
         }
@@ -1460,6 +1624,15 @@ impl<B: ExecBackend> ServingEngine<B> {
                 .expect("stealable victim must be live in the arena");
             self.rec.steals_out += 1;
             self.rec.stolen_ckpt_tokens += ckpt_tokens as u64;
+            // flow start: the thief's StealAbsorb for the same sid closes
+            // the arrow across shard tracks in the Perfetto view
+            self.emit(
+                self.clock.now(),
+                EventKind::StealDonate,
+                req.submitted_id,
+                0,
+                ckpt_tokens as u64,
+            );
             out.push(MigratedRequest {
                 portable: PortableRequest::detach(req, ckpt_tokens),
                 kv: kv_blob,
@@ -1487,6 +1660,14 @@ impl<B: ExecBackend> ServingEngine<B> {
             let MigratedRequest { portable, kv } = m;
             let ckpt_tokens = portable.ckpt_tokens;
             let req = portable.into_request();
+            // flow end for the donor's StealDonate with the same sid
+            self.emit(
+                self.clock.now(),
+                EventKind::StealAbsorb,
+                req.submitted_id,
+                0,
+                ckpt_tokens as u64,
+            );
             let id = self.table.insert(req);
             if ckpt_tokens > 0 {
                 match self.kv.import_host(id, ckpt_tokens) {

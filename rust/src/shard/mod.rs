@@ -439,11 +439,40 @@ pub fn run_sharded_sim_steal(
     duration_s: f64,
     steal: Option<StealConfig>,
 ) -> ShardedRun {
+    run_sharded_sim_traced(cfg, n_shards, policy, events, duration_s, steal, None)
+}
+
+/// [`run_sharded_sim_steal`] with an optional fleet flight recorder
+/// ([`crate::trace::FleetTracer`]; one ring per shard, attached before
+/// serving). Each shard's virtual clock starts at 0, so two runs over
+/// the same seed produce byte-identical trace exports.
+#[allow(clippy::too_many_arguments)]
+pub fn run_sharded_sim_traced(
+    cfg: &EngineConfig,
+    n_shards: usize,
+    policy: Placement,
+    events: Vec<Request>,
+    duration_s: f64,
+    steal: Option<StealConfig>,
+    tracer: Option<Arc<crate::trace::FleetTracer>>,
+) -> ShardedRun {
     let mut router = ShardRouter::new(n_shards, policy, cfg);
     for r in events {
         router.push(r);
     }
-    run_sharded_traces(cfg, router.into_traces(), duration_s, steal)
+    run_sharded_traces_with(
+        cfg,
+        router.into_traces(),
+        duration_s,
+        steal,
+        |engine| {
+            if let Some(t) = &tracer {
+                engine.set_tracer(t.shard(engine.shard()));
+            }
+        },
+        |_| (),
+    )
+    .0
 }
 
 /// Drive one shard to completion under the steal protocol: serve until

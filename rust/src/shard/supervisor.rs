@@ -50,6 +50,18 @@ pub struct ShardDied {
     pub payload: String,
 }
 
+impl ShardDied {
+    /// Engine iteration at death, when the payload carries one. Injected
+    /// kills panic with `"...: shard S at iteration N"` (see
+    /// [`crate::util::fault::INJECTED_PANIC_MARKER`]); post-mortem
+    /// tooling matches this against the final `ShardDeath` flight-record
+    /// event. Organic panics without the suffix return `None`.
+    pub fn iteration(&self) -> Option<u64> {
+        let (_, tail) = self.payload.rsplit_once("at iteration ")?;
+        tail.split_whitespace().next()?.parse().ok()
+    }
+}
+
 impl std::fmt::Display for ShardDied {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(f, "shard {} died: {}", self.shard, self.payload)
@@ -196,6 +208,17 @@ mod tests {
         assert_eq!(deaths.len(), 1);
         assert_eq!(deaths[0], ShardDied { shard: 1, payload: "boom".into() });
         assert_eq!(deaths[0].to_string(), "shard 1 died: boom");
+    }
+
+    #[test]
+    fn iteration_parses_injected_kill_payloads() {
+        let d = ShardDied {
+            shard: 2,
+            payload: "fault-injected kill: shard 2 at iteration 417".into(),
+        };
+        assert_eq!(d.iteration(), Some(417));
+        let organic = ShardDied { shard: 0, payload: "index out of bounds".into() };
+        assert_eq!(organic.iteration(), None);
     }
 
     #[test]

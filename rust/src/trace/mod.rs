@@ -1,0 +1,715 @@
+//! Unified tracing / flight recorder: a per-shard, lock-free, fixed-size
+//! ring of compact binary trace events, emitted from every decision point
+//! the serving stack already has — admission verdicts, queue entry,
+//! prefill chunks, decode iterations (estimated vs actual latency),
+//! preemption, steal legs, checkpoint flushes, harvest tighten/open,
+//! prefix attach/publish/reclaim, and shard death/recovery.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Zero allocation on the hot path.** An event is five `u64` words
+//!    written into a preallocated flat `Box<[AtomicU64]>`; emitting is a
+//!    reservation `fetch_add` plus five relaxed stores.
+//! 2. **Deterministic under the virtual clock.** Timestamps come from the
+//!    engine's [`crate::clock::Clock`], so two lockstep sim runs with the
+//!    same seed produce byte-identical exported traces
+//!    ([`perfetto::export_perfetto`] sorts deterministically and
+//!    `util::json` renders `BTreeMap`s in key order).
+//! 3. **Readable from another thread while the producer is live.** The
+//!    ring is written with atomics, so a supervisor or `/metrics` handler
+//!    may snapshot it mid-run without UB. A snapshot raced against the
+//!    producer can observe a partially-written *latest* slot (the kind
+//!    byte is validated and junk slots are skipped); snapshots taken
+//!    after the engine thread joined are exact.
+//!
+//! Each ring holds the last `cap` events per shard; older events are
+//! overwritten (the drop count is `total() - cap`). Post-mortem dumps
+//! ([`flight_dump`]) write the surviving tail as JSONL for offline
+//! triage; [`perfetto::export_perfetto`] renders the whole fleet as a
+//! Chrome/Perfetto trace-event array; [`prometheus`] carries the live
+//! counter mirror behind `GET /metrics`.
+
+pub mod perfetto;
+pub mod prometheus;
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::util::json::{num, obj, Json};
+use crate::TimeUs;
+
+/// Default per-shard ring capacity (events). At 40 bytes/event this is
+/// ~2.5 MiB per shard — hours of decode iterations, minutes of
+/// everything-on tracing.
+pub const DEFAULT_RING_EVENTS: usize = 65_536;
+
+/// Flight-recorder dumps keep at most this many trailing events per
+/// shard (a dump is for triage, not archival).
+pub const DEFAULT_DUMP_LAST: usize = 4_096;
+
+const WORDS_PER_EVENT: usize = 5;
+
+/// Every event kind the stack emits. The discriminant is the on-ring
+/// byte — append-only; never renumber (flight dumps on disk carry the
+/// *name*, the ring carries the byte).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+#[repr(u8)]
+pub enum EventKind {
+    /// Front door admitted an online request (`sid`; `a` = prompt len).
+    AdmitOnline = 0,
+    /// Front door shed an online request (`a` = shed-reason code,
+    /// `b` = Retry-After hint ms).
+    ShedOnline = 1,
+    /// Batch submit accepted at full tier (`a` = estimated finish ms).
+    JobAccept = 2,
+    /// Batch submit admitted at degraded tier (`a` = est finish ms).
+    JobDownTier = 3,
+    /// Batch submit rejected (`a` = reason code, `b` = Retry-After ms).
+    JobReject = 4,
+    /// Request entered a shard's scheduler queue (`a` = class 0/1,
+    /// `b` = prompt len).
+    QueueEnter = 5,
+    /// Prefill chunk scheduled for `sid` (`a` = chunk tokens,
+    /// `b` = context length before the chunk).
+    PrefillChunk = 6,
+    /// One engine iteration (`a` = prefill_tokens<<32 | decode_seqs,
+    /// `b` = estimated_us<<32 | actual_us).
+    Iteration = 7,
+    /// Request preempted (`a`: 0 = discarded, 1 = evicted-to-host,
+    /// 2 = swapped-out).
+    Preempt = 8,
+    /// Layer-wise safepoint abort of an in-flight iteration.
+    LayerAbort = 9,
+    /// This shard posted a steal demand (`a` = chosen donor shard).
+    StealDemand = 10,
+    /// Request `sid` donated to another shard (`a` = thief shard,
+    /// `b` = checkpointed tokens travelling with it).
+    StealDonate = 11,
+    /// Request `sid` absorbed from another shard (`a` = origin shard,
+    /// `b` = checkpointed tokens imported).
+    StealAbsorb = 12,
+    /// Durable store flush wrote `a` records (`b` = flush interval id).
+    CkptFlush = 13,
+    /// Harvest controller tightened the offline budget
+    /// (`a` = audit-record id, `b` = new budget permille).
+    HarvestTighten = 14,
+    /// Harvest controller opened the offline budget
+    /// (`a` = audit-record id, `b` = new budget permille).
+    HarvestOpen = 15,
+    /// Admission attached shared prefix blocks this iteration
+    /// (`a` = requests that hit, `b` = prefill tokens skipped).
+    PrefixAttach = 16,
+    /// Commit published `a` blocks of `sid`'s prefix into the share
+    /// index.
+    PrefixPublish = 17,
+    /// Prefix index reclaimed `a` shared blocks under memory pressure.
+    PrefixReclaim = 18,
+    /// Shard is dying (emitted immediately before the fatal panic;
+    /// `a` = engine iteration).
+    ShardDeath = 19,
+    /// First output token of `sid` (`a` = TTFT µs, `b` = class).
+    FirstToken = 20,
+    /// Request `sid` finished (`a` = class, `b` = generated tokens).
+    Finish = 21,
+    /// Request `sid` aborted by cancellation.
+    Abort = 22,
+    /// Request `sid` drained to the durable store mid-flight.
+    Drain = 23,
+    /// Checkpoint repair refetched `a` blocks for `sid` after a torn
+    /// write.
+    Repair = 24,
+    /// Recovery round started replaying a dead shard's work
+    /// (`a` = dead shard, `b` = jobs replayed).
+    Recover = 25,
+}
+
+impl EventKind {
+    pub fn from_u8(v: u8) -> Option<EventKind> {
+        use EventKind::*;
+        Some(match v {
+            0 => AdmitOnline,
+            1 => ShedOnline,
+            2 => JobAccept,
+            3 => JobDownTier,
+            4 => JobReject,
+            5 => QueueEnter,
+            6 => PrefillChunk,
+            7 => Iteration,
+            8 => Preempt,
+            9 => LayerAbort,
+            10 => StealDemand,
+            11 => StealDonate,
+            12 => StealAbsorb,
+            13 => CkptFlush,
+            14 => HarvestTighten,
+            15 => HarvestOpen,
+            16 => PrefixAttach,
+            17 => PrefixPublish,
+            18 => PrefixReclaim,
+            19 => ShardDeath,
+            20 => FirstToken,
+            21 => Finish,
+            22 => Abort,
+            23 => Drain,
+            24 => Repair,
+            25 => Recover,
+            _ => return None,
+        })
+    }
+
+    /// Stable wire name (flight dumps, Perfetto event names).
+    pub fn name(self) -> &'static str {
+        use EventKind::*;
+        match self {
+            AdmitOnline => "admit_online",
+            ShedOnline => "shed_online",
+            JobAccept => "job_accept",
+            JobDownTier => "job_down_tier",
+            JobReject => "job_reject",
+            QueueEnter => "queue_enter",
+            PrefillChunk => "prefill_chunk",
+            Iteration => "iteration",
+            Preempt => "preempt",
+            LayerAbort => "layer_abort",
+            StealDemand => "steal_demand",
+            StealDonate => "steal_donate",
+            StealAbsorb => "steal_absorb",
+            CkptFlush => "ckpt_flush",
+            HarvestTighten => "harvest_tighten",
+            HarvestOpen => "harvest_open",
+            PrefixAttach => "prefix_attach",
+            PrefixPublish => "prefix_publish",
+            PrefixReclaim => "prefix_reclaim",
+            ShardDeath => "shard_death",
+            FirstToken => "first_token",
+            Finish => "finish",
+            Abort => "abort",
+            Drain => "drain",
+            Repair => "repair",
+            Recover => "recover",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<EventKind> {
+        (0..=25u8)
+            .filter_map(EventKind::from_u8)
+            .find(|k| k.name() == name)
+    }
+
+    /// Kinds that end a request span (see [`analyze_spans`]).
+    pub fn is_terminal(self) -> bool {
+        matches!(self, EventKind::Finish | EventKind::Abort | EventKind::Drain)
+    }
+}
+
+/// A decoded trace event. `sid` is the submission id
+/// ([`crate::request::Request::submitted_id`], the stable cross-shard
+/// key) when the event concerns one request, else 0.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub t_us: TimeUs,
+    /// Ring index this event was recorded on (engine shard, or the
+    /// front-door track for admission verdicts).
+    pub shard: u32,
+    pub kind: EventKind,
+    pub sid: u64,
+    pub a: u64,
+    pub b: u64,
+}
+
+impl TraceEvent {
+    /// One JSONL flight-dump line (deterministic key order).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("a", num(self.a as f64)),
+            ("b", num(self.b as f64)),
+            ("kind", Json::Str(self.kind.name().to_string())),
+            ("shard", num(self.shard as f64)),
+            ("sid", num(self.sid as f64)),
+            ("t_us", num(self.t_us as f64)),
+        ])
+    }
+
+    /// Parse one flight-dump line back into an event.
+    pub fn from_json(j: &Json) -> Option<TraceEvent> {
+        let kind = EventKind::from_name(j.get("kind")?.as_str()?)?;
+        Some(TraceEvent {
+            t_us: j.get("t_us")?.as_f64()? as TimeUs,
+            shard: j.get("shard")?.as_f64()? as u32,
+            kind,
+            sid: j.get("sid")?.as_f64()? as u64,
+            a: j.get("a")?.as_f64()? as u64,
+            b: j.get("b")?.as_f64()? as u64,
+        })
+    }
+}
+
+/// One shard's event ring. Single logical producer (the engine thread);
+/// any number of concurrent snapshot readers.
+pub struct ShardTracer {
+    shard: u32,
+    cap: usize,
+    /// Total events ever emitted; slot = (seq % cap) * 5.
+    cursor: AtomicU64,
+    words: Box<[AtomicU64]>,
+}
+
+impl ShardTracer {
+    pub fn new(shard: usize, cap: usize) -> Self {
+        let cap = cap.max(16);
+        let mut v = Vec::with_capacity(cap * WORDS_PER_EVENT);
+        v.resize_with(cap * WORDS_PER_EVENT, || AtomicU64::new(u64::MAX));
+        Self {
+            shard: shard as u32,
+            cap,
+            cursor: AtomicU64::new(0),
+            words: v.into_boxed_slice(),
+        }
+    }
+
+    #[inline]
+    pub fn shard(&self) -> u32 {
+        self.shard
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Record one event. Lock-free, allocation-free: one `fetch_add` and
+    /// five relaxed stores.
+    #[inline]
+    pub fn emit(&self, t: TimeUs, kind: EventKind, sid: u64, a: u64, b: u64) {
+        let seq = self.cursor.fetch_add(1, Ordering::Relaxed);
+        let base = (seq as usize % self.cap) * WORDS_PER_EVENT;
+        self.words[base].store(t, Ordering::Relaxed);
+        self.words[base + 1].store(
+            kind as u64 | ((self.shard as u64) << 8),
+            Ordering::Relaxed,
+        );
+        self.words[base + 2].store(sid, Ordering::Relaxed);
+        self.words[base + 3].store(a, Ordering::Relaxed);
+        self.words[base + 4].store(b, Ordering::Release);
+    }
+
+    /// Total events ever emitted (including overwritten ones).
+    pub fn total(&self) -> u64 {
+        self.cursor.load(Ordering::Acquire)
+    }
+
+    /// Events lost to ring overwrite.
+    pub fn dropped(&self) -> u64 {
+        self.total().saturating_sub(self.cap as u64)
+    }
+
+    /// Decode the surviving events, oldest first. Raced against a live
+    /// producer this can skip a torn latest slot (invalid kind byte) or
+    /// include an event overwritten mid-read; taken after the producer
+    /// joined it is exact and in emission order.
+    pub fn snapshot(&self) -> Vec<TraceEvent> {
+        let total = self.cursor.load(Ordering::Acquire);
+        let n = (total as usize).min(self.cap);
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let seq = total as usize - n + i;
+            let base = (seq % self.cap) * WORDS_PER_EVENT;
+            let w1 = self.words[base + 1].load(Ordering::Relaxed);
+            let Some(kind) = EventKind::from_u8((w1 & 0xff) as u8) else {
+                continue; // unwritten or torn slot
+            };
+            out.push(TraceEvent {
+                t_us: self.words[base].load(Ordering::Relaxed),
+                shard: ((w1 >> 8) & 0xffff_ffff) as u32,
+                kind,
+                sid: self.words[base + 2].load(Ordering::Relaxed),
+                a: self.words[base + 3].load(Ordering::Relaxed),
+                b: self.words[base + 4].load(Ordering::Relaxed),
+            });
+        }
+        out
+    }
+}
+
+impl fmt::Debug for ShardTracer {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("ShardTracer")
+            .field("shard", &self.shard)
+            .field("cap", &self.cap)
+            .field("total", &self.total())
+            .finish()
+    }
+}
+
+/// The fleet's rings: one per engine shard, plus an optional extra
+/// track for front-door (admission) events so HTTP handler threads
+/// never share an engine's single-producer ring.
+pub struct FleetTracer {
+    cells: Vec<Arc<ShardTracer>>,
+    /// Index of the front-door track, if present (always the last).
+    front: Option<usize>,
+}
+
+impl FleetTracer {
+    /// `n_shards` engine tracks, no front-door track (sim / jobs).
+    pub fn new(n_shards: usize, cap: usize) -> Arc<Self> {
+        Arc::new(Self {
+            cells: (0..n_shards)
+                .map(|s| Arc::new(ShardTracer::new(s, cap)))
+                .collect(),
+            front: None,
+        })
+    }
+
+    /// `n_shards` engine tracks plus a front-door track (serve).
+    pub fn with_front(n_shards: usize, cap: usize) -> Arc<Self> {
+        Arc::new(Self {
+            cells: (0..=n_shards)
+                .map(|s| Arc::new(ShardTracer::new(s, cap)))
+                .collect(),
+            front: Some(n_shards),
+        })
+    }
+
+    /// Engine shard count (excludes the front-door track).
+    pub fn n_shards(&self) -> usize {
+        self.front.unwrap_or(self.cells.len())
+    }
+
+    pub fn n_tracks(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn shard(&self, i: usize) -> Arc<ShardTracer> {
+        self.cells[i].clone()
+    }
+
+    pub fn front(&self) -> Option<Arc<ShardTracer>> {
+        self.front.map(|i| self.cells[i].clone())
+    }
+
+    pub fn track_name(&self, i: usize) -> String {
+        if Some(i) == self.front {
+            "front-door".to_string()
+        } else {
+            format!("shard {i}")
+        }
+    }
+
+    pub fn total_events(&self) -> u64 {
+        self.cells.iter().map(|c| c.total()).sum()
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.cells.iter().map(|c| c.dropped()).sum()
+    }
+
+    /// Per-track snapshots, oldest-first within each track.
+    pub fn snapshot_all(&self) -> Vec<Vec<TraceEvent>> {
+        self.cells.iter().map(|c| c.snapshot()).collect()
+    }
+
+    /// All surviving events flattened and deterministically ordered
+    /// (time, then track, then per-track emission order).
+    pub fn merged(&self) -> Vec<TraceEvent> {
+        let mut all: Vec<(u64, u32, usize, TraceEvent)> = Vec::new();
+        for (track, evs) in self.snapshot_all().into_iter().enumerate() {
+            for (idx, e) in evs.into_iter().enumerate() {
+                all.push((e.t_us, track as u32, idx, e));
+            }
+        }
+        all.sort_by_key(|(t, track, idx, _)| (*t, *track, *idx));
+        all.into_iter().map(|(_, _, _, e)| e).collect()
+    }
+}
+
+impl fmt::Debug for FleetTracer {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "FleetTracer {{ tracks: {}, events: {} }}",
+            self.cells.len(),
+            self.total_events()
+        )
+    }
+}
+
+/// Post-mortem flight-recorder dump: write the last `last_n` events of
+/// every track to `<dir>/flight-<tag>.jsonl` (one JSON object per line,
+/// tracks concatenated in order, oldest first within a track). Returns
+/// the path written.
+pub fn flight_dump(
+    dir: &Path,
+    tag: &str,
+    fleet: &FleetTracer,
+    last_n: usize,
+) -> std::io::Result<PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("flight-{tag}.jsonl"));
+    let mut out = String::new();
+    for evs in fleet.snapshot_all() {
+        let start = evs.len().saturating_sub(last_n);
+        for e in &evs[start..] {
+            out.push_str(&e.to_json().to_string());
+            out.push('\n');
+        }
+    }
+    std::fs::write(&path, out)?;
+    Ok(path)
+}
+
+/// Parse a flight dump back into events (bad lines are skipped).
+pub fn parse_flight_dump(text: &str) -> Vec<TraceEvent> {
+    text.lines()
+        .filter_map(|l| Json::parse(l).ok())
+        .filter_map(|j| TraceEvent::from_json(&j))
+        .collect()
+}
+
+/// Span well-formedness report (see [`analyze_spans`]).
+#[derive(Debug, Default)]
+pub struct SpanReport {
+    /// Distinct request sids observed.
+    pub spans: usize,
+    /// Spans that reached a terminal event (finish/abort/drain).
+    pub finished: usize,
+    /// Spans excused by a shard death (killed mid-flight, no terminal).
+    pub killed: usize,
+    /// Sids that violate well-formedness.
+    pub orphans: Vec<u64>,
+}
+
+impl SpanReport {
+    pub fn ok(&self) -> bool {
+        self.orphans.is_empty()
+    }
+}
+
+/// Check that every request span is well-formed: a span (all events
+/// sharing a nonzero `sid`) must open with a queue entry and close with
+/// a terminal event (finish, abort, or drain). A span without a
+/// terminal is excused only if a shard that touched it died
+/// (`dead_shards`) or `allow_open` is set (run truncated mid-flight).
+/// A terminal without a queue entry is an orphan unless `had_drops`
+/// (the opening event may have been overwritten).
+///
+/// Spans are grouped by sid across shards, so a request that migrates
+/// (donate on one shard, absorb + finish on another) or is replayed by
+/// crash recovery under the same sid forms one span.
+pub fn analyze_spans(
+    events: &[TraceEvent],
+    dead_shards: &[u32],
+    allow_open: bool,
+    had_drops: bool,
+) -> SpanReport {
+    use std::collections::BTreeMap;
+    #[derive(Default)]
+    struct Span {
+        entered: bool,
+        terminal: bool,
+        touched_dead: bool,
+    }
+    let mut spans: BTreeMap<u64, Span> = BTreeMap::new();
+    for e in events {
+        if e.sid == 0 {
+            continue;
+        }
+        // Only request-lifecycle kinds participate; front-door admits
+        // precede queue entry and never require one.
+        let relevant = matches!(
+            e.kind,
+            EventKind::QueueEnter
+                | EventKind::PrefillChunk
+                | EventKind::FirstToken
+                | EventKind::Preempt
+                | EventKind::StealDonate
+                | EventKind::StealAbsorb
+                | EventKind::Repair
+                | EventKind::Finish
+                | EventKind::Abort
+                | EventKind::Drain
+        );
+        if !relevant {
+            continue;
+        }
+        let s = spans.entry(e.sid).or_default();
+        if e.kind == EventKind::QueueEnter {
+            s.entered = true;
+        }
+        if e.kind.is_terminal() {
+            s.terminal = true;
+        }
+        if dead_shards.contains(&e.shard) {
+            s.touched_dead = true;
+        }
+    }
+    let mut rep = SpanReport::default();
+    for (sid, s) in &spans {
+        rep.spans += 1;
+        if s.terminal {
+            rep.finished += 1;
+            if !s.entered && !had_drops {
+                rep.orphans.push(*sid);
+            }
+        } else if s.touched_dead {
+            rep.killed += 1;
+        } else if !allow_open {
+            rep.orphans.push(*sid);
+        }
+    }
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_roundtrip_and_names_unique() {
+        let mut names = std::collections::HashSet::new();
+        for v in 0..=25u8 {
+            let k = EventKind::from_u8(v).expect("contiguous kinds");
+            assert_eq!(k as u8, v);
+            assert!(names.insert(k.name()), "duplicate name {}", k.name());
+            assert_eq!(EventKind::from_name(k.name()), Some(k));
+        }
+        assert_eq!(EventKind::from_u8(26), None);
+    }
+
+    #[test]
+    fn ring_records_and_wraps() {
+        let tr = ShardTracer::new(3, 16);
+        for i in 0..40u64 {
+            tr.emit(i * 10, EventKind::Iteration, i, i * 2, i * 3);
+        }
+        assert_eq!(tr.total(), 40);
+        assert_eq!(tr.dropped(), 24);
+        let evs = tr.snapshot();
+        assert_eq!(evs.len(), 16);
+        // oldest surviving event is seq 24
+        assert_eq!(evs[0].sid, 24);
+        assert_eq!(evs[15].sid, 39);
+        for (i, e) in evs.iter().enumerate() {
+            let seq = 24 + i as u64;
+            assert_eq!(e.t_us, seq * 10);
+            assert_eq!(e.shard, 3);
+            assert_eq!(e.kind, EventKind::Iteration);
+            assert_eq!((e.a, e.b), (seq * 2, seq * 3));
+        }
+    }
+
+    #[test]
+    fn snapshot_skips_unwritten_slots() {
+        let tr = ShardTracer::new(0, 16);
+        assert!(tr.snapshot().is_empty());
+        tr.emit(5, EventKind::Finish, 7, 1, 0);
+        let evs = tr.snapshot();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].kind, EventKind::Finish);
+    }
+
+    #[test]
+    fn event_json_roundtrip() {
+        let e = TraceEvent {
+            t_us: 123_456,
+            shard: 2,
+            kind: EventKind::StealDonate,
+            sid: 99,
+            a: 1,
+            b: 640,
+        };
+        let j = e.to_json();
+        let back = TraceEvent::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back, e);
+    }
+
+    #[test]
+    fn flight_dump_roundtrip_and_tail() {
+        let fleet = FleetTracer::new(2, 64);
+        for i in 0..10u64 {
+            fleet.shard(0).emit(i, EventKind::Iteration, 0, i, 0);
+        }
+        fleet.shard(1).emit(99, EventKind::ShardDeath, 0, 42, 0);
+        let dir = std::env::temp_dir().join("conserve-trace-test-dump");
+        let path = flight_dump(&dir, "t0", &fleet, 4).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let evs = parse_flight_dump(&text);
+        // last 4 of shard 0 + the single shard-1 event
+        assert_eq!(evs.len(), 5);
+        assert_eq!(evs[0].a, 6, "dump keeps only the tail");
+        let last = evs.last().unwrap();
+        assert_eq!(last.kind, EventKind::ShardDeath);
+        assert_eq!(last.a, 42);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn merged_orders_by_time_then_track() {
+        let fleet = FleetTracer::with_front(2, 64);
+        fleet.shard(1).emit(20, EventKind::Finish, 5, 0, 0);
+        fleet.shard(0).emit(10, EventKind::QueueEnter, 5, 0, 16);
+        fleet.front().unwrap().emit(10, EventKind::AdmitOnline, 5, 16, 0);
+        let m = fleet.merged();
+        assert_eq!(m.len(), 3);
+        assert_eq!(m[0].kind, EventKind::QueueEnter, "shard 0 before front at t=10");
+        assert_eq!(m[1].kind, EventKind::AdmitOnline);
+        assert_eq!(m[2].kind, EventKind::Finish);
+        assert_eq!(fleet.n_shards(), 2);
+        assert_eq!(fleet.n_tracks(), 3);
+        assert_eq!(fleet.track_name(2), "front-door");
+    }
+
+    #[test]
+    fn span_analysis_flags_orphans_and_excuses_deaths() {
+        let ev = |kind, shard, sid| TraceEvent {
+            t_us: 0,
+            shard,
+            kind,
+            sid,
+            a: 0,
+            b: 0,
+        };
+        // sid 1: clean; sid 2: open on a dead shard; sid 3: open on a
+        // live shard (orphan); sid 4: terminal with no entry (orphan
+        // when nothing was dropped); sid 5: migrated then finished.
+        let events = vec![
+            ev(EventKind::QueueEnter, 0, 1),
+            ev(EventKind::Finish, 0, 1),
+            ev(EventKind::QueueEnter, 1, 2),
+            ev(EventKind::QueueEnter, 0, 3),
+            ev(EventKind::Finish, 0, 4),
+            ev(EventKind::QueueEnter, 0, 5),
+            ev(EventKind::StealDonate, 0, 5),
+            ev(EventKind::StealAbsorb, 1, 5),
+            ev(EventKind::Finish, 1, 5),
+        ];
+        let rep = analyze_spans(&events, &[1], false, false);
+        assert_eq!(rep.spans, 5);
+        assert_eq!(rep.finished, 3);
+        assert_eq!(rep.killed, 1);
+        assert_eq!(rep.orphans, vec![3, 4]);
+        assert!(!rep.ok());
+        // drops excuse the missing entry; allow_open excuses sid 3
+        let rep = analyze_spans(&events, &[1], true, true);
+        assert!(rep.ok(), "orphans: {:?}", rep.orphans);
+    }
+
+    #[test]
+    fn concurrent_snapshot_is_safe() {
+        let tr = Arc::new(ShardTracer::new(0, 128));
+        let wtr = tr.clone();
+        let w = std::thread::spawn(move || {
+            for i in 0..20_000u64 {
+                wtr.emit(i, EventKind::Iteration, i, i, i);
+            }
+        });
+        for _ in 0..50 {
+            let evs = tr.snapshot();
+            assert!(evs.len() <= 128);
+        }
+        w.join().unwrap();
+        assert_eq!(tr.total(), 20_000);
+        assert_eq!(tr.snapshot().len(), 128);
+    }
+}

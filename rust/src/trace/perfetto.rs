@@ -1,0 +1,400 @@
+//! Chrome/Perfetto trace-event JSON export for [`super::FleetTracer`]
+//! rings, plus the `conserve trace` summarizer that reads an exported
+//! file back.
+//!
+//! The export is the classic trace-event *JSON array* format (loadable
+//! by Perfetto UI and `chrome://tracing`): one thread track per shard
+//! (plus a `front-door` track under serve), `"X"` complete events for
+//! engine iterations (duration = measured latency, estimated latency in
+//! `args`), `"i"` instants for point events, `"C"` counters for harvest
+//! budget moves, and `"s"`/`"f"` flow arrows keyed by submission id so
+//! a request can be followed across a steal migration.
+//!
+//! Output is deterministic: events sort by (timestamp, track, emission
+//! order) and `util::json` renders objects in key order, so two
+//! lockstep sim runs export byte-identical files.
+
+use anyhow::{bail, Context, Result};
+
+use super::{EventKind, FleetTracer, TraceEvent};
+use crate::util::json::{num, obj, Json};
+
+/// Render the fleet's surviving events as a trace-event JSON array
+/// (one event object per line for diff-ability).
+pub fn export_perfetto(fleet: &FleetTracer) -> String {
+    let mut lines: Vec<String> = Vec::new();
+    lines.push(
+        obj(vec![
+            ("args", obj(vec![("name", Json::Str("conserve".into()))])),
+            ("name", Json::Str("process_name".into())),
+            ("ph", Json::Str("M".into())),
+            ("pid", num(1.0)),
+            ("tid", num(0.0)),
+        ])
+        .to_string(),
+    );
+    for track in 0..fleet.n_tracks() {
+        lines.push(
+            obj(vec![
+                ("args", obj(vec![("name", Json::Str(fleet.track_name(track)))])),
+                ("name", Json::Str("thread_name".into())),
+                ("ph", Json::Str("M".into())),
+                ("pid", num(1.0)),
+                ("tid", num(track as f64 + 1.0)),
+            ])
+            .to_string(),
+        );
+    }
+    for e in fleet.merged() {
+        lines.push(event_json(&e).to_string());
+    }
+    let mut out = String::with_capacity(lines.iter().map(|l| l.len() + 4).sum::<usize>() + 4);
+    out.push_str("[\n");
+    for (i, l) in lines.iter().enumerate() {
+        out.push_str(l);
+        out.push_str(if i + 1 == lines.len() { "\n" } else { ",\n" });
+    }
+    out.push_str("]\n");
+    out
+}
+
+fn event_json(e: &TraceEvent) -> Json {
+    let tid = num(e.shard as f64 + 1.0);
+    let ts = num(e.t_us as f64);
+    match e.kind {
+        EventKind::Iteration => {
+            let prefill = e.a >> 32;
+            let decode = e.a & 0xffff_ffff;
+            let est = e.b >> 32;
+            let actual = e.b & 0xffff_ffff;
+            obj(vec![
+                (
+                    "args",
+                    obj(vec![
+                        ("actual_us", num(actual as f64)),
+                        ("decode_seqs", num(decode as f64)),
+                        ("est_us", num(est as f64)),
+                        ("prefill_tokens", num(prefill as f64)),
+                    ]),
+                ),
+                ("cat", Json::Str("engine".into())),
+                ("dur", num(actual as f64)),
+                ("name", Json::Str("iter".into())),
+                ("ph", Json::Str("X".into())),
+                ("pid", num(1.0)),
+                ("tid", tid),
+                ("ts", num(e.t_us.saturating_sub(actual) as f64)),
+            ])
+        }
+        EventKind::HarvestTighten | EventKind::HarvestOpen => obj(vec![
+            (
+                "args",
+                obj(vec![
+                    ("audit_id", num(e.a as f64)),
+                    ("permille", num(e.b as f64)),
+                ]),
+            ),
+            ("cat", Json::Str("harvest".into())),
+            ("name", Json::Str("harvest_budget_permille".into())),
+            ("ph", Json::Str("C".into())),
+            ("pid", num(1.0)),
+            ("tid", tid),
+            ("ts", ts),
+        ]),
+        EventKind::StealDonate | EventKind::StealAbsorb => {
+            let start = e.kind == EventKind::StealDonate;
+            let mut fields = vec![
+                (
+                    "args",
+                    obj(vec![
+                        ("ckpt_tokens", num(e.b as f64)),
+                        ("peer", num(e.a as f64)),
+                        ("sid", num(e.sid as f64)),
+                    ]),
+                ),
+                ("cat", Json::Str("steal".into())),
+                ("id", num(e.sid as f64)),
+                ("name", Json::Str("steal".into())),
+                ("ph", Json::Str(if start { "s" } else { "f" }.into())),
+                ("pid", num(1.0)),
+                ("tid", tid),
+                ("ts", ts),
+            ];
+            if !start {
+                fields.push(("bp", Json::Str("e".into())));
+            }
+            obj(fields)
+        }
+        _ => obj(vec![
+            (
+                "args",
+                obj(vec![
+                    ("a", num(e.a as f64)),
+                    ("b", num(e.b as f64)),
+                    ("sid", num(e.sid as f64)),
+                ]),
+            ),
+            ("cat", Json::Str(category(e.kind).into())),
+            ("name", Json::Str(e.kind.name().into())),
+            ("ph", Json::Str("i".into())),
+            ("pid", num(1.0)),
+            ("s", Json::Str("t".into())),
+            ("tid", tid),
+            ("ts", ts),
+        ]),
+    }
+}
+
+fn category(kind: EventKind) -> &'static str {
+    use EventKind::*;
+    match kind {
+        AdmitOnline | ShedOnline | JobAccept | JobDownTier | JobReject => "admission",
+        QueueEnter | PrefillChunk | Iteration | Preempt | LayerAbort => "engine",
+        StealDemand | StealDonate | StealAbsorb => "steal",
+        CkptFlush | Drain | Repair | Recover | ShardDeath => "durability",
+        HarvestTighten | HarvestOpen => "harvest",
+        PrefixAttach | PrefixPublish | PrefixReclaim => "prefix",
+        FirstToken | Finish | Abort => "request",
+    }
+}
+
+/// Structural facts about an exported file, for the acceptance bench:
+/// the array parses, every shard has a named track, and flow ids link
+/// a donate on one track to an absorb on another.
+#[derive(Debug, Default)]
+pub struct PerfettoStats {
+    pub events: usize,
+    pub tracks: usize,
+    pub iterations: usize,
+    pub flow_starts: usize,
+    pub flow_ends: usize,
+    /// Flow ids appearing as both start and end on *different* tracks —
+    /// requests actually followed across a migration.
+    pub flows_linked: usize,
+}
+
+/// Parse and structurally validate an exported trace.
+pub fn validate(text: &str) -> Result<PerfettoStats> {
+    let j = Json::parse(text).context("trace file is not valid JSON")?;
+    let arr = match &j {
+        Json::Arr(v) => v,
+        _ => bail!("trace file is not a JSON array"),
+    };
+    let mut st = PerfettoStats::default();
+    let mut starts: Vec<(u64, u64)> = Vec::new(); // (id, tid)
+    let mut ends: Vec<(u64, u64)> = Vec::new();
+    for ev in arr {
+        let ph = ev
+            .get("ph")
+            .and_then(|p| p.as_str())
+            .context("event missing ph")?;
+        let tid = ev.get("tid").and_then(|t| t.as_f64()).unwrap_or(0.0) as u64;
+        match ph {
+            "M" => {
+                if ev.get("name").and_then(|n| n.as_str()) == Some("thread_name") {
+                    st.tracks += 1;
+                }
+            }
+            "X" => {
+                st.events += 1;
+                st.iterations += 1;
+                if ev.get("dur").and_then(|d| d.as_f64()).is_none() {
+                    bail!("X event without dur");
+                }
+            }
+            "s" | "f" => {
+                st.events += 1;
+                let id = ev
+                    .get("id")
+                    .and_then(|i| i.as_f64())
+                    .context("flow event without id")? as u64;
+                if ph == "s" {
+                    st.flow_starts += 1;
+                    starts.push((id, tid));
+                } else {
+                    st.flow_ends += 1;
+                    ends.push((id, tid));
+                }
+            }
+            _ => st.events += 1,
+        }
+    }
+    for (id, tid) in &starts {
+        if ends.iter().any(|(eid, etid)| eid == id && etid != tid) {
+            st.flows_linked += 1;
+        }
+    }
+    Ok(st)
+}
+
+/// Human summary of an exported trace: top-K slowest iterations and
+/// per-request span timelines — the `conserve trace --in FILE` output.
+pub fn summarize(text: &str, top_k: usize, max_spans: usize) -> Result<String> {
+    let j = Json::parse(text).context("trace file is not valid JSON")?;
+    let arr = match &j {
+        Json::Arr(v) => v,
+        _ => bail!("trace file is not a JSON array"),
+    };
+    struct Iter {
+        tid: u64,
+        ts: f64,
+        dur: f64,
+        est: f64,
+        prefill: u64,
+        decode: u64,
+    }
+    struct SpanEv {
+        ts: f64,
+        tid: u64,
+        name: String,
+    }
+    let mut iters: Vec<Iter> = Vec::new();
+    let mut spans: std::collections::BTreeMap<u64, Vec<SpanEv>> = Default::default();
+    let mut n_events = 0usize;
+    let mut tracks = 0usize;
+    for ev in arr {
+        let ph = ev.get("ph").and_then(|p| p.as_str()).unwrap_or("");
+        let tid = ev.get("tid").and_then(|t| t.as_f64()).unwrap_or(0.0) as u64;
+        let ts = ev.get("ts").and_then(|t| t.as_f64()).unwrap_or(0.0);
+        match ph {
+            "M" => {
+                if ev.get("name").and_then(|n| n.as_str()) == Some("thread_name") {
+                    tracks += 1;
+                }
+                continue;
+            }
+            "X" => {
+                n_events += 1;
+                let args = ev.get("args");
+                let g = |k: &str| {
+                    args.and_then(|a| a.get(k)).and_then(|v| v.as_f64()).unwrap_or(0.0)
+                };
+                iters.push(Iter {
+                    tid,
+                    ts,
+                    dur: ev.get("dur").and_then(|d| d.as_f64()).unwrap_or(0.0),
+                    est: g("est_us"),
+                    prefill: g("prefill_tokens") as u64,
+                    decode: g("decode_seqs") as u64,
+                });
+            }
+            _ => {
+                n_events += 1;
+                let sid = ev
+                    .get("args")
+                    .and_then(|a| a.get("sid"))
+                    .and_then(|s| s.as_f64())
+                    .unwrap_or(0.0) as u64;
+                if sid != 0 {
+                    let name = ev
+                        .get("name")
+                        .and_then(|n| n.as_str())
+                        .unwrap_or("?")
+                        .to_string();
+                    spans.entry(sid).or_default().push(SpanEv { ts, tid, name });
+                }
+            }
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!(
+        "trace: {} events on {} tracks, {} iterations, {} request spans\n",
+        n_events,
+        tracks,
+        iters.len(),
+        spans.len()
+    ));
+    iters.sort_by(|a, b| b.dur.total_cmp(&a.dur));
+    out.push_str(&format!("top {} slowest iterations:\n", top_k.min(iters.len())));
+    for (i, it) in iters.iter().take(top_k).enumerate() {
+        out.push_str(&format!(
+            "  {:>2}. track {} @ {:>10.3}s  dur {:>8.3}ms  est {:>8.3}ms  prefill {:>5}  decode {:>4}\n",
+            i + 1,
+            it.tid,
+            it.ts / 1e6,
+            it.dur / 1e3,
+            it.est / 1e3,
+            it.prefill,
+            it.decode
+        ));
+    }
+    out.push_str(&format!(
+        "request spans (first {} by start time):\n",
+        max_spans.min(spans.len())
+    ));
+    let mut ordered: Vec<(u64, Vec<SpanEv>)> = spans.into_iter().collect();
+    ordered.sort_by(|a, b| {
+        let ta = a.1.first().map(|e| e.ts).unwrap_or(0.0);
+        let tb = b.1.first().map(|e| e.ts).unwrap_or(0.0);
+        ta.total_cmp(&tb).then(a.0.cmp(&b.0))
+    });
+    for (sid, evs) in ordered.iter().take(max_spans) {
+        let start = evs.first().map(|e| e.ts).unwrap_or(0.0);
+        let end = evs.last().map(|e| e.ts).unwrap_or(0.0);
+        let mut shards: Vec<u64> = evs.iter().map(|e| e.tid).collect();
+        shards.dedup();
+        let chain: Vec<&str> = evs.iter().map(|e| e.name.as_str()).take(8).collect();
+        let ell = if evs.len() > 8 { " …" } else { "" };
+        out.push_str(&format!(
+            "  sid {:>6}: [{:.3}s → {:.3}s] {} events, tracks {:?}: {}{}\n",
+            sid,
+            start / 1e6,
+            end / 1e6,
+            evs.len(),
+            shards,
+            chain.join(" → "),
+            ell
+        ));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::FleetTracer;
+
+    fn sample_fleet() -> std::sync::Arc<FleetTracer> {
+        let fleet = FleetTracer::new(2, 256);
+        let s0 = fleet.shard(0);
+        let s1 = fleet.shard(1);
+        s0.emit(1_000, EventKind::QueueEnter, 7, 0, 64);
+        s0.emit(5_000, EventKind::Iteration, 0, (64 << 32) | 3, (4_000 << 32) | 3_500);
+        s0.emit(6_000, EventKind::StealDonate, 7, 1, 640);
+        s1.emit(7_000, EventKind::StealAbsorb, 7, 0, 640);
+        s1.emit(8_000, EventKind::FirstToken, 7, 6_000, 0);
+        s1.emit(9_000, EventKind::HarvestTighten, 0, 3, 250);
+        s1.emit(9_500, EventKind::Finish, 7, 1, 8);
+        fleet
+    }
+
+    #[test]
+    fn export_is_valid_and_deterministic() {
+        let a = export_perfetto(&sample_fleet());
+        let b = export_perfetto(&sample_fleet());
+        assert_eq!(a, b, "identical rings must export byte-identically");
+        let st = validate(&a).unwrap();
+        assert_eq!(st.tracks, 2);
+        assert_eq!(st.iterations, 1);
+        assert_eq!(st.flow_starts, 1);
+        assert_eq!(st.flow_ends, 1);
+        assert_eq!(st.flows_linked, 1, "donate/absorb must link across tracks");
+        assert!(st.events >= 7);
+    }
+
+    #[test]
+    fn summarize_reports_iterations_and_spans() {
+        let text = export_perfetto(&sample_fleet());
+        let s = summarize(&text, 5, 10).unwrap();
+        assert!(s.contains("slowest iterations"), "{s}");
+        assert!(s.contains("sid      7"), "{s}");
+        assert!(s.contains("queue_enter"), "{s}");
+        assert!(s.contains("finish"), "{s}");
+    }
+
+    #[test]
+    fn validate_rejects_non_array() {
+        assert!(validate("{}").is_err());
+        assert!(validate("not json").is_err());
+    }
+}

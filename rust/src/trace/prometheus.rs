@@ -1,0 +1,334 @@
+//! Live counter mirror + Prometheus text-format rendering for the
+//! `GET /metrics` endpoint.
+//!
+//! The engine's [`Recorder`] lives inside the engine thread, so the
+//! HTTP server cannot read it directly. Instead each engine publishes a
+//! handful of relaxed atomic stores into its [`ShardStats`] cell once
+//! per iteration (quantiles every [`QUANTILE_EVERY`] iterations — the
+//! histogram read is O(buckets)), and the `/metrics` handler renders
+//! the cells without touching any engine state. Per-tenant counters go
+//! through a tiny `Mutex<Vec<TenantCounters>>` guarded by a
+//! fingerprint, so the lock is only taken when a tenant total actually
+//! changed.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::metrics::{Recorder, TenantCounters};
+use crate::request::Class;
+
+/// Engine iterations between quantile publications.
+pub const QUANTILE_EVERY: u64 = 32;
+
+/// One shard's live counters (all monotonically published from the
+/// engine's recorder; readers use relaxed loads).
+#[derive(Debug, Default)]
+pub struct ShardStats {
+    pub engine_iters: AtomicU64,
+    pub finished_online: AtomicU64,
+    pub finished_offline: AtomicU64,
+    pub gen_tokens: AtomicU64,
+    pub processed_tokens: AtomicU64,
+    pub preemptions: AtomicU64,
+    pub layer_aborts: AtomicU64,
+    pub steals_out: AtomicU64,
+    pub steals_in: AtomicU64,
+    pub ckpt_flush_records: AtomicU64,
+    pub ckpt_blocks: AtomicU64,
+    pub cancelled: AtomicU64,
+    pub prefix_hits: AtomicU64,
+    pub prefill_tokens_skipped: AtomicU64,
+    pub harvest_tightens: AtomicU64,
+    pub harvest_opens: AtomicU64,
+    pub deadline_met: AtomicU64,
+    pub deadline_missed: AtomicU64,
+    /// Online-class P99s in µs (published every [`QUANTILE_EVERY`]).
+    pub p99_ttft_us: AtomicU64,
+    pub p99_tpot_us: AtomicU64,
+    tenants: Mutex<Vec<TenantCounters>>,
+    tenant_fingerprint: AtomicU64,
+}
+
+impl ShardStats {
+    /// Mirror the cheap counters (≈20 relaxed stores).
+    pub fn publish_counters(&self, r: &Recorder) {
+        let o = Ordering::Relaxed;
+        self.engine_iters.store(r.engine_iters, o);
+        self.finished_online.store(r.finished[0], o);
+        self.finished_offline.store(r.finished[1], o);
+        self.gen_tokens.store(r.gen_token_count(None), o);
+        self.processed_tokens.store(r.processed_token_count(None), o);
+        self.preemptions.store(r.preemptions, o);
+        self.layer_aborts.store(r.layer_aborts, o);
+        self.steals_out.store(r.steals_out, o);
+        self.steals_in.store(r.steals_in, o);
+        self.ckpt_flush_records.store(r.ckpt_flush_records, o);
+        self.ckpt_blocks.store(r.ckpt_blocks, o);
+        self.cancelled.store(r.cancelled, o);
+        self.prefix_hits.store(r.prefix_hits, o);
+        self.prefill_tokens_skipped
+            .store(r.prefill_tokens_skipped, o);
+        self.harvest_tightens.store(r.harvest_tightens, o);
+        self.harvest_opens.store(r.harvest_opens, o);
+        self.deadline_met.store(r.deadline_met, o);
+        self.deadline_missed.store(r.deadline_missed, o);
+    }
+
+    /// Mirror the online P99s (O(histogram buckets) — publish rarely).
+    pub fn publish_quantiles(&self, r: &Recorder) {
+        let o = Ordering::Relaxed;
+        self.p99_ttft_us
+            .store((r.p99_ttft_ms(Class::Online) * 1_000.0) as u64, o);
+        self.p99_tpot_us
+            .store((r.p99_tpot_ms(Class::Online) * 1_000.0) as u64, o);
+    }
+
+    /// Mirror per-tenant counters if they changed since the last call
+    /// (fingerprint check avoids the lock on the common no-change path;
+    /// `clone_from` reuses the mirror's capacity, so steady state is
+    /// allocation-free).
+    pub fn publish_tenants(&self, r: &Recorder) {
+        let fp = r
+            .tenants
+            .iter()
+            .fold(r.tenants.len() as u64, |acc, t| {
+                acc.wrapping_mul(1_000_003)
+                    .wrapping_add(t.finished + t.gen_tokens + t.deadline_met + t.deadline_missed)
+            });
+        if self.tenant_fingerprint.swap(fp, Ordering::Relaxed) != fp {
+            self.tenants.lock().unwrap().clone_from(&r.tenants);
+        }
+    }
+
+    /// One full publication (counters + quantiles + tenants) — used at
+    /// engine shutdown so the final scrape is exact.
+    pub fn publish_all(&self, r: &Recorder) {
+        self.publish_counters(r);
+        self.publish_quantiles(r);
+        self.publish_tenants(r);
+    }
+
+    pub fn tenants(&self) -> Vec<TenantCounters> {
+        self.tenants.lock().unwrap().clone()
+    }
+}
+
+/// The fleet's live stats: one cell per shard.
+#[derive(Debug)]
+pub struct MetricsHub {
+    shards: Vec<Arc<ShardStats>>,
+}
+
+impl MetricsHub {
+    pub fn new(n_shards: usize) -> Arc<Self> {
+        Arc::new(Self {
+            shards: (0..n_shards).map(|_| Arc::new(ShardStats::default())).collect(),
+        })
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn shard(&self, i: usize) -> Arc<ShardStats> {
+        self.shards[i].clone()
+    }
+
+    pub fn cells(&self) -> &[Arc<ShardStats>] {
+        &self.shards
+    }
+
+    fn sum(&self, f: impl Fn(&ShardStats) -> &AtomicU64) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| f(s).load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Tenant counters merged across shards, sorted by tenant id.
+    pub fn merged_tenants(&self) -> Vec<TenantCounters> {
+        let mut out: Vec<TenantCounters> = Vec::new();
+        for s in &self.shards {
+            for t in s.tenants() {
+                match out.iter_mut().find(|c| c.tenant == t.tenant) {
+                    Some(c) => {
+                        c.finished += t.finished;
+                        c.gen_tokens += t.gen_tokens;
+                        c.deadline_met += t.deadline_met;
+                        c.deadline_missed += t.deadline_missed;
+                    }
+                    None => out.push(t),
+                }
+            }
+        }
+        out.sort_by_key(|t| t.tenant);
+        out
+    }
+
+    /// Fleet-wide deadline attainment (1.0 when nothing carried one).
+    pub fn deadline_attainment(&self) -> f64 {
+        let met = self.sum(|s| &s.deadline_met);
+        let missed = self.sum(|s| &s.deadline_missed);
+        if met + missed == 0 {
+            1.0
+        } else {
+            met as f64 / (met + missed) as f64
+        }
+    }
+
+    /// Render every engine family into `out` (Prometheus text format,
+    /// deterministic family and label order). The HTTP layer appends
+    /// its own front-door families after this.
+    pub fn render_into(&self, out: &mut String) {
+        let per_shard: &[(&str, &str, &str, fn(&ShardStats) -> &AtomicU64)] = &[
+            ("conserve_engine_iterations_total", "counter", "Engine scheduling iterations", |s| &s.engine_iters),
+            ("conserve_finished_online_total", "counter", "Online requests finished", |s| &s.finished_online),
+            ("conserve_finished_offline_total", "counter", "Offline requests finished", |s| &s.finished_offline),
+            ("conserve_gen_tokens_total", "counter", "Output tokens generated", |s| &s.gen_tokens),
+            ("conserve_processed_tokens_total", "counter", "Tokens processed (prefill + decode)", |s| &s.processed_tokens),
+            ("conserve_preemptions_total", "counter", "Requests preempted", |s| &s.preemptions),
+            ("conserve_layer_aborts_total", "counter", "Layer-wise safepoint aborts", |s| &s.layer_aborts),
+            ("conserve_steals_out_total", "counter", "Requests donated to other shards", |s| &s.steals_out),
+            ("conserve_steals_in_total", "counter", "Requests absorbed from other shards", |s| &s.steals_in),
+            ("conserve_ckpt_flush_records_total", "counter", "Durable store records flushed", |s| &s.ckpt_flush_records),
+            ("conserve_ckpt_blocks_total", "counter", "KV blocks checkpointed to host", |s| &s.ckpt_blocks),
+            ("conserve_cancelled_total", "counter", "Requests aborted by client cancellation", |s| &s.cancelled),
+            ("conserve_prefix_hits_total", "counter", "Admissions that attached shared prefix blocks", |s| &s.prefix_hits),
+            ("conserve_prefill_tokens_skipped_total", "counter", "Prefill tokens skipped via prefix sharing", |s| &s.prefill_tokens_skipped),
+            ("conserve_harvest_tightens_total", "counter", "Harvest controller tighten decisions", |s| &s.harvest_tightens),
+            ("conserve_harvest_opens_total", "counter", "Harvest controller open decisions", |s| &s.harvest_opens),
+            ("conserve_deadline_met_total", "counter", "Deadline-carrying requests finished in time", |s| &s.deadline_met),
+            ("conserve_deadline_missed_total", "counter", "Deadline-carrying requests finished late", |s| &s.deadline_missed),
+            ("conserve_ttft_p99_ms", "gauge", "Online P99 time-to-first-token (ms)", |s| &s.p99_ttft_us),
+            ("conserve_tpot_p99_ms", "gauge", "Online P99 inter-token latency (ms)", |s| &s.p99_tpot_us),
+        ];
+        for (name, typ, help, get) in per_shard {
+            write_family(out, name, help, typ);
+            let ms = name.ends_with("_ms");
+            for (i, s) in self.shards.iter().enumerate() {
+                let raw = get(s).load(Ordering::Relaxed) as f64;
+                let v = if ms { raw / 1_000.0 } else { raw };
+                write_sample(out, name, &format!("shard=\"{i}\""), v);
+            }
+        }
+        write_family(
+            out,
+            "conserve_deadline_attainment",
+            "Fleet deadline attainment (deadline-carrying requests)",
+            "gauge",
+        );
+        write_sample(out, "conserve_deadline_attainment", "", self.deadline_attainment());
+        write_family(
+            out,
+            "conserve_tenant_deadline_attainment",
+            "Per-tenant deadline attainment",
+            "gauge",
+        );
+        for t in self.merged_tenants() {
+            write_sample(
+                out,
+                "conserve_tenant_deadline_attainment",
+                &format!("tenant=\"{}\"", t.tenant),
+                t.attainment(),
+            );
+        }
+    }
+}
+
+/// `# HELP` / `# TYPE` header for one metric family.
+pub fn write_family(out: &mut String, name: &str, help: &str, typ: &str) {
+    out.push_str("# HELP ");
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(help);
+    out.push_str("\n# TYPE ");
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(typ);
+    out.push('\n');
+}
+
+/// One sample line; `labels` is the inner label list (no braces) or "".
+pub fn write_sample(out: &mut String, name: &str, labels: &str, v: f64) {
+    out.push_str(name);
+    if !labels.is_empty() {
+        out.push('{');
+        out.push_str(labels);
+        out.push('}');
+    }
+    out.push(' ');
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        out.push_str(&format!("{}", v as i64));
+    } else {
+        out.push_str(&format!("{v}"));
+    }
+    out.push('\n');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn publish_and_render() {
+        let hub = MetricsHub::new(2);
+        let mut r = Recorder::new();
+        r.engine_iters = 7;
+        r.record_first_token(1_000, Class::Online, 120_000);
+        r.record_finished(Class::Online);
+        r.deadline_met = 3;
+        r.deadline_missed = 1;
+        r.note_tenant_finished(5, 10, Some(true));
+        hub.shard(0).publish_all(&r);
+        let mut out = String::new();
+        hub.render_into(&mut out);
+        assert!(out.contains("conserve_engine_iterations_total{shard=\"0\"} 7"), "{out}");
+        assert!(out.contains("conserve_engine_iterations_total{shard=\"1\"} 0"), "{out}");
+        assert!(out.contains("conserve_finished_online_total{shard=\"0\"} 1"), "{out}");
+        assert!(out.contains("conserve_deadline_attainment 0.75"), "{out}");
+        assert!(out.contains("conserve_tenant_deadline_attainment{tenant=\"5\"} 1"), "{out}");
+        assert!(out.contains("# TYPE conserve_ttft_p99_ms gauge"), "{out}");
+        // quantile published in ms within histogram bucket error
+        let line = out
+            .lines()
+            .find(|l| l.starts_with("conserve_ttft_p99_ms{shard=\"0\"}"))
+            .unwrap();
+        let v: f64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+        assert!((v - 120.0).abs() < 3.0, "{line}");
+    }
+
+    #[test]
+    fn tenant_mirror_updates_only_on_change() {
+        let st = ShardStats::default();
+        let mut r = Recorder::new();
+        r.note_tenant_finished(1, 4, Some(true));
+        st.publish_tenants(&r);
+        assert_eq!(st.tenants().len(), 1);
+        // unchanged fingerprint: mirror untouched even if we clear it
+        st.tenants.lock().unwrap().clear();
+        st.publish_tenants(&r);
+        assert!(st.tenants().is_empty(), "no change => no re-publish");
+        r.note_tenant_finished(2, 1, None);
+        st.publish_tenants(&r);
+        assert_eq!(st.tenants().len(), 2);
+    }
+
+    #[test]
+    fn merged_tenants_fold_across_shards() {
+        let hub = MetricsHub::new(2);
+        let mut a = Recorder::new();
+        a.note_tenant_finished(9, 5, Some(true));
+        let mut b = Recorder::new();
+        b.note_tenant_finished(9, 5, Some(false));
+        b.note_tenant_finished(3, 1, None);
+        hub.shard(0).publish_all(&a);
+        hub.shard(1).publish_all(&b);
+        let m = hub.merged_tenants();
+        assert_eq!(m.len(), 2);
+        assert_eq!(m[0].tenant, 3, "sorted by tenant id");
+        let t9 = &m[1];
+        assert_eq!(t9.finished, 2);
+        assert_eq!((t9.deadline_met, t9.deadline_missed), (1, 1));
+        assert!((t9.attainment() - 0.5).abs() < 1e-9);
+    }
+}

@@ -473,6 +473,73 @@ fn overload_sheds_with_retry_hints_and_drain_sheds_everything() {
 }
 
 // ---------------------------------------------------------------------------
+// Observability: /healthz gauges and the Prometheus /metrics endpoint
+// ---------------------------------------------------------------------------
+
+#[test]
+fn healthz_gauges_and_metrics_endpoint_scrape() {
+    let (addr, handle) = start(serve_opts(2));
+
+    // move the counters before scraping
+    for _ in 0..2 {
+        let (status, body) = http(
+            addr,
+            "POST",
+            "/v1/completions",
+            r#"{"prompt_len": 8, "max_tokens": 4}"#,
+        );
+        assert_eq!(status, 200, "{body}");
+    }
+
+    // regression: /healthz carries the live harvest budget and
+    // deadline-attainment gauges (overall + per tenant)
+    let (status, body) = http(addr, "GET", "/healthz", "");
+    assert_eq!(status, 200);
+    let j = json_body(&body);
+    let permille = j
+        .req("harvest_budget_permille")
+        .as_f64()
+        .unwrap_or_else(|| panic!("healthz missing harvest_budget_permille: {body}"));
+    assert!((0.0..=1000.0).contains(&permille), "{body}");
+    let att = j
+        .req("deadline_attainment")
+        .as_f64()
+        .unwrap_or_else(|| panic!("healthz missing deadline_attainment: {body}"));
+    assert!((0.0..=1.0).contains(&att), "{body}");
+    assert!(
+        j.get("tenant_deadline_attainment").is_some(),
+        "healthz missing tenant_deadline_attainment: {body}"
+    );
+
+    // Prometheus text exposition: the families the scrape config relies on
+    let (status, metrics) = http(addr, "GET", "/metrics", "");
+    assert_eq!(status, 200, "{metrics}");
+    for family in [
+        "conserve_engine_iterations_total",
+        "conserve_finished_online_total",
+        "conserve_harvest_budget_permille",
+        "conserve_prefix_hit_rate",
+        "conserve_deadline_attainment",
+        "conserve_http_requests_total",
+        "conserve_accepted_online_total",
+        "conserve_trace_events_total",
+    ] {
+        assert!(
+            metrics.contains(family),
+            "missing metric family {family}:\n{metrics}"
+        );
+    }
+    assert!(metrics.contains("# TYPE"), "{metrics}");
+    assert!(
+        metrics.contains("shard=\"0\"") && metrics.contains("shard=\"1\""),
+        "per-shard samples must be labelled:\n{metrics}"
+    );
+
+    let summary = drain_and_join(addr, handle);
+    assert_no_loss(&summary);
+}
+
+// ---------------------------------------------------------------------------
 // Batches: verdicts over HTTP, drain checkpointing, restart resume
 // ---------------------------------------------------------------------------
 

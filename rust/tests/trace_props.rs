@@ -1,0 +1,251 @@
+//! Flight-recorder properties: the observability layer must be
+//! deterministic, truthful, and complete.
+//!
+//! * Two identical-seed simulated runs export **byte-identical**
+//!   Perfetto JSON — traces are diff-able artifacts, not timestamps
+//!   soup (virtual clocks, ordered rings, ordered JSON keys).
+//! * A deterministic injected kill leaves a flight dump whose final
+//!   `ShardDeath` event carries the same iteration number the
+//!   supervisor's [`ShardDied`] payload reports — post-mortems and
+//!   supervision never disagree about where a shard stopped.
+//! * Request spans stay well-formed (queue entry → … → terminal)
+//!   across preemption, migration, a shard kill and the store-backed
+//!   recovery round: no orphan lifecycles.
+
+use conserve::batch::{
+    run_jobs_with_recovery, run_jobs_with_store, JobInput, JobManager, JobRequest,
+    JobRunOpts, JobStore,
+};
+use conserve::config::EngineConfig;
+use conserve::request::{Class, Request};
+use conserve::shard::{run_sharded_sim_traced, Placement, ShardDied};
+use conserve::trace::{
+    analyze_spans, flight_dump, parse_flight_dump, perfetto, EventKind, FleetTracer,
+    DEFAULT_DUMP_LAST, DEFAULT_RING_EVENTS,
+};
+use conserve::util::fault::{silence_injected_panics, FaultPlan};
+use conserve::util::rng::Rng;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+const N_SHARDS: usize = 2;
+const DURATION_S: f64 = 600.0;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "conserve-traceprops-{tag}-{}-{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// A deterministic co-serving mix: online gamma-ish arrivals plus an
+/// offline pool, the same every call (seeded Rng, fixed ids).
+fn sim_events() -> Vec<Request> {
+    let mut rng = Rng::new(0x7ace);
+    let mut events = Vec::new();
+    let mut id = 1u64;
+    for i in 0..48u64 {
+        let input = rng.range_usize(64, 512);
+        let output = rng.range_usize(8, 48);
+        events.push(Request::new(id, Class::Online, vec![], input, output, i * 400_000));
+        id += 1;
+    }
+    for _ in 0..24 {
+        let input = rng.range_usize(256, 1024);
+        let output = rng.range_usize(32, 128);
+        events.push(Request::new(id, Class::Offline, vec![], input, output, 0));
+        id += 1;
+    }
+    events
+}
+
+fn traced_sim() -> (Arc<FleetTracer>, String) {
+    let cfg = EngineConfig::sim_a100_7b();
+    let tracer = FleetTracer::new(N_SHARDS, DEFAULT_RING_EVENTS);
+    // steal off: cross-shard stealing reacts to real thread interleaving
+    // (load-board sampling), which is exactly what a determinism check
+    // must exclude; each shard alone is lockstep on its virtual clock
+    let run = run_sharded_sim_traced(
+        &cfg,
+        N_SHARDS,
+        Placement::affinity(),
+        sim_events(),
+        60.0,
+        None,
+        Some(tracer.clone()),
+    );
+    assert!(run.merged.online_finished > 0, "the workload must finish online work");
+    let text = perfetto::export_perfetto(&tracer);
+    (tracer, text)
+}
+
+#[test]
+fn identical_seed_runs_export_byte_identical_perfetto_json() {
+    let (tracer, a) = traced_sim();
+    let (_, b) = traced_sim();
+    assert_eq!(a, b, "same seed, same workload ⇒ byte-identical trace files");
+
+    let st = perfetto::validate(&a).expect("exported trace must be valid trace-event JSON");
+    assert_eq!(st.tracks, N_SHARDS, "one named track per shard");
+    assert!(st.iterations > 0, "engine iterations must appear as X slices");
+    assert!(st.events > st.iterations, "instant events must be present too");
+
+    // every lifecycle stage of the taxonomy shows up in a plain co-serving run
+    let merged = tracer.merged();
+    for kind in [
+        EventKind::QueueEnter,
+        EventKind::PrefillChunk,
+        EventKind::Iteration,
+        EventKind::FirstToken,
+        EventKind::Finish,
+    ] {
+        assert!(
+            merged.iter().any(|e| e.kind == kind),
+            "expected at least one {kind:?} event in the trace"
+        );
+    }
+    assert_eq!(tracer.dropped(), 0, "this workload must fit the default ring");
+
+    // the summarizer digests its own export
+    let s = perfetto::summarize(&a, 5, 10).unwrap();
+    assert!(s.contains("slowest iterations"), "{s}");
+    assert!(s.contains("request spans"), "{s}");
+}
+
+/// The crash-recovery job mix from the fault-props suite: enough work
+/// that a mid-run kill strands requests on the dead shard.
+fn job_inputs() -> Vec<JobInput> {
+    let mut rng = Rng::new(0xFA17);
+    let mut jobs = Vec::new();
+    for (n, in_lo, in_hi, out) in [(5, 128, 512, 12), (4, 256, 768, 16), (3, 2048, 3072, 384)] {
+        jobs.push(JobInput {
+            tenant: 1 + jobs.len() as u32,
+            tier: (jobs.len() % 3) as u8,
+            submitted_at: 0,
+            deadline: 0,
+            requests: (0..n)
+                .map(|_| JobRequest {
+                    prompt: Vec::new(),
+                    prompt_len: rng.range_usize(in_lo, in_hi),
+                    max_new_tokens: out,
+                })
+                .collect(),
+        });
+    }
+    jobs
+}
+
+fn admit_all(jm: &mut JobManager) -> Vec<Request> {
+    let mut events = Vec::new();
+    for input in job_inputs() {
+        jm.admit(&input, &mut events);
+    }
+    events
+}
+
+fn traced_opts(tracer: &Arc<FleetTracer>, ckpt_every: u64) -> JobRunOpts {
+    JobRunOpts {
+        collect_state: true,
+        synth_tokens: true,
+        ckpt_every,
+        tracer: Some(tracer.clone()),
+        ..JobRunOpts::new(N_SHARDS, DURATION_S)
+    }
+}
+
+#[test]
+fn flight_dump_after_injected_kill_agrees_with_the_supervisor() {
+    silence_injected_panics();
+    let cfg = EngineConfig::sim_a100_7b();
+    let mut jm = JobManager::new(5_000.0);
+    let events = admit_all(&mut jm);
+    let tracer = FleetTracer::new(N_SHARDS, DEFAULT_RING_EVENTS);
+    let plan = FaultPlan::parse("kill=1@30").unwrap();
+    let out = run_jobs_with_store(
+        &cfg,
+        &traced_opts(&tracer, 0),
+        jm.board().clone(),
+        events,
+        None,
+        Some(&plan),
+    );
+
+    assert_eq!(out.deaths.len(), 1, "the planned kill lands");
+    let d: &ShardDied = &out.deaths[0];
+    let iter = d
+        .iteration()
+        .expect("an injected kill's payload carries the death iteration");
+    assert_eq!(iter, 30, "kill=1@30 dies at iteration 30");
+
+    let dir = tmp_dir("kill");
+    let path = flight_dump(&dir, "death", &tracer, DEFAULT_DUMP_LAST).unwrap();
+    let evs = parse_flight_dump(&std::fs::read_to_string(&path).unwrap());
+    assert!(!evs.is_empty(), "the dump must hold events");
+    let death = evs
+        .iter()
+        .filter(|e| e.kind == EventKind::ShardDeath && e.shard == d.shard as u32)
+        .next_back()
+        .expect("the dead shard's ring ends with a ShardDeath event");
+    assert_eq!(
+        death.a, iter,
+        "the flight record's last word and the supervisor agree on the death iteration"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn spans_stay_well_formed_across_kill_and_recovery() {
+    silence_injected_panics();
+    let cfg = EngineConfig::sim_a100_7b();
+    let dir = tmp_dir("spans");
+    let mut jm = JobManager::new(5_000.0);
+    let events = admit_all(&mut jm);
+    let mut store = JobStore::open(&dir).unwrap();
+    for spec in jm.specs().to_vec() {
+        store.record_spec(&spec, &events).unwrap();
+    }
+    let store = Arc::new(Mutex::new(store));
+
+    // one tracer across both rounds: the crash and the replay form one
+    // flight record, so a request killed mid-decode and re-served by
+    // recovery is a single span under its stable submission id
+    let tracer = FleetTracer::new(N_SHARDS, DEFAULT_RING_EVENTS);
+    let plan = FaultPlan::parse("kill=1@35,delay-steals=2").unwrap();
+    let rec = run_jobs_with_recovery(
+        &cfg,
+        &traced_opts(&tracer, 10),
+        jm.board().clone(),
+        events,
+        store.clone(),
+        Some(&plan),
+    )
+    .unwrap();
+
+    assert_eq!(rec.first.deaths.len(), 1);
+    assert!(rec.recovery.is_some(), "a death must trigger recovery");
+    let dead: Vec<u32> = rec.first.deaths.iter().map(|d| d.shard as u32).collect();
+
+    let merged = tracer.merged();
+    assert!(
+        merged.iter().any(|e| e.kind == EventKind::Recover),
+        "the recovery round must stamp a Recover seam event"
+    );
+    let rep = analyze_spans(&merged, &dead, false, tracer.dropped() > 0);
+    assert!(rep.spans >= 12, "every job request forms a span (got {})", rep.spans);
+    assert!(
+        rep.ok(),
+        "no orphan request lifecycles across kill + recovery: {:?}",
+        rep.orphans
+    );
+    assert!(
+        rep.finished >= rep.spans - rep.killed,
+        "every span not excused by the death must reach a terminal event"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
